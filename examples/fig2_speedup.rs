@@ -1,0 +1,149 @@
+//! **Figure 2**: speedup of BBMM over the per-model baseline inference
+//! engine, one training iteration (NMLL + gradient) per measurement.
+//!
+//! - Exact GPs: BBMM vs dense Cholesky (GPFlow-equivalent), paper left.
+//! - SGPR: BBMM vs O(nm²) Woodbury-Cholesky SGPR, paper middle.
+//! - SKI(+deep kernel): BBMM vs Dong et al. sequential engine, paper right.
+//!
+//! Absolute numbers are testbed-specific (the paper used a Titan Xp); the
+//! *shape* — BBMM wins, and the win grows with n — is the reproduction
+//! target. Output: results/fig2_<model>.{txt,csv}
+//!
+//! ```bash
+//! cargo run --release --example fig2_speedup [-- --model exact|sgpr|ski|all --full]
+//! ```
+
+use bbmm_gp::bench::{bench_budget, Table};
+use bbmm_gp::data::synthetic::{generate, DatasetSpec, UCI_EXACT, UCI_SGPR, UCI_SKI};
+use bbmm_gp::gp::mll::{BbmmEngine, CholeskyEngine, InferenceEngine};
+use bbmm_gp::gp::{DongEngine, SgprCholeskyEngine, SgprOp, SkiOp};
+use bbmm_gp::kernels::{DeepFeatureMap, DenseKernelOp, Rbf};
+use bbmm_gp::tensor::Mat;
+use bbmm_gp::util::cli::Args;
+use bbmm_gp::util::Rng;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let model = args.get_or("model", "all").to_string();
+    let full = args.flag("full");
+    if model == "exact" || model == "all" {
+        run_exact(full);
+    }
+    if model == "sgpr" || model == "all" {
+        run_sgpr(full);
+    }
+    if model == "ski" || model == "all" {
+        run_ski(full);
+    }
+}
+
+/// quick mode caps n so the whole figure regenerates in minutes; --full
+/// runs the paper's dataset sizes
+fn capped(specs: &[DatasetSpec], cap: usize, full: bool) -> Vec<DatasetSpec> {
+    specs
+        .iter()
+        .map(|s| DatasetSpec {
+            name: s.name,
+            n: if full { s.n } else { s.n.min(cap) },
+            d: s.d,
+        })
+        .collect()
+}
+
+fn run_exact(full: bool) {
+    println!("\n=== Figure 2 (left): Exact GPs — BBMM vs Cholesky ===\n");
+    let mut table = Table::new(&["dataset", "n", "d", "chol_s", "bbmm_s", "speedup"]);
+    for spec in capped(UCI_EXACT, 1200, full) {
+        let ds = generate(&spec, 0);
+        let y = ds.y_train.clone();
+        let mut op = DenseKernelOp::new(ds.x_train.clone(), Box::new(Rbf::new(0.5, 1.0)), 0.05);
+        let _ = &mut op;
+        let chol = bench_budget(&format!("exact/chol/{}", spec.name), 3.0, || {
+            let _ = CholeskyEngine.mll_and_grad(&op, &y);
+        });
+        let mut bbmm_engine = BbmmEngine::default();
+        let bbmm = bench_budget(&format!("exact/bbmm/{}", spec.name), 3.0, || {
+            let _ = bbmm_engine.mll_and_grad(&op, &y);
+        });
+        table.row(&[
+            spec.name.to_string(),
+            ds.n_train().to_string(),
+            spec.d.to_string(),
+            format!("{:.3}", chol.median_s()),
+            format!("{:.3}", bbmm.median_s()),
+            format!("{:.1}x", chol.median_s() / bbmm.median_s()),
+        ]);
+    }
+    table.print();
+    table.save("fig2_exact").unwrap();
+}
+
+fn run_sgpr(full: bool) {
+    println!("\n=== Figure 2 (middle): SGPR — BBMM vs Woodbury-Cholesky ===\n");
+    let m_inducing = if full { 300 } else { 150 };
+    let mut table = Table::new(&["dataset", "n", "m", "chol_s", "bbmm_s", "speedup"]);
+    for spec in capped(UCI_SGPR, 8000, full) {
+        let ds = generate(&spec, 0);
+        let y = ds.y_train.clone();
+        let mut rng = Rng::new(1);
+        let mut u = Mat::zeros(m_inducing, ds.dim());
+        for r in 0..m_inducing {
+            let src = rng.below(ds.n_train());
+            u.row_mut(r).copy_from_slice(ds.x_train.row(src));
+        }
+        let op = SgprOp::new(ds.x_train.clone(), u, Box::new(Rbf::new(0.5, 1.0)), 0.05);
+        let chol = bench_budget(&format!("sgpr/chol/{}", spec.name), 3.0, || {
+            let _ = SgprCholeskyEngine.mll_and_grad_sgpr(&op, &y);
+        });
+        // SGPR's SoR system is well-conditioned; the paper's SGPR runs skip
+        // the pivoted-Cholesky preconditioner (rank 0)
+        let mut engine = BbmmEngine::new(20, 10, 0, 7);
+        let bbmm = bench_budget(&format!("sgpr/bbmm/{}", spec.name), 3.0, || {
+            let _ = engine.mll_and_grad(&op, &y);
+        });
+        table.row(&[
+            spec.name.to_string(),
+            ds.n_train().to_string(),
+            m_inducing.to_string(),
+            format!("{:.3}", chol.median_s()),
+            format!("{:.3}", bbmm.median_s()),
+            format!("{:.1}x", chol.median_s() / bbmm.median_s()),
+        ]);
+    }
+    table.print();
+    table.save("fig2_sgpr").unwrap();
+}
+
+fn run_ski(full: bool) {
+    println!("\n=== Figure 2 (right): SKI+DKL — BBMM vs Dong et al. ===\n");
+    let grid_m = if full { 10_000 } else { 2_000 };
+    let mut table = Table::new(&["dataset", "n", "grid_m", "dong_s", "bbmm_s", "speedup"]);
+    for spec in capped(UCI_SKI, 60_000, full) {
+        let ds = generate(&spec, 0);
+        let y = ds.y_train.clone();
+        // deep kernel: random MLP features → 1-D grid (paper's SKI+DKL)
+        let mut rng = Rng::new(2);
+        let dkl = DeepFeatureMap::new(&[ds.dim(), 32, 8, 1], &mut rng);
+        let feat = dkl.forward(&ds.x_train);
+        let z: Vec<f64> = (0..ds.n_train()).map(|i| feat.get(i, 0)).collect();
+        let op = SkiOp::new(z, grid_m, Box::new(Rbf::new(0.3, 1.0)), 0.05);
+        let mut dong_engine = DongEngine::new(20, 10, 3);
+        let dong = bench_budget(&format!("ski/dong/{}", spec.name), 3.0, || {
+            let _ = dong_engine.mll_and_grad(&op, &y);
+        });
+        let mut bbmm_engine = BbmmEngine::new(20, 10, 0, 3);
+        let bbmm = bench_budget(&format!("ski/bbmm/{}", spec.name), 3.0, || {
+            let _ = bbmm_engine.mll_and_grad(&op, &y);
+        });
+        table.row(&[
+            spec.name.to_string(),
+            ds.n_train().to_string(),
+            grid_m.to_string(),
+            format!("{:.3}", dong.median_s()),
+            format!("{:.3}", bbmm.median_s()),
+            format!("{:.1}x", dong.median_s() / bbmm.median_s()),
+        ]);
+    }
+    table.print();
+    table.save("fig2_ski").unwrap();
+}

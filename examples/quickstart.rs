@@ -1,0 +1,171 @@
+//! Quickstart: the full three-layer path, end to end.
+//!
+//! 1. Load the AOT artifacts (`make artifacts`) — JAX/Pallas BBMM graphs
+//!    lowered to HLO text at build time.
+//! 2. Execute the training-step artifact from Rust via PJRT: one mBCG call
+//!    returns solves, CG coefficients, and gradient ingredients.
+//! 3. Finish the SLQ log-det in Rust (tridiagonal eigensolve on the α/β
+//!    streams), assemble NMLL + gradient, and cross-check everything
+//!    against the pure-Rust engines on the same data.
+//! 4. Run the serving artifact for batched predictions.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use bbmm_gp::gp::mll::{CholeskyEngine, InferenceEngine};
+use bbmm_gp::kernels::{DenseKernelOp, Rbf};
+use bbmm_gp::linalg::mbcg::tridiag_from_coeffs;
+use bbmm_gp::linalg::tridiag::SymTridiagEig;
+use bbmm_gp::runtime::{default_artifact_dir, Runtime, TensorF32};
+use bbmm_gp::tensor::Mat;
+use bbmm_gp::util::Rng;
+
+const N: usize = 256;
+const D: usize = 4;
+const T: usize = 8;
+const LN_2PI: f64 = 1.8378770664093453;
+
+fn main() -> anyhow::Result<()> {
+    let dir = default_artifact_dir();
+    let mut rt = Runtime::cpu(&dir)?;
+    println!("PJRT platform: {}", rt.platform());
+    let mll_name = "mll_rbf_n256_d4_t8_p20";
+    let predict_name = "predict_rbf_n256_d4_m64";
+    if !rt.artifact_exists(mll_name) {
+        eprintln!("artifacts missing — run `make artifacts` first (dir: {dir:?})");
+        std::process::exit(1);
+    }
+    rt.load(mll_name)?;
+    rt.load(predict_name)?;
+    println!("loaded artifacts: {:?}", rt.loaded_names());
+
+    // ---- synthetic training data (f32, fixed artifact shapes) ----------
+    let mut rng = Rng::new(42);
+    let mut x = vec![0f32; N * D];
+    for v in x.iter_mut() {
+        *v = rng.uniform_in(-1.0, 1.0) as f32;
+    }
+    let mut y = vec![0f32; N];
+    for i in 0..N {
+        let xi = &x[i * D..(i + 1) * D];
+        y[i] = (3.0 * xi[0]).sin() + 0.5 * xi[1] + 0.05 * rng.normal() as f32;
+    }
+    let mut z = vec![0f32; N * T];
+    for v in z.iter_mut() {
+        *v = rng.rademacher() as f32;
+    }
+    let params = [-0.5f32, 0.0, -2.0]; // log ℓ, log s, log σ²
+
+    // ---- 2) execute the training-step artifact -------------------------
+    let outs = rt.execute_f32(
+        mll_name,
+        &[
+            TensorF32 { data: &x, dims: vec![N as i64, D as i64] },
+            TensorF32 { data: &y, dims: vec![N as i64] },
+            TensorF32 { data: &z, dims: vec![N as i64, T as i64] },
+            TensorF32 { data: &params, dims: vec![3] },
+        ],
+    )?;
+    let (u0, datafit, alphas, betas, quad, trace) =
+        (&outs[0], outs[1][0] as f64, &outs[2], &outs[3], &outs[4], &outs[5]);
+    println!("artifact returned {} outputs; datafit = {datafit:.4}", outs.len());
+
+    // ---- 3) Rust-side SLQ post-processing (paper App. B) ---------------
+    let p = alphas.len() / T;
+    let mut logdet = 0.0;
+    for c in 0..T {
+        let a: Vec<f64> = (0..p).map(|j| alphas[j * T + c] as f64).collect();
+        let b: Vec<f64> = (0..p).map(|j| betas[j * T + c] as f64).collect();
+        let eff = a.iter().take_while(|v| v.abs() > 0.0).count();
+        if eff == 0 {
+            continue;
+        }
+        let tri = tridiag_from_coeffs(&a[..eff], &b[..eff.saturating_sub(1)]);
+        let eig = SymTridiagEig::new(&tri.diag, &tri.offdiag);
+        logdet += N as f64 * eig.log_quadrature();
+    }
+    logdet /= T as f64;
+    let nmll = 0.5 * (datafit + logdet + N as f64 * LN_2PI);
+    let grad: Vec<f64> = (0..3)
+        .map(|j| 0.5 * (-(quad[j] as f64) + trace[j] as f64))
+        .collect();
+    println!("BBMM (artifact): nmll {nmll:.4}  logdet {logdet:.4}  grad {grad:?}");
+
+    // ---- cross-check against the pure-Rust exact engine -----------------
+    let x64 = Mat::from_vec(N, D, x.iter().map(|&v| v as f64).collect());
+    let y64: Vec<f64> = y.iter().map(|&v| v as f64).collect();
+    let op = DenseKernelOp::new(
+        x64,
+        Box::new(Rbf::new((-0.5f64).exp(), 1.0)),
+        (-2.0f64).exp(),
+    );
+    let exact = CholeskyEngine.mll_and_grad(&op, &y64);
+    println!(
+        "Cholesky (exact): nmll {:.4}  logdet {:.4}  grad {:?}",
+        exact.nmll, exact.logdet, exact.grad
+    );
+    // tolerances: datafit is deterministic; log-det carries t=8-probe MC
+    // noise + p=20 truncation bias (paper defaults), so compare against the
+    // log-det's own magnitude
+    assert!(
+        (datafit - exact.datafit).abs() / exact.datafit.abs() < 1e-3,
+        "datafit {datafit} vs {}",
+        exact.datafit
+    );
+    assert!(
+        (logdet - exact.logdet).abs() / exact.logdet.abs().max(1.0) < 0.10,
+        "logdet {logdet} vs {}",
+        exact.logdet
+    );
+    for j in 0..3 {
+        assert!(
+            (grad[j] - exact.grad[j]).abs() < 0.25 * (1.0 + exact.grad[j].abs()),
+            "grad[{j}] {} vs {}",
+            grad[j],
+            exact.grad[j]
+        );
+    }
+    let exact_u0 = exact_solve(&op, &y64);
+    let u0_err: f64 = (0..N)
+        .map(|i| (u0[i] as f64 - exact_u0[i]).abs())
+        .fold(0.0, f64::max);
+    println!("max |u0 − K̂⁻¹y| = {u0_err:.2e}");
+
+    // ---- 4) serving artifact: batched predictions ----------------------
+    let m = 64usize;
+    let mut xs = vec![0f32; m * D];
+    for v in xs.iter_mut() {
+        *v = rng.uniform_in(-1.0, 1.0) as f32;
+    }
+    let pred = rt.execute_f32(
+        predict_name,
+        &[
+            TensorF32 { data: &x, dims: vec![N as i64, D as i64] },
+            TensorF32 { data: &y, dims: vec![N as i64] },
+            TensorF32 { data: &xs, dims: vec![m as i64, D as i64] },
+            TensorF32 { data: &params, dims: vec![3] },
+        ],
+    )?;
+    let (mean, var) = (&pred[0], &pred[1]);
+    // sanity: predictions at sensible scale, variances in (0, prior]
+    let mae: f32 = (0..m)
+        .map(|i| {
+            let xi = &xs[i * D..(i + 1) * D];
+            let truth = (3.0 * xi[0]).sin() + 0.5 * xi[1];
+            (mean[i] - truth).abs()
+        })
+        .sum::<f32>()
+        / m as f32;
+    println!("served {m} predictions: MAE vs noiseless truth {mae:.4}");
+    assert!(mae < 0.2, "posterior mean off: {mae}");
+    assert!(var.iter().all(|&v| (0.0..=1.01).contains(&v)));
+    println!("quickstart OK — three layers verified end to end");
+    Ok(())
+}
+
+fn exact_solve(op: &DenseKernelOp, y: &[f64]) -> Vec<f64> {
+    use bbmm_gp::kernels::KernelOperator;
+    let ch = bbmm_gp::linalg::cholesky::Cholesky::new_with_jitter(&op.dense()).unwrap();
+    ch.solve_vec(y)
+}

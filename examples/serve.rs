@@ -1,0 +1,119 @@
+//! Serving demo: train a small exact GP, expose it through the dynamic
+//! batcher + TCP server, then fire a concurrent client load against it and
+//! report latency percentiles + throughput — the L3 coordinator exercised
+//! end to end.
+//!
+//! ```bash
+//! cargo run --release --example serve [-- --clients 16 --requests 50]
+//! ```
+
+use bbmm_gp::coordinator::{serve, BatchPolicy, DynamicBatcher, PredictFn, ServerConfig};
+use bbmm_gp::data::synthetic::generate_sized;
+use bbmm_gp::gp::exact::{Engine, ExactGp};
+use bbmm_gp::gp::mll::BbmmEngine;
+use bbmm_gp::kernels::Rbf;
+use bbmm_gp::tensor::Mat;
+use bbmm_gp::util::cli::Args;
+use bbmm_gp::util::{Rng, Timer};
+use std::io::{BufRead, BufReader, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let n = args.usize_or("n", 800);
+    let clients = args.usize_or("clients", 16);
+    let reqs_per_client = args.usize_or("requests", 50);
+
+    // ---- train ----------------------------------------------------------
+    let ds = generate_sized("serve_demo", n, 4, 3);
+    println!("training exact GP on n={} d={}…", ds.n_train(), ds.dim());
+    let gp = std::sync::Mutex::new(ExactGp::new(
+        ds.x_train.clone(),
+        ds.y_train.clone(),
+        Box::new(Rbf::new(0.5, 1.0)),
+        0.05,
+        Engine::Bbmm(BbmmEngine::default()),
+    ));
+    let dim = ds.dim();
+
+    // ---- serve ----------------------------------------------------------
+    let predict: PredictFn = Box::new(move |xs: &Mat| gp.lock().unwrap().predict(xs));
+    let batcher = Arc::new(DynamicBatcher::new(
+        dim,
+        BatchPolicy {
+            max_batch: 64,
+            max_wait: std::time::Duration::from_millis(3),
+        },
+        predict,
+    ));
+    let stop = Arc::new(AtomicBool::new(false));
+    let config = ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        stop: Arc::clone(&stop),
+    };
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let server_batcher = Arc::clone(&batcher);
+    let server = std::thread::spawn(move || {
+        serve(config, server_batcher, move |addr| {
+            addr_tx.send(addr).unwrap();
+        })
+        .unwrap();
+    });
+    let addr = addr_rx.recv().unwrap();
+    println!("server listening on {addr}");
+
+    // ---- concurrent client load -----------------------------------------
+    let timer = Timer::start();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(100 + c as u64);
+            let mut conn = std::net::TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            let mut latencies = Vec::with_capacity(reqs_per_client);
+            for _ in 0..reqs_per_client {
+                let x: Vec<String> = (0..4)
+                    .map(|_| format!("{:.5}", rng.uniform_in(-1.0, 1.0)))
+                    .collect();
+                let line = x.join(",") + "\n";
+                let t = Timer::start();
+                conn.write_all(line.as_bytes()).unwrap();
+                let mut resp = String::new();
+                reader.read_line(&mut resp).unwrap();
+                latencies.push(t.elapsed_s());
+                assert!(
+                    !resp.starts_with("ERR"),
+                    "server error: {resp}"
+                );
+            }
+            conn.write_all(b"QUIT\n").ok();
+            latencies
+        }));
+    }
+    let mut all: Vec<f64> = Vec::new();
+    for h in handles {
+        all.extend(h.join().unwrap());
+    }
+    let total_s = timer.elapsed_s();
+    all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |p: f64| all[(p * (all.len() - 1) as f64) as usize] * 1e3;
+    println!(
+        "\n{} requests from {clients} clients in {total_s:.2}s — {:.0} req/s",
+        all.len(),
+        all.len() as f64 / total_s
+    );
+    println!(
+        "latency ms: p50 {:.1}  p90 {:.1}  p99 {:.1}  max {:.1}",
+        q(0.50),
+        q(0.90),
+        q(0.99),
+        all.last().unwrap() * 1e3
+    );
+    println!("batcher: {}", batcher.metrics.summary());
+    assert!(batcher.metrics.mean_batch_size() > 1.5, "batching must coalesce under load");
+
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap();
+    println!("serve demo OK");
+}

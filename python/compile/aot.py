@@ -1,0 +1,131 @@
+"""AOT lowering: JAX/Pallas BBMM graphs → HLO **text** artifacts.
+
+HLO text (not ``.serialize()``): the Rust runtime's xla_extension 0.5.1
+rejects jax ≥ 0.5 serialized protos (64-bit instruction ids); the text
+parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Every artifact is a fixed-shape variant; the Rust runtime keys its
+executable cache by artifact name. A ``manifest.json`` records shapes so
+the Rust side can validate inputs.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (from python/).
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels.kernel_matmul import kernel_matmul
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def build_artifacts(n=256, d=4, t=8, p=20, m_test=64, kinds=("rbf", "matern52")):
+    """Return {name: (lowered, manifest_entry)} for all artifact variants."""
+    arts = {}
+    for kind in kinds:
+        # training-step graph: one mBCG call + derivative mat-muls
+        name = f"mll_{kind}_n{n}_d{d}_t{t}_p{p}"
+        fn = functools.partial(model.bbmm_terms, n_iters=p, kind=kind)
+        lowered = jax.jit(fn).lower(f32(n, d), f32(n), f32(n, t), f32(3))
+        arts[name] = (
+            lowered,
+            {
+                "inputs": {
+                    "x": [n, d],
+                    "y": [n],
+                    "z": [n, t],
+                    "params": [3],
+                },
+                "outputs": ["u0", "datafit", "alphas", "betas", "quad", "trace"],
+                "kind": kind,
+                "p": p,
+            },
+        )
+        # serving graph: batched predictive mean + variance. Prediction-time
+        # solves need tighter accuracy than training-step estimates, so the
+        # CG budget is deeper than the training artifact's p (paper §6 uses
+        # p=20 for training; predictions run CG to convergence).
+        p_pred = max(3 * p, 64)
+        name = f"predict_{kind}_n{n}_d{d}_m{m_test}"
+        fn = functools.partial(model.predict_terms, n_iters=p_pred, kind=kind)
+        lowered = jax.jit(fn).lower(f32(n, d), f32(n), f32(m_test, d), f32(3))
+        arts[name] = (
+            lowered,
+            {
+                "inputs": {
+                    "x": [n, d],
+                    "y": [n],
+                    "x_star": [m_test, d],
+                    "params": [3],
+                },
+                "outputs": ["mean", "var"],
+                "kind": kind,
+                "p": p_pred,
+            },
+        )
+    # raw L1 kernel mat-mul (smoke/bench artifact for the Rust runtime)
+    name = f"kernel_matmul_rbf_n{n}_d{d}_t{t}"
+
+    def kmm(x, v, params):
+        return (
+            kernel_matmul(x, v, params[0], params[1], params[2], kind="rbf"),
+        )
+
+    lowered = jax.jit(kmm).lower(f32(n, d), f32(n, t), f32(3))
+    arts[name] = (
+        lowered,
+        {
+            "inputs": {"x": [n, d], "v": [n, t], "params": [3]},
+            "outputs": ["khat_v"],
+            "kind": "rbf",
+        },
+    )
+    return arts
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--n", type=int, default=256)
+    ap.add_argument("--d", type=int, default=4)
+    ap.add_argument("--t", type=int, default=8)
+    ap.add_argument("--p", type=int, default=20)
+    ap.add_argument("--m-test", type=int, default=64)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {}
+    arts = build_artifacts(n=args.n, d=args.d, t=args.t, p=args.p, m_test=args.m_test)
+    for name, (lowered, entry) in arts.items():
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = entry
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

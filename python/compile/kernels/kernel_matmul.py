@@ -1,0 +1,145 @@
+"""L1 Pallas kernel: fused blackbox kernel mat-mul ``(K(X,X) + σ²I)·V``.
+
+This is the compute hot-spot of every mBCG iteration (paper §4: one
+matrix-matrix multiply with K̂ per iteration). The kernel never
+materialises the n×n matrix K in HBM: a 2-D grid tiles (rows × columns);
+each step loads one X row-tile and one (X column-tile, V row-tile) pair
+into VMEM, forms the bn×bm kernel block on the fly, and feeds the
+block × V-tile product to the MXU, accumulating into the output row-tile.
+
+TPU mapping of the paper's GPU insight (DESIGN.md §Hardware-Adaptation):
+the paper replaces Cholesky's sequential panels with big GEMMs that
+saturate CUDA cores; here BlockSpec expresses the HBM↔VMEM schedule the
+paper wrote with threadblocks, and both the r² expansion (−2·X_i X_jᵀ)
+and the K-block × V-tile contraction run on the MXU systolic array.
+
+VMEM per grid step (f32): bn·d + bm·d + bm·t + bn·bm + bn·t floats
+≈ 128·128·4B ≙ 64KiB for the K block at the default tile — far inside
+the 16MiB VMEM budget; see EXPERIMENTS.md §Perf for the full estimate.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the same artifact
+runs under the Rust runtime. Real-TPU compilation is a compile-only
+target (see DESIGN.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SQRT5 = 5.0 ** 0.5
+
+#: default tile sizes (rows of output × columns of K per step)
+BLOCK_N = 128
+BLOCK_M = 128
+
+
+def _kernel_block(xi, xj, log_ls, log_os, kind):
+    """bn×bm kernel block between row-tile xi and column-tile xj."""
+    ls = jnp.exp(log_ls)
+    s = jnp.exp(log_os)
+    # r² via the MXU-friendly expansion |a|² + |b|² − 2abᵀ
+    n1 = jnp.sum(xi * xi, axis=1, keepdims=True)
+    n2 = jnp.sum(xj * xj, axis=1, keepdims=True)
+    r2 = jnp.maximum(n1 + n2.T - 2.0 * jnp.dot(xi, xj.T), 0.0)
+    if kind == "rbf":
+        return s * jnp.exp(-r2 / (2.0 * ls * ls))
+    if kind == "rbf_dls":
+        return s * jnp.exp(-r2 / (2.0 * ls * ls)) * (r2 / (ls * ls))
+    r = jnp.sqrt(r2 + 1e-30)
+    u = SQRT5 * r / ls
+    if kind == "matern52":
+        return s * (1.0 + u + u * u / 3.0) * jnp.exp(-u)
+    if kind == "matern52_dls":
+        return s * jnp.exp(-u) * u * u * (1.0 + u) / 3.0
+    raise ValueError(f"unknown kind {kind!r}")
+
+
+def _fused_matmul_kernel(x_i_ref, x_j_ref, v_j_ref, p_ref, o_ref, *, kind):
+    """One (i, j) grid step: o[i-tile] += K(x[i-tile], x[j-tile]) @ v[j-tile]."""
+    j = pl.program_id(1)
+    xi = x_i_ref[...]
+    xj = x_j_ref[...]
+    vj = v_j_ref[...]
+    log_ls = p_ref[0]
+    log_os = p_ref[1]
+    k_block = _kernel_block(xi, xj, log_ls, log_os, kind)
+    contrib = jnp.dot(k_block, vj)  # MXU contraction
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += contrib
+
+
+@functools.partial(
+    jax.jit, static_argnames=("kind", "block_n", "block_m", "interpret")
+)
+def kernel_matmul(
+    x,
+    v,
+    log_ls,
+    log_os,
+    log_noise,
+    kind="rbf",
+    block_n=BLOCK_N,
+    block_m=BLOCK_M,
+    interpret=True,
+):
+    """Fused ``(K + σ²I) @ V`` without materialising K.
+
+    * ``x`` — (n, d) inputs; ``v`` — (n, t) right-hand sides.
+    * log-space hyperparameters as 0-d arrays / scalars.
+    * derivative kinds (``*_dls``) omit the σ² diagonal term.
+
+    Rows are zero-padded to tile multiples; padded V rows are zero so
+    phantom columns contribute nothing, and phantom output rows are
+    sliced away.
+    """
+    import math
+
+    n, d = x.shape
+    t = v.shape[1]
+    bn = min(block_n, max(8, n))
+    bm = min(block_m, max(8, n))
+    # pad rows to a size divisible by both tile extents
+    lcm = bn * bm // math.gcd(bn, bm)
+    n_pad = ((n + lcm - 1) // lcm) * lcm
+    xp = jnp.concatenate([x, jnp.zeros((n_pad - n, d), x.dtype)], axis=0)
+    vp = jnp.concatenate([v, jnp.zeros((n_pad - n, t), v.dtype)], axis=0)
+    params = jnp.stack(
+        [jnp.asarray(log_ls, x.dtype), jnp.asarray(log_os, x.dtype)]
+    )
+
+    grid = (n_pad // bn, n_pad // bm)
+    out = pl.pallas_call(
+        functools.partial(_fused_matmul_kernel, kind=kind),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i, j: (i, 0)),  # X row-tile
+            pl.BlockSpec((bm, d), lambda i, j: (j, 0)),  # X column-tile
+            pl.BlockSpec((bm, t), lambda i, j: (j, 0)),  # V row-tile
+            pl.BlockSpec((2,), lambda i, j: (0,)),  # hyperparameters
+        ],
+        out_specs=pl.BlockSpec((bn, t), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, t), v.dtype),
+        interpret=interpret,
+    )(xp, xp, vp, params)
+    out = out[:n]
+    if not kind.endswith("_dls") and log_noise is not None:
+        out = out + jnp.exp(jnp.asarray(log_noise, v.dtype)) * v
+    return out
+
+
+def vmem_estimate_bytes(d, t, block_n=BLOCK_N, block_m=BLOCK_M, dtype_bytes=4):
+    """Static VMEM footprint estimate per grid step (for DESIGN.md §Perf)."""
+    return dtype_bytes * (
+        block_n * d  # X row-tile
+        + block_m * d  # X column-tile
+        + block_m * t  # V tile
+        + block_n * block_m  # K block
+        + block_n * t  # output accumulator
+    )

@@ -1,0 +1,62 @@
+"""Pure-jnp correctness oracle for the fused kernel mat-mul.
+
+Materialises the full kernel matrix and multiplies — the thing the L1
+Pallas kernel (and the paper's BBMM framing) deliberately avoids doing.
+Every Pallas output is pytest-checked against these functions.
+
+Parameterisation matches the Rust side: log-space hyperparameters,
+``K̂ = s·k(r/ℓ) + σ²I`` with ``s = exp(log_os)``, ``ℓ = exp(log_ls)``,
+``σ² = exp(log_noise)``.
+"""
+
+import jax.numpy as jnp
+
+SQRT5 = 5.0 ** 0.5
+
+
+def sq_dists(x1, x2):
+    """Pairwise squared distances between rows of x1 (n×d) and x2 (m×d)."""
+    # |a-b|² = |a|² + |b|² − 2ab, clamped for numerical safety
+    n1 = jnp.sum(x1 * x1, axis=1, keepdims=True)
+    n2 = jnp.sum(x2 * x2, axis=1, keepdims=True)
+    r2 = n1 + n2.T - 2.0 * (x1 @ x2.T)
+    return jnp.maximum(r2, 0.0)
+
+
+def kernel_matrix(x1, x2, log_ls, log_os, kind="rbf"):
+    """Noiseless kernel matrix K(x1, x2) for the given covariance family.
+
+    kind:
+      rbf          s·exp(−r²/2ℓ²)
+      matern52     s·(1+√5r/ℓ+5r²/3ℓ²)·exp(−√5r/ℓ)
+      rbf_dls      ∂RBF/∂log ℓ        = K ⊙ (r²/ℓ²)
+      matern52_dls ∂Matérn52/∂log ℓ   = s·e^{−u}·u²(1+u)/3,  u = √5r/ℓ
+    """
+    ls = jnp.exp(log_ls)
+    s = jnp.exp(log_os)
+    r2 = sq_dists(x1, x2)
+    if kind == "rbf":
+        return s * jnp.exp(-r2 / (2.0 * ls * ls))
+    if kind == "rbf_dls":
+        k = s * jnp.exp(-r2 / (2.0 * ls * ls))
+        return k * (r2 / (ls * ls))
+    r = jnp.sqrt(r2 + 1e-30)
+    u = SQRT5 * r / ls
+    if kind == "matern52":
+        return s * (1.0 + u + u * u / 3.0) * jnp.exp(-u)
+    if kind == "matern52_dls":
+        return s * jnp.exp(-u) * u * u * (1.0 + u) / 3.0
+    raise ValueError(f"unknown kind {kind!r}")
+
+
+def kernel_matmul_ref(x, v, log_ls, log_os, log_noise, kind="rbf"):
+    """(K + σ²I) · V by materialising K — the oracle for the Pallas kernel.
+
+    For derivative kinds (``*_dls``) no noise is added (∂K̂/∂log ℓ has no
+    diagonal term); pass ``log_noise=None`` to skip the diagonal too.
+    """
+    k = kernel_matrix(x, x, log_ls, log_os, kind=kind)
+    out = k @ v
+    if log_noise is not None and not kind.endswith("_dls"):
+        out = out + jnp.exp(log_noise) * v
+    return out

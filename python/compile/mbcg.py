@@ -1,0 +1,86 @@
+"""L2: modified batched conjugate gradients (paper Algorithm 2) in JAX.
+
+Fixed iteration count (static shapes for AOT), multiple right-hand sides,
+and per-RHS CG coefficient streams (α, β) from which the Lanczos
+tridiagonal matrices are rebuilt (Observation 3 / Saad §6.7.3).
+
+The matrix is only touched through a mat-mul closure — at lowering time
+that closure is the L1 Pallas fused kernel mat-mul, so the whole mBCG loop
+lowers into a single HLO while-loop around the Pallas kernel body.
+
+No ``jnp.linalg`` calls anywhere: LAPACK-backed ops lower to jaxlib custom
+calls that the Rust runtime's xla_extension 0.5.1 cannot resolve. The
+eigendecomposition of the p×p tridiagonals therefore happens on the Rust
+side (O(tp²) — negligible, paper App. B); here we only emit coefficients.
+"""
+
+import jax
+import jax.numpy as jnp
+
+_TINY = 1e-30
+
+
+def mbcg(matmul, b, n_iters):
+    """Batched CG on ``A X = B`` with coefficient recording.
+
+    * ``matmul(M)`` — applies the implicit SPD matrix to an (n, s) matrix.
+    * ``b`` — (n, s) right-hand sides.
+    * ``n_iters`` — fixed iteration count p (static).
+
+    Returns ``(solves, alphas, betas)`` with shapes (n, s), (p, s), (p, s).
+    Converged columns are protected by masking: once a column's residual
+    is ~0 its α/β freeze to (0, 0) and its iterate stops moving, matching
+    the Rust engine's freezing semantics.
+    """
+    n, s = b.shape
+    u0 = jnp.zeros_like(b)
+    r0 = b
+    d0 = r0
+    rz0 = jnp.sum(r0 * r0, axis=0)  # (s,)
+    alphas0 = jnp.zeros((n_iters, s), b.dtype)
+    betas0 = jnp.zeros((n_iters, s), b.dtype)
+
+    def body(j, carry):
+        u, r, d, rz, alphas, betas = carry
+        v = matmul(d)
+        dv = jnp.sum(d * v, axis=0)
+        active = rz > _TINY
+        alpha = jnp.where(active, rz / jnp.where(dv == 0, 1.0, dv), 0.0)
+        u = u + alpha[None, :] * d
+        r = r - alpha[None, :] * v
+        rz_new = jnp.sum(r * r, axis=0)
+        beta = jnp.where(active, rz_new / jnp.where(rz == 0, 1.0, rz), 0.0)
+        d = r + beta[None, :] * d
+        alphas = alphas.at[j].set(alpha)
+        betas = betas.at[j].set(beta)
+        return u, r, d, rz_new, alphas, betas
+
+    u, _r, _d, _rz, alphas, betas = jax.lax.fori_loop(
+        0, n_iters, body, (u0, r0, d0, rz0, alphas0, betas0)
+    )
+    return u, alphas, betas
+
+
+def tridiag_from_coeffs(alphas, betas):
+    """Dense (s, p, p) Lanczos tridiagonal batch from CG coefficients.
+
+    ``T[j,j] = 1/α_j + β_{j−1}/α_{j−1}``, ``T[j,j+1] = √β_j/α_j``.
+    Frozen iterations (α = 0) contribute identity-like padding rows that
+    the caller masks by the per-column effective iteration count.
+    """
+    p, s = alphas.shape
+    safe_a = jnp.where(alphas == 0, 1.0, alphas)
+    diag = 1.0 / safe_a  # (p, s)
+    prev_term = jnp.concatenate(
+        [jnp.zeros((1, s), alphas.dtype), betas[:-1] / safe_a[:-1]], axis=0
+    )
+    diag = diag + prev_term
+    off = jnp.sqrt(jnp.maximum(betas[:-1], 0.0)) / safe_a[:-1]  # (p−1, s)
+
+    t = jnp.zeros((s, p, p), alphas.dtype)
+    ii = jnp.arange(p)
+    t = t.at[:, ii, ii].set(diag.T)
+    jj = jnp.arange(p - 1)
+    t = t.at[:, jj, jj + 1].set(off.T)
+    t = t.at[:, jj + 1, jj].set(off.T)
+    return t

@@ -1,0 +1,132 @@
+"""L2: the BBMM inference graph (paper §4) as pure JAX, calling the L1
+Pallas fused kernel mat-mul.
+
+Two lowering targets (see aot.py):
+
+* ``bbmm_terms``   — the training-step graph: one mBCG call over the RHS
+  block ``[y z₁ … z_t]`` plus the derivative mat-muls, emitting every
+  ingredient of the NMLL and its gradient. The O(tp²) tridiagonal
+  eigen-solve for the SLQ log-det is *not* in the graph (LAPACK custom
+  calls don't exist in the Rust runtime's XLA); the Rust coordinator
+  finishes it from the returned α/β streams — the same negligible
+  post-processing split as paper App. B.
+* ``predict_terms`` — the serving graph: batched predictive mean and
+  latent variance for a block of test points from a single mBCG call.
+
+Raw hyperparameters are log-space, matching the Rust side:
+``params = [log ℓ, log s, log σ²]``.
+"""
+
+import functools
+
+import jax.numpy as jnp
+
+from compile.kernels.kernel_matmul import kernel_matmul
+from compile.kernels.ref import kernel_matrix
+from compile.mbcg import mbcg
+
+LN_2PI = 1.8378770664093453
+
+
+def _matmul_fns(x, params, kind):
+    """(K̂·M, dK̂/dlog ℓ·M, K·M-noiseless) closures over the Pallas kernel."""
+    log_ls, log_os, log_noise = params[0], params[1], params[2]
+
+    def khat(m):
+        return kernel_matmul(x, m, log_ls, log_os, log_noise, kind=kind)
+
+    def dk_dls(m):
+        return kernel_matmul(x, m, log_ls, log_os, None, kind=kind + "_dls")
+
+    def k_nonoise(m):  # = dK̂/dlog s (since s = e^{log s} scales K linearly)
+        return kernel_matmul(x, m, log_ls, log_os, None, kind=kind)
+
+    return khat, dk_dls, k_nonoise
+
+
+def bbmm_terms(x, y, z, params, n_iters=20, kind="rbf"):
+    """All BBMM inference ingredients from ONE mBCG call (paper §4).
+
+    Inputs: ``x (n,d)``, ``y (n,)``, probe block ``z (n,t)`` (Rademacher,
+    drawn by the Rust coordinator so it controls the seed), ``params (3,)``.
+
+    Returns a tuple of arrays (AOT-friendly, no pytrees):
+      u0        (n,)   — K̂⁻¹y
+      datafit   ()     — yᵀK̂⁻¹y
+      alphas    (p,t)  — probe-column CG coefficients
+      betas     (p,t)
+      quad      (3,)   — u₀ᵀ (dK̂/dθ_j) u₀ per raw parameter
+      trace     (3,)   — mean_i zᵢ-solveᵀ (dK̂/dθ_j) zᵢ  (eq. 4)
+    """
+    n = x.shape[0]
+    t = z.shape[1]
+    khat, dk_dls, k_nonoise = _matmul_fns(x, params, kind)
+    sigma2 = jnp.exp(params[2])
+
+    b = jnp.concatenate([y[:, None], z], axis=1)  # (n, 1+t)
+    solves, alphas, betas = mbcg(khat, b, n_iters)
+    u0 = solves[:, 0]
+    uz = solves[:, 1:]  # K̂⁻¹ Z
+
+    datafit = jnp.dot(y, u0)
+
+    # derivative mat-muls, shared between quad and trace terms:
+    # one batched call per parameter on [u0 | Z]
+    block = jnp.concatenate([u0[:, None], z], axis=1)  # (n, 1+t)
+    d_ls = dk_dls(block)
+    d_os = k_nonoise(block)
+    # dK̂/dlog σ² · M = σ² M
+    quad = jnp.stack(
+        [
+            jnp.dot(u0, d_ls[:, 0]),
+            jnp.dot(u0, d_os[:, 0]),
+            sigma2 * jnp.dot(u0, u0),
+        ]
+    )
+    trace = jnp.stack(
+        [
+            jnp.mean(jnp.sum(uz * d_ls[:, 1:], axis=0)),
+            jnp.mean(jnp.sum(uz * d_os[:, 1:], axis=0)),
+            sigma2 * jnp.mean(jnp.sum(uz * z, axis=0)),
+        ]
+    )
+    # probe α/β only (column 0 is the y-solve)
+    return u0, datafit, alphas[:, 1:], betas[:, 1:], quad, trace
+
+
+def predict_terms(x, y, x_star, params, n_iters=50, kind="rbf"):
+    """Predictive mean + latent variance for a test block (paper eq. 1).
+
+    One mBCG call over ``[y  K_{Xx*}]`` gives both terms:
+      mean  (m,) = k_{Xx*}ᵀ K̂⁻¹ y
+      var   (m,) = k(x*,x*) − k_{Xx*}ᵀ K̂⁻¹ k_{Xx*}
+    """
+    khat, _, _ = _matmul_fns(x, params, kind)
+    log_ls, log_os = params[0], params[1]
+    k_star = kernel_matrix(x, x_star, log_ls, log_os, kind=kind)  # (n, m)
+    prior_diag = jnp.exp(log_os) * jnp.ones(x_star.shape[0], x.dtype)
+
+    b = jnp.concatenate([y[:, None], k_star], axis=1)
+    solves, _a, _b = mbcg(khat, b, n_iters)
+    mean = jnp.sum(k_star * solves[:, :1], axis=0)
+    quad = jnp.sum(k_star * solves[:, 1:], axis=0)
+    var = jnp.maximum(prior_diag - quad, 0.0)
+    return mean, var
+
+
+def nmll_reference(x, y, params, kind="rbf"):
+    """Exact NMLL via dense materialisation (test oracle only — uses
+    slogdet/solve, never lowered to an artifact)."""
+    n = x.shape[0]
+    k = kernel_matrix(x, x, params[0], params[1], kind=kind)
+    khat = k + jnp.exp(params[2]) * jnp.eye(n, dtype=x.dtype)
+    alpha = jnp.linalg.solve(khat, y)
+    _sign, logdet = jnp.linalg.slogdet(khat)
+    return 0.5 * (jnp.dot(y, alpha) + logdet + n * LN_2PI)
+
+
+def exact_grad_reference(x, y, params, kind="rbf"):
+    """Autodiff gradient of the exact NMLL (oracle for the trace terms)."""
+    import jax
+
+    return jax.grad(functools.partial(nmll_reference, x, y, kind=kind))(params)

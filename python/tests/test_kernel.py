@@ -1,0 +1,123 @@
+"""L1 correctness: Pallas fused kernel mat-mul vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the compiled artifacts —
+hypothesis sweeps shapes, dtypes, hyperparameters and kernel families.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.kernel_matmul import kernel_matmul, vmem_estimate_bytes
+from compile.kernels.ref import kernel_matmul_ref, kernel_matrix, sq_dists
+
+KINDS = ["rbf", "matern52", "rbf_dls", "matern52_dls"]
+
+
+def make_inputs(n, d, t, seed=0, dtype=jnp.float32):
+    kx, kv = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.uniform(kx, (n, d), minval=-1.0, maxval=1.0, dtype=dtype)
+    v = jax.random.normal(kv, (n, t), dtype=dtype)
+    return x, v
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_pallas_matches_ref_basic(kind):
+    x, v = make_inputs(100, 3, 4)
+    got = kernel_matmul(x, v, -0.5, 0.2, -2.0, kind=kind, block_n=32, block_m=32)
+    want = kernel_matmul_ref(x, v, -0.5, 0.2, -2.0, kind=kind)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=200),
+    d=st.integers(min_value=1, max_value=8),
+    t=st.integers(min_value=1, max_value=6),
+    kind=st.sampled_from(KINDS),
+    log_ls=st.floats(min_value=-1.5, max_value=1.0),
+    log_os=st.floats(min_value=-1.0, max_value=1.0),
+    bn=st.sampled_from([8, 16, 64, 128]),
+    bm=st.sampled_from([8, 32, 128]),
+)
+def test_pallas_matches_ref_hypothesis(n, d, t, kind, log_ls, log_os, bn, bm):
+    x, v = make_inputs(n, d, t, seed=n * 7 + d)
+    got = kernel_matmul(
+        x, v, log_ls, log_os, -2.0, kind=kind, block_n=bn, block_m=bm
+    )
+    want = kernel_matmul_ref(x, v, log_ls, log_os, -2.0, kind=kind)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=5e-4)
+
+
+def test_noise_term_only_on_plain_kinds():
+    x, v = make_inputs(50, 2, 3, seed=3)
+    hi_noise = kernel_matmul(x, v, 0.0, 0.0, 2.0, kind="rbf")
+    lo_noise = kernel_matmul(x, v, 0.0, 0.0, -20.0, kind="rbf")
+    diff = np.asarray(hi_noise - lo_noise)
+    expect = (np.exp(2.0) - np.exp(-20.0)) * np.asarray(v)
+    np.testing.assert_allclose(diff, expect, rtol=1e-4, atol=1e-5)
+    # derivative kinds must ignore noise entirely
+    a = kernel_matmul(x, v, 0.0, 0.0, 2.0, kind="rbf_dls")
+    b = kernel_matmul(x, v, 0.0, 0.0, -20.0, kind="rbf_dls")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_symmetry_of_kernel_operator():
+    # uᵀ(K̂v) == vᵀ(K̂u) — operator symmetry through the fused path
+    x, v = make_inputs(80, 3, 1, seed=4)
+    _, u = make_inputs(80, 3, 1, seed=5)
+    kv = kernel_matmul(x, v, -0.3, 0.1, -1.0, kind="rbf")
+    ku = kernel_matmul(x, u, -0.3, 0.1, -1.0, kind="rbf")
+    lhs = float(jnp.vdot(u, kv))
+    rhs = float(jnp.vdot(v, ku))
+    assert abs(lhs - rhs) < 1e-3 * max(1.0, abs(lhs))
+
+
+def test_dls_matches_autodiff():
+    # ∂(K·v)/∂log ℓ from the fused *_dls kind == jax.grad of the ref
+    x, v = make_inputs(40, 2, 2, seed=6)
+
+    def contraction(log_ls):
+        k = kernel_matrix(x, x, log_ls, 0.3, kind="rbf")
+        return jnp.sum(k @ v)
+
+    got = float(jnp.sum(kernel_matmul(x, v, -0.4, 0.3, None, kind="rbf_dls")))
+    want = float(jax.grad(contraction)(-0.4))
+    assert abs(got - want) < 1e-2 * max(1.0, abs(want))
+
+
+def test_sq_dists_nonnegative_and_zero_diag():
+    x, _ = make_inputs(30, 4, 1, seed=7)
+    r2 = np.asarray(sq_dists(x, x))
+    assert (r2 >= 0).all()
+    np.testing.assert_allclose(np.diag(r2), 0.0, atol=1e-5)
+
+
+def test_kernel_matrix_psd():
+    # K + small jitter must be PSD (eigvalsh on the oracle, small n)
+    x, _ = make_inputs(60, 3, 1, seed=8)
+    k = np.asarray(kernel_matrix(x, x, -0.5, 0.0, kind="matern52"))
+    w = np.linalg.eigvalsh(k + 1e-5 * np.eye(60))
+    assert w.min() > 0
+
+
+def test_float64_path():
+    with jax.enable_x64(True):
+        x = jnp.asarray(np.random.RandomState(0).uniform(-1, 1, (64, 3)))
+        v = jnp.asarray(np.random.RandomState(1).normal(size=(64, 2)))
+        got = kernel_matmul(x, v, -0.5, 0.0, -2.0, kind="rbf", block_n=16, block_m=16)
+        want = kernel_matmul_ref(x, v, -0.5, 0.0, -2.0, kind="rbf")
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-10)
+
+
+def test_vmem_estimate_within_budget():
+    # default tiles must fit comfortably in 16 MiB of VMEM (paper-scale t)
+    assert vmem_estimate_bytes(d=128, t=16) < 2 * 1024 * 1024
+
+
+def test_unknown_kind_raises():
+    x, v = make_inputs(16, 2, 1, seed=9)
+    with pytest.raises(ValueError):
+        kernel_matmul(x, v, 0.0, 0.0, 0.0, kind="nope")

@@ -1,0 +1,89 @@
+"""L2 correctness: jax mBCG solves + tridiagonal recovery vs dense oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.mbcg import mbcg, tridiag_from_coeffs
+
+
+def spd_matrix(n, seed=0, cond_boost=0.5):
+    g = np.random.RandomState(seed).normal(size=(n, n)).astype(np.float32)
+    a = g.T @ g + cond_boost * n * np.eye(n, dtype=np.float32)
+    return jnp.asarray(a)
+
+
+def test_solves_match_dense_solve():
+    n, s = 60, 4
+    a = spd_matrix(n, 1)
+    b = jnp.asarray(np.random.RandomState(2).normal(size=(n, s)).astype(np.float32))
+    solves, _alphas, _betas = mbcg(lambda m: a @ m, b, n)
+    want = jnp.linalg.solve(a, b)
+    np.testing.assert_allclose(np.asarray(solves), np.asarray(want), atol=2e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=50),
+    s=st.integers(min_value=1, max_value=5),
+    seed=st.integers(min_value=0, max_value=100),
+)
+def test_residual_shrinks_with_iterations(n, s, seed):
+    a = spd_matrix(n, seed)
+    b = jnp.asarray(
+        np.random.RandomState(seed + 1).normal(size=(n, s)).astype(np.float32)
+    )
+    early, _, _ = mbcg(lambda m: a @ m, b, max(1, n // 4))
+    late, _, _ = mbcg(lambda m: a @ m, b, n)
+    r_early = float(jnp.linalg.norm(a @ early - b))
+    r_late = float(jnp.linalg.norm(a @ late - b))
+    assert r_late <= r_early + 1e-3
+
+
+def test_tridiag_eigenvalues_approximate_spectrum():
+    # Ritz values of the recovered T lie within the spectrum of A and the
+    # full-iteration logdet matches slogdet
+    n = 24
+    a = spd_matrix(n, 3)
+    z = np.random.RandomState(4).choice([-1.0, 1.0], size=(n, 1)).astype(np.float32)
+    _s, alphas, betas = mbcg(lambda m: a @ m, jnp.asarray(z), n)
+    t = np.asarray(tridiag_from_coeffs(alphas, betas))[0]
+    ritz = np.linalg.eigvalsh(t)
+    w = np.linalg.eigvalsh(np.asarray(a))
+    assert ritz.min() >= w.min() * 0.9
+    assert ritz.max() <= w.max() * 1.1
+    # SLQ with the full Krylov space: n·e₁ᵀlog(T)e₁ over many probes ≈ logdet.
+    # With one Rademacher probe the estimate is exact in expectation only;
+    # here we check the quadrature machinery instead: weights sum to 1.
+    evals, vecs = np.linalg.eigh(t)
+    weights = vecs[0] ** 2
+    assert abs(weights.sum() - 1.0) < 1e-5
+
+
+def test_slq_logdet_unbiasedness_over_probes():
+    n = 32
+    a = spd_matrix(n, 5)
+    sign, want = np.linalg.slogdet(np.asarray(a))
+    assert sign > 0
+    rs = np.random.RandomState(6)
+    t_probes = 64
+    z = rs.choice([-1.0, 1.0], size=(n, t_probes)).astype(np.float32)
+    _s, alphas, betas = mbcg(lambda m: a @ m, jnp.asarray(z), n)
+    tt = np.asarray(tridiag_from_coeffs(alphas, betas))
+    est = 0.0
+    for i in range(t_probes):
+        evals, vecs = np.linalg.eigh(tt[i])
+        est += n * float((vecs[0] ** 2 * np.log(np.maximum(evals, 1e-30))).sum())
+    est /= t_probes
+    assert abs(est - want) / abs(want) < 0.15, (est, want)
+
+
+def test_zero_rhs_column_stays_zero():
+    n = 16
+    a = spd_matrix(n, 7)
+    b = np.zeros((n, 2), np.float32)
+    b[:, 1] = np.random.RandomState(8).normal(size=n)
+    solves, alphas, _ = mbcg(lambda m: a @ m, jnp.asarray(b), 10)
+    assert np.abs(np.asarray(solves)[:, 0]).max() == 0.0
+    assert np.abs(np.asarray(alphas)[:, 0]).max() == 0.0

@@ -1,0 +1,37 @@
+//! Bench: Figure 2 (left) — exact-GP training iteration, BBMM vs Cholesky.
+//! Quick sizes by default; set BBMM_BENCH_FULL=1 for paper-scale n.
+
+use bbmm_gp::bench::{bench_budget, Table};
+use bbmm_gp::data::synthetic::generate_sized;
+use bbmm_gp::gp::mll::{BbmmEngine, CholeskyEngine, InferenceEngine};
+use bbmm_gp::kernels::{DenseKernelOp, Rbf};
+
+fn main() {
+    let full = std::env::var("BBMM_BENCH_FULL").is_ok();
+    let sizes: &[usize] = if full {
+        &[500, 1000, 2000, 3500]
+    } else {
+        &[300, 600, 1200]
+    };
+    let mut table = Table::new(&["n", "chol_s", "bbmm_s", "speedup"]);
+    for &n in sizes {
+        let ds = generate_sized("bench_exact", n, 6, 1);
+        let y = ds.y_train.clone();
+        let op = DenseKernelOp::new(ds.x_train.clone(), Box::new(Rbf::new(0.5, 1.0)), 0.05);
+        let chol = bench_budget(&format!("exact/cholesky/n{n}"), 2.0, || {
+            let _ = CholeskyEngine.mll_and_grad(&op, &y);
+        });
+        let mut engine = BbmmEngine::default();
+        let bbmm = bench_budget(&format!("exact/bbmm/n{n}"), 2.0, || {
+            let _ = engine.mll_and_grad(&op, &y);
+        });
+        table.row(&[
+            n.to_string(),
+            format!("{:.4}", chol.median_s()),
+            format!("{:.4}", bbmm.median_s()),
+            format!("{:.1}x", chol.median_s() / bbmm.median_s()),
+        ]);
+    }
+    table.print();
+    table.save("bench_fig2_exact").ok();
+}

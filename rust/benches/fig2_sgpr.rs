@@ -1,0 +1,48 @@
+//! Bench: Figure 2 (middle) — SGPR training iteration, BBMM vs
+//! Woodbury-Cholesky (GPflow-equivalent). BBMM_BENCH_FULL=1 for paper n.
+
+use bbmm_gp::bench::{bench_budget, Table};
+use bbmm_gp::data::synthetic::generate_sized;
+use bbmm_gp::gp::mll::{BbmmEngine, InferenceEngine};
+use bbmm_gp::gp::{SgprCholeskyEngine, SgprOp};
+use bbmm_gp::kernels::Rbf;
+use bbmm_gp::tensor::Mat;
+use bbmm_gp::util::Rng;
+
+fn main() {
+    let full = std::env::var("BBMM_BENCH_FULL").is_ok();
+    let sizes: &[usize] = if full {
+        &[15_000, 30_000, 50_000]
+    } else {
+        &[2_000, 5_000, 10_000]
+    };
+    let m = if full { 300 } else { 150 };
+    let mut table = Table::new(&["n", "m", "chol_s", "bbmm_s", "speedup"]);
+    for &n in sizes {
+        let ds = generate_sized("bench_sgpr", n, 8, 2);
+        let y = ds.y_train.clone();
+        let mut rng = Rng::new(3);
+        let mut u = Mat::zeros(m, ds.dim());
+        for r in 0..m {
+            let src = rng.below(ds.n_train());
+            u.row_mut(r).copy_from_slice(ds.x_train.row(src));
+        }
+        let op = SgprOp::new(ds.x_train.clone(), u, Box::new(Rbf::new(0.5, 1.0)), 0.05);
+        let chol = bench_budget(&format!("sgpr/cholesky/n{n}"), 2.0, || {
+            let _ = SgprCholeskyEngine.mll_and_grad_sgpr(&op, &y);
+        });
+        let mut engine = BbmmEngine::new(20, 10, 0, 5);
+        let bbmm = bench_budget(&format!("sgpr/bbmm/n{n}"), 2.0, || {
+            let _ = engine.mll_and_grad(&op, &y);
+        });
+        table.row(&[
+            n.to_string(),
+            m.to_string(),
+            format!("{:.4}", chol.median_s()),
+            format!("{:.4}", bbmm.median_s()),
+            format!("{:.1}x", chol.median_s() / bbmm.median_s()),
+        ]);
+    }
+    table.print();
+    table.save("bench_fig2_sgpr").ok();
+}

@@ -1,0 +1,46 @@
+//! Bench: Figure 2 (right) — SKI+DKL training iteration, BBMM vs the
+//! sequential Dong et al. engine. BBMM_BENCH_FULL=1 for paper-scale n.
+
+use bbmm_gp::bench::{bench_budget, Table};
+use bbmm_gp::data::synthetic::generate_sized;
+use bbmm_gp::gp::mll::{BbmmEngine, InferenceEngine};
+use bbmm_gp::gp::{DongEngine, SkiOp};
+use bbmm_gp::kernels::{DeepFeatureMap, Rbf};
+use bbmm_gp::util::Rng;
+
+fn main() {
+    let full = std::env::var("BBMM_BENCH_FULL").is_ok();
+    let sizes: &[usize] = if full {
+        &[50_000, 150_000, 500_000]
+    } else {
+        &[10_000, 30_000, 60_000]
+    };
+    let grid_m = if full { 10_000 } else { 2_000 };
+    let mut table = Table::new(&["n", "grid_m", "dong_s", "bbmm_s", "speedup"]);
+    for &n in sizes {
+        let ds = generate_sized("bench_ski", n, 8, 4);
+        let y = ds.y_train.clone();
+        let mut rng = Rng::new(5);
+        let dkl = DeepFeatureMap::new(&[ds.dim(), 32, 8, 1], &mut rng);
+        let feat = dkl.forward(&ds.x_train);
+        let z: Vec<f64> = (0..ds.n_train()).map(|i| feat.get(i, 0)).collect();
+        let op = SkiOp::new(z, grid_m, Box::new(Rbf::new(0.3, 1.0)), 0.05);
+        let mut dong = DongEngine::new(20, 10, 6);
+        let dong_r = bench_budget(&format!("ski/dong/n{n}"), 2.0, || {
+            let _ = dong.mll_and_grad(&op, &y);
+        });
+        let mut bbmm = BbmmEngine::new(20, 10, 0, 6);
+        let bbmm_r = bench_budget(&format!("ski/bbmm/n{n}"), 2.0, || {
+            let _ = bbmm.mll_and_grad(&op, &y);
+        });
+        table.row(&[
+            n.to_string(),
+            grid_m.to_string(),
+            format!("{:.4}", dong_r.median_s()),
+            format!("{:.4}", bbmm_r.median_s()),
+            format!("{:.1}x", dong_r.median_s() / bbmm_r.median_s()),
+        ]);
+    }
+    table.print();
+    table.save("bench_fig2_ski").ok();
+}

@@ -1,0 +1,120 @@
+//! Microbenchmarks of the substrate hot paths — the §Perf profiling input:
+//! dense GEMM, fused kernel mat-mul vs materialise-then-multiply, Toeplitz
+//! FFT mat-vec, pivoted Cholesky build, and a single mBCG iteration.
+
+use bbmm_gp::bench::{bench_budget, Table};
+use bbmm_gp::kernels::{DenseKernelOp, KernelOperator, Rbf};
+use bbmm_gp::linalg::pivoted_cholesky::pivoted_cholesky;
+use bbmm_gp::linalg::toeplitz::ToeplitzOp;
+use bbmm_gp::tensor::Mat;
+use bbmm_gp::util::Rng;
+
+fn main() {
+    let mut rng = Rng::new(21);
+    let mut table = Table::new(&["op", "size", "median_s", "gflops"]);
+
+    // dense GEMM
+    for &n in &[256usize, 512, 1024] {
+        let a = Mat::from_fn(n, n, |_, _| rng.normal());
+        let b = Mat::from_fn(n, n, |_, _| rng.normal());
+        let r = bench_budget(&format!("gemm/{n}"), 1.5, || {
+            let _ = a.matmul(&b);
+        });
+        let gflops = 2.0 * (n as f64).powi(3) / r.median_s() / 1e9;
+        table.row(&[
+            "gemm".into(),
+            format!("{n}x{n}x{n}"),
+            format!("{:.4}", r.median_s()),
+            format!("{gflops:.2}"),
+        ]);
+    }
+
+    // fused kernel mat-mul vs materialise + multiply
+    for &n in &[1000usize, 3000] {
+        let x = Mat::from_fn(n, 6, |_, _| rng.uniform_in(-1.0, 1.0));
+        let op = DenseKernelOp::new(x, Box::new(Rbf::new(0.5, 1.0)), 0.05);
+        let v = Mat::from_fn(n, 11, |_, _| rng.normal());
+        let fused = bench_budget(&format!("kernel_matmul_fused/{n}"), 1.5, || {
+            let _ = op.matmul(&v);
+        });
+        let materialise = bench_budget(&format!("kernel_matmul_dense/{n}"), 1.5, || {
+            let k = op.dense();
+            let _ = k.matmul(&v);
+        });
+        table.row(&[
+            "kmm_fused".into(),
+            n.to_string(),
+            format!("{:.4}", fused.median_s()),
+            "-".into(),
+        ]);
+        table.row(&[
+            "kmm_dense".into(),
+            n.to_string(),
+            format!("{:.4}", materialise.median_s()),
+            "-".into(),
+        ]);
+    }
+
+    // Toeplitz FFT mat-vec
+    for &m in &[4096usize, 65536] {
+        let col: Vec<f64> = (0..m).map(|i| (-0.5 * (i as f64 * 1e-3).powi(2)).exp()).collect();
+        let t = ToeplitzOp::new(col);
+        let v: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let r = bench_budget(&format!("toeplitz_matvec/{m}"), 1.0, || {
+            let _ = t.matvec(&v);
+        });
+        table.row(&[
+            "toeplitz_mv".into(),
+            m.to_string(),
+            format!("{:.5}", r.median_s()),
+            "-".into(),
+        ]);
+    }
+
+    // pivoted Cholesky (rank 5) on a 3000-point kernel
+    {
+        let n = 3000;
+        let x = Mat::from_fn(n, 4, |_, _| rng.uniform_in(-1.0, 1.0));
+        let op = DenseKernelOp::new(x, Box::new(Rbf::new(0.5, 1.0)), 0.05);
+        let diag = op.diag();
+        let r = bench_budget("pivoted_cholesky_rank5/3000", 1.5, || {
+            let _ = pivoted_cholesky(&diag, |i| op.row(i), 5, 0.0);
+        });
+        table.row(&[
+            "pivchol_k5".into(),
+            n.to_string(),
+            format!("{:.4}", r.median_s()),
+            "-".into(),
+        ]);
+    }
+
+    // one mBCG iteration ≈ one fused matmul + O(nt): measure 20-iteration call
+    {
+        let n = 2000;
+        let x = Mat::from_fn(n, 4, |_, _| rng.uniform_in(-1.0, 1.0));
+        let op = DenseKernelOp::new(x, Box::new(Rbf::new(0.5, 1.0)), 0.05);
+        let b = Mat::from_fn(n, 11, |_, _| rng.normal());
+        let r = bench_budget("mbcg_p20_t11/2000", 2.0, || {
+            let _ = bbmm_gp::linalg::mbcg::mbcg(
+                |m| op.matmul(m),
+                &b,
+                |m| m.clone(),
+                &bbmm_gp::linalg::mbcg::MbcgOptions {
+                    max_iters: 20,
+                    tol: 0.0,
+                    n_solve_only: 0,
+                },
+            );
+        });
+        table.row(&[
+            "mbcg_p20".into(),
+            n.to_string(),
+            format!("{:.4}", r.median_s()),
+            "-".into(),
+        ]);
+    }
+
+    println!();
+    table.print();
+    table.save("microbench").ok();
+}

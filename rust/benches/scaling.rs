@@ -1,0 +1,59 @@
+//! Bench: §4 complexity claim — BBMM's cost per training iteration grows
+//! ~O(n²) while Cholesky grows O(n³). Fits the empirical exponents.
+
+use bbmm_gp::bench::{bench_budget, Table};
+use bbmm_gp::data::synthetic::generate_sized;
+use bbmm_gp::gp::mll::{BbmmEngine, CholeskyEngine, InferenceEngine};
+use bbmm_gp::kernels::{DenseKernelOp, Rbf};
+
+/// least-squares slope of log(time) against log(n)
+fn fit_exponent(ns: &[usize], ts: &[f64]) -> f64 {
+    let logs: Vec<(f64, f64)> = ns
+        .iter()
+        .zip(ts.iter())
+        .map(|(&n, &t)| ((n as f64).ln(), t.ln()))
+        .collect();
+    let k = logs.len() as f64;
+    let sx: f64 = logs.iter().map(|(x, _)| x).sum();
+    let sy: f64 = logs.iter().map(|(_, y)| y).sum();
+    let sxx: f64 = logs.iter().map(|(x, _)| x * x).sum();
+    let sxy: f64 = logs.iter().map(|(x, y)| x * y).sum();
+    (k * sxy - sx * sy) / (k * sxx - sx * sx)
+}
+
+fn main() {
+    let full = std::env::var("BBMM_BENCH_FULL").is_ok();
+    let sizes: Vec<usize> = if full {
+        vec![512, 1024, 2048, 4096]
+    } else {
+        vec![256, 512, 1024, 2048]
+    };
+    let mut table = Table::new(&["n", "chol_s", "bbmm_s"]);
+    let mut chol_ts = Vec::new();
+    let mut bbmm_ts = Vec::new();
+    for &n in &sizes {
+        let ds = generate_sized("bench_scaling", n, 4, 7);
+        let y = ds.y_train.clone();
+        let op = DenseKernelOp::new(ds.x_train.clone(), Box::new(Rbf::new(0.5, 1.0)), 0.05);
+        let chol = bench_budget(&format!("scaling/cholesky/n{n}"), 2.0, || {
+            let _ = CholeskyEngine.mll_and_grad(&op, &y);
+        });
+        let mut engine = BbmmEngine::default();
+        let bbmm = bench_budget(&format!("scaling/bbmm/n{n}"), 2.0, || {
+            let _ = engine.mll_and_grad(&op, &y);
+        });
+        chol_ts.push(chol.median_s());
+        bbmm_ts.push(bbmm.median_s());
+        table.row(&[
+            n.to_string(),
+            format!("{:.4}", chol.median_s()),
+            format!("{:.4}", bbmm.median_s()),
+        ]);
+    }
+    table.print();
+    table.save("bench_scaling").ok();
+    let e_chol = fit_exponent(&sizes, &chol_ts);
+    let e_bbmm = fit_exponent(&sizes, &bbmm_ts);
+    println!("\nfitted exponents: cholesky n^{e_chol:.2}  bbmm n^{e_bbmm:.2}");
+    println!("paper claim: cholesky → 3.0, bbmm → 2.0 (plus lower-order terms)");
+}

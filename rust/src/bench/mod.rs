@@ -1,0 +1,231 @@
+//! In-tree benchmark harness (criterion is not resolvable offline).
+//!
+//! Provides warmup + repeated timing with median/mean/min reporting, and a
+//! fixed-width table printer used by the figure-regeneration binaries so
+//! their output reads like the paper's tables.
+
+use crate::util::Timer;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn median_s(&self) -> f64 {
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if s.is_empty() {
+            return f64::NAN;
+        }
+        let mid = s.len() / 2;
+        if s.len() % 2 == 0 {
+            (s[mid - 1] + s[mid]) / 2.0
+        } else {
+            s[mid]
+        }
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len().max(1) as f64
+    }
+
+    pub fn min_s(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// Benchmark a closure: `warmup` unmeasured runs, then `samples` measured
+/// runs (at least one each). Prints a one-line summary.
+pub fn bench(name: &str, warmup: usize, samples: usize, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup.max(1) {
+        f();
+    }
+    let mut times = Vec::with_capacity(samples.max(1));
+    for _ in 0..samples.max(1) {
+        let t = Timer::start();
+        f();
+        times.push(t.elapsed_s());
+    }
+    let res = BenchResult {
+        name: name.to_string(),
+        samples: times,
+    };
+    println!(
+        "bench {:40} median {:>10}  mean {:>10}  min {:>10}  (n={})",
+        res.name,
+        fmt_duration(res.median_s()),
+        fmt_duration(res.mean_s()),
+        fmt_duration(res.min_s()),
+        res.samples.len()
+    );
+    res
+}
+
+/// Adaptive benchmark: keeps sampling until `budget_s` seconds are spent
+/// (minimum 3 samples) — good for cases whose runtime varies by 1000×.
+pub fn bench_budget(name: &str, budget_s: f64, mut f: impl FnMut()) -> BenchResult {
+    f(); // warmup
+    let total = Timer::start();
+    let mut times = Vec::new();
+    while times.len() < 3 || (total.elapsed_s() < budget_s && times.len() < 50) {
+        let t = Timer::start();
+        f();
+        times.push(t.elapsed_s());
+    }
+    let res = BenchResult {
+        name: name.to_string(),
+        samples: times,
+    };
+    println!(
+        "bench {:40} median {:>10}  mean {:>10}  min {:>10}  (n={})",
+        res.name,
+        fmt_duration(res.median_s()),
+        fmt_duration(res.mean_s()),
+        fmt_duration(res.min_s()),
+        res.samples.len()
+    );
+    res
+}
+
+/// Human duration formatting.
+pub fn fmt_duration(s: f64) -> String {
+    if !s.is_finite() {
+        "n/a".to_string()
+    } else if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}s", s)
+    }
+}
+
+/// Fixed-width table printer for figure outputs.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "table width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn to_string(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("| ");
+            for (c, cell) in cells.iter().enumerate() {
+                line.push_str(&format!("{:<w$} | ", cell, w = widths[c]));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&"-".repeat(w + 2));
+            sep.push('|');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.to_string());
+    }
+
+    /// Write the table (and a CSV twin) under results/.
+    pub fn save(&self, stem: &str) -> std::io::Result<()> {
+        std::fs::create_dir_all("results")?;
+        std::fs::write(format!("results/{stem}.txt"), self.to_string())?;
+        let mut csv = self.headers.join(",");
+        csv.push('\n');
+        for row in &self.rows {
+            csv.push_str(&row.join(","));
+            csv.push('\n');
+        }
+        std::fs::write(format!("results/{stem}.csv"), csv)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let r = bench("noop", 1, 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(r.samples.len(), 5);
+        assert!(r.median_s() >= 0.0);
+        assert!(r.min_s() <= r.mean_s() * 1.0001);
+    }
+
+    #[test]
+    fn median_odd_even() {
+        let r = BenchResult {
+            name: "x".into(),
+            samples: vec![3.0, 1.0, 2.0],
+        };
+        assert_eq!(r.median_s(), 2.0);
+        let r2 = BenchResult {
+            name: "x".into(),
+            samples: vec![4.0, 1.0, 2.0, 3.0],
+        };
+        assert_eq!(r2.median_s(), 2.5);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert!(fmt_duration(5e-9).ends_with("ns"));
+        assert!(fmt_duration(5e-6).ends_with("µs"));
+        assert!(fmt_duration(5e-3).ends_with("ms"));
+        assert!(fmt_duration(5.0).ends_with("s"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["dataset", "n", "speedup"]);
+        t.row(&["wine".into(), "1599".into(), "4.2x".into()]);
+        t.row(&["skillcraft".into(), "3338".into(), "12.9x".into()]);
+        let s = t.to_string();
+        assert!(s.contains("dataset"));
+        assert!(s.lines().count() == 4);
+        let widths: Vec<usize> = s.lines().map(|l| l.len()).collect();
+        assert_eq!(widths[0], widths[2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "table width mismatch")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,219 @@
+//! Experiment configuration: a TOML-subset parser (offline crate set has
+//! no serde/toml) plus the typed [`ExperimentConfig`] the launcher
+//! (`bbmm run --config …`) executes. Every figure-regeneration setting
+//! can be expressed as a config file — see `configs/*.toml`.
+
+pub mod parser;
+
+pub use parser::{ConfigDoc, ConfigError, Value};
+
+/// Fully-resolved experiment configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentConfig {
+    // [dataset]
+    pub dataset: String,
+    pub n_override: Option<usize>,
+    pub csv_path: Option<String>,
+    pub seed: u64,
+    // [model]
+    pub model: String,  // exact | sgpr | ski
+    pub kernel: String, // rbf | matern12 | matern32 | matern52
+    pub inducing: usize,
+    pub noise_init: f64,
+    pub lengthscale_init: f64,
+    pub outputscale_init: f64,
+    // [engine]
+    pub engine: String, // bbmm | cholesky | dong
+    pub cg_iters: usize,
+    pub probes: usize,
+    pub precond_rank: usize,
+    pub cg_tol: f64,
+    // [train]
+    pub iters: usize,
+    pub lr: f64,
+    pub verbose: bool,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            dataset: "wine".into(),
+            n_override: None,
+            csv_path: None,
+            seed: 0,
+            model: "exact".into(),
+            kernel: "rbf".into(),
+            inducing: 300,
+            noise_init: 0.1,
+            lengthscale_init: 0.5,
+            outputscale_init: 1.0,
+            engine: "bbmm".into(),
+            cg_iters: 20,
+            probes: 10,
+            precond_rank: 5,
+            cg_tol: 1e-10,
+            iters: 30,
+            lr: 0.1,
+            verbose: false,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Build from a parsed document; unknown keys are an error (typos must
+    /// not silently become defaults).
+    pub fn from_doc(doc: &ConfigDoc) -> Result<Self, ConfigError> {
+        let mut cfg = ExperimentConfig::default();
+        for (section, key, value) in doc.entries() {
+            match (section.as_str(), key.as_str()) {
+                ("dataset", "name") => cfg.dataset = value.as_str()?.to_string(),
+                ("dataset", "n") => cfg.n_override = Some(value.as_usize()?),
+                ("dataset", "csv") => cfg.csv_path = Some(value.as_str()?.to_string()),
+                ("dataset", "seed") => cfg.seed = value.as_usize()? as u64,
+                ("model", "kind") => cfg.model = value.as_str()?.to_string(),
+                ("model", "kernel") => cfg.kernel = value.as_str()?.to_string(),
+                ("model", "inducing") => cfg.inducing = value.as_usize()?,
+                ("model", "noise_init") => cfg.noise_init = value.as_f64()?,
+                ("model", "lengthscale_init") => cfg.lengthscale_init = value.as_f64()?,
+                ("model", "outputscale_init") => cfg.outputscale_init = value.as_f64()?,
+                ("engine", "kind") => cfg.engine = value.as_str()?.to_string(),
+                ("engine", "cg_iters") => cfg.cg_iters = value.as_usize()?,
+                ("engine", "probes") => cfg.probes = value.as_usize()?,
+                ("engine", "precond_rank") => cfg.precond_rank = value.as_usize()?,
+                ("engine", "cg_tol") => cfg.cg_tol = value.as_f64()?,
+                ("train", "iters") => cfg.iters = value.as_usize()?,
+                ("train", "lr") => cfg.lr = value.as_f64()?,
+                ("train", "verbose") => cfg.verbose = value.as_bool()?,
+                (s, k) => {
+                    return Err(ConfigError::new(format!("unknown key [{s}] {k}")));
+                }
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_str_toml(text: &str) -> Result<Self, ConfigError> {
+        Self::from_doc(&ConfigDoc::parse(text)?)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self, ConfigError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| ConfigError::new(format!("{path:?}: {e}")))?;
+        Self::from_str_toml(&text)
+    }
+
+    fn validate(&self) -> Result<(), ConfigError> {
+        let ok_model = ["exact", "sgpr", "ski"].contains(&self.model.as_str());
+        if !ok_model {
+            return Err(ConfigError::new(format!("unknown model {:?}", self.model)));
+        }
+        let ok_kernel =
+            ["rbf", "matern12", "matern32", "matern52"].contains(&self.kernel.as_str());
+        if !ok_kernel {
+            return Err(ConfigError::new(format!("unknown kernel {:?}", self.kernel)));
+        }
+        let ok_engine = ["bbmm", "cholesky", "dong"].contains(&self.engine.as_str());
+        if !ok_engine {
+            return Err(ConfigError::new(format!("unknown engine {:?}", self.engine)));
+        }
+        if self.noise_init <= 0.0 || self.lr <= 0.0 {
+            return Err(ConfigError::new("noise_init and lr must be positive"));
+        }
+        Ok(())
+    }
+
+    /// Construct the configured kernel.
+    pub fn make_kernel(&self) -> Box<dyn crate::kernels::Kernel> {
+        use crate::kernels::{Matern12, Matern32, Matern52, Rbf};
+        let (ls, os) = (self.lengthscale_init, self.outputscale_init);
+        match self.kernel.as_str() {
+            "matern12" => Box::new(Matern12::new(ls, os)),
+            "matern32" => Box::new(Matern32::new(ls, os)),
+            "matern52" => Box::new(Matern52::new(ls, os)),
+            _ => Box::new(Rbf::new(ls, os)),
+        }
+    }
+
+    /// Construct the configured inference engine.
+    pub fn make_engine(&self) -> Box<dyn crate::gp::InferenceEngine> {
+        use crate::gp::mll::{BbmmEngine, CholeskyEngine};
+        use crate::gp::DongEngine;
+        match self.engine.as_str() {
+            "cholesky" => Box::new(CholeskyEngine),
+            "dong" => Box::new(DongEngine::new(self.cg_iters, self.probes, self.seed)),
+            _ => {
+                let mut e = BbmmEngine::new(self.cg_iters, self.probes, self.precond_rank, self.seed);
+                e.cg_tol = self.cg_tol;
+                Box::new(e)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const EXAMPLE: &str = r#"
+# exact GP on wine with BBMM
+[dataset]
+name = "airfoil"
+seed = 3
+
+[model]
+kind = "exact"
+kernel = "matern52"
+noise_init = 0.05
+
+[engine]
+kind = "bbmm"
+cg_iters = 25
+precond_rank = 9
+
+[train]
+iters = 40
+lr = 0.05
+verbose = true
+"#;
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = ExperimentConfig::from_str_toml(EXAMPLE).unwrap();
+        assert_eq!(cfg.dataset, "airfoil");
+        assert_eq!(cfg.seed, 3);
+        assert_eq!(cfg.kernel, "matern52");
+        assert_eq!(cfg.noise_init, 0.05);
+        assert_eq!(cfg.cg_iters, 25);
+        assert_eq!(cfg.precond_rank, 9);
+        assert_eq!(cfg.iters, 40);
+        assert!(cfg.verbose);
+        // untouched fields keep defaults
+        assert_eq!(cfg.probes, 10);
+    }
+
+    #[test]
+    fn rejects_unknown_keys() {
+        let err = ExperimentConfig::from_str_toml("[model]\nknd = \"exact\"\n").unwrap_err();
+        assert!(err.to_string().contains("unknown key"));
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(ExperimentConfig::from_str_toml("[model]\nkind = \"nope\"\n").is_err());
+        assert!(ExperimentConfig::from_str_toml("[engine]\nkind = \"x\"\n").is_err());
+        assert!(ExperimentConfig::from_str_toml("[train]\nlr = -1.0\n").is_err());
+        assert!(ExperimentConfig::from_str_toml("[train]\niters = \"many\"\n").is_err());
+    }
+
+    #[test]
+    fn factories_build_requested_components() {
+        let cfg = ExperimentConfig::from_str_toml(EXAMPLE).unwrap();
+        let k = cfg.make_kernel();
+        assert_eq!(k.n_params(), 2);
+        let e = cfg.make_engine();
+        assert_eq!(e.name(), "bbmm");
+        let cfg2 = ExperimentConfig::from_str_toml("[engine]\nkind = \"dong\"\n").unwrap();
+        assert_eq!(cfg2.make_engine().name(), "dong");
+    }
+}

@@ -1,0 +1,210 @@
+//! Minimal TOML-subset parser: `[sections]`, `key = value` with string /
+//! integer / float / boolean values, `#` comments. Enough for experiment
+//! configs without the (offline-unavailable) toml crate.
+
+use std::collections::BTreeMap;
+
+/// A parsed value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+/// Config parse/typing error.
+#[derive(Debug, Clone)]
+pub struct ConfigError(String);
+
+impl ConfigError {
+    pub fn new(msg: impl Into<String>) -> Self {
+        ConfigError(msg.into())
+    }
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+impl Value {
+    pub fn as_str(&self) -> Result<&str, ConfigError> {
+        match self {
+            Value::Str(s) => Ok(s),
+            other => Err(ConfigError::new(format!("expected string, got {other:?}"))),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize, ConfigError> {
+        match self {
+            Value::Int(i) if *i >= 0 => Ok(*i as usize),
+            other => Err(ConfigError::new(format!(
+                "expected non-negative integer, got {other:?}"
+            ))),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64, ConfigError> {
+        match self {
+            Value::Float(f) => Ok(*f),
+            Value::Int(i) => Ok(*i as f64),
+            other => Err(ConfigError::new(format!("expected number, got {other:?}"))),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool, ConfigError> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            other => Err(ConfigError::new(format!("expected bool, got {other:?}"))),
+        }
+    }
+}
+
+/// Parsed document: ordered (section, key) → value.
+#[derive(Debug, Default)]
+pub struct ConfigDoc {
+    entries: BTreeMap<(String, String), Value>,
+    order: Vec<(String, String)>,
+}
+
+impl ConfigDoc {
+    pub fn parse(text: &str) -> Result<ConfigDoc, ConfigError> {
+        let mut doc = ConfigDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                if section.is_empty() {
+                    return Err(ConfigError::new(format!("line {}: empty section", lineno + 1)));
+                }
+                continue;
+            }
+            let (key, value_text) = line
+                .split_once('=')
+                .ok_or_else(|| ConfigError::new(format!("line {}: expected key = value", lineno + 1)))?;
+            let key = key.trim().to_string();
+            if key.is_empty() || section.is_empty() {
+                return Err(ConfigError::new(format!(
+                    "line {}: key/value outside a [section]",
+                    lineno + 1
+                )));
+            }
+            let value = parse_value(value_text.trim())
+                .map_err(|e| ConfigError::new(format!("line {}: {}", lineno + 1, e.0)))?;
+            let entry_key = (section.clone(), key);
+            if doc.entries.contains_key(&entry_key) {
+                return Err(ConfigError::new(format!(
+                    "line {}: duplicate key [{}] {}",
+                    lineno + 1,
+                    entry_key.0,
+                    entry_key.1
+                )));
+            }
+            doc.order.push(entry_key.clone());
+            doc.entries.insert(entry_key, value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.entries.get(&(section.to_string(), key.to_string()))
+    }
+
+    /// All entries in file order.
+    pub fn entries(&self) -> impl Iterator<Item = (&String, &String, &Value)> {
+        self.order
+            .iter()
+            .map(move |k| (&k.0, &k.1, self.entries.get(k).unwrap()))
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a # outside quotes starts a comment
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> Result<Value, ConfigError> {
+    if text.is_empty() {
+        return Err(ConfigError::new("empty value"));
+    }
+    if let Some(stripped) = text.strip_prefix('"') {
+        let inner = stripped
+            .strip_suffix('"')
+            .ok_or_else(|| ConfigError::new("unterminated string"))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match text {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = text.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = text.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(ConfigError::new(format!("cannot parse value {text:?}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = ConfigDoc::parse(
+            "# comment\n[a]\nx = 1\ny = 2.5\nz = \"hi\"\nw = true\n[b]\nx = -3\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("a", "x"), Some(&Value::Int(1)));
+        assert_eq!(doc.get("a", "y"), Some(&Value::Float(2.5)));
+        assert_eq!(doc.get("a", "z"), Some(&Value::Str("hi".into())));
+        assert_eq!(doc.get("a", "w"), Some(&Value::Bool(true)));
+        assert_eq!(doc.get("b", "x"), Some(&Value::Int(-3)));
+        assert_eq!(doc.entries().count(), 5);
+    }
+
+    #[test]
+    fn inline_comments_and_hash_in_strings() {
+        let doc = ConfigDoc::parse("[s]\na = 1 # trailing\nb = \"has # inside\"\n").unwrap();
+        assert_eq!(doc.get("s", "a"), Some(&Value::Int(1)));
+        assert_eq!(doc.get("s", "b"), Some(&Value::Str("has # inside".into())));
+    }
+
+    #[test]
+    fn error_cases() {
+        assert!(ConfigDoc::parse("x = 1\n").is_err()); // outside section
+        assert!(ConfigDoc::parse("[]\n").is_err()); // empty section
+        assert!(ConfigDoc::parse("[s]\nnovalue\n").is_err());
+        assert!(ConfigDoc::parse("[s]\na = \"unterminated\n").is_err());
+        assert!(ConfigDoc::parse("[s]\na = 1\na = 2\n").is_err()); // dup
+        assert!(ConfigDoc::parse("[s]\na = what\n").is_err()); // bad value
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let v = Value::Int(5);
+        assert_eq!(v.as_usize().unwrap(), 5);
+        assert_eq!(v.as_f64().unwrap(), 5.0);
+        assert!(v.as_str().is_err());
+        assert!(Value::Int(-1).as_usize().is_err());
+        assert!(Value::Bool(true).as_bool().unwrap());
+    }
+}

@@ -1,0 +1,235 @@
+//! Dynamic batcher: coalesces concurrent single-point prediction requests
+//! into one batched GP predictive solve.
+//!
+//! Policy: a worker thread drains the queue; a batch closes when it reaches
+//! `max_batch` points or `max_wait` has elapsed since the first queued
+//! request (vLLM-style continuous batching, specialised to stateless
+//! predictions). The GP side benefits directly: one mBCG call with an
+//! `n×(1+B)` RHS block replaces B separate solves — the same
+//! batching-beats-sequential argument as the paper's Figure 2.
+
+use crate::coordinator::metrics::Metrics;
+use crate::gp::predict::Prediction;
+use crate::tensor::Mat;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// A batched predictor: takes a `B×d` matrix of query points, returns
+/// means/variances.
+pub type PredictFn = Box<dyn Fn(&Mat) -> Prediction + Send + Sync>;
+
+/// Batching policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 64,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+struct Request {
+    x: Vec<f64>,
+    reply: Sender<(f64, f64)>,
+    enqueued: Instant,
+}
+
+/// Dynamic batcher handle. Cloneable; submit from any thread.
+pub struct DynamicBatcher {
+    tx: Sender<Request>,
+    pub metrics: Arc<Metrics>,
+    dim: usize,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl DynamicBatcher {
+    /// Spawn the batching worker around a batched predictor.
+    pub fn new(dim: usize, policy: BatchPolicy, predict: PredictFn) -> Self {
+        let (tx, rx) = channel::<Request>();
+        let metrics = Arc::new(Metrics::new());
+        let m2 = Arc::clone(&metrics);
+        let worker = std::thread::spawn(move || {
+            Self::worker_loop(rx, policy, predict, m2, dim);
+        });
+        DynamicBatcher {
+            tx,
+            metrics,
+            dim,
+            worker: Some(worker),
+        }
+    }
+
+    fn worker_loop(
+        rx: Receiver<Request>,
+        policy: BatchPolicy,
+        predict: PredictFn,
+        metrics: Arc<Metrics>,
+        dim: usize,
+    ) {
+        loop {
+            // block for the first request of a batch
+            let first = match rx.recv() {
+                Ok(r) => r,
+                Err(_) => return, // all senders dropped — shut down
+            };
+            let mut batch = vec![first];
+            let deadline = Instant::now() + policy.max_wait;
+            while batch.len() < policy.max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(r) => batch.push(r),
+                    Err(_) => break,
+                }
+            }
+            // form the batch matrix and run one batched predict
+            let b = batch.len();
+            let mut xs = Mat::zeros(b, dim);
+            for (i, req) in batch.iter().enumerate() {
+                xs.row_mut(i).copy_from_slice(&req.x);
+            }
+            let pred = predict(&xs);
+            metrics.record_batch();
+            let now = Instant::now();
+            for (i, req) in batch.into_iter().enumerate() {
+                let latency = now.duration_since(req.enqueued).as_micros() as u64;
+                metrics.record_request(latency);
+                // receiver may have gone away; that's fine
+                let _ = req.reply.send((pred.mean[i], pred.var[i]));
+            }
+        }
+    }
+
+    /// Submit one query point; returns a receiver for (mean, variance).
+    pub fn submit(&self, x: Vec<f64>) -> Result<Receiver<(f64, f64)>, String> {
+        if x.len() != self.dim {
+            return Err(format!("expected {} features, got {}", self.dim, x.len()));
+        }
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(Request {
+                x,
+                reply: reply_tx,
+                enqueued: Instant::now(),
+            })
+            .map_err(|_| "batcher shut down".to_string())?;
+        Ok(reply_rx)
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn predict_one(&self, x: Vec<f64>) -> Result<(f64, f64), String> {
+        let rx = self.submit(x)?;
+        rx.recv().map_err(|_| "worker dropped reply".to_string())
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+}
+
+impl Drop for DynamicBatcher {
+    fn drop(&mut self) {
+        // closing the channel stops the worker
+        let (dead_tx, _) = channel();
+        self.tx = dead_tx;
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Shared handle for multi-threaded front-ends.
+pub type SharedBatcher = Arc<Mutex<()>>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn echo_predictor() -> PredictFn {
+        // mean = sum of features, var = 1
+        Box::new(|xs: &Mat| {
+            let mean: Vec<f64> = (0..xs.rows()).map(|i| xs.row(i).iter().sum()).collect();
+            let var = vec![1.0; xs.rows()];
+            Prediction { mean, var }
+        })
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let b = DynamicBatcher::new(2, BatchPolicy::default(), echo_predictor());
+        let (mean, var) = b.predict_one(vec![1.5, 2.5]).unwrap();
+        assert!((mean - 4.0).abs() < 1e-12);
+        assert_eq!(var, 1.0);
+    }
+
+    #[test]
+    fn wrong_dimension_rejected() {
+        let b = DynamicBatcher::new(3, BatchPolicy::default(), echo_predictor());
+        assert!(b.submit(vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn concurrent_requests_get_batched() {
+        let b = Arc::new(DynamicBatcher::new(
+            1,
+            BatchPolicy {
+                max_batch: 32,
+                max_wait: Duration::from_millis(20),
+            },
+            echo_predictor(),
+        ));
+        let mut handles = Vec::new();
+        for i in 0..20 {
+            let b = Arc::clone(&b);
+            handles.push(std::thread::spawn(move || {
+                b.predict_one(vec![i as f64]).unwrap()
+            }));
+        }
+        for (i, h) in handles.into_iter().enumerate() {
+            let (mean, _var) = h.join().unwrap();
+            assert!((mean - i as f64).abs() < 1e-12);
+        }
+        // 20 requests should have been served in far fewer than 20 batches
+        let batches = b.metrics.batches.load(std::sync::atomic::Ordering::Relaxed);
+        assert!(batches < 20, "batches={batches}");
+        assert!(b.metrics.mean_batch_size() > 1.0);
+    }
+
+    #[test]
+    fn max_batch_respected() {
+        // slow predictor lets the queue build up; max_batch caps each batch
+        let slow: PredictFn = Box::new(|xs: &Mat| {
+            std::thread::sleep(Duration::from_millis(5));
+            Prediction {
+                mean: vec![0.0; xs.rows()],
+                var: vec![0.0; xs.rows()],
+            }
+        });
+        let b = Arc::new(DynamicBatcher::new(
+            1,
+            BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+            },
+            slow,
+        ));
+        let mut rxs = Vec::new();
+        for i in 0..16 {
+            rxs.push(b.submit(vec![i as f64]).unwrap());
+        }
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let batches = b.metrics.batches.load(std::sync::atomic::Ordering::Relaxed);
+        assert!(batches >= 4, "batches={batches}");
+    }
+}

@@ -1,0 +1,120 @@
+//! Serving metrics: counters plus a simple latency histogram.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Lock-free serving metrics (shared across worker threads).
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub errors: AtomicU64,
+    /// total latency in microseconds (for mean)
+    total_latency_us: AtomicU64,
+    /// log₂-bucketed latency histogram: bucket i counts latencies in
+    /// [2^i, 2^{i+1}) microseconds
+    buckets: [AtomicU64; 24],
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    pub fn record_request(&self, latency_us: u64) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.total_latency_us.fetch_add(latency_us, Ordering::Relaxed);
+        let bucket = (64 - latency_us.max(1).leading_zeros() as usize - 1).min(23);
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn mean_latency_us(&self) -> f64 {
+        let n = self.requests.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.total_latency_us.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    /// approximate p-quantile latency from the histogram (µs)
+    pub fn quantile_latency_us(&self, q: f64) -> f64 {
+        let total: u64 = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return (1u64 << i) as f64 * 1.5; // bucket midpoint
+            }
+        }
+        (1u64 << 23) as f64
+    }
+
+    /// requests per batch (batching efficiency)
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.requests.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} batches={} errors={} mean_batch={:.2} mean_lat={:.0}us p50={:.0}us p99={:.0}us",
+            self.requests.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.errors.load(Ordering::Relaxed),
+            self.mean_batch_size(),
+            self.mean_latency_us(),
+            self.quantile_latency_us(0.5),
+            self.quantile_latency_us(0.99),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.record_request(100);
+        m.record_request(300);
+        m.record_batch();
+        assert_eq!(m.requests.load(Ordering::Relaxed), 2);
+        assert!((m.mean_latency_us() - 200.0).abs() < 1e-9);
+        assert!((m.mean_batch_size() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantiles_ordered() {
+        let m = Metrics::new();
+        for i in 1..1000u64 {
+            m.record_request(i * 10);
+        }
+        let p50 = m.quantile_latency_us(0.5);
+        let p99 = m.quantile_latency_us(0.99);
+        assert!(p50 <= p99);
+        assert!(p50 > 0.0);
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let m = Metrics::new();
+        assert_eq!(m.mean_latency_us(), 0.0);
+        assert_eq!(m.quantile_latency_us(0.9), 0.0);
+        assert_eq!(m.mean_batch_size(), 0.0);
+    }
+}

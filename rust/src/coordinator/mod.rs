@@ -1,0 +1,16 @@
+//! L3 prediction coordinator: a request router with **dynamic batching**.
+//!
+//! After training, a GP model serves predictions. Each incoming request is
+//! one test point; the batcher coalesces concurrent requests into a single
+//! batched predictive solve (one mBCG call for the whole batch — exactly
+//! the regime BBMM is built for), trading a small queueing delay for much
+//! higher throughput. A plain TCP front-end (std::net; tokio is not
+//! available offline) exposes the batcher over a line-oriented protocol.
+
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+
+pub use batcher::{BatchPolicy, DynamicBatcher, PredictFn};
+pub use metrics::Metrics;
+pub use server::{serve, ServerConfig};

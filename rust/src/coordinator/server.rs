@@ -1,0 +1,182 @@
+//! TCP prediction server (std::net; the offline crate set has no tokio).
+//!
+//! Line protocol, one request per line:
+//!
+//! ```text
+//! → 0.12,3.4,-1.0\n          (comma-separated features)
+//! ← 0.873,0.0021\n           (mean, variance)
+//! → STATS\n
+//! ← requests=… batches=…\n
+//! ```
+//!
+//! Each connection gets a handler thread; all handlers feed the shared
+//! [`DynamicBatcher`], so concurrent clients are served out of coalesced
+//! batched GP solves.
+
+use crate::coordinator::batcher::DynamicBatcher;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Server configuration.
+pub struct ServerConfig {
+    pub addr: String,
+    /// stop flag the caller can flip to shut the accept loop down
+    pub stop: Arc<AtomicBool>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:7777".to_string(),
+            stop: Arc::new(AtomicBool::new(false)),
+        }
+    }
+}
+
+/// Run the accept loop (blocking). Returns the bound address via the
+/// `on_ready` callback (useful when binding port 0 in tests).
+pub fn serve(
+    config: ServerConfig,
+    batcher: Arc<DynamicBatcher>,
+    on_ready: impl FnOnce(std::net::SocketAddr),
+) -> std::io::Result<()> {
+    let listener = TcpListener::bind(&config.addr)?;
+    listener.set_nonblocking(true)?;
+    on_ready(listener.local_addr()?);
+    let mut handles = Vec::new();
+    while !config.stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let b = Arc::clone(&batcher);
+                handles.push(std::thread::spawn(move || handle_conn(stream, b)));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    Ok(())
+}
+
+fn handle_conn(stream: TcpStream, batcher: Arc<DynamicBatcher>) {
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        let response = handle_line(&line, &batcher);
+        if writer.write_all(response.as_bytes()).is_err() {
+            break;
+        }
+        if writer.write_all(b"\n").is_err() {
+            break;
+        }
+        if line.trim() == "QUIT" {
+            break;
+        }
+    }
+}
+
+/// Pure request handler (unit-testable without sockets).
+pub fn handle_line(line: &str, batcher: &DynamicBatcher) -> String {
+    let line = line.trim();
+    if line.is_empty() {
+        return "ERR empty request".to_string();
+    }
+    if line == "STATS" {
+        return batcher.metrics.summary();
+    }
+    if line == "QUIT" {
+        return "BYE".to_string();
+    }
+    let parsed: Result<Vec<f64>, _> = line.split(',').map(|f| f.trim().parse::<f64>()).collect();
+    match parsed {
+        Err(e) => {
+            batcher.metrics.record_error();
+            format!("ERR parse: {e}")
+        }
+        Ok(x) => match batcher.predict_one(x) {
+            Ok((mean, var)) => format!("{mean:.9},{var:.9}"),
+            Err(e) => {
+                batcher.metrics.record_error();
+                format!("ERR {e}")
+            }
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::{BatchPolicy, PredictFn};
+    use crate::gp::predict::Prediction;
+    use crate::tensor::Mat;
+    use std::io::{BufRead, BufReader, Write};
+
+    fn echo_batcher(dim: usize) -> Arc<DynamicBatcher> {
+        let f: PredictFn = Box::new(|xs: &Mat| Prediction {
+            mean: (0..xs.rows()).map(|i| xs.row(i).iter().sum()).collect(),
+            var: vec![0.5; xs.rows()],
+        });
+        Arc::new(DynamicBatcher::new(dim, BatchPolicy::default(), f))
+    }
+
+    #[test]
+    fn handle_line_predict() {
+        let b = echo_batcher(2);
+        let resp = handle_line("1.0, 2.0", &b);
+        assert!(resp.starts_with("3.0"), "{resp}");
+    }
+
+    #[test]
+    fn handle_line_errors() {
+        let b = echo_batcher(2);
+        assert!(handle_line("", &b).starts_with("ERR"));
+        assert!(handle_line("a,b", &b).starts_with("ERR"));
+        assert!(handle_line("1.0", &b).starts_with("ERR")); // wrong dim
+        assert!(handle_line("STATS", &b).contains("requests="));
+    }
+
+    #[test]
+    fn end_to_end_tcp_roundtrip() {
+        let b = echo_batcher(2);
+        let stop = Arc::new(AtomicBool::new(false));
+        let config = ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            stop: Arc::clone(&stop),
+        };
+        let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+        let srv = {
+            let b = Arc::clone(&b);
+            std::thread::spawn(move || {
+                serve(config, b, move |addr| {
+                    addr_tx.send(addr).unwrap();
+                })
+                .unwrap();
+            })
+        };
+        let addr = addr_rx.recv().unwrap();
+        let mut conn = std::net::TcpStream::connect(addr).unwrap();
+        conn.write_all(b"2.0,3.0\nSTATS\nQUIT\n").unwrap();
+        let mut lines = BufReader::new(conn.try_clone().unwrap()).lines();
+        let first = lines.next().unwrap().unwrap();
+        assert!(first.starts_with("5.0"), "{first}");
+        let stats = lines.next().unwrap().unwrap();
+        assert!(stats.contains("requests=1"), "{stats}");
+        let bye = lines.next().unwrap().unwrap();
+        assert_eq!(bye, "BYE");
+        stop.store(true, Ordering::Relaxed);
+        srv.join().unwrap();
+    }
+}

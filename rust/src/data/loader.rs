@@ -1,0 +1,174 @@
+//! CSV loader for real UCI files (optional — the harness falls back to
+//! [`super::synthetic`] when no file is present).
+//!
+//! Format: numeric CSV, optional header row, last column is the target.
+
+use crate::data::synthetic::Dataset;
+use crate::tensor::Mat;
+use crate::util::Rng;
+use std::path::Path;
+
+/// Parse a numeric CSV into (X, y). Rows with non-numeric fields (e.g. a
+/// header) are skipped; the last column is the target.
+pub fn parse_csv(text: &str) -> Result<(Mat, Vec<f64>), String> {
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    let mut width = None;
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let fields: Result<Vec<f64>, _> = line
+            .split(&[',', ';', '\t'][..])
+            .map(|f| f.trim().parse::<f64>())
+            .collect();
+        match fields {
+            Ok(vals) => {
+                if vals.len() < 2 {
+                    return Err(format!("line {}: need ≥2 columns", lineno + 1));
+                }
+                match width {
+                    None => width = Some(vals.len()),
+                    Some(w) if w != vals.len() => {
+                        return Err(format!(
+                            "line {}: {} columns, expected {}",
+                            lineno + 1,
+                            vals.len(),
+                            w
+                        ));
+                    }
+                    _ => {}
+                }
+                rows.push(vals);
+            }
+            Err(_) if lineno == 0 => continue, // header
+            Err(e) => return Err(format!("line {}: {}", lineno + 1, e)),
+        }
+    }
+    if rows.is_empty() {
+        return Err("no data rows".to_string());
+    }
+    let d = rows[0].len() - 1;
+    let n = rows.len();
+    let mut x = Mat::zeros(n, d);
+    let mut y = Vec::with_capacity(n);
+    for (r, vals) in rows.iter().enumerate() {
+        x.row_mut(r).copy_from_slice(&vals[..d]);
+        y.push(vals[d]);
+    }
+    Ok((x, y))
+}
+
+/// Load a dataset from a CSV file, standardise, and split train/test.
+pub fn load_csv(path: &Path, name: &str, seed: u64) -> Result<Dataset, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path:?}: {e}"))?;
+    let (mut x, mut y) = parse_csv(&text)?;
+    standardize(&mut x, &mut y);
+    let n = x.rows();
+    let mut rng = Rng::new(seed);
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    let n_test = (n / 10).max(1);
+    let n_train = n - n_test;
+    let take = |ids: &[usize]| {
+        let mut xm = Mat::zeros(ids.len(), x.cols());
+        let mut ym = Vec::with_capacity(ids.len());
+        for (r, &i) in ids.iter().enumerate() {
+            xm.row_mut(r).copy_from_slice(x.row(i));
+            ym.push(y[i]);
+        }
+        (xm, ym)
+    };
+    let (x_train, y_train) = take(&idx[..n_train]);
+    let (x_test, y_test) = take(&idx[n_train..]);
+    Ok(Dataset {
+        name: name.to_string(),
+        x_train,
+        y_train,
+        x_test,
+        y_test,
+    })
+}
+
+/// Column-standardise X and standardise y in place.
+pub fn standardize(x: &mut Mat, y: &mut [f64]) {
+    let n = x.rows();
+    for c in 0..x.cols() {
+        let mean: f64 = (0..n).map(|r| x.get(r, c)).sum::<f64>() / n as f64;
+        let var: f64 = (0..n).map(|r| (x.get(r, c) - mean).powi(2)).sum::<f64>() / n as f64;
+        let sd = var.sqrt().max(1e-12);
+        for r in 0..n {
+            x.set(r, c, (x.get(r, c) - mean) / sd);
+        }
+    }
+    let mean = y.iter().sum::<f64>() / n as f64;
+    let var = y.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / n as f64;
+    let sd = var.sqrt().max(1e-12);
+    for v in y.iter_mut() {
+        *v = (*v - mean) / sd;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic_csv() {
+        let (x, y) = parse_csv("1,2,3\n4,5,6\n7,8,9\n").unwrap();
+        assert_eq!(x.shape(), (3, 2));
+        assert_eq!(y, vec![3.0, 6.0, 9.0]);
+    }
+
+    #[test]
+    fn skips_header() {
+        let (x, y) = parse_csv("a,b,target\n1,2,3\n").unwrap();
+        assert_eq!(x.shape(), (1, 2));
+        assert_eq!(y, vec![3.0]);
+    }
+
+    #[test]
+    fn rejects_ragged_rows() {
+        assert!(parse_csv("1,2,3\n4,5\n").is_err());
+    }
+
+    #[test]
+    fn rejects_non_numeric_data_row() {
+        assert!(parse_csv("1,2,3\nx,y,z\n").is_err());
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(parse_csv("").is_err());
+        assert!(parse_csv("header,line\n").is_err());
+    }
+
+    #[test]
+    fn standardize_zero_mean_unit_var() {
+        let mut x = Mat::from_vec(4, 1, vec![1.0, 2.0, 3.0, 4.0]);
+        let mut y = vec![10.0, 20.0, 30.0, 40.0];
+        standardize(&mut x, &mut y);
+        let xm: f64 = (0..4).map(|r| x.get(r, 0)).sum::<f64>() / 4.0;
+        assert!(xm.abs() < 1e-12);
+        let ym: f64 = y.iter().sum::<f64>() / 4.0;
+        assert!(ym.abs() < 1e-12);
+        let yv: f64 = y.iter().map(|v| v * v).sum::<f64>() / 4.0;
+        assert!((yv - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn load_csv_roundtrip() {
+        let dir = std::env::temp_dir().join("bbmm_test_csv");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("toy.csv");
+        let mut content = String::from("f1,f2,y\n");
+        for i in 0..50 {
+            content.push_str(&format!("{},{},{}\n", i, i * 2, i * 3));
+        }
+        std::fs::write(&p, content).unwrap();
+        let ds = load_csv(&p, "toy", 1).unwrap();
+        assert_eq!(ds.x_train.rows() + ds.x_test.rows(), 50);
+        assert_eq!(ds.dim(), 2);
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,33 @@
+//! Gaussian-process models and inference engines.
+//!
+//! An *inference engine* (paper §4) computes the negative marginal
+//! log-likelihood, its hyperparameter gradient, and predictive
+//! distributions. Three engines are provided:
+//!
+//! - [`mll::BbmmEngine`] — **the paper's contribution**: one mBCG call
+//!   produces every inference term (solves, SLQ log-det, stochastic trace).
+//! - [`mll::CholeskyEngine`] — the O(n³) dense baseline (GPFlow-equivalent).
+//! - [`dong::DongEngine`] — the Dong et al. [13] MVM baseline: sequential
+//!   CG solves plus explicit Lanczos for the log-det (the engine the paper
+//!   compares against for SKI in Figure 2, right).
+//!
+//! Models: [`exact::ExactGp`], [`sgpr::SgprOp`] (SGPR/SoR [45]),
+//! [`ski::SkiOp`] (SKI/KISS-GP [50]).
+
+pub mod dong;
+pub mod exact;
+pub mod fitc;
+pub mod kl;
+pub mod mll;
+pub mod multitask;
+pub mod predict;
+pub mod sgpr;
+pub mod ski;
+
+pub use dong::DongEngine;
+pub use fitc::FitcOp;
+pub use multitask::MultitaskOp;
+pub use exact::ExactGp;
+pub use mll::{BbmmEngine, CholeskyEngine, InferenceEngine, MllGrad};
+pub use sgpr::{SgprCholeskyEngine, SgprOp};
+pub use ski::SkiOp;

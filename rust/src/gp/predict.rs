@@ -1,0 +1,169 @@
+//! Predictive distribution (paper eq. 1):
+//!
+//! ```text
+//! μ(x*)          = k_{Xx*}ᵀ K̂⁻¹ y
+//! k(x*, x*′)     = k_{x*x*′} − k_{Xx*}ᵀ K̂⁻¹ k_{Xx*′}
+//! ```
+//!
+//! Generic over the engine: the caller supplies a batched solve
+//! `K̂⁻¹ · M` closure — mBCG for BBMM, triangular solves for Cholesky.
+
+use crate::tensor::Mat;
+
+/// Posterior mean and (marginal) variance at test points.
+#[derive(Debug, Clone)]
+pub struct Prediction {
+    pub mean: Vec<f64>,
+    /// predictive variance of the latent f (add σ² for observation noise)
+    pub var: Vec<f64>,
+}
+
+/// Compute the predictive distribution.
+///
+/// * `k_star` — `n_test × n` cross-covariance `K(X*, X)`
+/// * `k_star_diag` — prior variances `k(x*, x*)` per test point
+/// * `solve` — applies `K̂⁻¹` to an `n×t` matrix
+/// * `y` — training targets
+pub fn predict(
+    k_star: &Mat,
+    k_star_diag: &[f64],
+    solve: impl Fn(&Mat) -> Mat,
+    y: &[f64],
+) -> Prediction {
+    let n_test = k_star.rows();
+    let n = k_star.cols();
+    assert_eq!(y.len(), n);
+    assert_eq!(k_star_diag.len(), n_test);
+
+    // one batched solve for [y  K_X*ᵀ]: mean and variance share it
+    let mut rhs = Mat::zeros(n, 1 + n_test);
+    rhs.set_col(0, y);
+    for j in 0..n_test {
+        for i in 0..n {
+            rhs.set(i, 1 + j, k_star.get(j, i));
+        }
+    }
+    let solved = solve(&rhs);
+
+    let mut mean = vec![0.0; n_test];
+    let mut var = vec![0.0; n_test];
+    for j in 0..n_test {
+        let krow = k_star.row(j);
+        let mut mu = 0.0;
+        let mut quad = 0.0;
+        for i in 0..n {
+            mu += krow[i] * solved.get(i, 0);
+            quad += krow[i] * solved.get(i, 1 + j);
+        }
+        mean[j] = mu;
+        var[j] = (k_star_diag[j] - quad).max(0.0);
+    }
+    Prediction { mean, var }
+}
+
+/// Mean-only prediction (one solve total, reused across all test points).
+pub fn predict_mean(k_star: &Mat, solve: impl Fn(&Mat) -> Mat, y: &[f64]) -> Vec<f64> {
+    let n = k_star.cols();
+    assert_eq!(y.len(), n);
+    let rhs = Mat::col_from_slice(y);
+    let alpha = solve(&rhs); // K̂⁻¹y, n×1
+    let mut mean = vec![0.0; k_star.rows()];
+    for j in 0..k_star.rows() {
+        let krow = k_star.row(j);
+        mean[j] = (0..n).map(|i| krow[i] * alpha.get(i, 0)).sum();
+    }
+    mean
+}
+
+/// Mean absolute error — the paper's Figure-3 metric.
+pub fn mae(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    assert!(!pred.is_empty());
+    pred.iter()
+        .zip(truth.iter())
+        .map(|(p, t)| (p - t).abs())
+        .sum::<f64>()
+        / pred.len() as f64
+}
+
+/// Root mean squared error (supplementary metric).
+pub fn rmse(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    (pred
+        .iter()
+        .zip(truth.iter())
+        .map(|(p, t)| (p - t) * (p - t))
+        .sum::<f64>()
+        / pred.len() as f64)
+        .sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{DenseKernelOp, KernelOperator, Rbf};
+    use crate::linalg::cholesky::Cholesky;
+    use crate::util::Rng;
+
+    #[test]
+    fn noiseless_gp_interpolates_training_data() {
+        // tiny noise ⇒ posterior mean ≈ y at training inputs
+        let n = 20;
+        let mut rng = Rng::new(1);
+        let x = Mat::from_fn(n, 1, |_, _| rng.uniform_in(-1.0, 1.0));
+        let y: Vec<f64> = (0..n).map(|i| (3.0 * x.get(i, 0)).sin()).collect();
+        let op = DenseKernelOp::new(x.clone(), Box::new(Rbf::new(0.5, 1.0)), 1e-8);
+        let ch = Cholesky::new_with_jitter(&op.dense()).unwrap();
+        let k_star = op.cross(&x, op.x());
+        let diag: Vec<f64> = (0..n).map(|i| op.kernel().eval(x.row(i), x.row(i))).collect();
+        let pred = predict(&k_star, &diag, |m| ch.solve_mat(m), &y);
+        for i in 0..n {
+            assert!((pred.mean[i] - y[i]).abs() < 1e-4, "i={i}");
+            assert!(pred.var[i] < 1e-4);
+        }
+    }
+
+    #[test]
+    fn variance_grows_away_from_data() {
+        let n = 15;
+        let mut rng = Rng::new(2);
+        let x = Mat::from_fn(n, 1, |_, _| rng.uniform_in(0.0, 1.0));
+        let y: Vec<f64> = (0..n).map(|i| x.get(i, 0)).collect();
+        let op = DenseKernelOp::new(x, Box::new(Rbf::new(0.2, 1.0)), 1e-4);
+        let ch = Cholesky::new_with_jitter(&op.dense()).unwrap();
+        let xs = Mat::from_vec(2, 1, vec![0.5, 5.0]); // in-range vs far away
+        let k_star = op.cross(&xs, op.x());
+        let diag = vec![
+            op.kernel().eval(&[0.5], &[0.5]),
+            op.kernel().eval(&[5.0], &[5.0]),
+        ];
+        let pred = predict(&k_star, &diag, |m| ch.solve_mat(m), &y);
+        assert!(pred.var[1] > pred.var[0] * 10.0);
+        // far-away mean reverts to prior (0)
+        assert!(pred.mean[1].abs() < 0.05);
+    }
+
+    #[test]
+    fn predict_mean_matches_full_predict() {
+        let n = 25;
+        let mut rng = Rng::new(3);
+        let x = Mat::from_fn(n, 2, |_, _| rng.normal());
+        let y: Vec<f64> = (0..n).map(|i| x.get(i, 0) - x.get(i, 1)).collect();
+        let op = DenseKernelOp::new(x, Box::new(Rbf::new(1.0, 1.0)), 0.1);
+        let ch = Cholesky::new(&op.dense()).unwrap();
+        let xs = Mat::from_fn(7, 2, |_, _| rng.normal());
+        let k_star = op.cross(&xs, op.x());
+        let diag: Vec<f64> = (0..7).map(|i| op.kernel().eval(xs.row(i), xs.row(i))).collect();
+        let full = predict(&k_star, &diag, |m| ch.solve_mat(m), &y);
+        let mean_only = predict_mean(&k_star, |m| ch.solve_mat(m), &y);
+        for i in 0..7 {
+            assert!((full.mean[i] - mean_only[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn metrics() {
+        assert_eq!(mae(&[1.0, 2.0], &[2.0, 0.0]), 1.5);
+        assert!((rmse(&[1.0, 2.0], &[2.0, 0.0]) - (2.5f64).sqrt()).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,507 @@
+//! SGPR / Subset-of-Regressors operator (paper §5; Titsias [45]):
+//!
+//! ```text
+//! K̂ ≈ K_XU K_UU⁻¹ K_UX + σ²I
+//! ```
+//!
+//! The blackbox mat-mul distributes as `K_XU (K_UU⁻¹ (K_UX M)) + σ²M`,
+//! which is O(tnm + tm³) — *asymptotically faster* than the O(nm² + m³)
+//! Cholesky-based SGPR inference the paper compares against. The whole
+//! operator (the paper's "50 lines" point) is the `matmul`/`dmatmul` pair
+//! below.
+
+use crate::kernels::{Kernel, KernelOperator};
+use crate::linalg::cholesky::Cholesky;
+use crate::tensor::Mat;
+
+/// SoR kernel operator with inducing points `U (m×d)`.
+pub struct SgprOp {
+    x: Mat,
+    u: Mat,
+    kernel: Box<dyn Kernel>,
+    raw_noise: f64,
+    /// cached K_XU (n×m) for current hyperparameters
+    kxu: Mat,
+    /// cached Cholesky of K_UU (+ tiny jitter)
+    kuu_chol: Cholesky,
+}
+
+impl SgprOp {
+    pub fn new(x: Mat, u: Mat, kernel: Box<dyn Kernel>, noise: f64) -> Self {
+        assert!(noise > 0.0);
+        assert_eq!(x.cols(), u.cols());
+        let (kxu, kuu_chol) = Self::build_cache(&x, &u, kernel.as_ref());
+        SgprOp {
+            x,
+            u,
+            kernel,
+            raw_noise: noise.ln(),
+            kxu,
+            kuu_chol,
+        }
+    }
+
+    fn build_cache(x: &Mat, u: &Mat, kernel: &dyn Kernel) -> (Mat, Cholesky) {
+        let n = x.rows();
+        let m = u.rows();
+        let kxu = Mat::from_fn(n, m, |i, j| kernel.eval(x.row(i), u.row(j)));
+        let mut kuu = Mat::from_fn(m, m, |i, j| kernel.eval(u.row(i), u.row(j)));
+        kuu.symmetrize();
+        // standard inducing-point jitter
+        kuu.add_diag(1e-6);
+        let kuu_chol = Cholesky::new_with_jitter(&kuu).expect("K_UU not PD");
+        (kxu, kuu_chol)
+    }
+
+    pub fn x(&self) -> &Mat {
+        &self.x
+    }
+
+    pub fn u(&self) -> &Mat {
+        &self.u
+    }
+
+    pub fn kernel(&self) -> &dyn Kernel {
+        self.kernel.as_ref()
+    }
+
+    pub fn params(&self) -> Vec<f64> {
+        let mut p = self.kernel.params();
+        p.push(self.raw_noise);
+        p
+    }
+
+    pub fn set_params(&mut self, raw: &[f64]) {
+        let nk = self.kernel.n_params();
+        self.kernel.set_params(&raw[..nk]);
+        self.raw_noise = raw[nk];
+        let (kxu, kuu_chol) = Self::build_cache(&self.x, &self.u, self.kernel.as_ref());
+        self.kxu = kxu;
+        self.kuu_chol = kuu_chol;
+    }
+
+    /// `K_SoR(A, X) = K_AU K_UU⁻¹ K_UX` rows for test points (predictions).
+    pub fn cross_sor(&self, a: &Mat) -> Mat {
+        let m = self.u.rows();
+        let kau = Mat::from_fn(a.rows(), m, |i, j| self.kernel.eval(a.row(i), self.u.row(j)));
+        // K_AU · K_UU⁻¹ · K_UX = K_AU · (K_UU⁻¹ K_XUᵀ)
+        let solved = self.kuu_chol.solve_mat(&self.kxu.transpose()); // m×n
+        kau.matmul(&solved)
+    }
+
+    /// gradient matrices for parameter p: (dK_XU, dK_UU)
+    fn grad_mats(&self, p: usize) -> (Mat, Mat) {
+        let n = self.x.rows();
+        let m = self.u.rows();
+        let nk = self.kernel.n_params();
+        let mut g = vec![0.0; nk];
+        let mut dkxu = Mat::zeros(n, m);
+        for i in 0..n {
+            for j in 0..m {
+                self.kernel.eval_grad(self.x.row(i), self.u.row(j), &mut g);
+                dkxu.set(i, j, g[p]);
+            }
+        }
+        let mut dkuu = Mat::zeros(m, m);
+        for i in 0..m {
+            for j in 0..m {
+                self.kernel.eval_grad(self.u.row(i), self.u.row(j), &mut g);
+                dkuu.set(i, j, g[p]);
+            }
+        }
+        (dkxu, dkuu)
+    }
+}
+
+impl KernelOperator for SgprOp {
+    fn n(&self) -> usize {
+        self.x.rows()
+    }
+
+    fn n_params(&self) -> usize {
+        self.kernel.n_params() + 1
+    }
+
+    /// `K̂M = K_XU (K_UU⁻¹ (K_UX M)) + σ²M` — O(tnm + tm²·) per call.
+    fn matmul(&self, m: &Mat) -> Mat {
+        let kux_m = self.kxu.t_matmul(m); // m×t
+        let solved = self.kuu_chol.solve_mat(&kux_m); // m×t
+        let mut out = self.kxu.matmul(&solved); // n×t
+        let sigma2 = self.noise();
+        let mut noise_part = m.clone();
+        noise_part.scale_assign(sigma2);
+        out.add_assign(&noise_part);
+        out
+    }
+
+    /// `d(K_SoR)/dθ · M = dK_XU S + K_XU K_UU⁻¹ (dK_UXᵀ M − dK_UU S)` with
+    /// `S = K_UU⁻¹ K_UX M`.
+    fn dmatmul(&self, param: usize, m: &Mat) -> Mat {
+        let nk = self.kernel.n_params();
+        if param == nk {
+            let mut out = m.clone();
+            out.scale_assign(self.noise());
+            return out;
+        }
+        let (dkxu, dkuu) = self.grad_mats(param);
+        let kux_m = self.kxu.t_matmul(m); // m×t
+        let s = self.kuu_chol.solve_mat(&kux_m); // S = K_UU⁻¹ K_UX M
+        let term1 = dkxu.matmul(&s); // dK_XU S
+        let dkux_m = dkxu.t_matmul(m); // dK_UX M
+        let dkuu_s = dkuu.matmul(&s); // dK_UU S
+        let inner = dkux_m.sub(&dkuu_s);
+        let solved = self.kuu_chol.solve_mat(&inner);
+        let term2 = self.kxu.matmul(&solved);
+        // plus the symmetric transpose part of dK_XU:
+        //   d(K_XU A K_UX) = dK_XU·A·K_UX + K_XU·dA·K_UX + K_XU·A·dK_UX
+        // term1 covers the first, term2 covers dA & dK_UX pieces — where
+        // dA = −K_UU⁻¹ dK_UU K_UU⁻¹.
+        term1.add(&term2)
+    }
+
+    fn diag(&self) -> Vec<f64> {
+        // d_i = k_iUᵀ K_UU⁻¹ k_iU = ‖L⁻¹k_iU‖²; O(nm²) total — documented
+        // preconditioner-build cost (App. C.1: SGPR row access is O(nm))
+        let n = self.n();
+        (0..n)
+            .map(|i| {
+                let ki = self.kxu.row(i);
+                let v = self.kuu_chol.forward_solve(ki);
+                v.iter().map(|x| x * x).sum()
+            })
+            .collect()
+    }
+
+    fn row(&self, i: usize) -> Vec<f64> {
+        // row_i = k_iU K_UU⁻¹ K_UX — O(m² + nm)
+        let ki = self.kxu.row(i).to_vec();
+        let solved = self.kuu_chol.solve_vec(&ki); // m
+        let n = self.n();
+        (0..n)
+            .map(|j| {
+                let kj = self.kxu.row(j);
+                kj.iter().zip(solved.iter()).map(|(a, b)| a * b).sum()
+            })
+            .collect()
+    }
+
+    fn noise(&self) -> f64 {
+        self.raw_noise.exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{KernelOperator, Rbf};
+    use crate::util::Rng;
+
+    fn setup(n: usize, m: usize, seed: u64) -> SgprOp {
+        let mut rng = Rng::new(seed);
+        let x = Mat::from_fn(n, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+        let u = Mat::from_fn(m, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+        SgprOp::new(x, u, Box::new(Rbf::new(0.5, 1.0)), 0.1)
+    }
+
+    #[test]
+    fn matmul_matches_dense_sor() {
+        let op = setup(40, 8, 1);
+        let dense = op.dense();
+        let mut rng = Rng::new(2);
+        let m = Mat::from_fn(40, 3, |_, _| rng.normal());
+        let got = op.matmul(&m);
+        let want = dense.matmul(&m);
+        assert!(got.max_abs_diff(&want) < 1e-8);
+    }
+
+    #[test]
+    fn dense_row_consistency() {
+        let op = setup(20, 6, 3);
+        let d = op.diag();
+        for i in 0..20 {
+            let r = op.row(i);
+            assert!((r[i] - d[i]).abs() < 1e-10, "row/diag mismatch at {i}");
+        }
+    }
+
+    #[test]
+    fn dmatmul_matches_finite_differences() {
+        let mut op = setup(15, 5, 4);
+        let mut rng = Rng::new(5);
+        let m = Mat::from_fn(15, 2, |_, _| rng.normal());
+        let raw = op.params();
+        let h = 1e-6;
+        for p in 0..op.n_params() {
+            let analytic = op.dmatmul(p, &m);
+            let mut plus = raw.clone();
+            plus[p] += h;
+            op.set_params(&plus);
+            let fp = op.matmul(&m);
+            let mut minus = raw.clone();
+            minus[p] -= h;
+            op.set_params(&minus);
+            let fm = op.matmul(&m);
+            op.set_params(&raw);
+            let mut fd = fp.sub(&fm);
+            fd.scale_assign(1.0 / (2.0 * h));
+            assert!(
+                analytic.max_abs_diff(&fd) < 2e-4,
+                "param {p}: {}",
+                analytic.max_abs_diff(&fd)
+            );
+        }
+    }
+
+    #[test]
+    fn sor_approaches_exact_kernel_with_many_inducing_points() {
+        // when U = X the SoR matrix equals the exact kernel matrix
+        let mut rng = Rng::new(6);
+        let x = Mat::from_fn(20, 1, |_, _| rng.uniform());
+        let op = SgprOp::new(x.clone(), x.clone(), Box::new(Rbf::new(0.4, 1.0)), 0.1);
+        let exact = crate::kernels::DenseKernelOp::new(x, Box::new(Rbf::new(0.4, 1.0)), 0.1);
+        let diff = op.dense().max_abs_diff(&exact.dense());
+        assert!(diff < 1e-3, "diff={diff}"); // jitter on K_UU allows small gap
+    }
+
+    #[test]
+    fn sgpr_gp_regression_works_end_to_end() {
+        // SGPR posterior mean approximates the function
+        let n = 300;
+        let m = 30;
+        let mut rng = Rng::new(7);
+        let x = Mat::from_fn(n, 1, |_, _| rng.uniform_in(-1.0, 1.0));
+        let y: Vec<f64> = (0..n)
+            .map(|i| (4.0 * x.get(i, 0)).sin() + 0.05 * rng.normal())
+            .collect();
+        let u = Mat::from_fn(m, 1, |i, _| -1.0 + 2.0 * (i as f64 + 0.5) / m as f64);
+        let op = SgprOp::new(x, u, Box::new(Rbf::new(0.3, 1.0)), 0.05);
+        // solve with mBCG and predict at a few grid points
+        let res = crate::linalg::mbcg::mbcg(
+            |mm| op.matmul(mm),
+            &Mat::col_from_slice(&y),
+            |mm| mm.clone(),
+            &crate::linalg::mbcg::MbcgOptions {
+                max_iters: 200,
+                tol: 1e-10,
+                n_solve_only: 1,
+            },
+        );
+        let xs = Mat::from_fn(50, 1, |i, _| -0.9 + 1.8 * (i as f64) / 49.0);
+        let k_star = op.cross_sor(&xs);
+        let alpha = res.solves.col(0);
+        let mut mae = 0.0;
+        for i in 0..50 {
+            let mu: f64 = k_star
+                .row(i)
+                .iter()
+                .zip(alpha.iter())
+                .map(|(a, b)| a * b)
+                .sum();
+            mae += (mu - (4.0 * xs.get(i, 0)).sin()).abs();
+        }
+        mae /= 50.0;
+        assert!(mae < 0.1, "mae={mae}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cholesky-based SGPR baseline (GPflow-equivalent, paper Figure 2 middle)
+// ---------------------------------------------------------------------------
+
+/// The standard O(nm² + m³) Cholesky-based SGPR inference engine, computed
+/// through the Woodbury identity on the m×m "capacitance" system — exactly
+/// the linear algebra GPflow's SGPR implementation performs. This is the
+/// baseline BBMM's SGPR speedups in Figure 2 (middle) are measured against.
+///
+/// With `A = L_uu⁻¹ K_UX` and `B = I + σ⁻² A Aᵀ`:
+///   log|K̂|  = log|B| + n log σ²
+///   K̂⁻¹ v   = σ⁻² (v − Aᵀ B⁻¹ A v)
+/// and all gradient traces reduce to O(nm²) contractions against the dense
+/// derivative blocks dK_XU / dK_UU.
+pub struct SgprCholeskyEngine;
+
+impl crate::gp::mll::InferenceEngine for SgprCholeskyEngine {
+    fn mll_and_grad(&mut self, _op: &dyn KernelOperator, _y: &[f64]) -> crate::gp::mll::MllGrad {
+        panic!("SgprCholeskyEngine needs the concrete SgprOp; call mll_and_grad_sgpr")
+    }
+
+    fn name(&self) -> &'static str {
+        "sgpr-cholesky"
+    }
+}
+
+impl SgprCholeskyEngine {
+    /// Exact SGPR NMLL + gradient in O(nm² + m³).
+    pub fn mll_and_grad_sgpr(&self, op: &SgprOp, y: &[f64]) -> crate::gp::mll::MllGrad {
+        const LN_2PI: f64 = 1.8378770664093453;
+        let n = op.n();
+        let m = op.u.rows();
+        let sigma2 = op.noise();
+
+        // A = L_uu⁻¹ K_UX (m×n)
+        let kux = op.kxu.transpose(); // m×n
+        let mut a = Mat::zeros(m, n);
+        for c in 0..n {
+            let col = op.kuu_chol.forward_solve(&kux.col(c));
+            a.set_col(c, &col);
+        }
+        // B = I + σ⁻² A Aᵀ (m×m)
+        let mut b = a.matmul_t(&a);
+        b.scale_assign(1.0 / sigma2);
+        b.add_diag(1.0);
+        b.symmetrize();
+        let b_chol = Cholesky::new_with_jitter(&b).expect("B must be PD");
+
+        // α = K̂⁻¹ y = σ⁻²(y − σ⁻² Aᵀ B⁻¹ A y)
+        let khat_solve_vec = |v: &[f64]| -> Vec<f64> {
+            let av = a.matvec(v);
+            let binv_av = b_chol.solve_vec(&av);
+            let at_binv_av = a.t_matmul(&Mat::col_from_slice(&binv_av)).col(0);
+            (0..n)
+                .map(|i| (v[i] - at_binv_av[i] / sigma2) / sigma2)
+                .collect()
+        };
+        let alpha = khat_solve_vec(y);
+        let datafit: f64 = y.iter().zip(alpha.iter()).map(|(p, q)| p * q).sum();
+        let logdet = b_chol.logdet() + n as f64 * sigma2.ln();
+        let nmll = 0.5 * (datafit + logdet + n as f64 * LN_2PI);
+
+        // P = K̂⁻¹ K_XU (n×m), G = P K_UU⁻¹ (n×m), H = K_UU⁻¹ K_UX P K_UU⁻¹
+        let mut p_mat = Mat::zeros(n, m);
+        for c in 0..m {
+            let col = khat_solve_vec(&op.kxu.col(c));
+            p_mat.set_col(c, &col);
+        }
+        let g = {
+            // solve K_UU X = Pᵀ column-wise, transpose back
+            let pt = p_mat.transpose(); // m×n
+            let solved = op.kuu_chol.solve_mat(&pt); // m×n
+            solved.transpose() // n×m
+        };
+        let kux_p = op.kxu.t_matmul(&p_mat); // m×m = K_UX P
+        let h = {
+            let tmp = op.kuu_chol.solve_mat(&kux_p); // K_UU⁻¹ K_UX P
+            let tmp_t = tmp.transpose();
+            op.kuu_chol.solve_mat(&tmp_t).transpose() // (… K_UU⁻¹) via symmetry
+        };
+
+        // α-side projections for the quadratic terms
+        let kux_alpha = op.kxu.t_matmul(&Mat::col_from_slice(&alpha)).col(0); // m
+        let w_kux_alpha = op.kuu_chol.solve_vec(&kux_alpha); // m = K_UU⁻¹K_UXα
+
+        let nk = op.kernel.n_params();
+        let mut grad = Vec::with_capacity(nk + 1);
+        let mut gbuf = vec![0.0; nk];
+        for param in 0..nk {
+            // dense derivative blocks (the gradient-path cost of the baseline)
+            let mut tr = 0.0; // Tr(K̂⁻¹ dK̂)
+            let mut quad = 0.0; // αᵀ dK̂ α
+            // dK_XU part: 2·Σ G ⊙ dK_XU  and 2·αᵀ dK_XU (K_UU⁻¹K_UXα)
+            for i in 0..n {
+                for j in 0..m {
+                    op.kernel.eval_grad(op.x.row(i), op.u.row(j), &mut gbuf);
+                    let d = gbuf[param];
+                    tr += 2.0 * g.get(i, j) * d;
+                    quad += 2.0 * alpha[i] * d * w_kux_alpha[j];
+                }
+            }
+            // dK_UU part: −Σ H ⊙ dK_UU and −(K_UU⁻¹K_UXα)ᵀ dK_UU (…)
+            for i in 0..m {
+                for j in 0..m {
+                    op.kernel.eval_grad(op.u.row(i), op.u.row(j), &mut gbuf);
+                    let d = gbuf[param];
+                    tr -= h.get(i, j) * d;
+                    quad -= w_kux_alpha[i] * d * w_kux_alpha[j];
+                }
+            }
+            grad.push(0.5 * (-quad + tr));
+        }
+        // noise parameter: Tr(K̂⁻¹) = σ⁻²(n − m + Tr(B⁻¹))
+        // (since AAᵀ = σ²(B − I) ⇒ σ⁻²Tr(B⁻¹AAᵀ) = m − Tr(B⁻¹))
+        let binv = b_chol.solve_mat(&Mat::eye(m));
+        let tr_binv: f64 = (0..m).map(|i| binv.get(i, i)).sum();
+        let tr_kinv = (n as f64 - m as f64 + tr_binv) / sigma2;
+        let quad_noise: f64 = sigma2 * alpha.iter().map(|v| v * v).sum::<f64>();
+        grad.push(0.5 * (-quad_noise + sigma2 * tr_kinv));
+
+        crate::gp::mll::MllGrad {
+            nmll,
+            grad,
+            iterations: 1,
+            logdet,
+            datafit,
+        }
+    }
+}
+
+#[cfg(test)]
+mod cholesky_baseline_tests {
+    use super::*;
+    use crate::gp::mll::InferenceEngine;
+    use crate::kernels::Rbf;
+    use crate::util::Rng;
+
+    fn setup(n: usize, m: usize, seed: u64) -> (SgprOp, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let x = Mat::from_fn(n, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+        let u = Mat::from_fn(m, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+        let y: Vec<f64> = (0..n)
+            .map(|i| (3.0 * x.get(i, 0)).sin() + 0.05 * rng.normal())
+            .collect();
+        (SgprOp::new(x, u, Box::new(Rbf::new(0.5, 1.0)), 0.1), y)
+    }
+
+    #[test]
+    fn woodbury_mll_matches_dense_cholesky() {
+        let (op, y) = setup(60, 8, 1);
+        let fast = SgprCholeskyEngine.mll_and_grad_sgpr(&op, &y);
+        let dense = crate::gp::mll::CholeskyEngine.mll_and_grad(&op, &y);
+        assert!(
+            (fast.nmll - dense.nmll).abs() < 1e-6 * dense.nmll.abs().max(1.0),
+            "{} vs {}",
+            fast.nmll,
+            dense.nmll
+        );
+        assert!((fast.logdet - dense.logdet).abs() < 1e-6 * dense.logdet.abs().max(1.0));
+    }
+
+    #[test]
+    fn woodbury_gradient_matches_dense_cholesky() {
+        let (op, y) = setup(40, 6, 2);
+        let fast = SgprCholeskyEngine.mll_and_grad_sgpr(&op, &y);
+        let dense = crate::gp::mll::CholeskyEngine.mll_and_grad(&op, &y);
+        for p in 0..op.n_params() {
+            assert!(
+                (fast.grad[p] - dense.grad[p]).abs() < 1e-5 * (1.0 + dense.grad[p].abs()),
+                "param {p}: {} vs {}",
+                fast.grad[p],
+                dense.grad[p]
+            );
+        }
+    }
+
+    #[test]
+    fn woodbury_gradient_matches_finite_differences() {
+        let (mut op, y) = setup(35, 5, 3);
+        let res = SgprCholeskyEngine.mll_and_grad_sgpr(&op, &y);
+        let raw = op.params();
+        let h = 1e-5;
+        for p in 0..raw.len() {
+            let mut plus = raw.clone();
+            plus[p] += h;
+            op.set_params(&plus);
+            let fp = SgprCholeskyEngine.mll_and_grad_sgpr(&op, &y).nmll;
+            let mut minus = raw.clone();
+            minus[p] -= h;
+            op.set_params(&minus);
+            let fm = SgprCholeskyEngine.mll_and_grad_sgpr(&op, &y).nmll;
+            op.set_params(&raw);
+            let fd = (fp - fm) / (2.0 * h);
+            assert!(
+                (fd - res.grad[p]).abs() < 1e-3 * (1.0 + fd.abs()),
+                "param {p}: fd {fd} vs {}",
+                res.grad[p]
+            );
+        }
+    }
+}

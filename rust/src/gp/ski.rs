@@ -1,0 +1,445 @@
+//! SKI / KISS-GP operator (paper §5; Wilson & Nickisch [50]):
+//!
+//! ```text
+//! K̂ ≈ W K_UU Wᵀ + σ²I
+//! ```
+//!
+//! with `W` a sparse local-cubic-convolution interpolation matrix (4
+//! non-zeros per row) and `K_UU` a stationary kernel on a **regular 1-D
+//! grid** — hence symmetric Toeplitz, giving O(m log m) mat-vecs via
+//! [`crate::linalg::ToeplitzOp`]. A blackbox mat-mul is therefore
+//! O(t·n + t·m log m), which is what lets the Figure-2(right) experiments
+//! run at n = 500,000.
+//!
+//! Multi-dimensional inputs enter through a deep feature map ([52]) whose
+//! final layer is 1-D — the paper's SKI+DKL configuration.
+
+use crate::kernels::{Kernel, KernelOperator};
+use crate::linalg::toeplitz::ToeplitzOp;
+use crate::tensor::Mat;
+use crate::util::par;
+
+/// Keys cubic-convolution interpolation kernel (a = −1/2).
+#[inline]
+fn cubic_weight(s: f64) -> f64 {
+    let s = s.abs();
+    if s < 1.0 {
+        (1.5 * s - 2.5) * s * s + 1.0
+    } else if s < 2.0 {
+        ((-0.5 * s + 2.5) * s - 4.0) * s + 2.0
+    } else {
+        0.0
+    }
+}
+
+/// Sparse interpolation matrix: 4 non-zeros per row.
+pub struct SparseInterp {
+    /// grid indices per row (4 each)
+    idx: Vec<[usize; 4]>,
+    /// interpolation weights per row (4 each, summing to 1)
+    w: Vec<[f64; 4]>,
+    m: usize,
+}
+
+impl SparseInterp {
+    /// Build cubic interpolation weights for points `z` (1-D features) onto
+    /// a regular grid `[lo, hi]` with `m` nodes. Points are clamped to the
+    /// interpolable interior.
+    pub fn new(z: &[f64], lo: f64, hi: f64, m: usize) -> Self {
+        assert!(m >= 4, "need at least 4 grid points for cubic interpolation");
+        assert!(hi > lo);
+        let h = (hi - lo) / (m - 1) as f64;
+        let mut idx = Vec::with_capacity(z.len());
+        let mut w = Vec::with_capacity(z.len());
+        for &zi in z {
+            // position in grid units, clamped so the 4-point stencil fits
+            let p = ((zi - lo) / h).clamp(1.0, (m - 3) as f64 + 0.999_999);
+            let j0 = p.floor() as usize;
+            let u = p - j0 as f64;
+            let ids = [j0 - 1, j0, j0 + 1, j0 + 2];
+            let ws = [
+                cubic_weight(1.0 + u),
+                cubic_weight(u),
+                cubic_weight(1.0 - u),
+                cubic_weight(2.0 - u),
+            ];
+            idx.push(ids);
+            w.push(ws);
+        }
+        SparseInterp { idx, w, m }
+    }
+
+    pub fn n(&self) -> usize {
+        self.idx.len()
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// `W · M` — (n×m)·(m×t) in O(4·n·t).
+    pub fn apply(&self, m: &Mat) -> Mat {
+        assert_eq!(m.rows(), self.m);
+        let t = m.cols();
+        let n = self.n();
+        let mut out = Mat::zeros(n, t);
+        let idx = &self.idx;
+        let w = &self.w;
+        par::parallel_rows_mut(out.data_mut(), n, t, |row_lo, chunk| {
+            for (ri, orow) in chunk.chunks_mut(t).enumerate() {
+                let r = row_lo + ri;
+                for a in 0..4 {
+                    let wa = w[r][a];
+                    let mrow = m.row(idx[r][a]);
+                    for c in 0..t {
+                        orow[c] += wa * mrow[c];
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    /// `Wᵀ · M` — (m×n)·(n×t) in O(4·n·t).
+    pub fn apply_t(&self, mat: &Mat) -> Mat {
+        assert_eq!(mat.rows(), self.n());
+        let t = mat.cols();
+        let mut out = Mat::zeros(self.m, t);
+        // scatter-add; serial over n (t is small) — could shard by target
+        for r in 0..self.n() {
+            let mrow = mat.row(r);
+            for a in 0..4 {
+                let target = self.idx[r][a];
+                let wa = self.w[r][a];
+                let orow = out.row_mut(target);
+                for c in 0..t {
+                    orow[c] += wa * mrow[c];
+                }
+            }
+        }
+        out
+    }
+
+    /// weights/indices of row i (for O(1)-ish row access)
+    pub fn row_stencil(&self, i: usize) -> (&[usize; 4], &[f64; 4]) {
+        (&self.idx[i], &self.w[i])
+    }
+}
+
+/// The SKI kernel operator.
+pub struct SkiOp {
+    /// 1-D features (raw inputs or deep-kernel features), length n
+    z: Vec<f64>,
+    interp: SparseInterp,
+    kernel: Box<dyn Kernel>,
+    raw_noise: f64,
+    grid_lo: f64,
+    grid_h: f64,
+    m: usize,
+    /// cached Toeplitz K_UU
+    kuu: ToeplitzOp,
+    /// cached Toeplitz dK_UU/draw_p per kernel parameter
+    dkuu: Vec<ToeplitzOp>,
+}
+
+impl SkiOp {
+    /// Build over 1-D features with an `m`-point grid spanning the data
+    /// (with a 2-cell margin so every point has a full cubic stencil).
+    pub fn new(z: Vec<f64>, m: usize, kernel: Box<dyn Kernel>, noise: f64) -> Self {
+        assert!(noise > 0.0);
+        let (zmin, zmax) = z
+            .iter()
+            .fold((f64::INFINITY, f64::NEG_INFINITY), |(lo, hi), &v| {
+                (lo.min(v), hi.max(v))
+            });
+        let span = (zmax - zmin).max(1e-9);
+        let h = span / (m as f64 - 5.0); // leaves ≥2 cells margin each side
+        let lo = zmin - 2.0 * h;
+        let hi = lo + h * (m - 1) as f64;
+        let interp = SparseInterp::new(&z, lo, hi, m);
+        let (kuu, dkuu) = Self::build_toeplitz(kernel.as_ref(), h, m);
+        SkiOp {
+            z,
+            interp,
+            kernel,
+            raw_noise: noise.ln(),
+            grid_lo: lo,
+            grid_h: h,
+            m,
+            kuu,
+            dkuu,
+        }
+    }
+
+    fn build_toeplitz(kernel: &dyn Kernel, h: f64, m: usize) -> (ToeplitzOp, Vec<ToeplitzOp>) {
+        let nk = kernel.n_params();
+        let mut col = Vec::with_capacity(m);
+        let mut dcols: Vec<Vec<f64>> = vec![Vec::with_capacity(m); nk];
+        let mut g = vec![0.0; nk];
+        let origin = [0.0];
+        for i in 0..m {
+            let xi = [i as f64 * h];
+            col.push(kernel.eval(&origin, &xi));
+            kernel.eval_grad(&origin, &xi, &mut g);
+            for (p, dc) in dcols.iter_mut().enumerate() {
+                dc.push(g[p]);
+            }
+        }
+        (
+            ToeplitzOp::new(col),
+            dcols.into_iter().map(ToeplitzOp::new).collect(),
+        )
+    }
+
+    pub fn grid(&self) -> (f64, f64, usize) {
+        (self.grid_lo, self.grid_h, self.m)
+    }
+
+    pub fn features(&self) -> &[f64] {
+        &self.z
+    }
+
+    pub fn kernel(&self) -> &dyn Kernel {
+        self.kernel.as_ref()
+    }
+
+    pub fn params(&self) -> Vec<f64> {
+        let mut p = self.kernel.params();
+        p.push(self.raw_noise);
+        p
+    }
+
+    pub fn set_params(&mut self, raw: &[f64]) {
+        let nk = self.kernel.n_params();
+        self.kernel.set_params(&raw[..nk]);
+        self.raw_noise = raw[nk];
+        let (kuu, dkuu) = Self::build_toeplitz(self.kernel.as_ref(), self.grid_h, self.m);
+        self.kuu = kuu;
+        self.dkuu = dkuu;
+    }
+
+    /// SKI cross-covariance rows for *test* features: `W* K_UU Wᵀ`.
+    pub fn cross(&self, z_test: &[f64]) -> Mat {
+        let hi = self.grid_lo + self.grid_h * (self.m - 1) as f64;
+        let w_star = SparseInterp::new(z_test, self.grid_lo, hi, self.m);
+        // (n*×m) · T · (m×n): build T Wᵀ column block implicitly — for each
+        // test row, u = T w*, then dot against training stencils.
+        let mut out = Mat::zeros(z_test.len(), self.n());
+        for i in 0..z_test.len() {
+            let (ids, ws) = w_star.row_stencil(i);
+            let u = self.toeplitz_times_sparse(ids, ws);
+            let orow = out.row_mut(i);
+            for j in 0..self.n() {
+                let (jds, jws) = self.interp.row_stencil(j);
+                let mut s = 0.0;
+                for b in 0..4 {
+                    s += jws[b] * u[jds[b]];
+                }
+                orow[j] = s;
+            }
+        }
+        out
+    }
+
+    /// `u = T w` where w is 4-sparse: u[r] = Σ_a w_a c[|r − j_a|] — O(4m).
+    fn toeplitz_times_sparse(&self, ids: &[usize; 4], ws: &[f64; 4]) -> Vec<f64> {
+        let col = self.kuu.first_column();
+        let mut u = vec![0.0; self.m];
+        for a in 0..4 {
+            let ja = ids[a];
+            let wa = ws[a];
+            for (r, uv) in u.iter_mut().enumerate() {
+                *uv += wa * col[r.abs_diff(ja)];
+            }
+        }
+        u
+    }
+}
+
+impl KernelOperator for SkiOp {
+    fn n(&self) -> usize {
+        self.z.len()
+    }
+
+    fn n_params(&self) -> usize {
+        self.kernel.n_params() + 1
+    }
+
+    /// `K̂M = W (T (WᵀM)) + σ²M` — O(t(n + m log m)).
+    fn matmul(&self, m: &Mat) -> Mat {
+        let wtm = self.interp.apply_t(m); // m×t
+        let t_wtm = self.kuu.matmul(&wtm); // m×t (FFT)
+        let mut out = self.interp.apply(&t_wtm); // n×t
+        let sigma2 = self.noise();
+        for r in 0..out.rows() {
+            let orow = out.row_mut(r);
+            let mrow = m.row(r);
+            for c in 0..orow.len() {
+                orow[c] += sigma2 * mrow[c];
+            }
+        }
+        out
+    }
+
+    fn dmatmul(&self, param: usize, m: &Mat) -> Mat {
+        let nk = self.kernel.n_params();
+        if param == nk {
+            let mut out = m.clone();
+            out.scale_assign(self.noise());
+            return out;
+        }
+        let wtm = self.interp.apply_t(m);
+        let dt_wtm = self.dkuu[param].matmul(&wtm);
+        self.interp.apply(&dt_wtm)
+    }
+
+    fn diag(&self) -> Vec<f64> {
+        // diag_i = wᵢᵀ T wᵢ over the 4-point stencil — O(16 n)
+        let col = self.kuu.first_column();
+        (0..self.n())
+            .map(|i| {
+                let (ids, ws) = self.interp.row_stencil(i);
+                let mut s = 0.0;
+                for a in 0..4 {
+                    for b in 0..4 {
+                        s += ws[a] * ws[b] * col[ids[a].abs_diff(ids[b])];
+                    }
+                }
+                s
+            })
+            .collect()
+    }
+
+    fn row(&self, i: usize) -> Vec<f64> {
+        // rowᵢ = wᵢ T Wᵀ — O(4m + 4n)
+        let (ids, ws) = self.interp.row_stencil(i);
+        let u = self.toeplitz_times_sparse(ids, ws);
+        (0..self.n())
+            .map(|j| {
+                let (jds, jws) = self.interp.row_stencil(j);
+                let mut s = 0.0;
+                for b in 0..4 {
+                    s += jws[b] * u[jds[b]];
+                }
+                s
+            })
+            .collect()
+    }
+
+    fn noise(&self) -> f64 {
+        self.raw_noise.exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{DenseKernelOp, Rbf};
+    use crate::util::Rng;
+
+    fn setup(n: usize, m: usize, seed: u64) -> SkiOp {
+        let mut rng = Rng::new(seed);
+        let z: Vec<f64> = (0..n).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        SkiOp::new(z, m, Box::new(Rbf::new(0.3, 1.0)), 0.1)
+    }
+
+    #[test]
+    fn interpolation_weights_sum_to_one() {
+        let op = setup(200, 50, 1);
+        for i in 0..200 {
+            let (_ids, ws) = op.interp.row_stencil(i);
+            let s: f64 = ws.iter().sum();
+            assert!((s - 1.0).abs() < 1e-12, "row {i}: {s}");
+        }
+    }
+
+    #[test]
+    fn matmul_matches_dense_ski_matrix() {
+        let op = setup(60, 32, 2);
+        let dense = op.dense();
+        let mut rng = Rng::new(3);
+        let m = Mat::from_fn(60, 4, |_, _| rng.normal());
+        let got = op.matmul(&m);
+        let want = dense.matmul(&m);
+        assert!(got.max_abs_diff(&want) < 1e-8);
+    }
+
+    #[test]
+    fn row_and_diag_consistent_with_dense() {
+        let op = setup(40, 24, 4);
+        let d = op.diag();
+        for i in [0usize, 7, 39] {
+            let r = op.row(i);
+            assert!((r[i] - d[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn ski_approximates_exact_kernel() {
+        // dense SKI matrix ≈ exact RBF kernel matrix when the grid is fine
+        let n = 50;
+        let mut rng = Rng::new(5);
+        let z: Vec<f64> = (0..n).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        let op = SkiOp::new(z.clone(), 400, Box::new(Rbf::new(0.4, 1.0)), 0.1);
+        let x = Mat::from_vec(n, 1, z);
+        let exact = DenseKernelOp::new(x, Box::new(Rbf::new(0.4, 1.0)), 0.1);
+        let diff = op.dense().max_abs_diff(&exact.dense());
+        assert!(diff < 1e-3, "diff={diff}");
+    }
+
+    #[test]
+    fn dmatmul_matches_finite_differences() {
+        let mut op = setup(30, 40, 6);
+        let mut rng = Rng::new(7);
+        let m = Mat::from_fn(30, 2, |_, _| rng.normal());
+        let raw = op.params();
+        let h = 1e-6;
+        for p in 0..op.n_params() {
+            let analytic = op.dmatmul(p, &m);
+            let mut plus = raw.clone();
+            plus[p] += h;
+            op.set_params(&plus);
+            let fp = op.matmul(&m);
+            let mut minus = raw.clone();
+            minus[p] -= h;
+            op.set_params(&minus);
+            let fm = op.matmul(&m);
+            op.set_params(&raw);
+            let mut fd = fp.sub(&fm);
+            fd.scale_assign(1.0 / (2.0 * h));
+            assert!(
+                analytic.max_abs_diff(&fd) < 1e-4,
+                "param {p}: {}",
+                analytic.max_abs_diff(&fd)
+            );
+        }
+    }
+
+    #[test]
+    fn cross_covariance_matches_dense_for_training_points() {
+        let op = setup(25, 30, 8);
+        let z = op.features().to_vec();
+        let cross = op.cross(&z);
+        // cross at training features == noiseless K rows
+        for i in [0usize, 10, 24] {
+            let r = op.row(i);
+            for j in 0..25 {
+                assert!((cross.get(i, j) - r[j]).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn large_n_matmul_is_linear_time() {
+        // smoke test: n = 100k SKI matmul with t=8 well under a second
+        let n = 100_000;
+        let mut rng = Rng::new(9);
+        let z: Vec<f64> = (0..n).map(|_| rng.uniform()).collect();
+        let op = SkiOp::new(z, 2000, Box::new(Rbf::new(0.1, 1.0)), 0.1);
+        let m = Mat::from_fn(n, 8, |_, _| rng.normal());
+        let t = crate::util::Timer::start();
+        let out = op.matmul(&m);
+        assert!(out.data().iter().all(|v| v.is_finite()));
+        assert!(t.elapsed_s() < 2.0, "took {}", t.elapsed_s());
+    }
+}

@@ -1,0 +1,195 @@
+//! Kernel compositions (paper §5: "Compositions of kernels can often be
+//! handled automatically" — `(K₁K₂ + K₃)M = K₁(K₂M) + K₃M`).
+//!
+//! At the pointwise level, sums and products of kernels compose both the
+//! value and the raw-parameter gradients; the parameter vector is the
+//! concatenation of the parts'.
+
+use super::Kernel;
+
+/// `k = k_a + k_b`
+#[derive(Clone)]
+pub struct SumKernel {
+    pub a: Box<dyn Kernel>,
+    pub b: Box<dyn Kernel>,
+}
+
+impl SumKernel {
+    pub fn new(a: Box<dyn Kernel>, b: Box<dyn Kernel>) -> Self {
+        SumKernel { a, b }
+    }
+}
+
+impl Kernel for SumKernel {
+    fn n_params(&self) -> usize {
+        self.a.n_params() + self.b.n_params()
+    }
+
+    fn params(&self) -> Vec<f64> {
+        let mut p = self.a.params();
+        p.extend(self.b.params());
+        p
+    }
+
+    fn set_params(&mut self, raw: &[f64]) {
+        let na = self.a.n_params();
+        self.a.set_params(&raw[..na]);
+        self.b.set_params(&raw[na..]);
+    }
+
+    fn param_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self
+            .a
+            .param_names()
+            .into_iter()
+            .map(|n| format!("a.{n}"))
+            .collect();
+        names.extend(self.b.param_names().into_iter().map(|n| format!("b.{n}")));
+        names
+    }
+
+    fn eval(&self, x1: &[f64], x2: &[f64]) -> f64 {
+        self.a.eval(x1, x2) + self.b.eval(x1, x2)
+    }
+
+    fn eval_grad(&self, x1: &[f64], x2: &[f64], out: &mut [f64]) {
+        let na = self.a.n_params();
+        self.a.eval_grad(x1, x2, &mut out[..na]);
+        self.b.eval_grad(x1, x2, &mut out[na..]);
+    }
+
+    fn boxed_clone(&self) -> Box<dyn Kernel> {
+        Box::new(SumKernel {
+            a: self.a.boxed_clone(),
+            b: self.b.boxed_clone(),
+        })
+    }
+}
+
+/// `k = k_a · k_b`
+#[derive(Clone)]
+pub struct ProductKernel {
+    pub a: Box<dyn Kernel>,
+    pub b: Box<dyn Kernel>,
+}
+
+impl ProductKernel {
+    pub fn new(a: Box<dyn Kernel>, b: Box<dyn Kernel>) -> Self {
+        ProductKernel { a, b }
+    }
+}
+
+impl Kernel for ProductKernel {
+    fn n_params(&self) -> usize {
+        self.a.n_params() + self.b.n_params()
+    }
+
+    fn params(&self) -> Vec<f64> {
+        let mut p = self.a.params();
+        p.extend(self.b.params());
+        p
+    }
+
+    fn set_params(&mut self, raw: &[f64]) {
+        let na = self.a.n_params();
+        self.a.set_params(&raw[..na]);
+        self.b.set_params(&raw[na..]);
+    }
+
+    fn param_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self
+            .a
+            .param_names()
+            .into_iter()
+            .map(|n| format!("a.{n}"))
+            .collect();
+        names.extend(self.b.param_names().into_iter().map(|n| format!("b.{n}")));
+        names
+    }
+
+    fn eval(&self, x1: &[f64], x2: &[f64]) -> f64 {
+        self.a.eval(x1, x2) * self.b.eval(x1, x2)
+    }
+
+    fn eval_grad(&self, x1: &[f64], x2: &[f64], out: &mut [f64]) {
+        let na = self.a.n_params();
+        let ka = self.a.eval(x1, x2);
+        let kb = self.b.eval(x1, x2);
+        self.a.eval_grad(x1, x2, &mut out[..na]);
+        for v in out[..na].iter_mut() {
+            *v *= kb;
+        }
+        self.b.eval_grad(x1, x2, &mut out[na..]);
+        for v in out[na..].iter_mut() {
+            *v *= ka;
+        }
+    }
+
+    fn boxed_clone(&self) -> Box<dyn Kernel> {
+        Box::new(ProductKernel {
+            a: self.a.boxed_clone(),
+            b: self.b.boxed_clone(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::check_kernel_gradients;
+    use crate::kernels::stationary::{Matern32, Rbf};
+
+    #[test]
+    fn sum_evaluates_to_sum() {
+        let k = SumKernel::new(
+            Box::new(Rbf::new(1.0, 1.0)),
+            Box::new(Matern32::new(0.5, 2.0)),
+        );
+        let a = [0.1];
+        let b = [0.8];
+        let want = Rbf::new(1.0, 1.0).eval(&a, &b) + Matern32::new(0.5, 2.0).eval(&a, &b);
+        assert!((k.eval(&a, &b) - want).abs() < 1e-15);
+    }
+
+    #[test]
+    fn product_evaluates_to_product() {
+        let k = ProductKernel::new(
+            Box::new(Rbf::new(1.0, 1.5)),
+            Box::new(Matern32::new(0.5, 2.0)),
+        );
+        let a = [0.1, 0.4];
+        let b = [0.8, -0.3];
+        let want = Rbf::new(1.0, 1.5).eval(&a, &b) * Matern32::new(0.5, 2.0).eval(&a, &b);
+        assert!((k.eval(&a, &b) - want).abs() < 1e-15);
+    }
+
+    #[test]
+    fn composite_gradients_match_fd() {
+        let mut sum = SumKernel::new(
+            Box::new(Rbf::new(0.7, 1.2)),
+            Box::new(Matern32::new(0.4, 0.8)),
+        );
+        check_kernel_gradients(&mut sum, &[0.3, 0.1], &[-0.2, 0.5], 1e-5);
+        let mut prod = ProductKernel::new(
+            Box::new(Rbf::new(0.7, 1.2)),
+            Box::new(Matern32::new(0.4, 0.8)),
+        );
+        check_kernel_gradients(&mut prod, &[0.3, 0.1], &[-0.2, 0.5], 1e-5);
+    }
+
+    #[test]
+    fn nested_composition_param_layout() {
+        let inner = SumKernel::new(
+            Box::new(Rbf::new(1.0, 1.0)),
+            Box::new(Rbf::new(2.0, 2.0)),
+        );
+        let outer = ProductKernel::new(Box::new(inner), Box::new(Matern32::new(0.5, 1.0)));
+        assert_eq!(outer.n_params(), 6);
+        assert_eq!(outer.param_names().len(), 6);
+        let mut outer = outer;
+        let mut p = outer.params();
+        p[0] = 0.123;
+        outer.set_params(&p);
+        assert!((outer.params()[0] - 0.123).abs() < 1e-15);
+    }
+}

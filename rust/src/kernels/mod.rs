@@ -1,0 +1,141 @@
+//! Kernel functions and the **blackbox operator** abstraction (paper §5).
+//!
+//! BBMM's programmability claim: a GP model is fully specified by a routine
+//! that multiplies the (noise-added) kernel matrix `K̂ = K + σ²I` — and its
+//! hyperparameter derivatives — against a dense matrix. That routine is the
+//! [`KernelOperator`] trait here. Exact GPs ([`operator::DenseKernelOp`]),
+//! Bayesian linear regression ([`linear::LinearKernelOp`]), SGPR
+//! ([`crate::gp::sgpr::SgprOp`]) and SKI ([`crate::gp::ski::SkiOp`]) are all
+//! small implementations of it — mirroring the paper's "50 lines of code"
+//! observation (each operator impl here is of that order).
+//!
+//! Hyperparameters are stored in **log space** (`θ = exp(raw)`) so Adam can
+//! run unconstrained; every `dmatmul` is with respect to the *raw*
+//! parameter, i.e. `dK̂/draw = θ · dK̂/dθ`.
+
+pub mod compose;
+pub mod deep;
+pub mod linear;
+pub mod operator;
+pub mod stationary;
+
+pub use compose::{ProductKernel, SumKernel};
+pub use deep::DeepFeatureMap;
+pub use linear::LinearKernelOp;
+pub use operator::DenseKernelOp;
+pub use stationary::{Matern12, Matern32, Matern52, Rbf};
+
+use crate::tensor::Mat;
+
+/// A positive-definite covariance function with analytic derivatives with
+/// respect to its raw (log-space) hyperparameters.
+pub trait Kernel: Send + Sync {
+    /// number of raw hyperparameters
+    fn n_params(&self) -> usize;
+    /// current raw hyperparameters
+    fn params(&self) -> Vec<f64>;
+    /// overwrite raw hyperparameters
+    fn set_params(&mut self, raw: &[f64]);
+    /// human-readable parameter names (for logging)
+    fn param_names(&self) -> Vec<String>;
+    /// k(x, x′)
+    fn eval(&self, x1: &[f64], x2: &[f64]) -> f64;
+    /// ∂k(x, x′)/∂raw_p for every p, written into `out`
+    fn eval_grad(&self, x1: &[f64], x2: &[f64], out: &mut [f64]);
+    /// clone into a box (kernels are small parameter holders)
+    fn boxed_clone(&self) -> Box<dyn Kernel>;
+    /// Fast-path descriptor: stationary kernels (functions of r² only)
+    /// expose their family + hyperparameters so fused operators can tile
+    /// and vectorise instead of making one virtual call per matrix entry.
+    fn stationary(&self) -> Option<StationaryParams> {
+        None
+    }
+}
+
+/// Stationary kernel family (for the vectorised fused-mat-mul fast path).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StationaryFamily {
+    Rbf,
+    Matern12,
+    Matern32,
+    Matern52,
+}
+
+/// Stationary kernel descriptor: `k(r) = s · f(r/ℓ)`.
+#[derive(Debug, Clone, Copy)]
+pub struct StationaryParams {
+    pub family: StationaryFamily,
+    pub lengthscale: f64,
+    pub outputscale: f64,
+}
+
+impl Clone for Box<dyn Kernel> {
+    fn clone(&self) -> Self {
+        self.boxed_clone()
+    }
+}
+
+/// The paper's blackbox: everything an inference engine may ask of a model.
+///
+/// `matmul` is the hot path (one call per mBCG iteration); `diag`/`row`
+/// exist for the pivoted-Cholesky preconditioner; `dmatmul` feeds the
+/// stochastic trace term of the gradient (eq. 4).
+///
+/// Parameter indexing convention: raw kernel parameters come first
+/// (`0..n_kernel_params`), and the **last** index is always the raw noise
+/// `log σ²`.
+pub trait KernelOperator: Sync {
+    /// number of training points n
+    fn n(&self) -> usize;
+    /// total raw parameter count (kernel params + 1 for noise)
+    fn n_params(&self) -> usize;
+    /// `K̂ · M` — kernel matrix (plus σ²I) times an n×t matrix
+    fn matmul(&self, m: &Mat) -> Mat;
+    /// `(dK̂/draw_p) · M`
+    fn dmatmul(&self, param: usize, m: &Mat) -> Mat;
+    /// diagonal of the *noiseless* K (for pivoted Cholesky)
+    fn diag(&self) -> Vec<f64>;
+    /// row `i` of the *noiseless* K (for pivoted Cholesky)
+    fn row(&self, i: usize) -> Vec<f64>;
+    /// likelihood noise σ²
+    fn noise(&self) -> f64;
+
+    /// Dense materialisation of `K̂` (tests + the Cholesky baseline engine).
+    fn dense(&self) -> Mat {
+        let n = self.n();
+        let mut k = Mat::zeros(n, n);
+        for i in 0..n {
+            let r = self.row(i);
+            k.row_mut(i).copy_from_slice(&r);
+        }
+        k.add_diag(self.noise());
+        k
+    }
+}
+
+/// Finite-difference check utility shared by kernel tests: compares
+/// `eval_grad` against central differences.
+#[cfg(test)]
+pub(crate) fn check_kernel_gradients(kernel: &mut dyn Kernel, x1: &[f64], x2: &[f64], tol: f64) {
+    let raw = kernel.params();
+    let mut analytic = vec![0.0; kernel.n_params()];
+    kernel.eval_grad(x1, x2, &mut analytic);
+    let h = 1e-6;
+    for p in 0..raw.len() {
+        let mut plus = raw.clone();
+        plus[p] += h;
+        kernel.set_params(&plus);
+        let fp = kernel.eval(x1, x2);
+        let mut minus = raw.clone();
+        minus[p] -= h;
+        kernel.set_params(&minus);
+        let fm = kernel.eval(x1, x2);
+        kernel.set_params(&raw);
+        let fd = (fp - fm) / (2.0 * h);
+        assert!(
+            (fd - analytic[p]).abs() < tol * (1.0 + fd.abs()),
+            "param {p}: fd {fd} vs analytic {}",
+            analytic[p]
+        );
+    }
+}

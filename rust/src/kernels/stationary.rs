@@ -1,0 +1,348 @@
+//! Stationary kernels: RBF and the Matérn family (paper §3, §6 — the
+//! experiments use RBF and Matérn-5/2).
+//!
+//! All kernels carry an outputscale `s = exp(raw_os)` and lengthscale
+//! `ℓ = exp(raw_ls)`; derivatives are with respect to the raw (log) values,
+//! which is what Adam optimises.
+
+use super::{Kernel, StationaryFamily, StationaryParams};
+
+#[inline]
+fn sq_dist(x1: &[f64], x2: &[f64]) -> f64 {
+    debug_assert_eq!(x1.len(), x2.len());
+    let mut s = 0.0;
+    for i in 0..x1.len() {
+        let d = x1[i] - x2[i];
+        s += d * d;
+    }
+    s
+}
+
+/// RBF (squared-exponential): `k = s · exp(−r² / 2ℓ²)`.
+#[derive(Clone, Debug)]
+pub struct Rbf {
+    pub raw_ls: f64,
+    pub raw_os: f64,
+}
+
+impl Rbf {
+    pub fn new(lengthscale: f64, outputscale: f64) -> Self {
+        Rbf {
+            raw_ls: lengthscale.ln(),
+            raw_os: outputscale.ln(),
+        }
+    }
+
+    #[inline]
+    pub fn lengthscale(&self) -> f64 {
+        self.raw_ls.exp()
+    }
+    #[inline]
+    pub fn outputscale(&self) -> f64 {
+        self.raw_os.exp()
+    }
+}
+
+impl Kernel for Rbf {
+    fn n_params(&self) -> usize {
+        2
+    }
+    fn params(&self) -> Vec<f64> {
+        vec![self.raw_ls, self.raw_os]
+    }
+    fn set_params(&mut self, raw: &[f64]) {
+        self.raw_ls = raw[0];
+        self.raw_os = raw[1];
+    }
+    fn param_names(&self) -> Vec<String> {
+        vec!["log_lengthscale".into(), "log_outputscale".into()]
+    }
+
+    #[inline]
+    fn eval(&self, x1: &[f64], x2: &[f64]) -> f64 {
+        let r2 = sq_dist(x1, x2);
+        let ls = self.lengthscale();
+        self.outputscale() * (-r2 / (2.0 * ls * ls)).exp()
+    }
+
+    fn eval_grad(&self, x1: &[f64], x2: &[f64], out: &mut [f64]) {
+        let r2 = sq_dist(x1, x2);
+        let ls = self.lengthscale();
+        let k = self.outputscale() * (-r2 / (2.0 * ls * ls)).exp();
+        // ∂k/∂raw_ls = k · r²/ℓ²   (chain rule through ℓ = e^{raw})
+        out[0] = k * r2 / (ls * ls);
+        // ∂k/∂raw_os = k
+        out[1] = k;
+    }
+
+    fn boxed_clone(&self) -> Box<dyn Kernel> {
+        Box::new(self.clone())
+    }
+
+    fn stationary(&self) -> Option<StationaryParams> {
+        Some(StationaryParams {
+            family: StationaryFamily::Rbf,
+            lengthscale: self.raw_ls.exp(),
+            outputscale: self.raw_os.exp(),
+        })
+    }
+}
+
+/// Matérn-1/2 (exponential): `k = s · exp(−r/ℓ)`.
+#[derive(Clone, Debug)]
+pub struct Matern12 {
+    pub raw_ls: f64,
+    pub raw_os: f64,
+}
+
+impl Matern12 {
+    pub fn new(lengthscale: f64, outputscale: f64) -> Self {
+        Matern12 {
+            raw_ls: lengthscale.ln(),
+            raw_os: outputscale.ln(),
+        }
+    }
+}
+
+impl Kernel for Matern12 {
+    fn n_params(&self) -> usize {
+        2
+    }
+    fn params(&self) -> Vec<f64> {
+        vec![self.raw_ls, self.raw_os]
+    }
+    fn set_params(&mut self, raw: &[f64]) {
+        self.raw_ls = raw[0];
+        self.raw_os = raw[1];
+    }
+    fn param_names(&self) -> Vec<String> {
+        vec!["log_lengthscale".into(), "log_outputscale".into()]
+    }
+
+    #[inline]
+    fn eval(&self, x1: &[f64], x2: &[f64]) -> f64 {
+        let r = sq_dist(x1, x2).sqrt();
+        let ls = self.raw_ls.exp();
+        self.raw_os.exp() * (-r / ls).exp()
+    }
+
+    fn eval_grad(&self, x1: &[f64], x2: &[f64], out: &mut [f64]) {
+        let r = sq_dist(x1, x2).sqrt();
+        let ls = self.raw_ls.exp();
+        let k = self.raw_os.exp() * (-r / ls).exp();
+        out[0] = k * r / ls; // d/draw_ls
+        out[1] = k;
+    }
+
+    fn boxed_clone(&self) -> Box<dyn Kernel> {
+        Box::new(self.clone())
+    }
+
+    fn stationary(&self) -> Option<StationaryParams> {
+        Some(StationaryParams {
+            family: StationaryFamily::Matern12,
+            lengthscale: self.raw_ls.exp(),
+            outputscale: self.raw_os.exp(),
+        })
+    }
+}
+
+/// Matérn-3/2: `k = s (1 + √3 r/ℓ) exp(−√3 r/ℓ)`.
+#[derive(Clone, Debug)]
+pub struct Matern32 {
+    pub raw_ls: f64,
+    pub raw_os: f64,
+}
+
+impl Matern32 {
+    pub fn new(lengthscale: f64, outputscale: f64) -> Self {
+        Matern32 {
+            raw_ls: lengthscale.ln(),
+            raw_os: outputscale.ln(),
+        }
+    }
+}
+
+impl Kernel for Matern32 {
+    fn n_params(&self) -> usize {
+        2
+    }
+    fn params(&self) -> Vec<f64> {
+        vec![self.raw_ls, self.raw_os]
+    }
+    fn set_params(&mut self, raw: &[f64]) {
+        self.raw_ls = raw[0];
+        self.raw_os = raw[1];
+    }
+    fn param_names(&self) -> Vec<String> {
+        vec!["log_lengthscale".into(), "log_outputscale".into()]
+    }
+
+    #[inline]
+    fn eval(&self, x1: &[f64], x2: &[f64]) -> f64 {
+        let r = sq_dist(x1, x2).sqrt();
+        let u = 3f64.sqrt() * r / self.raw_ls.exp();
+        self.raw_os.exp() * (1.0 + u) * (-u).exp()
+    }
+
+    fn eval_grad(&self, x1: &[f64], x2: &[f64], out: &mut [f64]) {
+        let r = sq_dist(x1, x2).sqrt();
+        let s = self.raw_os.exp();
+        let u = 3f64.sqrt() * r / self.raw_ls.exp();
+        let e = (-u).exp();
+        // k = s (1+u) e^{-u}; du/draw_ls = −u ⇒ dk/draw_ls = s u² e^{-u}
+        out[0] = s * u * u * e;
+        out[1] = s * (1.0 + u) * e;
+    }
+
+    fn boxed_clone(&self) -> Box<dyn Kernel> {
+        Box::new(self.clone())
+    }
+
+    fn stationary(&self) -> Option<StationaryParams> {
+        Some(StationaryParams {
+            family: StationaryFamily::Matern32,
+            lengthscale: self.raw_ls.exp(),
+            outputscale: self.raw_os.exp(),
+        })
+    }
+}
+
+/// Matérn-5/2: `k = s (1 + √5 r/ℓ + 5r²/3ℓ²) exp(−√5 r/ℓ)`.
+#[derive(Clone, Debug)]
+pub struct Matern52 {
+    pub raw_ls: f64,
+    pub raw_os: f64,
+}
+
+impl Matern52 {
+    pub fn new(lengthscale: f64, outputscale: f64) -> Self {
+        Matern52 {
+            raw_ls: lengthscale.ln(),
+            raw_os: outputscale.ln(),
+        }
+    }
+}
+
+impl Kernel for Matern52 {
+    fn n_params(&self) -> usize {
+        2
+    }
+    fn params(&self) -> Vec<f64> {
+        vec![self.raw_ls, self.raw_os]
+    }
+    fn set_params(&mut self, raw: &[f64]) {
+        self.raw_ls = raw[0];
+        self.raw_os = raw[1];
+    }
+    fn param_names(&self) -> Vec<String> {
+        vec!["log_lengthscale".into(), "log_outputscale".into()]
+    }
+
+    #[inline]
+    fn eval(&self, x1: &[f64], x2: &[f64]) -> f64 {
+        let r = sq_dist(x1, x2).sqrt();
+        let u = 5f64.sqrt() * r / self.raw_ls.exp();
+        self.raw_os.exp() * (1.0 + u + u * u / 3.0) * (-u).exp()
+    }
+
+    fn eval_grad(&self, x1: &[f64], x2: &[f64], out: &mut [f64]) {
+        let r = sq_dist(x1, x2).sqrt();
+        let s = self.raw_os.exp();
+        let u = 5f64.sqrt() * r / self.raw_ls.exp();
+        let e = (-u).exp();
+        // k = s g(u) e^{-u}, g = 1 + u + u²/3; du/draw_ls = −u
+        // dk/draw_ls = s e^{-u} (−u·g′(u) + u·g(u)) = s e^{-u} u²(1 + u)/3
+        out[0] = s * e * u * u * (1.0 + u) / 3.0;
+        out[1] = s * (1.0 + u + u * u / 3.0) * e;
+    }
+
+    fn boxed_clone(&self) -> Box<dyn Kernel> {
+        Box::new(self.clone())
+    }
+
+    fn stationary(&self) -> Option<StationaryParams> {
+        Some(StationaryParams {
+            family: StationaryFamily::Matern52,
+            lengthscale: self.raw_ls.exp(),
+            outputscale: self.raw_os.exp(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::check_kernel_gradients;
+
+    #[test]
+    fn rbf_values() {
+        let k = Rbf::new(1.0, 2.0);
+        assert!((k.eval(&[0.0], &[0.0]) - 2.0).abs() < 1e-14);
+        let v = k.eval(&[0.0], &[1.0]);
+        assert!((v - 2.0 * (-0.5f64).exp()).abs() < 1e-14);
+    }
+
+    #[test]
+    fn matern_at_zero_equals_outputscale() {
+        for k in [
+            Box::new(Matern12::new(0.7, 1.3)) as Box<dyn Kernel>,
+            Box::new(Matern32::new(0.7, 1.3)),
+            Box::new(Matern52::new(0.7, 1.3)),
+        ] {
+            assert!((k.eval(&[0.2, 0.5], &[0.2, 0.5]) - 1.3).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn kernels_decay_with_distance() {
+        let kernels: Vec<Box<dyn Kernel>> = vec![
+            Box::new(Rbf::new(0.5, 1.0)),
+            Box::new(Matern12::new(0.5, 1.0)),
+            Box::new(Matern32::new(0.5, 1.0)),
+            Box::new(Matern52::new(0.5, 1.0)),
+        ];
+        for k in &kernels {
+            let mut prev = f64::INFINITY;
+            for i in 0..10 {
+                let x2 = [i as f64 * 0.3];
+                let v = k.eval(&[0.0], &x2);
+                assert!(v <= prev + 1e-15);
+                assert!(v > 0.0);
+                prev = v;
+            }
+        }
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let x1 = [0.3, -0.2, 0.9];
+        let x2 = [-0.1, 0.4, 0.5];
+        let mut rbf = Rbf::new(0.8, 1.5);
+        check_kernel_gradients(&mut rbf, &x1, &x2, 1e-5);
+        let mut m12 = Matern12::new(0.8, 1.5);
+        check_kernel_gradients(&mut m12, &x1, &x2, 1e-5);
+        let mut m32 = Matern32::new(0.8, 1.5);
+        check_kernel_gradients(&mut m32, &x1, &x2, 1e-5);
+        let mut m52 = Matern52::new(0.8, 1.5);
+        check_kernel_gradients(&mut m52, &x1, &x2, 1e-5);
+    }
+
+    #[test]
+    fn param_roundtrip() {
+        let mut k = Rbf::new(2.0, 3.0);
+        let p = k.params();
+        assert!((p[0] - 2.0f64.ln()).abs() < 1e-15);
+        k.set_params(&[0.0, 0.0]);
+        assert!((k.lengthscale() - 1.0).abs() < 1e-15);
+        assert_eq!(k.param_names().len(), 2);
+    }
+
+    #[test]
+    fn symmetry() {
+        let k = Matern52::new(0.6, 1.1);
+        let a = [0.1, 0.9];
+        let b = [0.7, 0.2];
+        assert_eq!(k.eval(&a, &b), k.eval(&b, &a));
+    }
+}

@@ -1,0 +1,37 @@
+//! # bbmm-gp — Blackbox Matrix-Matrix Gaussian Process inference
+//!
+//! A Rust + JAX/Pallas reproduction of *GPyTorch: Blackbox Matrix-Matrix
+//! Gaussian Process Inference with GPU Acceleration* (Gardner, Pleiss,
+//! Bindel, Weinberger, Wilson — NeurIPS 2018).
+//!
+//! The crate is organised as the paper's system is:
+//!
+//! - [`tensor`] / [`util`] — dense-matrix and RNG substrates.
+//! - [`linalg`] — the numerical core: dense Cholesky (baseline), standard
+//!   PCG, the paper's **mBCG** (batched CG with Lanczos-tridiagonal
+//!   recovery), Lanczos itself (Dong et al. baseline), the rank-k **pivoted
+//!   Cholesky** preconditioner, stochastic trace estimation, FFT and
+//!   Toeplitz operators.
+//! - [`kernels`] — the "blackbox": a [`kernels::KernelOperator`] trait whose
+//!   only hot method is `matmul` (`K̂·M`), with RBF / Matérn / linear /
+//!   composition / deep-kernel implementations and analytic `dK̂/dθ·M`.
+//! - [`gp`] — GP models and inference engines: exact GP with BBMM and
+//!   Cholesky engines, SGPR (SoR), SKI (KISS-GP), and the Dong et al.
+//!   sequential-Lanczos engine used as the SKI baseline.
+//! - [`train`] — Adam on raw hyperparameters plus the training loop.
+//! - [`data`] — synthetic UCI-equivalent datasets and a CSV loader.
+//! - [`runtime`] — PJRT artifact loading/execution (the L2/L1 AOT bridge).
+//! - [`coordinator`] — prediction server: request router + dynamic batcher.
+//! - [`bench`] — the in-tree benchmark harness (offline criterion stand-in).
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod gp;
+pub mod kernels;
+pub mod linalg;
+pub mod runtime;
+pub mod tensor;
+pub mod train;
+pub mod util;

@@ -1,0 +1,229 @@
+//! Standard preconditioned conjugate gradients (paper App. A, Algorithm 1).
+//!
+//! Single right-hand side; used by the Dong et al. baseline engine and by
+//! the Figure-4 experiments that trace residual vs iteration.
+
+use crate::tensor::{vecops, Mat, Scalar};
+
+/// Result of a (preconditioned) CG solve.
+pub struct PcgResult<T: Scalar = f64> {
+    /// approximate solution `A⁻¹ b`
+    pub x: Vec<T>,
+    /// iterations actually performed
+    pub iterations: usize,
+    /// relative residual ‖A x − b‖ / ‖b‖ after each iteration
+    pub residual_history: Vec<f64>,
+    /// CG coefficients (α_j, β_j) per iteration — enough to rebuild the
+    /// Lanczos tridiagonal matrix (Observation 3 / Saad §6.7.3)
+    pub alphas: Vec<f64>,
+    pub betas: Vec<f64>,
+}
+
+/// Preconditioned CG: solves `A x = b` using only a mat-vec closure.
+///
+/// * `matvec` — computes `A·v`.
+/// * `precond` — applies `P⁻¹·v` (pass identity for unpreconditioned CG).
+/// * stops at `max_iters` or when relative residual < `tol`.
+pub fn pcg<T: Scalar>(
+    matvec: impl Fn(&[T]) -> Vec<T>,
+    b: &[T],
+    precond: impl Fn(&[T]) -> Vec<T>,
+    max_iters: usize,
+    tol: f64,
+) -> PcgResult<T> {
+    let n = b.len();
+    let bnorm = b.iter().map(|v| v.to_f64() * v.to_f64()).sum::<f64>().sqrt();
+    if bnorm == 0.0 {
+        return PcgResult {
+            x: vec![T::ZERO; n],
+            iterations: 0,
+            residual_history: vec![0.0],
+            alphas: vec![],
+            betas: vec![],
+        };
+    }
+    let mut x = vec![T::ZERO; n];
+    let mut r = b.to_vec(); // r = b - A·0
+    let mut z = precond(&r);
+    let mut d = z.clone();
+    let mut rz_old: f64 = dot64(&r, &z);
+    let mut history = Vec::with_capacity(max_iters);
+    let mut alphas = Vec::new();
+    let mut betas = Vec::new();
+
+    let mut iters = 0;
+    for _ in 0..max_iters {
+        let v = matvec(&d);
+        let dv = dot64(&d, &v);
+        if dv.abs() < 1e-300 {
+            break;
+        }
+        let alpha = rz_old / dv;
+        for i in 0..n {
+            x[i] += T::from_f64(alpha * d[i].to_f64());
+            r[i] -= T::from_f64(alpha * v[i].to_f64());
+        }
+        iters += 1;
+        alphas.push(alpha);
+        let rnorm = r
+            .iter()
+            .map(|v| v.to_f64() * v.to_f64())
+            .sum::<f64>()
+            .sqrt();
+        history.push(rnorm / bnorm);
+        if rnorm / bnorm < tol {
+            break;
+        }
+        z = precond(&r);
+        let rz_new = dot64(&r, &z);
+        let beta = rz_new / rz_old;
+        betas.push(beta);
+        rz_old = rz_new;
+        for i in 0..n {
+            d[i] = z[i] + T::from_f64(beta * d[i].to_f64());
+        }
+    }
+
+    PcgResult {
+        x,
+        iterations: iters,
+        residual_history: history,
+        alphas,
+        betas,
+    }
+}
+
+fn dot64<T: Scalar>(a: &[T], b: &[T]) -> f64 {
+    a.iter()
+        .zip(b.iter())
+        .map(|(x, y)| x.to_f64() * y.to_f64())
+        .sum()
+}
+
+/// Convenience: CG against a dense matrix (used heavily in tests/figures).
+pub fn pcg_dense<T: Scalar>(
+    a: &Mat<T>,
+    b: &[T],
+    max_iters: usize,
+    tol: f64,
+) -> PcgResult<T> {
+    pcg(|v| a.matvec(v), b, |r| r.to_vec(), max_iters, tol)
+}
+
+/// Relative residual ‖A x − b‖₂/‖b‖₂ for a dense system (figure metric).
+pub fn relative_residual(a: &Mat, x: &[f64], b: &[f64]) -> f64 {
+    let ax = a.matvec(x);
+    let mut diff = 0.0;
+    for i in 0..b.len() {
+        let d = ax[i] - b[i];
+        diff += d * d;
+    }
+    diff.sqrt() / vecops::norm2(b).max(1e-300)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn spd(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let g = Mat::from_fn(n, n, |_, _| rng.normal());
+        let mut a = g.t_matmul(&g);
+        a.add_diag(n as f64 * 0.5);
+        a
+    }
+
+    #[test]
+    fn cg_solves_spd_system() {
+        let n = 80;
+        let a = spd(n, 1);
+        let mut rng = Rng::new(2);
+        let b = rng.normal_vec(n);
+        let res = pcg_dense(&a, &b, n, 1e-12);
+        assert!(relative_residual(&a, &res.x, &b) < 1e-10);
+    }
+
+    #[test]
+    fn cg_exact_in_n_iterations() {
+        // tiny well-conditioned system, no tolerance: converges in ≤ n iters
+        let a = Mat::from_vec(2, 2, vec![4.0, 1.0, 1.0, 3.0]);
+        let b = vec![1.0, 2.0];
+        let res = pcg_dense(&a, &b, 2, 0.0);
+        let x_true = vec![(3.0 - 2.0) / 11.0, (8.0 - 1.0) / 11.0];
+        for i in 0..2 {
+            assert!((res.x[i] - x_true[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn residual_history_decreases_overall() {
+        let n = 60;
+        let a = spd(n, 3);
+        let mut rng = Rng::new(4);
+        let b = rng.normal_vec(n);
+        let res = pcg_dense(&a, &b, n, 1e-14);
+        let first = res.residual_history[0];
+        let last = *res.residual_history.last().unwrap();
+        assert!(last < first * 1e-6);
+    }
+
+    #[test]
+    fn zero_rhs_returns_zero() {
+        let a = spd(10, 5);
+        let b = vec![0.0; 10];
+        let res = pcg_dense(&a, &b, 10, 1e-10);
+        assert!(res.x.iter().all(|&v| v == 0.0));
+        assert_eq!(res.iterations, 0);
+    }
+
+    #[test]
+    fn jacobi_preconditioner_reduces_iterations_on_scaled_system() {
+        // badly scaled diagonal + small coupling: Jacobi helps a lot
+        let n = 100;
+        let mut rng = Rng::new(6);
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            a.set(i, i, 10f64.powi((i % 6) as i32));
+        }
+        for _ in 0..n {
+            let i = rng.below(n);
+            let j = rng.below(n);
+            if i != j {
+                let v = 0.01 * rng.normal();
+                a.set(i, j, a.get(i, j) + v);
+                a.set(j, i, a.get(j, i) + v);
+            }
+        }
+        let b = rng.normal_vec(n);
+        let plain = pcg(|v| a.matvec(v), &b, |r| r.to_vec(), 200, 1e-10);
+        let diag: Vec<f64> = (0..n).map(|i| a.get(i, i)).collect();
+        let jacobi = pcg(
+            |v| a.matvec(v),
+            &b,
+            |r| r.iter().zip(&diag).map(|(ri, di)| ri / di).collect(),
+            200,
+            1e-10,
+        );
+        assert!(
+            jacobi.iterations < plain.iterations,
+            "jacobi {} !< plain {}",
+            jacobi.iterations,
+            plain.iterations
+        );
+    }
+
+    #[test]
+    fn f32_cg_converges_to_f32_accuracy() {
+        let n = 50;
+        let a64 = spd(n, 7);
+        let a: Mat<f32> = a64.cast();
+        let mut rng = Rng::new(8);
+        let b64 = rng.normal_vec(n);
+        let b: Vec<f32> = b64.iter().map(|&v| v as f32).collect();
+        let res = pcg_dense(&a, &b, 200, 1e-6);
+        // residual achievable in f32 is ~1e-6 relative
+        let x64: Vec<f64> = res.x.iter().map(|&v| v as f64).collect();
+        assert!(relative_residual(&a64, &x64, &b64) < 1e-4);
+    }
+}

@@ -1,0 +1,347 @@
+//! Dense Cholesky factorization — the O(n³) baseline inference engine the
+//! paper compares against (§6 uses GPFlow's Cholesky engine; this is the
+//! same algorithm on this testbed).
+//!
+//! Blocked right-looking factorization: the trailing-submatrix update is the
+//! dominant cost and is expressed as a parallel GEMM, which is as friendly
+//! to this hardware as a Cholesky gets — making it a fair baseline.
+
+use crate::tensor::{Mat, Scalar};
+use crate::util::par;
+
+/// Lower-triangular Cholesky factor `A = L·Lᵀ` with solve / logdet helpers.
+pub struct Cholesky<T: Scalar = f64> {
+    l: Mat<T>,
+    /// jitter that had to be added to the diagonal for success (0 if none)
+    pub jitter: f64,
+}
+
+/// Error raised when a matrix is not positive definite even after the
+/// maximum jitter is applied.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NotPositiveDefinite {
+    pub pivot: usize,
+    pub value: f64,
+}
+
+impl std::fmt::Display for NotPositiveDefinite {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "matrix not positive definite at pivot {} (value {:.3e})",
+            self.pivot, self.value
+        )
+    }
+}
+
+impl std::error::Error for NotPositiveDefinite {}
+
+impl<T: Scalar> Cholesky<T> {
+    /// Factor `a` (symmetric positive definite). Fails rather than jittering.
+    pub fn new(a: &Mat<T>) -> Result<Self, NotPositiveDefinite> {
+        Self::factor(a, T::ZERO).map(|l| Cholesky { l, jitter: 0.0 })
+    }
+
+    /// Factor with escalating jitter — mirrors what Cholesky-based GP
+    /// libraries do in practice (the paper calls this out in §6: "Cholesky
+    /// methods frequently add noise to the diagonal").
+    pub fn new_with_jitter(a: &Mat<T>) -> Result<Self, NotPositiveDefinite> {
+        let mut jitter = 0.0f64;
+        let mut last_err = NotPositiveDefinite {
+            pivot: 0,
+            value: 0.0,
+        };
+        // escalation schedule: 0, 1e-8, 1e-6, 1e-4 (relative to mean diag)
+        let mean_diag = (0..a.rows())
+            .map(|i| a.get(i, i).to_f64())
+            .sum::<f64>()
+            / a.rows().max(1) as f64;
+        for &rel in &[0.0, 1e-8, 1e-6, 1e-4] {
+            jitter = rel * mean_diag.max(1.0);
+            match Self::factor(a, T::from_f64(jitter)) {
+                Ok(l) => return Ok(Cholesky { l, jitter }),
+                Err(e) => last_err = e,
+            }
+        }
+        let _ = jitter;
+        Err(last_err)
+    }
+
+    /// Blocked right-looking factorization of `a + jitter·I`.
+    fn factor(a: &Mat<T>, jitter: T) -> Result<Mat<T>, NotPositiveDefinite> {
+        assert_eq!(a.rows(), a.cols(), "cholesky needs a square matrix");
+        let n = a.rows();
+        let mut l = a.clone();
+        if jitter != T::ZERO {
+            l.add_diag(jitter);
+        }
+        const NB: usize = 64;
+        let mut kb = 0usize;
+        while kb < n {
+            let kend = (kb + NB).min(n);
+            // factor the diagonal block (unblocked)
+            for k in kb..kend {
+                let mut d = l.get(k, k);
+                for j in kb..k {
+                    let v = l.get(k, j);
+                    d -= v * v;
+                }
+                if d <= T::ZERO || !d.is_finite() {
+                    return Err(NotPositiveDefinite {
+                        pivot: k,
+                        value: d.to_f64(),
+                    });
+                }
+                let dk = d.sqrt();
+                l.set(k, k, dk);
+                // update column below within the panel
+                for i in (k + 1)..n {
+                    let mut s = l.get(i, k);
+                    for j in kb..k {
+                        s -= l.get(i, j) * l.get(k, j);
+                    }
+                    l.set(i, k, s / dk);
+                }
+            }
+            // trailing update: A[kend.., kend..] -= L_panel · L_panelᵀ
+            // (parallel over trailing rows — this is the GEMM-shaped bulk)
+            if kend < n {
+                let panel = Mat::from_fn(n - kend, kend - kb, |r, c| l.get(kend + r, kb + c));
+                let nrows = n - kend;
+                let ncols_panel = kend - kb;
+                // row-parallel rank-NB update of the lower triangle
+                let lptr = std::sync::Mutex::new(&mut l);
+                par::parallel_chunks(nrows, 8, |_t, lo, hi| {
+                    // compute updates into a local buffer, then write under lock
+                    let mut updates: Vec<(usize, Vec<T>)> = Vec::with_capacity(hi - lo);
+                    for r in lo..hi {
+                        let prow = panel.row(r);
+                        let mut urow = vec![T::ZERO; r + 1];
+                        for (c, u) in urow.iter_mut().enumerate() {
+                            let qrow = panel.row(c);
+                            let mut s = T::ZERO;
+                            for k in 0..ncols_panel {
+                                s += prow[k] * qrow[k];
+                            }
+                            *u = s;
+                        }
+                        updates.push((r, urow));
+                    }
+                    let mut guard = lptr.lock().unwrap();
+                    for (r, urow) in updates {
+                        for (c, u) in urow.iter().enumerate() {
+                            let old = guard.get(kend + r, kend + c);
+                            guard.set(kend + r, kend + c, old - *u);
+                        }
+                    }
+                });
+            }
+            kb = kend;
+        }
+        // zero the strict upper triangle
+        for r in 0..n {
+            for c in (r + 1)..n {
+                l.set(r, c, T::ZERO);
+            }
+        }
+        Ok(l)
+    }
+
+    pub fn l(&self) -> &Mat<T> {
+        &self.l
+    }
+
+    pub fn n(&self) -> usize {
+        self.l.rows()
+    }
+
+    /// Solve `A x = b` via forward/backward substitution.
+    pub fn solve_vec(&self, b: &[T]) -> Vec<T> {
+        let n = self.n();
+        assert_eq!(b.len(), n);
+        let mut x = b.to_vec();
+        // forward: L y = b
+        for i in 0..n {
+            let mut s = x[i];
+            let row = self.l.row(i);
+            for j in 0..i {
+                s -= row[j] * x[j];
+            }
+            x[i] = s / row[i];
+        }
+        // backward: Lᵀ x = y
+        for i in (0..n).rev() {
+            let mut s = x[i];
+            for j in (i + 1)..n {
+                s -= self.l.get(j, i) * x[j];
+            }
+            x[i] = s / self.l.get(i, i);
+        }
+        x
+    }
+
+    /// Solve `A X = B` for a matrix of right-hand sides.
+    ///
+    /// Row-sweep triangular solves with the inner loop over the RHS
+    /// columns — fully vectorised (the per-column variant runs scalar and
+    /// is ~7× slower at n ≈ 1000 on this testbed; see EXPERIMENTS.md §Perf).
+    pub fn solve_mat(&self, b: &Mat<T>) -> Mat<T> {
+        let n = self.n();
+        assert_eq!(b.rows(), n);
+        let t = b.cols();
+        let mut x = b.clone();
+        // forward: L Y = B
+        for i in 0..n {
+            let lrow = self.l.row(i);
+            // x[i,:] -= Σ_{j<i} L[i,j]·x[j,:]
+            for j in 0..i {
+                let lij = lrow[j];
+                if lij == T::ZERO {
+                    continue;
+                }
+                let (head, tail) = x.data_mut().split_at_mut(i * t);
+                let xj = &head[j * t..(j + 1) * t];
+                let xi = &mut tail[..t];
+                for c in 0..t {
+                    xi[c] -= lij * xj[c];
+                }
+            }
+            let inv = T::ONE / lrow[i];
+            for v in x.row_mut(i) {
+                *v *= inv;
+            }
+        }
+        // backward: Lᵀ X = Y
+        for i in (0..n).rev() {
+            for j in (i + 1)..n {
+                let lji = self.l.get(j, i);
+                if lji == T::ZERO {
+                    continue;
+                }
+                let (head, tail) = x.data_mut().split_at_mut(j * t);
+                let xi = &mut head[i * t..(i + 1) * t];
+                let xj = &tail[..t];
+                for c in 0..t {
+                    xi[c] -= lji * xj[c];
+                }
+            }
+            let inv = T::ONE / self.l.get(i, i);
+            for v in x.row_mut(i) {
+                *v *= inv;
+            }
+        }
+        let _ = par::num_threads();
+        x
+    }
+
+    /// log|A| = 2 Σ log L[i,i].
+    pub fn logdet(&self) -> f64 {
+        (0..self.n())
+            .map(|i| self.l.get(i, i).to_f64().ln())
+            .sum::<f64>()
+            * 2.0
+    }
+
+    /// Solve `L y = b` only (half-solve), used for whitening.
+    pub fn forward_solve(&self, b: &[T]) -> Vec<T> {
+        let n = self.n();
+        let mut x = b.to_vec();
+        for i in 0..n {
+            let mut s = x[i];
+            let row = self.l.row(i);
+            for j in 0..i {
+                s -= row[j] * x[j];
+            }
+            x[i] = s / row[i];
+        }
+        x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// random SPD matrix A = GᵀG + n·I
+    fn spd(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let g = Mat::from_fn(n, n, |_, _| rng.normal());
+        let mut a = g.t_matmul(&g);
+        a.add_diag(n as f64);
+        a.symmetrize();
+        a
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        for &n in &[1, 2, 5, 33, 100, 150] {
+            let a = spd(n, n as u64);
+            let ch = Cholesky::new(&a).unwrap();
+            let recon = ch.l().matmul_t(ch.l());
+            assert!(recon.max_abs_diff(&a) < 1e-8 * n as f64, "n={n}");
+        }
+    }
+
+    #[test]
+    fn solve_matches_identity() {
+        let n = 60;
+        let a = spd(n, 3);
+        let ch = Cholesky::new(&a).unwrap();
+        let mut rng = Rng::new(9);
+        let b: Vec<f64> = rng.normal_vec(n);
+        let x = ch.solve_vec(&b);
+        let ax = a.matvec(&x);
+        for i in 0..n {
+            assert!((ax[i] - b[i]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn solve_mat_matches_solve_vec() {
+        let n = 40;
+        let a = spd(n, 4);
+        let ch = Cholesky::new(&a).unwrap();
+        let mut rng = Rng::new(10);
+        let b = Mat::from_fn(n, 5, |_, _| rng.normal());
+        let x = ch.solve_mat(&b);
+        for c in 0..5 {
+            let xc = ch.solve_vec(&b.col(c));
+            for r in 0..n {
+                assert!((x.get(r, c) - xc[r]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn logdet_matches_eigen_free_reference() {
+        // 2x2 with known determinant
+        let a = Mat::from_vec(2, 2, vec![4.0, 1.0, 1.0, 3.0]);
+        let ch = Cholesky::new(&a).unwrap();
+        assert!((ch.logdet() - (11.0f64).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+        assert!(Cholesky::new(&a).is_err());
+    }
+
+    #[test]
+    fn jitter_rescues_near_singular() {
+        // rank-1 PSD matrix (singular)
+        let v = [1.0, 2.0, 3.0];
+        let a = Mat::from_fn(3, 3, |r, c| v[r] * v[c]);
+        let ch = Cholesky::new_with_jitter(&a).unwrap();
+        assert!(ch.jitter > 0.0);
+    }
+
+    #[test]
+    fn f32_factor_works() {
+        let a64 = spd(30, 8);
+        let a: Mat<f32> = a64.cast();
+        let ch = Cholesky::new(&a).unwrap();
+        let recon = ch.l().matmul_t(ch.l());
+        assert!(recon.cast::<f64>().max_abs_diff(&a64) < 1e-2);
+    }
+}

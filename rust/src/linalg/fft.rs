@@ -1,0 +1,202 @@
+//! In-place iterative radix-2 complex FFT (Cooley–Tukey), built from scratch
+//! as the substrate for fast Toeplitz matrix-vector products (KISS-GP's
+//! `K_UU` structure — §5 of the paper: MVMs with a Toeplitz `K_UU` in
+//! O(m log m)).
+
+use std::f64::consts::PI;
+
+/// Complex number (the vendored crate set has no `num-complex`).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Cplx {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl Cplx {
+    pub const ZERO: Cplx = Cplx { re: 0.0, im: 0.0 };
+
+    #[inline]
+    pub fn new(re: f64, im: f64) -> Cplx {
+        Cplx { re, im }
+    }
+
+    #[inline]
+    pub fn mul(self, o: Cplx) -> Cplx {
+        Cplx {
+            re: self.re * o.re - self.im * o.im,
+            im: self.re * o.im + self.im * o.re,
+        }
+    }
+
+    #[inline]
+    pub fn add(self, o: Cplx) -> Cplx {
+        Cplx {
+            re: self.re + o.re,
+            im: self.im + o.im,
+        }
+    }
+
+    #[inline]
+    pub fn sub(self, o: Cplx) -> Cplx {
+        Cplx {
+            re: self.re - o.re,
+            im: self.im - o.im,
+        }
+    }
+}
+
+/// next power of two ≥ n
+pub fn next_pow2(n: usize) -> usize {
+    n.next_power_of_two()
+}
+
+/// In-place FFT (forward if `inverse=false`). Length must be a power of two.
+/// The inverse transform includes the 1/N normalisation.
+pub fn fft_inplace(a: &mut [Cplx], inverse: bool) {
+    let n = a.len();
+    assert!(n.is_power_of_two(), "fft length must be a power of two");
+    if n <= 1 {
+        return;
+    }
+    // bit-reversal permutation
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            a.swap(i, j);
+        }
+    }
+    // butterflies
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2usize;
+    while len <= n {
+        let ang = sign * 2.0 * PI / len as f64;
+        let wlen = Cplx::new(ang.cos(), ang.sin());
+        let half = len / 2;
+        let mut i = 0;
+        while i < n {
+            let mut w = Cplx::new(1.0, 0.0);
+            for k in 0..half {
+                let u = a[i + k];
+                let v = a[i + k + half].mul(w);
+                a[i + k] = u.add(v);
+                a[i + k + half] = u.sub(v);
+                w = w.mul(wlen);
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+    if inverse {
+        let inv_n = 1.0 / n as f64;
+        for v in a.iter_mut() {
+            v.re *= inv_n;
+            v.im *= inv_n;
+        }
+    }
+}
+
+/// Real convolution-style helper: FFT of a real signal (zero-padded copy).
+pub fn fft_real(x: &[f64], len: usize) -> Vec<Cplx> {
+    assert!(len.is_power_of_two() && len >= x.len());
+    let mut buf = vec![Cplx::ZERO; len];
+    for (i, &v) in x.iter().enumerate() {
+        buf[i] = Cplx::new(v, 0.0);
+    }
+    fft_inplace(&mut buf, false);
+    buf
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn dft_naive(x: &[Cplx], inverse: bool) -> Vec<Cplx> {
+        let n = x.len();
+        let sign = if inverse { 1.0 } else { -1.0 };
+        let mut out = vec![Cplx::ZERO; n];
+        for (k, o) in out.iter_mut().enumerate() {
+            for (t, &v) in x.iter().enumerate() {
+                let ang = sign * 2.0 * PI * (k * t) as f64 / n as f64;
+                *o = o.add(v.mul(Cplx::new(ang.cos(), ang.sin())));
+            }
+        }
+        if inverse {
+            for o in out.iter_mut() {
+                o.re /= n as f64;
+                o.im /= n as f64;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matches_naive_dft() {
+        let mut rng = Rng::new(1);
+        for &n in &[1usize, 2, 4, 8, 16, 64] {
+            let x: Vec<Cplx> = (0..n).map(|_| Cplx::new(rng.normal(), rng.normal())).collect();
+            let mut got = x.clone();
+            fft_inplace(&mut got, false);
+            let want = dft_naive(&x, false);
+            for i in 0..n {
+                assert!((got[i].re - want[i].re).abs() < 1e-9, "n={n} i={i}");
+                assert!((got[i].im - want[i].im).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_identity() {
+        let mut rng = Rng::new(2);
+        let n = 128;
+        let x: Vec<Cplx> = (0..n).map(|_| Cplx::new(rng.normal(), rng.normal())).collect();
+        let mut buf = x.clone();
+        fft_inplace(&mut buf, false);
+        fft_inplace(&mut buf, true);
+        for i in 0..n {
+            assert!((buf[i].re - x[i].re).abs() < 1e-10);
+            assert!((buf[i].im - x[i].im).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn parseval() {
+        let mut rng = Rng::new(3);
+        let n = 64;
+        let x: Vec<Cplx> = (0..n).map(|_| Cplx::new(rng.normal(), 0.0)).collect();
+        let mut f = x.clone();
+        fft_inplace(&mut f, false);
+        let e_time: f64 = x.iter().map(|c| c.re * c.re + c.im * c.im).sum();
+        let e_freq: f64 = f.iter().map(|c| c.re * c.re + c.im * c.im).sum::<f64>() / n as f64;
+        assert!((e_time - e_freq).abs() < 1e-9);
+    }
+
+    #[test]
+    fn convolution_via_fft_matches_direct() {
+        let mut rng = Rng::new(4);
+        let a: Vec<f64> = (0..10).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..7).map(|_| rng.normal()).collect();
+        let len = next_pow2(a.len() + b.len() - 1);
+        let mut fa = fft_real(&a, len);
+        let fb = fft_real(&b, len);
+        for i in 0..len {
+            fa[i] = fa[i].mul(fb[i]);
+        }
+        fft_inplace(&mut fa, true);
+        for k in 0..(a.len() + b.len() - 1) {
+            let mut direct = 0.0;
+            for i in 0..a.len() {
+                if k >= i && k - i < b.len() {
+                    direct += a[i] * b[k - i];
+                }
+            }
+            assert!((fa[k].re - direct).abs() < 1e-9, "k={k}");
+        }
+    }
+}

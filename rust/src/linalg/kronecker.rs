@@ -1,0 +1,108 @@
+//! Kronecker-product operator substrate.
+//!
+//! Multi-task GPs (paper §5, Bonilla et al. [5]) use `K = B ⊗ K_data`
+//! where `B (q×q)` is the task covariance; KISS-GP in higher dimensions
+//! uses Kronecker-structured `K_UU`. The key identity is
+//!
+//! ```text
+//! (A ⊗ B) vec(X) = vec(B X Aᵀ)
+//! ```
+//!
+//! so a mat-vec with an (qa·qb)-dimensional Kronecker matrix costs two
+//! small GEMMs instead of one huge one.
+
+use crate::tensor::Mat;
+
+/// `(A ⊗ B) · v` where `A` is qa×qa, `B` is qb×qb, `v` has length qa·qb.
+///
+/// Layout convention: `v[i*qb + j]` pairs A-index `i` with B-index `j`
+/// (row-major vec of the qa×qb matrix X with `X[i,j] = v[i*qb+j]`).
+pub fn kron_matvec(a: &Mat, b: &Mat, v: &[f64]) -> Vec<f64> {
+    let qa = a.rows();
+    let qb = b.rows();
+    assert_eq!(a.cols(), qa, "A must be square");
+    assert_eq!(b.cols(), qb, "B must be square");
+    assert_eq!(v.len(), qa * qb);
+    // X = reshape(v, qa×qb); result = vec(A X Bᵀ)
+    let x = Mat::from_vec(qa, qb, v.to_vec());
+    let ax = a.matmul(&x); // qa×qb
+    let out = ax.matmul_t(b); // (A X) Bᵀ
+    out.data().to_vec()
+}
+
+/// `(A ⊗ B) · M` for a matrix of RHS columns.
+pub fn kron_matmul(a: &Mat, b: &Mat, m: &Mat) -> Mat {
+    let n = a.rows() * b.rows();
+    assert_eq!(m.rows(), n);
+    let mut out = Mat::zeros(n, m.cols());
+    for c in 0..m.cols() {
+        let col = kron_matvec(a, b, &m.col(c));
+        out.set_col(c, &col);
+    }
+    out
+}
+
+/// Dense Kronecker product (tests / small sizes).
+pub fn kron_dense(a: &Mat, b: &Mat) -> Mat {
+    let (ra, ca) = a.shape();
+    let (rb, cb) = b.shape();
+    Mat::from_fn(ra * rb, ca * cb, |i, j| {
+        a.get(i / rb, j / cb) * b.get(i % rb, j % cb)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_spd(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let g = Mat::from_fn(n, n, |_, _| rng.normal());
+        let mut a = g.t_matmul(&g);
+        a.add_diag(n as f64 * 0.1);
+        a
+    }
+
+    #[test]
+    fn kron_matvec_matches_dense() {
+        let a = rand_spd(3, 1);
+        let b = rand_spd(4, 2);
+        let mut rng = Rng::new(3);
+        let v = rng.normal_vec(12);
+        let got = kron_matvec(&a, &b, &v);
+        let want = kron_dense(&a, &b).matvec(&v);
+        for i in 0..12 {
+            assert!((got[i] - want[i]).abs() < 1e-10, "i={i}");
+        }
+    }
+
+    #[test]
+    fn kron_matmul_matches_dense() {
+        let a = rand_spd(2, 4);
+        let b = rand_spd(5, 5);
+        let mut rng = Rng::new(6);
+        let m = Mat::from_fn(10, 3, |_, _| rng.normal());
+        let got = kron_matmul(&a, &b, &m);
+        let want = kron_dense(&a, &b).matmul(&m);
+        assert!(got.max_abs_diff(&want) < 1e-10);
+    }
+
+    #[test]
+    fn kron_dense_shapes_and_values() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![0.0, 1.0, 1.0, 0.0]);
+        let k = kron_dense(&a, &b);
+        assert_eq!(k.shape(), (4, 4));
+        assert_eq!(k.get(0, 1), 1.0); // a00*b01
+        assert_eq!(k.get(2, 3), 4.0); // a11*b01
+    }
+
+    #[test]
+    fn kron_identity_is_identity() {
+        let i2 = Mat::eye(2);
+        let i3 = Mat::eye(3);
+        let k = kron_dense(&i2, &i3);
+        assert!(k.max_abs_diff(&Mat::eye(6)) == 0.0);
+    }
+}

@@ -1,0 +1,176 @@
+//! Explicit Lanczos tridiagonalization with full reorthogonalization.
+//!
+//! This is the subroutine the Dong et al. [13] baseline engine uses for its
+//! log-determinant (the paper's SKI comparison in Figure 2 right). BBMM
+//! deliberately *avoids* running this — it needs O(np) storage for Q and
+//! loses orthogonality without the (expensive) reorthogonalization below —
+//! recovering T̃ from CG coefficients instead. We keep the explicit
+//! algorithm both as the baseline and as the correctness oracle for the
+//! mBCG tridiagonal recovery.
+
+use crate::linalg::mbcg::TriDiag;
+use crate::tensor::Mat;
+
+/// Run `p` Lanczos iterations on the operator `matvec` starting from probe
+/// vector `z`. Returns the tridiagonal `T̃ (p×p)` and the orthonormal basis
+/// `Q̃ (n×p)` whose first column is `z/‖z‖`.
+///
+/// Uses full reorthogonalization (two Gram–Schmidt passes) — the numerical
+/// band-aid whose cost BBMM avoids.
+pub fn lanczos_tridiag(
+    matvec: impl Fn(&[f64]) -> Vec<f64>,
+    z: &[f64],
+    p: usize,
+) -> (TriDiag, Mat) {
+    let n = z.len();
+    let p = p.min(n);
+    let mut q = Mat::zeros(n, p);
+    let znorm = z.iter().map(|v| v * v).sum::<f64>().sqrt();
+    assert!(znorm > 0.0, "lanczos probe must be nonzero");
+    let mut qcur: Vec<f64> = z.iter().map(|v| v / znorm).collect();
+    q.set_col(0, &qcur);
+    let mut qprev = vec![0.0; n];
+    let mut alphas = Vec::with_capacity(p);
+    let mut betas: Vec<f64> = Vec::with_capacity(p.saturating_sub(1));
+    let mut beta_prev = 0.0;
+
+    for j in 0..p {
+        let mut w = matvec(&qcur);
+        let alpha = dot(&w, &qcur);
+        alphas.push(alpha);
+        for i in 0..n {
+            w[i] -= alpha * qcur[i] + beta_prev * qprev[i];
+        }
+        // full reorthogonalization against all previous basis vectors (x2)
+        for _pass in 0..2 {
+            for k in 0..=j {
+                let qk = q.col(k);
+                let c = dot(&w, &qk);
+                for i in 0..n {
+                    w[i] -= c * qk[i];
+                }
+            }
+        }
+        if j + 1 == p {
+            break;
+        }
+        let beta = dot(&w, &w).sqrt();
+        if beta < 1e-13 {
+            // invariant subspace found — truncate
+            let t = TriDiag {
+                diag: alphas,
+                offdiag: betas,
+            };
+            let q_trunc = q.cols_range(0, j + 1);
+            return (t, q_trunc);
+        }
+        betas.push(beta);
+        qprev = qcur;
+        qcur = w.iter().map(|v| v / beta).collect();
+        q.set_col(j + 1, &qcur);
+        beta_prev = beta;
+    }
+
+    (
+        TriDiag {
+            diag: alphas,
+            offdiag: betas,
+        },
+        q,
+    )
+}
+
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b.iter()).map(|(x, y)| x * y).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn spd(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let g = Mat::from_fn(n, n, |_, _| rng.normal());
+        let mut a = g.t_matmul(&g);
+        a.add_diag(n as f64 * 0.3);
+        a
+    }
+
+    #[test]
+    fn q_is_orthonormal() {
+        let n = 30;
+        let a = spd(n, 1);
+        let mut rng = Rng::new(2);
+        let z = rng.normal_vec(n);
+        let (_t, q) = lanczos_tridiag(|v| a.matvec(v), &z, 12);
+        let qtq = q.t_matmul(&q);
+        assert!(qtq.max_abs_diff(&Mat::eye(q.cols())) < 1e-10);
+    }
+
+    #[test]
+    fn satisfies_three_term_recurrence() {
+        // A·Q ≈ Q·T on the first p-1 columns
+        let n = 25;
+        let a = spd(n, 3);
+        let mut rng = Rng::new(4);
+        let z = rng.normal_vec(n);
+        let p = 10;
+        let (t, q) = lanczos_tridiag(|v| a.matvec(v), &z, p);
+        let aq = a.matmul(&q);
+        let qt = q.matmul(&t.to_dense());
+        // last column differs by the residual term β_p q_{p+1}
+        for c in 0..p - 1 {
+            for r in 0..n {
+                assert!(
+                    (aq.get(r, c) - qt.get(r, c)).abs() < 1e-8,
+                    "col {c} row {r}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn full_run_reproduces_matrix_spectrum() {
+        // p = n Lanczos: eigenvalues of T == eigenvalues of A
+        let n = 12;
+        let a = spd(n, 5);
+        let mut rng = Rng::new(6);
+        let z = rng.normal_vec(n);
+        let (t, _q) = lanczos_tridiag(|v| a.matvec(v), &z, n);
+        let eig_t = crate::linalg::tridiag::SymTridiagEig::new(&t.diag, &t.offdiag);
+        // trace and logdet must match (full Krylov space)
+        let tr_a: f64 = (0..n).map(|i| a.get(i, i)).sum();
+        let tr_t: f64 = eig_t.eigenvalues.iter().sum();
+        assert!((tr_a - tr_t).abs() / tr_a.abs() < 1e-8);
+        let ld_a = crate::linalg::cholesky::Cholesky::new(&a).unwrap().logdet();
+        let ld_t: f64 = eig_t.eigenvalues.iter().map(|l| l.ln()).sum();
+        assert!((ld_a - ld_t).abs() / ld_a.abs() < 1e-8);
+    }
+
+    #[test]
+    fn first_column_is_normalized_probe() {
+        let n = 15;
+        let a = spd(n, 7);
+        let mut rng = Rng::new(8);
+        let z = rng.normal_vec(n);
+        let (_t, q) = lanczos_tridiag(|v| a.matvec(v), &z, 5);
+        let znorm = z.iter().map(|v| v * v).sum::<f64>().sqrt();
+        for i in 0..n {
+            assert!((q.get(i, 0) - z[i] / znorm).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn invariant_subspace_truncates() {
+        // identity matrix: Krylov space is 1-dimensional
+        let n = 10;
+        let eye = Mat::eye(n);
+        let mut rng = Rng::new(9);
+        let z = rng.normal_vec(n);
+        let (t, q) = lanczos_tridiag(|v| eye.matvec(v), &z, 5);
+        assert_eq!(t.n(), 1);
+        assert_eq!(q.cols(), 1);
+        assert!((t.diag[0] - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,479 @@
+//! **mBCG** — modified batched conjugate gradients (paper §4, Algorithm 2).
+//!
+//! The core contribution of the paper: a single batched CG call that
+//!
+//! 1. solves `K̂⁻¹ [b₁ … b_s]` against all right-hand sides simultaneously,
+//!    turning the per-iteration work into one big matrix-matrix multiply
+//!    (`mmm_A`) plus O(ns) vector work, and
+//! 2. recovers, for each RHS, the partial Lanczos tridiagonalization `T̃ᵢ`
+//!    of the (preconditioned) operator from the CG coefficients
+//!    (Observation 3 / Saad §6.7.3):
+//!    `T[j,j] = 1/α_j + β_{j−1}/α_{j−1}`, `T[j,j+1] = √β_j / α_j`.
+//!
+//! The tridiagonal matrices feed the stochastic-Lanczos-quadrature
+//! log-determinant estimate `e₁ᵀ log(T̃ᵢ) e₁` (eq. 6) without ever running
+//! the (storage-hungry, numerically fragile) Lanczos algorithm.
+
+use crate::tensor::{Mat, Scalar};
+
+/// A symmetric tridiagonal matrix stored by diagonals (always f64 — the
+/// coefficients are accumulated in f64 regardless of solve precision).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TriDiag {
+    pub diag: Vec<f64>,
+    pub offdiag: Vec<f64>,
+}
+
+impl TriDiag {
+    pub fn n(&self) -> usize {
+        self.diag.len()
+    }
+
+    /// Dense form (tests / small-p paths).
+    pub fn to_dense(&self) -> Mat {
+        let p = self.n();
+        let mut t = Mat::zeros(p, p);
+        for i in 0..p {
+            t.set(i, i, self.diag[i]);
+            if i + 1 < p {
+                t.set(i, i + 1, self.offdiag[i]);
+                t.set(i + 1, i, self.offdiag[i]);
+            }
+        }
+        t
+    }
+}
+
+/// Options for [`mbcg`].
+pub struct MbcgOptions {
+    /// maximum CG iterations `p`
+    pub max_iters: usize,
+    /// relative-residual stopping tolerance (applied per column; the batch
+    /// stops when every column has converged)
+    pub tol: f64,
+    /// number of leading columns that are "solve-only" (no tridiagonal
+    /// needed) — the paper passes `[y z₁ … z_t]` and only needs T̃ for the
+    /// probe columns.
+    pub n_solve_only: usize,
+}
+
+impl Default for MbcgOptions {
+    fn default() -> Self {
+        MbcgOptions {
+            max_iters: 20, // the paper's experiment default (§6)
+            tol: 1e-10,
+            n_solve_only: 0,
+        }
+    }
+}
+
+/// Result of an mBCG call.
+pub struct MbcgResult<T: Scalar = f64> {
+    /// `A⁻¹ B` approximations, one column per RHS
+    pub solves: Mat<T>,
+    /// Lanczos tridiagonal matrices for columns `n_solve_only..`, in order
+    pub tridiags: Vec<TriDiag>,
+    /// iterations performed (same for the whole batch)
+    pub iterations: usize,
+    /// per-column relative residual at exit
+    pub final_residuals: Vec<f64>,
+    /// mean relative residual after each iteration (diagnostics / Fig. 4)
+    pub residual_history: Vec<f64>,
+}
+
+/// Modified batched preconditioned CG (Algorithm 2).
+///
+/// * `mmm_a` — the blackbox: multiplies the (implicit) SPD matrix `A` by an
+///   `n×s` matrix. This is the only way `A` is accessed.
+/// * `b` — `n×s` right-hand sides `[b₁ … b_s]`.
+/// * `precond` — applies `P̂⁻¹` to an `n×s` matrix (identity if `None`-like;
+///   see [`crate::linalg::preconditioner`]).
+///
+/// Converged columns are frozen: their solution stops updating and their
+/// α/β streams stop extending, exactly as if that column's CG had returned.
+pub fn mbcg<T: Scalar>(
+    mmm_a: impl Fn(&Mat<T>) -> Mat<T>,
+    b: &Mat<T>,
+    precond: impl Fn(&Mat<T>) -> Mat<T>,
+    opts: &MbcgOptions,
+) -> MbcgResult<T> {
+    let n = b.rows();
+    let s = b.cols();
+    assert!(opts.n_solve_only <= s);
+
+    let bnorms: Vec<f64> = (0..s)
+        .map(|c| col_norm(b, c).max(1e-300))
+        .collect();
+
+    let mut u = Mat::<T>::zeros(n, s); // current solutions
+    let mut r = b.clone(); // residuals (b - A·0)
+    let mut z = precond(&r); // preconditioned residuals
+    let mut d = z.clone(); // search directions
+
+    // per-column scalar state, kept in f64 for the tridiagonal recovery
+    let mut rz_old: Vec<f64> = (0..s).map(|c| col_dot(&r, &z, c)).collect();
+    let mut alphas: Vec<Vec<f64>> = vec![Vec::new(); s];
+    let mut betas: Vec<Vec<f64>> = vec![Vec::new(); s];
+    let mut converged = vec![false; s];
+    let mut final_res = vec![0.0f64; s];
+    let mut history = Vec::new();
+
+    // all-converged fast path for zero RHS
+    for c in 0..s {
+        if col_norm(b, c) == 0.0 {
+            converged[c] = true;
+        }
+    }
+
+    let mut iters = 0;
+    for _ in 0..opts.max_iters {
+        if converged.iter().all(|&c| c) {
+            break;
+        }
+        let v = mmm_a(&d);
+        iters += 1;
+        let mut mean_res = 0.0;
+        for c in 0..s {
+            if converged[c] {
+                mean_res += final_res[c];
+                continue;
+            }
+            let dv = col_dot(&d, &v, c);
+            if dv.abs() < 1e-300 || !dv.is_finite() {
+                converged[c] = true;
+                continue;
+            }
+            let alpha = rz_old[c] / dv;
+            alphas[c].push(alpha);
+            // u_c += α d_c ; r_c -= α v_c
+            for i in 0..n {
+                let uval = u.get(i, c).to_f64() + alpha * d.get(i, c).to_f64();
+                u.set(i, c, T::from_f64(uval));
+                let rval = r.get(i, c).to_f64() - alpha * v.get(i, c).to_f64();
+                r.set(i, c, T::from_f64(rval));
+            }
+            let rel = col_norm(&r, c) / bnorms[c];
+            final_res[c] = rel;
+            mean_res += rel;
+            if rel < opts.tol {
+                converged[c] = true;
+            }
+        }
+        history.push(mean_res / s as f64);
+        if converged.iter().all(|&c| c) {
+            break;
+        }
+        z = precond(&r);
+        for c in 0..s {
+            if converged[c] {
+                continue;
+            }
+            let rz_new = col_dot(&r, &z, c);
+            let beta = rz_new / rz_old[c];
+            betas[c].push(beta);
+            rz_old[c] = rz_new;
+            // d_c = z_c + β d_c
+            for i in 0..n {
+                let dval = z.get(i, c).to_f64() + beta * d.get(i, c).to_f64();
+                d.set(i, c, T::from_f64(dval));
+            }
+        }
+    }
+
+    // Recover tridiagonal matrices from the CG coefficients (Obs. 3).
+    let mut tridiags = Vec::with_capacity(s.saturating_sub(opts.n_solve_only));
+    for c in opts.n_solve_only..s {
+        tridiags.push(tridiag_from_coeffs(&alphas[c], &betas[c]));
+    }
+
+    MbcgResult {
+        solves: u,
+        tridiags,
+        iterations: iters,
+        final_residuals: final_res,
+        residual_history: history,
+    }
+}
+
+/// Observation 3 (Saad §6.7.3): rebuild the Lanczos `T̃` from CG's α/β.
+pub fn tridiag_from_coeffs(alphas: &[f64], betas: &[f64]) -> TriDiag {
+    let p = alphas.len();
+    let mut diag = Vec::with_capacity(p);
+    let mut offdiag = Vec::with_capacity(p.saturating_sub(1));
+    for j in 0..p {
+        let mut t = 1.0 / alphas[j];
+        if j > 0 {
+            t += betas[j - 1] / alphas[j - 1];
+        }
+        diag.push(t);
+        if j + 1 < p {
+            // guard: β can dip fractionally below 0 in finite precision
+            offdiag.push(betas[j].max(0.0).sqrt() / alphas[j]);
+        }
+    }
+    TriDiag { diag, offdiag }
+}
+
+#[inline]
+fn col_dot<T: Scalar>(a: &Mat<T>, b: &Mat<T>, c: usize) -> f64 {
+    let mut s = 0.0;
+    for i in 0..a.rows() {
+        s += a.get(i, c).to_f64() * b.get(i, c).to_f64();
+    }
+    s
+}
+
+#[inline]
+fn col_norm<T: Scalar>(a: &Mat<T>, c: usize) -> f64 {
+    col_dot(a, a, c).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::cholesky::Cholesky;
+    use crate::linalg::lanczos::lanczos_tridiag;
+    use crate::util::Rng;
+
+    fn spd(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let g = Mat::from_fn(n, n, |_, _| rng.normal());
+        let mut a = g.t_matmul(&g);
+        a.add_diag(n as f64 * 0.5);
+        a
+    }
+
+    #[test]
+    fn batched_solves_match_cholesky() {
+        let n = 70;
+        let s = 6;
+        let a = spd(n, 1);
+        let mut rng = Rng::new(2);
+        let b = Mat::from_fn(n, s, |_, _| rng.normal());
+        let res = mbcg(
+            |m| a.matmul(m),
+            &b,
+            |m| m.clone(),
+            &MbcgOptions {
+                max_iters: n,
+                tol: 1e-12,
+                n_solve_only: 0,
+            },
+        );
+        let want = Cholesky::new(&a).unwrap().solve_mat(&b);
+        assert!(res.solves.max_abs_diff(&want) < 1e-8);
+    }
+
+    #[test]
+    fn batched_matches_sequential_cg() {
+        // mBCG column c must equal a standalone CG on (A, b_c) at equal iters
+        let n = 50;
+        let a = spd(n, 3);
+        let mut rng = Rng::new(4);
+        let b = Mat::from_fn(n, 3, |_, _| rng.normal());
+        let p = 10;
+        let res = mbcg(
+            |m| a.matmul(m),
+            &b,
+            |m| m.clone(),
+            &MbcgOptions {
+                max_iters: p,
+                tol: 0.0,
+                n_solve_only: 0,
+            },
+        );
+        for c in 0..3 {
+            let single = crate::linalg::cg::pcg_dense(&a, &b.col(c), p, 0.0);
+            for i in 0..n {
+                assert!(
+                    (res.solves.get(i, c) - single.x[i]).abs() < 1e-9,
+                    "col {c} row {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tridiag_matches_explicit_lanczos() {
+        // The recovered T̃ must match the Lanczos tridiagonalization with the
+        // (normalized) RHS as the probe vector.
+        let n = 40;
+        let a = spd(n, 5);
+        let mut rng = Rng::new(6);
+        let z = rng.normal_vec(n);
+        let b = Mat::from_vec(n, 1, z.clone());
+        let p = 12;
+        let res = mbcg(
+            |m| a.matmul(m),
+            &b,
+            |m| m.clone(),
+            &MbcgOptions {
+                max_iters: p,
+                tol: 0.0,
+                n_solve_only: 0,
+            },
+        );
+        let t_cg = &res.tridiags[0];
+        let (t_lz, _q) = lanczos_tridiag(|v| a.matvec(v), &z, p);
+        assert_eq!(t_cg.n(), t_lz.n());
+        for i in 0..t_cg.n() {
+            assert!(
+                (t_cg.diag[i] - t_lz.diag[i]).abs() < 1e-6 * t_lz.diag[i].abs().max(1.0),
+                "diag {i}: {} vs {}",
+                t_cg.diag[i],
+                t_lz.diag[i]
+            );
+        }
+        for i in 0..t_cg.n() - 1 {
+            assert!(
+                (t_cg.offdiag[i].abs() - t_lz.offdiag[i].abs()).abs() < 1e-6,
+                "offdiag {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn tridiag_eigenvalues_within_spectrum() {
+        // Ritz values (eigenvalues of T̃) must lie inside [λmin, λmax] of A
+        let n = 30;
+        let a = spd(n, 7);
+        let mut rng = Rng::new(8);
+        let b = Mat::from_fn(n, 2, |_, _| rng.rademacher());
+        let res = mbcg(
+            |m| a.matmul(m),
+            &b,
+            |m| m.clone(),
+            &MbcgOptions {
+                max_iters: 10,
+                tol: 0.0,
+                n_solve_only: 0,
+            },
+        );
+        // Gershgorin bound for λmax of A; λmin > 0 since SPD
+        let mut lmax = 0.0f64;
+        for i in 0..n {
+            let row_sum: f64 = (0..n).map(|j| a.get(i, j).abs()).sum();
+            lmax = lmax.max(row_sum);
+        }
+        for t in &res.tridiags {
+            let eig = crate::linalg::tridiag::SymTridiagEig::new(&t.diag, &t.offdiag);
+            for &l in &eig.eigenvalues {
+                assert!(l > 0.0 && l <= lmax * (1.0 + 1e-8), "ritz {l} not in (0,{lmax}]");
+            }
+        }
+    }
+
+    #[test]
+    fn solve_only_columns_skip_tridiags() {
+        let n = 20;
+        let a = spd(n, 9);
+        let mut rng = Rng::new(10);
+        let b = Mat::from_fn(n, 4, |_, _| rng.normal());
+        let res = mbcg(
+            |m| a.matmul(m),
+            &b,
+            |m| m.clone(),
+            &MbcgOptions {
+                max_iters: 10,
+                tol: 0.0,
+                n_solve_only: 1,
+            },
+        );
+        assert_eq!(res.tridiags.len(), 3);
+    }
+
+    #[test]
+    fn early_stopping_freezes_converged_columns() {
+        // one easy column (small norm already solved) + one hard column
+        let n = 40;
+        let a = spd(n, 11);
+        let mut rng = Rng::new(12);
+        let b = Mat::from_fn(n, 2, |_, _| rng.normal());
+        let res = mbcg(
+            |m| a.matmul(m),
+            &b,
+            |m| m.clone(),
+            &MbcgOptions {
+                max_iters: n * 2,
+                tol: 1e-11,
+                n_solve_only: 0,
+            },
+        );
+        for c in 0..2 {
+            assert!(res.final_residuals[c] < 1e-10, "col {c}");
+        }
+        assert!(res.iterations <= n + 5);
+    }
+
+    #[test]
+    fn preconditioned_mbcg_converges_faster() {
+        // use the exact inverse as (an extreme) preconditioner: 1 iteration
+        let n = 35;
+        let a = spd(n, 13);
+        let ch = Cholesky::new(&a).unwrap();
+        let mut rng = Rng::new(14);
+        let b = Mat::from_fn(n, 2, |_, _| rng.normal());
+        let res = mbcg(
+            |m| a.matmul(m),
+            &b,
+            |m| ch.solve_mat(m),
+            &MbcgOptions {
+                max_iters: 50,
+                tol: 1e-10,
+                n_solve_only: 0,
+            },
+        );
+        assert!(res.iterations <= 3, "took {}", res.iterations);
+        let plain = mbcg(
+            |m| a.matmul(m),
+            &b,
+            |m| m.clone(),
+            &MbcgOptions {
+                max_iters: 50,
+                tol: 1e-10,
+                n_solve_only: 0,
+            },
+        );
+        assert!(plain.iterations > res.iterations);
+    }
+
+    #[test]
+    fn zero_rhs_column_handled() {
+        let n = 15;
+        let a = spd(n, 15);
+        let mut b = Mat::zeros(n, 2);
+        let mut rng = Rng::new(16);
+        b.set_col(1, &rng.normal_vec(n));
+        let res = mbcg(
+            |m| a.matmul(m),
+            &b,
+            |m| m.clone(),
+            &MbcgOptions::default(),
+        );
+        for i in 0..n {
+            assert_eq!(res.solves.get(i, 0), 0.0);
+        }
+    }
+
+    #[test]
+    fn f32_solves_reach_f32_accuracy() {
+        let n = 40;
+        let a64 = spd(n, 17);
+        let a: Mat<f32> = a64.cast();
+        let mut rng = Rng::new(18);
+        let b64 = Mat::from_fn(n, 2, |_, _| rng.normal());
+        let b: Mat<f32> = b64.cast();
+        let res = mbcg(
+            |m| a.matmul(m),
+            &b,
+            |m| m.clone(),
+            &MbcgOptions {
+                max_iters: 100,
+                tol: 1e-6,
+                n_solve_only: 0,
+            },
+        );
+        let want = Cholesky::new(&a64).unwrap().solve_mat(&b64);
+        assert!(res.solves.cast::<f64>().max_abs_diff(&want) < 1e-3);
+    }
+}

@@ -1,0 +1,205 @@
+//! Rank-k **pivoted Cholesky** decomposition (paper §4.1, Appendix C;
+//! Harbrecht et al. [19]).
+//!
+//! Greedy low-rank approximation `K ≈ L_k L_kᵀ`: at every step, pivot to the
+//! largest remaining Schur-complement diagonal entry and peel off one rank-1
+//! term. Accesses `K` only through its diagonal and k *rows* — O(ρ(K)·k²)
+//! total, where ρ(K) is the row-access cost (O(n) dense, O(n) for SKI,
+//! O(nm) for SGPR — App. C.1). The error matrix `E = K − L_k L_kᵀ` is PSD
+//! and `Tr(E)` (returned here) bounds ‖E‖₂ — the quantity Lemma 1's
+//! condition-number bound runs through.
+
+use crate::tensor::Mat;
+
+/// Result of a rank-k pivoted Cholesky run.
+pub struct PivotedCholesky {
+    /// `n×k` low-rank factor, rows in *original* index order
+    pub l: Mat,
+    /// pivot order chosen (first k entries are the selected rows)
+    pub pivots: Vec<usize>,
+    /// trace of the PSD error matrix `K − L Lᵀ` (≥ 0 in exact arithmetic)
+    pub error_trace: f64,
+}
+
+/// Compute the rank-`max_rank` pivoted Cholesky decomposition of the matrix
+/// whose diagonal is `diag` and whose `i`-th row is produced by `row(i)`.
+///
+/// Stops early if the Schur trace drops below `tol` (pass 0.0 to always run
+/// to `max_rank`).
+pub fn pivoted_cholesky(
+    diag: &[f64],
+    row: impl Fn(usize) -> Vec<f64>,
+    max_rank: usize,
+    tol: f64,
+) -> PivotedCholesky {
+    let n = diag.len();
+    let k = max_rank.min(n);
+    let mut d = diag.to_vec(); // Schur-complement diagonal
+    let mut perm: Vec<usize> = (0..n).collect();
+    // L stored row-major n×k, original ordering
+    let mut l = Mat::zeros(n, k);
+    let mut rank = 0usize;
+
+    for m in 0..k {
+        // pivot: largest remaining diagonal entry
+        let (argmax, dmax) = perm[m..]
+            .iter()
+            .map(|&i| (i, d[i]))
+            .fold((perm[m], f64::NEG_INFINITY), |acc, (i, v)| {
+                if v > acc.1 {
+                    (i, v)
+                } else {
+                    acc
+                }
+            });
+        if dmax <= tol.max(0.0) || !dmax.is_finite() {
+            break;
+        }
+        // swap into position m
+        let pos = perm[m..].iter().position(|&i| i == argmax).unwrap() + m;
+        perm.swap(m, pos);
+        let pm = perm[m];
+
+        let gamma = dmax.sqrt();
+        l.set(pm, m, gamma);
+        let krow = row(pm);
+        debug_assert_eq!(krow.len(), n);
+        for &pi in &perm[m + 1..] {
+            // v = (K[pm, pi] − Σ_{j<m} L[pm,j] L[pi,j]) / γ
+            let mut v = krow[pi];
+            let lrow_pm = l.row(pm);
+            let lrow_pi = l.row(pi);
+            for j in 0..m {
+                v -= lrow_pm[j] * lrow_pi[j];
+            }
+            v /= gamma;
+            l.set(pi, m, v);
+            d[pi] -= v * v;
+        }
+        d[pm] = 0.0;
+        rank = m + 1;
+    }
+
+    let error_trace: f64 = perm[rank..].iter().map(|&i| d[i].max(0.0)).sum();
+    let l = if rank < k { l.cols_range(0, rank) } else { l };
+    PivotedCholesky {
+        l,
+        pivots: perm,
+        error_trace,
+    }
+}
+
+/// Convenience wrapper over a dense matrix.
+pub fn pivoted_cholesky_dense(k_mat: &Mat, max_rank: usize, tol: f64) -> PivotedCholesky {
+    let n = k_mat.rows();
+    let diag: Vec<f64> = (0..n).map(|i| k_mat.get(i, i)).collect();
+    pivoted_cholesky(&diag, |i| k_mat.row(i).to_vec(), max_rank, tol)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rbf_kernel(n: usize, ls: f64, seed: u64) -> (Mat, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let xs: Vec<f64> = (0..n).map(|_| rng.uniform()).collect();
+        let k = Mat::from_fn(n, n, |i, j| {
+            let d = xs[i] - xs[j];
+            (-d * d / (2.0 * ls * ls)).exp()
+        });
+        (k, xs)
+    }
+
+    #[test]
+    fn full_rank_reconstructs_exactly() {
+        let n = 20;
+        let mut rng = Rng::new(1);
+        let g = Mat::from_fn(n, n, |_, _| rng.normal());
+        let mut a = g.t_matmul(&g);
+        a.add_diag(1.0);
+        let pc = pivoted_cholesky_dense(&a, n, 0.0);
+        let recon = pc.l.matmul_t(&pc.l);
+        assert!(recon.max_abs_diff(&a) < 1e-8);
+        assert!(pc.error_trace.abs() < 1e-8);
+    }
+
+    #[test]
+    fn error_trace_decreases_monotonically_in_rank() {
+        let (k, _) = rbf_kernel(60, 0.2, 2);
+        let mut prev = f64::INFINITY;
+        for rank in [1, 2, 4, 8, 16] {
+            let pc = pivoted_cholesky_dense(&k, rank, 0.0);
+            assert!(
+                pc.error_trace <= prev + 1e-12,
+                "rank {rank}: {} > {prev}",
+                pc.error_trace
+            );
+            prev = pc.error_trace;
+        }
+    }
+
+    #[test]
+    fn rbf_error_decays_exponentially() {
+        // Lemma 2/3: for (univariate) RBF kernels Tr(E) ≲ n exp(-bk)
+        let (k, _) = rbf_kernel(100, 0.3, 3);
+        let e2 = pivoted_cholesky_dense(&k, 2, 0.0).error_trace;
+        let e6 = pivoted_cholesky_dense(&k, 6, 0.0).error_trace;
+        let e10 = pivoted_cholesky_dense(&k, 10, 0.0).error_trace;
+        assert!(e6 < e2 * 1e-1, "e2={e2} e6={e6}");
+        assert!(e10 < e6, "e6={e6} e10={e10}");
+        assert!(e10 < 1e-6 * 100.0, "e10={e10}");
+    }
+
+    #[test]
+    fn error_matrix_is_psd() {
+        // E = K - L Lᵀ must be PSD: check via jittered Cholesky success
+        let (k, _) = rbf_kernel(40, 0.25, 4);
+        let pc = pivoted_cholesky_dense(&k, 5, 0.0);
+        let mut e = k.sub(&pc.l.matmul_t(&pc.l));
+        // tiny jitter to absorb roundoff
+        e.add_diag(1e-10);
+        assert!(crate::linalg::cholesky::Cholesky::new(&e).is_ok());
+    }
+
+    #[test]
+    fn error_trace_matches_actual_trace() {
+        let (k, _) = rbf_kernel(30, 0.4, 5);
+        let pc = pivoted_cholesky_dense(&k, 4, 0.0);
+        let recon = pc.l.matmul_t(&pc.l);
+        let actual: f64 = (0..30).map(|i| k.get(i, i) - recon.get(i, i)).sum();
+        assert!((pc.error_trace - actual).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pivots_pick_largest_diagonal_first() {
+        // diagonal matrix: pivot order must be descending diagonal
+        let n = 8;
+        let vals = [3.0, 9.0, 1.0, 7.0, 2.0, 8.0, 5.0, 4.0];
+        let k = Mat::from_fn(n, n, |i, j| if i == j { vals[i] } else { 0.0 });
+        let pc = pivoted_cholesky_dense(&k, 3, 0.0);
+        assert_eq!(&pc.pivots[..3], &[1, 5, 3]);
+    }
+
+    #[test]
+    fn early_stop_on_tolerance() {
+        // rank-2 matrix: Schur trace hits ~0 after 2 steps
+        let n = 25;
+        let mut rng = Rng::new(6);
+        let g = Mat::from_fn(n, 2, |_, _| rng.normal());
+        let k = g.matmul_t(&g);
+        let pc = pivoted_cholesky_dense(&k, 10, 1e-10);
+        assert!(pc.l.cols() <= 3, "rank found {}", pc.l.cols());
+        let recon = pc.l.matmul_t(&pc.l);
+        assert!(recon.max_abs_diff(&k) < 1e-6);
+    }
+
+    #[test]
+    fn blackbox_row_access_matches_dense() {
+        let (k, _) = rbf_kernel(35, 0.3, 7);
+        let diag: Vec<f64> = (0..35).map(|i| k.get(i, i)).collect();
+        let via_rows = pivoted_cholesky(&diag, |i| k.row(i).to_vec(), 6, 0.0);
+        let via_dense = pivoted_cholesky_dense(&k, 6, 0.0);
+        assert!(via_rows.l.max_abs_diff(&via_dense.l) < 1e-12);
+    }
+}

@@ -1,0 +1,209 @@
+//! Symmetric tridiagonal eigensolver (implicit QL with Wilkinson shifts —
+//! the classic EISPACK `tql2` routine), used to evaluate the stochastic
+//! Lanczos quadrature term `e₁ᵀ f(T̃) e₁ = Σᵢ (V₁ᵢ)² f(λᵢ)` (paper eq. 6,
+//! App. B: O(p²)–O(p³) for a p×p tridiagonal — negligible next to mBCG).
+
+/// Eigendecomposition of a symmetric tridiagonal matrix.
+pub struct SymTridiagEig {
+    /// eigenvalues in ascending order
+    pub eigenvalues: Vec<f64>,
+    /// first components of the (orthonormal) eigenvectors, aligned with
+    /// `eigenvalues` — all SLQ needs
+    pub first_components: Vec<f64>,
+}
+
+impl SymTridiagEig {
+    /// Decompose the tridiagonal with diagonal `diag` (len p) and
+    /// off-diagonal `offdiag` (len p−1).
+    pub fn new(diag: &[f64], offdiag: &[f64]) -> SymTridiagEig {
+        let n = diag.len();
+        assert!(n > 0, "empty tridiagonal");
+        assert_eq!(offdiag.len(), n - 1, "offdiag must have length p-1");
+        let mut d = diag.to_vec();
+        // e is padded: e[i] couples i and i+1; e[n-1] unused
+        let mut e = vec![0.0f64; n];
+        e[..n - 1].copy_from_slice(offdiag);
+
+        // We only need the first row of the eigenvector matrix. Initialise
+        // z = e₁ᵀ and apply every rotation to it (tql2 specialised to one row).
+        let mut z = vec![0.0f64; n];
+        z[0] = 1.0;
+
+        for l in 0..n {
+            let mut iter = 0;
+            loop {
+                // find small off-diagonal element
+                let mut m = l;
+                while m < n - 1 {
+                    let dd = d[m].abs() + d[m + 1].abs();
+                    if e[m].abs() <= f64::EPSILON * dd {
+                        break;
+                    }
+                    m += 1;
+                }
+                if m == l {
+                    break;
+                }
+                iter += 1;
+                assert!(iter < 50, "tql2 failed to converge");
+                // Wilkinson shift
+                let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+                let mut r = g.hypot(1.0);
+                g = d[m] - d[l] + e[l] / (g + if g >= 0.0 { r.abs() } else { -r.abs() });
+                let mut s = 1.0;
+                let mut c = 1.0;
+                let mut p = 0.0;
+                let mut underflow = false;
+                for i in (l..m).rev() {
+                    let mut f = s * e[i];
+                    let b = c * e[i];
+                    r = f.hypot(g);
+                    e[i + 1] = r;
+                    if r == 0.0 {
+                        // recover from underflow (NR tqli)
+                        d[i + 1] -= p;
+                        e[m] = 0.0;
+                        underflow = true;
+                        break;
+                    }
+                    s = f / r;
+                    c = g / r;
+                    g = d[i + 1] - p;
+                    r = (d[i] - g) * s + 2.0 * c * b;
+                    p = s * r;
+                    d[i + 1] = g + p;
+                    g = c * r - b;
+                    // apply rotation to the tracked first-row vector
+                    f = z[i + 1];
+                    z[i + 1] = s * z[i] + c * f;
+                    z[i] = c * z[i] - s * f;
+                }
+                if underflow {
+                    continue;
+                }
+                d[l] -= p;
+                e[l] = g;
+                e[m] = 0.0;
+            }
+        }
+
+        // sort ascending by eigenvalue, carrying first components
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.sort_by(|&a, &b| d[a].partial_cmp(&d[b]).unwrap());
+        let eigenvalues: Vec<f64> = idx.iter().map(|&i| d[i]).collect();
+        let first_components: Vec<f64> = idx.iter().map(|&i| z[i]).collect();
+        SymTridiagEig {
+            eigenvalues,
+            first_components,
+        }
+    }
+
+    /// `e₁ᵀ f(T) e₁ = Σᵢ (V₁ᵢ)² f(λᵢ)` — the SLQ quadrature rule.
+    pub fn quadrature(&self, f: impl Fn(f64) -> f64) -> f64 {
+        self.eigenvalues
+            .iter()
+            .zip(self.first_components.iter())
+            .map(|(&l, &w)| w * w * f(l))
+            .sum()
+    }
+
+    /// `e₁ᵀ log(T) e₁` with a floor to guard tiny/negative Ritz values that
+    /// arise from finite-precision CG coefficients.
+    pub fn log_quadrature(&self) -> f64 {
+        self.quadrature(|l| l.max(1e-300).ln())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Mat;
+    use crate::util::Rng;
+
+    /// 2x2 analytic check
+    #[test]
+    fn two_by_two_analytic() {
+        // T = [[2, 1], [1, 2]] -> eigenvalues 1, 3; eigvec components 1/√2
+        let eig = SymTridiagEig::new(&[2.0, 2.0], &[1.0]);
+        assert!((eig.eigenvalues[0] - 1.0).abs() < 1e-12);
+        assert!((eig.eigenvalues[1] - 3.0).abs() < 1e-12);
+        for &w in &eig.first_components {
+            assert!((w.abs() - std::f64::consts::FRAC_1_SQRT_2).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn diagonal_matrix_eigenvalues() {
+        let d = [3.0, 1.0, 2.0, 5.0];
+        let e = [0.0, 0.0, 0.0];
+        let eig = SymTridiagEig::new(&d, &e);
+        assert_eq!(eig.eigenvalues, vec![1.0, 2.0, 3.0, 5.0]);
+        // first eigenvector weight should be 1 on the eigenvalue 3 (index 0)
+        let w3 = eig
+            .eigenvalues
+            .iter()
+            .zip(&eig.first_components)
+            .find(|(l, _)| (**l - 3.0).abs() < 1e-12)
+            .unwrap()
+            .1;
+        assert!((w3.abs() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trace_and_det_preserved() {
+        let mut rng = Rng::new(1);
+        for trial in 0..20 {
+            let p = 2 + (trial % 9);
+            let diag: Vec<f64> = (0..p).map(|_| 2.0 + rng.uniform() * 3.0).collect();
+            let off: Vec<f64> = (0..p - 1).map(|_| rng.uniform() * 0.5).collect();
+            let eig = SymTridiagEig::new(&diag, &off);
+            let tr: f64 = diag.iter().sum();
+            let tr_e: f64 = eig.eigenvalues.iter().sum();
+            assert!((tr - tr_e).abs() < 1e-9 * tr.abs());
+            // weights sum to 1 (first row of orthonormal V has unit norm)
+            let wsum: f64 = eig.first_components.iter().map(|w| w * w).sum();
+            assert!((wsum - 1.0).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn quadrature_matches_dense_matrix_function() {
+        // e₁ᵀ log(T) e₁ computed via dense eigen-free reference:
+        // build T, compute log(T) via scaling of a spectral decomposition
+        // obtained from this very solver on a *full* eigenbasis check:
+        // instead validate against Cholesky logdet identity for f=log on a
+        // rank-respecting quadrature: Σ wᵢ² λᵢ must equal T[0,0].
+        let diag = [4.0, 3.0, 2.5, 5.0];
+        let off = [0.8, 0.3, 0.6];
+        let eig = SymTridiagEig::new(&diag, &off);
+        let t00 = eig.quadrature(|l| l);
+        assert!((t00 - 4.0).abs() < 1e-10, "e1' T e1 = {t00}");
+        // and Σ wᵢ² λᵢ² must equal (T²)[0,0] = d₀² + e₀²
+        let t2_00 = eig.quadrature(|l| l * l);
+        assert!((t2_00 - (4.0 * 4.0 + 0.8 * 0.8)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn logdet_of_full_lanczos_matches_cholesky() {
+        // full-rank Lanczos T has the same logdet as A
+        let n = 10;
+        let mut rng = Rng::new(2);
+        let g = Mat::from_fn(n, n, |_, _| rng.normal());
+        let mut a = g.t_matmul(&g);
+        a.add_diag(n as f64);
+        let z = rng.normal_vec(n);
+        let (t, _q) = crate::linalg::lanczos::lanczos_tridiag(|v| a.matvec(v), &z, n);
+        let eig = SymTridiagEig::new(&t.diag, &t.offdiag);
+        let ld: f64 = eig.eigenvalues.iter().map(|l| l.ln()).sum();
+        let want = crate::linalg::cholesky::Cholesky::new(&a).unwrap().logdet();
+        assert!((ld - want).abs() < 1e-7 * want.abs());
+    }
+
+    #[test]
+    fn single_element() {
+        let eig = SymTridiagEig::new(&[7.0], &[]);
+        assert_eq!(eig.eigenvalues, vec![7.0]);
+        assert!((eig.first_components[0].abs() - 1.0).abs() < 1e-15);
+        assert!((eig.log_quadrature() - 7.0f64.ln()).abs() < 1e-12);
+    }
+}

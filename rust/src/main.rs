@@ -1,0 +1,312 @@
+//! `bbmm` — CLI for the BBMM GP stack (leader entrypoint).
+//!
+//! ```text
+//! bbmm train   --dataset wine --model exact --engine bbmm --iters 50
+//! bbmm predict --dataset airfoil --model exact --engine bbmm
+//! bbmm serve   --dataset autompg --addr 127.0.0.1:7777
+//! bbmm artifact --name mll_rbf_n256_d4 [--dir artifacts]
+//! bbmm info
+//! ```
+
+use bbmm_gp::coordinator::{serve, BatchPolicy, DynamicBatcher, PredictFn, ServerConfig};
+use bbmm_gp::data::synthetic::{generate, spec_by_name};
+use bbmm_gp::gp::exact::{Engine, ExactGp};
+use bbmm_gp::gp::mll::{BbmmEngine, CholeskyEngine, InferenceEngine};
+use bbmm_gp::gp::predict::{mae, rmse};
+use bbmm_gp::gp::{DongEngine, SgprOp, SkiOp};
+use bbmm_gp::kernels::{DenseKernelOp, Matern52, Rbf};
+use bbmm_gp::runtime::{default_artifact_dir, Runtime};
+use bbmm_gp::tensor::Mat;
+use bbmm_gp::train::{TrainConfig, Trainer};
+use bbmm_gp::util::cli::Args;
+use bbmm_gp::util::{Rng, Timer};
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "train" => cmd_train(&args),
+        "predict" => cmd_predict(&args),
+        "serve" => cmd_serve(&args),
+        "run" => cmd_run(&args),
+        "artifact" => cmd_artifact(&args),
+        "info" => cmd_info(),
+        _ => print_help(),
+    }
+}
+
+/// Launcher: execute an experiment described by a config file
+/// (`bbmm run --config configs/exact_airfoil.toml [--mode train|predict]`).
+/// The config is translated to the canonical CLI argument set so every
+/// option has exactly one meaning across both entry points.
+fn cmd_run(args: &Args) {
+    let path = args
+        .get("config")
+        .expect("bbmm run requires --config <file>");
+    let cfg = bbmm_gp::config::ExperimentConfig::load(std::path::Path::new(path))
+        .unwrap_or_else(|e| panic!("{e}"));
+    println!("launch: {path} → {cfg:?}");
+    let mut argv: Vec<String> = vec![
+        "--dataset".into(),
+        cfg.dataset.clone(),
+        "--model".into(),
+        cfg.model.clone(),
+        "--engine".into(),
+        cfg.engine.clone(),
+        "--kernel".into(),
+        cfg.kernel.clone(),
+        "--iters".into(),
+        cfg.iters.to_string(),
+        "--lr".into(),
+        cfg.lr.to_string(),
+        "--probes".into(),
+        cfg.probes.to_string(),
+        "--cg-iters".into(),
+        cfg.cg_iters.to_string(),
+        "--precond-rank".into(),
+        cfg.precond_rank.to_string(),
+        "--seed".into(),
+        cfg.seed.to_string(),
+        "--inducing".into(),
+        cfg.inducing.to_string(),
+    ];
+    if let Some(n) = cfg.n_override {
+        argv.push("--n".into());
+        argv.push(n.to_string());
+    }
+    if let Some(csv) = &cfg.csv_path {
+        argv.push("--csv".into());
+        argv.push(csv.clone());
+    }
+    if cfg.verbose {
+        argv.push("--verbose".into());
+    }
+    let translated = Args::parse(argv);
+    match args.get_or("mode", "predict") {
+        "train" => cmd_train(&translated),
+        "serve" => cmd_serve(&translated),
+        _ => cmd_predict(&translated),
+    }
+}
+
+fn print_help() {
+    println!(
+        "bbmm — Blackbox Matrix-Matrix GP inference (GPyTorch reproduction)\n\
+         \n\
+         USAGE: bbmm <command> [options]\n\
+         \n\
+         COMMANDS:\n\
+           train     train GP hyperparameters on a dataset\n\
+           predict   train then evaluate test MAE/RMSE\n\
+           serve     train a model and serve predictions over TCP\n\
+           artifact  load + execute an AOT HLO artifact via PJRT\n\
+           info      environment / thread / artifact report\n\
+         \n\
+         COMMON OPTIONS:\n\
+           --dataset <name>    paper dataset name (default: wine)\n\
+           --model exact|sgpr|ski            (default: exact)\n\
+           --engine bbmm|cholesky|dong       (default: bbmm)\n\
+           --kernel rbf|matern52             (default: rbf)\n\
+           --iters N --lr F --probes T --cg-iters P --precond-rank K\n\
+           --seed S --n N (override dataset size)"
+    );
+}
+
+fn make_kernel(args: &Args) -> Box<dyn bbmm_gp::kernels::Kernel> {
+    match args.get_or("kernel", "rbf") {
+        "matern52" => Box::new(Matern52::new(0.5, 1.0)),
+        _ => Box::new(Rbf::new(0.5, 1.0)),
+    }
+}
+
+fn load_dataset(args: &Args) -> bbmm_gp::data::Dataset {
+    let name = args.get_or("dataset", "wine");
+    let seed = args.u64_or("seed", 0);
+    if let Some(path) = args.get("csv") {
+        return bbmm_gp::data::loader::load_csv(std::path::Path::new(path), name, seed)
+            .expect("failed to load csv");
+    }
+    let mut spec = spec_by_name(name).unwrap_or_else(|| {
+        eprintln!("unknown dataset {name}; using wine");
+        spec_by_name("wine").unwrap()
+    });
+    if let Some(n) = args.get("n") {
+        spec.n = n.parse().expect("--n must be an integer");
+    }
+    generate(&spec, seed)
+}
+
+fn make_engine(args: &Args) -> Box<dyn InferenceEngine> {
+    let p = args.usize_or("cg-iters", 20);
+    let t = args.usize_or("probes", 10);
+    let k = args.usize_or("precond-rank", 5);
+    let seed = args.u64_or("seed", 0);
+    match args.get_or("engine", "bbmm") {
+        "cholesky" => Box::new(CholeskyEngine),
+        "dong" => Box::new(DongEngine::new(p, t, seed)),
+        _ => Box::new(BbmmEngine::new(p, t, k, seed)),
+    }
+}
+
+/// Train the requested model; returns (raw params, final nmll, seconds).
+fn train_model(args: &Args, ds: &bbmm_gp::data::Dataset) -> (Vec<f64>, f64, f64) {
+    let mut engine = make_engine(args);
+    let config = TrainConfig {
+        iters: args.usize_or("iters", 30),
+        lr: args.f64_or("lr", 0.1),
+        verbose: args.flag("verbose"),
+        ..Default::default()
+    };
+    let timer = Timer::start();
+    let model = args.get_or("model", "exact").to_string();
+    let y = ds.y_train.clone();
+    let (params, nmll) = match model.as_str() {
+        "sgpr" => {
+            let m = args.usize_or("inducing", 300).min(ds.n_train());
+            let mut rng = Rng::new(args.u64_or("seed", 0) + 1);
+            let mut u = Mat::zeros(m, ds.dim());
+            for r in 0..m {
+                let src = rng.below(ds.n_train());
+                u.row_mut(r).copy_from_slice(ds.x_train.row(src));
+            }
+            let mut op = SgprOp::new(ds.x_train.clone(), u, make_kernel(args), 0.1);
+            let mut params = op.params();
+            let mut trainer = Trainer::new(config);
+            let best = trainer.run(&mut params, |raw| {
+                op.set_params(raw);
+                engine.mll_and_grad(&op, &y)
+            });
+            (params, best)
+        }
+        "ski" => {
+            let m = args.usize_or("inducing", 2000);
+            let z: Vec<f64> = (0..ds.n_train()).map(|i| ds.x_train.row(i)[0]).collect();
+            let mut op = SkiOp::new(z, m, make_kernel(args), 0.1);
+            let mut params = op.params();
+            let mut trainer = Trainer::new(config);
+            let best = trainer.run(&mut params, |raw| {
+                op.set_params(raw);
+                engine.mll_and_grad(&op, &y)
+            });
+            (params, best)
+        }
+        _ => {
+            let mut op = DenseKernelOp::new(ds.x_train.clone(), make_kernel(args), 0.1);
+            let mut params = op.params();
+            let mut trainer = Trainer::new(config);
+            let best = trainer.run(&mut params, |raw| {
+                op.set_params(raw);
+                engine.mll_and_grad(&op, &y)
+            });
+            (params, best)
+        }
+    };
+    (params, nmll, timer.elapsed_s())
+}
+
+fn cmd_train(args: &Args) {
+    let ds = load_dataset(args);
+    println!(
+        "dataset {} — n_train={} d={} model={} engine={}",
+        ds.name,
+        ds.n_train(),
+        ds.dim(),
+        args.get_or("model", "exact"),
+        args.get_or("engine", "bbmm")
+    );
+    let (params, nmll, secs) = train_model(args, &ds);
+    println!("trained in {secs:.2}s — final nmll {nmll:.4}");
+    println!("raw parameters: {params:?}");
+}
+
+fn cmd_predict(args: &Args) {
+    let ds = load_dataset(args);
+    let (params, nmll, secs) = train_model(args, &ds);
+    // evaluate with an exact-GP predictor on the learned hyperparameters
+    let engine = match args.get_or("engine", "bbmm") {
+        "cholesky" => Engine::Cholesky,
+        _ => Engine::Bbmm(BbmmEngine::new(
+            args.usize_or("cg-iters", 20).max(50),
+            args.usize_or("probes", 10),
+            args.usize_or("precond-rank", 5),
+            args.u64_or("seed", 0),
+        )),
+    };
+    let mut kernel = make_kernel(args);
+    let nk = kernel.n_params();
+    kernel.set_params(&params[..nk]);
+    let noise = params[nk].exp();
+    let mut gp = ExactGp::new(ds.x_train.clone(), ds.y_train.clone(), kernel, noise, engine);
+    let pred = gp.predict(&ds.x_test);
+    println!(
+        "dataset {} nmll {:.4} ({secs:.2}s train) test MAE {:.4} RMSE {:.4}",
+        ds.name,
+        nmll,
+        mae(&pred.mean, &ds.y_test),
+        rmse(&pred.mean, &ds.y_test)
+    );
+}
+
+fn cmd_serve(args: &Args) {
+    let ds = load_dataset(args);
+    let (params, _nmll, _secs) = train_model(args, &ds);
+    let mut kernel = make_kernel(args);
+    let nk = kernel.n_params();
+    kernel.set_params(&params[..nk]);
+    let noise = params[nk].exp();
+    let dim = ds.dim();
+    let gp = std::sync::Mutex::new(ExactGp::new(
+        ds.x_train.clone(),
+        ds.y_train.clone(),
+        kernel,
+        noise,
+        Engine::Bbmm(BbmmEngine::default()),
+    ));
+    let predict: PredictFn = Box::new(move |xs: &Mat| gp.lock().unwrap().predict(xs));
+    let batcher = Arc::new(DynamicBatcher::new(
+        dim,
+        BatchPolicy {
+            max_batch: args.usize_or("max-batch", 64),
+            max_wait: std::time::Duration::from_millis(args.u64_or("max-wait-ms", 2)),
+        },
+        predict,
+    ));
+    let config = ServerConfig {
+        addr: args.get_or("addr", "127.0.0.1:7777").to_string(),
+        stop: Arc::new(AtomicBool::new(false)),
+    };
+    println!("serving {dim}-feature GP predictions…");
+    serve(config, batcher, |addr| println!("listening on {addr}")).expect("server failed");
+}
+
+fn cmd_artifact(args: &Args) {
+    let dir = args
+        .get("dir")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(default_artifact_dir);
+    let mut rt = Runtime::cpu(&dir).expect("pjrt init");
+    match args.get("name") {
+        None => println!("available artifacts in {dir:?}: {:?}", rt.available()),
+        Some(name) => {
+            rt.load(name).expect("load artifact");
+            println!("loaded + compiled {name} on {}", rt.platform());
+            println!("run `cargo run --release --example quickstart` for an end-to-end execution");
+        }
+    }
+}
+
+fn cmd_info() {
+    println!("bbmm-gp — BBMM reproduction (GPyTorch, NeurIPS 2018)");
+    println!("threads: {}", bbmm_gp::util::par::num_threads());
+    let dir = default_artifact_dir();
+    match Runtime::cpu(&dir) {
+        Ok(rt) => println!(
+            "pjrt platform: {} — artifacts in {dir:?}: {:?}",
+            rt.platform(),
+            rt.available()
+        ),
+        Err(e) => println!("pjrt unavailable: {e}"),
+    }
+}

@@ -1,0 +1,508 @@
+//! Row-major dense matrix with a parallel, cache-blocked GEMM.
+
+use super::scalar::Scalar;
+use crate::util::par;
+
+/// Row-major dense matrix over a [`Scalar`] (f32 or f64).
+#[derive(Clone, PartialEq)]
+pub struct Mat<T: Scalar = f64> {
+    rows: usize,
+    cols: usize,
+    data: Vec<T>,
+}
+
+impl<T: Scalar> std::fmt::Debug for Mat<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "Mat<{}x{}> [", self.rows, self.cols)?;
+        let show_r = self.rows.min(6);
+        let show_c = self.cols.min(8);
+        for r in 0..show_r {
+            write!(f, "  ")?;
+            for c in 0..show_c {
+                write!(f, "{:10.4} ", self.get(r, c).to_f64())?;
+            }
+            writeln!(f, "{}", if self.cols > show_c { "…" } else { "" })?;
+        }
+        if self.rows > show_r {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl<T: Scalar> Mat<T> {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat {
+            rows,
+            cols,
+            data: vec![T::ZERO; rows * cols],
+        }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.set(i, i, T::ONE);
+        }
+        m
+    }
+
+    /// Wrap an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<T>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer size mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// Build from a function of (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> T) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Column vector from a slice.
+    pub fn col_from_slice(v: &[T]) -> Self {
+        Mat::from_vec(v.len(), 1, v.to_vec())
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    #[inline]
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> T {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: T) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Immutable view of row `r`.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[T] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Mutable view of row `r`.
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [T] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Copy of column `c`.
+    pub fn col(&self, c: usize) -> Vec<T> {
+        (0..self.rows).map(|r| self.get(r, c)).collect()
+    }
+
+    /// Overwrite column `c`.
+    pub fn set_col(&mut self, c: usize, v: &[T]) {
+        assert_eq!(v.len(), self.rows);
+        for r in 0..self.rows {
+            self.set(r, c, v[r]);
+        }
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Mat<T> {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        // blocked transpose for cache friendliness
+        const B: usize = 32;
+        for rb in (0..self.rows).step_by(B) {
+            for cb in (0..self.cols).step_by(B) {
+                for r in rb..(rb + B).min(self.rows) {
+                    for c in cb..(cb + B).min(self.cols) {
+                        out.data[c * self.rows + r] = self.data[r * self.cols + c];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Matrix product `self · other` — the BBMM hot path.
+    ///
+    /// Parallel over row chunks; inner loop is ikj (row-major streaming)
+    /// which autovectorizes well, with k-blocking for L2 residency.
+    pub fn matmul(&self, other: &Mat<T>) -> Mat<T> {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        const KB: usize = 256;
+        let a = &self.data;
+        let b = &other.data;
+        par::parallel_rows_mut(&mut out.data, m, n, |row_lo, chunk| {
+            for kb in (0..k).step_by(KB) {
+                let kend = (kb + KB).min(k);
+                for (ri, orow) in chunk.chunks_mut(n).enumerate() {
+                    let r = row_lo + ri;
+                    let arow = &a[r * k..(r + 1) * k];
+                    for kk in kb..kend {
+                        let aval = arow[kk];
+                        if aval == T::ZERO {
+                            continue;
+                        }
+                        let brow = &b[kk * n..(kk + 1) * n];
+                        for j in 0..n {
+                            orow[j] += aval * brow[j];
+                        }
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    /// `selfᵀ · other` without materialising the transpose.
+    pub fn t_matmul(&self, other: &Mat<T>) -> Mat<T> {
+        assert_eq!(self.rows, other.rows, "t_matmul shape mismatch");
+        let (k, m, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        // out[i,j] = sum_r a[r,i] * b[r,j]; accumulate rank-1 updates.
+        // Parallelise by splitting over r with per-thread accumulators.
+        let nt = par::num_threads().min(k).max(1);
+        if nt <= 1 || m * n < 1024 {
+            for r in 0..k {
+                let arow = self.row(r);
+                let brow = other.row(r);
+                for i in 0..m {
+                    let av = arow[i];
+                    if av == T::ZERO {
+                        continue;
+                    }
+                    let orow = &mut out.data[i * n..(i + 1) * n];
+                    for j in 0..n {
+                        orow[j] += av * brow[j];
+                    }
+                }
+            }
+            return out;
+        }
+        let chunk = k.div_ceil(nt);
+        let partials: Vec<Mat<T>> = std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for t in 0..nt {
+                let lo = t * chunk;
+                let hi = ((t + 1) * chunk).min(k);
+                if lo >= hi {
+                    break;
+                }
+                let a = &self;
+                let b = &other;
+                handles.push(s.spawn(move || {
+                    let mut acc = Mat::zeros(m, n);
+                    for r in lo..hi {
+                        let arow = a.row(r);
+                        let brow = b.row(r);
+                        for i in 0..m {
+                            let av = arow[i];
+                            if av == T::ZERO {
+                                continue;
+                            }
+                            let orow = &mut acc.data[i * n..(i + 1) * n];
+                            for j in 0..n {
+                                orow[j] += av * brow[j];
+                            }
+                        }
+                    }
+                    acc
+                }));
+            }
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for p in partials {
+            out.add_assign(&p);
+        }
+        out
+    }
+
+    /// `self · otherᵀ` without materialising the transpose.
+    pub fn matmul_t(&self, other: &Mat<T>) -> Mat<T> {
+        assert_eq!(self.cols, other.cols, "matmul_t shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.rows);
+        let mut out = Mat::zeros(m, n);
+        let a = &self.data;
+        let b = &other.data;
+        par::parallel_rows_mut(&mut out.data, m, n, |row_lo, chunk| {
+            for (ri, orow) in chunk.chunks_mut(n).enumerate() {
+                let r = row_lo + ri;
+                let arow = &a[r * k..(r + 1) * k];
+                for j in 0..n {
+                    let brow = &b[j * k..(j + 1) * k];
+                    let mut s = T::ZERO;
+                    for kk in 0..k {
+                        s += arow[kk] * brow[kk];
+                    }
+                    orow[j] = s;
+                }
+            }
+        });
+        out
+    }
+
+    /// Matrix–vector product.
+    pub fn matvec(&self, v: &[T]) -> Vec<T> {
+        assert_eq!(self.cols, v.len(), "matvec shape mismatch");
+        let mut out = vec![T::ZERO; self.rows];
+        par::parallel_rows_mut(&mut out, self.rows, 1, |row_lo, chunk| {
+            for (i, o) in chunk.iter_mut().enumerate() {
+                let row = self.row(row_lo + i);
+                let mut s = T::ZERO;
+                for c in 0..self.cols {
+                    s += row[c] * v[c];
+                }
+                *o = s;
+            }
+        });
+        out
+    }
+
+    /// self += other
+    pub fn add_assign(&mut self, other: &Mat<T>) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += *b;
+        }
+    }
+
+    /// self -= other
+    pub fn sub_assign(&mut self, other: &Mat<T>) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a -= *b;
+        }
+    }
+
+    /// self *= alpha
+    pub fn scale_assign(&mut self, alpha: T) {
+        for a in self.data.iter_mut() {
+            *a *= alpha;
+        }
+    }
+
+    /// self + other
+    pub fn add(&self, other: &Mat<T>) -> Mat<T> {
+        let mut out = self.clone();
+        out.add_assign(other);
+        out
+    }
+
+    /// self - other
+    pub fn sub(&self, other: &Mat<T>) -> Mat<T> {
+        let mut out = self.clone();
+        out.sub_assign(other);
+        out
+    }
+
+    /// Add `alpha` to the diagonal in place (the paper's `K̂ = K + σ²I`).
+    pub fn add_diag(&mut self, alpha: T) {
+        let n = self.rows.min(self.cols);
+        for i in 0..n {
+            self.data[i * self.cols + i] += alpha;
+        }
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data
+            .iter()
+            .map(|v| v.to_f64() * v.to_f64())
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Max |entry| difference against another matrix.
+    pub fn max_abs_diff(&self, other: &Mat<T>) -> f64 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a.to_f64() - b.to_f64()).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Convert precision.
+    pub fn cast<U: Scalar>(&self) -> Mat<U> {
+        Mat::from_vec(
+            self.rows,
+            self.cols,
+            self.data.iter().map(|v| U::from_f64(v.to_f64())).collect(),
+        )
+    }
+
+    /// Columns `lo..hi` as a new matrix.
+    pub fn cols_range(&self, lo: usize, hi: usize) -> Mat<T> {
+        assert!(lo <= hi && hi <= self.cols);
+        Mat::from_fn(self.rows, hi - lo, |r, c| self.get(r, lo + c))
+    }
+
+    /// Symmetrise in place: self = (self + selfᵀ)/2 (guards drift in kernels).
+    pub fn symmetrize(&mut self) {
+        assert_eq!(self.rows, self.cols);
+        let half = T::from_f64(0.5);
+        for r in 0..self.rows {
+            for c in (r + 1)..self.cols {
+                let v = (self.get(r, c) + self.get(c, r)) * half;
+                self.set(r, c, v);
+                self.set(c, r, v);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+        let mut out = Mat::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut s = 0.0;
+                for k in 0..a.cols() {
+                    s += a.get(i, k) * b.get(k, j);
+                }
+                out.set(i, j, s);
+            }
+        }
+        out
+    }
+
+    fn rand_mat(r: usize, c: usize, seed: u64) -> Mat {
+        let mut rng = crate::util::Rng::new(seed);
+        Mat::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        for &(m, k, n) in &[(1, 1, 1), (3, 4, 5), (17, 9, 23), (64, 64, 64), (130, 70, 33)] {
+            let a = rand_mat(m, k, 1);
+            let b = rand_mat(k, n, 2);
+            let got = a.matmul(&b);
+            let want = naive_matmul(&a, &b);
+            assert!(got.max_abs_diff(&want) < 1e-10, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn t_matmul_matches_explicit_transpose() {
+        let a = rand_mat(40, 7, 3);
+        let b = rand_mat(40, 11, 4);
+        let got = a.t_matmul(&b);
+        let want = naive_matmul(&a.transpose(), &b);
+        assert!(got.max_abs_diff(&want) < 1e-10);
+    }
+
+    #[test]
+    fn t_matmul_parallel_path() {
+        // large enough to trigger the threaded branch
+        let a = rand_mat(300, 50, 5);
+        let b = rand_mat(300, 60, 6);
+        let got = a.t_matmul(&b);
+        let want = naive_matmul(&a.transpose(), &b);
+        assert!(got.max_abs_diff(&want) < 1e-9);
+    }
+
+    #[test]
+    fn matmul_t_matches() {
+        let a = rand_mat(13, 21, 7);
+        let b = rand_mat(17, 21, 8);
+        let got = a.matmul_t(&b);
+        let want = naive_matmul(&a, &b.transpose());
+        assert!(got.max_abs_diff(&want) < 1e-10);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let a = rand_mat(30, 20, 9);
+        let v: Vec<f64> = (0..20).map(|i| i as f64 * 0.1 - 1.0).collect();
+        let got = a.matvec(&v);
+        let want = a.matmul(&Mat::col_from_slice(&v));
+        for i in 0..30 {
+            assert!((got[i] - want.get(i, 0)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn eye_is_identity_under_matmul() {
+        let a = rand_mat(15, 15, 10);
+        let i = Mat::eye(15);
+        assert!(a.matmul(&i).max_abs_diff(&a) < 1e-14);
+        assert!(i.matmul(&a).max_abs_diff(&a) < 1e-14);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = rand_mat(9, 14, 11);
+        assert!(a.transpose().transpose().max_abs_diff(&a) == 0.0);
+    }
+
+    #[test]
+    fn add_diag_and_symmetrize() {
+        let mut a = rand_mat(6, 6, 12);
+        let before = a.get(2, 2);
+        a.add_diag(0.5);
+        assert!((a.get(2, 2) - before - 0.5).abs() < 1e-15);
+        a.symmetrize();
+        for r in 0..6 {
+            for c in 0..6 {
+                assert_eq!(a.get(r, c), a.get(c, r));
+            }
+        }
+    }
+
+    #[test]
+    fn f32_matmul_works() {
+        let a: Mat<f32> = rand_mat(20, 20, 13).cast();
+        let b: Mat<f32> = rand_mat(20, 20, 14).cast();
+        let got = a.matmul(&b);
+        let want64 = rand_mat(20, 20, 13).matmul(&rand_mat(20, 20, 14));
+        assert!(got.cast::<f64>().max_abs_diff(&want64) < 1e-3);
+    }
+
+    #[test]
+    fn cols_range_extracts() {
+        let a = rand_mat(5, 8, 15);
+        let sub = a.cols_range(2, 5);
+        assert_eq!(sub.shape(), (5, 3));
+        for r in 0..5 {
+            for c in 0..3 {
+                assert_eq!(sub.get(r, c), a.get(r, c + 2));
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul shape mismatch")]
+    fn matmul_shape_mismatch_panics() {
+        let a = Mat::<f64>::zeros(2, 3);
+        let b = Mat::<f64>::zeros(2, 3);
+        a.matmul(&b);
+    }
+}

@@ -1,0 +1,67 @@
+//! Dense-matrix substrate.
+//!
+//! Row-major matrices generic over [`Scalar`] (f32 / f64). The only hot
+//! routine that matters for BBMM is [`Mat::matmul`] — a cache-blocked,
+//! thread-parallel GEMM — because every mBCG iteration is one kernel
+//! mat-mul plus O(nt) vector work (paper App. B).
+
+pub mod mat;
+pub mod scalar;
+
+pub use mat::Mat;
+pub use scalar::Scalar;
+
+/// Column-stacked vector helpers over flat `Vec<f64>`s.
+pub mod vecops {
+    /// dot product
+    #[inline]
+    pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut s = 0.0;
+        for i in 0..a.len() {
+            s += a[i] * b[i];
+        }
+        s
+    }
+
+    /// y += alpha * x
+    #[inline]
+    pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), y.len());
+        for i in 0..x.len() {
+            y[i] += alpha * x[i];
+        }
+    }
+
+    /// Euclidean norm.
+    #[inline]
+    pub fn norm2(a: &[f64]) -> f64 {
+        dot(a, a).sqrt()
+    }
+
+    /// elementwise scale in place
+    #[inline]
+    pub fn scale(alpha: f64, x: &mut [f64]) {
+        for v in x.iter_mut() {
+            *v *= alpha;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::vecops::*;
+
+    #[test]
+    fn vecops_basics() {
+        let a = vec![1.0, 2.0, 3.0];
+        let mut b = vec![1.0, 1.0, 1.0];
+        assert_eq!(dot(&a, &b), 6.0);
+        axpy(2.0, &a, &mut b);
+        assert_eq!(b, vec![3.0, 5.0, 7.0]);
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-15);
+        let mut c = vec![1.0, -2.0];
+        scale(3.0, &mut c);
+        assert_eq!(c, vec![3.0, -6.0]);
+    }
+}

@@ -1,0 +1,149 @@
+//! Minimal floating-point abstraction so the numerical core (GEMM, Cholesky,
+//! CG, mBCG) can run in both f32 and f64 — Figure 1 of the paper compares
+//! solve error across precisions, so the precision must be a parameter.
+
+use std::fmt::{Debug, Display};
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, DivAssign, Mul, MulAssign, Neg, Sub, SubAssign};
+
+/// Floating-point scalar with exactly the operations the BBMM core needs.
+pub trait Scalar:
+    Copy
+    + PartialOrd
+    + Debug
+    + Display
+    + Default
+    + Send
+    + Sync
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Div<Output = Self>
+    + Neg<Output = Self>
+    + AddAssign
+    + SubAssign
+    + MulAssign
+    + DivAssign
+    + Sum
+    + 'static
+{
+    const ZERO: Self;
+    const ONE: Self;
+    /// Machine epsilon for this precision.
+    const EPS: Self;
+
+    fn from_f64(v: f64) -> Self;
+    fn to_f64(self) -> f64;
+    fn abs(self) -> Self;
+    fn sqrt(self) -> Self;
+    fn ln(self) -> Self;
+    fn exp(self) -> Self;
+    fn max_s(self, other: Self) -> Self;
+    fn min_s(self, other: Self) -> Self;
+    fn is_finite(self) -> bool;
+}
+
+impl Scalar for f64 {
+    const ZERO: f64 = 0.0;
+    const ONE: f64 = 1.0;
+    const EPS: f64 = f64::EPSILON;
+
+    #[inline]
+    fn from_f64(v: f64) -> f64 {
+        v
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self
+    }
+    #[inline]
+    fn abs(self) -> f64 {
+        f64::abs(self)
+    }
+    #[inline]
+    fn sqrt(self) -> f64 {
+        f64::sqrt(self)
+    }
+    #[inline]
+    fn ln(self) -> f64 {
+        f64::ln(self)
+    }
+    #[inline]
+    fn exp(self) -> f64 {
+        f64::exp(self)
+    }
+    #[inline]
+    fn max_s(self, other: f64) -> f64 {
+        f64::max(self, other)
+    }
+    #[inline]
+    fn min_s(self, other: f64) -> f64 {
+        f64::min(self, other)
+    }
+    #[inline]
+    fn is_finite(self) -> bool {
+        f64::is_finite(self)
+    }
+}
+
+impl Scalar for f32 {
+    const ZERO: f32 = 0.0;
+    const ONE: f32 = 1.0;
+    const EPS: f32 = f32::EPSILON;
+
+    #[inline]
+    fn from_f64(v: f64) -> f32 {
+        v as f32
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    #[inline]
+    fn abs(self) -> f32 {
+        f32::abs(self)
+    }
+    #[inline]
+    fn sqrt(self) -> f32 {
+        f32::sqrt(self)
+    }
+    #[inline]
+    fn ln(self) -> f32 {
+        f32::ln(self)
+    }
+    #[inline]
+    fn exp(self) -> f32 {
+        f32::exp(self)
+    }
+    #[inline]
+    fn max_s(self, other: f32) -> f32 {
+        f32::max(self, other)
+    }
+    #[inline]
+    fn min_s(self, other: f32) -> f32 {
+        f32::min(self, other)
+    }
+    #[inline]
+    fn is_finite(self) -> bool {
+        f32::is_finite(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip<T: Scalar>() {
+        assert_eq!(T::from_f64(2.0).to_f64(), 2.0);
+        assert_eq!(T::from_f64(4.0).sqrt().to_f64(), 2.0);
+        assert!((T::from_f64(1.0).exp().to_f64() - std::f64::consts::E).abs() < 1e-6);
+        assert!(T::from_f64(-3.0).abs().to_f64() == 3.0);
+        assert!(T::from_f64(f64::NAN).is_finite() == false);
+    }
+
+    #[test]
+    fn scalar_f32_f64() {
+        roundtrip::<f32>();
+        roundtrip::<f64>();
+    }
+}

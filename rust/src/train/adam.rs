@@ -1,0 +1,103 @@
+//! Adam optimiser (Kingma & Ba) on raw (log-space) hyperparameters — the
+//! optimiser used by every experiment in the paper (§6: "All methods use the
+//! same optimizer (Adam) with identical hyperparameters").
+
+/// Adam state.
+pub struct Adam {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    m: Vec<f64>,
+    v: Vec<f64>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(n_params: usize, lr: f64) -> Self {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            m: vec![0.0; n_params],
+            v: vec![0.0; n_params],
+            t: 0,
+        }
+    }
+
+    /// One update: params ← params − lr·m̂/(√v̂ + ε).
+    pub fn step(&mut self, params: &mut [f64], grad: &[f64]) {
+        assert_eq!(params.len(), self.m.len());
+        assert_eq!(grad.len(), self.m.len());
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..params.len() {
+            let g = grad[i];
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * g;
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * g * g;
+            let mhat = self.m[i] / b1t;
+            let vhat = self.v[i] / b2t;
+            params[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.m.iter_mut().for_each(|v| *v = 0.0);
+        self.v.iter_mut().for_each(|v| *v = 0.0);
+        self.t = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimises_quadratic() {
+        // f(x) = (x₀−3)² + 2(x₁+1)²
+        let mut x = vec![0.0, 0.0];
+        let mut opt = Adam::new(2, 0.1);
+        for _ in 0..500 {
+            let g = vec![2.0 * (x[0] - 3.0), 4.0 * (x[1] + 1.0)];
+            opt.step(&mut x, &g);
+        }
+        assert!((x[0] - 3.0).abs() < 1e-2, "x0={}", x[0]);
+        assert!((x[1] + 1.0).abs() < 1e-2, "x1={}", x[1]);
+    }
+
+    #[test]
+    fn first_step_magnitude_is_lr() {
+        // Adam's first step has magnitude ≈ lr regardless of gradient scale
+        let mut x = vec![0.0];
+        let mut opt = Adam::new(1, 0.05);
+        opt.step(&mut x, &[1234.5]);
+        assert!((x[0].abs() - 0.05).abs() < 1e-6);
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut opt = Adam::new(1, 0.1);
+        let mut x = vec![0.0];
+        opt.step(&mut x, &[1.0]);
+        opt.reset();
+        assert_eq!(opt.t, 0);
+        let mut y = vec![0.0];
+        opt.step(&mut y, &[1.0]);
+        assert!((y[0] + 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn noisy_gradients_still_converge() {
+        // BBMM gradients are stochastic — Adam must tolerate that
+        let mut rng = crate::util::Rng::new(1);
+        let mut x = vec![5.0];
+        let mut opt = Adam::new(1, 0.05);
+        for _ in 0..2000 {
+            let g = 2.0 * (x[0] - 1.0) + 0.5 * rng.normal();
+            opt.step(&mut x, &[g]);
+        }
+        assert!((x[0] - 1.0).abs() < 0.2, "x={}", x[0]);
+    }
+}

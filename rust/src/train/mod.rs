@@ -1,0 +1,8 @@
+//! Hyperparameter optimisation: Adam (the paper's optimiser, §6) plus the
+//! training loop driving any [`crate::gp::InferenceEngine`].
+
+pub mod adam;
+pub mod trainer;
+
+pub use adam::Adam;
+pub use trainer::{TrainConfig, TrainRecord, Trainer};

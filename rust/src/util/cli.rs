@@ -1,0 +1,123 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// positional arguments in order
+    pub positional: Vec<String>,
+    /// --key value / --key=value pairs (last occurrence wins)
+    pub options: BTreeMap<String, String>,
+    /// bare --flags
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|nxt| !nxt.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.options.insert(stripped.to_string(), v);
+                } else {
+                    args.flags.push(stripped.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Typed option access with a default; panics with a clear message on a
+    /// malformed value (CLI misuse should fail loudly).
+    pub fn get_parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        match self.get(name) {
+            None => default,
+            Some(s) => s
+                .parse::<T>()
+                .unwrap_or_else(|_| panic!("--{name}: cannot parse {s:?}")),
+        }
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get_parse_or(name, default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get_parse_or(name, default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get_parse_or(name, default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_positional_options_flags() {
+        let a = parse(&["train", "--n", "100", "--verbose", "--k=5", "extra"]);
+        assert_eq!(a.positional, vec!["train", "extra"]);
+        assert_eq!(a.get("n"), Some("100"));
+        assert_eq!(a.get("k"), Some("5"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn typed_access() {
+        let a = parse(&["--n", "100", "--lr", "0.1"]);
+        assert_eq!(a.usize_or("n", 1), 100);
+        assert_eq!(a.f64_or("lr", 0.0), 0.1);
+        assert_eq!(a.usize_or("missing", 7), 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot parse")]
+    fn malformed_value_panics() {
+        let a = parse(&["--n", "abc"]);
+        a.usize_or("n", 1);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["--verbose"]);
+        assert!(a.flag("verbose"));
+    }
+}

@@ -1,0 +1,88 @@
+//! Branch-free vectorizable math kernels for the fused kernel mat-mul hot
+//! path. `exp` via libm is a scalar call (~20–40 ns); the polynomial
+//! version below autovectorizes under AVX-512 and is accurate to ~2e-10
+//! relative over the range kernel evaluations use.
+
+/// Fast `e^x` for x ∈ [−746, 710) (clamped outside), max relative error
+/// ≈ 2e-10 — far below the Monte-Carlo noise floor of BBMM's estimators.
+///
+/// Cephes-style: x = k·ln2 + r with r ∈ [−ln2/2, ln2/2]; e^r by a degree-7
+/// Taylor/minimax polynomial; scale by 2^k through exponent bits.
+#[inline]
+pub fn fast_exp(x: f64) -> f64 {
+    const LOG2E: f64 = std::f64::consts::LOG2_E;
+    const LN2_HI: f64 = 6.93147180369123816490e-01;
+    const LN2_LO: f64 = 1.90821492927058770002e-10;
+    // clamp to the *normal* range (2^k stays a normal float; anything
+    // below −708 is ≤ 3e-308 ≈ 0 for every kernel purpose)
+    let x = x.clamp(-708.0, 709.0);
+    let k = (x * LOG2E + if x >= 0.0 { 0.5 } else { -0.5 }) as i64;
+    let kf = k as f64;
+    // r = x − k·ln2, in two pieces for accuracy
+    let r = (x - kf * LN2_HI) - kf * LN2_LO;
+    // e^r, degree-9 polynomial (Horner) — |r| ≤ ln2/2 ≈ 0.347,
+    // truncation error ≤ r¹⁰/10! ≈ 7e-12
+    let p = 1.0
+        + r * (1.0
+            + r * (0.5
+                + r * (1.666666666666666574e-1
+                    + r * (4.166666666666452278e-2
+                        + r * (8.333333333331493192e-3
+                            + r * (1.388888889423061626e-3
+                                + r * (1.984126984200918683e-4
+                                    + r * (2.480158729876093e-5
+                                        + r * 2.755731922398589e-6))))))));
+    // scale by 2^k via exponent bits
+    let bits = ((k + 1023) as u64) << 52;
+    p * f64::from_bits(bits)
+}
+
+/// Apply `out[i] = s · e^{−a·x[i]}` over a slice — the RBF tile epilogue.
+#[inline]
+pub fn exp_neg_scaled(x: &[f64], a: f64, s: f64, out: &mut [f64]) {
+    debug_assert_eq!(x.len(), out.len());
+    for i in 0..x.len() {
+        out[i] = s * fast_exp(-a * x[i]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_libm_over_kernel_range() {
+        // kernel args are ≤ 0 (−r²/2ℓ² or −√5r/ℓ); sweep densely
+        let mut max_rel = 0.0f64;
+        let mut x = -60.0;
+        while x <= 1.0 {
+            let got = fast_exp(x);
+            let want = x.exp();
+            let rel = if want > 0.0 { (got - want).abs() / want } else { 0.0 };
+            max_rel = max_rel.max(rel);
+            x += 0.00037;
+        }
+        assert!(max_rel < 5e-10, "max rel err {max_rel}");
+    }
+
+    #[test]
+    fn wide_range_and_clamping() {
+        assert!((fast_exp(0.0) - 1.0).abs() < 1e-12);
+        assert!((fast_exp(1.0) - std::f64::consts::E).abs() < 1e-9);
+        assert!(fast_exp(-800.0) >= 0.0);
+        assert!(fast_exp(-800.0) < 1e-300);
+        assert!(fast_exp(1000.0).is_finite()); // clamped at 709
+        let big = fast_exp(700.0);
+        assert!((big.ln() - 700.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn exp_neg_scaled_slice() {
+        let x = [0.0, 1.0, 4.0];
+        let mut out = [0.0; 3];
+        exp_neg_scaled(&x, 0.5, 2.0, &mut out);
+        assert!((out[0] - 2.0).abs() < 1e-12);
+        assert!((out[1] - 2.0 * (-0.5f64).exp()).abs() < 1e-9);
+        assert!((out[2] - 2.0 * (-2.0f64).exp()).abs() < 1e-9);
+    }
+}

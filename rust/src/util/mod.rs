@@ -1,0 +1,15 @@
+//! Small substrates: RNG, parallel-for, timers, CLI argument parsing.
+//!
+//! The offline build environment only provides the `xla` + `anyhow` crates,
+//! so the usual ecosystem pieces (rand, rayon, clap) are implemented here,
+//! scoped to exactly what the BBMM stack needs.
+
+pub mod cli;
+pub mod fastmath;
+pub mod par;
+pub mod rng;
+pub mod timer;
+
+pub use par::parallel_for;
+pub use rng::Rng;
+pub use timer::Timer;

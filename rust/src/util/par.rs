@@ -1,0 +1,173 @@
+//! Minimal data-parallelism substrate (rayon is unavailable offline).
+//!
+//! `parallel_for` splits an index range across `std::thread::scope` workers.
+//! Thread spawn costs ~20µs, so callers gate on problem size (the helpers
+//! here do that automatically via `GRAIN`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use (cached; override with BBMM_THREADS).
+pub fn num_threads() -> usize {
+    static N: AtomicUsize = AtomicUsize::new(0);
+    let cached = N.load(Ordering::Relaxed);
+    if cached != 0 {
+        return cached;
+    }
+    let n = std::env::var("BBMM_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        });
+    N.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Minimum amount of per-thread work (in "items") below which we stay serial.
+const GRAIN: usize = 4;
+
+/// Run `body(i)` for every `i in 0..n`, splitting the range across threads.
+///
+/// `body` must be `Sync` (called concurrently from several threads). Each
+/// index is visited exactly once.
+pub fn parallel_for<F: Fn(usize) + Sync>(n: usize, body: F) {
+    let nt = num_threads().min(n.div_ceil(GRAIN)).max(1);
+    if nt <= 1 || n == 0 {
+        for i in 0..n {
+            body(i);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(nt);
+    std::thread::scope(|s| {
+        for t in 0..nt {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let body = &body;
+            s.spawn(move || {
+                for i in lo..hi {
+                    body(i);
+                }
+            });
+        }
+    });
+}
+
+/// Run `body(chunk_index, lo, hi)` over ~equal contiguous chunks of `0..n`.
+/// Useful when the body wants to amortise per-chunk setup.
+pub fn parallel_chunks<F: Fn(usize, usize, usize) + Sync>(n: usize, min_chunk: usize, body: F) {
+    let nt = if min_chunk == 0 {
+        num_threads()
+    } else {
+        num_threads().min(n.div_ceil(min_chunk)).max(1)
+    };
+    if nt <= 1 || n == 0 {
+        body(0, 0, n);
+        return;
+    }
+    let chunk = n.div_ceil(nt);
+    std::thread::scope(|s| {
+        for t in 0..nt {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let body = &body;
+            s.spawn(move || body(t, lo, hi));
+        }
+    });
+}
+
+/// Map over mutable row-chunks of a flat buffer: splits `buf` (logically
+/// `rows × row_len`) into contiguous row ranges, one per thread, and calls
+/// `body(row_lo, rows_chunk)` with the mutable sub-slice for those rows.
+pub fn parallel_rows_mut<T: Send, F: Fn(usize, &mut [T]) + Sync>(
+    buf: &mut [T],
+    rows: usize,
+    row_len: usize,
+    body: F,
+) {
+    assert_eq!(buf.len(), rows * row_len, "buffer/rows mismatch");
+    let nt = num_threads().min(rows.div_ceil(GRAIN)).max(1);
+    if nt <= 1 || rows == 0 {
+        body(0, buf);
+        return;
+    }
+    let chunk = rows.div_ceil(nt);
+    std::thread::scope(|s| {
+        let mut rest = buf;
+        let mut row_lo = 0usize;
+        while row_lo < rows {
+            let take = chunk.min(rows - row_lo);
+            let (head, tail) = rest.split_at_mut(take * row_len);
+            rest = tail;
+            let body = &body;
+            let lo = row_lo;
+            s.spawn(move || body(lo, head));
+            row_lo += take;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn parallel_for_visits_every_index_once() {
+        let n = 1000;
+        let counts: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(n, |i| {
+            counts[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for c in &counts {
+            assert_eq!(c.load(Ordering::Relaxed), 1);
+        }
+    }
+
+    #[test]
+    fn parallel_for_empty() {
+        parallel_for(0, |_| panic!("should not be called"));
+    }
+
+    #[test]
+    fn parallel_rows_mut_covers_buffer() {
+        let rows = 37;
+        let row_len = 5;
+        let mut buf = vec![0.0f64; rows * row_len];
+        parallel_rows_mut(&mut buf, rows, row_len, |row_lo, chunk| {
+            for (r, row) in chunk.chunks_mut(row_len).enumerate() {
+                for v in row.iter_mut() {
+                    *v = (row_lo + r) as f64;
+                }
+            }
+        });
+        for r in 0..rows {
+            for c in 0..row_len {
+                assert_eq!(buf[r * row_len + c], r as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_chunks_partition() {
+        let n = 100;
+        let seen: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        parallel_chunks(n, 1, |_t, lo, hi| {
+            for i in lo..hi {
+                seen[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        for s in &seen {
+            assert_eq!(s.load(Ordering::Relaxed), 1);
+        }
+    }
+}

@@ -1,0 +1,223 @@
+//! Cross-engine integration tests: the three inference engines (BBMM,
+//! Cholesky, Dong) must agree on shared problems, across all three model
+//! families, and full train→predict loops must work end to end.
+
+use bbmm_gp::data::synthetic::generate_sized;
+use bbmm_gp::gp::exact::{Engine, ExactGp};
+use bbmm_gp::gp::mll::{BbmmEngine, CholeskyEngine, InferenceEngine};
+use bbmm_gp::gp::predict::{mae, predict};
+use bbmm_gp::gp::{DongEngine, SgprCholeskyEngine, SgprOp, SkiOp};
+use bbmm_gp::kernels::{DeepFeatureMap, DenseKernelOp, KernelOperator, Matern52, Rbf};
+use bbmm_gp::tensor::Mat;
+use bbmm_gp::train::{TrainConfig, Trainer};
+use bbmm_gp::util::Rng;
+
+#[test]
+fn all_three_engines_agree_on_exact_gp() {
+    let ds = generate_sized("engines", 150, 3, 1);
+    let y = ds.y_train.clone();
+    let op = DenseKernelOp::new(ds.x_train.clone(), Box::new(Rbf::new(0.5, 1.0)), 0.05);
+    let exact = CholeskyEngine.mll_and_grad(&op, &y);
+    let mut bbmm = BbmmEngine::new(135, 64, 5, 2);
+    let b = bbmm.mll_and_grad(&op, &y);
+    let mut dong = DongEngine::new(135, 64, 2);
+    let d = dong.mll_and_grad(&op, &y);
+    for (name, r) in [("bbmm", &b), ("dong", &d)] {
+        assert!(
+            (r.datafit - exact.datafit).abs() / exact.datafit.abs() < 1e-4,
+            "{name} datafit {} vs {}",
+            r.datafit,
+            exact.datafit
+        );
+        assert!(
+            (r.logdet - exact.logdet).abs() / exact.logdet.abs().max(1.0) < 0.15,
+            "{name} logdet {} vs {}",
+            r.logdet,
+            exact.logdet
+        );
+        for p in 0..op.n_params() {
+            assert!(
+                (r.grad[p] - exact.grad[p]).abs() < 0.25 * (1.0 + exact.grad[p].abs()),
+                "{name} grad[{p}] {} vs {}",
+                r.grad[p],
+                exact.grad[p]
+            );
+        }
+    }
+}
+
+#[test]
+fn bbmm_sgpr_matches_woodbury_cholesky_sgpr() {
+    let ds = generate_sized("sgpr_int", 400, 4, 2);
+    let y = ds.y_train.clone();
+    let mut rng = Rng::new(3);
+    let mut u = Mat::zeros(40, ds.dim());
+    for r in 0..40 {
+        let src = rng.below(ds.n_train());
+        u.row_mut(r).copy_from_slice(ds.x_train.row(src));
+    }
+    let op = SgprOp::new(ds.x_train.clone(), u, Box::new(Matern52::new(0.5, 1.0)), 0.1);
+    let exact = SgprCholeskyEngine.mll_and_grad_sgpr(&op, &y);
+    let mut bbmm = BbmmEngine::new(400, 64, 0, 4);
+    let est = bbmm.mll_and_grad(&op, &y);
+    assert!(
+        (est.datafit - exact.datafit).abs() / exact.datafit.abs() < 1e-4,
+        "datafit {} vs {}",
+        est.datafit,
+        exact.datafit
+    );
+    assert!(
+        (est.logdet - exact.logdet).abs() / exact.logdet.abs().max(1.0) < 0.15,
+        "logdet {} vs {}",
+        est.logdet,
+        exact.logdet
+    );
+}
+
+#[test]
+fn ski_deep_kernel_pipeline_trains_and_predicts() {
+    // DKL features → SKI operator → BBMM training → prediction beats mean
+    let ds = generate_sized("ski_int", 3000, 5, 5);
+    let y = ds.y_train.clone();
+    let mut rng = Rng::new(6);
+    let dkl = DeepFeatureMap::new(&[ds.dim(), 16, 1], &mut rng);
+    let feat = dkl.forward(&ds.x_train);
+    let z: Vec<f64> = (0..ds.n_train()).map(|i| feat.get(i, 0)).collect();
+    let mut op = SkiOp::new(z, 500, Box::new(Rbf::new(0.3, 1.0)), 0.1);
+    let mut params = op.params();
+    let mut engine = BbmmEngine::new(20, 10, 0, 7);
+    let mut trainer = Trainer::new(TrainConfig {
+        iters: 15,
+        lr: 0.1,
+        ..Default::default()
+    });
+    let first_nmll = {
+        let mut e = BbmmEngine::new(20, 10, 0, 7);
+        e.mll_and_grad(&op, &y).nmll
+    };
+    let best = trainer.run(&mut params, |raw| {
+        op.set_params(raw);
+        engine.mll_and_grad(&op, &y)
+    });
+    assert!(best < first_nmll, "training must improve nmll: {first_nmll} -> {best}");
+
+    op.set_params(&params);
+    let feat_test = dkl.forward(&ds.x_test);
+    let z_test: Vec<f64> = (0..ds.y_test.len()).map(|i| feat_test.get(i, 0)).collect();
+    let k_star = op.cross(&z_test);
+    let solves = bbmm_gp::linalg::mbcg::mbcg(
+        |m| op.matmul(m),
+        &Mat::col_from_slice(&y),
+        |m| m.clone(),
+        &bbmm_gp::linalg::mbcg::MbcgOptions {
+            max_iters: 100,
+            tol: 1e-9,
+            n_solve_only: 1,
+        },
+    )
+    .solves;
+    let alpha = solves.col(0);
+    let mean: Vec<f64> = (0..z_test.len())
+        .map(|i| k_star.row(i).iter().zip(alpha.iter()).map(|(a, b)| a * b).sum())
+        .collect();
+    let model_mae = mae(&mean, &ds.y_test);
+    let mean_mae = mae(&vec![0.0; ds.y_test.len()], &ds.y_test);
+    assert!(model_mae < mean_mae, "ski model {model_mae} !< mean {mean_mae}");
+}
+
+#[test]
+fn bbmm_training_reaches_cholesky_quality() {
+    // Figure-3 parity in miniature: train with both engines, compare MAE
+    let ds = generate_sized("parity", 300, 3, 8);
+    let train = |use_bbmm: bool| -> f64 {
+        let y = ds.y_train.clone();
+        let mut op = DenseKernelOp::new(ds.x_train.clone(), Box::new(Rbf::new(1.0, 1.0)), 0.2);
+        let mut params = op.params();
+        let mut engine: Box<dyn InferenceEngine> = if use_bbmm {
+            Box::new(BbmmEngine::default())
+        } else {
+            Box::new(CholeskyEngine)
+        };
+        let mut trainer = Trainer::new(TrainConfig {
+            iters: 25,
+            lr: 0.1,
+            ..Default::default()
+        });
+        trainer.run(&mut params, |raw| {
+            op.set_params(raw);
+            engine.mll_and_grad(&op, &y)
+        });
+        op.set_params(&params);
+        let k_star = op.cross(&ds.x_test, op.x());
+        let diag: Vec<f64> = (0..ds.x_test.rows())
+            .map(|i| op.kernel().eval(ds.x_test.row(i), ds.x_test.row(i)))
+            .collect();
+        let ch =
+            bbmm_gp::linalg::cholesky::Cholesky::new_with_jitter(&op.dense()).unwrap();
+        let pred = predict(&k_star, &diag, |m| ch.solve_mat(m), &y);
+        mae(&pred.mean, &ds.y_test)
+    };
+    let mae_chol = train(false);
+    let mae_bbmm = train(true);
+    assert!(
+        mae_bbmm < mae_chol * 1.2 + 0.02,
+        "bbmm {mae_bbmm} should be within noise of cholesky {mae_chol}"
+    );
+}
+
+#[test]
+fn exact_gp_engines_predict_identically() {
+    let ds = generate_sized("pred_parity", 200, 2, 9);
+    let mut chol_gp = ExactGp::new(
+        ds.x_train.clone(),
+        ds.y_train.clone(),
+        Box::new(Rbf::new(0.5, 1.0)),
+        0.05,
+        Engine::Cholesky,
+    );
+    let mut bbmm_gp_model = ExactGp::new(
+        ds.x_train.clone(),
+        ds.y_train.clone(),
+        Box::new(Rbf::new(0.5, 1.0)),
+        0.05,
+        Engine::Bbmm(BbmmEngine::new(200, 10, 5, 10)),
+    );
+    let a = chol_gp.predict(&ds.x_test);
+    let b = bbmm_gp_model.predict(&ds.x_test);
+    for i in 0..ds.y_test.len() {
+        assert!((a.mean[i] - b.mean[i]).abs() < 1e-4, "mean {i}");
+        assert!((a.var[i] - b.var[i]).abs() < 1e-3, "var {i}");
+    }
+}
+
+#[test]
+fn kernel_composition_through_engine() {
+    // sum and product kernels flow through the blackbox engine unchanged
+    use bbmm_gp::kernels::{ProductKernel, SumKernel};
+    let ds = generate_sized("compose", 100, 2, 11);
+    let y = ds.y_train.clone();
+    let sum_k = SumKernel::new(
+        Box::new(Rbf::new(0.5, 0.7)),
+        Box::new(Matern52::new(0.8, 0.4)),
+    );
+    let prod_k = ProductKernel::new(
+        Box::new(Rbf::new(0.5, 1.0)),
+        Box::new(Matern52::new(0.8, 1.0)),
+    );
+    for kernel in [
+        Box::new(sum_k) as Box<dyn bbmm_gp::kernels::Kernel>,
+        Box::new(prod_k),
+    ] {
+        let op = DenseKernelOp::new(ds.x_train.clone(), kernel, 0.1);
+        let exact = CholeskyEngine.mll_and_grad(&op, &y);
+        let mut bbmm = BbmmEngine::new(100, 64, 5, 12);
+        let est = bbmm.mll_and_grad(&op, &y);
+        assert!((est.datafit - exact.datafit).abs() / exact.datafit.abs() < 1e-4);
+        for p in 0..op.n_params() {
+            assert!(
+                (est.grad[p] - exact.grad[p]).abs() < 0.3 * (1.0 + exact.grad[p].abs()),
+                "grad[{p}]"
+            );
+        }
+    }
+}

@@ -1,0 +1,297 @@
+//! Property-based tests (hand-rolled generator sweep; proptest is not
+//! resolvable offline). Each property runs across many random shapes/seeds
+//! and asserts an exact mathematical invariant — these are the Rust twins
+//! of the hypothesis sweeps in python/tests/.
+
+use bbmm_gp::kernels::{DenseKernelOp, KernelOperator, Matern32, Matern52, Rbf, SumKernel};
+use bbmm_gp::linalg::cholesky::Cholesky;
+use bbmm_gp::linalg::fft::{fft_inplace, Cplx};
+use bbmm_gp::linalg::mbcg::{mbcg, MbcgOptions};
+use bbmm_gp::linalg::pivoted_cholesky::pivoted_cholesky_dense;
+use bbmm_gp::linalg::toeplitz::ToeplitzOp;
+use bbmm_gp::linalg::tridiag::SymTridiagEig;
+use bbmm_gp::tensor::Mat;
+use bbmm_gp::util::Rng;
+
+/// random SPD matrix with controlled conditioning
+fn spd(n: usize, rng: &mut Rng) -> Mat {
+    let g = Mat::from_fn(n, n, |_, _| rng.normal());
+    let mut a = g.t_matmul(&g);
+    a.add_diag(0.5 * n as f64 * (0.2 + rng.uniform()));
+    a.symmetrize();
+    a
+}
+
+#[test]
+fn prop_mbcg_solves_match_cholesky_across_shapes() {
+    let mut rng = Rng::new(1);
+    for trial in 0..30 {
+        let n = 2 + rng.below(60);
+        let s = 1 + rng.below(6);
+        let a = spd(n, &mut rng);
+        let b = Mat::from_fn(n, s, |_, _| rng.normal());
+        let res = mbcg(
+            |m| a.matmul(m),
+            &b,
+            |m| m.clone(),
+            &MbcgOptions {
+                max_iters: 2 * n,
+                tol: 1e-12,
+                n_solve_only: 0,
+            },
+        );
+        let want = Cholesky::new(&a).unwrap().solve_mat(&b);
+        assert!(
+            res.solves.max_abs_diff(&want) < 1e-6,
+            "trial {trial}: n={n} s={s} diff={}",
+            res.solves.max_abs_diff(&want)
+        );
+    }
+}
+
+#[test]
+fn prop_tridiag_ritz_values_inside_spectrum() {
+    let mut rng = Rng::new(2);
+    for _trial in 0..25 {
+        let n = 5 + rng.below(40);
+        let a = spd(n, &mut rng);
+        let b = Mat::from_fn(n, 2, |_, _| rng.rademacher());
+        let p = 2 + rng.below(n.min(15));
+        let res = mbcg(
+            |m| a.matmul(m),
+            &b,
+            |m| m.clone(),
+            &MbcgOptions {
+                max_iters: p,
+                tol: 0.0,
+                n_solve_only: 0,
+            },
+        );
+        // Gershgorin upper bound; SPD lower bound 0
+        let mut lmax = 0.0f64;
+        for i in 0..n {
+            lmax = lmax.max((0..n).map(|j| a.get(i, j).abs()).sum());
+        }
+        for t in &res.tridiags {
+            if t.n() == 0 {
+                continue;
+            }
+            let eig = SymTridiagEig::new(&t.diag, &t.offdiag);
+            for &l in &eig.eigenvalues {
+                assert!(l > 0.0 && l <= lmax * (1.0 + 1e-8));
+            }
+            // quadrature weights are a probability vector
+            let wsum: f64 = eig.first_components.iter().map(|w| w * w).sum();
+            assert!((wsum - 1.0).abs() < 1e-8);
+        }
+    }
+}
+
+#[test]
+fn prop_pivoted_cholesky_error_is_psd_and_monotone() {
+    let mut rng = Rng::new(3);
+    for _trial in 0..20 {
+        let n = 10 + rng.below(50);
+        let ls = 0.1 + 0.4 * rng.uniform();
+        let xs: Vec<f64> = (0..n).map(|_| rng.uniform()).collect();
+        let k = Mat::from_fn(n, n, |i, j| {
+            let d = xs[i] - xs[j];
+            (-d * d / (2.0 * ls * ls)).exp()
+        });
+        let mut prev = f64::INFINITY;
+        for rank in [1usize, 3, 6, 10] {
+            let pc = pivoted_cholesky_dense(&k, rank.min(n), 0.0);
+            // monotone error decay
+            assert!(pc.error_trace <= prev + 1e-9);
+            prev = pc.error_trace;
+            // E = K − LLᵀ is PSD ⇒ jittered Cholesky succeeds
+            let mut e = k.sub(&pc.l.matmul_t(&pc.l));
+            e.add_diag(1e-9 * n as f64);
+            assert!(
+                Cholesky::new(&e).is_ok(),
+                "error matrix not PSD at rank {rank}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_kernel_operators_are_symmetric_and_psd() {
+    // vᵀK̂w == wᵀK̂v and vᵀK̂v > 0 across kernel families and dims
+    let mut rng = Rng::new(4);
+    for trial in 0..20 {
+        let n = 5 + rng.below(40);
+        let d = 1 + rng.below(5);
+        let x = Mat::from_fn(n, d, |_, _| rng.uniform_in(-1.0, 1.0));
+        let kernel: Box<dyn bbmm_gp::kernels::Kernel> = match trial % 4 {
+            0 => Box::new(Rbf::new(0.3 + rng.uniform(), 0.5 + rng.uniform())),
+            1 => Box::new(Matern32::new(0.3 + rng.uniform(), 0.5 + rng.uniform())),
+            2 => Box::new(Matern52::new(0.3 + rng.uniform(), 0.5 + rng.uniform())),
+            _ => Box::new(SumKernel::new(
+                Box::new(Rbf::new(0.5, 1.0)),
+                Box::new(Matern32::new(0.7, 0.5)),
+            )),
+        };
+        let op = DenseKernelOp::new(x, kernel, 0.01 + rng.uniform() * 0.2);
+        let v = Mat::from_fn(n, 1, |_, _| rng.normal());
+        let w = Mat::from_fn(n, 1, |_, _| rng.normal());
+        let kv = op.matmul(&v);
+        let kw = op.matmul(&w);
+        let vkw: f64 = (0..n).map(|i| v.get(i, 0) * kw.get(i, 0)).sum();
+        let wkv: f64 = (0..n).map(|i| w.get(i, 0) * kv.get(i, 0)).sum();
+        assert!(
+            (vkw - wkv).abs() < 1e-8 * (1.0 + vkw.abs()),
+            "symmetry violated: {vkw} vs {wkv}"
+        );
+        let vkv: f64 = (0..n).map(|i| v.get(i, 0) * kv.get(i, 0)).sum();
+        assert!(vkv > 0.0, "not PD: vᵀK̂v = {vkv}");
+    }
+}
+
+#[test]
+fn prop_fft_roundtrip_and_linearity() {
+    let mut rng = Rng::new(5);
+    for _ in 0..20 {
+        let log_n = 1 + rng.below(9);
+        let n = 1usize << log_n;
+        let x: Vec<Cplx> = (0..n).map(|_| Cplx::new(rng.normal(), rng.normal())).collect();
+        let y: Vec<Cplx> = (0..n).map(|_| Cplx::new(rng.normal(), rng.normal())).collect();
+        // roundtrip
+        let mut buf = x.clone();
+        fft_inplace(&mut buf, false);
+        fft_inplace(&mut buf, true);
+        for i in 0..n {
+            assert!((buf[i].re - x[i].re).abs() < 1e-9);
+            assert!((buf[i].im - x[i].im).abs() < 1e-9);
+        }
+        // linearity: F(x+y) == F(x)+F(y)
+        let mut fx = x.clone();
+        fft_inplace(&mut fx, false);
+        let mut fy = y.clone();
+        fft_inplace(&mut fy, false);
+        let mut fxy: Vec<Cplx> = (0..n).map(|i| x[i].add(y[i])).collect();
+        fft_inplace(&mut fxy, false);
+        for i in 0..n {
+            let s = fx[i].add(fy[i]);
+            assert!((fxy[i].re - s.re).abs() < 1e-8);
+            assert!((fxy[i].im - s.im).abs() < 1e-8);
+        }
+    }
+}
+
+#[test]
+fn prop_toeplitz_matches_dense_across_sizes() {
+    let mut rng = Rng::new(6);
+    for _ in 0..20 {
+        let m = 1 + rng.below(120);
+        let col: Vec<f64> = (0..m).map(|i| rng.normal() / (1.0 + i as f64)).collect();
+        let op = ToeplitzOp::new(col);
+        let v: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let got = op.matvec(&v);
+        let want = op.to_dense().matvec(&v);
+        for i in 0..m {
+            assert!((got[i] - want[i]).abs() < 1e-8, "m={m} i={i}");
+        }
+    }
+}
+
+#[test]
+fn prop_cholesky_logdet_consistent_with_eigen_sum() {
+    // logdet(A) computed from Cholesky must equal SLQ over a full Lanczos
+    let mut rng = Rng::new(7);
+    for _ in 0..10 {
+        let n = 4 + rng.below(16);
+        let a = spd(n, &mut rng);
+        let ld = Cholesky::new(&a).unwrap().logdet();
+        let z = rng.normal_vec(n);
+        let (t, _q) = bbmm_gp::linalg::lanczos::lanczos_tridiag(|v| a.matvec(v), &z, n);
+        let eig = SymTridiagEig::new(&t.diag, &t.offdiag);
+        let ld_l: f64 = eig.eigenvalues.iter().map(|l| l.ln()).sum();
+        assert!((ld - ld_l).abs() < 1e-6 * ld.abs().max(1.0));
+    }
+}
+
+#[test]
+fn prop_preconditioned_mbcg_same_solution_as_plain() {
+    // preconditioning changes the path, never the answer
+    let mut rng = Rng::new(8);
+    for _ in 0..10 {
+        let n = 20 + rng.below(60);
+        let xs: Vec<f64> = (0..n).map(|_| rng.uniform()).collect();
+        let mut k = Mat::from_fn(n, n, |i, j| {
+            let d = xs[i] - xs[j];
+            (-d * d / 0.02).exp()
+        });
+        let noise = 1e-2;
+        k.add_diag(noise);
+        let b = Mat::col_from_slice(&rng.normal_vec(n));
+        let mut k_nl = k.clone();
+        k_nl.add_diag(-noise);
+        let pc = pivoted_cholesky_dense(&k_nl, 6, 0.0);
+        let pre = bbmm_gp::linalg::preconditioner::PartialCholPrecond::new(pc.l, noise);
+        use bbmm_gp::linalg::preconditioner::Preconditioner;
+        let plain = mbcg(
+            |m| k.matmul(m),
+            &b,
+            |m| m.clone(),
+            &MbcgOptions {
+                max_iters: 4 * n,
+                tol: 1e-11,
+                n_solve_only: 1,
+            },
+        );
+        let precond = mbcg(
+            |m| k.matmul(m),
+            &b,
+            |m| pre.solve_mat(m),
+            &MbcgOptions {
+                max_iters: 4 * n,
+                tol: 1e-11,
+                n_solve_only: 1,
+            },
+        );
+        assert!(
+            plain.solves.max_abs_diff(&precond.solves) < 1e-5,
+            "solutions diverge: {}",
+            plain.solves.max_abs_diff(&precond.solves)
+        );
+        assert!(precond.iterations <= plain.iterations);
+    }
+}
+
+#[test]
+fn prop_batcher_preserves_request_response_pairing() {
+    // random concurrent load: every response must match its request
+    use bbmm_gp::coordinator::batcher::{BatchPolicy, DynamicBatcher, PredictFn};
+    use bbmm_gp::gp::predict::Prediction;
+    use std::sync::Arc;
+    let f: PredictFn = Box::new(|xs: &Mat| Prediction {
+        mean: (0..xs.rows()).map(|i| 10.0 * xs.get(i, 0) + xs.get(i, 1)).collect(),
+        var: (0..xs.rows()).map(|i| xs.get(i, 0)).collect(),
+    });
+    let b = Arc::new(DynamicBatcher::new(
+        2,
+        BatchPolicy {
+            max_batch: 7,
+            max_wait: std::time::Duration::from_millis(1),
+        },
+        f,
+    ));
+    let mut handles = Vec::new();
+    for t in 0..8 {
+        let b = Arc::clone(&b);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(t);
+            for _ in 0..25 {
+                let a = rng.uniform();
+                let c = rng.uniform();
+                let (mean, var) = b.predict_one(vec![a, c]).unwrap();
+                assert!((mean - (10.0 * a + c)).abs() < 1e-12);
+                assert!((var - a).abs() < 1e-12);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}

@@ -1,0 +1,231 @@
+//! Artifact integration tests: load every AOT HLO artifact through the
+//! PJRT runtime, execute it, and cross-check the numerics against the
+//! native Rust engines. Skipped (loudly) when `make artifacts` has not run.
+
+use bbmm_gp::gp::mll::{CholeskyEngine, InferenceEngine};
+use bbmm_gp::kernels::{DenseKernelOp, Matern52, Rbf};
+use bbmm_gp::linalg::mbcg::tridiag_from_coeffs;
+use bbmm_gp::linalg::tridiag::SymTridiagEig;
+use bbmm_gp::runtime::{default_artifact_dir, Runtime, TensorF32};
+use bbmm_gp::tensor::Mat;
+use bbmm_gp::util::Rng;
+
+const N: usize = 256;
+const D: usize = 4;
+const T: usize = 8;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = default_artifact_dir();
+    let rt = Runtime::cpu(&dir).ok()?;
+    if rt.available().is_empty() {
+        eprintln!("SKIP: no artifacts in {dir:?} — run `make artifacts`");
+        return None;
+    }
+    Some(rt)
+}
+
+fn problem(seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let mut x = vec![0f32; N * D];
+    for v in x.iter_mut() {
+        *v = rng.uniform_in(-1.0, 1.0) as f32;
+    }
+    let mut y = vec![0f32; N];
+    for i in 0..N {
+        let xi = &x[i * D..(i + 1) * D];
+        y[i] = (3.0 * xi[0]).sin() + 0.5 * xi[1] + 0.05 * rng.normal() as f32;
+    }
+    let mut z = vec![0f32; N * T];
+    for v in z.iter_mut() {
+        *v = rng.rademacher() as f32;
+    }
+    (x, y, z)
+}
+
+fn native_op(x: &[f32], kind: &str, params: &[f32; 3]) -> DenseKernelOp {
+    let x64 = Mat::from_vec(N, D, x.iter().map(|&v| v as f64).collect());
+    let kernel: Box<dyn bbmm_gp::kernels::Kernel> = match kind {
+        "matern52" => Box::new(Matern52::new((params[0] as f64).exp(), (params[1] as f64).exp())),
+        _ => Box::new(Rbf::new((params[0] as f64).exp(), (params[1] as f64).exp())),
+    };
+    DenseKernelOp::new(x64, kernel, (params[2] as f64).exp())
+}
+
+#[test]
+fn every_artifact_on_disk_loads_and_compiles() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    for name in rt.available() {
+        if name == "manifest" {
+            continue;
+        }
+        rt.load(&name).unwrap_or_else(|e| panic!("load {name}: {e}"));
+    }
+    assert!(!rt.loaded_names().is_empty());
+}
+
+#[test]
+fn mll_artifacts_match_native_engines() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let (x, y, z) = problem(7);
+    let params = [-0.5f32, 0.0, -2.0];
+    for kind in ["rbf", "matern52"] {
+        let name = format!("mll_{kind}_n{N}_d{D}_t{T}_p20");
+        if !rt.artifact_exists(&name) {
+            eprintln!("SKIP {name}");
+            continue;
+        }
+        rt.load(&name).unwrap();
+        let outs = rt
+            .execute_f32(
+                &name,
+                &[
+                    TensorF32 { data: &x, dims: vec![N as i64, D as i64] },
+                    TensorF32 { data: &y, dims: vec![N as i64] },
+                    TensorF32 { data: &z, dims: vec![N as i64, T as i64] },
+                    TensorF32 { data: &params, dims: vec![3] },
+                ],
+            )
+            .unwrap();
+        assert_eq!(outs.len(), 6, "{kind}: u0, datafit, alphas, betas, quad, trace");
+        let datafit = outs[1][0] as f64;
+
+        // Rust-side SLQ assembly
+        let (alphas, betas) = (&outs[2], &outs[3]);
+        let p = alphas.len() / T;
+        let mut logdet = 0.0;
+        for c in 0..T {
+            let a: Vec<f64> = (0..p).map(|j| alphas[j * T + c] as f64).collect();
+            let b: Vec<f64> = (0..p).map(|j| betas[j * T + c] as f64).collect();
+            let eff = a.iter().take_while(|v| v.abs() > 0.0).count();
+            if eff == 0 {
+                continue;
+            }
+            let tri = tridiag_from_coeffs(&a[..eff], &b[..eff.saturating_sub(1)]);
+            let eig = SymTridiagEig::new(&tri.diag, &tri.offdiag);
+            logdet += N as f64 * eig.log_quadrature();
+        }
+        logdet /= T as f64;
+
+        let op = native_op(&x, kind, &params);
+        let y64: Vec<f64> = y.iter().map(|&v| v as f64).collect();
+        let exact = CholeskyEngine.mll_and_grad(&op, &y64);
+        assert!(
+            (datafit - exact.datafit).abs() / exact.datafit.abs() < 1e-3,
+            "{kind} datafit {datafit} vs {}",
+            exact.datafit
+        );
+        assert!(
+            (logdet - exact.logdet).abs() / exact.logdet.abs().max(1.0) < 0.15,
+            "{kind} logdet {logdet} vs {}",
+            exact.logdet
+        );
+        // gradient assembly vs exact
+        for j in 0..3 {
+            let g = 0.5 * (-(outs[4][j] as f64) + outs[5][j] as f64);
+            assert!(
+                (g - exact.grad[j]).abs() < 0.3 * (1.0 + exact.grad[j].abs()),
+                "{kind} grad[{j}] {g} vs {}",
+                exact.grad[j]
+            );
+        }
+    }
+}
+
+#[test]
+fn predict_artifacts_match_native_posterior() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let (x, y, _z) = problem(8);
+    let params = [-0.5f32, 0.0, -2.0];
+    let m = 64usize;
+    let mut rng = Rng::new(9);
+    let mut xs = vec![0f32; m * D];
+    for v in xs.iter_mut() {
+        *v = rng.uniform_in(-1.0, 1.0) as f32;
+    }
+    for kind in ["rbf", "matern52"] {
+        let name = format!("predict_{kind}_n{N}_d{D}_m{m}");
+        if !rt.artifact_exists(&name) {
+            eprintln!("SKIP {name}");
+            continue;
+        }
+        rt.load(&name).unwrap();
+        let outs = rt
+            .execute_f32(
+                &name,
+                &[
+                    TensorF32 { data: &x, dims: vec![N as i64, D as i64] },
+                    TensorF32 { data: &y, dims: vec![N as i64] },
+                    TensorF32 { data: &xs, dims: vec![m as i64, D as i64] },
+                    TensorF32 { data: &params, dims: vec![3] },
+                ],
+            )
+            .unwrap();
+        let (mean, var) = (&outs[0], &outs[1]);
+
+        // native posterior
+        let op = native_op(&x, kind, &params);
+        let y64: Vec<f64> = y.iter().map(|&v| v as f64).collect();
+        let ch = bbmm_gp::linalg::cholesky::Cholesky::new_with_jitter(
+            &bbmm_gp::kernels::KernelOperator::dense(&op),
+        )
+        .unwrap();
+        let xs64 = Mat::from_vec(m, D, xs.iter().map(|&v| v as f64).collect());
+        let k_star = op.cross(&xs64, op.x());
+        let diag: Vec<f64> = (0..m)
+            .map(|i| op.kernel().eval(xs64.row(i), xs64.row(i)))
+            .collect();
+        let native = bbmm_gp::gp::predict::predict(&k_star, &diag, |mm| ch.solve_mat(mm), &y64);
+        for i in 0..m {
+            assert!(
+                (mean[i] as f64 - native.mean[i]).abs() < 5e-3,
+                "{kind} mean[{i}] {} vs {}",
+                mean[i],
+                native.mean[i]
+            );
+            assert!(
+                (var[i] as f64 - native.var[i]).abs() < 5e-3,
+                "{kind} var[{i}]"
+            );
+        }
+    }
+}
+
+#[test]
+fn kernel_matmul_artifact_matches_native_fused_matmul() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let name = format!("kernel_matmul_rbf_n{N}_d{D}_t{T}");
+    if !rt.artifact_exists(&name) {
+        eprintln!("SKIP {name}");
+        return;
+    }
+    rt.load(&name).unwrap();
+    let (x, _y, _z) = problem(10);
+    let mut rng = Rng::new(11);
+    let mut v = vec![0f32; N * T];
+    for q in v.iter_mut() {
+        *q = rng.normal() as f32;
+    }
+    let params = [-0.5f32, 0.0, -2.0];
+    let outs = rt
+        .execute_f32(
+            &name,
+            &[
+                TensorF32 { data: &x, dims: vec![N as i64, D as i64] },
+                TensorF32 { data: &v, dims: vec![N as i64, T as i64] },
+                TensorF32 { data: &params, dims: vec![3] },
+            ],
+        )
+        .unwrap();
+    let got = &outs[0];
+    // native (Rust) fused kernel matmul — the same operation at L3
+    let op = native_op(&x, "rbf", &params);
+    let v64 = Mat::from_vec(N, T, v.iter().map(|&q| q as f64).collect());
+    let want = bbmm_gp::kernels::KernelOperator::matmul(&op, &v64);
+    let mut max_diff = 0.0f64;
+    for i in 0..N {
+        for c in 0..T {
+            max_diff = max_diff.max((got[i * T + c] as f64 - want.get(i, c)).abs());
+        }
+    }
+    assert!(max_diff < 1e-3, "L1 Pallas vs L3 Rust fused matmul: {max_diff}");
+}
