@@ -72,12 +72,7 @@ fn main() {
             let pc = pivoted_cholesky_dense(&k_noiseless, rank, 0.0);
             let err = pc.error_trace;
             let pre = PartialCholPrecond::new(pc.l, noise);
-            let a = op_norm(
-                |v| pre.solve_vec(&khat.matvec(v)),
-                n,
-                60,
-                &mut rng,
-            );
+            let a = op_norm(|v| pre.solve_vec(&khat.matvec(v)), n, 60, &mut rng);
             let b = op_norm(
                 |v| {
                     // K̂⁻¹ P̂ v = K̂⁻¹ (LLᵀv + σ²v)

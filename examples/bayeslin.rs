@@ -51,7 +51,11 @@ fn main() {
             n_solve_only: 1,
         },
     );
-    println!("mBCG converged in {} iterations (system rank d+… = {})", res.iterations, d + 1);
+    println!(
+        "mBCG converged in {} iterations (system rank d+… = {})",
+        res.iterations,
+        d + 1
+    );
     let alpha = res.solves.col(0);
 
     // implied weight posterior mean: w = v·Xᵀα; compare to ridge solution

@@ -52,78 +52,78 @@ fn main() {
     ]);
     println!("Figure 1 — solve error, mBCG vs Cholesky (f32/f64)\n");
     for &noise in &[1e-2f64, 1e-4] {
-    for &n in sizes {
-        // ill-conditioned exact RBF kernel: modest lengthscale, small noise
-        let mut rng = Rng::new(n as u64);
-        let x = Mat::from_fn(n, 3, |_, _| rng.uniform_in(-1.0, 1.0));
-        let op = DenseKernelOp::new(x, Box::new(Rbf::new(0.6, 1.0)), noise);
-        let k64 = op.dense();
-        let y64 = rng.normal_vec(n);
-        let k32: Mat<f32> = k64.cast();
-        let y32: Vec<f32> = y64.iter().map(|&v| v as f32).collect();
+        for &n in sizes {
+            // ill-conditioned exact RBF kernel: modest lengthscale, small noise
+            let mut rng = Rng::new(n as u64);
+            let x = Mat::from_fn(n, 3, |_, _| rng.uniform_in(-1.0, 1.0));
+            let op = DenseKernelOp::new(x, Box::new(Rbf::new(0.6, 1.0)), noise);
+            let k64 = op.dense();
+            let y64 = rng.normal_vec(n);
+            let k32: Mat<f32> = k64.cast();
+            let y32: Vec<f32> = y64.iter().map(|&v| v as f32).collect();
 
-        // Cholesky solves
-        let chol64 = Cholesky::new_with_jitter(&k64).unwrap();
-        let x_chol64 = chol64.solve_vec(&y64);
-        let err_chol64 = rel_residual(&k64, &x_chol64, &y64);
-        // the paper's §6 point: f32 Cholesky may only factor after adding
-        // "jitter" to the diagonal — which silently changes the system.
-        // We record the jitter and measure the residual against the TRUE
-        // (unjittered, f64) matrix.
-        let (err_chol32, chol_jitter) = match Cholesky::new_with_jitter(&k32) {
-            Ok(ch) => {
-                let x32 = ch.solve_vec(&y32);
-                let x32_64: Vec<f64> = x32.iter().map(|&v| v as f64).collect();
-                (rel_residual(&k64, &x32_64, &y64), ch.jitter)
-            }
-            Err(_) => (f64::NAN, f64::NAN), // f32 factorization failed outright
-        };
+            // Cholesky solves
+            let chol64 = Cholesky::new_with_jitter(&k64).unwrap();
+            let x_chol64 = chol64.solve_vec(&y64);
+            let err_chol64 = rel_residual(&k64, &x_chol64, &y64);
+            // the paper's §6 point: f32 Cholesky may only factor after adding
+            // "jitter" to the diagonal — which silently changes the system.
+            // We record the jitter and measure the residual against the TRUE
+            // (unjittered, f64) matrix.
+            let (err_chol32, chol_jitter) = match Cholesky::new_with_jitter(&k32) {
+                Ok(ch) => {
+                    let x32 = ch.solve_vec(&y32);
+                    let x32_64: Vec<f64> = x32.iter().map(|&v| v as f64).collect();
+                    (rel_residual(&k64, &x32_64, &y64), ch.jitter)
+                }
+                Err(_) => (f64::NAN, f64::NAN), // f32 factorization failed outright
+            };
 
-        // mBCG solves with the paper's rank-5 pivoted-Cholesky
-        // preconditioner ("we recommend always using" it, §6)
-        let mut k_noiseless = k64.clone();
-        k_noiseless.add_diag(-noise);
-        let pc = pivoted_cholesky_dense(&k_noiseless, args.usize_or("rank", 20), 0.0);
-        let pre64 = PartialCholPrecond::new(pc.l.clone(), noise);
-        let opts64 = MbcgOptions {
-            max_iters: n,
-            tol: 1e-12,
-            n_solve_only: 1,
-        };
-        let res64 = mbcg(
-            |m| k64.matmul(m),
-            &Mat::col_from_slice(&y64),
-            |m| pre64.solve_mat(m),
-            &opts64,
-        );
-        let err_mbcg64 = rel_residual(&k64, &res64.solves.col(0), &y64);
+            // mBCG solves with the paper's rank-5 pivoted-Cholesky
+            // preconditioner ("we recommend always using" it, §6)
+            let mut k_noiseless = k64.clone();
+            k_noiseless.add_diag(-noise);
+            let pc = pivoted_cholesky_dense(&k_noiseless, args.usize_or("rank", 20), 0.0);
+            let pre64 = PartialCholPrecond::new(pc.l.clone(), noise);
+            let opts64 = MbcgOptions {
+                max_iters: n,
+                tol: 1e-12,
+                n_solve_only: 1,
+            };
+            let res64 = mbcg(
+                |m| k64.matmul(m),
+                &Mat::col_from_slice(&y64),
+                |m| pre64.solve_mat(m),
+                &opts64,
+            );
+            let err_mbcg64 = rel_residual(&k64, &res64.solves.col(0), &y64);
 
-        let opts32 = MbcgOptions {
-            max_iters: n,
-            tol: 1e-7,
-            n_solve_only: 1,
-        };
-        let res32 = mbcg(
-            |m: &Mat<f32>| k32.matmul(m),
-            &Mat::col_from_slice(&y32),
-            |m: &Mat<f32>| pre64.solve_mat(&m.cast()).cast(),
-            &opts32,
-        );
-        let x32_64: Vec<f64> = res32.solves.col(0).iter().map(|&v| v as f64).collect();
-        let err_mbcg32 = rel_residual(&k64, &x32_64, &y64);
+            let opts32 = MbcgOptions {
+                max_iters: n,
+                tol: 1e-7,
+                n_solve_only: 1,
+            };
+            let res32 = mbcg(
+                |m: &Mat<f32>| k32.matmul(m),
+                &Mat::col_from_slice(&y32),
+                |m: &Mat<f32>| pre64.solve_mat(&m.cast()).cast(),
+                &opts32,
+            );
+            let x32_64: Vec<f64> = res32.solves.col(0).iter().map(|&v| v as f64).collect();
+            let err_mbcg32 = rel_residual(&k64, &x32_64, &y64);
 
-        table.row(&[
-            n.to_string(),
-            format!("{noise:.0e}"),
-            format!("{err_chol32:.3e}"),
-            format!("{chol_jitter:.1e}"),
-            format!("{err_chol64:.3e}"),
-            format!("{err_mbcg32:.3e}"),
-            format!("{err_mbcg64:.3e}"),
-            res32.iterations.to_string(),
-        ]);
-        let _ = op.noise();
-    }
+            table.row(&[
+                n.to_string(),
+                format!("{noise:.0e}"),
+                format!("{err_chol32:.3e}"),
+                format!("{chol_jitter:.1e}"),
+                format!("{err_chol64:.3e}"),
+                format!("{err_mbcg32:.3e}"),
+                format!("{err_mbcg64:.3e}"),
+                res32.iterations.to_string(),
+            ]);
+            let _ = op.noise();
+        }
     }
     table.print();
     table.save("fig1").expect("save results");

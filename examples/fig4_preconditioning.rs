@@ -208,7 +208,8 @@ fn main() {
     {
         let ds = generate_sized("protein", n, 9, 1);
         let (feat_train, feat_test) = deep_features(&ds, 21);
-        let mut curve_op = DenseKernelOp::new(feat_train.clone(), Box::new(Rbf::new(0.5, 1.0)), 0.05);
+        let mut curve_op =
+            DenseKernelOp::new(feat_train.clone(), Box::new(Rbf::new(0.5, 1.0)), 0.05);
         curve_op.set_params(&fixed_rbf);
         residual_curves("protein_deep_rbf", &curve_op, &ds.y_train, max_cg);
         let op = learn_hypers(&feat_train, &ds.y_train, Box::new(Rbf::new(0.5, 1.0)), train_iters);

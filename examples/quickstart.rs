@@ -26,9 +26,16 @@ const D: usize = 4;
 const T: usize = 8;
 const LN_2PI: f64 = 1.8378770664093453;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let dir = default_artifact_dir();
     let mut rt = Runtime::cpu(&dir)?;
+    if !rt.backend_available() {
+        eprintln!(
+            "pjrt backend unavailable (build with `--features pjrt` + a vendored xla crate) \
+             — skipping quickstart"
+        );
+        return Ok(());
+    }
     println!("PJRT platform: {}", rt.platform());
     let mll_name = "mll_rbf_n256_d4_t8_p20";
     let predict_name = "predict_rbf_n256_d4_m64";
@@ -61,10 +68,22 @@ fn main() -> anyhow::Result<()> {
     let outs = rt.execute_f32(
         mll_name,
         &[
-            TensorF32 { data: &x, dims: vec![N as i64, D as i64] },
-            TensorF32 { data: &y, dims: vec![N as i64] },
-            TensorF32 { data: &z, dims: vec![N as i64, T as i64] },
-            TensorF32 { data: &params, dims: vec![3] },
+            TensorF32 {
+                data: &x,
+                dims: vec![N as i64, D as i64],
+            },
+            TensorF32 {
+                data: &y,
+                dims: vec![N as i64],
+            },
+            TensorF32 {
+                data: &z,
+                dims: vec![N as i64, T as i64],
+            },
+            TensorF32 {
+                data: &params,
+                dims: vec![3],
+            },
         ],
     )?;
     let (u0, datafit, alphas, betas, quad, trace) =
@@ -141,10 +160,22 @@ fn main() -> anyhow::Result<()> {
     let pred = rt.execute_f32(
         predict_name,
         &[
-            TensorF32 { data: &x, dims: vec![N as i64, D as i64] },
-            TensorF32 { data: &y, dims: vec![N as i64] },
-            TensorF32 { data: &xs, dims: vec![m as i64, D as i64] },
-            TensorF32 { data: &params, dims: vec![3] },
+            TensorF32 {
+                data: &x,
+                dims: vec![N as i64, D as i64],
+            },
+            TensorF32 {
+                data: &y,
+                dims: vec![N as i64],
+            },
+            TensorF32 {
+                data: &xs,
+                dims: vec![m as i64, D as i64],
+            },
+            TensorF32 {
+                data: &params,
+                dims: vec![3],
+            },
         ],
     )?;
     let (mean, var) = (&pred[0], &pred[1]);

@@ -50,6 +50,7 @@ fn main() {
     let stop = Arc::new(AtomicBool::new(false));
     let config = ServerConfig {
         addr: "127.0.0.1:0".to_string(),
+        shard_count: 1,
         stop: Arc::clone(&stop),
     };
     let (addr_tx, addr_rx) = std::sync::mpsc::channel();

@@ -81,7 +81,12 @@ fn main() {
             y_test,
         }
     };
-    println!("data generated in {:.1}s (train {} / test {})", timer.elapsed_s(), ds.n_train(), ds.y_test.len());
+    println!(
+        "data generated in {:.1}s (train {} / test {})",
+        timer.elapsed_s(),
+        ds.n_train(),
+        ds.y_test.len()
+    );
 
     // Deep kernel stand-in (DESIGN.md §5): the paper *trains* the DKL MLP,
     // so its 1-D feature is target-informative. We can't backprop an MLP

@@ -143,7 +143,8 @@ impl ExperimentConfig {
             "cholesky" => Box::new(CholeskyEngine),
             "dong" => Box::new(DongEngine::new(self.cg_iters, self.probes, self.seed)),
             _ => {
-                let mut e = BbmmEngine::new(self.cg_iters, self.probes, self.precond_rank, self.seed);
+                let mut e =
+                    BbmmEngine::new(self.cg_iters, self.probes, self.precond_rank, self.seed);
                 e.cg_tol = self.cg_tol;
                 Box::new(e)
             }

@@ -87,9 +87,9 @@ impl ConfigDoc {
                 }
                 continue;
             }
-            let (key, value_text) = line
-                .split_once('=')
-                .ok_or_else(|| ConfigError::new(format!("line {}: expected key = value", lineno + 1)))?;
+            let (key, value_text) = line.split_once('=').ok_or_else(|| {
+                ConfigError::new(format!("line {}: expected key = value", lineno + 1))
+            })?;
             let key = key.trim().to_string();
             if key.is_empty() || section.is_empty() {
                 return Err(ConfigError::new(format!(

@@ -22,6 +22,13 @@ use std::sync::Arc;
 /// Server configuration.
 pub struct ServerConfig {
     pub addr: String,
+    /// Row-shard count of the serving model's kernel operator (1 =
+    /// monolithic dense operator), recorded here so the deployment config
+    /// carries how the operator was sized to traffic. The server itself
+    /// does not build the model — the launcher (`bbmm serve --shards N`)
+    /// constructs the sharded operator, fills this in, and echoes it at
+    /// startup.
+    pub shard_count: usize,
     /// stop flag the caller can flip to shut the accept loop down
     pub stop: Arc<AtomicBool>,
 }
@@ -30,6 +37,7 @@ impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
             addr: "127.0.0.1:7777".to_string(),
+            shard_count: 1,
             stop: Arc::new(AtomicBool::new(false)),
         }
     }
@@ -154,6 +162,7 @@ mod tests {
         let stop = Arc::new(AtomicBool::new(false));
         let config = ServerConfig {
             addr: "127.0.0.1:0".to_string(),
+            shard_count: 1,
             stop: Arc::clone(&stop),
         };
         let (addr_tx, addr_rx) = std::sync::mpsc::channel();

@@ -38,29 +38,89 @@ pub struct DatasetSpec {
 
 /// §6 "Exact" datasets (n ≤ 3500).
 pub const UCI_EXACT: &[DatasetSpec] = &[
-    DatasetSpec { name: "autompg", n: 392, d: 7 },
-    DatasetSpec { name: "airfoil", n: 1503, d: 5 },
-    DatasetSpec { name: "wine", n: 1599, d: 11 },
-    DatasetSpec { name: "gas", n: 2565, d: 128 },
-    DatasetSpec { name: "skillcraft", n: 3338, d: 19 },
+    DatasetSpec {
+        name: "autompg",
+        n: 392,
+        d: 7,
+    },
+    DatasetSpec {
+        name: "airfoil",
+        n: 1503,
+        d: 5,
+    },
+    DatasetSpec {
+        name: "wine",
+        n: 1599,
+        d: 11,
+    },
+    DatasetSpec {
+        name: "gas",
+        n: 2565,
+        d: 128,
+    },
+    DatasetSpec {
+        name: "skillcraft",
+        n: 3338,
+        d: 19,
+    },
 ];
 
 /// §6 SGPR datasets (n up to 50k).
 pub const UCI_SGPR: &[DatasetSpec] = &[
-    DatasetSpec { name: "poletele", n: 15000, d: 26 },
-    DatasetSpec { name: "elevators", n: 16599, d: 18 },
-    DatasetSpec { name: "kin40k", n: 40000, d: 8 },
-    DatasetSpec { name: "protein", n: 45730, d: 9 },
-    DatasetSpec { name: "kegg", n: 48827, d: 20 },
+    DatasetSpec {
+        name: "poletele",
+        n: 15000,
+        d: 26,
+    },
+    DatasetSpec {
+        name: "elevators",
+        n: 16599,
+        d: 18,
+    },
+    DatasetSpec {
+        name: "kin40k",
+        n: 40000,
+        d: 8,
+    },
+    DatasetSpec {
+        name: "protein",
+        n: 45730,
+        d: 9,
+    },
+    DatasetSpec {
+        name: "kegg",
+        n: 48827,
+        d: 20,
+    },
 ];
 
 /// §6 SKI datasets (n up to 515k).
 pub const UCI_SKI: &[DatasetSpec] = &[
-    DatasetSpec { name: "kin40k", n: 40000, d: 8 },
-    DatasetSpec { name: "protein", n: 45730, d: 9 },
-    DatasetSpec { name: "kegg", n: 48827, d: 20 },
-    DatasetSpec { name: "song", n: 515345, d: 90 },
-    DatasetSpec { name: "buzz", n: 583250, d: 77 },
+    DatasetSpec {
+        name: "kin40k",
+        n: 40000,
+        d: 8,
+    },
+    DatasetSpec {
+        name: "protein",
+        n: 45730,
+        d: 9,
+    },
+    DatasetSpec {
+        name: "kegg",
+        n: 48827,
+        d: 20,
+    },
+    DatasetSpec {
+        name: "song",
+        n: 515345,
+        d: 90,
+    },
+    DatasetSpec {
+        name: "buzz",
+        n: 583250,
+        d: 77,
+    },
 ];
 
 /// Look up a spec by name across all three suites.
@@ -86,7 +146,9 @@ pub fn generate_sized(name: &str, n: usize, d: usize, seed: u64) -> Dataset {
     let n_feat = 64usize;
     let ls = 0.4 * (d as f64).sqrt(); // keeps function smooth in high d
     let w = Mat::from_fn(n_feat, d, |_, _| rng.normal() / ls);
-    let b: Vec<f64> = (0..n_feat).map(|_| rng.uniform_in(0.0, 2.0 * std::f64::consts::PI)).collect();
+    let b: Vec<f64> = (0..n_feat)
+        .map(|_| rng.uniform_in(0.0, 2.0 * std::f64::consts::PI))
+        .collect();
     let a: Vec<f64> = (0..n_feat).map(|_| rng.normal()).collect();
     let noise = 0.1;
 

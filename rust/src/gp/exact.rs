@@ -1,11 +1,12 @@
-//! Exact GP regression model — ties a [`DenseKernelOp`] to targets and an
-//! inference engine (BBMM or Cholesky), exposing train-time NMLL/gradients
-//! and test-time predictions. This is the model behind the paper's "Exact"
-//! columns in Figures 2 and 3.
+//! Exact GP regression model — ties a kernel operator (the monolithic
+//! [`DenseKernelOp`] or the row-sharded [`ShardedKernelOp`]) to targets and
+//! an inference engine (BBMM or Cholesky), exposing train-time
+//! NMLL/gradients and test-time predictions. This is the model behind the
+//! paper's "Exact" columns in Figures 2 and 3.
 
 use crate::gp::mll::{BbmmEngine, InferenceEngine, MllGrad};
 use crate::gp::predict::{predict, Prediction};
-use crate::kernels::{DenseKernelOp, Kernel, KernelOperator};
+use crate::kernels::{DenseKernelOp, Kernel, KernelOperator, ShardedKernelOp};
 use crate::linalg::cholesky::Cholesky;
 use crate::linalg::mbcg::{mbcg, MbcgOptions};
 use crate::tensor::Mat;
@@ -18,9 +19,71 @@ pub enum Engine {
     Cholesky,
 }
 
+/// The operator backing an exact GP: the monolithic fused operator or its
+/// row-sharded variant. Both expose the same blackbox surface, so every
+/// engine works with either — this enum only carries the constructor
+/// choice plus the concrete accessors predictions need.
+pub enum ExactOp {
+    Dense(DenseKernelOp),
+    Sharded(ShardedKernelOp),
+}
+
+impl ExactOp {
+    /// The blackbox view every inference engine consumes.
+    pub fn as_operator(&self) -> &dyn KernelOperator {
+        match self {
+            ExactOp::Dense(op) => op,
+            ExactOp::Sharded(op) => op,
+        }
+    }
+
+    pub fn x(&self) -> &Mat {
+        match self {
+            ExactOp::Dense(op) => op.x(),
+            ExactOp::Sharded(op) => op.x(),
+        }
+    }
+
+    pub fn kernel(&self) -> &dyn Kernel {
+        match self {
+            ExactOp::Dense(op) => op.kernel(),
+            ExactOp::Sharded(op) => op.kernel(),
+        }
+    }
+
+    pub fn cross(&self, a: &Mat, b: &Mat) -> Mat {
+        match self {
+            ExactOp::Dense(op) => op.cross(a, b),
+            ExactOp::Sharded(op) => op.cross(a, b),
+        }
+    }
+
+    pub fn params(&self) -> Vec<f64> {
+        match self {
+            ExactOp::Dense(op) => op.params(),
+            ExactOp::Sharded(op) => op.params(),
+        }
+    }
+
+    pub fn set_params(&mut self, raw: &[f64]) {
+        match self {
+            ExactOp::Dense(op) => op.set_params(raw),
+            ExactOp::Sharded(op) => op.set_params(raw),
+        }
+    }
+
+    /// Shard count (1 for the monolithic operator).
+    pub fn shard_count(&self) -> usize {
+        match self {
+            ExactOp::Dense(_) => 1,
+            ExactOp::Sharded(op) => op.shard_count(),
+        }
+    }
+}
+
 /// Exact Gaussian-process regression model.
 pub struct ExactGp {
-    op: DenseKernelOp,
+    op: ExactOp,
     y: Vec<f64>,
     engine: Engine,
 }
@@ -29,13 +92,31 @@ impl ExactGp {
     pub fn new(x: Mat, y: Vec<f64>, kernel: Box<dyn Kernel>, noise: f64, engine: Engine) -> Self {
         assert_eq!(x.rows(), y.len());
         ExactGp {
-            op: DenseKernelOp::new(x, kernel, noise),
+            op: ExactOp::Dense(DenseKernelOp::new(x, kernel, noise)),
             y,
             engine,
         }
     }
 
-    pub fn op(&self) -> &DenseKernelOp {
+    /// Like [`ExactGp::new`], but over a row-sharded operator — the
+    /// configuration the serving path uses to size shards to traffic.
+    pub fn new_sharded(
+        x: Mat,
+        y: Vec<f64>,
+        kernel: Box<dyn Kernel>,
+        noise: f64,
+        engine: Engine,
+        shards: usize,
+    ) -> Self {
+        assert_eq!(x.rows(), y.len());
+        ExactGp {
+            op: ExactOp::Sharded(ShardedKernelOp::new(x, kernel, noise, shards)),
+            y,
+            engine,
+        }
+    }
+
+    pub fn op(&self) -> &ExactOp {
         &self.op
     }
 
@@ -52,16 +133,16 @@ impl ExactGp {
     }
 
     pub fn n_params(&self) -> usize {
-        self.op.n_params()
+        self.op.as_operator().n_params()
     }
 
     /// NMLL + gradient under the configured engine.
     pub fn mll_and_grad(&mut self) -> MllGrad {
         match &mut self.engine {
-            Engine::Bbmm(e) => e.mll_and_grad(&self.op, &self.y),
+            Engine::Bbmm(e) => e.mll_and_grad(self.op.as_operator(), &self.y),
             Engine::Cholesky => {
                 let mut e = crate::gp::mll::CholeskyEngine;
-                e.mll_and_grad(&self.op, &self.y)
+                e.mll_and_grad(self.op.as_operator(), &self.y)
             }
         }
     }
@@ -74,14 +155,14 @@ impl ExactGp {
             .collect();
         match &mut self.engine {
             Engine::Cholesky => {
-                let ch = Cholesky::new_with_jitter(&self.op.dense())
+                let ch = Cholesky::new_with_jitter(&self.op.as_operator().dense())
                     .expect("kernel matrix not PD");
                 predict(&k_star, &diag, |m| ch.solve_mat(m), &self.y)
             }
             Engine::Bbmm(e) => {
-                let precond = e.build_preconditioner(&self.op);
+                let op = self.op.as_operator();
+                let precond = e.build_preconditioner(op);
                 let max_iters = e.max_cg_iters.max(50);
-                let op = &self.op;
                 predict(
                     &k_star,
                     &diag,
@@ -163,6 +244,42 @@ mod tests {
     }
 
     #[test]
+    fn sharded_exact_gp_matches_dense_exact_gp() {
+        // same engine seed + numerically identical operators ⇒ the sharded
+        // model reproduces the dense model's training terms and posterior
+        let (x, y, xt, _yt) = dataset(100, 4);
+        let mut dense = ExactGp::new(
+            x.clone(),
+            y.clone(),
+            Box::new(Rbf::new(0.5, 1.0)),
+            0.05,
+            Engine::Bbmm(BbmmEngine::new(100, 10, 5, 7)),
+        );
+        let mut sharded = ExactGp::new_sharded(
+            x,
+            y,
+            Box::new(Rbf::new(0.5, 1.0)),
+            0.05,
+            Engine::Bbmm(BbmmEngine::new(100, 10, 5, 7)),
+            6,
+        );
+        assert_eq!(dense.op().shard_count(), 1);
+        assert_eq!(sharded.op().shard_count(), 6);
+        let a = dense.mll_and_grad();
+        let b = sharded.mll_and_grad();
+        assert!((a.nmll - b.nmll).abs() < 1e-8, "{} vs {}", a.nmll, b.nmll);
+        for p in 0..dense.n_params() {
+            assert!((a.grad[p] - b.grad[p]).abs() < 1e-8, "grad {p}");
+        }
+        let pa = dense.predict(&xt);
+        let pb = sharded.predict(&xt);
+        for i in 0..xt.rows() {
+            assert!((pa.mean[i] - pb.mean[i]).abs() < 1e-8, "mean {i}");
+            assert!((pa.var[i] - pb.var[i]).abs() < 1e-8, "var {i}");
+        }
+    }
+
+    #[test]
     fn mll_decreases_with_better_hyperparameters() {
         // moving lengthscale toward the data-generating scale lowers nmll
         let (x, y, _xt, _yt) = dataset(100, 3);
@@ -173,13 +290,7 @@ mod tests {
             0.05,
             Engine::Cholesky,
         );
-        let mut good = ExactGp::new(
-            x,
-            y,
-            Box::new(Rbf::new(0.5, 1.0)),
-            0.05,
-            Engine::Cholesky,
-        );
+        let mut good = ExactGp::new(x, y, Box::new(Rbf::new(0.5, 1.0)), 0.05, Engine::Cholesky);
         assert!(good.mll_and_grad().nmll < bad.mll_and_grad().nmll);
     }
 }

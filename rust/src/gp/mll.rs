@@ -336,6 +336,32 @@ mod tests {
     }
 
     #[test]
+    fn engines_accept_sharded_operators_through_the_trait() {
+        // both engines consume &dyn KernelOperator, so the sharded operator
+        // drops in with no engine changes and reproduces the dense numbers
+        use crate::kernels::ShardedKernelOp;
+        let n = 60;
+        let mut rng = Rng::new(31);
+        let x = Mat::from_fn(n, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+        let y: Vec<f64> = (0..n)
+            .map(|i| (x.get(i, 0) * 3.0).sin() + 0.05 * rng.normal())
+            .collect();
+        let sharded = ShardedKernelOp::new(x.clone(), Box::new(Rbf::new(0.5, 1.0)), 0.05, 5);
+        let dense = DenseKernelOp::new(x, Box::new(Rbf::new(0.5, 1.0)), 0.05);
+        let cd = CholeskyEngine.mll_and_grad(&dense, &y);
+        let cs = CholeskyEngine.mll_and_grad(&sharded, &y);
+        assert!((cd.nmll - cs.nmll).abs() < 1e-9, "{} vs {}", cd.nmll, cs.nmll);
+        let mut bd = BbmmEngine::new(n, 32, 5, 8);
+        let mut bs = BbmmEngine::new(n, 32, 5, 8);
+        let rd = bd.mll_and_grad(&dense, &y);
+        let rs = bs.mll_and_grad(&sharded, &y);
+        assert!((rd.nmll - rs.nmll).abs() < 1e-8, "{} vs {}", rd.nmll, rs.nmll);
+        for p in 0..dense.n_params() {
+            assert!((rd.grad[p] - rs.grad[p]).abs() < 1e-8, "grad {p}");
+        }
+    }
+
+    #[test]
     fn preconditioning_reduces_iterations() {
         // narrow lengthscale + small noise ⇒ ill-conditioned K̂
         let n = 150;

@@ -25,9 +25,9 @@ pub mod sgpr;
 pub mod ski;
 
 pub use dong::DongEngine;
+pub use exact::{ExactGp, ExactOp};
 pub use fitc::FitcOp;
-pub use multitask::MultitaskOp;
-pub use exact::ExactGp;
 pub use mll::{BbmmEngine, CholeskyEngine, InferenceEngine, MllGrad};
+pub use multitask::MultitaskOp;
 pub use sgpr::{SgprCholeskyEngine, SgprOp};
 pub use ski::SkiOp;

@@ -179,10 +179,7 @@ mod tests {
 
     #[test]
     fn nested_composition_param_layout() {
-        let inner = SumKernel::new(
-            Box::new(Rbf::new(1.0, 1.0)),
-            Box::new(Rbf::new(2.0, 2.0)),
-        );
+        let inner = SumKernel::new(Box::new(Rbf::new(1.0, 1.0)), Box::new(Rbf::new(2.0, 2.0)));
         let outer = ProductKernel::new(Box::new(inner), Box::new(Matern32::new(0.5, 1.0)));
         assert_eq!(outer.n_params(), 6);
         assert_eq!(outer.param_names().len(), 6);

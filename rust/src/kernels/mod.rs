@@ -4,6 +4,7 @@
 //! that multiplies the (noise-added) kernel matrix `K̂ = K + σ²I` — and its
 //! hyperparameter derivatives — against a dense matrix. That routine is the
 //! [`KernelOperator`] trait here. Exact GPs ([`operator::DenseKernelOp`]),
+//! their row-sharded variant ([`sharded::ShardedKernelOp`]),
 //! Bayesian linear regression ([`linear::LinearKernelOp`]), SGPR
 //! ([`crate::gp::sgpr::SgprOp`]) and SKI ([`crate::gp::ski::SkiOp`]) are all
 //! small implementations of it — mirroring the paper's "50 lines of code"
@@ -17,12 +18,14 @@ pub mod compose;
 pub mod deep;
 pub mod linear;
 pub mod operator;
+pub mod sharded;
 pub mod stationary;
 
 pub use compose::{ProductKernel, SumKernel};
 pub use deep::DeepFeatureMap;
 pub use linear::LinearKernelOp;
 pub use operator::DenseKernelOp;
+pub use sharded::ShardedKernelOp;
 pub use stationary::{Matern12, Matern32, Matern52, Rbf};
 
 use crate::tensor::Mat;

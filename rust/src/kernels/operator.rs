@@ -11,9 +11,10 @@ use crate::tensor::Mat;
 use crate::util::fastmath::fast_exp;
 use crate::util::par;
 
-/// Which function of r² a stationary tile evaluates.
+/// Which function of r² a stationary tile evaluates (shared with the
+/// sharded operator in [`super::sharded`]).
 #[derive(Clone, Copy, PartialEq, Eq)]
-enum TileFn {
+pub(crate) enum TileFn {
     /// k(r)
     Value,
     /// ∂k/∂log ℓ
@@ -24,7 +25,7 @@ enum TileFn {
 /// `out[j] = f(r2[j])` for the family/derivative requested. This is the
 /// scalar-free inner loop of the fused mat-mul fast path — everything here
 /// autovectorizes (fast_exp is branch-free, sqrt is an instruction).
-fn stationary_apply(sp: &StationaryParams, tf: TileFn, r2: &[f64], out: &mut [f64]) {
+pub(crate) fn stationary_apply(sp: &StationaryParams, tf: TileFn, r2: &[f64], out: &mut [f64]) {
     let s = sp.outputscale;
     let ls = sp.lengthscale;
     match (sp.family, tf) {
@@ -86,6 +87,31 @@ fn stationary_apply(sp: &StationaryParams, tf: TileFn, r2: &[f64], out: &mut [f6
     }
 }
 
+/// `r2[j] = |xᵢ|² + |xⱼ|² − 2·xᵢᵀxⱼ` for row `i` against the cached
+/// transpose `xt (d×n)` and per-row norms, clamped at 0 against rounding —
+/// the distance pass shared by the fused stationary operators (dense and
+/// [`super::sharded`]). d vectorised axpy passes, streaming over j.
+pub(crate) fn squared_dists_row(x: &Mat, xt: &Mat, xnorm: &[f64], i: usize, r2: &mut [f64]) {
+    let n = x.rows();
+    let d = x.cols();
+    let xi = x.row(i);
+    r2.iter_mut().for_each(|v| *v = 0.0);
+    for dd in 0..d {
+        let xv = xi[dd];
+        if xv == 0.0 {
+            continue;
+        }
+        let xtrow = xt.row(dd);
+        for j in 0..n {
+            r2[j] += xv * xtrow[j];
+        }
+    }
+    let xin = xnorm[i];
+    for j in 0..n {
+        r2[j] = (xin + xnorm[j] - 2.0 * r2[j]).max(0.0);
+    }
+}
+
 /// Exact kernel operator over a training set `X (n×d)`.
 pub struct DenseKernelOp {
     x: Mat,
@@ -128,21 +154,7 @@ impl DenseKernelOp {
 
     /// Cross-kernel matrix `K(A, B)` for arbitrary point sets (predictions).
     pub fn cross(&self, a: &Mat, b: &Mat) -> Mat {
-        if let Some(sp) = self.kernel.stationary() {
-            return cross_stationary(&sp, a, b);
-        }
-        let k = self.kernel.as_ref();
-        let mut out = Mat::zeros(a.rows(), b.rows());
-        let bref = &b;
-        par::parallel_rows_mut(out.data_mut(), a.rows(), b.rows(), |row_lo, chunk| {
-            for (ri, orow) in chunk.chunks_mut(b.rows()).enumerate() {
-                let xa = a.row(row_lo + ri);
-                for (j, o) in orow.iter_mut().enumerate() {
-                    *o = k.eval(xa, bref.row(j));
-                }
-            }
-        });
-        out
+        cross_kernel(self.kernel.as_ref(), a, b)
     }
 
     /// Fused stationary mat-mul: `K·M (+ σ²M)` or `(∂K/∂log ℓ)·M`, with r²
@@ -157,7 +169,6 @@ impl DenseKernelOp {
         let n = self.n();
         assert_eq!(m.rows(), n);
         let t = m.cols();
-        let d = self.x.cols();
         let x = &self.x;
         // transpose X so the per-row distance pass streams over j
         let xt = x.transpose(); // d×n
@@ -175,24 +186,7 @@ impl DenseKernelOp {
             let mut krow = vec![0.0f64; n];
             for (ri, orow) in chunk.chunks_mut(t).enumerate() {
                 let i = row_lo + ri;
-                let xi = x.row(i);
-                // dots[j] = xiᵀ x_j via d vectorised axpy passes
-                dots.iter_mut().for_each(|v| *v = 0.0);
-                for dd in 0..d {
-                    let xv = xi[dd];
-                    if xv == 0.0 {
-                        continue;
-                    }
-                    let xtrow = xt_ref.row(dd);
-                    for j in 0..n {
-                        dots[j] += xv * xtrow[j];
-                    }
-                }
-                // r²[j] = |xi|² + |xj|² − 2·dots[j], clamped (reuse dots)
-                let xin = xnorm_ref[i];
-                for j in 0..n {
-                    dots[j] = (xin + xnorm_ref[j] - 2.0 * dots[j]).max(0.0);
-                }
+                squared_dists_row(x, xt_ref, xnorm_ref, i, &mut dots);
                 stationary_apply(sp, tf, &dots, &mut krow);
                 // orow[c] = ⟨krow, Mᵀ[c]⟩ — t fully-vectorised n-dots
                 for (c, o) in orow.iter_mut().enumerate() {
@@ -213,6 +207,26 @@ impl DenseKernelOp {
         });
         out
     }
+}
+
+/// Cross-kernel matrix `K(A, B)` for any kernel — stationary fast path
+/// when available, generic parallel eval otherwise. Shared by the dense
+/// and sharded operators.
+pub(crate) fn cross_kernel(kernel: &dyn Kernel, a: &Mat, b: &Mat) -> Mat {
+    if let Some(sp) = kernel.stationary() {
+        return cross_stationary(&sp, a, b);
+    }
+    let mut out = Mat::zeros(a.rows(), b.rows());
+    let bref = &b;
+    par::parallel_rows_mut(out.data_mut(), a.rows(), b.rows(), |row_lo, chunk| {
+        for (ri, orow) in chunk.chunks_mut(b.rows()).enumerate() {
+            let xa = a.row(row_lo + ri);
+            for (j, o) in orow.iter_mut().enumerate() {
+                *o = kernel.eval(xa, bref.row(j));
+            }
+        }
+    });
+    out
 }
 
 /// Vectorised stationary cross-covariance `K(A, B)`.

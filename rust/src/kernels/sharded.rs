@@ -1,0 +1,419 @@
+//! Sharded exact-GP operator: `(K(X,X) + σ²I)·M` as `S` row-shards.
+//!
+//! [`super::DenseKernelOp`] fuses tile generation with the mat-mul but
+//! still walks the whole operator in one monolithic parallel-for per mBCG
+//! iteration. Following Wang et al. 2019 (*Exact Gaussian Processes on a
+//! Million Data Points*, 1903.08114), [`ShardedKernelOp`] partitions the
+//! training rows into `S` contiguous shards instead. Each shard owns the
+//! tile work-queue for its row-block, scheduled by
+//! [`crate::runtime::shard`] (static striping + work stealing), and also
+//! exposes the block as a standalone partial product through
+//! [`crate::linalg::mbcg::ShardedMmm`] so the solver can assemble
+//! `K̂·M` shard by shard — the seam along which shards later map 1:1 onto
+//! devices or processes.
+//!
+//! Numerics are identical to the dense operator (same distance expansion,
+//! same summation order), and kernel rows are still produced on the fly,
+//! so peak memory stays O(n·t + tile·n) — no n×n matrix is ever formed.
+
+use super::operator::{cross_kernel, squared_dists_row, stationary_apply, TileFn};
+use super::{Kernel, KernelOperator};
+use crate::linalg::mbcg::ShardedMmm;
+use crate::runtime::shard::{partition_rows, run_rows_mut, ShardQueue};
+use crate::tensor::{Mat, Scalar};
+use std::ops::Range;
+
+/// Rows per scheduled tile inside a shard (matches the dense operator's
+/// cache tile: 64 rows × n cols of f64 stays in L2 for n up to ~8k).
+pub const DEFAULT_TILE: usize = 64;
+
+/// Which kernel function a block fill evaluates.
+enum BlockFn {
+    /// `K·M` (optionally plus `σ²M`)
+    Value { add_noise: bool },
+    /// `(∂K/∂raw_p)·M` for a kernel parameter `p` (noise handled upstream)
+    DParam(usize),
+}
+
+/// Exact kernel operator over `X (n×d)` partitioned into row shards.
+pub struct ShardedKernelOp {
+    x: Mat,
+    kernel: Box<dyn Kernel>,
+    /// raw log σ²
+    raw_noise: f64,
+    /// contiguous, ordered row ranges covering `0..n`
+    shards: Vec<Range<usize>>,
+    /// rows per scheduled tile within a shard
+    tile: usize,
+    /// cached Xᵀ (d×n): the distance pass streams over j
+    xt: Mat,
+    /// cached per-row squared norms |xᵢ|²
+    xnorm: Vec<f64>,
+}
+
+impl ShardedKernelOp {
+    /// Build over `n_shards` row shards (clamped to `1..=n`).
+    pub fn new(x: Mat, kernel: Box<dyn Kernel>, noise: f64, n_shards: usize) -> Self {
+        assert!(noise > 0.0);
+        let n = x.rows();
+        let shards = partition_rows(n, n_shards);
+        let xt = x.transpose();
+        let xnorm: Vec<f64> = (0..n)
+            .map(|i| x.row(i).iter().map(|v| v * v).sum())
+            .collect();
+        ShardedKernelOp {
+            x,
+            kernel,
+            raw_noise: noise.ln(),
+            shards,
+            tile: DEFAULT_TILE,
+            xt,
+            xnorm,
+        }
+    }
+
+    /// Override the scheduler tile size (rows per work item).
+    pub fn with_tile(mut self, tile: usize) -> Self {
+        self.tile = tile.max(1);
+        self
+    }
+
+    pub fn x(&self) -> &Mat {
+        &self.x
+    }
+
+    pub fn kernel(&self) -> &dyn Kernel {
+        self.kernel.as_ref()
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shards(&self) -> &[Range<usize>] {
+        &self.shards
+    }
+
+    /// Full raw parameter vector `[kernel params…, log σ²]`.
+    pub fn params(&self) -> Vec<f64> {
+        let mut p = self.kernel.params();
+        p.push(self.raw_noise);
+        p
+    }
+
+    pub fn set_params(&mut self, raw: &[f64]) {
+        assert_eq!(raw.len(), self.n_params());
+        let nk = self.kernel.n_params();
+        self.kernel.set_params(&raw[..nk]);
+        self.raw_noise = raw[nk];
+    }
+
+    /// Cross-kernel matrix `K(A, B)` for arbitrary point sets (predictions).
+    pub fn cross(&self, a: &Mat, b: &Mat) -> Mat {
+        cross_kernel(self.kernel.as_ref(), a, b)
+    }
+
+    /// Generic-precision sharded matmul (the f32 path of the Figure-1
+    /// experiments and the precision property tests). Kernel entries are
+    /// evaluated in f64 and contracted in `T`.
+    pub fn matmul_scalar<T: Scalar>(&self, m: &Mat<T>) -> Mat<T> {
+        self.block_matmul(m, BlockFn::Value { add_noise: true })
+    }
+
+    /// Schedule the requested kernel product over the shard queues.
+    fn block_matmul<T: Scalar>(&self, m: &Mat<T>, bf: BlockFn) -> Mat<T> {
+        let n = self.x.rows();
+        assert_eq!(m.rows(), n);
+        let t = m.cols();
+        let mut out = Mat::<T>::zeros(n, t);
+        let queues: Vec<ShardQueue> = self
+            .shards
+            .iter()
+            .map(|r| ShardQueue::new(r.clone(), self.tile))
+            .collect();
+        let bf_ref = &bf;
+        run_rows_mut(out.data_mut(), n, t, &queues, |_shard, rows, chunk| {
+            self.fill_rows(rows, m, bf_ref, chunk);
+        });
+        out
+    }
+
+    /// Compute rows `rows` of the requested kernel product into `out`
+    /// (`rows.len() × m.cols()` row-major, zero-initialised by the caller).
+    fn fill_rows<T: Scalar>(&self, rows: Range<usize>, m: &Mat<T>, bf: &BlockFn, out: &mut [T]) {
+        let n = self.x.rows();
+        let t = m.cols();
+        let sp = self.kernel.stationary();
+        let nk = self.kernel.n_params();
+        let mut krow = vec![0.0f64; n];
+        let mut r2 = vec![0.0f64; n];
+        let mut grad = vec![0.0f64; nk];
+        for (ri, i) in rows.enumerate() {
+            // 1) kernel row i, always evaluated in f64
+            match (bf, &sp) {
+                (BlockFn::Value { .. }, Some(sp)) => {
+                    squared_dists_row(&self.x, &self.xt, &self.xnorm, i, &mut r2);
+                    stationary_apply(sp, TileFn::Value, &r2, &mut krow);
+                }
+                (BlockFn::DParam(p), Some(sp)) => {
+                    // stationary layout: param 0 = log ℓ, param 1 = log s;
+                    // ∂K/∂log s = K (noiseless)
+                    debug_assert!(*p < nk);
+                    squared_dists_row(&self.x, &self.xt, &self.xnorm, i, &mut r2);
+                    let tf = if *p == 0 {
+                        TileFn::DLogLengthscale
+                    } else {
+                        TileFn::Value
+                    };
+                    stationary_apply(sp, tf, &r2, &mut krow);
+                }
+                (BlockFn::Value { .. }, None) => {
+                    let xi = self.x.row(i);
+                    for (j, kv) in krow.iter_mut().enumerate() {
+                        *kv = self.kernel.eval(xi, self.x.row(j));
+                    }
+                }
+                (BlockFn::DParam(p), None) => {
+                    let xi = self.x.row(i);
+                    for (j, kv) in krow.iter_mut().enumerate() {
+                        self.kernel.eval_grad(xi, self.x.row(j), &mut grad);
+                        *kv = grad[*p];
+                    }
+                }
+            }
+            // 2) contract against M (accumulating in T), streaming M's rows
+            let orow = &mut out[ri * t..(ri + 1) * t];
+            for (j, &kv) in krow.iter().enumerate() {
+                if kv == 0.0 {
+                    continue;
+                }
+                let kvt = T::from_f64(kv);
+                let mrow = m.row(j);
+                for c in 0..t {
+                    orow[c] += kvt * mrow[c];
+                }
+            }
+            if let BlockFn::Value { add_noise: true } = bf {
+                let sigma2 = T::from_f64(self.raw_noise.exp());
+                let mrow = m.row(i);
+                for c in 0..t {
+                    orow[c] += sigma2 * mrow[c];
+                }
+            }
+        }
+    }
+
+}
+
+impl KernelOperator for ShardedKernelOp {
+    fn n(&self) -> usize {
+        self.x.rows()
+    }
+
+    fn n_params(&self) -> usize {
+        self.kernel.n_params() + 1
+    }
+
+    fn matmul(&self, m: &Mat) -> Mat {
+        self.block_matmul(m, BlockFn::Value { add_noise: true })
+    }
+
+    fn dmatmul(&self, param: usize, m: &Mat) -> Mat {
+        let nk = self.kernel.n_params();
+        assert!(param < nk + 1);
+        if param == nk {
+            // dK̂/draw_noise = σ² I  (θ = e^{raw})
+            let mut out = m.clone();
+            out.scale_assign(self.noise());
+            return out;
+        }
+        self.block_matmul(m, BlockFn::DParam(param))
+    }
+
+    fn diag(&self) -> Vec<f64> {
+        // self.x.rows(), not self.n(): both implemented traits expose `n`
+        (0..self.x.rows())
+            .map(|i| self.kernel.eval(self.x.row(i), self.x.row(i)))
+            .collect()
+    }
+
+    fn row(&self, i: usize) -> Vec<f64> {
+        let xi = self.x.row(i);
+        (0..self.x.rows())
+            .map(|j| self.kernel.eval(xi, self.x.row(j)))
+            .collect()
+    }
+
+    fn noise(&self) -> f64 {
+        self.raw_noise.exp()
+    }
+
+    fn dense(&self) -> Mat {
+        let mut k = self.cross(&self.x, &self.x);
+        k.add_diag(self.noise());
+        k
+    }
+}
+
+/// The solver-facing seam: shard `s` computes its own row-block of `K̂·M`
+/// serially (the scheduler above this — [`crate::linalg::mbcg::sharded_mmm`]
+/// — claims whole shards, which is the granularity that later maps onto
+/// devices/processes; in-host load balancing uses the tile queues instead).
+impl<T: Scalar> ShardedMmm<T> for ShardedKernelOp {
+    fn n(&self) -> usize {
+        self.x.rows()
+    }
+
+    fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn shard_rows(&self, s: usize) -> Range<usize> {
+        self.shards[s].clone()
+    }
+
+    fn shard_matmul(&self, s: usize, m: &Mat<T>, out: &mut [T]) {
+        let rows = self.shards[s].clone();
+        self.fill_rows(rows, m, &BlockFn::Value { add_noise: true }, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::stationary::{Matern32, Rbf};
+    use crate::kernels::{DenseKernelOp, SumKernel};
+    use crate::linalg::mbcg::sharded_mmm;
+    use crate::util::Rng;
+
+    fn setup(n: usize, d: usize, shards: usize, seed: u64) -> (ShardedKernelOp, DenseKernelOp) {
+        let mut rng = Rng::new(seed);
+        let x = Mat::from_fn(n, d, |_, _| rng.uniform_in(-1.0, 1.0));
+        let sharded = ShardedKernelOp::new(x.clone(), Box::new(Rbf::new(0.5, 1.2)), 0.1, shards);
+        let dense = DenseKernelOp::new(x, Box::new(Rbf::new(0.5, 1.2)), 0.1);
+        (sharded, dense)
+    }
+
+    #[test]
+    fn matmul_matches_dense_operator_across_shard_counts() {
+        let n = 90;
+        for &s in &[1usize, 2, 5, 13, n] {
+            let (sharded, dense) = setup(n, 3, s, 1);
+            let mut rng = Rng::new(2);
+            let m = Mat::from_fn(n, 4, |_, _| rng.normal());
+            let got = sharded.matmul(&m);
+            let want = dense.matmul(&m);
+            assert!(
+                got.max_abs_diff(&want) < 1e-12,
+                "shards {s}: {}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn tiny_tiles_do_not_change_the_result() {
+        let (sharded, dense) = setup(70, 2, 4, 3);
+        let sharded = sharded.with_tile(1);
+        let mut rng = Rng::new(4);
+        let m = Mat::from_fn(70, 3, |_, _| rng.normal());
+        assert!(sharded.matmul(&m).max_abs_diff(&dense.matmul(&m)) < 1e-12);
+    }
+
+    #[test]
+    fn dmatmul_matches_dense_operator() {
+        let (mut sharded, mut dense) = setup(40, 2, 3, 5);
+        let raw = dense.params();
+        sharded.set_params(&raw);
+        dense.set_params(&raw);
+        let mut rng = Rng::new(6);
+        let m = Mat::from_fn(40, 2, |_, _| rng.normal());
+        for p in 0..dense.n_params() {
+            let got = sharded.dmatmul(p, &m);
+            let want = dense.dmatmul(p, &m);
+            assert!(
+                got.max_abs_diff(&want) < 1e-12,
+                "param {p}: {}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn non_stationary_kernel_takes_the_generic_path() {
+        let mut rng = Rng::new(7);
+        let x = Mat::from_fn(35, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+        let kernel = || -> Box<dyn Kernel> {
+            Box::new(SumKernel::new(
+                Box::new(Rbf::new(0.5, 1.0)),
+                Box::new(Matern32::new(0.7, 0.5)),
+            ))
+        };
+        let sharded = ShardedKernelOp::new(x.clone(), kernel(), 0.07, 6);
+        let dense = DenseKernelOp::new(x, kernel(), 0.07);
+        let m = Mat::from_fn(35, 3, |_, _| rng.normal());
+        assert!(sharded.matmul(&m).max_abs_diff(&dense.matmul(&m)) < 1e-11);
+        for p in 0..dense.n_params() {
+            let diff = sharded.dmatmul(p, &m).max_abs_diff(&dense.dmatmul(p, &m));
+            assert!(diff < 1e-11, "param {p}: {diff}");
+        }
+    }
+
+    #[test]
+    fn shard_blocks_assemble_to_the_full_product() {
+        let (sharded, dense) = setup(57, 3, 5, 8);
+        let mut rng = Rng::new(9);
+        let m = Mat::from_fn(57, 4, |_, _| rng.normal());
+        let got = sharded_mmm(&sharded, &m);
+        assert!(got.max_abs_diff(&dense.matmul(&m)) < 1e-12);
+    }
+
+    #[test]
+    fn f32_matmul_tracks_f64_to_f32_accuracy() {
+        let (sharded, dense) = setup(60, 2, 4, 10);
+        let mut rng = Rng::new(11);
+        let m = Mat::from_fn(60, 3, |_, _| rng.normal());
+        let want = dense.matmul(&m);
+        let got32 = sharded.matmul_scalar::<f32>(&m.cast());
+        let diff = got32.cast::<f64>().max_abs_diff(&want);
+        assert!(diff < 1e-3 * (1.0 + want.fro_norm()), "diff {diff}");
+    }
+
+    #[test]
+    fn cross_and_dense_match_the_dense_operator() {
+        let (sharded, dense) = setup(25, 2, 3, 12);
+        let mut rng = Rng::new(13);
+        let xs = Mat::from_fn(9, 2, |_, _| rng.uniform());
+        assert!(
+            sharded
+                .cross(&xs, sharded.x())
+                .max_abs_diff(&dense.cross(&xs, dense.x()))
+                == 0.0
+        );
+        assert!(
+            KernelOperator::dense(&sharded).max_abs_diff(&KernelOperator::dense(&dense)) < 1e-12
+        );
+    }
+
+    #[test]
+    fn params_roundtrip_and_shard_plan() {
+        let (mut sharded, _dense) = setup(10, 2, 4, 14);
+        assert_eq!(sharded.shard_count(), 4);
+        let mut lo = 0;
+        for r in sharded.shards() {
+            assert_eq!(r.start, lo);
+            lo = r.end;
+        }
+        assert_eq!(lo, 10);
+        let mut p = sharded.params();
+        assert_eq!(p.len(), sharded.n_params());
+        p[0] += 0.25;
+        sharded.set_params(&p);
+        assert!((sharded.params()[0] - p[0]).abs() < 1e-15);
+        // more shards than rows clamps to n
+        let mut rng = Rng::new(15);
+        let x = Mat::from_fn(3, 1, |_, _| rng.uniform());
+        let tiny = ShardedKernelOp::new(x, Box::new(Rbf::new(0.5, 1.0)), 0.1, 64);
+        assert_eq!(tiny.shard_count(), 3);
+    }
+}

@@ -32,7 +32,11 @@ pub fn pcg<T: Scalar>(
     tol: f64,
 ) -> PcgResult<T> {
     let n = b.len();
-    let bnorm = b.iter().map(|v| v.to_f64() * v.to_f64()).sum::<f64>().sqrt();
+    let bnorm = b
+        .iter()
+        .map(|v| v.to_f64() * v.to_f64())
+        .sum::<f64>()
+        .sqrt();
     if bnorm == 0.0 {
         return PcgResult {
             x: vec![T::ZERO; n],
@@ -101,12 +105,7 @@ fn dot64<T: Scalar>(a: &[T], b: &[T]) -> f64 {
 }
 
 /// Convenience: CG against a dense matrix (used heavily in tests/figures).
-pub fn pcg_dense<T: Scalar>(
-    a: &Mat<T>,
-    b: &[T],
-    max_iters: usize,
-    tol: f64,
-) -> PcgResult<T> {
+pub fn pcg_dense<T: Scalar>(a: &Mat<T>, b: &[T], max_iters: usize, tol: f64) -> PcgResult<T> {
     pcg(|v| a.matvec(v), b, |r| r.to_vec(), max_iters, tol)
 }
 

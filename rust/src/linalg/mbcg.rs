@@ -15,6 +15,10 @@
 //! the (storage-hungry, numerically fragile) Lanczos algorithm.
 
 use crate::tensor::{Mat, Scalar};
+use crate::util::par;
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// A symmetric tridiagonal matrix stored by diagonals (always f64 — the
 /// coefficients are accumulated in f64 regardless of solve precision).
@@ -101,9 +105,7 @@ pub fn mbcg<T: Scalar>(
     let s = b.cols();
     assert!(opts.n_solve_only <= s);
 
-    let bnorms: Vec<f64> = (0..s)
-        .map(|c| col_norm(b, c).max(1e-300))
-        .collect();
+    let bnorms: Vec<f64> = (0..s).map(|c| col_norm(b, c).max(1e-300)).collect();
 
     let mut u = Mat::<T>::zeros(n, s); // current solutions
     let mut r = b.clone(); // residuals (b - A·0)
@@ -193,6 +195,86 @@ pub fn mbcg<T: Scalar>(
         final_residuals: final_res,
         residual_history: history,
     }
+}
+
+/// A blackbox operator whose `K̂·M` is computed as per-shard row-blocks —
+/// the seam between mBCG and the sharded kernel operators (Wang et al.
+/// 2019: partition the kernel into row shards so peak memory per worker is
+/// O(n·t + shard·n) and shards can map onto devices/processes).
+///
+/// Shards must be contiguous, disjoint, and cover `0..n` in order.
+pub trait ShardedMmm<T: Scalar = f64>: Sync {
+    /// number of rows/columns of the implicit SPD matrix
+    fn n(&self) -> usize;
+    /// number of row shards
+    fn n_shards(&self) -> usize;
+    /// the contiguous row range owned by shard `s`
+    fn shard_rows(&self, s: usize) -> Range<usize>;
+    /// Write shard `s`'s row-block of `K̂·M` into `out` (row-major,
+    /// `shard_rows(s).len() × m.cols()`, zero-initialised by the caller).
+    fn shard_matmul(&self, s: usize, m: &Mat<T>, out: &mut [T]);
+}
+
+/// Assemble the full `K̂·M` from per-shard partial products: shards are
+/// claimed by a worker pool and each writes its disjoint row-block of the
+/// output, so the "reduction" is a concatenation with no extra copies.
+pub fn sharded_mmm<T: Scalar>(op: &dyn ShardedMmm<T>, m: &Mat<T>) -> Mat<T> {
+    let n = op.n();
+    assert_eq!(m.rows(), n);
+    let t = m.cols();
+    let s = op.n_shards();
+    let mut out = Mat::<T>::zeros(n, t);
+    {
+        // slice the output into per-shard row-blocks (disjoint by contract)
+        let mut blocks: Vec<Mutex<&mut [T]>> = Vec::with_capacity(s);
+        let mut rest = out.data_mut();
+        let mut row = 0;
+        for sh in 0..s {
+            let r = op.shard_rows(sh);
+            assert_eq!(r.start, row, "shards must be contiguous and ordered");
+            let (head, tail) = rest.split_at_mut((r.end - r.start) * t);
+            blocks.push(Mutex::new(head));
+            rest = tail;
+            row = r.end;
+        }
+        assert_eq!(row, n, "shards must cover all rows");
+        let workers = par::num_threads().min(s).max(1);
+        if workers <= 1 {
+            for (sh, block) in blocks.iter().enumerate() {
+                let mut guard = block.lock().unwrap();
+                op.shard_matmul(sh, m, &mut **guard);
+            }
+        } else {
+            let next = AtomicUsize::new(0);
+            std::thread::scope(|scope| {
+                for _ in 0..workers {
+                    let next = &next;
+                    let blocks = &blocks;
+                    scope.spawn(move || loop {
+                        let sh = next.fetch_add(1, Ordering::Relaxed);
+                        if sh >= s {
+                            break;
+                        }
+                        let mut guard = blocks[sh].lock().unwrap();
+                        op.shard_matmul(sh, m, &mut **guard);
+                    });
+                }
+            });
+        }
+    }
+    out
+}
+
+/// [`mbcg`] whose per-iteration `mmm_A` is the shard-assembled product of
+/// [`sharded_mmm`] — the million-point configuration, where the monolithic
+/// operator walk is replaced by per-shard work queues.
+pub fn mbcg_sharded<T: Scalar>(
+    op: &dyn ShardedMmm<T>,
+    b: &Mat<T>,
+    precond: impl Fn(&Mat<T>) -> Mat<T>,
+    opts: &MbcgOptions,
+) -> MbcgResult<T> {
+    mbcg(|m| sharded_mmm(op, m), b, precond, opts)
 }
 
 /// Observation 3 (Saad §6.7.3): rebuild the Lanczos `T̃` from CG's α/β.
@@ -444,15 +526,89 @@ mod tests {
         let mut b = Mat::zeros(n, 2);
         let mut rng = Rng::new(16);
         b.set_col(1, &rng.normal_vec(n));
-        let res = mbcg(
-            |m| a.matmul(m),
-            &b,
-            |m| m.clone(),
-            &MbcgOptions::default(),
-        );
+        let res = mbcg(|m| a.matmul(m), &b, |m| m.clone(), &MbcgOptions::default());
         for i in 0..n {
             assert_eq!(res.solves.get(i, 0), 0.0);
         }
+    }
+
+    /// Toy sharded operator over an explicit dense SPD matrix: shard `s`
+    /// multiplies its row-block of `A` against `M`.
+    struct DenseSharded {
+        a: Mat,
+        shards: Vec<std::ops::Range<usize>>,
+    }
+
+    impl DenseSharded {
+        fn new(a: Mat, n_shards: usize) -> Self {
+            let shards = crate::runtime::shard::partition_rows(a.rows(), n_shards);
+            DenseSharded { a, shards }
+        }
+    }
+
+    impl ShardedMmm for DenseSharded {
+        fn n(&self) -> usize {
+            self.a.rows()
+        }
+        fn n_shards(&self) -> usize {
+            self.shards.len()
+        }
+        fn shard_rows(&self, s: usize) -> std::ops::Range<usize> {
+            self.shards[s].clone()
+        }
+        fn shard_matmul(&self, s: usize, m: &Mat, out: &mut [f64]) {
+            let t = m.cols();
+            let rows = self.shards[s].clone();
+            for (ri, i) in rows.enumerate() {
+                let arow = self.a.row(i);
+                let orow = &mut out[ri * t..(ri + 1) * t];
+                for (j, &av) in arow.iter().enumerate() {
+                    let mrow = m.row(j);
+                    for c in 0..t {
+                        orow[c] += av * mrow[c];
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_mmm_assembles_the_full_product() {
+        let n = 83;
+        let a = spd(n, 21);
+        let mut rng = Rng::new(22);
+        let m = Mat::from_fn(n, 5, |_, _| rng.normal());
+        let want = a.matmul(&m);
+        for &s in &[1usize, 2, 5, 16, n] {
+            let op = DenseSharded::new(a.clone(), s);
+            let got = sharded_mmm(&op, &m);
+            assert!(
+                got.max_abs_diff(&want) < 1e-11,
+                "shards {s}: {}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn mbcg_sharded_matches_monolithic_mbcg() {
+        let n = 64;
+        let a = spd(n, 23);
+        let mut rng = Rng::new(24);
+        let b = Mat::from_fn(n, 4, |_, _| rng.normal());
+        let opts = MbcgOptions {
+            max_iters: n,
+            tol: 1e-12,
+            n_solve_only: 1,
+        };
+        let mono = mbcg(|m| a.matmul(m), &b, |m| m.clone(), &opts);
+        let op = DenseSharded::new(a.clone(), 7);
+        let shrd = mbcg_sharded(&op, &b, |m| m.clone(), &opts);
+        assert!(shrd.solves.max_abs_diff(&mono.solves) < 1e-9);
+        assert_eq!(shrd.iterations, mono.iterations);
+        assert_eq!(shrd.tridiags.len(), mono.tridiags.len());
+        let want = Cholesky::new(&a).unwrap().solve_mat(&b);
+        assert!(shrd.solves.max_abs_diff(&want) < 1e-7);
     }
 
     #[test]

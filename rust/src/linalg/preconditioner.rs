@@ -224,13 +224,7 @@ mod tests {
         k_noiseless.add_diag(-sigma2);
         let pc = pivoted_cholesky_dense(&k_noiseless, 5, 0.0);
         let pre = PartialCholPrecond::new(pc.l, sigma2);
-        let precond = crate::linalg::cg::pcg(
-            |v| k.matvec(v),
-            &b,
-            |r| pre.solve_vec(r),
-            400,
-            1e-8,
-        );
+        let precond = crate::linalg::cg::pcg(|v| k.matvec(v), &b, |r| pre.solve_vec(r), 400, 1e-8);
         assert!(
             precond.iterations * 2 < plain.iterations,
             "precond {} vs plain {}",

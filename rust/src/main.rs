@@ -110,7 +110,8 @@ fn print_help() {
            --engine bbmm|cholesky|dong       (default: bbmm)\n\
            --kernel rbf|matern52             (default: rbf)\n\
            --iters N --lr F --probes T --cg-iters P --precond-rank K\n\
-           --seed S --n N (override dataset size)"
+           --seed S --n N (override dataset size)\n\
+           --shards S          (serve: row-shard the kernel operator)"
     );
 }
 
@@ -257,13 +258,29 @@ fn cmd_serve(args: &Args) {
     kernel.set_params(&params[..nk]);
     let noise = params[nk].exp();
     let dim = ds.dim();
-    let gp = std::sync::Mutex::new(ExactGp::new(
-        ds.x_train.clone(),
-        ds.y_train.clone(),
-        kernel,
-        noise,
-        Engine::Bbmm(BbmmEngine::default()),
-    ));
+    // shard the serving operator when asked (--shards N): same numerics,
+    // but the hot mat-mul runs over per-shard work queues sized to traffic
+    let shards = args.usize_or("shards", 1);
+    let engine = Engine::Bbmm(BbmmEngine::default());
+    let gp = std::sync::Mutex::new(if shards > 1 {
+        ExactGp::new_sharded(
+            ds.x_train.clone(),
+            ds.y_train.clone(),
+            kernel,
+            noise,
+            engine,
+            shards,
+        )
+    } else {
+        ExactGp::new(
+            ds.x_train.clone(),
+            ds.y_train.clone(),
+            kernel,
+            noise,
+            engine,
+        )
+    });
+    let shard_count = gp.lock().unwrap().op().shard_count();
     let predict: PredictFn = Box::new(move |xs: &Mat| gp.lock().unwrap().predict(xs));
     let batcher = Arc::new(DynamicBatcher::new(
         dim,
@@ -275,9 +292,13 @@ fn cmd_serve(args: &Args) {
     ));
     let config = ServerConfig {
         addr: args.get_or("addr", "127.0.0.1:7777").to_string(),
+        shard_count,
         stop: Arc::new(AtomicBool::new(false)),
     };
-    println!("serving {dim}-feature GP predictions…");
+    println!(
+        "serving {dim}-feature GP predictions (operator shards: {})…",
+        config.shard_count
+    );
     serve(config, batcher, |addr| println!("listening on {addr}")).expect("server failed");
 }
 

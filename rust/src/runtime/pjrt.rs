@@ -1,0 +1,115 @@
+//! PJRT-backed artifact runtime (`--features pjrt`).
+//!
+//! Compiles HLO-text artifacts once on the PJRT CPU client, caches the
+//! executables, and runs them from the Rust hot path. Requires the
+//! vendored `xla` crate in [dependencies]; the offline default build uses
+//! [`super::stub`] instead.
+
+use super::{scan_artifacts, Result, RuntimeError, TensorF32};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A named, compiled artifact registry over one PJRT client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    artifact_dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU-backed runtime rooted at `artifact_dir`.
+    pub fn cpu(artifact_dir: impl Into<PathBuf>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| RuntimeError::new(format!("pjrt cpu client: {e:?}")))?;
+        Ok(Runtime {
+            client,
+            executables: HashMap::new(),
+            artifact_dir: artifact_dir.into(),
+        })
+    }
+
+    /// Whether compiled-artifact execution is possible in this build.
+    pub fn backend_available(&self) -> bool {
+        true
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.artifact_dir
+    }
+
+    /// Load + compile `<artifact_dir>/<name>.hlo.txt` under key `name`
+    /// (no-op if already loaded).
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.artifact_dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| RuntimeError::new(format!("parse {path:?}: {e:?}")))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| RuntimeError::new(format!("compile {name}: {e:?}")))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    pub fn is_loaded(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    pub fn loaded_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.executables.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// List artifacts available on disk (without loading them).
+    pub fn available(&self) -> Vec<String> {
+        scan_artifacts(&self.artifact_dir)
+    }
+
+    /// Execute artifact `name` with f32 inputs, returning all f32 outputs
+    /// (the jax lowering uses `return_tuple=True`, so the single result is
+    /// a tuple we decompose).
+    pub fn execute_f32(&self, name: &str, inputs: &[TensorF32]) -> Result<Vec<Vec<f32>>> {
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| RuntimeError::new(format!("artifact {name} not loaded")))?;
+        let mut literals = Vec::with_capacity(inputs.len());
+        for inp in inputs {
+            let lit = xla::Literal::vec1(inp.data)
+                .reshape(&inp.dims)
+                .map_err(|e| RuntimeError::new(format!("reshape input: {e:?}")))?;
+            literals.push(lit);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| RuntimeError::new(format!("execute {name}: {e:?}")))?;
+        let out_lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| RuntimeError::new(format!("fetch output: {e:?}")))?;
+        let parts = out_lit
+            .to_tuple()
+            .map_err(|e| RuntimeError::new(format!("decompose tuple: {e:?}")))?;
+        let mut outputs = Vec::with_capacity(parts.len());
+        for p in parts {
+            outputs.push(
+                p.to_vec::<f32>()
+                    .map_err(|e| RuntimeError::new(format!("output to_vec: {e:?}")))?,
+            );
+        }
+        Ok(outputs)
+    }
+
+    /// Check an artifact exists on disk.
+    pub fn artifact_exists(&self, name: &str) -> bool {
+        self.artifact_dir.join(format!("{name}.hlo.txt")).exists()
+    }
+}

@@ -1,0 +1,71 @@
+//! Stub artifact runtime (default build, `pjrt` feature disabled).
+//!
+//! Mirrors the API of the pjrt backend (`runtime/pjrt.rs`) so callers
+//! compile unchanged:
+//! artifact discovery on disk works, but loading/executing reports a clean
+//! error and [`Runtime::backend_available`] returns `false` so tests and
+//! CLIs can skip the PJRT path instead of failing.
+
+use super::{scan_artifacts, Result, RuntimeError, TensorF32};
+use std::path::{Path, PathBuf};
+
+/// A named artifact registry with no execution backend.
+pub struct Runtime {
+    artifact_dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a runtime rooted at `artifact_dir` (always succeeds — there
+    /// is no client to initialise).
+    pub fn cpu(artifact_dir: impl Into<PathBuf>) -> Result<Self> {
+        Ok(Runtime {
+            artifact_dir: artifact_dir.into(),
+        })
+    }
+
+    /// Whether compiled-artifact execution is possible in this build.
+    pub fn backend_available(&self) -> bool {
+        false
+    }
+
+    pub fn platform(&self) -> String {
+        "stub (built without the `pjrt` feature)".to_string()
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.artifact_dir
+    }
+
+    /// Always fails: there is no PJRT client to compile with.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        Err(RuntimeError::new(format!(
+            "cannot load artifact {name:?}: this build has no PJRT backend \
+             (enable the `pjrt` cargo feature with a vendored `xla` crate)"
+        )))
+    }
+
+    pub fn is_loaded(&self, _name: &str) -> bool {
+        false
+    }
+
+    pub fn loaded_names(&self) -> Vec<String> {
+        Vec::new()
+    }
+
+    /// List artifacts available on disk (without loading them).
+    pub fn available(&self) -> Vec<String> {
+        scan_artifacts(&self.artifact_dir)
+    }
+
+    /// Always fails: see [`Runtime::load`].
+    pub fn execute_f32(&self, name: &str, _inputs: &[TensorF32]) -> Result<Vec<Vec<f32>>> {
+        Err(RuntimeError::new(format!(
+            "cannot execute artifact {name:?}: this build has no PJRT backend"
+        )))
+    }
+
+    /// Check an artifact exists on disk.
+    pub fn artifact_exists(&self, name: &str) -> bool {
+        self.artifact_dir.join(format!("{name}.hlo.txt")).exists()
+    }
+}

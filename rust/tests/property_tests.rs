@@ -3,10 +3,12 @@
 //! and asserts an exact mathematical invariant — these are the Rust twins
 //! of the hypothesis sweeps in python/tests/.
 
-use bbmm_gp::kernels::{DenseKernelOp, KernelOperator, Matern32, Matern52, Rbf, SumKernel};
+use bbmm_gp::kernels::{
+    DenseKernelOp, Kernel, KernelOperator, Matern32, Matern52, Rbf, ShardedKernelOp, SumKernel,
+};
 use bbmm_gp::linalg::cholesky::Cholesky;
 use bbmm_gp::linalg::fft::{fft_inplace, Cplx};
-use bbmm_gp::linalg::mbcg::{mbcg, MbcgOptions};
+use bbmm_gp::linalg::mbcg::{mbcg, mbcg_sharded, MbcgOptions};
 use bbmm_gp::linalg::pivoted_cholesky::pivoted_cholesky_dense;
 use bbmm_gp::linalg::toeplitz::ToeplitzOp;
 use bbmm_gp::linalg::tridiag::SymTridiagEig;
@@ -256,6 +258,90 @@ fn prop_preconditioned_mbcg_same_solution_as_plain() {
             plain.solves.max_abs_diff(&precond.solves)
         );
         assert!(precond.iterations <= plain.iterations);
+    }
+}
+
+#[test]
+fn prop_sharded_matmul_matches_dense_across_shard_counts_and_scalars() {
+    // ShardedKernelOp must reproduce DenseKernelOp to 1e-10 for every shard
+    // count (1, 3, 7, n) and every kernel family (incl. the non-stationary
+    // composite path), and its f32 accumulation must track f64 to f32
+    // accuracy.
+    let mut rng = Rng::new(11);
+    for trial in 0..12 {
+        let n = 10 + rng.below(60);
+        let d = 1 + rng.below(4);
+        let x = Mat::from_fn(n, d, |_, _| rng.uniform_in(-1.0, 1.0));
+        let noise = 0.05 + 0.2 * rng.uniform();
+        let kernel: Box<dyn Kernel> = match trial % 4 {
+            0 => Box::new(Rbf::new(0.3 + rng.uniform(), 0.5 + rng.uniform())),
+            1 => Box::new(Matern32::new(0.3 + rng.uniform(), 0.5 + rng.uniform())),
+            2 => Box::new(Matern52::new(0.3 + rng.uniform(), 0.5 + rng.uniform())),
+            _ => Box::new(SumKernel::new(
+                Box::new(Rbf::new(0.5, 1.0)),
+                Box::new(Matern32::new(0.7, 0.5)),
+            )),
+        };
+        let dense = DenseKernelOp::new(x.clone(), kernel.boxed_clone(), noise);
+        let t = 1 + rng.below(4);
+        let m = Mat::from_fn(n, t, |_, _| rng.normal());
+        let want = dense.matmul(&m);
+        for &s in &[1usize, 3, 7, n] {
+            let tile = 1 + rng.below(16);
+            let op = ShardedKernelOp::new(x.clone(), kernel.boxed_clone(), noise, s)
+                .with_tile(tile);
+            let got = op.matmul(&m);
+            assert!(
+                got.max_abs_diff(&want) < 1e-10,
+                "trial {trial} shards {s} tile {tile}: {}",
+                got.max_abs_diff(&want)
+            );
+            // derivative operators must shard identically
+            let p = rng.below(dense.n_params());
+            let dgot = op.dmatmul(p, &m);
+            let dwant = dense.dmatmul(p, &m);
+            assert!(
+                dgot.max_abs_diff(&dwant) < 1e-10,
+                "trial {trial} shards {s} dparam {p}"
+            );
+            // f32 accumulation stays within f32 round-off of the f64 result
+            let got32 = op.matmul_scalar::<f32>(&m.cast());
+            let diff32 = got32.cast::<f64>().max_abs_diff(&want);
+            assert!(
+                diff32 < 1e-3 * (1.0 + want.fro_norm()),
+                "trial {trial} shards {s} f32 diff {diff32}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_mbcg_sharded_solves_match_monolithic_and_cholesky() {
+    // the shard-assembled mmm_A path changes the schedule, never the answer
+    let mut rng = Rng::new(12);
+    for trial in 0..10 {
+        let n = 15 + rng.below(50);
+        let x = Mat::from_fn(n, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+        let noise = 0.1 + 0.2 * rng.uniform();
+        let shards = 1 + rng.below(6);
+        let op = ShardedKernelOp::new(x.clone(), Box::new(Rbf::new(0.6, 1.0)), noise, shards);
+        let dense = DenseKernelOp::new(x, Box::new(Rbf::new(0.6, 1.0)), noise);
+        let s = 1 + rng.below(4);
+        let b = Mat::from_fn(n, s, |_, _| rng.normal());
+        let opts = MbcgOptions {
+            max_iters: 2 * n,
+            tol: 1e-12,
+            n_solve_only: 0,
+        };
+        let shrd = mbcg_sharded(&op, &b, |m| m.clone(), &opts);
+        let mono = mbcg(|m| dense.matmul(m), &b, |m| m.clone(), &opts);
+        assert!(
+            shrd.solves.max_abs_diff(&mono.solves) < 1e-8,
+            "trial {trial}: {}",
+            shrd.solves.max_abs_diff(&mono.solves)
+        );
+        let want = Cholesky::new(&dense.dense()).unwrap().solve_mat(&b);
+        assert!(shrd.solves.max_abs_diff(&want) < 1e-6, "trial {trial}");
     }
 }
 

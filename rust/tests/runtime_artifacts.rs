@@ -17,6 +17,10 @@ const T: usize = 8;
 fn runtime_or_skip() -> Option<Runtime> {
     let dir = default_artifact_dir();
     let rt = Runtime::cpu(&dir).ok()?;
+    if !rt.backend_available() {
+        eprintln!("SKIP: pjrt backend not compiled in — build with `--features pjrt`");
+        return None;
+    }
     if rt.available().is_empty() {
         eprintln!("SKIP: no artifacts in {dir:?} — run `make artifacts`");
         return None;
@@ -79,10 +83,22 @@ fn mll_artifacts_match_native_engines() {
             .execute_f32(
                 &name,
                 &[
-                    TensorF32 { data: &x, dims: vec![N as i64, D as i64] },
-                    TensorF32 { data: &y, dims: vec![N as i64] },
-                    TensorF32 { data: &z, dims: vec![N as i64, T as i64] },
-                    TensorF32 { data: &params, dims: vec![3] },
+                    TensorF32 {
+                        data: &x,
+                        dims: vec![N as i64, D as i64],
+                    },
+                    TensorF32 {
+                        data: &y,
+                        dims: vec![N as i64],
+                    },
+                    TensorF32 {
+                        data: &z,
+                        dims: vec![N as i64, T as i64],
+                    },
+                    TensorF32 {
+                        data: &params,
+                        dims: vec![3],
+                    },
                 ],
             )
             .unwrap();
@@ -153,10 +169,22 @@ fn predict_artifacts_match_native_posterior() {
             .execute_f32(
                 &name,
                 &[
-                    TensorF32 { data: &x, dims: vec![N as i64, D as i64] },
-                    TensorF32 { data: &y, dims: vec![N as i64] },
-                    TensorF32 { data: &xs, dims: vec![m as i64, D as i64] },
-                    TensorF32 { data: &params, dims: vec![3] },
+                    TensorF32 {
+                        data: &x,
+                        dims: vec![N as i64, D as i64],
+                    },
+                    TensorF32 {
+                        data: &y,
+                        dims: vec![N as i64],
+                    },
+                    TensorF32 {
+                        data: &xs,
+                        dims: vec![m as i64, D as i64],
+                    },
+                    TensorF32 {
+                        data: &params,
+                        dims: vec![3],
+                    },
                 ],
             )
             .unwrap();
@@ -210,9 +238,18 @@ fn kernel_matmul_artifact_matches_native_fused_matmul() {
         .execute_f32(
             &name,
             &[
-                TensorF32 { data: &x, dims: vec![N as i64, D as i64] },
-                TensorF32 { data: &v, dims: vec![N as i64, T as i64] },
-                TensorF32 { data: &params, dims: vec![3] },
+                TensorF32 {
+                    data: &x,
+                    dims: vec![N as i64, D as i64],
+                },
+                TensorF32 {
+                    data: &v,
+                    dims: vec![N as i64, T as i64],
+                },
+                TensorF32 {
+                    data: &params,
+                    dims: vec![3],
+                },
             ],
         )
         .unwrap();
