@@ -45,8 +45,8 @@ fn op_norm(apply: impl Fn(&[f64]) -> Vec<f64>, n: usize, iters: usize, rng: &mut
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
-    let n = args.usize_or("n", 800);
-    let noise = args.f64_or("noise", 1e-3);
+    let n = args.usize_or("n", 800).unwrap();
+    let noise = args.f64_or("noise", 1e-3).unwrap();
     let mut rng = Rng::new(3);
     // univariate RBF kernel — the setting of Lemma 1
     let x = Mat::from_fn(n, 1, |_, _| rng.uniform());

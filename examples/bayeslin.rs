@@ -21,8 +21,8 @@ use bbmm_gp::util::Rng;
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
-    let n = args.usize_or("n", 20_000);
-    let d = args.usize_or("d", 20);
+    let n = args.usize_or("n", 20_000).unwrap();
+    let d = args.usize_or("d", 20).unwrap();
     let noise: f64 = 0.05;
     let prior_var = 10.0;
 

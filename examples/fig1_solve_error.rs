@@ -83,7 +83,7 @@ fn main() {
             // preconditioner ("we recommend always using" it, §6)
             let mut k_noiseless = k64.clone();
             k_noiseless.add_diag(-noise);
-            let pc = pivoted_cholesky_dense(&k_noiseless, args.usize_or("rank", 20), 0.0);
+            let pc = pivoted_cholesky_dense(&k_noiseless, args.usize_or("rank", 20).unwrap(), 0.0);
             let pre64 = PartialCholPrecond::new(pc.l.clone(), noise);
             let opts64 = MbcgOptions {
                 max_iters: n,

@@ -124,7 +124,7 @@ fn sgpr_mae(ds: &bbmm_gp::data::Dataset, m: usize, use_bbmm: bool, iters: usize)
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
     let full = args.flag("full");
-    let iters = args.usize_or("iters", if full { 25 } else { 15 });
+    let iters = args.usize_or("iters", if full { 25 } else { 15 }).unwrap();
     let cap_exact = if full { usize::MAX } else { 900 };
     let cap_sgpr = if full { usize::MAX } else { 5000 };
     let m_inducing = if full { 300 } else { 100 };

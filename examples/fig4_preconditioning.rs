@@ -23,8 +23,7 @@ use bbmm_gp::gp::predict::mae;
 use bbmm_gp::kernels::{DeepFeatureMap, DenseKernelOp, Kernel, KernelOperator, Matern52, Rbf};
 use bbmm_gp::linalg::cg::pcg;
 use bbmm_gp::linalg::mbcg::{mbcg, MbcgOptions};
-use bbmm_gp::linalg::pivoted_cholesky::pivoted_cholesky;
-use bbmm_gp::linalg::preconditioner::{IdentityPrecond, PartialCholPrecond, Preconditioner};
+use bbmm_gp::linalg::preconditioner::Preconditioner;
 use bbmm_gp::tensor::Mat;
 use bbmm_gp::train::{TrainConfig, Trainer};
 use bbmm_gp::util::cli::Args;
@@ -78,12 +77,9 @@ fn learn_hypers(
 }
 
 fn build_precond(op: &DenseKernelOp, rank: usize) -> Box<dyn Preconditioner> {
-    if rank == 0 {
-        return Box::new(IdentityPrecond);
-    }
-    let diag = op.diag();
-    let pc = pivoted_cholesky(&diag, |i| op.row(i), rank, 0.0);
-    Box::new(PartialCholPrecond::new(pc.l, op.noise()))
+    // generic §4.1 builder: pivoted Cholesky over the composition's
+    // noise-free part (via noise_split), Woodbury'd against σ²
+    bbmm_gp::linalg::op::build_preconditioner(op, rank)
 }
 
 fn residual_curves(name: &str, op: &DenseKernelOp, y: &[f64], max_iters: usize) {
@@ -185,9 +181,11 @@ fn mae_tradeoff(name: &str, op: &DenseKernelOp, ds: &Dataset, feat_test: &Mat) {
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
-    let n = args.usize_or("n", if args.flag("full") { 4000 } else { 1500 });
-    let train_iters = args.usize_or("iters", 15);
-    let max_cg = args.usize_or("max-cg", 80);
+    let n = args
+        .usize_or("n", if args.flag("full") { 4000 } else { 1500 })
+        .unwrap();
+    let train_iters = args.usize_or("iters", 15).unwrap();
+    let max_cg = args.usize_or("max-cg", 80).unwrap();
 
     // NOTE on hyperparameters: the paper trains the full deep kernel
     // (MLP + GP hypers) before measuring convergence. Our feature

@@ -21,9 +21,9 @@ use std::sync::Arc;
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
-    let n = args.usize_or("n", 800);
-    let clients = args.usize_or("clients", 16);
-    let reqs_per_client = args.usize_or("requests", 50);
+    let n = args.usize_or("n", 800).unwrap();
+    let clients = args.usize_or("clients", 16).unwrap();
+    let reqs_per_client = args.usize_or("requests", 50).unwrap();
 
     // ---- train ----------------------------------------------------------
     let ds = generate_sized("serve_demo", n, 4, 3);
@@ -50,6 +50,7 @@ fn main() {
     let stop = Arc::new(AtomicBool::new(false));
     let config = ServerConfig {
         addr: "127.0.0.1:0".to_string(),
+        operator: "AddedDiag(KernelCov)".to_string(),
         shard_count: 1,
         stop: Arc::clone(&stop),
     };

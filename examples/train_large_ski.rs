@@ -24,10 +24,10 @@ use bbmm_gp::util::{Rng, Timer};
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
     let full = args.flag("full");
-    let n = args.usize_or("n", if full { 515_345 } else { 100_000 });
-    let d = args.usize_or("d", if full { 90 } else { 8 });
-    let grid_m = args.usize_or("inducing", 10_000);
-    let iters = args.usize_or("iters", 40);
+    let n = args.usize_or("n", if full { 515_345 } else { 100_000 }).unwrap();
+    let d = args.usize_or("d", if full { 90 } else { 8 }).unwrap();
+    let grid_m = args.usize_or("inducing", 10_000).unwrap();
+    let iters = args.usize_or("iters", 40).unwrap();
 
     println!("=== end-to-end SKI+DKL training: n={n} d={d} grid_m={grid_m} ===");
     // Workload: a single-index regression task y = g(wᵀx) + ε — the

@@ -13,4 +13,4 @@ pub mod server;
 
 pub use batcher::{BatchPolicy, DynamicBatcher, PredictFn};
 pub use metrics::Metrics;
-pub use server::{serve, ServerConfig};
+pub use server::{serve, served_predictor, ServableModel, ServerConfig};

@@ -13,7 +13,10 @@
 //! [`DynamicBatcher`], so concurrent clients are served out of coalesced
 //! batched GP solves.
 
-use crate::coordinator::batcher::DynamicBatcher;
+use crate::coordinator::batcher::{DynamicBatcher, PredictFn};
+use crate::gp::predict::{predict, Prediction};
+use crate::linalg::op::{plan, solve_strategy, solve_with, LinearOp, SolveOptions};
+use crate::tensor::Mat;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -22,7 +25,11 @@ use std::sync::Arc;
 /// Server configuration.
 pub struct ServerConfig {
     pub addr: String,
-    /// Row-shard count of the serving model's kernel operator (1 =
+    /// Human-readable description of the hosted operator composition
+    /// (e.g. `AddedDiag(ShardedCov(rbf) × 8)`), echoed at startup so the
+    /// deployment log records what algebra is serving traffic.
+    pub operator: String,
+    /// Row-shard count of the serving model's covariance backend (1 =
     /// monolithic dense operator), recorded here so the deployment config
     /// carries how the operator was sized to traffic. The server itself
     /// does not build the model — the launcher (`bbmm serve --shards N`)
@@ -37,10 +44,55 @@ impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
             addr: "127.0.0.1:7777".to_string(),
+            operator: String::new(),
             shard_count: 1,
             stop: Arc::new(AtomicBool::new(false)),
         }
     }
+}
+
+/// A servable GP posterior: **any** [`LinearOp`] composition plus the
+/// model-side pieces a posterior needs (cross-covariance, prior variances,
+/// targets). This is the seam `bbmm serve` threads the operator algebra
+/// through — exact, sharded, SGPR, and SKI models all implement it with a
+/// few lines, and the server solves every prediction through the generic
+/// dispatcher ([`crate::linalg::op::solve()`]).
+pub trait ServableModel: Send + Sync {
+    /// The training operator `K̂` (noise included in the composition).
+    fn op(&self) -> &dyn LinearOp;
+    /// Cross-covariance `K(X*, X)` rows for a batch of query points.
+    fn cross(&self, xs: &Mat) -> Mat;
+    /// Prior variances `k(x*, x*)` per query point.
+    fn prior_diag(&self, xs: &Mat) -> Vec<f64>;
+    /// Training targets.
+    fn y(&self) -> &[f64];
+    /// One-line operator description for the startup log.
+    fn describe(&self) -> String {
+        format!(
+            "LinearOp n={} strategy={:?}",
+            self.op().n(),
+            solve_strategy(self.op())
+        )
+    }
+}
+
+/// Wrap a servable model into the batcher's [`PredictFn`]: each coalesced
+/// batch becomes one cross-covariance build plus one dispatched solve —
+/// no model lock, since [`LinearOp`] solves are `&self`. The solve plan
+/// (Woodbury capacitance factor / pivoted-Cholesky preconditioner) is
+/// prepared **once** here, not per batch.
+pub fn served_predictor(model: Box<dyn ServableModel>, opts: SolveOptions) -> PredictFn {
+    let solve_plan = plan(model.op(), &opts);
+    Box::new(move |xs: &Mat| -> Prediction {
+        let k_star = model.cross(xs);
+        let diag = model.prior_diag(xs);
+        predict(
+            &k_star,
+            &diag,
+            |m| solve_with(&solve_plan, model.op(), m, &opts),
+            model.y(),
+        )
+    })
 }
 
 /// Run the accept loop (blocking). Returns the bound address via the
@@ -52,6 +104,10 @@ pub fn serve(
 ) -> std::io::Result<()> {
     let listener = TcpListener::bind(&config.addr)?;
     listener.set_nonblocking(true)?;
+    if !config.operator.is_empty() {
+        // the deployment log records which operator composition is serving
+        println!("hosting operator: {} ({} shards)", config.operator, config.shard_count);
+    }
     on_ready(listener.local_addr()?);
     let mut handles = Vec::new();
     while !config.stop.load(Ordering::Relaxed) {
@@ -157,11 +213,70 @@ mod tests {
     }
 
     #[test]
+    fn served_predictor_hosts_any_operator_composition() {
+        // a low-rank-plus-diagonal posterior served through the generic
+        // dispatcher (Woodbury direct path) — no model-specific glue
+        use crate::linalg::cholesky::Cholesky;
+        use crate::linalg::op::{AddedDiagOp, LowRankOp};
+        use crate::util::Rng;
+
+        struct LowRankModel {
+            op: AddedDiagOp<LowRankOp>,
+            x: Mat,
+            y: Vec<f64>,
+        }
+        impl ServableModel for LowRankModel {
+            fn op(&self) -> &dyn LinearOp {
+                &self.op
+            }
+            fn cross(&self, xs: &Mat) -> Mat {
+                // linear-kernel cross-covariance X*·Xᵀ (factor is X itself)
+                xs.matmul_t(&self.x)
+            }
+            fn prior_diag(&self, xs: &Mat) -> Vec<f64> {
+                (0..xs.rows())
+                    .map(|i| xs.row(i).iter().map(|v| v * v).sum())
+                    .collect()
+            }
+            fn y(&self) -> &[f64] {
+                &self.y
+            }
+        }
+
+        let mut rng = Rng::new(42);
+        let x = Mat::from_fn(30, 2, |_, _| rng.normal());
+        let y: Vec<f64> = (0..30)
+            .map(|i| x.get(i, 0) - 0.5 * x.get(i, 1) + 0.01 * rng.normal())
+            .collect();
+        let model = LowRankModel {
+            op: AddedDiagOp::new(LowRankOp::new(x.clone()), 0.01),
+            x: x.clone(),
+            y: y.clone(),
+        };
+        assert!(model.describe().contains("Woodbury"));
+        let predictor = served_predictor(Box::new(model), SolveOptions::default());
+        let b = Arc::new(DynamicBatcher::new(2, BatchPolicy::default(), predictor));
+        let resp = handle_line("0.5, -0.25", &b);
+        assert!(!resp.starts_with("ERR"), "{resp}");
+        // reference: dense posterior mean through an explicit Cholesky
+        let mut k = x.matmul_t(&x);
+        k.add_diag(0.01);
+        let alpha = Cholesky::new_with_jitter(&k).unwrap().solve_vec(&y);
+        let kstar: Vec<f64> = (0..30)
+            .map(|i| 0.5 * x.get(i, 0) - 0.25 * x.get(i, 1))
+            .collect();
+        let want: f64 = kstar.iter().zip(alpha.iter()).map(|(a, b)| a * b).sum();
+        let got: f64 = resp.split(',').next().unwrap().parse().unwrap();
+        assert!((got - want).abs() < 1e-6, "{got} vs {want}");
+    }
+
+    #[test]
     fn end_to_end_tcp_roundtrip() {
         let b = echo_batcher(2);
         let stop = Arc::new(AtomicBool::new(false));
         let config = ServerConfig {
             addr: "127.0.0.1:0".to_string(),
+            operator: "echo".to_string(),
             shard_count: 1,
             stop: Arc::clone(&stop),
         };

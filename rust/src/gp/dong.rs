@@ -10,9 +10,9 @@
 //! are exactly what Figure 2 (right) measures.
 
 use crate::gp::mll::{InferenceEngine, MllGrad};
-use crate::kernels::KernelOperator;
 use crate::linalg::cg::pcg;
 use crate::linalg::lanczos::lanczos_tridiag;
+use crate::linalg::op::LinearOp;
 use crate::linalg::tridiag::SymTridiagEig;
 use crate::tensor::Mat;
 use crate::util::Rng;
@@ -50,7 +50,7 @@ impl DongEngine {
 }
 
 impl InferenceEngine for DongEngine {
-    fn mll_and_grad(&mut self, op: &dyn KernelOperator, y: &[f64]) -> MllGrad {
+    fn mll_and_grad(&mut self, op: &dyn LinearOp, y: &[f64]) -> MllGrad {
         let n = op.n();
         let t = self.n_probes;
         // mat-vec through the blackbox operator, one column at a time —

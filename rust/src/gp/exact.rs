@@ -1,14 +1,17 @@
-//! Exact GP regression model — ties a kernel operator (the monolithic
-//! [`DenseKernelOp`] or the row-sharded [`ShardedKernelOp`]) to targets and
-//! an inference engine (BBMM or Cholesky), exposing train-time
-//! NMLL/gradients and test-time predictions. This is the model behind the
-//! paper's "Exact" columns in Figures 2 and 3.
+//! Exact GP regression model — a thin composition over the operator
+//! algebra: `K̂ = AddedDiagOp(cov)` where `cov` is **any**
+//! [`KernelCov`] backend (the fused monolithic [`KernelCovOp`] or the
+//! row-sharded [`ShardedCovOp`]), tied to targets and an inference engine
+//! (BBMM or Cholesky). The seed-era `ExactOp` enum is gone: backends plug
+//! in through the `KernelCov` trait, and training/prediction run through
+//! the generic engine + solve-dispatcher paths. This is the model behind
+//! the paper's "Exact" columns in Figures 2 and 3.
 
 use crate::gp::mll::{BbmmEngine, InferenceEngine, MllGrad};
-use crate::gp::predict::{predict, Prediction};
-use crate::kernels::{DenseKernelOp, Kernel, KernelOperator, ShardedKernelOp};
+use crate::gp::predict::{predict, predict_op, Prediction};
+use crate::kernels::{Kernel, KernelCov, KernelCovOp, ShardedCovOp};
 use crate::linalg::cholesky::Cholesky;
-use crate::linalg::mbcg::{mbcg, MbcgOptions};
+use crate::linalg::op::{AddedDiagOp, LinearOp, SolveOptions};
 use crate::tensor::Mat;
 
 /// Which inference engine backs the model.
@@ -19,87 +22,23 @@ pub enum Engine {
     Cholesky,
 }
 
-/// The operator backing an exact GP: the monolithic fused operator or its
-/// row-sharded variant. Both expose the same blackbox surface, so every
-/// engine works with either — this enum only carries the constructor
-/// choice plus the concrete accessors predictions need.
-pub enum ExactOp {
-    Dense(DenseKernelOp),
-    Sharded(ShardedKernelOp),
-}
-
-impl ExactOp {
-    /// The blackbox view every inference engine consumes.
-    pub fn as_operator(&self) -> &dyn KernelOperator {
-        match self {
-            ExactOp::Dense(op) => op,
-            ExactOp::Sharded(op) => op,
-        }
-    }
-
-    pub fn x(&self) -> &Mat {
-        match self {
-            ExactOp::Dense(op) => op.x(),
-            ExactOp::Sharded(op) => op.x(),
-        }
-    }
-
-    pub fn kernel(&self) -> &dyn Kernel {
-        match self {
-            ExactOp::Dense(op) => op.kernel(),
-            ExactOp::Sharded(op) => op.kernel(),
-        }
-    }
-
-    pub fn cross(&self, a: &Mat, b: &Mat) -> Mat {
-        match self {
-            ExactOp::Dense(op) => op.cross(a, b),
-            ExactOp::Sharded(op) => op.cross(a, b),
-        }
-    }
-
-    pub fn params(&self) -> Vec<f64> {
-        match self {
-            ExactOp::Dense(op) => op.params(),
-            ExactOp::Sharded(op) => op.params(),
-        }
-    }
-
-    pub fn set_params(&mut self, raw: &[f64]) {
-        match self {
-            ExactOp::Dense(op) => op.set_params(raw),
-            ExactOp::Sharded(op) => op.set_params(raw),
-        }
-    }
-
-    /// Shard count (1 for the monolithic operator).
-    pub fn shard_count(&self) -> usize {
-        match self {
-            ExactOp::Dense(_) => 1,
-            ExactOp::Sharded(op) => op.shard_count(),
-        }
-    }
-}
-
-/// Exact Gaussian-process regression model.
+/// Exact Gaussian-process regression model over a pluggable covariance
+/// backend.
 pub struct ExactGp {
-    op: ExactOp,
+    op: AddedDiagOp<Box<dyn KernelCov>>,
     y: Vec<f64>,
     engine: Engine,
 }
 
 impl ExactGp {
+    /// Monolithic fused-operator model.
     pub fn new(x: Mat, y: Vec<f64>, kernel: Box<dyn Kernel>, noise: f64, engine: Engine) -> Self {
         assert_eq!(x.rows(), y.len());
-        ExactGp {
-            op: ExactOp::Dense(DenseKernelOp::new(x, kernel, noise)),
-            y,
-            engine,
-        }
+        Self::over(Box::new(KernelCovOp::new(x, kernel)), y, noise, engine)
     }
 
-    /// Like [`ExactGp::new`], but over a row-sharded operator — the
-    /// configuration the serving path uses to size shards to traffic.
+    /// Like [`ExactGp::new`], but over a row-sharded covariance backend —
+    /// the configuration the serving path uses to size shards to traffic.
     pub fn new_sharded(
         x: Mat,
         y: Vec<f64>,
@@ -109,74 +48,94 @@ impl ExactGp {
         shards: usize,
     ) -> Self {
         assert_eq!(x.rows(), y.len());
+        Self::over(Box::new(ShardedCovOp::new(x, kernel, shards)), y, noise, engine)
+    }
+
+    /// The general constructor: any [`KernelCov`] backend composes with
+    /// `AddedDiagOp` into the training operator.
+    pub fn over(cov: Box<dyn KernelCov>, y: Vec<f64>, noise: f64, engine: Engine) -> Self {
+        assert_eq!(cov.n(), y.len());
         ExactGp {
-            op: ExactOp::Sharded(ShardedKernelOp::new(x, kernel, noise, shards)),
+            op: AddedDiagOp::new(cov, noise),
             y,
             engine,
         }
     }
 
-    pub fn op(&self) -> &ExactOp {
+    /// The composed training operator `K̂ = K + σ²I`.
+    pub fn op(&self) -> &AddedDiagOp<Box<dyn KernelCov>> {
         &self.op
     }
 
+    /// The noise-free covariance backend.
+    pub fn cov(&self) -> &dyn KernelCov {
+        self.op.inner().as_ref()
+    }
+
+    /// Row-shard count of the backend (1 for the monolithic operator).
+    pub fn shard_count(&self) -> usize {
+        self.op.inner().shard_count()
+    }
+
+    /// Training targets.
     pub fn y(&self) -> &[f64] {
         &self.y
     }
 
+    /// Raw parameter vector `[kernel params…, log σ²]`.
     pub fn params(&self) -> Vec<f64> {
-        self.op.params()
+        let mut p = self.op.inner().kernel().params();
+        p.push(self.op.raw_value());
+        p
     }
 
+    /// Overwrite all raw parameters.
     pub fn set_params(&mut self, raw: &[f64]) {
-        self.op.set_params(raw);
+        let nk = self.op.inner().kernel().n_params();
+        self.op.inner_mut().set_kernel_params(&raw[..nk]);
+        self.op.set_raw_value(raw[nk]);
     }
 
+    /// Total raw parameter count.
     pub fn n_params(&self) -> usize {
-        self.op.as_operator().n_params()
+        self.op.n_params()
     }
 
     /// NMLL + gradient under the configured engine.
     pub fn mll_and_grad(&mut self) -> MllGrad {
         match &mut self.engine {
-            Engine::Bbmm(e) => e.mll_and_grad(self.op.as_operator(), &self.y),
+            Engine::Bbmm(e) => e.mll_and_grad(&self.op, &self.y),
             Engine::Cholesky => {
                 let mut e = crate::gp::mll::CholeskyEngine;
-                e.mll_and_grad(self.op.as_operator(), &self.y)
+                e.mll_and_grad(&self.op, &self.y)
             }
         }
     }
 
     /// Predictive mean+variance at test inputs `xs (n_test × d)`.
     pub fn predict(&mut self, xs: &Mat) -> Prediction {
-        let k_star = self.op.cross(xs, self.op.x());
+        let cov = self.op.inner();
+        let k_star = cov.cross(xs, cov.x());
         let diag: Vec<f64> = (0..xs.rows())
-            .map(|i| self.op.kernel().eval(xs.row(i), xs.row(i)))
+            .map(|i| cov.kernel().eval(xs.row(i), xs.row(i)))
             .collect();
         match &mut self.engine {
             Engine::Cholesky => {
-                let ch = Cholesky::new_with_jitter(&self.op.as_operator().dense())
-                    .expect("kernel matrix not PD");
+                let ch =
+                    Cholesky::new_with_jitter(&self.op.dense()).expect("kernel matrix not PD");
                 predict(&k_star, &diag, |m| ch.solve_mat(m), &self.y)
             }
-            Engine::Bbmm(e) => {
-                let op = self.op.as_operator();
-                let precond = e.build_preconditioner(op);
-                let max_iters = e.max_cg_iters.max(50);
-                predict(
-                    &k_star,
-                    &diag,
-                    |m| {
-                        let o = MbcgOptions {
-                            max_iters,
-                            tol: 1e-8,
-                            n_solve_only: m.cols(), // tridiags unused at predict time
-                        };
-                        mbcg(|v| op.matmul(v), m, |r| precond.solve_mat(r), &o).solves
-                    },
-                    &self.y,
-                )
-            }
+            Engine::Bbmm(e) => predict_op(
+                &self.op,
+                &k_star,
+                &diag,
+                &self.y,
+                &SolveOptions {
+                    max_iters: e.max_cg_iters.max(50),
+                    tol: 1e-8,
+                    precond_rank: e.precond_rank,
+                },
+            ),
         }
     }
 }
@@ -263,8 +222,8 @@ mod tests {
             Engine::Bbmm(BbmmEngine::new(100, 10, 5, 7)),
             6,
         );
-        assert_eq!(dense.op().shard_count(), 1);
-        assert_eq!(sharded.op().shard_count(), 6);
+        assert_eq!(dense.shard_count(), 1);
+        assert_eq!(sharded.shard_count(), 6);
         let a = dense.mll_and_grad();
         let b = sharded.mll_and_grad();
         assert!((a.nmll - b.nmll).abs() < 1e-8, "{} vs {}", a.nmll, b.nmll);

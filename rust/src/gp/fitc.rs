@@ -1,76 +1,73 @@
 //! FITC (paper §5: "Augmenting the SoR approximation with a diagonal
 //! correction, e.g. as in FITC [44], is similarly straightforward").
 //!
-//! `K̂ = K_XU K_UU⁻¹ K_UX + diag(k_XX − q_XX) + σ²I` — SoR plus the exact
-//! diagonal. As the paper promises, the blackbox operator is the SGPR one
-//! plus a cached diagonal: ~40 additional lines.
+//! `K̂ = K_SoR + diag(k_XX − q_XX) + σ²I` — in algebra terms
+//! `AddedDiagOp(SumOp(LowRankOp(A), DiagOp(correction)))`: the SoR
+//! low-rank core (shared with [`SgprOp`]) plus the exact-diagonal
+//! correction as a [`DiagOp`] summand. As the paper promises, the extra
+//! model code over SGPR is the correction build (~20 lines).
 
 use crate::gp::sgpr::SgprOp;
-use crate::kernels::{Kernel, KernelOperator};
+use crate::kernels::Kernel;
+use crate::linalg::op::{AddedDiagOp, DiagOp, LinearOp, LowRankOp, SumOp};
 use crate::tensor::Mat;
 
 /// FITC operator: SoR + exact-diagonal correction.
 pub struct FitcOp {
     sor: SgprOp,
-    /// cached correction `k(xᵢ,xᵢ) − q(xᵢ,xᵢ)` (≥ 0)
-    correction: Vec<f64>,
+    /// the composed full operator `A·Aᵀ + diag(corr) + σ²I`
+    op: AddedDiagOp<SumOp<LowRankOp, DiagOp>>,
 }
 
 impl FitcOp {
+    /// Build over training inputs, inducing points, and a kernel.
     pub fn new(x: Mat, u: Mat, kernel: Box<dyn Kernel>, noise: f64) -> Self {
         let sor = SgprOp::new(x, u, kernel, noise);
-        let correction = Self::build_correction(&sor);
-        FitcOp { sor, correction }
+        let op = Self::build_composition(&sor);
+        FitcOp { sor, op }
     }
 
-    fn build_correction(sor: &SgprOp) -> Vec<f64> {
-        let q_diag = sor.diag(); // SoR diagonal
-        (0..sor.n())
+    fn build_composition(sor: &SgprOp) -> AddedDiagOp<SumOp<LowRankOp, DiagOp>> {
+        let factor = sor.sor_factor().clone();
+        let lowrank = LowRankOp::new(factor);
+        let q_diag = lowrank.diag(); // SoR diagonal (noise-free)
+        let correction: Vec<f64> = (0..sor.n())
             .map(|i| {
                 let k_ii = sor.kernel().eval(sor.x().row(i), sor.x().row(i));
                 (k_ii - q_diag[i]).max(0.0)
             })
-            .collect()
+            .collect();
+        let raw_noise = *sor.params().last().unwrap();
+        AddedDiagOp::from_raw(SumOp::new(lowrank, DiagOp::new(correction)), raw_noise)
     }
 
+    /// The exact-diagonal correction `k(xᵢ,xᵢ) − q(xᵢ,xᵢ)` (≥ 0).
+    pub fn correction(&self) -> &[f64] {
+        self.op.inner().b().values()
+    }
+
+    /// Raw parameter vector (same layout as SGPR).
     pub fn params(&self) -> Vec<f64> {
         self.sor.params()
     }
 
+    /// Overwrite raw parameters (rebuilds SoR caches + correction).
     pub fn set_params(&mut self, raw: &[f64]) {
         self.sor.set_params(raw);
-        self.correction = Self::build_correction(&self.sor);
+        self.op = Self::build_composition(&self.sor);
     }
 
+    /// The underlying SoR operator.
     pub fn sor(&self) -> &SgprOp {
         &self.sor
     }
 }
 
-impl KernelOperator for FitcOp {
-    fn n(&self) -> usize {
-        self.sor.n()
-    }
+impl LinearOp for FitcOp {
+    crate::linear_op_delegate!(op);
 
     fn n_params(&self) -> usize {
         self.sor.n_params()
-    }
-
-    fn matmul(&self, m: &Mat) -> Mat {
-        let mut out = self.sor.matmul(m);
-        // + diag(correction)·M
-        for i in 0..out.rows() {
-            let c = self.correction[i];
-            if c == 0.0 {
-                continue;
-            }
-            let mrow = m.row(i);
-            let orow = out.row_mut(i);
-            for t in 0..orow.len() {
-                orow[t] += c * mrow[t];
-            }
-        }
-        out
     }
 
     /// derivative: d(SoR)/dθ + d(diag corr)/dθ; the diagonal part is
@@ -82,21 +79,18 @@ impl KernelOperator for FitcOp {
             // FD on the correction (O(nm) per eval — negligible)
             let mut raw = self.params();
             let h = 1e-6;
-            let mut probe = FitcOp {
-                sor: SgprOp::new(
-                    self.sor.x().clone(),
-                    self.sor.u().clone(),
-                    self.sor.kernel().boxed_clone(),
-                    self.sor.noise(),
-                ),
-                correction: self.correction.clone(),
-            };
+            let mut probe = FitcOp::new(
+                self.sor.x().clone(),
+                self.sor.u().clone(),
+                self.sor.kernel().boxed_clone(),
+                self.sor.noise(),
+            );
             raw[param] += h;
             probe.set_params(&raw);
-            let plus = probe.correction.clone();
+            let plus = probe.correction().to_vec();
             raw[param] -= 2.0 * h;
             probe.set_params(&raw);
-            let minus = probe.correction.clone();
+            let minus = probe.correction().to_vec();
             for i in 0..self.n() {
                 let dc = (plus[i] - minus[i]) / (2.0 * h);
                 if dc == 0.0 {
@@ -110,24 +104,6 @@ impl KernelOperator for FitcOp {
             }
         }
         out
-    }
-
-    fn diag(&self) -> Vec<f64> {
-        let mut d = self.sor.diag();
-        for i in 0..d.len() {
-            d[i] += self.correction[i];
-        }
-        d
-    }
-
-    fn row(&self, i: usize) -> Vec<f64> {
-        let mut r = self.sor.row(i);
-        r[i] += self.correction[i];
-        r
-    }
-
-    fn noise(&self) -> f64 {
-        self.sor.noise()
     }
 }
 
@@ -147,9 +123,10 @@ mod tests {
 
     #[test]
     fn fitc_diagonal_matches_exact_kernel_diagonal() {
-        // FITC's defining property: diag(K_FITC) == diag(K_exact)
+        // FITC's defining property: diag(K_FITC − σ²I) == diag(K_exact)
         let op = setup(30, 6, 1);
-        let d = op.diag();
+        let (cov, _s2) = op.noise_split().unwrap();
+        let d = cov.diag();
         for i in 0..30 {
             let exact = op.sor().kernel().eval(op.sor().x().row(i), op.sor().x().row(i));
             assert!((d[i] - exact).abs() < 1e-10, "i={i}");
@@ -172,11 +149,11 @@ mod tests {
         let x = Mat::from_fn(20, 1, |_, _| rng.uniform());
         let u = Mat::from_fn(5, 1, |i, _| x.get(i, 0));
         let op = FitcOp::new(x, u, Box::new(Rbf::new(0.4, 1.0)), 0.1);
-        for c in &op.correction {
+        for c in op.correction() {
             assert!(*c >= 0.0);
         }
         for i in 0..5 {
-            assert!(op.correction[i] < 1e-3, "inducing point {i}: {}", op.correction[i]);
+            assert!(op.correction()[i] < 1e-3, "inducing point {i}: {}", op.correction()[i]);
         }
     }
 

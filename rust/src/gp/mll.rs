@@ -9,11 +9,13 @@
 //!
 //! [`BbmmEngine`] derives all three quantities from **one** mBCG call
 //! (paper §4); [`CholeskyEngine`] computes them exactly in O(n³).
+//!
+//! Both consume the composable [`LinearOp`] — any operator composition
+//! (exact, SGPR, SKI, sharded, multitask, …) flows through unchanged.
 
-use crate::kernels::KernelOperator;
 use crate::linalg::mbcg::{mbcg, MbcgOptions};
-use crate::linalg::pivoted_cholesky::pivoted_cholesky;
-use crate::linalg::preconditioner::{IdentityPrecond, PartialCholPrecond, Preconditioner};
+use crate::linalg::op::LinearOp;
+use crate::linalg::preconditioner::Preconditioner;
 use crate::linalg::trace::paired_trace;
 use crate::linalg::tridiag::SymTridiagEig;
 use crate::tensor::Mat;
@@ -37,9 +39,9 @@ pub struct MllGrad {
 }
 
 /// An inference engine: computes the nmll and gradient for a blackbox
-/// kernel operator and training targets.
+/// linear operator and training targets.
 pub trait InferenceEngine {
-    fn mll_and_grad(&mut self, op: &dyn KernelOperator, y: &[f64]) -> MllGrad;
+    fn mll_and_grad(&mut self, op: &dyn LinearOp, y: &[f64]) -> MllGrad;
     fn name(&self) -> &'static str;
 }
 
@@ -80,22 +82,16 @@ impl BbmmEngine {
         }
     }
 
-    /// Build the §4.1 preconditioner for the operator (rank 0 → identity).
-    pub fn build_preconditioner(&self, op: &dyn KernelOperator) -> Box<dyn Preconditioner> {
-        if self.precond_rank == 0 {
-            return Box::new(IdentityPrecond);
-        }
-        let diag = op.diag();
-        let pc = pivoted_cholesky(&diag, |i| op.row(i), self.precond_rank, 0.0);
-        if pc.l.cols() == 0 {
-            return Box::new(IdentityPrecond);
-        }
-        Box::new(PartialCholPrecond::new(pc.l, op.noise()))
+    /// Build the §4.1 preconditioner for the operator (rank 0 → identity):
+    /// rank-k pivoted Cholesky over the operator's noise-free part, via the
+    /// generic [`crate::linalg::op::build_preconditioner`] dispatcher.
+    pub fn build_preconditioner(&self, op: &dyn LinearOp) -> Box<dyn Preconditioner> {
+        crate::linalg::op::build_preconditioner(op, self.precond_rank)
     }
 }
 
 impl InferenceEngine for BbmmEngine {
-    fn mll_and_grad(&mut self, op: &dyn KernelOperator, y: &[f64]) -> MllGrad {
+    fn mll_and_grad(&mut self, op: &dyn LinearOp, y: &[f64]) -> MllGrad {
         let n = op.n();
         assert_eq!(y.len(), n);
         let t = self.n_probes;
@@ -175,7 +171,7 @@ impl InferenceEngine for BbmmEngine {
 pub struct CholeskyEngine;
 
 impl InferenceEngine for CholeskyEngine {
-    fn mll_and_grad(&mut self, op: &dyn KernelOperator, y: &[f64]) -> MllGrad {
+    fn mll_and_grad(&mut self, op: &dyn LinearOp, y: &[f64]) -> MllGrad {
         let n = op.n();
         let k_hat = op.dense();
         let ch = crate::linalg::cholesky::Cholesky::new_with_jitter(&k_hat)
@@ -337,7 +333,7 @@ mod tests {
 
     #[test]
     fn engines_accept_sharded_operators_through_the_trait() {
-        // both engines consume &dyn KernelOperator, so the sharded operator
+        // both engines consume &dyn LinearOp, so the sharded operator
         // drops in with no engine changes and reproduces the dense numbers
         use crate::kernels::ShardedKernelOp;
         let n = 60;

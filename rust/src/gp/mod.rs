@@ -25,7 +25,7 @@ pub mod sgpr;
 pub mod ski;
 
 pub use dong::DongEngine;
-pub use exact::{ExactGp, ExactOp};
+pub use exact::{Engine, ExactGp};
 pub use fitc::FitcOp;
 pub use mll::{BbmmEngine, CholeskyEngine, InferenceEngine, MllGrad};
 pub use multitask::MultitaskOp;

@@ -6,8 +6,12 @@
 //! ```
 //!
 //! Generic over the engine: the caller supplies a batched solve
-//! `K̂⁻¹ · M` closure — mBCG for BBMM, triangular solves for Cholesky.
+//! `K̂⁻¹ · M` closure — or passes the training operator itself to
+//! [`predict_op`], which dispatches the solve on the operator's structure
+//! (direct Woodbury for SGPR-shaped compositions, dense Cholesky for
+//! explicit matrices, preconditioned mBCG otherwise).
 
+use crate::linalg::op::{solve, LinearOp, SolveOptions};
 use crate::tensor::Mat;
 
 /// Posterior mean and (marginal) variance at test points.
@@ -61,6 +65,21 @@ pub fn predict(
     Prediction { mean, var }
 }
 
+/// Predictive distribution through the **generic solve path**: the
+/// training operator is any [`LinearOp`] composition, and the batched
+/// `K̂⁻¹·[y K_X*ᵀ]` solve is dispatched on its structure by
+/// [`crate::linalg::op::solve()`]. This is the single path exact, SGPR,
+/// SKI, and sharded models all predict through.
+pub fn predict_op(
+    op: &dyn LinearOp,
+    k_star: &Mat,
+    k_star_diag: &[f64],
+    y: &[f64],
+    opts: &SolveOptions,
+) -> Prediction {
+    predict(k_star, k_star_diag, |m| solve(op, m, opts), y)
+}
+
 /// Mean-only prediction (one solve total, reused across all test points).
 pub fn predict_mean(k_star: &Mat, solve: impl Fn(&Mat) -> Mat, y: &[f64]) -> Vec<f64> {
     let n = k_star.cols();
@@ -101,7 +120,7 @@ pub fn rmse(pred: &[f64], truth: &[f64]) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kernels::{DenseKernelOp, KernelOperator, Rbf};
+    use crate::kernels::{DenseKernelOp, Rbf};
     use crate::linalg::cholesky::Cholesky;
     use crate::util::Rng;
 

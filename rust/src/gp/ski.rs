@@ -4,142 +4,115 @@
 //! K̂ ≈ W K_UU Wᵀ + σ²I
 //! ```
 //!
-//! with `W` a sparse local-cubic-convolution interpolation matrix (4
-//! non-zeros per row) and `K_UU` a stationary kernel on a **regular 1-D
-//! grid** — hence symmetric Toeplitz, giving O(m log m) mat-vecs via
-//! [`crate::linalg::ToeplitzOp`]. A blackbox mat-mul is therefore
-//! O(t·n + t·m log m), which is what lets the Figure-2(right) experiments
-//! run at n = 500,000.
+//! written as the composition `AddedDiagOp(InterpOp(GridToeplitzOp))`: `W`
+//! is the sparse local-cubic-convolution interpolation matrix
+//! ([`crate::linalg::op::SparseInterp`], 4 non-zeros per row) and `K_UU` a
+//! stationary kernel on a **regular 1-D grid** — hence symmetric Toeplitz,
+//! giving O(m log m) mat-vecs via [`crate::linalg::ToeplitzOp`]. A
+//! blackbox mat-mul is therefore O(t·n + t·m log m), which is what lets
+//! the Figure-2(right) experiments run at n = 500,000. The only SKI-
+//! specific code left is [`GridToeplitzOp`] (the kernel-parameterised grid
+//! covariance, ~60 lines) — interpolation, noise, preconditioning, and
+//! solving are all generic algebra.
 //!
 //! Multi-dimensional inputs enter through a deep feature map ([52]) whose
 //! final layer is 1-D — the paper's SKI+DKL configuration.
 
-use crate::kernels::{Kernel, KernelOperator};
+use crate::kernels::Kernel;
+use crate::linalg::op::{AddedDiagOp, InterpOp, LinearOp, SparseInterp, ToeplitzLinOp};
 use crate::linalg::toeplitz::ToeplitzOp;
 use crate::tensor::Mat;
-use crate::util::par;
 
-/// Keys cubic-convolution interpolation kernel (a = −1/2).
-#[inline]
-fn cubic_weight(s: f64) -> f64 {
-    let s = s.abs();
-    if s < 1.0 {
-        (1.5 * s - 2.5) * s * s + 1.0
-    } else if s < 2.0 {
-        ((-0.5 * s + 2.5) * s - 4.0) * s + 2.0
-    } else {
-        0.0
-    }
-}
-
-/// Sparse interpolation matrix: 4 non-zeros per row.
-pub struct SparseInterp {
-    /// grid indices per row (4 each)
-    idx: Vec<[usize; 4]>,
-    /// interpolation weights per row (4 each, summing to 1)
-    w: Vec<[f64; 4]>,
+/// Stationary kernel evaluated on a regular grid: a [`ToeplitzLinOp`]
+/// `K_UU` plus one Toeplitz per kernel-parameter derivative, all applied
+/// via FFT. This is the inner operator of the SKI sandwich — the Toeplitz
+/// read surface (`diag`/`row`/`entry`/`dense`) is wholly delegated; only
+/// the kernel parameterisation lives here.
+pub struct GridToeplitzOp {
+    kernel: Box<dyn Kernel>,
+    /// grid spacing
+    h: f64,
     m: usize,
+    /// cached Toeplitz K_UU
+    kuu: ToeplitzLinOp,
+    /// cached Toeplitz dK_UU/draw_p per kernel parameter
+    dkuu: Vec<ToeplitzOp>,
 }
 
-impl SparseInterp {
-    /// Build cubic interpolation weights for points `z` (1-D features) onto
-    /// a regular grid `[lo, hi]` with `m` nodes. Points are clamped to the
-    /// interpolable interior.
-    pub fn new(z: &[f64], lo: f64, hi: f64, m: usize) -> Self {
-        assert!(m >= 4, "need at least 4 grid points for cubic interpolation");
-        assert!(hi > lo);
-        let h = (hi - lo) / (m - 1) as f64;
-        let mut idx = Vec::with_capacity(z.len());
-        let mut w = Vec::with_capacity(z.len());
-        for &zi in z {
-            // position in grid units, clamped so the 4-point stencil fits
-            let p = ((zi - lo) / h).clamp(1.0, (m - 3) as f64 + 0.999_999);
-            let j0 = p.floor() as usize;
-            let u = p - j0 as f64;
-            let ids = [j0 - 1, j0, j0 + 1, j0 + 2];
-            let ws = [
-                cubic_weight(1.0 + u),
-                cubic_weight(u),
-                cubic_weight(1.0 - u),
-                cubic_weight(2.0 - u),
-            ];
-            idx.push(ids);
-            w.push(ws);
+impl GridToeplitzOp {
+    /// Build over an `m`-point grid with spacing `h`.
+    pub fn new(kernel: Box<dyn Kernel>, h: f64, m: usize) -> Self {
+        let (kuu, dkuu) = Self::build_toeplitz(kernel.as_ref(), h, m);
+        GridToeplitzOp {
+            kernel,
+            h,
+            m,
+            kuu,
+            dkuu,
         }
-        SparseInterp { idx, w, m }
     }
 
-    pub fn n(&self) -> usize {
-        self.idx.len()
-    }
-
-    pub fn m(&self) -> usize {
-        self.m
-    }
-
-    /// `W · M` — (n×m)·(m×t) in O(4·n·t).
-    pub fn apply(&self, m: &Mat) -> Mat {
-        assert_eq!(m.rows(), self.m);
-        let t = m.cols();
-        let n = self.n();
-        let mut out = Mat::zeros(n, t);
-        let idx = &self.idx;
-        let w = &self.w;
-        par::parallel_rows_mut(out.data_mut(), n, t, |row_lo, chunk| {
-            for (ri, orow) in chunk.chunks_mut(t).enumerate() {
-                let r = row_lo + ri;
-                for a in 0..4 {
-                    let wa = w[r][a];
-                    let mrow = m.row(idx[r][a]);
-                    for c in 0..t {
-                        orow[c] += wa * mrow[c];
-                    }
-                }
-            }
-        });
-        out
-    }
-
-    /// `Wᵀ · M` — (m×n)·(n×t) in O(4·n·t).
-    pub fn apply_t(&self, mat: &Mat) -> Mat {
-        assert_eq!(mat.rows(), self.n());
-        let t = mat.cols();
-        let mut out = Mat::zeros(self.m, t);
-        // scatter-add; serial over n (t is small) — could shard by target
-        for r in 0..self.n() {
-            let mrow = mat.row(r);
-            for a in 0..4 {
-                let target = self.idx[r][a];
-                let wa = self.w[r][a];
-                let orow = out.row_mut(target);
-                for c in 0..t {
-                    orow[c] += wa * mrow[c];
-                }
+    fn build_toeplitz(kernel: &dyn Kernel, h: f64, m: usize) -> (ToeplitzLinOp, Vec<ToeplitzOp>) {
+        let nk = kernel.n_params();
+        let mut col = Vec::with_capacity(m);
+        let mut dcols: Vec<Vec<f64>> = vec![Vec::with_capacity(m); nk];
+        let mut g = vec![0.0; nk];
+        let origin = [0.0];
+        for i in 0..m {
+            let xi = [i as f64 * h];
+            col.push(kernel.eval(&origin, &xi));
+            kernel.eval_grad(&origin, &xi, &mut g);
+            for (p, dc) in dcols.iter_mut().enumerate() {
+                dc.push(g[p]);
             }
         }
-        out
+        (
+            ToeplitzLinOp::new(col),
+            dcols.into_iter().map(ToeplitzOp::new).collect(),
+        )
     }
 
-    /// weights/indices of row i (for O(1)-ish row access)
-    pub fn row_stencil(&self, i: usize) -> (&[usize; 4], &[f64; 4]) {
-        (&self.idx[i], &self.w[i])
+    /// The covariance function.
+    pub fn kernel(&self) -> &dyn Kernel {
+        self.kernel.as_ref()
+    }
+
+    /// First column of the Toeplitz grid covariance.
+    pub fn first_column(&self) -> &[f64] {
+        self.kuu.toeplitz().first_column()
+    }
+
+    /// Overwrite kernel hyperparameters (rebuilds the Toeplitz caches).
+    pub fn set_kernel_params(&mut self, raw: &[f64]) {
+        self.kernel.set_params(raw);
+        let (kuu, dkuu) = Self::build_toeplitz(self.kernel.as_ref(), self.h, self.m);
+        self.kuu = kuu;
+        self.dkuu = dkuu;
     }
 }
 
-/// The SKI kernel operator.
+impl LinearOp for GridToeplitzOp {
+    crate::linear_op_delegate!(kuu);
+
+    fn n_params(&self) -> usize {
+        self.kernel.n_params()
+    }
+
+    fn dmatmul(&self, param: usize, m: &Mat) -> Mat {
+        self.dkuu[param].matmul(m)
+    }
+}
+
+/// The SKI kernel operator — a named wrapper over
+/// `AddedDiagOp(InterpOp(GridToeplitzOp))` plus the 1-D features it was
+/// built from (needed for test-time cross-covariances).
 pub struct SkiOp {
     /// 1-D features (raw inputs or deep-kernel features), length n
     z: Vec<f64>,
-    interp: SparseInterp,
-    kernel: Box<dyn Kernel>,
-    raw_noise: f64,
     grid_lo: f64,
     grid_h: f64,
     m: usize,
-    /// cached Toeplitz K_UU
-    kuu: ToeplitzOp,
-    /// cached Toeplitz dK_UU/draw_p per kernel parameter
-    dkuu: Vec<ToeplitzOp>,
+    op: AddedDiagOp<InterpOp<GridToeplitzOp>>,
 }
 
 impl SkiOp {
@@ -157,65 +130,48 @@ impl SkiOp {
         let lo = zmin - 2.0 * h;
         let hi = lo + h * (m - 1) as f64;
         let interp = SparseInterp::new(&z, lo, hi, m);
-        let (kuu, dkuu) = Self::build_toeplitz(kernel.as_ref(), h, m);
+        let grid = GridToeplitzOp::new(kernel, h, m);
         SkiOp {
             z,
-            interp,
-            kernel,
-            raw_noise: noise.ln(),
             grid_lo: lo,
             grid_h: h,
             m,
-            kuu,
-            dkuu,
+            op: AddedDiagOp::new(InterpOp::new(interp, grid), noise),
         }
     }
 
-    fn build_toeplitz(kernel: &dyn Kernel, h: f64, m: usize) -> (ToeplitzOp, Vec<ToeplitzOp>) {
-        let nk = kernel.n_params();
-        let mut col = Vec::with_capacity(m);
-        let mut dcols: Vec<Vec<f64>> = vec![Vec::with_capacity(m); nk];
-        let mut g = vec![0.0; nk];
-        let origin = [0.0];
-        for i in 0..m {
-            let xi = [i as f64 * h];
-            col.push(kernel.eval(&origin, &xi));
-            kernel.eval_grad(&origin, &xi, &mut g);
-            for (p, dc) in dcols.iter_mut().enumerate() {
-                dc.push(g[p]);
-            }
-        }
-        (
-            ToeplitzOp::new(col),
-            dcols.into_iter().map(ToeplitzOp::new).collect(),
-        )
-    }
-
+    /// Grid descriptor `(lo, spacing, m)`.
     pub fn grid(&self) -> (f64, f64, usize) {
         (self.grid_lo, self.grid_h, self.m)
     }
 
+    /// The 1-D features the operator was built over.
     pub fn features(&self) -> &[f64] {
         &self.z
     }
 
+    /// The covariance function.
     pub fn kernel(&self) -> &dyn Kernel {
-        self.kernel.as_ref()
+        self.op.inner().inner().kernel()
     }
 
+    /// The interpolation matrix `W`.
+    pub fn interp(&self) -> &SparseInterp {
+        self.op.inner().interp()
+    }
+
+    /// Raw parameter vector `[kernel params…, log σ²]`.
     pub fn params(&self) -> Vec<f64> {
-        let mut p = self.kernel.params();
-        p.push(self.raw_noise);
+        let mut p = self.kernel().params();
+        p.push(self.op.raw_value());
         p
     }
 
+    /// Overwrite raw parameters (rebuilds the grid Toeplitz caches).
     pub fn set_params(&mut self, raw: &[f64]) {
-        let nk = self.kernel.n_params();
-        self.kernel.set_params(&raw[..nk]);
-        self.raw_noise = raw[nk];
-        let (kuu, dkuu) = Self::build_toeplitz(self.kernel.as_ref(), self.grid_h, self.m);
-        self.kuu = kuu;
-        self.dkuu = dkuu;
+        let nk = self.kernel().n_params();
+        self.op.inner_mut().inner_mut().set_kernel_params(&raw[..nk]);
+        self.op.set_raw_value(raw[nk]);
     }
 
     /// SKI cross-covariance rows for *test* features: `W* K_UU Wᵀ`.
@@ -224,18 +180,20 @@ impl SkiOp {
         let w_star = SparseInterp::new(z_test, self.grid_lo, hi, self.m);
         // (n*×m) · T · (m×n): build T Wᵀ column block implicitly — for each
         // test row, u = T w*, then dot against training stencils.
-        let mut out = Mat::zeros(z_test.len(), self.n());
+        let n = self.z.len();
+        let interp = self.interp();
+        let mut out = Mat::zeros(z_test.len(), n);
         for i in 0..z_test.len() {
             let (ids, ws) = w_star.row_stencil(i);
             let u = self.toeplitz_times_sparse(ids, ws);
             let orow = out.row_mut(i);
-            for j in 0..self.n() {
-                let (jds, jws) = self.interp.row_stencil(j);
+            for (j, o) in orow.iter_mut().enumerate() {
+                let (jds, jws) = interp.row_stencil(j);
                 let mut s = 0.0;
                 for b in 0..4 {
                     s += jws[b] * u[jds[b]];
                 }
-                orow[j] = s;
+                *o = s;
             }
         }
         out
@@ -243,7 +201,7 @@ impl SkiOp {
 
     /// `u = T w` where w is 4-sparse: u[r] = Σ_a w_a c[|r − j_a|] — O(4m).
     fn toeplitz_times_sparse(&self, ids: &[usize; 4], ws: &[f64; 4]) -> Vec<f64> {
-        let col = self.kuu.first_column();
+        let col = self.op.inner().inner().first_column();
         let mut u = vec![0.0; self.m];
         for a in 0..4 {
             let ja = ids[a];
@@ -256,78 +214,15 @@ impl SkiOp {
     }
 }
 
-impl KernelOperator for SkiOp {
-    fn n(&self) -> usize {
-        self.z.len()
-    }
+impl LinearOp for SkiOp {
+    crate::linear_op_delegate!(op);
 
     fn n_params(&self) -> usize {
-        self.kernel.n_params() + 1
-    }
-
-    /// `K̂M = W (T (WᵀM)) + σ²M` — O(t(n + m log m)).
-    fn matmul(&self, m: &Mat) -> Mat {
-        let wtm = self.interp.apply_t(m); // m×t
-        let t_wtm = self.kuu.matmul(&wtm); // m×t (FFT)
-        let mut out = self.interp.apply(&t_wtm); // n×t
-        let sigma2 = self.noise();
-        for r in 0..out.rows() {
-            let orow = out.row_mut(r);
-            let mrow = m.row(r);
-            for c in 0..orow.len() {
-                orow[c] += sigma2 * mrow[c];
-            }
-        }
-        out
+        self.op.n_params()
     }
 
     fn dmatmul(&self, param: usize, m: &Mat) -> Mat {
-        let nk = self.kernel.n_params();
-        if param == nk {
-            let mut out = m.clone();
-            out.scale_assign(self.noise());
-            return out;
-        }
-        let wtm = self.interp.apply_t(m);
-        let dt_wtm = self.dkuu[param].matmul(&wtm);
-        self.interp.apply(&dt_wtm)
-    }
-
-    fn diag(&self) -> Vec<f64> {
-        // diag_i = wᵢᵀ T wᵢ over the 4-point stencil — O(16 n)
-        let col = self.kuu.first_column();
-        (0..self.n())
-            .map(|i| {
-                let (ids, ws) = self.interp.row_stencil(i);
-                let mut s = 0.0;
-                for a in 0..4 {
-                    for b in 0..4 {
-                        s += ws[a] * ws[b] * col[ids[a].abs_diff(ids[b])];
-                    }
-                }
-                s
-            })
-            .collect()
-    }
-
-    fn row(&self, i: usize) -> Vec<f64> {
-        // rowᵢ = wᵢ T Wᵀ — O(4m + 4n)
-        let (ids, ws) = self.interp.row_stencil(i);
-        let u = self.toeplitz_times_sparse(ids, ws);
-        (0..self.n())
-            .map(|j| {
-                let (jds, jws) = self.interp.row_stencil(j);
-                let mut s = 0.0;
-                for b in 0..4 {
-                    s += jws[b] * u[jds[b]];
-                }
-                s
-            })
-            .collect()
-    }
-
-    fn noise(&self) -> f64 {
-        self.raw_noise.exp()
+        self.op.dmatmul(param, m)
     }
 }
 
@@ -347,7 +242,7 @@ mod tests {
     fn interpolation_weights_sum_to_one() {
         let op = setup(200, 50, 1);
         for i in 0..200 {
-            let (_ids, ws) = op.interp.row_stencil(i);
+            let (_ids, ws) = op.interp().row_stencil(i);
             let s: f64 = ws.iter().sum();
             assert!((s - 1.0).abs() < 1e-12, "row {i}: {s}");
         }
@@ -371,6 +266,11 @@ mod tests {
         for i in [0usize, 7, 39] {
             let r = op.row(i);
             assert!((r[i] - d[i]).abs() < 1e-10);
+        }
+        // diagonal includes σ²; the noise-free part is the sandwich alone
+        let (cov, s2) = op.noise_split().unwrap();
+        for i in [0usize, 7, 39] {
+            assert!((cov.diag()[i] + s2 - d[i]).abs() < 1e-10);
         }
     }
 
@@ -420,9 +320,11 @@ mod tests {
         let op = setup(25, 30, 8);
         let z = op.features().to_vec();
         let cross = op.cross(&z);
-        // cross at training features == noiseless K rows
+        // cross at training features == noise-free K rows (the sandwich
+        // part of the composition)
+        let (cov, _s2) = op.noise_split().unwrap();
         for i in [0usize, 10, 24] {
-            let r = op.row(i);
+            let r = cov.row(i);
             for j in 0..25 {
                 assert!((cross.get(i, j) - r[j]).abs() < 1e-9);
             }

@@ -1,78 +1,75 @@
-//! Bayesian linear regression as a GP (paper §5): `K̂ = v·XXᵀ + σ²I`.
+//! Bayesian linear regression as a GP (paper §5): `K̂ = v·XXᵀ + σ²I` —
+//! written as the composition `AddedDiagOp(ScaledOp(LowRankOp(X)))`.
 //!
-//! The blackbox matmul distributes as `v·X(Xᵀ M) + σ²M` — O(tnd) instead of
-//! O(tn²) — so BBMM automatically recovers the efficient algorithm with "no
-//! additional derivation", which is exactly the paper's point.
+//! The algebra recovers the efficient algorithm "with no additional
+//! derivation" (the paper's point): [`crate::linalg::op::LowRankOp`]
+//! multiplies as `X(XᵀM)` — O(tnd) instead of O(tn²) — and the scale and
+//! noise ride on generic composition wrappers. The only model-specific
+//! code left is the 2-parameter gradient layout below.
 
-use super::KernelOperator;
+use crate::linalg::op::{AddedDiagOp, LinearOp, LowRankOp, ScaledOp};
 use crate::tensor::Mat;
 
 /// Linear-kernel operator (`v = exp(raw_var)` is the weight-space prior
 /// variance; raw params: `[log v, log σ²]`).
+///
+/// Invariant: `raw_var` is the authoritative (lossless, log-space)
+/// parameter; the [`ScaledOp`]'s scale is its cached `exp`, written only
+/// by [`LinearKernelOp::new`] and [`LinearKernelOp::set_params`].
 pub struct LinearKernelOp {
-    x: Mat,
+    op: AddedDiagOp<ScaledOp<LowRankOp>>,
     raw_var: f64,
-    raw_noise: f64,
 }
 
 impl LinearKernelOp {
+    /// Compose `variance·XXᵀ + noise·I`.
     pub fn new(x: Mat, variance: f64, noise: f64) -> Self {
         assert!(variance > 0.0 && noise > 0.0);
         LinearKernelOp {
-            x,
+            op: AddedDiagOp::new(ScaledOp::new(LowRankOp::new(x), variance), noise),
             raw_var: variance.ln(),
-            raw_noise: noise.ln(),
         }
     }
 
+    /// Raw parameter vector `[log v, log σ²]`.
     pub fn params(&self) -> Vec<f64> {
-        vec![self.raw_var, self.raw_noise]
+        vec![self.raw_var, self.op.raw_value()]
     }
 
+    /// Overwrite raw parameters.
     pub fn set_params(&mut self, raw: &[f64]) {
         self.raw_var = raw[0];
-        self.raw_noise = raw[1];
+        self.op.inner_mut().set_scale(raw[0].exp());
+        self.op.set_raw_value(raw[1]);
     }
 
+    /// Weight-space prior variance `v`.
     pub fn variance(&self) -> f64 {
         self.raw_var.exp()
     }
 
+    /// Training inputs (the low-rank factor itself).
     pub fn x(&self) -> &Mat {
-        &self.x
+        self.op.inner().inner().factor()
+    }
+
+    /// The noise-free covariance part `v·XXᵀ` of the composition.
+    pub fn cov(&self) -> &ScaledOp<LowRankOp> {
+        self.op.inner()
     }
 }
 
-impl KernelOperator for LinearKernelOp {
-    fn n(&self) -> usize {
-        self.x.rows()
-    }
+impl LinearOp for LinearKernelOp {
+    crate::linear_op_delegate!(op);
 
     fn n_params(&self) -> usize {
         2
     }
 
-    fn matmul(&self, m: &Mat) -> Mat {
-        // v·X(XᵀM) + σ²M — never forms XXᵀ
-        let xtm = self.x.t_matmul(m); // d×t
-        let mut out = self.x.matmul(&xtm); // n×t
-        out.scale_assign(self.variance());
-        let sigma2 = self.noise();
-        let mut noise_part = m.clone();
-        noise_part.scale_assign(sigma2);
-        out.add_assign(&noise_part);
-        out
-    }
-
     fn dmatmul(&self, param: usize, m: &Mat) -> Mat {
         match param {
-            0 => {
-                // d/draw_var = v·XXᵀ M
-                let xtm = self.x.t_matmul(m);
-                let mut out = self.x.matmul(&xtm);
-                out.scale_assign(self.variance());
-                out
-            }
+            // d(e^raw·XXᵀ)/draw = v·XXᵀ — exactly the scaled inner matmul
+            0 => self.op.inner().matmul(m),
             1 => {
                 let mut out = m.clone();
                 out.scale_assign(self.noise());
@@ -80,31 +77,6 @@ impl KernelOperator for LinearKernelOp {
             }
             _ => panic!("linear kernel has 2 params"),
         }
-    }
-
-    fn diag(&self) -> Vec<f64> {
-        let v = self.variance();
-        (0..self.n())
-            .map(|i| {
-                let r = self.x.row(i);
-                v * r.iter().map(|x| x * x).sum::<f64>()
-            })
-            .collect()
-    }
-
-    fn row(&self, i: usize) -> Vec<f64> {
-        let v = self.variance();
-        let xi = self.x.row(i);
-        (0..self.n())
-            .map(|j| {
-                let xj = self.x.row(j);
-                v * xi.iter().zip(xj.iter()).map(|(a, b)| a * b).sum::<f64>()
-            })
-            .collect()
-    }
-
-    fn noise(&self) -> f64 {
-        self.raw_noise.exp()
     }
 }
 
@@ -167,10 +139,11 @@ mod tests {
         let kd = op.dense();
         let ch = crate::linalg::cholesky::Cholesky::new(&kd).unwrap();
         let alpha = ch.solve_vec(&y);
-        // predictive mean at training points: K_noiseless · α
+        // predictive mean at training points: K_noiseless · α — the
+        // noise-free rows come from the composition's cov() part
         let mut pred = vec![0.0; n];
         for i in 0..n {
-            let row = op.row(i);
+            let row = op.cov().row(i);
             pred[i] = row.iter().zip(alpha.iter()).map(|(a, b)| a * b).sum();
         }
         let mae: f64 = pred
@@ -180,5 +153,22 @@ mod tests {
             .sum::<f64>()
             / n as f64;
         assert!(mae < 0.05, "mae={mae}");
+    }
+
+    #[test]
+    fn composition_exposes_woodbury_structure() {
+        // v·XXᵀ + σ²I has a (scaled) low-rank core; the bare factor is X,
+        // so the generic Woodbury dispatch must not claim it (the scale
+        // would be lost) — the hint stays iterative
+        let mut rng = Rng::new(4);
+        let x = Mat::from_fn(12, 2, |_, _| rng.normal());
+        let op = LinearKernelOp::new(x, 0.5, 0.1);
+        assert_eq!(
+            crate::linalg::op::solve_strategy(&op),
+            crate::linalg::op::SolveHint::Iterative
+        );
+        let (cov, s2) = op.noise_split().unwrap();
+        assert!((s2 - 0.1).abs() < 1e-12);
+        assert!(cov.low_rank_factor().is_none()); // ScaledOp hides the factor
     }
 }

@@ -1,14 +1,14 @@
-//! Kernel functions and the **blackbox operator** abstraction (paper §5).
+//! Kernel functions and the kernel-side of the **operator algebra**
+//! (paper §5).
 //!
 //! BBMM's programmability claim: a GP model is fully specified by a routine
-//! that multiplies the (noise-added) kernel matrix `K̂ = K + σ²I` — and its
-//! hyperparameter derivatives — against a dense matrix. That routine is the
-//! [`KernelOperator`] trait here. Exact GPs ([`operator::DenseKernelOp`]),
-//! their row-sharded variant ([`sharded::ShardedKernelOp`]),
-//! Bayesian linear regression ([`linear::LinearKernelOp`]), SGPR
-//! ([`crate::gp::sgpr::SgprOp`]) and SKI ([`crate::gp::ski::SkiOp`]) are all
-//! small implementations of it — mirroring the paper's "50 lines of code"
-//! observation (each operator impl here is of that order).
+//! that multiplies its covariance operator — and its hyperparameter
+//! derivatives — against a dense matrix. That routine is the composable
+//! [`crate::linalg::op::LinearOp`] trait; every model here is a thin
+//! composition over it. A training covariance `K̂ = K + σ²I` is written as
+//! `AddedDiagOp(KernelCovOp)` — the noise is a *composition*, not a field
+//! baked into each operator — mirroring the paper's "50 lines of code"
+//! observation (each noise-free covariance here is of that order).
 //!
 //! Hyperparameters are stored in **log space** (`θ = exp(raw)`) so Adam can
 //! run unconstrained; every `dmatmul` is with respect to the *raw*
@@ -24,10 +24,19 @@ pub mod stationary;
 pub use compose::{ProductKernel, SumKernel};
 pub use deep::DeepFeatureMap;
 pub use linear::LinearKernelOp;
-pub use operator::DenseKernelOp;
-pub use sharded::ShardedKernelOp;
+pub use operator::{DenseKernelOp, KernelCovOp};
+pub use sharded::{ShardedCovOp, ShardedKernelOp};
 pub use stationary::{Matern12, Matern32, Matern52, Rbf};
 
+/// Deprecated shim: the seed-era `KernelOperator` trait **is** the
+/// composable [`crate::linalg::op::LinearOp`] now — this re-export keeps
+/// seed examples compiling. Semantics moved with it: `diag`/`row` describe
+/// the *full* operator (σ² included); the noise-free part is reachable via
+/// [`crate::linalg::op::LinearOp::noise_split`]. New code should import
+/// `LinearOp` directly.
+pub use crate::linalg::op::LinearOp as KernelOperator;
+
+use crate::linalg::op::LinearOp;
 use crate::tensor::Mat;
 
 /// A positive-definite covariance function with analytic derivatives with
@@ -78,41 +87,27 @@ impl Clone for Box<dyn Kernel> {
     }
 }
 
-/// The paper's blackbox: everything an inference engine may ask of a model.
-///
-/// `matmul` is the hot path (one call per mBCG iteration); `diag`/`row`
-/// exist for the pivoted-Cholesky preconditioner; `dmatmul` feeds the
-/// stochastic trace term of the gradient (eq. 4).
-///
-/// Parameter indexing convention: raw kernel parameters come first
-/// (`0..n_kernel_params`), and the **last** index is always the raw noise
-/// `log σ²`.
-pub trait KernelOperator: Sync {
-    /// number of training points n
-    fn n(&self) -> usize;
-    /// total raw parameter count (kernel params + 1 for noise)
-    fn n_params(&self) -> usize;
-    /// `K̂ · M` — kernel matrix (plus σ²I) times an n×t matrix
-    fn matmul(&self, m: &Mat) -> Mat;
-    /// `(dK̂/draw_p) · M`
-    fn dmatmul(&self, param: usize, m: &Mat) -> Mat;
-    /// diagonal of the *noiseless* K (for pivoted Cholesky)
-    fn diag(&self) -> Vec<f64>;
-    /// row `i` of the *noiseless* K (for pivoted Cholesky)
-    fn row(&self, i: usize) -> Vec<f64>;
-    /// likelihood noise σ²
-    fn noise(&self) -> f64;
-
-    /// Dense materialisation of `K̂` (tests + the Cholesky baseline engine).
-    fn dense(&self) -> Mat {
-        let n = self.n();
-        let mut k = Mat::zeros(n, n);
-        for i in 0..n {
-            let r = self.row(i);
-            k.row_mut(i).copy_from_slice(&r);
-        }
-        k.add_diag(self.noise());
-        k
+/// The pluggable noise-free covariance `K(X, X)` seam behind the exact-GP
+/// model: any [`LinearOp`] over a training set that can also evaluate
+/// cross-covariances and update its kernel hyperparameters. The fused
+/// dense operator ([`KernelCovOp`]) and the row-sharded one
+/// ([`ShardedCovOp`]) are the two in-tree backends; later structures
+/// (per-device shards, batched operators, new approximations) plug in
+/// here without touching the model or the engines.
+pub trait KernelCov: LinearOp + Send {
+    /// Training inputs `X (n×d)`.
+    fn x(&self) -> &Mat;
+    /// The covariance function.
+    fn kernel(&self) -> &dyn Kernel;
+    /// Overwrite the kernel's raw hyperparameters.
+    fn set_kernel_params(&mut self, raw: &[f64]);
+    /// Cross-covariance `K(A, B)` for arbitrary point sets (predictions).
+    fn cross(&self, a: &Mat, b: &Mat) -> Mat {
+        operator::cross_kernel(self.kernel(), a, b)
+    }
+    /// Row-shard count of the backend (1 = monolithic).
+    fn shard_count(&self) -> usize {
+        1
     }
 }
 

@@ -1,12 +1,14 @@
-//! Exact-GP blackbox operator: fused `(K(X,X) + σ²I)·M` without ever
-//! materialising the n×n kernel matrix.
+//! Exact-GP covariance operators: the fused noise-free [`KernelCovOp`]
+//! (`K(X,X)·M` without ever materialising the n×n matrix) and the model
+//! composition [`DenseKernelOp`] = `AddedDiagOp(KernelCovOp)` = `K + σ²I`.
 //!
-//! This is the Rust analogue of the L1 Pallas kernel
+//! The fused matmul is the Rust analogue of the L1 Pallas kernel
 //! (`python/compile/kernels/kernel_matmul.py`): rows of K are produced one
 //! cache-tile at a time and immediately contracted against `M`, so peak
 //! memory is O(n·t + tile·n) instead of O(n²). Parallel over row tiles.
 
-use super::{Kernel, KernelOperator, StationaryFamily, StationaryParams};
+use super::{Kernel, KernelCov, StationaryFamily, StationaryParams};
+use crate::linalg::op::{AddedDiagOp, LinearOp};
 use crate::tensor::Mat;
 use crate::util::fastmath::fast_exp;
 use crate::util::par;
@@ -112,74 +114,44 @@ pub(crate) fn squared_dists_row(x: &Mat, xt: &Mat, xnorm: &[f64], i: usize, r2: 
     }
 }
 
-/// Exact kernel operator over a training set `X (n×d)`.
-pub struct DenseKernelOp {
+/// Noise-free exact covariance operator `K(X, X)` over a training set
+/// `X (n×d)` — the fused stationary fast path lives here; composing with
+/// [`AddedDiagOp`] yields the training operator `K̂ = K + σ²I`.
+pub struct KernelCovOp {
     x: Mat,
     kernel: Box<dyn Kernel>,
-    /// raw log σ²
-    raw_noise: f64,
+    /// cached Xᵀ (d×n): the distance pass streams over j
+    xt: Mat,
+    /// cached per-row squared norms |xᵢ|²
+    xnorm: Vec<f64>,
 }
 
-impl DenseKernelOp {
-    pub fn new(x: Mat, kernel: Box<dyn Kernel>, noise: f64) -> Self {
-        assert!(noise > 0.0);
-        DenseKernelOp {
+impl KernelCovOp {
+    /// Build over training inputs and a covariance function.
+    pub fn new(x: Mat, kernel: Box<dyn Kernel>) -> Self {
+        let xt = x.transpose();
+        let xnorm: Vec<f64> = (0..x.rows())
+            .map(|i| x.row(i).iter().map(|v| v * v).sum())
+            .collect();
+        KernelCovOp {
             x,
             kernel,
-            raw_noise: noise.ln(),
+            xt,
+            xnorm,
         }
     }
 
-    pub fn x(&self) -> &Mat {
-        &self.x
-    }
-
-    pub fn kernel(&self) -> &dyn Kernel {
-        self.kernel.as_ref()
-    }
-
-    /// Full raw parameter vector `[kernel params…, log σ²]`.
-    pub fn params(&self) -> Vec<f64> {
-        let mut p = self.kernel.params();
-        p.push(self.raw_noise);
-        p
-    }
-
-    pub fn set_params(&mut self, raw: &[f64]) {
-        assert_eq!(raw.len(), self.n_params());
-        let nk = self.kernel.n_params();
-        self.kernel.set_params(&raw[..nk]);
-        self.raw_noise = raw[nk];
-    }
-
-    /// Cross-kernel matrix `K(A, B)` for arbitrary point sets (predictions).
-    pub fn cross(&self, a: &Mat, b: &Mat) -> Mat {
-        cross_kernel(self.kernel.as_ref(), a, b)
-    }
-
-    /// Fused stationary mat-mul: `K·M (+ σ²M)` or `(∂K/∂log ℓ)·M`, with r²
-    /// blocks built by vectorised rank-d updates (no virtual calls, no K).
-    fn stationary_matmul(
-        &self,
-        sp: &StationaryParams,
-        m: &Mat,
-        tf: TileFn,
-        add_noise: bool,
-    ) -> Mat {
-        let n = self.n();
+    /// Fused stationary mat-mul: `K·M` or `(∂K/∂log ℓ)·M`, with r² blocks
+    /// built by vectorised rank-d updates (no virtual calls, no K).
+    fn stationary_matmul(&self, sp: &StationaryParams, m: &Mat, tf: TileFn) -> Mat {
+        let n = self.x.rows();
         assert_eq!(m.rows(), n);
         let t = m.cols();
         let x = &self.x;
-        // transpose X so the per-row distance pass streams over j
-        let xt = x.transpose(); // d×n
-        let xnorm: Vec<f64> = (0..n)
-            .map(|i| x.row(i).iter().map(|v| v * v).sum())
-            .collect();
-        let sigma2 = self.noise();
         let mt = m.transpose(); // t×n: contraction becomes length-n dots
         let mut out = Mat::zeros(n, t);
-        let xnorm_ref = &xnorm;
-        let xt_ref = &xt;
+        let xnorm_ref = &self.xnorm;
+        let xt_ref = &self.xt;
         let mt_ref = &mt;
         par::parallel_rows_mut(out.data_mut(), n, t, |row_lo, chunk| {
             let mut dots = vec![0.0f64; n];
@@ -196,12 +168,6 @@ impl DenseKernelOp {
                         acc += krow[j] * mtrow[j];
                     }
                     *o = acc;
-                }
-                if add_noise {
-                    let mrow = m.row(i);
-                    for c in 0..t {
-                        orow[c] += sigma2 * mrow[c];
-                    }
                 }
             }
         });
@@ -266,23 +232,22 @@ fn cross_stationary(sp: &StationaryParams, a: &Mat, b: &Mat) -> Mat {
 /// L2 for n up to ~8k while amortising the tile's kernel evaluations.
 const TILE: usize = 64;
 
-impl KernelOperator for DenseKernelOp {
-    fn n(&self) -> usize {
-        self.x.rows()
+impl LinearOp for KernelCovOp {
+    fn shape(&self) -> (usize, usize) {
+        (self.x.rows(), self.x.rows())
     }
 
     fn n_params(&self) -> usize {
-        self.kernel.n_params() + 1
+        self.kernel.n_params()
     }
 
     fn matmul(&self, m: &Mat) -> Mat {
         if let Some(sp) = self.kernel.stationary() {
-            return self.stationary_matmul(&sp, m, TileFn::Value, true);
+            return self.stationary_matmul(&sp, m, TileFn::Value);
         }
-        let n = self.n();
+        let n = self.x.rows();
         assert_eq!(m.rows(), n);
         let t = m.cols();
-        let sigma2 = self.noise();
         let mut out = Mat::zeros(n, t);
         let kern = self.kernel.as_ref();
         let x = &self.x;
@@ -300,7 +265,7 @@ impl KernelOperator for DenseKernelOp {
                         *kv = kern.eval(xi, x.row(j));
                     }
                 }
-                // contract: out[r, :] = K[r, :] · M + σ² m[r, :]
+                // contract: out[r, :] = K[r, :] · M
                 for rr in 0..rt {
                     let krow = &ktile[rr * n..(rr + 1) * n];
                     let orow = &mut chunk[(r0 + rr) * t..(r0 + rr + 1) * t];
@@ -310,10 +275,6 @@ impl KernelOperator for DenseKernelOp {
                             orow[c] += kv * mrow[c];
                         }
                     }
-                    let mrow = m.row(row_lo + r0 + rr);
-                    for c in 0..t {
-                        orow[c] += sigma2 * mrow[c];
-                    }
                 }
                 r0 += rt;
             }
@@ -322,26 +283,20 @@ impl KernelOperator for DenseKernelOp {
     }
 
     fn dmatmul(&self, param: usize, m: &Mat) -> Mat {
-        let n = self.n();
+        let n = self.x.rows();
         assert_eq!(m.rows(), n);
         let t = m.cols();
         let nk = self.kernel.n_params();
-        assert!(param < nk + 1);
-        if param == nk {
-            // dK̂/draw_noise = σ² I  (θ = e^{raw})
-            let mut out = m.clone();
-            out.scale_assign(self.noise());
-            return out;
-        }
+        assert!(param < nk);
         if let Some(sp) = self.kernel.stationary() {
             // stationary layout: param 0 = log ℓ, param 1 = log s;
-            // ∂K/∂log s = K (noiseless)
+            // ∂K/∂log s = K
             let tf = if param == 0 {
                 TileFn::DLogLengthscale
             } else {
                 TileFn::Value
             };
-            return self.stationary_matmul(&sp, m, tf, false);
+            return self.stationary_matmul(&sp, m, tf);
         }
         let mut out = Mat::zeros(n, t);
         let kern = self.kernel.as_ref();
@@ -369,27 +324,101 @@ impl KernelOperator for DenseKernelOp {
     }
 
     fn diag(&self) -> Vec<f64> {
-        (0..self.n())
+        (0..self.x.rows())
             .map(|i| self.kernel.eval(self.x.row(i), self.x.row(i)))
             .collect()
     }
 
     fn row(&self, i: usize) -> Vec<f64> {
         let xi = self.x.row(i);
-        (0..self.n())
+        (0..self.x.rows())
             .map(|j| self.kernel.eval(xi, self.x.row(j)))
             .collect()
     }
 
-    fn noise(&self) -> f64 {
-        self.raw_noise.exp()
+    fn entry(&self, i: usize, j: usize) -> f64 {
+        self.kernel.eval(self.x.row(i), self.x.row(j))
     }
 
     fn dense(&self) -> Mat {
-        // vectorised materialisation (baseline engines call this)
-        let mut k = self.cross(&self.x, &self.x);
-        k.add_diag(self.noise());
-        k
+        cross_kernel(self.kernel.as_ref(), &self.x, &self.x)
+    }
+}
+
+impl KernelCov for KernelCovOp {
+    fn x(&self) -> &Mat {
+        &self.x
+    }
+
+    fn kernel(&self) -> &dyn Kernel {
+        self.kernel.as_ref()
+    }
+
+    fn set_kernel_params(&mut self, raw: &[f64]) {
+        self.kernel.set_params(raw);
+    }
+}
+
+/// Exact training operator `K̂ = K(X,X) + σ²I` — a named wrapper over the
+/// composition `AddedDiagOp(KernelCovOp)`. Raw parameter layout:
+/// `[kernel params…, log σ²]`.
+pub struct DenseKernelOp {
+    op: AddedDiagOp<KernelCovOp>,
+}
+
+impl DenseKernelOp {
+    /// Compose `K(X,X) + noise·I`.
+    pub fn new(x: Mat, kernel: Box<dyn Kernel>, noise: f64) -> Self {
+        DenseKernelOp {
+            op: AddedDiagOp::new(KernelCovOp::new(x, kernel), noise),
+        }
+    }
+
+    /// Training inputs.
+    pub fn x(&self) -> &Mat {
+        self.op.inner().x()
+    }
+
+    /// The covariance function.
+    pub fn kernel(&self) -> &dyn Kernel {
+        self.op.inner().kernel()
+    }
+
+    /// The noise-free covariance part of the composition.
+    pub fn cov(&self) -> &KernelCovOp {
+        self.op.inner()
+    }
+
+    /// Full raw parameter vector `[kernel params…, log σ²]`.
+    pub fn params(&self) -> Vec<f64> {
+        let mut p = self.kernel().params();
+        p.push(self.op.raw_value());
+        p
+    }
+
+    /// Overwrite all raw parameters.
+    pub fn set_params(&mut self, raw: &[f64]) {
+        assert_eq!(raw.len(), LinearOp::n_params(self));
+        let nk = self.kernel().n_params();
+        self.op.inner_mut().set_kernel_params(&raw[..nk]);
+        self.op.set_raw_value(raw[nk]);
+    }
+
+    /// Cross-kernel matrix `K(A, B)` for arbitrary point sets (predictions).
+    pub fn cross(&self, a: &Mat, b: &Mat) -> Mat {
+        self.op.inner().cross(a, b)
+    }
+}
+
+impl LinearOp for DenseKernelOp {
+    crate::linear_op_delegate!(op);
+
+    fn n_params(&self) -> usize {
+        self.op.n_params()
+    }
+
+    fn dmatmul(&self, param: usize, m: &Mat) -> Mat {
+        self.op.dmatmul(param, m)
     }
 }
 
@@ -417,12 +446,19 @@ mod tests {
     }
 
     #[test]
-    fn dense_includes_noise_on_diagonal() {
+    fn full_operator_semantics_include_noise_on_diagonal() {
         let op = setup(10, 2, 3);
         let kd = op.dense();
+        // full-operator row/diag include σ²; the noise-free part is
+        // reachable through the composition's noise_split
         let krow = op.row(0);
-        assert!((kd.get(0, 0) - (krow[0] + 0.1)).abs() < 1e-12);
+        assert!((kd.get(0, 0) - krow[0]).abs() < 1e-12);
         assert!((kd.get(0, 1) - krow[1]).abs() < 1e-12);
+        let (cov, sigma2) = op.noise_split().unwrap();
+        assert!((sigma2 - 0.1).abs() < 1e-12);
+        assert!((cov.row(0)[0] + sigma2 - krow[0]).abs() < 1e-12);
+        assert!((op.diag()[0] - krow[0]).abs() < 1e-12);
+        assert!((op.noise() - 0.1).abs() < 1e-12);
     }
 
     #[test]
@@ -433,7 +469,7 @@ mod tests {
         let m = Mat::from_fn(n, 2, |_, _| rng.normal());
         let raw = op.params();
         let h = 1e-6;
-        for p in 0..op.n_params() {
+        for p in 0..LinearOp::n_params(&op) {
             let analytic = op.dmatmul(p, &m);
             let mut plus = raw.clone();
             plus[p] += h;

@@ -1,24 +1,26 @@
-//! Sharded exact-GP operator: `(K(X,X) + σ²I)·M` as `S` row-shards.
+//! Sharded exact-GP covariance: `K(X,X)·M` as `S` row-shards, composed
+//! with [`AddedDiagOp`] into the training operator `K̂ = K + σ²I`.
 //!
-//! [`super::DenseKernelOp`] fuses tile generation with the mat-mul but
+//! [`super::KernelCovOp`] fuses tile generation with the mat-mul but
 //! still walks the whole operator in one monolithic parallel-for per mBCG
 //! iteration. Following Wang et al. 2019 (*Exact Gaussian Processes on a
-//! Million Data Points*, 1903.08114), [`ShardedKernelOp`] partitions the
+//! Million Data Points*, 1903.08114), [`ShardedCovOp`] partitions the
 //! training rows into `S` contiguous shards instead. Each shard owns the
 //! tile work-queue for its row-block, scheduled by
-//! [`crate::runtime::shard`] (static striping + work stealing), and also
-//! exposes the block as a standalone partial product through
-//! [`crate::linalg::mbcg::ShardedMmm`] so the solver can assemble
-//! `K̂·M` shard by shard — the seam along which shards later map 1:1 onto
-//! devices or processes.
+//! [`crate::runtime::shard`] (static striping + work stealing), and the
+//! composed [`ShardedKernelOp`] also exposes each block as a standalone
+//! partial product through [`crate::linalg::mbcg::ShardedMmm`] so the
+//! solver can assemble `K̂·M` shard by shard — the seam along which shards
+//! later map 1:1 onto devices or processes.
 //!
 //! Numerics are identical to the dense operator (same distance expansion,
 //! same summation order), and kernel rows are still produced on the fly,
 //! so peak memory stays O(n·t + tile·n) — no n×n matrix is ever formed.
 
 use super::operator::{cross_kernel, squared_dists_row, stationary_apply, TileFn};
-use super::{Kernel, KernelOperator};
+use super::{Kernel, KernelCov};
 use crate::linalg::mbcg::ShardedMmm;
+use crate::linalg::op::{AddedDiagOp, LinearOp};
 use crate::runtime::shard::{partition_rows, run_rows_mut, ShardQueue};
 use crate::tensor::{Mat, Scalar};
 use std::ops::Range;
@@ -29,18 +31,16 @@ pub const DEFAULT_TILE: usize = 64;
 
 /// Which kernel function a block fill evaluates.
 enum BlockFn {
-    /// `K·M` (optionally plus `σ²M`)
-    Value { add_noise: bool },
+    /// `K·M`, optionally plus `σ²M` fused into the shard pass
+    Value { noise: Option<f64> },
     /// `(∂K/∂raw_p)·M` for a kernel parameter `p` (noise handled upstream)
     DParam(usize),
 }
 
-/// Exact kernel operator over `X (n×d)` partitioned into row shards.
-pub struct ShardedKernelOp {
+/// Noise-free exact covariance over `X (n×d)` partitioned into row shards.
+pub struct ShardedCovOp {
     x: Mat,
     kernel: Box<dyn Kernel>,
-    /// raw log σ²
-    raw_noise: f64,
     /// contiguous, ordered row ranges covering `0..n`
     shards: Vec<Range<usize>>,
     /// rows per scheduled tile within a shard
@@ -51,20 +51,18 @@ pub struct ShardedKernelOp {
     xnorm: Vec<f64>,
 }
 
-impl ShardedKernelOp {
+impl ShardedCovOp {
     /// Build over `n_shards` row shards (clamped to `1..=n`).
-    pub fn new(x: Mat, kernel: Box<dyn Kernel>, noise: f64, n_shards: usize) -> Self {
-        assert!(noise > 0.0);
+    pub fn new(x: Mat, kernel: Box<dyn Kernel>, n_shards: usize) -> Self {
         let n = x.rows();
         let shards = partition_rows(n, n_shards);
         let xt = x.transpose();
         let xnorm: Vec<f64> = (0..n)
             .map(|i| x.row(i).iter().map(|v| v * v).sum())
             .collect();
-        ShardedKernelOp {
+        ShardedCovOp {
             x,
             kernel,
-            raw_noise: noise.ln(),
             shards,
             tile: DEFAULT_TILE,
             xt,
@@ -74,50 +72,18 @@ impl ShardedKernelOp {
 
     /// Override the scheduler tile size (rows per work item).
     pub fn with_tile(mut self, tile: usize) -> Self {
-        self.tile = tile.max(1);
+        self.set_tile(tile);
         self
     }
 
-    pub fn x(&self) -> &Mat {
-        &self.x
+    /// In-place tile-size override (rows per work item).
+    pub fn set_tile(&mut self, tile: usize) {
+        self.tile = tile.max(1);
     }
 
-    pub fn kernel(&self) -> &dyn Kernel {
-        self.kernel.as_ref()
-    }
-
-    pub fn shard_count(&self) -> usize {
-        self.shards.len()
-    }
-
+    /// The shard plan (contiguous, ordered row ranges).
     pub fn shards(&self) -> &[Range<usize>] {
         &self.shards
-    }
-
-    /// Full raw parameter vector `[kernel params…, log σ²]`.
-    pub fn params(&self) -> Vec<f64> {
-        let mut p = self.kernel.params();
-        p.push(self.raw_noise);
-        p
-    }
-
-    pub fn set_params(&mut self, raw: &[f64]) {
-        assert_eq!(raw.len(), self.n_params());
-        let nk = self.kernel.n_params();
-        self.kernel.set_params(&raw[..nk]);
-        self.raw_noise = raw[nk];
-    }
-
-    /// Cross-kernel matrix `K(A, B)` for arbitrary point sets (predictions).
-    pub fn cross(&self, a: &Mat, b: &Mat) -> Mat {
-        cross_kernel(self.kernel.as_ref(), a, b)
-    }
-
-    /// Generic-precision sharded matmul (the f32 path of the Figure-1
-    /// experiments and the precision property tests). Kernel entries are
-    /// evaluated in f64 and contracted in `T`.
-    pub fn matmul_scalar<T: Scalar>(&self, m: &Mat<T>) -> Mat<T> {
-        self.block_matmul(m, BlockFn::Value { add_noise: true })
     }
 
     /// Schedule the requested kernel product over the shard queues.
@@ -193,8 +159,8 @@ impl ShardedKernelOp {
                     orow[c] += kvt * mrow[c];
                 }
             }
-            if let BlockFn::Value { add_noise: true } = bf {
-                let sigma2 = T::from_f64(self.raw_noise.exp());
+            if let BlockFn::Value { noise: Some(s2) } = bf {
+                let sigma2 = T::from_f64(*s2);
                 let mrow = m.row(i);
                 for c in 0..t {
                     orow[c] += sigma2 * mrow[c];
@@ -202,36 +168,27 @@ impl ShardedKernelOp {
             }
         }
     }
-
 }
 
-impl KernelOperator for ShardedKernelOp {
-    fn n(&self) -> usize {
-        self.x.rows()
+impl LinearOp for ShardedCovOp {
+    fn shape(&self) -> (usize, usize) {
+        (self.x.rows(), self.x.rows())
     }
 
     fn n_params(&self) -> usize {
-        self.kernel.n_params() + 1
+        self.kernel.n_params()
     }
 
     fn matmul(&self, m: &Mat) -> Mat {
-        self.block_matmul(m, BlockFn::Value { add_noise: true })
+        self.block_matmul(m, BlockFn::Value { noise: None })
     }
 
     fn dmatmul(&self, param: usize, m: &Mat) -> Mat {
-        let nk = self.kernel.n_params();
-        assert!(param < nk + 1);
-        if param == nk {
-            // dK̂/draw_noise = σ² I  (θ = e^{raw})
-            let mut out = m.clone();
-            out.scale_assign(self.noise());
-            return out;
-        }
+        assert!(param < self.kernel.n_params());
         self.block_matmul(m, BlockFn::DParam(param))
     }
 
     fn diag(&self) -> Vec<f64> {
-        // self.x.rows(), not self.n(): both implemented traits expose `n`
         (0..self.x.rows())
             .map(|i| self.kernel.eval(self.x.row(i), self.x.row(i)))
             .collect()
@@ -244,14 +201,123 @@ impl KernelOperator for ShardedKernelOp {
             .collect()
     }
 
-    fn noise(&self) -> f64 {
-        self.raw_noise.exp()
+    fn entry(&self, i: usize, j: usize) -> f64 {
+        self.kernel.eval(self.x.row(i), self.x.row(j))
     }
 
     fn dense(&self) -> Mat {
-        let mut k = self.cross(&self.x, &self.x);
-        k.add_diag(self.noise());
-        k
+        cross_kernel(self.kernel.as_ref(), &self.x, &self.x)
+    }
+}
+
+impl KernelCov for ShardedCovOp {
+    fn x(&self) -> &Mat {
+        &self.x
+    }
+
+    fn kernel(&self) -> &dyn Kernel {
+        self.kernel.as_ref()
+    }
+
+    fn set_kernel_params(&mut self, raw: &[f64]) {
+        self.kernel.set_params(raw);
+    }
+
+    fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+}
+
+/// Sharded training operator `K̂ = K + σ²I` — `AddedDiagOp(ShardedCovOp)`
+/// under a model-facing name, with the solver-facing [`ShardedMmm`]
+/// partial-product seam implemented on the composition (noise fused into
+/// each shard's block fill, so per-shard numerics match the monolithic
+/// operator exactly).
+pub struct ShardedKernelOp {
+    op: AddedDiagOp<ShardedCovOp>,
+}
+
+impl ShardedKernelOp {
+    /// Compose `K(X,X) + noise·I` over `n_shards` row shards.
+    pub fn new(x: Mat, kernel: Box<dyn Kernel>, noise: f64, n_shards: usize) -> Self {
+        ShardedKernelOp {
+            op: AddedDiagOp::new(ShardedCovOp::new(x, kernel, n_shards), noise),
+        }
+    }
+
+    /// Override the scheduler tile size (rows per work item).
+    pub fn with_tile(mut self, tile: usize) -> Self {
+        self.op.inner_mut().set_tile(tile);
+        self
+    }
+
+    /// Training inputs.
+    pub fn x(&self) -> &Mat {
+        self.op.inner().x()
+    }
+
+    /// The covariance function.
+    pub fn kernel(&self) -> &dyn Kernel {
+        self.op.inner().kernel()
+    }
+
+    /// The noise-free sharded covariance part of the composition.
+    pub fn cov(&self) -> &ShardedCovOp {
+        self.op.inner()
+    }
+
+    /// Row-shard count.
+    pub fn shard_count(&self) -> usize {
+        self.op.inner().shards().len()
+    }
+
+    /// The shard plan.
+    pub fn shards(&self) -> &[Range<usize>] {
+        self.op.inner().shards()
+    }
+
+    /// Full raw parameter vector `[kernel params…, log σ²]`.
+    pub fn params(&self) -> Vec<f64> {
+        let mut p = self.kernel().params();
+        p.push(self.op.raw_value());
+        p
+    }
+
+    /// Overwrite all raw parameters.
+    pub fn set_params(&mut self, raw: &[f64]) {
+        assert_eq!(raw.len(), LinearOp::n_params(self));
+        let nk = self.kernel().n_params();
+        self.op.inner_mut().set_kernel_params(&raw[..nk]);
+        self.op.set_raw_value(raw[nk]);
+    }
+
+    /// Cross-kernel matrix `K(A, B)` for arbitrary point sets (predictions).
+    pub fn cross(&self, a: &Mat, b: &Mat) -> Mat {
+        self.op.inner().cross(a, b)
+    }
+
+    /// Generic-precision sharded matmul of the full `K̂` (the f32 path of
+    /// the Figure-1 experiments and the precision property tests). Kernel
+    /// entries are evaluated in f64 and contracted in `T`.
+    pub fn matmul_scalar<T: Scalar>(&self, m: &Mat<T>) -> Mat<T> {
+        self.op.inner().block_matmul(
+            m,
+            BlockFn::Value {
+                noise: Some(self.op.value()),
+            },
+        )
+    }
+}
+
+impl LinearOp for ShardedKernelOp {
+    crate::linear_op_delegate!(op);
+
+    fn n_params(&self) -> usize {
+        self.op.n_params()
+    }
+
+    fn dmatmul(&self, param: usize, m: &Mat) -> Mat {
+        self.op.dmatmul(param, m)
     }
 }
 
@@ -261,20 +327,27 @@ impl KernelOperator for ShardedKernelOp {
 /// devices/processes; in-host load balancing uses the tile queues instead).
 impl<T: Scalar> ShardedMmm<T> for ShardedKernelOp {
     fn n(&self) -> usize {
-        self.x.rows()
+        self.op.inner().x.rows()
     }
 
     fn n_shards(&self) -> usize {
-        self.shards.len()
+        self.op.inner().shards.len()
     }
 
     fn shard_rows(&self, s: usize) -> Range<usize> {
-        self.shards[s].clone()
+        self.op.inner().shards[s].clone()
     }
 
     fn shard_matmul(&self, s: usize, m: &Mat<T>, out: &mut [T]) {
-        let rows = self.shards[s].clone();
-        self.fill_rows(rows, m, &BlockFn::Value { add_noise: true }, out);
+        let rows = self.op.inner().shards[s].clone();
+        self.op.inner().fill_rows(
+            rows,
+            m,
+            &BlockFn::Value {
+                noise: Some(self.op.value()),
+            },
+            out,
+        );
     }
 }
 
@@ -328,7 +401,7 @@ mod tests {
         dense.set_params(&raw);
         let mut rng = Rng::new(6);
         let m = Mat::from_fn(40, 2, |_, _| rng.normal());
-        for p in 0..dense.n_params() {
+        for p in 0..LinearOp::n_params(&dense) {
             let got = sharded.dmatmul(p, &m);
             let want = dense.dmatmul(p, &m);
             assert!(
@@ -353,7 +426,7 @@ mod tests {
         let dense = DenseKernelOp::new(x, kernel(), 0.07);
         let m = Mat::from_fn(35, 3, |_, _| rng.normal());
         assert!(sharded.matmul(&m).max_abs_diff(&dense.matmul(&m)) < 1e-11);
-        for p in 0..dense.n_params() {
+        for p in 0..LinearOp::n_params(&dense) {
             let diff = sharded.dmatmul(p, &m).max_abs_diff(&dense.dmatmul(p, &m));
             assert!(diff < 1e-11, "param {p}: {diff}");
         }
@@ -390,9 +463,9 @@ mod tests {
                 .max_abs_diff(&dense.cross(&xs, dense.x()))
                 == 0.0
         );
-        assert!(
-            KernelOperator::dense(&sharded).max_abs_diff(&KernelOperator::dense(&dense)) < 1e-12
-        );
+        let ds = LinearOp::dense(&sharded);
+        let dd = LinearOp::dense(&dense);
+        assert!(ds.max_abs_diff(&dd) < 1e-12);
     }
 
     #[test]
@@ -406,7 +479,7 @@ mod tests {
         }
         assert_eq!(lo, 10);
         let mut p = sharded.params();
-        assert_eq!(p.len(), sharded.n_params());
+        assert_eq!(p.len(), LinearOp::n_params(&sharded));
         p[0] += 0.25;
         sharded.set_params(&p);
         assert!((sharded.params()[0] - p[0]).abs() < 1e-15);

@@ -11,10 +11,13 @@
 //!   PCG, the paper's **mBCG** (batched CG with Lanczos-tridiagonal
 //!   recovery), Lanczos itself (Dong et al. baseline), the rank-k **pivoted
 //!   Cholesky** preconditioner, stochastic trace estimation, FFT and
-//!   Toeplitz operators.
-//! - [`kernels`] — the "blackbox": a [`kernels::KernelOperator`] trait whose
-//!   only hot method is `matmul` (`K̂·M`), with RBF / Matérn / linear /
-//!   composition / deep-kernel implementations and analytic `dK̂/dθ·M`.
+//!   Toeplitz operators — and [`linalg::op`], the composable **`LinearOp`
+//!   operator algebra** plus its solve-strategy dispatcher.
+//! - [`kernels`] — covariance functions (RBF / Matérn / linear /
+//!   compositions / deep-kernel features) and the kernel-side operators of
+//!   the algebra; every model is a thin composition whose only hot method
+//!   is `matmul` (`K̂·M`) with analytic `dK̂/dθ·M`. The seed-era
+//!   [`kernels::KernelOperator`] name re-exports the `LinearOp` trait.
 //! - [`gp`] — GP models and inference engines: exact GP with BBMM and
 //!   Cholesky engines, SGPR (SoR), SKI (KISS-GP), and the Dong et al.
 //!   sequential-Lanczos engine used as the SKI baseline.

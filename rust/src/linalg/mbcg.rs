@@ -197,6 +197,19 @@ pub fn mbcg<T: Scalar>(
     }
 }
 
+/// [`mbcg`] over a composed [`crate::linalg::op::LinearOp`] — the entry
+/// point the operator algebra's iterative paths share. The operator is the
+/// blackbox `A`; preconditioning stays a caller-supplied closure so engines
+/// can reuse a preconditioner across calls.
+pub fn mbcg_op(
+    op: &dyn crate::linalg::op::LinearOp,
+    b: &Mat,
+    precond: impl Fn(&Mat) -> Mat,
+    opts: &MbcgOptions,
+) -> MbcgResult {
+    mbcg(|m| op.matmul(m), b, precond, opts)
+}
+
 /// A blackbox operator whose `K̂·M` is computed as per-shard row-blocks —
 /// the seam between mBCG and the sharded kernel operators (Wang et al.
 /// 2019: partition the kernel into row shards so peak memory per worker is

@@ -3,19 +3,22 @@
 //! - [`cholesky`] — dense Cholesky factorization: the paper's O(n³) baseline
 //!   inference engine (GPFlow-equivalent on this testbed).
 //! - [`cg`] — standard preconditioned conjugate gradients (Alg. 1).
-//! - [`mbcg`] — **the paper's contribution**: modified batched CG (Alg. 2)
+//! - [`mbcg`](mod@mbcg) — **the paper's contribution**: modified batched CG (Alg. 2)
 //!   returning multi-RHS solves *and* Lanczos tridiagonal matrices recovered
 //!   from the CG coefficients (App. A, Saad §6.7.3).
 //! - [`lanczos`] — explicit Lanczos tridiagonalization, used by the Dong
 //!   et al. [13] baseline engine.
 //! - [`tridiag`] — symmetric tridiagonal eigensolver (implicit QL) used for
 //!   the stochastic-Lanczos-quadrature log-determinant `e₁ᵀ log(T̃) e₁`.
-//! - [`pivoted_cholesky`] — rank-k pivoted Cholesky (App. C) from blackbox
+//! - [`pivoted_cholesky`](mod@pivoted_cholesky) — rank-k pivoted Cholesky (App. C) from blackbox
 //!   row access.
 //! - [`preconditioner`] — `P̂ = L_k L_kᵀ + σ²I` with O(nk²) Woodbury solves
 //!   and exact log-determinant (§4.1).
 //! - [`trace`] — Hutchinson stochastic trace estimation (eq. 4).
 //! - [`fft`] / [`toeplitz`] — substrate for KISS-GP's structured `K_UU`.
+//! - [`op`] — the composable **`LinearOp` operator algebra** every model is
+//!   expressed in, plus the solve-strategy dispatcher (direct Cholesky /
+//!   Woodbury vs iterative mBCG, picked from operator structure).
 
 pub mod cg;
 pub mod cholesky;
@@ -23,6 +26,7 @@ pub mod fft;
 pub mod kronecker;
 pub mod lanczos;
 pub mod mbcg;
+pub mod op;
 pub mod pivoted_cholesky;
 pub mod preconditioner;
 pub mod toeplitz;
@@ -33,8 +37,9 @@ pub use cg::{pcg, PcgResult};
 pub use cholesky::Cholesky;
 pub use kronecker::{kron_dense, kron_matmul, kron_matvec};
 pub use lanczos::lanczos_tridiag;
-pub use mbcg::{mbcg, MbcgOptions, MbcgResult, TriDiag};
-pub use pivoted_cholesky::{pivoted_cholesky, PivotedCholesky};
+pub use mbcg::{mbcg, mbcg_op, MbcgOptions, MbcgResult, TriDiag};
+pub use op::{LinearOp, SolveHint, SolveOptions};
+pub use pivoted_cholesky::{pivoted_cholesky, pivoted_cholesky_op, PivotedCholesky};
 pub use preconditioner::{IdentityPrecond, PartialCholPrecond, Preconditioner};
 pub use toeplitz::ToeplitzOp;
 pub use trace::hutchinson_trace;

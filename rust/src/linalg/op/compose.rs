@@ -1,0 +1,409 @@
+//! Closure of the operator algebra under addition and scaling:
+//! [`AddedDiagOp`] (`A + σ²I`), [`DiagOp`] (`diag(d)`), [`SumOp`]
+//! (`A + B`), and [`ScaledOp`] (`c·A`).
+//!
+//! `AddedDiagOp` is the load-bearing one: likelihood noise is expressed as
+//! a *composition* instead of being baked into every kernel operator, so
+//! the preconditioner builder and the Woodbury dispatcher can split any
+//! model into "structure + σ²I" generically ([`LinearOp::noise_split`]).
+
+use super::{LinearOp, SolveHint};
+use crate::tensor::Mat;
+
+/// `A + σ²I` with a learnable diagonal value (`σ² = exp(raw)`, appended as
+/// the **last** raw parameter — the crate-wide noise convention).
+pub struct AddedDiagOp<A> {
+    inner: A,
+    /// raw log σ²
+    raw: f64,
+}
+
+impl<A: LinearOp> AddedDiagOp<A> {
+    /// Compose `inner + value·I` (`value` > 0; stored in log space).
+    pub fn new(inner: A, value: f64) -> Self {
+        assert!(value > 0.0, "added diagonal must be positive");
+        AddedDiagOp {
+            inner,
+            raw: value.ln(),
+        }
+    }
+
+    /// Compose `inner + exp(raw)·I` directly from the raw (log-space)
+    /// parameter — the lossless path hyperparameter updates should use
+    /// (`exp(raw)` can underflow to 0.0, which [`AddedDiagOp::new`]
+    /// rejects; the raw value itself is always representable).
+    pub fn from_raw(inner: A, raw: f64) -> Self {
+        AddedDiagOp { inner, raw }
+    }
+
+    /// The noise-free inner operator.
+    pub fn inner(&self) -> &A {
+        &self.inner
+    }
+
+    /// Mutable access to the inner operator (hyperparameter updates).
+    pub fn inner_mut(&mut self) -> &mut A {
+        &mut self.inner
+    }
+
+    /// Current diagonal value σ².
+    pub fn value(&self) -> f64 {
+        self.raw.exp()
+    }
+
+    /// Raw (log-space) diagonal parameter.
+    pub fn raw_value(&self) -> f64 {
+        self.raw
+    }
+
+    /// Overwrite the raw (log-space) diagonal parameter.
+    pub fn set_raw_value(&mut self, raw: f64) {
+        self.raw = raw;
+    }
+}
+
+impl<A: LinearOp> LinearOp for AddedDiagOp<A> {
+    fn shape(&self) -> (usize, usize) {
+        self.inner.shape()
+    }
+
+    fn n_params(&self) -> usize {
+        self.inner.n_params() + 1
+    }
+
+    fn matmul(&self, m: &Mat) -> Mat {
+        let mut out = self.inner.matmul(m);
+        let sigma2 = self.value();
+        for r in 0..out.rows() {
+            let mrow = m.row(r);
+            let orow = out.row_mut(r);
+            for c in 0..orow.len() {
+                orow[c] += sigma2 * mrow[c];
+            }
+        }
+        out
+    }
+
+    fn dmatmul(&self, param: usize, m: &Mat) -> Mat {
+        let nk = self.inner.n_params();
+        if param == nk {
+            // d(A + e^raw I)/draw = σ² I
+            let mut out = m.clone();
+            out.scale_assign(self.value());
+            return out;
+        }
+        self.inner.dmatmul(param, m)
+    }
+
+    fn diag(&self) -> Vec<f64> {
+        let sigma2 = self.value();
+        let mut d = self.inner.diag();
+        for v in &mut d {
+            *v += sigma2;
+        }
+        d
+    }
+
+    fn row(&self, i: usize) -> Vec<f64> {
+        let mut r = self.inner.row(i);
+        r[i] += self.value();
+        r
+    }
+
+    fn entry(&self, i: usize, j: usize) -> f64 {
+        let base = self.inner.entry(i, j);
+        if i == j {
+            base + self.value()
+        } else {
+            base
+        }
+    }
+
+    fn solve_hint(&self) -> SolveHint {
+        if self.inner.low_rank_factor().is_some() {
+            SolveHint::Woodbury
+        } else {
+            self.inner.solve_hint()
+        }
+    }
+
+    fn noise_split(&self) -> Option<(&dyn LinearOp, f64)> {
+        Some((&self.inner, self.value()))
+    }
+
+    fn dense(&self) -> Mat {
+        let mut k = self.inner.dense();
+        k.add_diag(self.value());
+        k
+    }
+}
+
+/// A fixed diagonal matrix `diag(d)` — FITC's exact-diagonal correction,
+/// heteroskedastic noise, etc.
+pub struct DiagOp {
+    d: Vec<f64>,
+}
+
+impl DiagOp {
+    /// Wrap a diagonal vector.
+    pub fn new(d: Vec<f64>) -> Self {
+        DiagOp { d }
+    }
+
+    /// The diagonal entries.
+    pub fn values(&self) -> &[f64] {
+        &self.d
+    }
+}
+
+impl LinearOp for DiagOp {
+    fn shape(&self) -> (usize, usize) {
+        (self.d.len(), self.d.len())
+    }
+
+    fn matmul(&self, m: &Mat) -> Mat {
+        assert_eq!(m.rows(), self.d.len());
+        let mut out = m.clone();
+        for r in 0..out.rows() {
+            let s = self.d[r];
+            for v in out.row_mut(r) {
+                *v *= s;
+            }
+        }
+        out
+    }
+
+    fn diag(&self) -> Vec<f64> {
+        self.d.clone()
+    }
+
+    fn row(&self, i: usize) -> Vec<f64> {
+        let mut r = vec![0.0; self.d.len()];
+        r[i] = self.d[i];
+        r
+    }
+
+    fn entry(&self, i: usize, j: usize) -> f64 {
+        if i == j {
+            self.d[i]
+        } else {
+            0.0
+        }
+    }
+}
+
+/// `A + B`. Parameter blocks concatenate: `A`'s raw parameters first,
+/// then `B`'s.
+pub struct SumOp<A, B> {
+    a: A,
+    b: B,
+}
+
+impl<A: LinearOp, B: LinearOp> SumOp<A, B> {
+    /// Compose `a + b` (shapes must agree).
+    pub fn new(a: A, b: B) -> Self {
+        assert_eq!(a.shape(), b.shape(), "SumOp: shape mismatch");
+        SumOp { a, b }
+    }
+
+    /// Left operand.
+    pub fn a(&self) -> &A {
+        &self.a
+    }
+
+    /// Right operand.
+    pub fn b(&self) -> &B {
+        &self.b
+    }
+}
+
+impl<A: LinearOp, B: LinearOp> LinearOp for SumOp<A, B> {
+    fn shape(&self) -> (usize, usize) {
+        self.a.shape()
+    }
+
+    fn n_params(&self) -> usize {
+        self.a.n_params() + self.b.n_params()
+    }
+
+    fn matmul(&self, m: &Mat) -> Mat {
+        let mut out = self.a.matmul(m);
+        out.add_assign(&self.b.matmul(m));
+        out
+    }
+
+    fn dmatmul(&self, param: usize, m: &Mat) -> Mat {
+        let na = self.a.n_params();
+        if param < na {
+            self.a.dmatmul(param, m)
+        } else {
+            self.b.dmatmul(param - na, m)
+        }
+    }
+
+    fn diag(&self) -> Vec<f64> {
+        let mut d = self.a.diag();
+        for (v, w) in d.iter_mut().zip(self.b.diag()) {
+            *v += w;
+        }
+        d
+    }
+
+    fn row(&self, i: usize) -> Vec<f64> {
+        let mut r = self.a.row(i);
+        for (v, w) in r.iter_mut().zip(self.b.row(i)) {
+            *v += w;
+        }
+        r
+    }
+
+    fn entry(&self, i: usize, j: usize) -> f64 {
+        self.a.entry(i, j) + self.b.entry(i, j)
+    }
+}
+
+/// `c · A` with a fixed scale factor. (A *learnable* scale belongs to the
+/// model layer — see `kernels::LinearKernelOp` for the worked example.)
+pub struct ScaledOp<A> {
+    a: A,
+    c: f64,
+}
+
+impl<A: LinearOp> ScaledOp<A> {
+    /// Compose `c · a`.
+    pub fn new(a: A, c: f64) -> Self {
+        ScaledOp { a, c }
+    }
+
+    /// The wrapped operator.
+    pub fn inner(&self) -> &A {
+        &self.a
+    }
+
+    /// Current scale factor.
+    pub fn scale(&self) -> f64 {
+        self.c
+    }
+
+    /// Overwrite the scale factor.
+    pub fn set_scale(&mut self, c: f64) {
+        self.c = c;
+    }
+}
+
+impl<A: LinearOp> LinearOp for ScaledOp<A> {
+    fn shape(&self) -> (usize, usize) {
+        self.a.shape()
+    }
+
+    fn n_params(&self) -> usize {
+        self.a.n_params()
+    }
+
+    fn matmul(&self, m: &Mat) -> Mat {
+        let mut out = self.a.matmul(m);
+        out.scale_assign(self.c);
+        out
+    }
+
+    fn dmatmul(&self, param: usize, m: &Mat) -> Mat {
+        let mut out = self.a.dmatmul(param, m);
+        out.scale_assign(self.c);
+        out
+    }
+
+    fn diag(&self) -> Vec<f64> {
+        let mut d = self.a.diag();
+        for v in &mut d {
+            *v *= self.c;
+        }
+        d
+    }
+
+    fn row(&self, i: usize) -> Vec<f64> {
+        let mut r = self.a.row(i);
+        for v in &mut r {
+            *v *= self.c;
+        }
+        r
+    }
+
+    fn entry(&self, i: usize, j: usize) -> f64 {
+        self.c * self.a.entry(i, j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::op::DenseOp;
+    use crate::util::Rng;
+
+    fn spd(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let g = Mat::from_fn(n, n, |_, _| rng.normal());
+        let mut a = g.t_matmul(&g);
+        a.add_diag(0.5);
+        a.symmetrize();
+        a
+    }
+
+    #[test]
+    fn added_diag_matches_dense() {
+        let a = spd(20, 1);
+        let op = AddedDiagOp::new(DenseOp::new(a.clone()), 0.3);
+        let mut want = a.clone();
+        want.add_diag(0.3);
+        assert!(op.dense().max_abs_diff(&want) < 1e-15);
+        let mut rng = Rng::new(2);
+        let m = Mat::from_fn(20, 3, |_, _| rng.normal());
+        assert!(op.matmul(&m).max_abs_diff(&want.matmul(&m)) < 1e-12);
+        for (i, d) in op.diag().iter().enumerate() {
+            assert!((d - want.get(i, i)).abs() < 1e-15);
+        }
+        assert_eq!(op.row(4), want.row(4).to_vec());
+        let (inner, s) = op.noise_split().unwrap();
+        assert!((s - 0.3).abs() < 1e-15);
+        assert!(inner.dense().max_abs_diff(&a) < 1e-15);
+    }
+
+    #[test]
+    fn added_diag_noise_gradient_is_sigma2_m() {
+        let op = AddedDiagOp::new(DenseOp::new(spd(10, 3)), 0.25);
+        let mut rng = Rng::new(4);
+        let m = Mat::from_fn(10, 2, |_, _| rng.normal());
+        // DenseOp has 0 params, so param 0 is the diagonal
+        assert_eq!(op.n_params(), 1);
+        let d = op.dmatmul(0, &m);
+        let mut want = m.clone();
+        want.scale_assign(0.25);
+        assert!(d.max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn sum_scaled_diag_compose() {
+        let a = spd(15, 5);
+        let b = spd(15, 6);
+        let mut rng = Rng::new(7);
+        let d: Vec<f64> = (0..15).map(|_| rng.uniform() + 0.1).collect();
+        let op = SumOp::new(
+            ScaledOp::new(DenseOp::new(a.clone()), 2.5),
+            SumOp::new(DenseOp::new(b.clone()), DiagOp::new(d.clone())),
+        );
+        let mut want = a.clone();
+        want.scale_assign(2.5);
+        want.add_assign(&b);
+        for i in 0..15 {
+            let v = want.get(i, i) + d[i];
+            want.set(i, i, v);
+        }
+        assert!(op.dense().max_abs_diff(&want) < 1e-12);
+        let m = Mat::from_fn(15, 4, |_, _| rng.normal());
+        assert!(op.matmul(&m).max_abs_diff(&want.matmul(&m)) < 1e-11);
+        for i in [0usize, 7, 14] {
+            for j in 0..15 {
+                assert!((op.entry(i, j) - want.get(i, j)).abs() < 1e-12);
+            }
+        }
+    }
+}

@@ -1,0 +1,317 @@
+//! The interpolation sandwich `W·A·Wᵀ` — SKI/KISS-GP's structure
+//! (paper §5, Wilson & Nickisch [50]) as an explicit composition.
+//!
+//! [`SparseInterp`] is the sparse cubic-convolution interpolation matrix
+//! `W` (4 non-zeros per row); [`InterpOp`] sandwiches **any** inner
+//! operator between `W` and `Wᵀ`, so `W·T_grid·Wᵀ` (classic SKI over a
+//! Toeplitz grid kernel) and `W·(B ⊗ T)·Wᵀ` (multi-dim SKI) are the same
+//! few lines of composition. A matmul costs `O(t·n)` for the two sparse
+//! applies plus one inner matmul.
+
+use super::LinearOp;
+use crate::tensor::Mat;
+use crate::util::par;
+
+/// Keys cubic-convolution interpolation kernel (a = −1/2).
+#[inline]
+fn cubic_weight(s: f64) -> f64 {
+    let s = s.abs();
+    if s < 1.0 {
+        (1.5 * s - 2.5) * s * s + 1.0
+    } else if s < 2.0 {
+        ((-0.5 * s + 2.5) * s - 4.0) * s + 2.0
+    } else {
+        0.0
+    }
+}
+
+/// Sparse interpolation matrix: 4 non-zeros per row.
+pub struct SparseInterp {
+    /// grid indices per row (4 each)
+    idx: Vec<[usize; 4]>,
+    /// interpolation weights per row (4 each, summing to 1)
+    w: Vec<[f64; 4]>,
+    m: usize,
+}
+
+impl SparseInterp {
+    /// Build cubic interpolation weights for points `z` (1-D features) onto
+    /// a regular grid `[lo, hi]` with `m` nodes. Points are clamped to the
+    /// interpolable interior.
+    pub fn new(z: &[f64], lo: f64, hi: f64, m: usize) -> Self {
+        assert!(m >= 4, "need at least 4 grid points for cubic interpolation");
+        assert!(hi > lo);
+        let h = (hi - lo) / (m - 1) as f64;
+        let mut idx = Vec::with_capacity(z.len());
+        let mut w = Vec::with_capacity(z.len());
+        for &zi in z {
+            // position in grid units, clamped so the 4-point stencil fits
+            let p = ((zi - lo) / h).clamp(1.0, (m - 3) as f64 + 0.999_999);
+            let j0 = p.floor() as usize;
+            let u = p - j0 as f64;
+            let ids = [j0 - 1, j0, j0 + 1, j0 + 2];
+            let ws = [
+                cubic_weight(1.0 + u),
+                cubic_weight(u),
+                cubic_weight(1.0 - u),
+                cubic_weight(2.0 - u),
+            ];
+            idx.push(ids);
+            w.push(ws);
+        }
+        SparseInterp { idx, w, m }
+    }
+
+    /// Number of interpolated points (rows of `W`).
+    pub fn n(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// Number of grid nodes (columns of `W`).
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// `W · M` — (n×m)·(m×t) in O(4·n·t).
+    pub fn apply(&self, m: &Mat) -> Mat {
+        assert_eq!(m.rows(), self.m);
+        let t = m.cols();
+        let n = self.n();
+        let mut out = Mat::zeros(n, t);
+        let idx = &self.idx;
+        let w = &self.w;
+        par::parallel_rows_mut(out.data_mut(), n, t, |row_lo, chunk| {
+            for (ri, orow) in chunk.chunks_mut(t).enumerate() {
+                let r = row_lo + ri;
+                for a in 0..4 {
+                    let wa = w[r][a];
+                    let mrow = m.row(idx[r][a]);
+                    for c in 0..t {
+                        orow[c] += wa * mrow[c];
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    /// `Wᵀ · M` — (m×n)·(n×t) in O(4·n·t).
+    pub fn apply_t(&self, mat: &Mat) -> Mat {
+        assert_eq!(mat.rows(), self.n());
+        let t = mat.cols();
+        let mut out = Mat::zeros(self.m, t);
+        // scatter-add; serial over n (t is small) — could shard by target
+        for r in 0..self.n() {
+            let mrow = mat.row(r);
+            for a in 0..4 {
+                let target = self.idx[r][a];
+                let wa = self.w[r][a];
+                let orow = out.row_mut(target);
+                for c in 0..t {
+                    orow[c] += wa * mrow[c];
+                }
+            }
+        }
+        out
+    }
+
+    /// Weights/indices of row i (for O(1)-ish row access).
+    pub fn row_stencil(&self, i: usize) -> (&[usize; 4], &[f64; 4]) {
+        (&self.idx[i], &self.w[i])
+    }
+
+    /// Dense `W` (tests, small sizes).
+    pub fn to_dense(&self) -> Mat {
+        let mut out = Mat::zeros(self.n(), self.m);
+        for i in 0..self.n() {
+            for a in 0..4 {
+                let v = out.get(i, self.idx[i][a]) + self.w[i][a];
+                out.set(i, self.idx[i][a], v);
+            }
+        }
+        out
+    }
+}
+
+/// `W · A · Wᵀ` for any inner operator `A` on the grid. Parameters pass
+/// straight through to the inner operator (`d(WAWᵀ)/dθ = W(dA/dθ)Wᵀ`).
+pub struct InterpOp<A> {
+    w: SparseInterp,
+    inner: A,
+}
+
+impl<A: LinearOp> InterpOp<A> {
+    /// Sandwich `inner` between `w` and `wᵀ` (inner must be m×m).
+    pub fn new(w: SparseInterp, inner: A) -> Self {
+        assert_eq!(w.m(), inner.shape().0, "InterpOp: grid size mismatch");
+        InterpOp { w, inner }
+    }
+
+    /// The interpolation matrix `W`.
+    pub fn interp(&self) -> &SparseInterp {
+        &self.w
+    }
+
+    /// The inner grid operator `A`.
+    pub fn inner(&self) -> &A {
+        &self.inner
+    }
+
+    /// Mutable inner operator (hyperparameter updates).
+    pub fn inner_mut(&mut self) -> &mut A {
+        &mut self.inner
+    }
+}
+
+impl<A: LinearOp> LinearOp for InterpOp<A> {
+    fn shape(&self) -> (usize, usize) {
+        (self.w.n(), self.w.n())
+    }
+
+    fn n_params(&self) -> usize {
+        self.inner.n_params()
+    }
+
+    fn matmul(&self, m: &Mat) -> Mat {
+        let wtm = self.w.apply_t(m); // m×t
+        let awtm = self.inner.matmul(&wtm); // m×t (structured)
+        self.w.apply(&awtm) // n×t
+    }
+
+    fn dmatmul(&self, param: usize, m: &Mat) -> Mat {
+        let wtm = self.w.apply_t(m);
+        let dawtm = self.inner.dmatmul(param, &wtm);
+        self.w.apply(&dawtm)
+    }
+
+    fn diag(&self) -> Vec<f64> {
+        // diag_i = wᵢᵀ A wᵢ over the 4-point stencil — O(16·n) inner-entry
+        // lookups (O(1) each for Toeplitz/Kronecker/dense inners)
+        (0..self.w.n())
+            .map(|i| {
+                let (ids, ws) = self.w.row_stencil(i);
+                let mut s = 0.0;
+                for a in 0..4 {
+                    for b in 0..4 {
+                        s += ws[a] * ws[b] * self.inner.entry(ids[a], ids[b]);
+                    }
+                }
+                s
+            })
+            .collect()
+    }
+
+    fn row(&self, i: usize) -> Vec<f64> {
+        // rowᵢ = (wᵢᵀ A) Wᵀ: one inner matmul against the 4-sparse stencil
+        // column, then O(4·n) stencil dots
+        let (ids, ws) = self.w.row_stencil(i);
+        let m = self.w.m();
+        let mut e = Mat::zeros(m, 1);
+        for a in 0..4 {
+            let v = e.get(ids[a], 0) + ws[a];
+            e.set(ids[a], 0, v);
+        }
+        let u = self.inner.matmul(&e); // m×1
+        (0..self.w.n())
+            .map(|j| {
+                let (jds, jws) = self.w.row_stencil(j);
+                let mut s = 0.0;
+                for b in 0..4 {
+                    s += jws[b] * u.get(jds[b], 0);
+                }
+                s
+            })
+            .collect()
+    }
+
+    fn entry(&self, i: usize, j: usize) -> f64 {
+        let (ids, ws) = self.w.row_stencil(i);
+        let (jds, jws) = self.w.row_stencil(j);
+        let mut s = 0.0;
+        for a in 0..4 {
+            for b in 0..4 {
+                s += ws[a] * jws[b] * self.inner.entry(ids[a], jds[b]);
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::op::{DenseOp, ToeplitzLinOp};
+    use crate::util::Rng;
+
+    fn interp(n: usize, m: usize, seed: u64) -> SparseInterp {
+        let mut rng = Rng::new(seed);
+        let z: Vec<f64> = (0..n).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        SparseInterp::new(&z, -1.2, 1.2, m)
+    }
+
+    #[test]
+    fn weights_sum_to_one() {
+        let w = interp(100, 40, 1);
+        for i in 0..100 {
+            let (_ids, ws) = w.row_stencil(i);
+            let s: f64 = ws.iter().sum();
+            assert!((s - 1.0).abs() < 1e-12, "row {i}: {s}");
+        }
+    }
+
+    #[test]
+    fn apply_matches_dense_w() {
+        let w = interp(30, 20, 2);
+        let wd = w.to_dense();
+        let mut rng = Rng::new(3);
+        let m = Mat::from_fn(20, 3, |_, _| rng.normal());
+        assert!(w.apply(&m).max_abs_diff(&wd.matmul(&m)) < 1e-12);
+        let v = Mat::from_fn(30, 2, |_, _| rng.normal());
+        assert!(w.apply_t(&v).max_abs_diff(&wd.t_matmul(&v)) < 1e-12);
+    }
+
+    #[test]
+    fn sandwich_matches_dense_w_a_wt() {
+        let w = interp(25, 16, 4);
+        let mut rng = Rng::new(5);
+        let g = Mat::from_fn(16, 16, |_, _| rng.normal());
+        let mut a = g.t_matmul(&g);
+        a.symmetrize();
+        let wd = w.to_dense();
+        let want = wd.matmul(&a).matmul_t(&wd);
+        let op = InterpOp::new(w, DenseOp::new(a));
+        assert!(op.dense().max_abs_diff(&want) < 1e-11);
+        let m = Mat::from_fn(25, 3, |_, _| rng.normal());
+        assert!(op.matmul(&m).max_abs_diff(&want.matmul(&m)) < 1e-10);
+        for (i, d) in op.diag().iter().enumerate() {
+            assert!((d - want.get(i, i)).abs() < 1e-11, "diag {i}");
+        }
+        for i in [0usize, 12, 24] {
+            let r = op.row(i);
+            for j in 0..25 {
+                assert!((r[j] - want.get(i, j)).abs() < 1e-11, "row {i} col {j}");
+                assert!((op.entry(i, j) - want.get(i, j)).abs() < 1e-11);
+            }
+        }
+    }
+
+    #[test]
+    fn toeplitz_inner_uses_o1_entries() {
+        // the classic SKI shape: W·T·Wᵀ with T a grid RBF kernel
+        let w = interp(40, 32, 6);
+        let col: Vec<f64> = (0..32)
+            .map(|i| (-0.5 * (i as f64 * 0.1).powi(2)).exp())
+            .collect();
+        let t = ToeplitzLinOp::new(col);
+        let td = t.dense();
+        let wd = w.to_dense();
+        let want = wd.matmul(&td).matmul_t(&wd);
+        let op = InterpOp::new(w, t);
+        for (i, d) in op.diag().iter().enumerate() {
+            assert!((d - want.get(i, i)).abs() < 1e-11, "diag {i}");
+        }
+        let mut rng = Rng::new(7);
+        let m = Mat::from_fn(40, 2, |_, _| rng.normal());
+        assert!(op.matmul(&m).max_abs_diff(&want.matmul(&m)) < 1e-9);
+    }
+}

@@ -1,0 +1,116 @@
+//! `K = L·Lᵀ` — the low-rank operator, and the reason SGPR no longer
+//! needs a bespoke inference engine.
+//!
+//! This is the README's "writing a new operator" worked example: the whole
+//! model-side contribution of SGPR/SoR (paper §5, Titsias [45]) is the
+//! ~40 lines below plus a factor build `A = K_XU·L_uu⁻ᵀ`. Composed as
+//! `AddedDiagOp(LowRankOp(A))` the operator
+//!
+//! - multiplies in O(nkt) (`L(LᵀM)`, never forming `LLᵀ`),
+//! - advertises its factor through [`LinearOp::low_rank_factor`], which
+//!   flips the solve dispatcher to the **direct Woodbury** path
+//!   (`(LLᵀ + σ²I)⁻¹` in O(nk² + k³)) — no CG, no hand-written engine.
+
+use super::{LinearOp, SolveHint};
+use crate::tensor::Mat;
+
+/// `L·Lᵀ` for an explicit `n×k` factor.
+pub struct LowRankOp {
+    l: Mat,
+}
+
+impl LowRankOp {
+    /// Wrap an `n×k` factor.
+    pub fn new(l: Mat) -> Self {
+        LowRankOp { l }
+    }
+
+    /// The factor `L`.
+    pub fn factor(&self) -> &Mat {
+        &self.l
+    }
+
+    /// Rank `k` of the operator.
+    pub fn rank(&self) -> usize {
+        self.l.cols()
+    }
+}
+
+impl LinearOp for LowRankOp {
+    fn shape(&self) -> (usize, usize) {
+        (self.l.rows(), self.l.rows())
+    }
+
+    fn matmul(&self, m: &Mat) -> Mat {
+        // L (Lᵀ M): O(nkt), never forms the n×n matrix
+        let ltm = self.l.t_matmul(m);
+        self.l.matmul(&ltm)
+    }
+
+    fn diag(&self) -> Vec<f64> {
+        (0..self.l.rows())
+            .map(|i| self.l.row(i).iter().map(|v| v * v).sum())
+            .collect()
+    }
+
+    fn row(&self, i: usize) -> Vec<f64> {
+        let li = self.l.row(i);
+        (0..self.l.rows())
+            .map(|j| {
+                let lj = self.l.row(j);
+                li.iter().zip(lj.iter()).map(|(a, b)| a * b).sum()
+            })
+            .collect()
+    }
+
+    fn entry(&self, i: usize, j: usize) -> f64 {
+        let li = self.l.row(i);
+        let lj = self.l.row(j);
+        li.iter().zip(lj.iter()).map(|(a, b)| a * b).sum()
+    }
+
+    fn solve_hint(&self) -> SolveHint {
+        // LLᵀ alone is singular; the hint matters once a diagonal is added
+        // (AddedDiagOp promotes it to Woodbury via low_rank_factor)
+        SolveHint::Iterative
+    }
+
+    fn low_rank_factor(&self) -> Option<&Mat> {
+        Some(&self.l)
+    }
+
+    fn dense(&self) -> Mat {
+        self.l.matmul_t(&self.l)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::op::AddedDiagOp;
+    use crate::util::Rng;
+
+    #[test]
+    fn matches_explicit_llt() {
+        let mut rng = Rng::new(1);
+        let l = Mat::from_fn(25, 4, |_, _| rng.normal());
+        let op = LowRankOp::new(l.clone());
+        let want = l.matmul_t(&l);
+        assert!(op.dense().max_abs_diff(&want) < 1e-12);
+        let m = Mat::from_fn(25, 3, |_, _| rng.normal());
+        assert!(op.matmul(&m).max_abs_diff(&want.matmul(&m)) < 1e-11);
+        for (i, d) in op.diag().iter().enumerate() {
+            assert!((d - want.get(i, i)).abs() < 1e-12);
+        }
+        assert_eq!(op.rank(), 4);
+        assert!(op.low_rank_factor().is_some());
+    }
+
+    #[test]
+    fn added_diag_promotes_to_woodbury() {
+        let mut rng = Rng::new(2);
+        let l = Mat::from_fn(10, 2, |_, _| rng.normal());
+        let op = AddedDiagOp::new(LowRankOp::new(l), 0.1);
+        assert_eq!(op.solve_hint(), SolveHint::Woodbury);
+    }
+}

@@ -1,0 +1,372 @@
+//! Composable **linear-operator algebra** — the single abstraction every
+//! inference path consumes, from mBCG training to the serving coordinator.
+//!
+//! The paper's programmability claim (§5) is that a GP model is nothing but
+//! a structured matrix that knows how to multiply itself against a dense
+//! block. This module makes that literal: [`LinearOp`] is the one trait,
+//! and models are *compositions* of structured implementations —
+//!
+//! - [`DenseOp`] — an explicit matrix (tests, baselines, small blocks),
+//! - [`AddedDiagOp`] — `A + σ²I` as a composition (noise is no longer baked
+//!   into every operator),
+//! - [`SumOp`] / [`ScaledOp`] / [`DiagOp`] — closure under `+` and `·c`,
+//! - [`LowRankOp`] — `L·Lᵀ`, the Woodbury seam (SGPR, linear kernels),
+//! - [`KroneckerOp`] / [`ToeplitzLinOp`] — structure wrappers over
+//!   [`crate::linalg::kronecker`] and [`crate::linalg::toeplitz`],
+//! - [`InterpOp`] — SKI's `W·A·Wᵀ` interpolation sandwich,
+//! - [`ShardedOp`] — row-sharded partial products
+//!   ([`crate::linalg::mbcg::ShardedMmm`]) as an operator.
+//!
+//! The [`solve()`] dispatcher routes a linear solve to the right strategy
+//! — dense Cholesky, direct Woodbury, or preconditioned mBCG — from the
+//! operator's declared structure ([`LinearOp::solve_hint`]), so exact,
+//! SGPR, SKI, and sharded models all solve through one generic path.
+//!
+//! The legacy `kernels::KernelOperator` name is kept as a deprecated
+//! re-export of this trait so seed-era code keeps compiling.
+
+pub mod compose;
+pub mod interp;
+pub mod lowrank;
+pub mod sharded;
+pub mod solve;
+pub mod structured;
+
+pub use compose::{AddedDiagOp, DiagOp, ScaledOp, SumOp};
+pub use interp::{InterpOp, SparseInterp};
+pub use lowrank::LowRankOp;
+pub use sharded::ShardedOp;
+pub use solve::{
+    build_preconditioner, plan, solve, solve_strategy, solve_with, SolveOptions, SolvePlan,
+};
+pub use structured::{KroneckerOp, ToeplitzLinOp};
+
+use crate::tensor::Mat;
+
+/// Which solve strategy an operator's structure makes optimal. The
+/// dispatcher in [`solve()`] resolves this hint against what the operator
+/// actually exposes ([`LinearOp::noise_split`], [`LinearOp::low_rank_factor`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SolveHint {
+    /// Materialise and Cholesky-factor: right for explicitly dense
+    /// operators where `matmul` is already O(n²) per column.
+    DenseCholesky,
+    /// Diagonal-plus-low-rank structure: exact Woodbury solve in
+    /// O(nk² + k³) — the SGPR direct path.
+    Woodbury,
+    /// Fast black-box `matmul`: iterative mBCG (the paper's engine).
+    /// This is the default.
+    Iterative,
+}
+
+/// A symmetric positive-(semi)definite linear operator `A`, accessed only
+/// through structured products — the blackbox every engine consumes.
+///
+/// Semantics: all accessors describe the **full composed matrix**. If an
+/// operator is `K + σ²I` (an [`AddedDiagOp`]), its `diag`/`row`/`dense`
+/// include the σ² term; the noise-free part is reachable through
+/// [`LinearOp::noise_split`]. (The seed-era `KernelOperator` returned
+/// noise-*less* `diag`/`row` — callers that need those now go through
+/// `noise_split`.)
+///
+/// Parameter indexing: raw (log-space) structural parameters come first;
+/// a learnable added diagonal (likelihood noise) is always **last** —
+/// compositions concatenate their children's parameter blocks in order.
+pub trait LinearOp: Sync {
+    /// (rows, cols) of the implicit matrix.
+    fn shape(&self) -> (usize, usize);
+
+    /// Convenience: the operator dimension `n` (all current ops are square).
+    fn n(&self) -> usize {
+        self.shape().0
+    }
+
+    /// Number of raw (log-space) parameters `dmatmul` differentiates by.
+    fn n_params(&self) -> usize {
+        0
+    }
+
+    /// `A · M` — the hot path (one call per mBCG iteration).
+    fn matmul(&self, m: &Mat) -> Mat;
+
+    /// `(∂A/∂raw_p) · M`. Operators with `n_params() == 0` never receive
+    /// this call; the default makes a stray call loud.
+    fn dmatmul(&self, param: usize, m: &Mat) -> Mat {
+        let _ = m;
+        panic!(
+            "LinearOp::dmatmul: operator has {} parameters, asked for {param}",
+            self.n_params()
+        )
+    }
+
+    /// Diagonal of the full operator. Default is O(n · row-cost); every
+    /// structured implementation overrides it.
+    fn diag(&self) -> Vec<f64> {
+        (0..self.n()).map(|i| self.row(i)[i]).collect()
+    }
+
+    /// Row `i` of the full operator. The default computes `A·eᵢ` (one
+    /// `matmul`), which equals row `i` for the symmetric operators this
+    /// algebra models; structured implementations override with O(n) or
+    /// better.
+    fn row(&self, i: usize) -> Vec<f64> {
+        let (_r, c) = self.shape();
+        let mut e = Mat::zeros(c, 1);
+        e.set(i, 0, 1.0);
+        self.matmul(&e).col(0)
+    }
+
+    /// Single entry `A[i, j]`. Default goes through [`LinearOp::row`];
+    /// Toeplitz/Kronecker/dense structures override with O(1) — the fast
+    /// path [`InterpOp`]'s stencil diagonal rides on.
+    fn entry(&self, i: usize, j: usize) -> f64 {
+        self.row(i)[j]
+    }
+
+    /// Which solve strategy this operator's structure favours.
+    fn solve_hint(&self) -> SolveHint {
+        SolveHint::Iterative
+    }
+
+    /// If the operator has the form `A + σ²I`, the noise-free part and σ².
+    /// The preconditioner builder (§4.1) pivots on this: the rank-k pivoted
+    /// Cholesky runs on the returned inner operator's `diag`/`row`.
+    fn noise_split(&self) -> Option<(&dyn LinearOp, f64)> {
+        None
+    }
+
+    /// If the operator is exactly `L·Lᵀ`, its factor — the seam the direct
+    /// Woodbury solve (and SGPR) runs through.
+    fn low_rank_factor(&self) -> Option<&Mat> {
+        None
+    }
+
+    /// σ² of the outermost added diagonal (0.0 when there is none). Shim
+    /// for the seed-era `KernelOperator::noise` surface.
+    fn noise(&self) -> f64 {
+        self.noise_split().map_or(0.0, |(_, s)| s)
+    }
+
+    /// Dense materialisation of the full operator (tests + the Cholesky
+    /// baseline engine). Default builds from rows.
+    fn dense(&self) -> Mat {
+        let (r, _c) = self.shape();
+        let mut out = Mat::zeros(r, self.shape().1);
+        for i in 0..r {
+            let row = self.row(i);
+            out.row_mut(i).copy_from_slice(&row);
+        }
+        out
+    }
+
+    /// Concrete-type escape hatch for engines with a specialised direct
+    /// path (e.g. the SGPR Woodbury-Cholesky baseline). Operators that
+    /// want to be downcastable override this with `Some(self)`.
+    fn as_any(&self) -> Option<&dyn std::any::Any> {
+        None
+    }
+}
+
+/// Implements the non-gradient surface of [`LinearOp`] by delegating to a
+/// struct field holding a composed operator — the boilerplate-free way to
+/// write a model as a *named* wrapper over an algebra composition. Use
+/// inside an `impl LinearOp for Model` block; the model then supplies (or
+/// delegates) `n_params`/`dmatmul`/`as_any`, which is exactly the surface
+/// custom gradient math lives on.
+#[macro_export]
+macro_rules! linear_op_delegate {
+    ($field:ident) => {
+        fn shape(&self) -> (usize, usize) {
+            self.$field.shape()
+        }
+        fn matmul(&self, m: &$crate::tensor::Mat) -> $crate::tensor::Mat {
+            self.$field.matmul(m)
+        }
+        fn diag(&self) -> Vec<f64> {
+            self.$field.diag()
+        }
+        fn row(&self, i: usize) -> Vec<f64> {
+            self.$field.row(i)
+        }
+        fn entry(&self, i: usize, j: usize) -> f64 {
+            self.$field.entry(i, j)
+        }
+        fn solve_hint(&self) -> $crate::linalg::op::SolveHint {
+            self.$field.solve_hint()
+        }
+        fn noise_split(&self) -> Option<(&dyn $crate::linalg::op::LinearOp, f64)> {
+            self.$field.noise_split()
+        }
+        fn low_rank_factor(&self) -> Option<&$crate::tensor::Mat> {
+            self.$field.low_rank_factor()
+        }
+        fn noise(&self) -> f64 {
+            self.$field.noise()
+        }
+        fn dense(&self) -> $crate::tensor::Mat {
+            self.$field.dense()
+        }
+    };
+}
+
+macro_rules! forward_linear_op {
+    () => {
+        fn shape(&self) -> (usize, usize) {
+            (**self).shape()
+        }
+        fn n(&self) -> usize {
+            (**self).n()
+        }
+        fn n_params(&self) -> usize {
+            (**self).n_params()
+        }
+        fn matmul(&self, m: &Mat) -> Mat {
+            (**self).matmul(m)
+        }
+        fn dmatmul(&self, param: usize, m: &Mat) -> Mat {
+            (**self).dmatmul(param, m)
+        }
+        fn diag(&self) -> Vec<f64> {
+            (**self).diag()
+        }
+        fn row(&self, i: usize) -> Vec<f64> {
+            (**self).row(i)
+        }
+        fn entry(&self, i: usize, j: usize) -> f64 {
+            (**self).entry(i, j)
+        }
+        fn solve_hint(&self) -> SolveHint {
+            (**self).solve_hint()
+        }
+        fn noise_split(&self) -> Option<(&dyn LinearOp, f64)> {
+            (**self).noise_split()
+        }
+        fn low_rank_factor(&self) -> Option<&Mat> {
+            (**self).low_rank_factor()
+        }
+        fn noise(&self) -> f64 {
+            (**self).noise()
+        }
+        fn dense(&self) -> Mat {
+            (**self).dense()
+        }
+        fn as_any(&self) -> Option<&dyn std::any::Any> {
+            (**self).as_any()
+        }
+    };
+}
+
+impl<T: LinearOp + ?Sized> LinearOp for &T {
+    forward_linear_op!();
+}
+
+impl<T: LinearOp + ?Sized> LinearOp for Box<T> {
+    forward_linear_op!();
+}
+
+/// An explicit dense matrix as a [`LinearOp`] — the reference
+/// implementation every composed operator is property-tested against, and
+/// the right representation when `n` is small enough that O(n²) storage is
+/// free.
+pub struct DenseOp {
+    a: Mat,
+}
+
+impl DenseOp {
+    /// Wrap an explicit (symmetric) matrix.
+    pub fn new(a: Mat) -> Self {
+        DenseOp { a }
+    }
+
+    /// The wrapped matrix.
+    pub fn mat(&self) -> &Mat {
+        &self.a
+    }
+}
+
+impl LinearOp for DenseOp {
+    fn shape(&self) -> (usize, usize) {
+        self.a.shape()
+    }
+
+    fn matmul(&self, m: &Mat) -> Mat {
+        self.a.matmul(m)
+    }
+
+    fn diag(&self) -> Vec<f64> {
+        (0..self.a.rows().min(self.a.cols()))
+            .map(|i| self.a.get(i, i))
+            .collect()
+    }
+
+    fn row(&self, i: usize) -> Vec<f64> {
+        self.a.row(i).to_vec()
+    }
+
+    fn entry(&self, i: usize, j: usize) -> f64 {
+        self.a.get(i, j)
+    }
+
+    fn solve_hint(&self) -> SolveHint {
+        SolveHint::DenseCholesky
+    }
+
+    fn dense(&self) -> Mat {
+        self.a.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn dense_op_is_its_own_materialisation() {
+        let mut rng = Rng::new(1);
+        let a = {
+            let g = Mat::from_fn(12, 12, |_, _| rng.normal());
+            let mut s = g.t_matmul(&g);
+            s.add_diag(1.0);
+            s
+        };
+        let op = DenseOp::new(a.clone());
+        assert_eq!(op.dense(), a);
+        assert_eq!(op.shape(), (12, 12));
+        assert_eq!(op.solve_hint(), SolveHint::DenseCholesky);
+        let m = Mat::from_fn(12, 3, |_, _| rng.normal());
+        assert!(op.matmul(&m).max_abs_diff(&a.matmul(&m)) == 0.0);
+        for i in 0..12 {
+            assert_eq!(op.row(i), a.row(i).to_vec());
+            assert_eq!(op.entry(i, (i + 3) % 12), a.get(i, (i + 3) % 12));
+        }
+    }
+
+    #[test]
+    fn default_row_comes_from_matmul() {
+        // an op that only implements matmul still yields correct rows
+        struct MatmulOnly(Mat);
+        impl LinearOp for MatmulOnly {
+            fn shape(&self) -> (usize, usize) {
+                self.0.shape()
+            }
+            fn matmul(&self, m: &Mat) -> Mat {
+                self.0.matmul(m)
+            }
+        }
+        let mut rng = Rng::new(2);
+        let g = Mat::from_fn(8, 8, |_, _| rng.normal());
+        let mut a = g.t_matmul(&g);
+        a.symmetrize();
+        let op = MatmulOnly(a.clone());
+        for i in [0usize, 3, 7] {
+            let r = op.row(i);
+            for j in 0..8 {
+                assert!((r[j] - a.get(i, j)).abs() < 1e-12);
+            }
+        }
+        assert!(op.dense().max_abs_diff(&a) < 1e-12);
+        assert_eq!(op.noise(), 0.0);
+        assert!(op.as_any().is_none());
+    }
+}

@@ -1,0 +1,136 @@
+//! [`ShardedOp`] — any row-sharded partial-product backend
+//! ([`crate::linalg::mbcg::ShardedMmm`]) lifted into the operator algebra.
+//!
+//! `ShardedMmm` is the seam along which shards map onto devices/processes
+//! (Wang et al. 2019); wrapping it as a [`LinearOp`] lets the generic
+//! solve dispatcher, the engines, and the serving coordinator consume a
+//! sharded backend exactly like any other composition — `matmul` assembles
+//! the per-shard row blocks through [`crate::linalg::mbcg::sharded_mmm`]'s
+//! work-stealing pool.
+
+use super::LinearOp;
+use crate::linalg::mbcg::{sharded_mmm, ShardedMmm};
+use crate::tensor::Mat;
+
+/// A [`ShardedMmm`] backend as a composable [`LinearOp`].
+///
+/// `diag`/`row` default to one shard-assembled product against a basis
+/// vector per row (O(n·matmul) for the full diagonal); backends that can
+/// do better supply the diagonal up front via [`ShardedOp::with_diag`].
+pub struct ShardedOp<S> {
+    inner: S,
+    /// optional precomputed full-operator diagonal
+    diag: Option<Vec<f64>>,
+}
+
+impl<S: ShardedMmm> ShardedOp<S> {
+    /// Wrap a sharded backend.
+    pub fn new(inner: S) -> Self {
+        ShardedOp { inner, diag: None }
+    }
+
+    /// Attach a precomputed diagonal (cheap for kernel backends).
+    pub fn with_diag(mut self, diag: Vec<f64>) -> Self {
+        assert_eq!(diag.len(), self.inner.n());
+        self.diag = Some(diag);
+        self
+    }
+
+    /// The wrapped backend.
+    pub fn inner(&self) -> &S {
+        &self.inner
+    }
+
+    /// Number of row shards.
+    pub fn shard_count(&self) -> usize {
+        self.inner.n_shards()
+    }
+}
+
+impl<S: ShardedMmm> LinearOp for ShardedOp<S> {
+    fn shape(&self) -> (usize, usize) {
+        (self.inner.n(), self.inner.n())
+    }
+
+    fn matmul(&self, m: &Mat) -> Mat {
+        sharded_mmm(&self.inner, m)
+    }
+
+    fn diag(&self) -> Vec<f64> {
+        match &self.diag {
+            Some(d) => d.clone(),
+            None => (0..self.inner.n()).map(|i| self.row(i)[i]).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use std::ops::Range;
+
+    /// Toy backend: shard s multiplies its row-block of a dense matrix.
+    struct DenseSharded {
+        a: Mat,
+        shards: Vec<Range<usize>>,
+    }
+
+    impl ShardedMmm for DenseSharded {
+        fn n(&self) -> usize {
+            self.a.rows()
+        }
+        fn n_shards(&self) -> usize {
+            self.shards.len()
+        }
+        fn shard_rows(&self, s: usize) -> Range<usize> {
+            self.shards[s].clone()
+        }
+        fn shard_matmul(&self, s: usize, m: &Mat, out: &mut [f64]) {
+            let t = m.cols();
+            for (ri, i) in self.shards[s].clone().enumerate() {
+                let arow = self.a.row(i);
+                let orow = &mut out[ri * t..(ri + 1) * t];
+                for (j, &av) in arow.iter().enumerate() {
+                    let mrow = m.row(j);
+                    for c in 0..t {
+                        orow[c] += av * mrow[c];
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_op_matches_dense_across_shard_counts() {
+        let mut rng = Rng::new(1);
+        let g = Mat::from_fn(31, 31, |_, _| rng.normal());
+        let mut a = g.t_matmul(&g);
+        a.symmetrize();
+        let m = Mat::from_fn(31, 3, |_, _| rng.normal());
+        let want = a.matmul(&m);
+        for &s in &[1usize, 3, 7] {
+            let op = ShardedOp::new(DenseSharded {
+                a: a.clone(),
+                shards: crate::runtime::shard::partition_rows(31, s),
+            });
+            assert_eq!(op.shard_count(), s);
+            assert!(op.matmul(&m).max_abs_diff(&want) < 1e-11, "shards {s}");
+            // default diag assembles from basis products
+            for (i, d) in op.diag().iter().enumerate() {
+                assert!((d - a.get(i, i)).abs() < 1e-11, "shards {s} diag {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn precomputed_diag_is_used() {
+        let a = Mat::eye(5);
+        let op = ShardedOp::new(DenseSharded {
+            a,
+            shards: crate::runtime::shard::partition_rows(5, 2),
+        })
+        .with_diag(vec![9.0; 5]);
+        assert_eq!(op.diag(), vec![9.0; 5]);
+    }
+}

@@ -1,0 +1,184 @@
+//! Structure wrappers: [`KroneckerOp`] (`A ⊗ B`, multi-task GPs) and
+//! [`ToeplitzLinOp`] (symmetric Toeplitz via FFT, KISS-GP's grid kernel) —
+//! the existing routines in [`crate::linalg::kronecker`] and
+//! [`crate::linalg::toeplitz`] lifted into the operator algebra so they
+//! compose with everything else.
+
+use super::LinearOp;
+use crate::linalg::kronecker::{kron_dense, kron_matmul};
+use crate::linalg::toeplitz::ToeplitzOp;
+use crate::tensor::Mat;
+
+/// `A ⊗ B` for dense square factors. Vector layout pairs A-index `i` with
+/// B-index `j` at position `i·qb + j` (see [`crate::linalg::kronecker`]);
+/// a matmul costs two small GEMMs per column instead of one (qa·qb)² one.
+pub struct KroneckerOp {
+    a: Mat,
+    b: Mat,
+}
+
+impl KroneckerOp {
+    /// Compose `a ⊗ b` (both square).
+    pub fn new(a: Mat, b: Mat) -> Self {
+        assert_eq!(a.rows(), a.cols(), "A must be square");
+        assert_eq!(b.rows(), b.cols(), "B must be square");
+        KroneckerOp { a, b }
+    }
+
+    /// Left factor `A`.
+    pub fn a(&self) -> &Mat {
+        &self.a
+    }
+
+    /// Right factor `B`.
+    pub fn b(&self) -> &Mat {
+        &self.b
+    }
+}
+
+impl LinearOp for KroneckerOp {
+    fn shape(&self) -> (usize, usize) {
+        let n = self.a.rows() * self.b.rows();
+        (n, n)
+    }
+
+    fn matmul(&self, m: &Mat) -> Mat {
+        kron_matmul(&self.a, &self.b, m)
+    }
+
+    fn diag(&self) -> Vec<f64> {
+        let (qa, qb) = (self.a.rows(), self.b.rows());
+        let mut d = Vec::with_capacity(qa * qb);
+        for i in 0..qa {
+            let ai = self.a.get(i, i);
+            for j in 0..qb {
+                d.push(ai * self.b.get(j, j));
+            }
+        }
+        d
+    }
+
+    fn row(&self, idx: usize) -> Vec<f64> {
+        let qb = self.b.rows();
+        let (i, s) = (idx / qb, idx % qb);
+        let arow = self.a.row(i);
+        let brow = self.b.row(s);
+        let mut r = Vec::with_capacity(self.a.rows() * qb);
+        for &av in arow {
+            for &bv in brow {
+                r.push(av * bv);
+            }
+        }
+        r
+    }
+
+    fn entry(&self, i: usize, j: usize) -> f64 {
+        let qb = self.b.rows();
+        self.a.get(i / qb, j / qb) * self.b.get(i % qb, j % qb)
+    }
+
+    fn dense(&self) -> Mat {
+        kron_dense(&self.a, &self.b)
+    }
+}
+
+/// Symmetric Toeplitz matrix `T[i,j] = c[|i−j|]` with O(m log m) matmuls
+/// via the circulant-embedding FFT in [`crate::linalg::toeplitz`].
+pub struct ToeplitzLinOp {
+    t: ToeplitzOp,
+}
+
+impl ToeplitzLinOp {
+    /// Build from the first column of the Toeplitz matrix.
+    pub fn new(first_column: Vec<f64>) -> Self {
+        ToeplitzLinOp {
+            t: ToeplitzOp::new(first_column),
+        }
+    }
+
+    /// Wrap an existing FFT-ready Toeplitz operator.
+    pub fn from_op(t: ToeplitzOp) -> Self {
+        ToeplitzLinOp { t }
+    }
+
+    /// The underlying FFT operator.
+    pub fn toeplitz(&self) -> &ToeplitzOp {
+        &self.t
+    }
+}
+
+impl LinearOp for ToeplitzLinOp {
+    fn shape(&self) -> (usize, usize) {
+        (self.t.m(), self.t.m())
+    }
+
+    fn matmul(&self, m: &Mat) -> Mat {
+        self.t.matmul(m)
+    }
+
+    fn diag(&self) -> Vec<f64> {
+        vec![self.t.diag_value(); self.t.m()]
+    }
+
+    fn row(&self, i: usize) -> Vec<f64> {
+        let col = self.t.first_column();
+        (0..self.t.m()).map(|j| col[i.abs_diff(j)]).collect()
+    }
+
+    fn entry(&self, i: usize, j: usize) -> f64 {
+        self.t.first_column()[i.abs_diff(j)]
+    }
+
+    fn dense(&self) -> Mat {
+        self.t.to_dense()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_spd(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let g = Mat::from_fn(n, n, |_, _| rng.normal());
+        let mut a = g.t_matmul(&g);
+        a.add_diag(0.5);
+        a.symmetrize();
+        a
+    }
+
+    #[test]
+    fn kronecker_op_matches_dense_kron() {
+        let a = rand_spd(3, 1);
+        let b = rand_spd(4, 2);
+        let op = KroneckerOp::new(a.clone(), b.clone());
+        let want = kron_dense(&a, &b);
+        assert!(op.dense().max_abs_diff(&want) < 1e-13);
+        let mut rng = Rng::new(3);
+        let m = Mat::from_fn(12, 3, |_, _| rng.normal());
+        assert!(op.matmul(&m).max_abs_diff(&want.matmul(&m)) < 1e-11);
+        for idx in 0..12 {
+            let r = op.row(idx);
+            for j in 0..12 {
+                assert!((r[j] - want.get(idx, j)).abs() < 1e-13);
+                assert!((op.entry(idx, j) - want.get(idx, j)).abs() < 1e-13);
+            }
+            assert!((op.diag()[idx] - want.get(idx, idx)).abs() < 1e-13);
+        }
+    }
+
+    #[test]
+    fn toeplitz_op_matches_dense() {
+        let mut rng = Rng::new(4);
+        let col: Vec<f64> = (0..30).map(|i| rng.normal() / (1.0 + i as f64)).collect();
+        let op = ToeplitzLinOp::new(col);
+        let want = op.toeplitz().to_dense();
+        let m = Mat::from_fn(30, 2, |_, _| rng.normal());
+        assert!(op.matmul(&m).max_abs_diff(&want.matmul(&m)) < 1e-9);
+        for i in [0usize, 13, 29] {
+            assert_eq!(op.row(i), want.row(i).to_vec());
+        }
+        assert_eq!(op.entry(5, 9), op.entry(9, 5));
+    }
+}

@@ -89,6 +89,18 @@ pub fn pivoted_cholesky(
     }
 }
 
+/// Convenience wrapper over a composed [`crate::linalg::op::LinearOp`]:
+/// factor the operator itself (callers wanting the paper's *noise-free*
+/// preconditioner pass the operator's `noise_split` inner part — or use
+/// [`crate::linalg::op::build_preconditioner`], which does exactly that).
+pub fn pivoted_cholesky_op(
+    op: &dyn crate::linalg::op::LinearOp,
+    max_rank: usize,
+    tol: f64,
+) -> PivotedCholesky {
+    pivoted_cholesky(&op.diag(), |i| op.row(i), max_rank, tol)
+}
+
 /// Convenience wrapper over a dense matrix.
 pub fn pivoted_cholesky_dense(k_mat: &Mat, max_rank: usize, tol: f64) -> PivotedCholesky {
     let n = k_mat.rows();

@@ -3,22 +3,28 @@
 //! ```text
 //! bbmm train   --dataset wine --model exact --engine bbmm --iters 50
 //! bbmm predict --dataset airfoil --model exact --engine bbmm
-//! bbmm serve   --dataset autompg --addr 127.0.0.1:7777
+//! bbmm serve   --dataset autompg --model exact|sgpr|ski --addr 127.0.0.1:7777
 //! bbmm artifact --name mll_rbf_n256_d4 [--dir artifacts]
 //! bbmm info
 //! ```
+//!
+//! Malformed flags print an error + usage hint and exit 2 (they no longer
+//! abort the process mid-serve with a panic).
 
-use bbmm_gp::coordinator::{serve, BatchPolicy, DynamicBatcher, PredictFn, ServerConfig};
+use bbmm_gp::coordinator::{
+    serve, served_predictor, BatchPolicy, DynamicBatcher, ServableModel, ServerConfig,
+};
 use bbmm_gp::data::synthetic::{generate, spec_by_name};
 use bbmm_gp::gp::exact::{Engine, ExactGp};
 use bbmm_gp::gp::mll::{BbmmEngine, CholeskyEngine, InferenceEngine};
 use bbmm_gp::gp::predict::{mae, rmse};
 use bbmm_gp::gp::{DongEngine, SgprOp, SkiOp};
-use bbmm_gp::kernels::{DenseKernelOp, Matern52, Rbf};
+use bbmm_gp::kernels::{DenseKernelOp, KernelCov, KernelCovOp, Matern52, Rbf, ShardedCovOp};
+use bbmm_gp::linalg::op::{solve_strategy, AddedDiagOp, LinearOp, SolveOptions};
 use bbmm_gp::runtime::{default_artifact_dir, Runtime};
 use bbmm_gp::tensor::Mat;
 use bbmm_gp::train::{TrainConfig, Trainer};
-use bbmm_gp::util::cli::Args;
+use bbmm_gp::util::cli::{Args, CliError};
 use bbmm_gp::util::{Rng, Timer};
 use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
@@ -26,14 +32,28 @@ use std::sync::Arc;
 fn main() {
     let args = Args::from_env();
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
-    match cmd {
+    let result = match cmd {
         "train" => cmd_train(&args),
         "predict" => cmd_predict(&args),
         "serve" => cmd_serve(&args),
         "run" => cmd_run(&args),
-        "artifact" => cmd_artifact(&args),
-        "info" => cmd_info(),
-        _ => print_help(),
+        "artifact" => {
+            cmd_artifact(&args);
+            Ok(())
+        }
+        "info" => {
+            cmd_info();
+            Ok(())
+        }
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        eprintln!("run `bbmm help` for usage");
+        std::process::exit(2);
     }
 }
 
@@ -41,10 +61,13 @@ fn main() {
 /// (`bbmm run --config configs/exact_airfoil.toml [--mode train|predict]`).
 /// The config is translated to the canonical CLI argument set so every
 /// option has exactly one meaning across both entry points.
-fn cmd_run(args: &Args) {
-    let path = args
-        .get("config")
-        .expect("bbmm run requires --config <file>");
+fn cmd_run(args: &Args) -> Result<(), CliError> {
+    let Some(path) = args.get("config") else {
+        return Err(CliError {
+            flag: "config".to_string(),
+            message: "bbmm run requires --config <file>".to_string(),
+        });
+    };
     let cfg = bbmm_gp::config::ExperimentConfig::load(std::path::Path::new(path))
         .unwrap_or_else(|e| panic!("{e}"));
     println!("launch: {path} → {cfg:?}");
@@ -122,41 +145,56 @@ fn make_kernel(args: &Args) -> Box<dyn bbmm_gp::kernels::Kernel> {
     }
 }
 
-fn load_dataset(args: &Args) -> bbmm_gp::data::Dataset {
+fn load_dataset(args: &Args) -> Result<bbmm_gp::data::Dataset, CliError> {
     let name = args.get_or("dataset", "wine");
-    let seed = args.u64_or("seed", 0);
+    let seed = args.u64_or("seed", 0)?;
     if let Some(path) = args.get("csv") {
-        return bbmm_gp::data::loader::load_csv(std::path::Path::new(path), name, seed)
-            .expect("failed to load csv");
+        return Ok(
+            bbmm_gp::data::loader::load_csv(std::path::Path::new(path), name, seed)
+                .expect("failed to load csv"),
+        );
     }
     let mut spec = spec_by_name(name).unwrap_or_else(|| {
         eprintln!("unknown dataset {name}; using wine");
         spec_by_name("wine").unwrap()
     });
-    if let Some(n) = args.get("n") {
-        spec.n = n.parse().expect("--n must be an integer");
-    }
-    generate(&spec, seed)
+    spec.n = args.usize_or("n", spec.n)?;
+    Ok(generate(&spec, seed))
 }
 
-fn make_engine(args: &Args) -> Box<dyn InferenceEngine> {
-    let p = args.usize_or("cg-iters", 20);
-    let t = args.usize_or("probes", 10);
-    let k = args.usize_or("precond-rank", 5);
-    let seed = args.u64_or("seed", 0);
-    match args.get_or("engine", "bbmm") {
+fn make_engine(args: &Args) -> Result<Box<dyn InferenceEngine>, CliError> {
+    let p = args.usize_or("cg-iters", 20)?;
+    let t = args.usize_or("probes", 10)?;
+    let k = args.usize_or("precond-rank", 5)?;
+    let seed = args.u64_or("seed", 0)?;
+    Ok(match args.get_or("engine", "bbmm") {
         "cholesky" => Box::new(CholeskyEngine),
         "dong" => Box::new(DongEngine::new(p, t, seed)),
         _ => Box::new(BbmmEngine::new(p, t, k, seed)),
+    })
+}
+
+/// Draw `m` inducing points from the training inputs.
+fn draw_inducing(ds: &bbmm_gp::data::Dataset, m: usize, seed: u64) -> Mat {
+    let m = m.min(ds.n_train());
+    let mut rng = Rng::new(seed + 1);
+    let mut u = Mat::zeros(m, ds.dim());
+    for r in 0..m {
+        let src = rng.below(ds.n_train());
+        u.row_mut(r).copy_from_slice(ds.x_train.row(src));
     }
+    u
 }
 
 /// Train the requested model; returns (raw params, final nmll, seconds).
-fn train_model(args: &Args, ds: &bbmm_gp::data::Dataset) -> (Vec<f64>, f64, f64) {
-    let mut engine = make_engine(args);
+fn train_model(
+    args: &Args,
+    ds: &bbmm_gp::data::Dataset,
+) -> Result<(Vec<f64>, f64, f64), CliError> {
+    let mut engine = make_engine(args)?;
     let config = TrainConfig {
-        iters: args.usize_or("iters", 30),
-        lr: args.f64_or("lr", 0.1),
+        iters: args.usize_or("iters", 30)?,
+        lr: args.f64_or("lr", 0.1)?,
         verbose: args.flag("verbose"),
         ..Default::default()
     };
@@ -165,13 +203,8 @@ fn train_model(args: &Args, ds: &bbmm_gp::data::Dataset) -> (Vec<f64>, f64, f64)
     let y = ds.y_train.clone();
     let (params, nmll) = match model.as_str() {
         "sgpr" => {
-            let m = args.usize_or("inducing", 300).min(ds.n_train());
-            let mut rng = Rng::new(args.u64_or("seed", 0) + 1);
-            let mut u = Mat::zeros(m, ds.dim());
-            for r in 0..m {
-                let src = rng.below(ds.n_train());
-                u.row_mut(r).copy_from_slice(ds.x_train.row(src));
-            }
+            let m = args.usize_or("inducing", 300)?;
+            let u = draw_inducing(ds, m, args.u64_or("seed", 0)?);
             let mut op = SgprOp::new(ds.x_train.clone(), u, make_kernel(args), 0.1);
             let mut params = op.params();
             let mut trainer = Trainer::new(config);
@@ -182,7 +215,7 @@ fn train_model(args: &Args, ds: &bbmm_gp::data::Dataset) -> (Vec<f64>, f64, f64)
             (params, best)
         }
         "ski" => {
-            let m = args.usize_or("inducing", 2000);
+            let m = args.usize_or("inducing", 2000)?;
             let z: Vec<f64> = (0..ds.n_train()).map(|i| ds.x_train.row(i)[0]).collect();
             let mut op = SkiOp::new(z, m, make_kernel(args), 0.1);
             let mut params = op.params();
@@ -204,11 +237,11 @@ fn train_model(args: &Args, ds: &bbmm_gp::data::Dataset) -> (Vec<f64>, f64, f64)
             (params, best)
         }
     };
-    (params, nmll, timer.elapsed_s())
+    Ok((params, nmll, timer.elapsed_s()))
 }
 
-fn cmd_train(args: &Args) {
-    let ds = load_dataset(args);
+fn cmd_train(args: &Args) -> Result<(), CliError> {
+    let ds = load_dataset(args)?;
     println!(
         "dataset {} — n_train={} d={} model={} engine={}",
         ds.name,
@@ -217,22 +250,23 @@ fn cmd_train(args: &Args) {
         args.get_or("model", "exact"),
         args.get_or("engine", "bbmm")
     );
-    let (params, nmll, secs) = train_model(args, &ds);
+    let (params, nmll, secs) = train_model(args, &ds)?;
     println!("trained in {secs:.2}s — final nmll {nmll:.4}");
     println!("raw parameters: {params:?}");
+    Ok(())
 }
 
-fn cmd_predict(args: &Args) {
-    let ds = load_dataset(args);
-    let (params, nmll, secs) = train_model(args, &ds);
+fn cmd_predict(args: &Args) -> Result<(), CliError> {
+    let ds = load_dataset(args)?;
+    let (params, nmll, secs) = train_model(args, &ds)?;
     // evaluate with an exact-GP predictor on the learned hyperparameters
     let engine = match args.get_or("engine", "bbmm") {
         "cholesky" => Engine::Cholesky,
         _ => Engine::Bbmm(BbmmEngine::new(
-            args.usize_or("cg-iters", 20).max(50),
-            args.usize_or("probes", 10),
-            args.usize_or("precond-rank", 5),
-            args.u64_or("seed", 0),
+            args.usize_or("cg-iters", 20)?.max(50),
+            args.usize_or("probes", 10)?,
+            args.usize_or("precond-rank", 5)?,
+            args.u64_or("seed", 0)?,
         )),
     };
     let mut kernel = make_kernel(args);
@@ -248,58 +282,189 @@ fn cmd_predict(args: &Args) {
         mae(&pred.mean, &ds.y_test),
         rmse(&pred.mean, &ds.y_test)
     );
+    Ok(())
 }
 
-fn cmd_serve(args: &Args) {
-    let ds = load_dataset(args);
-    let (params, _nmll, _secs) = train_model(args, &ds);
+// ---------------------------------------------------------------------------
+// Serving adapters: each model family is a few lines of ServableModel glue
+// over its operator composition; the server itself is model-agnostic.
+// ---------------------------------------------------------------------------
+
+/// Exact GP (monolithic or sharded backend) behind the serving trait.
+struct ExactServable {
+    op: AddedDiagOp<Box<dyn KernelCov>>,
+    y: Vec<f64>,
+}
+
+impl ServableModel for ExactServable {
+    fn op(&self) -> &dyn LinearOp {
+        &self.op
+    }
+    fn cross(&self, xs: &Mat) -> Mat {
+        let cov = self.op.inner();
+        cov.cross(xs, cov.x())
+    }
+    fn prior_diag(&self, xs: &Mat) -> Vec<f64> {
+        let kernel = self.op.inner().kernel();
+        (0..xs.rows()).map(|i| kernel.eval(xs.row(i), xs.row(i))).collect()
+    }
+    fn y(&self) -> &[f64] {
+        &self.y
+    }
+    fn describe(&self) -> String {
+        format!(
+            "AddedDiag(KernelCov × {} shards) n={} strategy={:?}",
+            self.op.inner().shard_count(),
+            self.op.n(),
+            solve_strategy(&self.op)
+        )
+    }
+}
+
+/// SGPR behind the serving trait — solves go through the direct Woodbury
+/// branch of the dispatcher.
+struct SgprServable {
+    op: SgprOp,
+    y: Vec<f64>,
+}
+
+impl ServableModel for SgprServable {
+    fn op(&self) -> &dyn LinearOp {
+        &self.op
+    }
+    fn cross(&self, xs: &Mat) -> Mat {
+        self.op.cross_sor(xs)
+    }
+    fn prior_diag(&self, xs: &Mat) -> Vec<f64> {
+        let kernel = self.op.kernel();
+        (0..xs.rows()).map(|i| kernel.eval(xs.row(i), xs.row(i))).collect()
+    }
+    fn y(&self) -> &[f64] {
+        &self.y
+    }
+    fn describe(&self) -> String {
+        format!(
+            "AddedDiag(LowRank(SoR m={})) n={} strategy={:?}",
+            self.op.u().rows(),
+            self.op.n(),
+            solve_strategy(&self.op)
+        )
+    }
+}
+
+/// SKI behind the serving trait (features = first input coordinate, as in
+/// the training path).
+struct SkiServable {
+    op: SkiOp,
+    y: Vec<f64>,
+}
+
+impl ServableModel for SkiServable {
+    fn op(&self) -> &dyn LinearOp {
+        &self.op
+    }
+    fn cross(&self, xs: &Mat) -> Mat {
+        let z: Vec<f64> = (0..xs.rows()).map(|i| xs.row(i)[0]).collect();
+        self.op.cross(&z)
+    }
+    fn prior_diag(&self, xs: &Mat) -> Vec<f64> {
+        let kernel = self.op.kernel();
+        (0..xs.rows())
+            .map(|i| {
+                let z = [xs.row(i)[0]];
+                kernel.eval(&z, &z)
+            })
+            .collect()
+    }
+    fn y(&self) -> &[f64] {
+        &self.y
+    }
+    fn describe(&self) -> String {
+        let (_lo, _h, m) = self.op.grid();
+        format!(
+            "AddedDiag(Interp(GridToeplitz m={m})) n={} strategy={:?}",
+            self.op.n(),
+            solve_strategy(&self.op)
+        )
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<(), CliError> {
+    let ds = load_dataset(args)?;
+    let (params, _nmll, _secs) = train_model(args, &ds)?;
     let mut kernel = make_kernel(args);
     let nk = kernel.n_params();
     kernel.set_params(&params[..nk]);
     let noise = params[nk].exp();
     let dim = ds.dim();
-    // shard the serving operator when asked (--shards N): same numerics,
-    // but the hot mat-mul runs over per-shard work queues sized to traffic
-    let shards = args.usize_or("shards", 1);
-    let engine = Engine::Bbmm(BbmmEngine::default());
-    let gp = std::sync::Mutex::new(if shards > 1 {
-        ExactGp::new_sharded(
-            ds.x_train.clone(),
-            ds.y_train.clone(),
-            kernel,
-            noise,
-            engine,
-            shards,
-        )
-    } else {
-        ExactGp::new(
-            ds.x_train.clone(),
-            ds.y_train.clone(),
-            kernel,
-            noise,
-            engine,
-        )
-    });
-    let shard_count = gp.lock().unwrap().op().shard_count();
-    let predict: PredictFn = Box::new(move |xs: &Mat| gp.lock().unwrap().predict(xs));
+    let shards = args.usize_or("shards", 1)?;
+    // build the served operator composition for the requested model — the
+    // server consumes the ServableModel seam, so any LinearOp composition
+    // can sit behind it
+    let model: Box<dyn ServableModel> = match args.get_or("model", "exact") {
+        "sgpr" => {
+            let m = args.usize_or("inducing", 300)?;
+            let u = draw_inducing(&ds, m, args.u64_or("seed", 0)?);
+            Box::new(SgprServable {
+                op: SgprOp::new(ds.x_train.clone(), u, kernel, noise),
+                y: ds.y_train.clone(),
+            })
+        }
+        "ski" => {
+            let m = args.usize_or("inducing", 2000)?;
+            let z: Vec<f64> = (0..ds.n_train()).map(|i| ds.x_train.row(i)[0]).collect();
+            Box::new(SkiServable {
+                op: SkiOp::new(z, m, kernel, noise),
+                y: ds.y_train.clone(),
+            })
+        }
+        _ => {
+            // exact: monolithic or row-sharded covariance backend, sized
+            // to traffic with --shards N (same numerics either way)
+            let cov: Box<dyn KernelCov> = if shards > 1 {
+                Box::new(ShardedCovOp::new(ds.x_train.clone(), kernel, shards))
+            } else {
+                Box::new(KernelCovOp::new(ds.x_train.clone(), kernel))
+            };
+            Box::new(ExactServable {
+                op: AddedDiagOp::new(cov, noise),
+                y: ds.y_train.clone(),
+            })
+        }
+    };
+    let operator = model.describe();
+    // only the exact backend consumes --shards; record 1 for the others so
+    // the deployment log never claims sharding that is not running
+    let shard_count = match args.get_or("model", "exact") {
+        "sgpr" | "ski" => 1,
+        _ => shards.max(1),
+    };
+    let solve_opts = SolveOptions {
+        max_iters: args.usize_or("cg-iters", 20)?.max(50),
+        tol: 1e-8,
+        precond_rank: args.usize_or("precond-rank", 5)?,
+    };
+    let predictor = served_predictor(model, solve_opts);
     let batcher = Arc::new(DynamicBatcher::new(
         dim,
         BatchPolicy {
-            max_batch: args.usize_or("max-batch", 64),
-            max_wait: std::time::Duration::from_millis(args.u64_or("max-wait-ms", 2)),
+            max_batch: args.usize_or("max-batch", 64)?,
+            max_wait: std::time::Duration::from_millis(args.u64_or("max-wait-ms", 2)?),
         },
-        predict,
+        predictor,
     ));
     let config = ServerConfig {
         addr: args.get_or("addr", "127.0.0.1:7777").to_string(),
+        operator,
         shard_count,
         stop: Arc::new(AtomicBool::new(false)),
     };
     println!(
-        "serving {dim}-feature GP predictions (operator shards: {})…",
-        config.shard_count
+        "serving {dim}-feature GP predictions — operator: {}",
+        config.operator
     );
     serve(config, batcher, |addr| println!("listening on {addr}")).expect("server failed");
+    Ok(())
 }
 
 fn cmd_artifact(args: &Args) {

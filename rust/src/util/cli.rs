@@ -1,8 +1,28 @@
 //! Tiny CLI argument parser (clap is unavailable offline).
 //!
 //! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+//! Malformed option values surface as [`CliError`]s so entry points can
+//! print a usage message and exit non-zero instead of aborting mid-serve.
 
 use std::collections::BTreeMap;
+use std::fmt;
+
+/// A malformed command-line option value.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CliError {
+    /// the offending flag name (without the leading `--`)
+    pub flag: String,
+    /// what went wrong
+    pub message: String,
+}
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "--{}: {}", self.flag, self.message)
+    }
+}
+
+impl std::error::Error for CliError {}
 
 /// Parsed command-line arguments.
 #[derive(Debug, Default, Clone)]
@@ -58,26 +78,32 @@ impl Args {
         self.get(name).unwrap_or(default)
     }
 
-    /// Typed option access with a default; panics with a clear message on a
-    /// malformed value (CLI misuse should fail loudly).
-    pub fn get_parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+    /// Typed option access with a default; a malformed value is a proper
+    /// [`CliError`] (the seed version panicked here, which aborted
+    /// `bbmm serve` on a bad flag instead of printing usage).
+    pub fn get_parse_or<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        default: T,
+    ) -> Result<T, CliError> {
         match self.get(name) {
-            None => default,
-            Some(s) => s
-                .parse::<T>()
-                .unwrap_or_else(|_| panic!("--{name}: cannot parse {s:?}")),
+            None => Ok(default),
+            Some(s) => s.parse::<T>().map_err(|_| CliError {
+                flag: name.to_string(),
+                message: format!("cannot parse {s:?} as {}", std::any::type_name::<T>()),
+            }),
         }
     }
 
-    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, CliError> {
         self.get_parse_or(name, default)
     }
 
-    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, CliError> {
         self.get_parse_or(name, default)
     }
 
-    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, CliError> {
         self.get_parse_or(name, default)
     }
 }
@@ -103,16 +129,18 @@ mod tests {
     #[test]
     fn typed_access() {
         let a = parse(&["--n", "100", "--lr", "0.1"]);
-        assert_eq!(a.usize_or("n", 1), 100);
-        assert_eq!(a.f64_or("lr", 0.0), 0.1);
-        assert_eq!(a.usize_or("missing", 7), 7);
+        assert_eq!(a.usize_or("n", 1).unwrap(), 100);
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), 0.1);
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
     }
 
     #[test]
-    #[should_panic(expected = "cannot parse")]
-    fn malformed_value_panics() {
+    fn malformed_value_is_a_proper_error() {
         let a = parse(&["--n", "abc"]);
-        a.usize_or("n", 1);
+        let err = a.usize_or("n", 1).unwrap_err();
+        assert_eq!(err.flag, "n");
+        assert!(err.message.contains("abc"), "{err}");
+        assert!(format!("{err}").starts_with("--n:"));
     }
 
     #[test]
