@@ -44,6 +44,7 @@ fn main() {
         BatchPolicy {
             max_batch: 64,
             max_wait: std::time::Duration::from_millis(3),
+            ..BatchPolicy::default()
         },
         predict,
     ));

@@ -1,0 +1,141 @@
+//! Bench: **batched vs looped solve** — the batch-axis payoff measured.
+//!
+//! b systems share one covariance `K` with per-system σ² (the shared
+//! `BatchOp` fast path: hyperparameter sweeps, per-tenant noise fleets).
+//! The looped baseline runs b independent mBCG solves — b kernel-row
+//! generations per iteration; the batched path runs `mbcg_batch` — **one**
+//! fused `K·[D₁ … D_b]` per iteration. Identical iteration counts and
+//! numerics (fixed budget, tol 0, identity preconditioner), so the gap is
+//! purely the amortised operator work.
+//!
+//! Grid: n ∈ {2k, 8k}, b ∈ {1, 4, 16}. Writes
+//! `results/BENCH_batch.json` (the CI perf artifact) plus the usual
+//! table/CSV pair. `BBMM_BENCH_QUICK=1` cuts per-case samples, not the
+//! grid, so the artifact schema is stable across environments.
+
+use bbmm_gp::bench::{bench, Table};
+use bbmm_gp::kernels::{KernelCovOp, Rbf};
+use bbmm_gp::linalg::mbcg::{mbcg, mbcg_batch, MbcgOptions};
+use bbmm_gp::linalg::op::{AddedDiagOp, BatchOp, LinearOp};
+use bbmm_gp::linalg::preconditioner::{IdentityPrecond, Preconditioner};
+use bbmm_gp::tensor::Mat;
+use bbmm_gp::util::par;
+use bbmm_gp::util::Rng;
+
+const ITERS: usize = 5;
+const RHS_COLS: usize = 1;
+
+struct Case {
+    n: usize,
+    b: usize,
+    looped_s: f64,
+    batched_s: f64,
+}
+
+fn main() {
+    let quick = std::env::var("BBMM_BENCH_QUICK").is_ok();
+    let samples = if quick { 2 } else { 3 };
+    let sizes = [2_000usize, 8_000];
+    let batches = [1usize, 4, 16];
+    println!(
+        "batch_solve: iters={ITERS} rhs_cols={RHS_COLS} samples={samples} threads={}\n",
+        par::num_threads()
+    );
+
+    let opts = MbcgOptions {
+        max_iters: ITERS,
+        tol: 0.0,
+        n_solve_only: RHS_COLS,
+    };
+    let mut cases = Vec::new();
+    let mut table = Table::new(&["n", "b", "looped_s", "batched_s", "speedup"]);
+    for &n in &sizes {
+        let mut rng = Rng::new(n as u64);
+        let x = Mat::from_fn(n, 4, |_, _| rng.uniform_in(-1.0, 1.0));
+        let cov = KernelCovOp::new(x, Box::new(Rbf::new(0.5, 1.0)));
+        let sigma2s: Vec<f64> = (0..16).map(|i| 0.05 * (1.0 + 0.1 * i as f64)).collect();
+        let bs: Vec<Mat> = (0..16)
+            .map(|_| Mat::from_fn(n, RHS_COLS, |_, _| rng.normal()))
+            .collect();
+        for &b in &batches {
+            let batch = BatchOp::shared(&cov, sigma2s[..b].to_vec());
+            let elements: Vec<AddedDiagOp<&KernelCovOp>> = sigma2s[..b]
+                .iter()
+                .map(|&s2| AddedDiagOp::new(&cov, s2))
+                .collect();
+            let b_refs: Vec<&Mat> = bs[..b].iter().collect();
+            let id = IdentityPrecond;
+            let preconds: Vec<&dyn Preconditioner> =
+                (0..b).map(|_| &id as &dyn Preconditioner).collect();
+
+            // correctness gate before timing: batched == looped
+            {
+                let batched = mbcg_batch(&batch, &b_refs, &preconds, &opts);
+                for (k, res) in batched.iter().enumerate() {
+                    let mono = mbcg(|m| elements[k].matmul(m), &bs[k], |m| m.clone(), &opts);
+                    let diff = res.solves.max_abs_diff(&mono.solves);
+                    assert!(diff < 1e-10, "n={n} b={b} system {k} diverged: {diff}");
+                }
+            }
+
+            let looped = bench(&format!("solve/looped/n{n}/b{b}"), 1, samples, || {
+                for k in 0..b {
+                    let _ = mbcg(|m| elements[k].matmul(m), &bs[k], |m| m.clone(), &opts);
+                }
+            });
+            let batched = bench(&format!("solve/batched/n{n}/b{b}"), 1, samples, || {
+                let _ = mbcg_batch(&batch, &b_refs, &preconds, &opts);
+            });
+            let (ls, bsed) = (looped.median_s(), batched.median_s());
+            table.row(&[
+                n.to_string(),
+                b.to_string(),
+                format!("{ls:.4}"),
+                format!("{bsed:.4}"),
+                format!("{:.2}x", ls / bsed),
+            ]);
+            cases.push(Case {
+                n,
+                b,
+                looped_s: ls,
+                batched_s: bsed,
+            });
+        }
+    }
+    println!();
+    table.print();
+    table.save("bench_batch_solve").ok();
+    write_json(&cases).expect("write BENCH_batch.json");
+    println!(
+        "\nwrote results/BENCH_batch.json — expect batched ≥ looped as b grows \
+         (kernel-row generation amortised across the batch)"
+    );
+}
+
+/// Hand-rolled JSON (no serde offline): the schema CI archives as the
+/// perf-trajectory artifact.
+fn write_json(cases: &[Case]) -> std::io::Result<()> {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"bench\": \"batch_solve\",\n");
+    out.push_str(&format!("  \"threads\": {},\n", par::num_threads()));
+    out.push_str(&format!("  \"iters\": {ITERS},\n"));
+    out.push_str(&format!("  \"rhs_cols\": {RHS_COLS},\n"));
+    out.push_str("  \"cases\": [\n");
+    for (i, c) in cases.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"n\": {}, \"b\": {}, \"looped_s\": {:.6}, \"batched_s\": {:.6}, \
+             \"speedup\": {:.3}}}{}\n",
+            c.n,
+            c.b,
+            c.looped_s,
+            c.batched_s,
+            c.looped_s / c.batched_s,
+            if i + 1 < cases.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n");
+    out.push_str("}\n");
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/BENCH_batch.json", out)
+}

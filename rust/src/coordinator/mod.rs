@@ -11,6 +11,11 @@ pub mod batcher;
 pub mod metrics;
 pub mod server;
 
-pub use batcher::{BatchPolicy, DynamicBatcher, PredictFn};
+pub use batcher::{
+    BatchPolicy, DynamicBatcher, MultiPredictFn, PredictFn, TenantBatch, TenantSpec,
+};
 pub use metrics::Metrics;
-pub use server::{serve, served_predictor, ServableModel, ServerConfig};
+pub use server::{
+    multi_served_predictor, serve, served_predictor, served_predictor_cached, ServableModel,
+    ServerConfig,
+};

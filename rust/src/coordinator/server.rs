@@ -3,20 +3,30 @@
 //! Line protocol, one request per line:
 //!
 //! ```text
-//! → 0.12,3.4,-1.0\n          (comma-separated features)
+//! → 0.12,3.4,-1.0\n          (comma-separated features → tenant 0)
 //! ← 0.873,0.0021\n           (mean, variance)
+//! → wine:0.12,3.4,-1.0\n     (routed to the tenant named `wine`)
+//! ← 0.873,0.0021\n
+//! → TENANTS\n
+//! ← wine:11 airfoil:5\n      (name:dim per hosted tenant)
 //! → STATS\n
 //! ← requests=… batches=…\n
 //! ```
 //!
 //! Each connection gets a handler thread; all handlers feed the shared
 //! [`DynamicBatcher`], so concurrent clients are served out of coalesced
-//! batched GP solves.
+//! batched GP solves — and in a multi-tenant deployment
+//! ([`multi_served_predictor`]), every tick answers all tenants through
+//! **one** `BatchOp` dispatch with per-tenant solve plans cached across
+//! predict calls.
 
-use crate::coordinator::batcher::{DynamicBatcher, PredictFn};
-use crate::gp::predict::{predict, Prediction};
-use crate::linalg::op::{plan, solve_strategy, solve_with, LinearOp, SolveOptions};
+use crate::coordinator::batcher::{DynamicBatcher, MultiPredictFn, PredictFn, TenantBatch};
+use crate::gp::predict::{predict_batch_op, predict_with_plan, PosteriorQuery, Prediction};
+use crate::linalg::op::{
+    solve_strategy, BatchOp, LinearOp, SolveOptions, SolvePlan, SolvePlanCache,
+};
 use crate::tensor::Mat;
+use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -79,19 +89,90 @@ pub trait ServableModel: Send + Sync {
 /// Wrap a servable model into the batcher's [`PredictFn`]: each coalesced
 /// batch becomes one cross-covariance build plus one dispatched solve —
 /// no model lock, since [`LinearOp`] solves are `&self`. The solve plan
-/// (Woodbury capacitance factor / pivoted-Cholesky preconditioner) is
-/// prepared **once** here, not per batch.
+/// (Woodbury capacitance factor / pivoted-Cholesky preconditioner) lives
+/// in a [`SolvePlanCache`]: prepared once, reused every batch, rebuilt
+/// only if the operator's content changes.
 pub fn served_predictor(model: Box<dyn ServableModel>, opts: SolveOptions) -> PredictFn {
-    let solve_plan = plan(model.op(), &opts);
+    served_predictor_cached(model, opts, Arc::new(SolvePlanCache::new()))
+}
+
+/// [`served_predictor`] with a caller-held plan cache (observable
+/// hit/miss/invalidation counters — the deployment's factorisation log).
+pub fn served_predictor_cached(
+    model: Box<dyn ServableModel>,
+    opts: SolveOptions,
+    cache: Arc<SolvePlanCache>,
+) -> PredictFn {
+    // the served model is moved into the closure with no mutation path,
+    // so its content fingerprint is computed once, not per tick
+    let fp = model.op().fingerprint();
     Box::new(move |xs: &Mat| -> Prediction {
         let k_star = model.cross(xs);
         let diag = model.prior_diag(xs);
-        predict(
-            &k_star,
-            &diag,
-            |m| solve_with(&solve_plan, model.op(), m, &opts),
-            model.y(),
-        )
+        let plan = cache.get_or_plan_with_fingerprint("default", fp, model.op(), &opts);
+        predict_with_plan(model.op(), &k_star, &diag, model.y(), &plan, &opts)
+    })
+}
+
+/// Host **many** tenants behind one predictor: each batching tick carries
+/// every tenant's coalesced RHS block, and this closure answers them all
+/// through a single [`predict_batch_op`] dispatch — same-shape tenants
+/// stack into one [`BatchOp`] (iterative ones then share one `mbcg_batch`
+/// iteration loop), per-tenant [`SolvePlan`]s come from `cache` keyed by
+/// tenant name, so factorisations/preconditioners persist across predict
+/// calls and rebuild only on hyperparameter change.
+pub fn multi_served_predictor(
+    models: Vec<(String, Box<dyn ServableModel>)>,
+    opts: SolveOptions,
+    cache: Arc<SolvePlanCache>,
+) -> MultiPredictFn {
+    // served models are moved into the closure with no mutation path, so
+    // per-tenant fingerprints are computed once, not per tick
+    let fps: Vec<u64> = models.iter().map(|(_, m)| m.op().fingerprint()).collect();
+    Box::new(move |blocks: &[TenantBatch]| -> Vec<Prediction> {
+        // per-block posterior pieces + cached plans
+        let mut kstars = Vec::with_capacity(blocks.len());
+        let mut diags = Vec::with_capacity(blocks.len());
+        let mut plans: Vec<Arc<SolvePlan>> = Vec::with_capacity(blocks.len());
+        for tb in blocks {
+            let (name, model) = &models[tb.tenant];
+            kstars.push(model.cross(&tb.xs));
+            diags.push(model.prior_diag(&tb.xs));
+            plans.push(cache.get_or_plan_with_fingerprint(
+                name,
+                fps[tb.tenant],
+                model.op(),
+                &opts,
+            ));
+        }
+        // same-n tenants batch into one BatchOp dispatch; distinct sizes
+        // run as their own (possibly singleton) batches
+        let mut by_n: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for (g, tb) in blocks.iter().enumerate() {
+            by_n.entry(models[tb.tenant].1.op().n()).or_default().push(g);
+        }
+        let mut out: Vec<Option<Prediction>> = (0..blocks.len()).map(|_| None).collect();
+        for idxs in by_n.values() {
+            let ops: Vec<&dyn LinearOp> =
+                idxs.iter().map(|&g| models[blocks[g].tenant].1.op()).collect();
+            let batch = BatchOp::new(ops);
+            let queries: Vec<PosteriorQuery<'_>> = idxs
+                .iter()
+                .map(|&g| PosteriorQuery {
+                    k_star: &kstars[g],
+                    k_star_diag: &diags[g],
+                    y: models[blocks[g].tenant].1.y(),
+                })
+                .collect();
+            let plan_refs: Vec<&SolvePlan> = idxs.iter().map(|&g| plans[g].as_ref()).collect();
+            let preds = predict_batch_op(&batch, &queries, &plan_refs, &opts);
+            for (&g, p) in idxs.iter().zip(preds) {
+                out[g] = Some(p);
+            }
+        }
+        out.into_iter()
+            .map(|p| p.expect("every block answered"))
+            .collect()
     })
 }
 
@@ -152,7 +233,8 @@ fn handle_conn(stream: TcpStream, batcher: Arc<DynamicBatcher>) {
     }
 }
 
-/// Pure request handler (unit-testable without sockets).
+/// Pure request handler (unit-testable without sockets). A `name:` prefix
+/// routes the request to that tenant; bare feature lines go to tenant 0.
 pub fn handle_line(line: &str, batcher: &DynamicBatcher) -> String {
     let line = line.trim();
     if line.is_empty() {
@@ -161,16 +243,35 @@ pub fn handle_line(line: &str, batcher: &DynamicBatcher) -> String {
     if line == "STATS" {
         return batcher.metrics.summary();
     }
+    if line == "TENANTS" {
+        return batcher
+            .tenants()
+            .iter()
+            .map(|t| format!("{}:{}", t.name, t.dim))
+            .collect::<Vec<_>>()
+            .join(" ");
+    }
     if line == "QUIT" {
         return "BYE".to_string();
     }
-    let parsed: Result<Vec<f64>, _> = line.split(',').map(|f| f.trim().parse::<f64>()).collect();
+    let (tenant, payload) = match line.split_once(':') {
+        Some((name, rest)) => match batcher.tenant_index(name.trim()) {
+            Some(t) => (t, rest),
+            None => {
+                batcher.metrics.record_error();
+                return format!("ERR unknown tenant {:?}", name.trim());
+            }
+        },
+        None => (0, line),
+    };
+    let parsed: Result<Vec<f64>, _> =
+        payload.split(',').map(|f| f.trim().parse::<f64>()).collect();
     match parsed {
         Err(e) => {
             batcher.metrics.record_error();
             format!("ERR parse: {e}")
         }
-        Ok(x) => match batcher.predict_one(x) {
+        Ok(x) => match batcher.predict_for(tenant, x) {
             Ok((mean, var)) => format!("{mean:.9},{var:.9}"),
             Err(e) => {
                 batcher.metrics.record_error();
@@ -210,6 +311,42 @@ mod tests {
         assert!(handle_line("a,b", &b).starts_with("ERR"));
         assert!(handle_line("1.0", &b).starts_with("ERR")); // wrong dim
         assert!(handle_line("STATS", &b).contains("requests="));
+    }
+
+    #[test]
+    fn tenant_prefixed_lines_route_and_list() {
+        use crate::coordinator::batcher::{MultiPredictFn, TenantBatch, TenantSpec};
+        let multi: MultiPredictFn = Box::new(|blocks: &[TenantBatch]| {
+            blocks
+                .iter()
+                .map(|tb| Prediction {
+                    mean: (0..tb.xs.rows())
+                        .map(|i| 100.0 * tb.tenant as f64 + tb.xs.row(i).iter().sum::<f64>())
+                        .collect(),
+                    var: vec![0.5; tb.xs.rows()],
+                })
+                .collect()
+        });
+        let b = DynamicBatcher::new_multi(
+            vec![
+                TenantSpec {
+                    name: "a".into(),
+                    dim: 1,
+                },
+                TenantSpec {
+                    name: "b".into(),
+                    dim: 2,
+                },
+            ],
+            BatchPolicy::default(),
+            multi,
+        );
+        assert!(handle_line("a: 2.0", &b).starts_with("2.0"));
+        assert!(handle_line("b: 1.0, 2.0", &b).starts_with("103.0"));
+        // bare lines route to tenant 0
+        assert!(handle_line("3.0", &b).starts_with("3.0"));
+        assert!(handle_line("zzz:1.0", &b).starts_with("ERR unknown tenant"));
+        assert_eq!(handle_line("TENANTS", &b), "a:1 b:2");
     }
 
     #[test]

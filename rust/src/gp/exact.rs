@@ -8,10 +8,10 @@
 //! the paper's "Exact" columns in Figures 2 and 3.
 
 use crate::gp::mll::{BbmmEngine, InferenceEngine, MllGrad};
-use crate::gp::predict::{predict, predict_op, Prediction};
+use crate::gp::predict::{predict, predict_with_plan, Prediction};
 use crate::kernels::{Kernel, KernelCov, KernelCovOp, ShardedCovOp};
 use crate::linalg::cholesky::Cholesky;
-use crate::linalg::op::{AddedDiagOp, LinearOp, SolveOptions};
+use crate::linalg::op::{AddedDiagOp, LinearOp, SolveOptions, SolvePlanCache};
 use crate::tensor::Mat;
 
 /// Which inference engine backs the model.
@@ -23,11 +23,15 @@ pub enum Engine {
 }
 
 /// Exact Gaussian-process regression model over a pluggable covariance
-/// backend.
+/// backend. Holds a [`SolvePlanCache`] handle so repeated predictions
+/// against fixed hyperparameters reuse one factorisation/preconditioner;
+/// a `set_params` call changes the operator's content fingerprint and the
+/// stale plan is rebuilt on the next predict automatically.
 pub struct ExactGp {
     op: AddedDiagOp<Box<dyn KernelCov>>,
     y: Vec<f64>,
     engine: Engine,
+    plans: SolvePlanCache,
 }
 
 impl ExactGp {
@@ -59,6 +63,7 @@ impl ExactGp {
             op: AddedDiagOp::new(cov, noise),
             y,
             engine,
+            plans: SolvePlanCache::new(),
         }
     }
 
@@ -80,6 +85,12 @@ impl ExactGp {
     /// Training targets.
     pub fn y(&self) -> &[f64] {
         &self.y
+    }
+
+    /// The model's solve-plan cache (hit/miss/invalidation counters are
+    /// observable for tests and serving logs).
+    pub fn plan_cache(&self) -> &SolvePlanCache {
+        &self.plans
     }
 
     /// Raw parameter vector `[kernel params…, log σ²]`.
@@ -125,17 +136,17 @@ impl ExactGp {
                     Cholesky::new_with_jitter(&self.op.dense()).expect("kernel matrix not PD");
                 predict(&k_star, &diag, |m| ch.solve_mat(m), &self.y)
             }
-            Engine::Bbmm(e) => predict_op(
-                &self.op,
-                &k_star,
-                &diag,
-                &self.y,
-                &SolveOptions {
+            Engine::Bbmm(e) => {
+                let opts = SolveOptions {
                     max_iters: e.max_cg_iters.max(50),
                     tol: 1e-8,
                     precond_rank: e.precond_rank,
-                },
-            ),
+                };
+                // plan looked up by content fingerprint: first predict
+                // builds the preconditioner, later predicts reuse it
+                let plan = self.plans.get_or_plan("exact-gp", &self.op, &opts);
+                predict_with_plan(&self.op, &k_star, &diag, &self.y, &plan, &opts)
+            }
         }
     }
 }
@@ -236,6 +247,31 @@ mod tests {
             assert!((pa.mean[i] - pb.mean[i]).abs() < 1e-8, "mean {i}");
             assert!((pa.var[i] - pb.var[i]).abs() < 1e-8, "var {i}");
         }
+    }
+
+    #[test]
+    fn predict_reuses_the_cached_plan_until_params_change() {
+        let (x, y, xt, _yt) = dataset(80, 5);
+        let mut gp = ExactGp::new(
+            x,
+            y,
+            Box::new(Rbf::new(0.5, 1.0)),
+            0.05,
+            Engine::Bbmm(BbmmEngine::default()),
+        );
+        let p1 = gp.predict(&xt);
+        let p2 = gp.predict(&xt);
+        assert_eq!(gp.plan_cache().misses(), 1);
+        assert_eq!(gp.plan_cache().hits(), 1);
+        for i in 0..xt.rows() {
+            assert_eq!(p1.mean[i], p2.mean[i], "cached plan must not change results");
+        }
+        // hyperparameter update → fingerprint changes → plan rebuilt once
+        let mut raw = gp.params();
+        raw[0] += 0.2;
+        gp.set_params(&raw);
+        let _ = gp.predict(&xt);
+        assert_eq!(gp.plan_cache().invalidations(), 1);
     }
 
     #[test]

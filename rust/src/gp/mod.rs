@@ -29,5 +29,5 @@ pub use exact::{Engine, ExactGp};
 pub use fitc::FitcOp;
 pub use mll::{BbmmEngine, CholeskyEngine, InferenceEngine, MllGrad};
 pub use multitask::MultitaskOp;
-pub use sgpr::{SgprCholeskyEngine, SgprOp};
+pub use sgpr::{SgprCholeskyEngine, SgprModel, SgprOp};
 pub use ski::SkiOp;

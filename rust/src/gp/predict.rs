@@ -11,7 +11,9 @@
 //! (direct Woodbury for SGPR-shaped compositions, dense Cholesky for
 //! explicit matrices, preconditioned mBCG otherwise).
 
-use crate::linalg::op::{solve, LinearOp, SolveOptions};
+use crate::linalg::op::{
+    plan, solve_batch, solve_with, BatchOp, LinearOp, SolveOptions, SolvePlan,
+};
 use crate::tensor::Mat;
 
 /// Posterior mean and (marginal) variance at test points.
@@ -22,24 +24,12 @@ pub struct Prediction {
     pub var: Vec<f64>,
 }
 
-/// Compute the predictive distribution.
-///
-/// * `k_star` — `n_test × n` cross-covariance `K(X*, X)`
-/// * `k_star_diag` — prior variances `k(x*, x*)` per test point
-/// * `solve` — applies `K̂⁻¹` to an `n×t` matrix
-/// * `y` — training targets
-pub fn predict(
-    k_star: &Mat,
-    k_star_diag: &[f64],
-    solve: impl Fn(&Mat) -> Mat,
-    y: &[f64],
-) -> Prediction {
+/// The shared RHS block `[y  K_X*ᵀ]`: one batched solve yields mean and
+/// variance together.
+fn posterior_rhs(k_star: &Mat, y: &[f64]) -> Mat {
     let n_test = k_star.rows();
     let n = k_star.cols();
     assert_eq!(y.len(), n);
-    assert_eq!(k_star_diag.len(), n_test);
-
-    // one batched solve for [y  K_X*ᵀ]: mean and variance share it
     let mut rhs = Mat::zeros(n, 1 + n_test);
     rhs.set_col(0, y);
     for j in 0..n_test {
@@ -47,8 +37,14 @@ pub fn predict(
             rhs.set(i, 1 + j, k_star.get(j, i));
         }
     }
-    let solved = solve(&rhs);
+    rhs
+}
 
+/// Assemble mean/variance from the solved `K̂⁻¹·[y K_X*ᵀ]` block.
+fn posterior_from_solves(k_star: &Mat, k_star_diag: &[f64], solved: &Mat) -> Prediction {
+    let n_test = k_star.rows();
+    let n = k_star.cols();
+    assert_eq!(k_star_diag.len(), n_test);
     let mut mean = vec![0.0; n_test];
     let mut var = vec![0.0; n_test];
     for j in 0..n_test {
@@ -65,11 +61,31 @@ pub fn predict(
     Prediction { mean, var }
 }
 
+/// Compute the predictive distribution.
+///
+/// * `k_star` — `n_test × n` cross-covariance `K(X*, X)`
+/// * `k_star_diag` — prior variances `k(x*, x*)` per test point
+/// * `solve` — applies `K̂⁻¹` to an `n×t` matrix
+/// * `y` — training targets
+pub fn predict(
+    k_star: &Mat,
+    k_star_diag: &[f64],
+    solve: impl Fn(&Mat) -> Mat,
+    y: &[f64],
+) -> Prediction {
+    let rhs = posterior_rhs(k_star, y);
+    let solved = solve(&rhs);
+    posterior_from_solves(k_star, k_star_diag, &solved)
+}
+
 /// Predictive distribution through the **generic solve path**: the
 /// training operator is any [`LinearOp`] composition, and the batched
 /// `K̂⁻¹·[y K_X*ᵀ]` solve is dispatched on its structure by
 /// [`crate::linalg::op::solve()`]. This is the single path exact, SGPR,
-/// SKI, and sharded models all predict through.
+/// SKI, and sharded models all predict through. Callers answering
+/// repeated queries against a fixed posterior should hold a plan
+/// ([`predict_with_plan`]) or a [`crate::linalg::op::SolvePlanCache`]
+/// instead of paying the factorisation per call.
 pub fn predict_op(
     op: &dyn LinearOp,
     k_star: &Mat,
@@ -77,7 +93,55 @@ pub fn predict_op(
     y: &[f64],
     opts: &SolveOptions,
 ) -> Prediction {
-    predict(k_star, k_star_diag, |m| solve(op, m, opts), y)
+    predict_with_plan(op, k_star, k_star_diag, y, &plan(op, opts), opts)
+}
+
+/// [`predict_op`] against a **prepared** [`SolvePlan`] — the per-request
+/// path of a serving loop: no factorisation, no preconditioner build, one
+/// dispatched solve.
+pub fn predict_with_plan(
+    op: &dyn LinearOp,
+    k_star: &Mat,
+    k_star_diag: &[f64],
+    y: &[f64],
+    plan: &SolvePlan,
+    opts: &SolveOptions,
+) -> Prediction {
+    predict(k_star, k_star_diag, |m| solve_with(plan, op, m, opts), y)
+}
+
+/// One posterior query against one batch element: the cross-covariance
+/// block, prior variances, and targets of the posterior it addresses.
+pub struct PosteriorQuery<'a> {
+    /// `n_q × n` cross-covariance `K(X*, X)` for this element's posterior
+    pub k_star: &'a Mat,
+    /// prior variances `k(x*, x*)` per query point
+    pub k_star_diag: &'a [f64],
+    /// this element's training targets
+    pub y: &'a [f64],
+}
+
+/// **Batched posterior answering** — many test blocks against many
+/// posteriors in one dispatcher call: query `i` is answered by batch
+/// element `i` under its prepared plan. Direct-structure posteriors solve
+/// immediately; all iterative ones share a single `mbcg_batch` loop (per-
+/// system early stopping included), which is what lets a multi-tenant
+/// serving tick answer every tenant with one solve call.
+pub fn predict_batch_op(
+    batch: &BatchOp<'_>,
+    queries: &[PosteriorQuery<'_>],
+    plans: &[&SolvePlan],
+    opts: &SolveOptions,
+) -> Vec<Prediction> {
+    assert_eq!(queries.len(), batch.len(), "predict_batch_op: query count mismatch");
+    let rhs: Vec<Mat> = queries.iter().map(|q| posterior_rhs(q.k_star, q.y)).collect();
+    let rhs_refs: Vec<&Mat> = rhs.iter().collect();
+    let solved = solve_batch(batch, plans, &rhs_refs, opts);
+    queries
+        .iter()
+        .zip(solved)
+        .map(|(q, s)| posterior_from_solves(q.k_star, q.k_star_diag, &s))
+        .collect()
 }
 
 /// Mean-only prediction (one solve total, reused across all test points).
@@ -184,5 +248,60 @@ mod tests {
     fn metrics() {
         assert_eq!(mae(&[1.0, 2.0], &[2.0, 0.0]), 1.5);
         assert!((rmse(&[1.0, 2.0], &[2.0, 0.0]) - (2.5f64).sqrt()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn predict_batch_op_matches_per_posterior_predict_op() {
+        use crate::linalg::op::{plan_batch, BatchOp, LinearOp, SolveOptions};
+        let n = 40;
+        let mut rng = Rng::new(9);
+        let mut ops = Vec::new();
+        let mut ys = Vec::new();
+        for seed in 0..3u64 {
+            let x = Mat::from_fn(n, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+            let y: Vec<f64> = (0..n).map(|i| (2.0 * x.get(i, 0)).sin()).collect();
+            ops.push(DenseKernelOp::new(
+                x,
+                Box::new(Rbf::new(0.4 + 0.1 * seed as f64, 1.0)),
+                0.05 + 0.02 * seed as f64,
+            ));
+            ys.push(y);
+        }
+        let xs = Mat::from_fn(7, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+        let kstars: Vec<Mat> = ops.iter().map(|op| op.cross(&xs, op.x())).collect();
+        let diags: Vec<Vec<f64>> = ops
+            .iter()
+            .map(|op| (0..7).map(|i| op.kernel().eval(xs.row(i), xs.row(i))).collect())
+            .collect();
+        let opts = SolveOptions {
+            max_iters: 200,
+            tol: 1e-12,
+            precond_rank: 5,
+        };
+        let els: Vec<&dyn LinearOp> = ops.iter().map(|o| o as &dyn LinearOp).collect();
+        let batch = BatchOp::new(els);
+        let plans = plan_batch(&batch, &opts);
+        let plan_refs: Vec<&crate::linalg::op::SolvePlan> = plans.iter().collect();
+        let queries: Vec<PosteriorQuery> = (0..3)
+            .map(|k| PosteriorQuery {
+                k_star: &kstars[k],
+                k_star_diag: &diags[k],
+                y: &ys[k],
+            })
+            .collect();
+        let batched = predict_batch_op(&batch, &queries, &plan_refs, &opts);
+        for k in 0..3 {
+            let single = predict_op(&ops[k], &kstars[k], &diags[k], &ys[k], &opts);
+            for j in 0..7 {
+                assert!(
+                    (batched[k].mean[j] - single.mean[j]).abs() < 1e-8,
+                    "posterior {k} mean {j}"
+                );
+                assert!(
+                    (batched[k].var[j] - single.var[j]).abs() < 1e-8,
+                    "posterior {k} var {j}"
+                );
+            }
+        }
     }
 }

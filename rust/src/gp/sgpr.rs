@@ -14,9 +14,10 @@
 //! back to the dense Cholesky engine for non-SGPR operators instead of
 //! panicking).
 
+use crate::gp::predict::{predict_with_plan, Prediction};
 use crate::kernels::Kernel;
 use crate::linalg::cholesky::Cholesky;
-use crate::linalg::op::{AddedDiagOp, LinearOp, LowRankOp};
+use crate::linalg::op::{AddedDiagOp, LinearOp, LowRankOp, SolveOptions, SolvePlanCache};
 use crate::tensor::Mat;
 
 /// SoR kernel operator with inducing points `U (m×d)` — a named wrapper
@@ -139,6 +140,61 @@ impl SgprOp {
     }
 }
 
+/// SGPR as a *predicting model*: the operator plus targets plus a cached
+/// solve plan. The Woodbury capacitance factorisation is built on the
+/// first predict and reused across calls; a hyperparameter update changes
+/// the operator's content fingerprint, so the next predict rebuilds the
+/// plan exactly once ([`SolvePlanCache`] invalidation).
+pub struct SgprModel {
+    op: SgprOp,
+    y: Vec<f64>,
+    plans: SolvePlanCache,
+}
+
+impl SgprModel {
+    /// Tie an SGPR operator to its training targets.
+    pub fn new(op: SgprOp, y: Vec<f64>) -> Self {
+        assert_eq!(op.n(), y.len());
+        SgprModel {
+            op,
+            y,
+            plans: SolvePlanCache::new(),
+        }
+    }
+
+    /// The underlying operator composition.
+    pub fn op(&self) -> &SgprOp {
+        &self.op
+    }
+
+    /// Training targets.
+    pub fn y(&self) -> &[f64] {
+        &self.y
+    }
+
+    /// The model's solve-plan cache (observable counters).
+    pub fn plan_cache(&self) -> &SolvePlanCache {
+        &self.plans
+    }
+
+    /// Overwrite raw parameters (the cached plan self-invalidates through
+    /// the operator fingerprint on the next predict).
+    pub fn set_params(&mut self, raw: &[f64]) {
+        self.op.set_params(raw);
+    }
+
+    /// Predictive mean+variance at test inputs, through the cached plan
+    /// (direct Woodbury for the SGPR composition — no CG at all).
+    pub fn predict(&self, xs: &Mat, opts: &SolveOptions) -> Prediction {
+        let k_star = self.op.cross_sor(xs);
+        let diag: Vec<f64> = (0..xs.rows())
+            .map(|i| self.op.kernel().eval(xs.row(i), xs.row(i)))
+            .collect();
+        let plan = self.plans.get_or_plan("sgpr", &self.op, opts);
+        predict_with_plan(&self.op, &k_star, &diag, &self.y, &plan, opts)
+    }
+}
+
 impl LinearOp for SgprOp {
     crate::linear_op_delegate!(op);
 
@@ -253,6 +309,39 @@ mod tests {
                 analytic.max_abs_diff(&fd)
             );
         }
+    }
+
+    #[test]
+    fn sgpr_model_caches_the_woodbury_plan_across_predicts() {
+        use crate::linalg::op::SolveOptions;
+        let op = setup(80, 10, 11);
+        let mut rng = Rng::new(12);
+        let y: Vec<f64> = (0..80).map(|_| rng.normal()).collect();
+        let mut model = SgprModel::new(op, y.clone());
+        let xs = Mat::from_fn(9, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+        let opts = SolveOptions::default();
+        let p1 = model.predict(&xs, &opts);
+        let p2 = model.predict(&xs, &opts);
+        assert_eq!(model.plan_cache().misses(), 1);
+        assert_eq!(model.plan_cache().hits(), 1);
+        // reference: dense Cholesky posterior through the same rhs math
+        let kd = model.op().dense();
+        let ch = Cholesky::new_with_jitter(&kd).unwrap();
+        let k_star = model.op().cross_sor(&xs);
+        let diag: Vec<f64> = (0..9)
+            .map(|i| model.op().kernel().eval(xs.row(i), xs.row(i)))
+            .collect();
+        let want = crate::gp::predict::predict(&k_star, &diag, |m| ch.solve_mat(m), &y);
+        for j in 0..9 {
+            assert!((p1.mean[j] - want.mean[j]).abs() < 1e-7, "mean {j}");
+            assert_eq!(p1.mean[j], p2.mean[j]);
+        }
+        // hyperparameter change invalidates exactly once
+        let mut raw = model.op().params();
+        raw[0] += 0.25;
+        model.set_params(&raw);
+        let _ = model.predict(&xs, &opts);
+        assert_eq!(model.plan_cache().invalidations(), 1);
     }
 
     #[test]

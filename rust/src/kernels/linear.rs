@@ -7,7 +7,7 @@
 //! noise ride on generic composition wrappers. The only model-specific
 //! code left is the 2-parameter gradient layout below.
 
-use crate::linalg::op::{AddedDiagOp, LinearOp, LowRankOp, ScaledOp};
+use crate::linalg::op::{AddedDiagOp, LinearOp, LowRankOp, ParamOutOfRange, ScaledOp};
 use crate::tensor::Mat;
 
 /// Linear-kernel operator (`v = exp(raw_var)` is the weight-space prior
@@ -57,6 +57,23 @@ impl LinearKernelOp {
     pub fn cov(&self) -> &ScaledOp<LowRankOp> {
         self.op.inner()
     }
+
+    /// Non-panicking gradient accessor: an out-of-range raw-parameter
+    /// index is a proper [`ParamOutOfRange`] error instead of a process
+    /// abort (the panicking [`LinearOp::dmatmul`] below routes through
+    /// this and fails with the crate-standard message).
+    pub fn try_dmatmul(&self, param: usize, m: &Mat) -> Result<Mat, ParamOutOfRange> {
+        match param {
+            // d(e^raw·XXᵀ)/draw = v·XXᵀ — exactly the scaled inner matmul
+            0 => Ok(self.op.inner().matmul(m)),
+            1 => {
+                let mut out = m.clone();
+                out.scale_assign(self.noise());
+                Ok(out)
+            }
+            _ => Err(ParamOutOfRange { n_params: 2, param }),
+        }
+    }
 }
 
 impl LinearOp for LinearKernelOp {
@@ -67,16 +84,8 @@ impl LinearOp for LinearKernelOp {
     }
 
     fn dmatmul(&self, param: usize, m: &Mat) -> Mat {
-        match param {
-            // d(e^raw·XXᵀ)/draw = v·XXᵀ — exactly the scaled inner matmul
-            0 => self.op.inner().matmul(m),
-            1 => {
-                let mut out = m.clone();
-                out.scale_assign(self.noise());
-                out
-            }
-            _ => panic!("linear kernel has 2 params"),
-        }
+        self.try_dmatmul(param, m)
+            .unwrap_or_else(|e| panic!("LinearKernelOp::dmatmul: {e}"))
     }
 }
 
@@ -153,6 +162,33 @@ mod tests {
             .sum::<f64>()
             / n as f64;
         assert!(mae < 0.05, "mae={mae}");
+    }
+
+    #[test]
+    fn out_of_range_param_is_a_proper_error() {
+        let mut rng = Rng::new(5);
+        let x = Mat::from_fn(10, 2, |_, _| rng.normal());
+        let op = LinearKernelOp::new(x, 0.5, 0.1);
+        let m = Mat::from_fn(10, 2, |_, _| rng.normal());
+        // in-range accessors agree with the panicking trait surface
+        for p in 0..2 {
+            let a = op.try_dmatmul(p, &m).unwrap();
+            let b = op.dmatmul(p, &m);
+            assert!(a.max_abs_diff(&b) == 0.0, "param {p}");
+        }
+        let err = op.try_dmatmul(2, &m).unwrap_err();
+        assert_eq!(err, crate::linalg::op::ParamOutOfRange { n_params: 2, param: 2 });
+        assert_eq!(format!("{err}"), "operator has 2 parameters, asked for 2");
+    }
+
+    #[test]
+    #[should_panic(expected = "operator has 2 parameters, asked for 5")]
+    fn dmatmul_out_of_range_panics_with_standard_message() {
+        let mut rng = Rng::new(6);
+        let x = Mat::from_fn(8, 2, |_, _| rng.normal());
+        let op = LinearKernelOp::new(x, 0.5, 0.1);
+        let m = Mat::from_fn(8, 1, |_, _| rng.normal());
+        let _ = op.dmatmul(5, &m);
     }
 
     #[test]

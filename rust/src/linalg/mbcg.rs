@@ -77,12 +77,144 @@ pub struct MbcgResult<T: Scalar = f64> {
     pub solves: Mat<T>,
     /// Lanczos tridiagonal matrices for columns `n_solve_only..`, in order
     pub tridiags: Vec<TriDiag>,
-    /// iterations performed (same for the whole batch)
+    /// iterations performed (shared by all columns of this system; in
+    /// [`mbcg_batch`] each system reports its own count)
     pub iterations: usize,
     /// per-column relative residual at exit
     pub final_residuals: Vec<f64>,
     /// mean relative residual after each iteration (diagnostics / Fig. 4)
     pub residual_history: Vec<f64>,
+}
+
+/// Per-RHS-block CG state machine — the shared core of [`mbcg`] (one
+/// system) and [`mbcg_batch`] (b systems through one iteration loop).
+/// Holds solutions, residuals, search directions, and the per-column α/β
+/// streams the Lanczos tridiagonals are recovered from; converged columns
+/// freeze exactly as in Algorithm 2.
+struct CgSystem<T: Scalar> {
+    u: Mat<T>,
+    r: Mat<T>,
+    d: Mat<T>,
+    bnorms: Vec<f64>,
+    rz_old: Vec<f64>,
+    alphas: Vec<Vec<f64>>,
+    betas: Vec<Vec<f64>>,
+    converged: Vec<bool>,
+    final_res: Vec<f64>,
+    history: Vec<f64>,
+    iterations: usize,
+}
+
+impl<T: Scalar> CgSystem<T> {
+    /// Initialise from the RHS block and its preconditioned copy
+    /// `z0 = P̂⁻¹·b` (residual of the zero initial guess).
+    fn new(b: &Mat<T>, z0: Mat<T>) -> Self {
+        let s = b.cols();
+        let bnorms: Vec<f64> = (0..s).map(|c| col_norm(b, c).max(1e-300)).collect();
+        let r = b.clone();
+        let rz_old: Vec<f64> = (0..s).map(|c| col_dot(&r, &z0, c)).collect();
+        let d = z0; // the initial search direction IS z₀ — no copy needed
+        let mut converged = vec![false; s];
+        // all-converged fast path for zero RHS
+        for c in 0..s {
+            if col_norm(b, c) == 0.0 {
+                converged[c] = true;
+            }
+        }
+        CgSystem {
+            u: Mat::<T>::zeros(b.rows(), s),
+            r,
+            d,
+            bnorms,
+            rz_old,
+            alphas: vec![Vec::new(); s],
+            betas: vec![Vec::new(); s],
+            converged,
+            final_res: vec![0.0f64; s],
+            history: Vec::new(),
+            iterations: 0,
+        }
+    }
+
+    /// True once every column has converged (the system is frozen).
+    fn done(&self) -> bool {
+        self.converged.iter().all(|&c| c)
+    }
+
+    /// α-step: absorb the operator product `v = A·d` — update solutions,
+    /// residuals, per-column convergence, and the residual history.
+    fn absorb_product(&mut self, v: &Mat<T>, tol: f64) {
+        let n = self.u.rows();
+        let s = self.u.cols();
+        self.iterations += 1;
+        let mut mean_res = 0.0;
+        for c in 0..s {
+            if self.converged[c] {
+                mean_res += self.final_res[c];
+                continue;
+            }
+            let dv = col_dot(&self.d, v, c);
+            if dv.abs() < 1e-300 || !dv.is_finite() {
+                self.converged[c] = true;
+                continue;
+            }
+            let alpha = self.rz_old[c] / dv;
+            self.alphas[c].push(alpha);
+            // u_c += α d_c ; r_c -= α v_c
+            for i in 0..n {
+                let uval = self.u.get(i, c).to_f64() + alpha * self.d.get(i, c).to_f64();
+                self.u.set(i, c, T::from_f64(uval));
+                let rval = self.r.get(i, c).to_f64() - alpha * v.get(i, c).to_f64();
+                self.r.set(i, c, T::from_f64(rval));
+            }
+            let rel = col_norm(&self.r, c) / self.bnorms[c];
+            self.final_res[c] = rel;
+            mean_res += rel;
+            if rel < tol {
+                self.converged[c] = true;
+            }
+        }
+        self.history.push(mean_res / s as f64);
+    }
+
+    /// β-step: refresh search directions from the freshly preconditioned
+    /// residuals `z = P̂⁻¹·r`.
+    fn refresh_directions(&mut self, z: &Mat<T>) {
+        let n = self.u.rows();
+        let s = self.u.cols();
+        for c in 0..s {
+            if self.converged[c] {
+                continue;
+            }
+            let rz_new = col_dot(&self.r, z, c);
+            let beta = rz_new / self.rz_old[c];
+            self.betas[c].push(beta);
+            self.rz_old[c] = rz_new;
+            // d_c = z_c + β d_c
+            for i in 0..n {
+                let dval = z.get(i, c).to_f64() + beta * self.d.get(i, c).to_f64();
+                self.d.set(i, c, T::from_f64(dval));
+            }
+        }
+    }
+
+    /// Finish: recover tridiagonal matrices from the CG coefficients
+    /// (Obs. 3) for columns `n_solve_only..` and package the result.
+    fn into_result(self, n_solve_only: usize) -> MbcgResult<T> {
+        let s = self.u.cols();
+        let skip = n_solve_only.min(s);
+        let mut tridiags = Vec::with_capacity(s - skip);
+        for c in skip..s {
+            tridiags.push(tridiag_from_coeffs(&self.alphas[c], &self.betas[c]));
+        }
+        MbcgResult {
+            solves: self.u,
+            tridiags,
+            iterations: self.iterations,
+            final_residuals: self.final_res,
+            residual_history: self.history,
+        }
+    }
 }
 
 /// Modified batched preconditioned CG (Algorithm 2).
@@ -101,100 +233,81 @@ pub fn mbcg<T: Scalar>(
     precond: impl Fn(&Mat<T>) -> Mat<T>,
     opts: &MbcgOptions,
 ) -> MbcgResult<T> {
-    let n = b.rows();
-    let s = b.cols();
-    assert!(opts.n_solve_only <= s);
-
-    let bnorms: Vec<f64> = (0..s).map(|c| col_norm(b, c).max(1e-300)).collect();
-
-    let mut u = Mat::<T>::zeros(n, s); // current solutions
-    let mut r = b.clone(); // residuals (b - A·0)
-    let mut z = precond(&r); // preconditioned residuals
-    let mut d = z.clone(); // search directions
-
-    // per-column scalar state, kept in f64 for the tridiagonal recovery
-    let mut rz_old: Vec<f64> = (0..s).map(|c| col_dot(&r, &z, c)).collect();
-    let mut alphas: Vec<Vec<f64>> = vec![Vec::new(); s];
-    let mut betas: Vec<Vec<f64>> = vec![Vec::new(); s];
-    let mut converged = vec![false; s];
-    let mut final_res = vec![0.0f64; s];
-    let mut history = Vec::new();
-
-    // all-converged fast path for zero RHS
-    for c in 0..s {
-        if col_norm(b, c) == 0.0 {
-            converged[c] = true;
-        }
-    }
-
-    let mut iters = 0;
+    assert!(opts.n_solve_only <= b.cols());
+    let mut sys = CgSystem::new(b, precond(b));
     for _ in 0..opts.max_iters {
-        if converged.iter().all(|&c| c) {
+        if sys.done() {
             break;
         }
-        let v = mmm_a(&d);
-        iters += 1;
-        let mut mean_res = 0.0;
-        for c in 0..s {
-            if converged[c] {
-                mean_res += final_res[c];
-                continue;
-            }
-            let dv = col_dot(&d, &v, c);
-            if dv.abs() < 1e-300 || !dv.is_finite() {
-                converged[c] = true;
-                continue;
-            }
-            let alpha = rz_old[c] / dv;
-            alphas[c].push(alpha);
-            // u_c += α d_c ; r_c -= α v_c
-            for i in 0..n {
-                let uval = u.get(i, c).to_f64() + alpha * d.get(i, c).to_f64();
-                u.set(i, c, T::from_f64(uval));
-                let rval = r.get(i, c).to_f64() - alpha * v.get(i, c).to_f64();
-                r.set(i, c, T::from_f64(rval));
-            }
-            let rel = col_norm(&r, c) / bnorms[c];
-            final_res[c] = rel;
-            mean_res += rel;
-            if rel < opts.tol {
-                converged[c] = true;
-            }
-        }
-        history.push(mean_res / s as f64);
-        if converged.iter().all(|&c| c) {
+        let v = mmm_a(&sys.d);
+        sys.absorb_product(&v, opts.tol);
+        if sys.done() {
             break;
         }
-        z = precond(&r);
-        for c in 0..s {
-            if converged[c] {
-                continue;
-            }
-            let rz_new = col_dot(&r, &z, c);
-            let beta = rz_new / rz_old[c];
-            betas[c].push(beta);
-            rz_old[c] = rz_new;
-            // d_c = z_c + β d_c
-            for i in 0..n {
-                let dval = z.get(i, c).to_f64() + beta * d.get(i, c).to_f64();
-                d.set(i, c, T::from_f64(dval));
+        let z = precond(&sys.r);
+        sys.refresh_directions(&z);
+    }
+    sys.into_result(opts.n_solve_only)
+}
+
+/// **Batched mBCG across operators**: run `b` independent systems
+/// `Aᵢ·Xᵢ = Bᵢ` — one per [`crate::linalg::op::BatchOp`] element — through
+/// **one** iteration loop. Every iteration performs a single batched
+/// operator product over the still-active systems (on the shared-
+/// covariance fast path that is one fused `K·[D₁ … D_k]`), then each
+/// system runs its own α/β and tridiagonal bookkeeping.
+///
+/// **Per-system early stopping**: a system whose columns have all
+/// converged freezes — it drops out of the batched product instead of
+/// iterating to the global cap, so its `iterations` count (and α/β
+/// streams) match a standalone [`mbcg`] run exactly.
+///
+/// `opts.n_solve_only` is clamped per system to its column count, so
+/// `usize::MAX` means "solves only, no tridiagonals anywhere".
+pub fn mbcg_batch(
+    batch: &crate::linalg::op::BatchOp<'_>,
+    bs: &[&Mat],
+    preconds: &[&dyn crate::linalg::preconditioner::Preconditioner],
+    opts: &MbcgOptions,
+) -> Vec<MbcgResult> {
+    let b = batch.len();
+    assert_eq!(bs.len(), b, "mbcg_batch: RHS count mismatch");
+    assert_eq!(preconds.len(), b, "mbcg_batch: preconditioner count mismatch");
+    let n = batch.n();
+    let mut systems: Vec<CgSystem<f64>> = bs
+        .iter()
+        .zip(preconds)
+        .map(|(&rhs, pre)| {
+            assert_eq!(rhs.rows(), n, "mbcg_batch: RHS row mismatch");
+            CgSystem::new(rhs, pre.solve_mat(rhs))
+        })
+        .collect();
+    loop {
+        let active: Vec<usize> = systems
+            .iter()
+            .enumerate()
+            .filter(|(_, sys)| !sys.done() && sys.iterations < opts.max_iters)
+            .map(|(i, _)| i)
+            .collect();
+        if active.is_empty() {
+            break;
+        }
+        let ds: Vec<&Mat> = active.iter().map(|&i| &systems[i].d).collect();
+        let vs = batch.matmul_subset(&active, &ds);
+        drop(ds);
+        for (k, &i) in active.iter().enumerate() {
+            let sys = &mut systems[i];
+            sys.absorb_product(&vs[k], opts.tol);
+            if !sys.done() {
+                let z = preconds[i].solve_mat(&sys.r);
+                sys.refresh_directions(&z);
             }
         }
     }
-
-    // Recover tridiagonal matrices from the CG coefficients (Obs. 3).
-    let mut tridiags = Vec::with_capacity(s.saturating_sub(opts.n_solve_only));
-    for c in opts.n_solve_only..s {
-        tridiags.push(tridiag_from_coeffs(&alphas[c], &betas[c]));
-    }
-
-    MbcgResult {
-        solves: u,
-        tridiags,
-        iterations: iters,
-        final_residuals: final_res,
-        residual_history: history,
-    }
+    systems
+        .into_iter()
+        .map(|sys| sys.into_result(opts.n_solve_only))
+        .collect()
 }
 
 /// [`mbcg`] over a composed [`crate::linalg::op::LinearOp`] — the entry
@@ -622,6 +735,111 @@ mod tests {
         assert_eq!(shrd.tridiags.len(), mono.tridiags.len());
         let want = Cholesky::new(&a).unwrap().solve_mat(&b);
         assert!(shrd.solves.max_abs_diff(&want) < 1e-7);
+    }
+
+    #[test]
+    fn mbcg_batch_matches_standalone_mbcg_per_system() {
+        use crate::linalg::op::{BatchOp, DenseOp, LinearOp};
+        use crate::linalg::preconditioner::{IdentityPrecond, Preconditioner};
+        let n = 45;
+        let ops: Vec<DenseOp> = (0..4).map(|k| DenseOp::new(spd(n, 30 + k))).collect();
+        let els: Vec<&dyn LinearOp> = ops.iter().map(|o| o as &dyn LinearOp).collect();
+        let batch = BatchOp::new(els);
+        let mut rng = Rng::new(40);
+        let bs: Vec<Mat> = (0..4)
+            .map(|k| Mat::from_fn(n, 1 + k % 3, |_, _| rng.normal()))
+            .collect();
+        let b_refs: Vec<&Mat> = bs.iter().collect();
+        let id = IdentityPrecond;
+        let preconds: Vec<&dyn Preconditioner> = (0..4).map(|_| &id as &dyn Preconditioner).collect();
+        let opts = MbcgOptions {
+            max_iters: n,
+            tol: 1e-11,
+            n_solve_only: 0,
+        };
+        let batched = mbcg_batch(&batch, &b_refs, &preconds, &opts);
+        for (k, res) in batched.iter().enumerate() {
+            let mono = mbcg(|m| ops[k].matmul(m), &bs[k], |m| m.clone(), &opts);
+            // same operator product order per column ⇒ bitwise-equal runs
+            assert_eq!(res.iterations, mono.iterations, "system {k}");
+            assert!(res.solves.max_abs_diff(&mono.solves) < 1e-12, "system {k}");
+            assert_eq!(res.tridiags.len(), mono.tridiags.len());
+            for (a, b) in res.tridiags.iter().zip(mono.tridiags.iter()) {
+                assert_eq!(a.n(), b.n());
+            }
+        }
+    }
+
+    #[test]
+    fn mbcg_batch_per_system_early_stopping_freezes_easy_systems() {
+        use crate::linalg::op::{BatchOp, DenseOp, LinearOp};
+        use crate::linalg::preconditioner::{IdentityPrecond, Preconditioner};
+        let n = 60;
+        // well-conditioned system (heavy diagonal) vs ill-conditioned one
+        let mut easy = spd(n, 50);
+        easy.add_diag(n as f64 * 50.0);
+        let mut rng = Rng::new(51);
+        let xs: Vec<f64> = (0..n).map(|_| rng.uniform()).collect();
+        let mut hard = Mat::from_fn(n, n, |i, j| {
+            let d = xs[i] - xs[j];
+            (-d * d / 0.5).exp()
+        });
+        hard.add_diag(1e-4);
+        let easy_op = DenseOp::new(easy);
+        let hard_op = DenseOp::new(hard);
+        let batch = BatchOp::new(vec![&easy_op as &dyn LinearOp, &hard_op as &dyn LinearOp]);
+        let b1 = Mat::from_fn(n, 2, |_, _| rng.normal());
+        let b2 = Mat::from_fn(n, 2, |_, _| rng.normal());
+        let id = IdentityPrecond;
+        let preconds: Vec<&dyn Preconditioner> = vec![&id, &id];
+        let opts = MbcgOptions {
+            max_iters: 2 * n,
+            tol: 1e-10,
+            n_solve_only: usize::MAX,
+        };
+        let res = mbcg_batch(&batch, &[&b1, &b2], &preconds, &opts);
+        assert!(
+            res[0].iterations < res[1].iterations,
+            "easy system must freeze early: {} vs {}",
+            res[0].iterations,
+            res[1].iterations
+        );
+        assert!(res[0].final_residuals.iter().all(|&r| r < 1e-10));
+        assert!(res[0].tridiags.is_empty(), "n_solve_only=MAX skips tridiags");
+    }
+
+    #[test]
+    fn mbcg_batch_shared_fast_path_matches_general() {
+        use crate::linalg::op::{AddedDiagOp, BatchOp, DenseOp, LinearOp};
+        use crate::linalg::preconditioner::{IdentityPrecond, Preconditioner};
+        let n = 35;
+        let k = spd(n, 60);
+        let cov = DenseOp::new(k);
+        let sigma2s = vec![0.3, 0.9, 2.5, 0.05];
+        let shared = BatchOp::shared(&cov, sigma2s.clone());
+        let composed: Vec<AddedDiagOp<&DenseOp>> = sigma2s
+            .iter()
+            .map(|&s| AddedDiagOp::new(&cov, s))
+            .collect();
+        let els: Vec<&dyn LinearOp> = composed.iter().map(|o| o as &dyn LinearOp).collect();
+        let general = BatchOp::new(els);
+        assert!(!general.is_shared(), "distinct wrappers defeat ptr detection");
+        let mut rng = Rng::new(61);
+        let bs: Vec<Mat> = (0..4).map(|_| Mat::from_fn(n, 2, |_, _| rng.normal())).collect();
+        let b_refs: Vec<&Mat> = bs.iter().collect();
+        let id = IdentityPrecond;
+        let preconds: Vec<&dyn Preconditioner> = (0..4).map(|_| &id as &dyn Preconditioner).collect();
+        let opts = MbcgOptions {
+            max_iters: n,
+            tol: 1e-11,
+            n_solve_only: usize::MAX,
+        };
+        let fast = mbcg_batch(&shared, &b_refs, &preconds, &opts);
+        let slow = mbcg_batch(&general, &b_refs, &preconds, &opts);
+        for i in 0..4 {
+            assert_eq!(fast[i].iterations, slow[i].iterations, "system {i}");
+            assert!(fast[i].solves.max_abs_diff(&slow[i].solves) < 1e-12, "system {i}");
+        }
     }
 
     #[test]

@@ -37,8 +37,8 @@ pub use cg::{pcg, PcgResult};
 pub use cholesky::Cholesky;
 pub use kronecker::{kron_dense, kron_matmul, kron_matvec};
 pub use lanczos::lanczos_tridiag;
-pub use mbcg::{mbcg, mbcg_op, MbcgOptions, MbcgResult, TriDiag};
-pub use op::{LinearOp, SolveHint, SolveOptions};
+pub use mbcg::{mbcg, mbcg_batch, mbcg_op, MbcgOptions, MbcgResult, TriDiag};
+pub use op::{BatchOp, LinearOp, SolveHint, SolveOptions, SolvePlanCache};
 pub use pivoted_cholesky::{pivoted_cholesky, pivoted_cholesky_op, PivotedCholesky};
 pub use preconditioner::{IdentityPrecond, PartialCholPrecond, Preconditioner};
 pub use toeplitz::ToeplitzOp;

@@ -1,0 +1,387 @@
+//! **`BatchOp`** — a batch axis for the operator algebra: a stack of
+//! same-shape [`LinearOp`]s treated as one block-diagonal system, so b
+//! independent solves run through **one** iteration loop (`mbcg_batch`)
+//! and, in serving, one dispatcher call per tick answers every tenant.
+//!
+//! The structure-aware fast path is the paper's batching argument applied
+//! across *operators* instead of right-hand sides: when every element is
+//! `K + σᵢ²I` over a **shared** covariance `K` (hyperparameter sweeps, a
+//! fleet of per-tenant noise levels over one dataset), the per-iteration
+//! work for the whole batch is a single `K·[D₁ … D_b]` product — the
+//! expensive kernel-row generation is paid once, not b times — plus one
+//! cheap per-element `σᵢ²·Dᵢ` axpy. General batches (different operators
+//! per element, as in multi-tenant serving) apply elementwise.
+//!
+//! Composition lifts ([`lift_sum`], [`lift_scaled`], [`lift_low_rank`],
+//! [`lift_added_diag`]) build element vectors from the existing algebra so
+//! a batch of composed models is written the same way a single one is.
+
+use super::{AddedDiagOp, LinearOp, LowRankOp, ScaledOp, SumOp};
+use crate::tensor::Mat;
+
+/// Thin-pointer identity of a trait object (ignores the vtable, which can
+/// legitimately differ across codegen units for the same value).
+fn data_ptr(op: &dyn LinearOp) -> *const () {
+    op as *const dyn LinearOp as *const ()
+}
+
+enum Repr<'a> {
+    /// arbitrary same-shape operators, applied elementwise
+    General(Vec<&'a dyn LinearOp>),
+    /// every element is `cov + σᵢ²I` over one shared covariance
+    Shared {
+        cov: &'a dyn LinearOp,
+        sigma2s: Vec<f64>,
+    },
+}
+
+/// A stack of `b` same-shape [`LinearOp`]s with batched products — see the
+/// module docs for the shared-covariance fast path.
+pub struct BatchOp<'a> {
+    repr: Repr<'a>,
+}
+
+impl<'a> BatchOp<'a> {
+    /// Stack same-shape operators. If every element exposes a
+    /// [`LinearOp::noise_split`] over the **same** inner operator (pointer
+    /// identity), the shared fast path is engaged automatically; callers
+    /// that construct per-batch `AddedDiagOp` wrappers around one
+    /// covariance should use [`BatchOp::shared`] directly, since each
+    /// wrapper borrows the covariance through its own field and pointer
+    /// detection cannot see through that.
+    pub fn new(elements: Vec<&'a dyn LinearOp>) -> Self {
+        assert!(!elements.is_empty(), "BatchOp: empty batch");
+        let shape = elements[0].shape();
+        for &e in &elements {
+            assert_eq!(e.shape(), shape, "BatchOp: shape mismatch");
+        }
+        // opportunistic shared-covariance detection
+        let mut sigma2s = Vec::with_capacity(elements.len());
+        let mut cov: Option<&'a dyn LinearOp> = None;
+        let mut shared = true;
+        for &e in &elements {
+            match e.noise_split() {
+                Some((inner, s2)) if s2 > 0.0 => {
+                    match cov {
+                        None => cov = Some(inner),
+                        Some(c) if data_ptr(c) == data_ptr(inner) => {}
+                        Some(_) => {
+                            shared = false;
+                            break;
+                        }
+                    }
+                    sigma2s.push(s2);
+                }
+                _ => {
+                    shared = false;
+                    break;
+                }
+            }
+        }
+        match (shared, cov) {
+            (true, Some(cov)) => BatchOp {
+                repr: Repr::Shared { cov, sigma2s },
+            },
+            _ => BatchOp {
+                repr: Repr::General(elements),
+            },
+        }
+    }
+
+    /// The explicit shared fast path: element `i` is `cov + sigma2s[i]·I`.
+    pub fn shared(cov: &'a dyn LinearOp, sigma2s: Vec<f64>) -> Self {
+        assert!(!sigma2s.is_empty(), "BatchOp: empty batch");
+        assert!(
+            sigma2s.iter().all(|&s| s > 0.0),
+            "BatchOp: added diagonals must be positive"
+        );
+        BatchOp {
+            repr: Repr::Shared { cov, sigma2s },
+        }
+    }
+
+    /// Number of stacked operators `b`.
+    pub fn len(&self) -> usize {
+        match &self.repr {
+            Repr::General(els) => els.len(),
+            Repr::Shared { sigma2s, .. } => sigma2s.len(),
+        }
+    }
+
+    /// True when the batch is empty (never, by construction).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Dimension `n` shared by every element.
+    pub fn n(&self) -> usize {
+        match &self.repr {
+            Repr::General(els) => els[0].n(),
+            Repr::Shared { cov, .. } => cov.n(),
+        }
+    }
+
+    /// True when the shared-covariance fast path is engaged.
+    pub fn is_shared(&self) -> bool {
+        matches!(self.repr, Repr::Shared { .. })
+    }
+
+    /// The shared covariance and per-element σ² when the fast path is
+    /// engaged (the batched preconditioner builder pivots on this).
+    pub fn shared_parts(&self) -> Option<(&dyn LinearOp, &[f64])> {
+        match &self.repr {
+            Repr::General(_) => None,
+            Repr::Shared { cov, sigma2s } => Some((*cov, sigma2s)),
+        }
+    }
+
+    /// Run `f` against element `i` as a full [`LinearOp`] (for the shared
+    /// representation the `AddedDiagOp` view is materialised on the fly —
+    /// a zero-copy wrapper, not a matrix).
+    pub fn with_element<R>(&self, i: usize, f: impl FnOnce(&dyn LinearOp) -> R) -> R {
+        match &self.repr {
+            Repr::General(els) => f(els[i]),
+            Repr::Shared { cov, sigma2s } => {
+                let view = AddedDiagOp::new(*cov, sigma2s[i]);
+                f(&view)
+            }
+        }
+    }
+
+    /// The sub-batch of elements `idx` (preserving representation).
+    pub fn subset(&self, idx: &[usize]) -> BatchOp<'a> {
+        match &self.repr {
+            Repr::General(els) => BatchOp {
+                repr: Repr::General(idx.iter().map(|&i| els[i]).collect()),
+            },
+            Repr::Shared { cov, sigma2s } => BatchOp {
+                repr: Repr::Shared {
+                    cov: *cov,
+                    sigma2s: idx.iter().map(|&i| sigma2s[i]).collect(),
+                },
+            },
+        }
+    }
+
+    /// Batched product: `out[k] = A_{idx[k]} · ms[k]`. The shared path
+    /// concatenates the right-hand blocks, pays **one** covariance product
+    /// for the whole subset, and adds the per-element σ²·M axpy while
+    /// splitting the result back — column-for-column identical to the
+    /// elementwise products (each column's accumulation order is
+    /// unchanged).
+    pub fn matmul_subset(&self, idx: &[usize], ms: &[&Mat]) -> Vec<Mat> {
+        assert_eq!(idx.len(), ms.len());
+        match &self.repr {
+            Repr::General(els) => idx.iter().zip(ms).map(|(&i, &m)| els[i].matmul(m)).collect(),
+            Repr::Shared { cov, sigma2s } => {
+                let n = cov.n();
+                let total: usize = ms.iter().map(|m| m.cols()).sum();
+                let mut block = Mat::zeros(n, total);
+                let mut c0 = 0;
+                for m in ms {
+                    assert_eq!(m.rows(), n, "BatchOp: RHS row mismatch");
+                    let t = m.cols();
+                    for r in 0..n {
+                        block.row_mut(r)[c0..c0 + t].copy_from_slice(m.row(r));
+                    }
+                    c0 += t;
+                }
+                let kv = cov.matmul(&block);
+                let mut out = Vec::with_capacity(ms.len());
+                let mut c0 = 0;
+                for (k, m) in ms.iter().enumerate() {
+                    let s2 = sigma2s[idx[k]];
+                    let t = m.cols();
+                    let mut o = Mat::zeros(n, t);
+                    for r in 0..n {
+                        let kr = &kv.row(r)[c0..c0 + t];
+                        let mr = m.row(r);
+                        let orow = o.row_mut(r);
+                        for c in 0..t {
+                            orow[c] = kr[c] + s2 * mr[c];
+                        }
+                    }
+                    out.push(o);
+                    c0 += t;
+                }
+                out
+            }
+        }
+    }
+
+    /// Batched product over the full batch: `out[i] = A_i · ms[i]`.
+    pub fn matmul_multi(&self, ms: &[&Mat]) -> Vec<Mat> {
+        assert_eq!(ms.len(), self.len());
+        let idx: Vec<usize> = (0..self.len()).collect();
+        self.matmul_subset(&idx, ms)
+    }
+}
+
+/// Lift [`SumOp`] elementwise: `out[i] = a[i] + b[i]`.
+pub fn lift_sum<A: LinearOp, B: LinearOp>(a: Vec<A>, b: Vec<B>) -> Vec<SumOp<A, B>> {
+    assert_eq!(a.len(), b.len(), "lift_sum: batch size mismatch");
+    a.into_iter().zip(b).map(|(x, y)| SumOp::new(x, y)).collect()
+}
+
+/// Lift [`ScaledOp`] elementwise: `out[i] = cs[i] · a[i]`.
+pub fn lift_scaled<A: LinearOp>(a: Vec<A>, cs: &[f64]) -> Vec<ScaledOp<A>> {
+    assert_eq!(a.len(), cs.len(), "lift_scaled: batch size mismatch");
+    a.into_iter()
+        .zip(cs)
+        .map(|(x, &c)| ScaledOp::new(x, c))
+        .collect()
+}
+
+/// Lift [`LowRankOp`] elementwise: `out[i] = Lᵢ·Lᵢᵀ`.
+pub fn lift_low_rank(factors: Vec<Mat>) -> Vec<LowRankOp> {
+    factors.into_iter().map(LowRankOp::new).collect()
+}
+
+/// Lift [`AddedDiagOp`] elementwise: `out[i] = inner[i] + sigma2s[i]·I`.
+pub fn lift_added_diag<A: LinearOp>(inners: Vec<A>, sigma2s: &[f64]) -> Vec<AddedDiagOp<A>> {
+    assert_eq!(inners.len(), sigma2s.len(), "lift_added_diag: batch size mismatch");
+    inners
+        .into_iter()
+        .zip(sigma2s)
+        .map(|(x, &s)| AddedDiagOp::new(x, s))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::op::DenseOp;
+    use crate::util::Rng;
+
+    fn spd(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let g = Mat::from_fn(n, n, |_, _| rng.normal());
+        let mut a = g.t_matmul(&g);
+        a.add_diag(0.5);
+        a.symmetrize();
+        a
+    }
+
+    #[test]
+    fn shared_batch_matmul_matches_elementwise_exactly() {
+        let n = 30;
+        let cov = DenseOp::new(spd(n, 1));
+        let sigma2s = vec![0.1, 0.5, 1.3, 0.02];
+        let batch = BatchOp::shared(&cov, sigma2s.clone());
+        assert!(batch.is_shared());
+        assert_eq!(batch.len(), 4);
+        assert_eq!(batch.n(), n);
+        let mut rng = Rng::new(2);
+        let ms: Vec<Mat> = (0..4)
+            .map(|k| Mat::from_fn(n, 1 + k % 3, |_, _| rng.normal()))
+            .collect();
+        let mrefs: Vec<&Mat> = ms.iter().collect();
+        let got = batch.matmul_multi(&mrefs);
+        for (k, m) in ms.iter().enumerate() {
+            let element = AddedDiagOp::new(&cov, sigma2s[k]);
+            let want = element.matmul(m);
+            assert!(
+                got[k].max_abs_diff(&want) == 0.0,
+                "element {k}: {}",
+                got[k].max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn general_batch_applies_elementwise() {
+        let n = 20;
+        let a = DenseOp::new(spd(n, 3));
+        let b = DenseOp::new(spd(n, 4));
+        let batch = BatchOp::new(vec![&a as &dyn LinearOp, &b as &dyn LinearOp]);
+        assert!(!batch.is_shared());
+        let mut rng = Rng::new(5);
+        let m1 = Mat::from_fn(n, 2, |_, _| rng.normal());
+        let m2 = Mat::from_fn(n, 3, |_, _| rng.normal());
+        let got = batch.matmul_multi(&[&m1, &m2]);
+        assert!(got[0].max_abs_diff(&a.matmul(&m1)) == 0.0);
+        assert!(got[1].max_abs_diff(&b.matmul(&m2)) == 0.0);
+    }
+
+    #[test]
+    fn subset_preserves_elements_and_sigmas() {
+        let n = 12;
+        let cov = DenseOp::new(spd(n, 6));
+        let batch = BatchOp::shared(&cov, vec![0.1, 0.2, 0.3]);
+        let sub = batch.subset(&[2, 0]);
+        assert_eq!(sub.len(), 2);
+        let (_, sigmas) = sub.shared_parts().unwrap();
+        assert_eq!(sigmas, &[0.3, 0.1]);
+        let mut rng = Rng::new(7);
+        let m = Mat::from_fn(n, 2, |_, _| rng.normal());
+        let got = sub.matmul_subset(&[0, 1], &[&m, &m]);
+        let want0 = AddedDiagOp::new(&cov, 0.3).matmul(&m);
+        let want1 = AddedDiagOp::new(&cov, 0.1).matmul(&m);
+        assert!(got[0].max_abs_diff(&want0) == 0.0);
+        assert!(got[1].max_abs_diff(&want1) == 0.0);
+    }
+
+    #[test]
+    fn with_element_materialises_the_added_diag_view() {
+        let n = 10;
+        let cov = DenseOp::new(spd(n, 8));
+        let batch = BatchOp::shared(&cov, vec![0.4, 0.9]);
+        let d1 = batch.with_element(1, |op| op.diag());
+        for (i, v) in d1.iter().enumerate() {
+            assert!((v - (cov.entry(i, i) + 0.9)).abs() < 1e-15);
+        }
+        let s2 = batch.with_element(0, |op| op.noise());
+        assert!((s2 - 0.4).abs() < 1e-15);
+    }
+
+    #[test]
+    fn detection_engages_on_pointer_shared_noise_split() {
+        // one AddedDiagOp referenced twice: both elements split to the
+        // same inner pointer, so the batch collapses to the shared path
+        let n = 8;
+        let cov = DenseOp::new(spd(n, 9));
+        let op = AddedDiagOp::new(cov, 0.25);
+        let batch = BatchOp::new(vec![&op as &dyn LinearOp, &op as &dyn LinearOp]);
+        assert!(batch.is_shared());
+        let (_, sigmas) = batch.shared_parts().unwrap();
+        assert_eq!(sigmas, &[0.25, 0.25]);
+    }
+
+    #[test]
+    fn lifts_compose_elementwise() {
+        let n = 15;
+        let mut rng = Rng::new(10);
+        let factors: Vec<Mat> = (0..3)
+            .map(|_| Mat::from_fn(n, 4, |_, _| rng.normal()))
+            .collect();
+        let want_dense: Vec<Mat> = factors
+            .iter()
+            .map(|l| {
+                let mut k = l.matmul_t(l);
+                k.scale_assign(2.0);
+                k.add_diag(0.1);
+                k
+            })
+            .collect();
+        let lifted = lift_added_diag(
+            lift_scaled(lift_low_rank(factors), &[2.0, 2.0, 2.0]),
+            &[0.1, 0.1, 0.1],
+        );
+        let els: Vec<&dyn LinearOp> = lifted.iter().map(|o| o as &dyn LinearOp).collect();
+        let batch = BatchOp::new(els);
+        assert_eq!(batch.len(), 3);
+        let m = Mat::from_fn(n, 2, |_, _| rng.normal());
+        let got = batch.matmul_multi(&[&m, &m, &m]);
+        for k in 0..3 {
+            assert!(got[k].max_abs_diff(&want_dense[k].matmul(&m)) < 1e-10, "element {k}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn mismatched_shapes_rejected() {
+        let a = DenseOp::new(spd(5, 11));
+        let b = DenseOp::new(spd(6, 12));
+        let _ = BatchOp::new(vec![&a as &dyn LinearOp, &b as &dyn LinearOp]);
+    }
+}

@@ -1,0 +1,221 @@
+//! **`SolvePlanCache`** — factorisation state cached *across* predict
+//! calls, keyed by deployment slot and invalidated by operator content.
+//!
+//! A serving loop (or a model holding a plan handle) asks the cache for a
+//! [`SolvePlan`] under a stable slot key (the tenant name, `"default"`,
+//! …). The cache compares the operator's content fingerprint
+//! ([`LinearOp::fingerprint`]) against the cached entry:
+//!
+//! - **hit** — same fingerprint: the Cholesky/Woodbury factor, circulant
+//!   spectrum, or pivoted-Cholesky preconditioner is reused as-is; a
+//!   predict call pays zero factorisation cost.
+//! - **invalidation** — the fingerprint changed (a hyperparameter update
+//!   rewrote the operator's entries): the stale plan is dropped and
+//!   rebuilt once.
+//! - **miss** — first request for the slot: the plan is built and stored.
+//!
+//! Plans are handed out as `Arc`s, so concurrent request handlers share
+//! one factorisation without copying; the map lock is held across a
+//! rebuild (deliberately — racing handlers would otherwise factorise the
+//! same operator twice).
+
+use super::solve::{plan, SolveOptions, SolvePlan};
+use super::LinearOp;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+struct Slot {
+    fingerprint: u64,
+    precond_rank: usize,
+    plan: Arc<SolvePlan>,
+}
+
+/// Cache of prepared [`SolvePlan`]s keyed by deployment slot; see the
+/// module docs for hit/miss/invalidation semantics.
+#[derive(Default)]
+pub struct SolvePlanCache {
+    slots: Mutex<HashMap<String, Slot>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    invalidations: AtomicU64,
+}
+
+impl SolvePlanCache {
+    /// Empty cache.
+    pub fn new() -> Self {
+        SolvePlanCache::default()
+    }
+
+    /// The plan for `op` under slot `key`, building (miss) or rebuilding
+    /// (fingerprint/invalidations change) as needed. Recomputes the O(n)
+    /// content fingerprint per call; callers holding an **immutable**
+    /// operator (a serving deployment) should fingerprint once and use
+    /// [`SolvePlanCache::get_or_plan_with_fingerprint`].
+    pub fn get_or_plan(
+        &self,
+        key: &str,
+        op: &dyn LinearOp,
+        opts: &SolveOptions,
+    ) -> Arc<SolvePlan> {
+        self.get_or_plan_with_fingerprint(key, op.fingerprint(), op, opts)
+    }
+
+    /// [`SolvePlanCache::get_or_plan`] with a caller-computed fingerprint —
+    /// the hit path does no operator probing at all, so a serving tick
+    /// over frozen hyperparameters is O(1) in the cache.
+    pub fn get_or_plan_with_fingerprint(
+        &self,
+        key: &str,
+        fp: u64,
+        op: &dyn LinearOp,
+        opts: &SolveOptions,
+    ) -> Arc<SolvePlan> {
+        let mut slots = self.slots.lock().unwrap();
+        if let Some(slot) = slots.get(key) {
+            if slot.fingerprint == fp && slot.precond_rank == opts.precond_rank {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Arc::clone(&slot.plan);
+            }
+            self.invalidations.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+        let built = Arc::new(plan(op, opts));
+        slots.insert(
+            key.to_string(),
+            Slot {
+                fingerprint: fp,
+                precond_rank: opts.precond_rank,
+                plan: Arc::clone(&built),
+            },
+        );
+        built
+    }
+
+    /// Cached slot count.
+    pub fn len(&self) -> usize {
+        self.slots.lock().unwrap().len()
+    }
+
+    /// True when no slot is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every cached plan (deployment reload).
+    pub fn clear(&self) {
+        self.slots.lock().unwrap().clear();
+    }
+
+    /// Requests answered from the cache.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// First-time slot builds.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Rebuilds forced by an operator-content (hyperparameter) change.
+    pub fn invalidations(&self) -> u64 {
+        self.invalidations.load(Ordering::Relaxed)
+    }
+
+    /// One-line `hits/misses/invalidations` summary for serving logs.
+    pub fn stats(&self) -> String {
+        format!(
+            "plans={} hits={} misses={} invalidations={}",
+            self.len(),
+            self.hits(),
+            self.misses(),
+            self.invalidations()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::DenseKernelOp;
+    use crate::kernels::Rbf;
+    use crate::tensor::Mat;
+    use crate::util::Rng;
+
+    fn model(n: usize, seed: u64) -> DenseKernelOp {
+        let mut rng = Rng::new(seed);
+        let x = Mat::from_fn(n, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+        DenseKernelOp::new(x, Box::new(Rbf::new(0.5, 1.0)), 0.1)
+    }
+
+    #[test]
+    fn miss_then_hit_shares_one_plan() {
+        let cache = SolvePlanCache::new();
+        let op = model(30, 1);
+        let opts = SolveOptions::default();
+        let p1 = cache.get_or_plan("t", &op, &opts);
+        let p2 = cache.get_or_plan("t", &op, &opts);
+        assert!(Arc::ptr_eq(&p1, &p2), "second lookup must reuse the plan");
+        assert_eq!((cache.misses(), cache.hits(), cache.invalidations()), (1, 1, 0));
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn hyperparameter_change_invalidates() {
+        let cache = SolvePlanCache::new();
+        let mut op = model(25, 2);
+        let opts = SolveOptions::default();
+        let p1 = cache.get_or_plan("t", &op, &opts);
+        let mut raw = op.params();
+        raw[0] += 0.3; // lengthscale moves → entries change → new fingerprint
+        op.set_params(&raw);
+        let p2 = cache.get_or_plan("t", &op, &opts);
+        assert!(!Arc::ptr_eq(&p1, &p2), "stale plan must be rebuilt");
+        assert_eq!((cache.misses(), cache.hits(), cache.invalidations()), (1, 0, 1));
+        // and the rebuilt plan is now stable
+        let p3 = cache.get_or_plan("t", &op, &opts);
+        assert!(Arc::ptr_eq(&p2, &p3));
+        assert_eq!(cache.hits(), 1);
+    }
+
+    #[test]
+    fn noise_only_change_also_invalidates() {
+        let cache = SolvePlanCache::new();
+        let mut op = model(20, 3);
+        let opts = SolveOptions::default();
+        let _ = cache.get_or_plan("t", &op, &opts);
+        let mut raw = op.params();
+        let last = raw.len() - 1;
+        raw[last] += 0.5; // log σ² moves: diagonal-only change
+        op.set_params(&raw);
+        let _ = cache.get_or_plan("t", &op, &opts);
+        assert_eq!(cache.invalidations(), 1);
+    }
+
+    #[test]
+    fn slots_are_independent() {
+        let cache = SolvePlanCache::new();
+        let a = model(15, 4);
+        let b = model(15, 5);
+        let opts = SolveOptions::default();
+        let _ = cache.get_or_plan("a", &a, &opts);
+        let _ = cache.get_or_plan("b", &b, &opts);
+        assert_eq!(cache.misses(), 2);
+        assert_eq!(cache.len(), 2);
+        cache.clear();
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn precond_rank_is_part_of_the_key() {
+        let cache = SolvePlanCache::new();
+        let op = model(18, 6);
+        let mut opts = SolveOptions::default();
+        let _ = cache.get_or_plan("t", &op, &opts);
+        opts.precond_rank += 2;
+        let _ = cache.get_or_plan("t", &op, &opts);
+        assert_eq!(cache.invalidations(), 1);
+        assert!(cache.stats().contains("invalidations=1"));
+    }
+}

@@ -131,6 +131,13 @@ impl<A: LinearOp> LinearOp for AddedDiagOp<A> {
         Some((&self.inner, self.value()))
     }
 
+    fn circulant_column(&self) -> Option<Vec<f64>> {
+        // circulant + σ²I is circulant: the diagonal shift lands on c₀
+        let mut col = self.inner.circulant_column()?;
+        col[0] += self.value();
+        Some(col)
+    }
+
     fn dense(&self) -> Mat {
         let mut k = self.inner.dense();
         k.add_diag(self.value());
@@ -260,6 +267,24 @@ impl<A: LinearOp, B: LinearOp> LinearOp for SumOp<A, B> {
     fn entry(&self, i: usize, j: usize) -> f64 {
         self.a.entry(i, j) + self.b.entry(i, j)
     }
+
+    fn circulant_column(&self) -> Option<Vec<f64>> {
+        // circulant matrices are closed under addition
+        let mut col = self.a.circulant_column()?;
+        let other = self.b.circulant_column()?;
+        for (v, w) in col.iter_mut().zip(other) {
+            *v += w;
+        }
+        Some(col)
+    }
+
+    fn solve_hint(&self) -> SolveHint {
+        if self.a.circulant_column().is_some() && self.b.circulant_column().is_some() {
+            SolveHint::CirculantFft
+        } else {
+            SolveHint::Iterative
+        }
+    }
 }
 
 /// `c · A` with a fixed scale factor. (A *learnable* scale belongs to the
@@ -331,6 +356,23 @@ impl<A: LinearOp> LinearOp for ScaledOp<A> {
     fn entry(&self, i: usize, j: usize) -> f64 {
         self.c * self.a.entry(i, j)
     }
+
+    fn circulant_column(&self) -> Option<Vec<f64>> {
+        // circulant matrices are closed under scaling
+        let mut col = self.a.circulant_column()?;
+        for v in &mut col {
+            *v *= self.c;
+        }
+        Some(col)
+    }
+
+    fn solve_hint(&self) -> SolveHint {
+        if self.a.circulant_column().is_some() {
+            SolveHint::CirculantFft
+        } else {
+            SolveHint::Iterative
+        }
+    }
 }
 
 #[cfg(test)]
@@ -378,6 +420,32 @@ mod tests {
         let mut want = m.clone();
         want.scale_assign(0.25);
         assert!(d.max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn circulant_structure_lifts_through_compositions() {
+        use crate::linalg::op::ToeplitzLinOp;
+        let m = 8;
+        let col: Vec<f64> = (0..m)
+            .map(|k| {
+                let d = k.min(m - k) as f64;
+                (-0.2 * d * d).exp()
+            })
+            .collect();
+        let t1 = ToeplitzLinOp::new(col.clone());
+        let t2 = ToeplitzLinOp::new(col.clone());
+        let op = AddedDiagOp::new(ScaledOp::new(SumOp::new(t1, t2), 0.5), 0.3);
+        let lifted = op.circulant_column().expect("circulant lift");
+        // 0.5·(c + c) + σ²·e₀ = c with σ² on the head
+        assert!((lifted[0] - (col[0] + 0.3)).abs() < 1e-14);
+        for k in 1..m {
+            assert!((lifted[k] - col[k]).abs() < 1e-14, "k={k}");
+        }
+        assert_eq!(op.solve_hint(), crate::linalg::op::SolveHint::CirculantFft);
+        // a non-circulant partner blocks the sum lift
+        let decaying: Vec<f64> = (0..m).map(|k| 1.0 / (1.0 + k as f64)).collect();
+        let blocked = SumOp::new(ToeplitzLinOp::new(col), ToeplitzLinOp::new(decaying));
+        assert!(blocked.circulant_column().is_none());
     }
 
     #[test]

@@ -25,6 +25,8 @@
 //! The legacy `kernels::KernelOperator` name is kept as a deprecated
 //! re-export of this trait so seed-era code keeps compiling.
 
+pub mod batch;
+pub mod cache;
 pub mod compose;
 pub mod interp;
 pub mod lowrank;
@@ -32,12 +34,15 @@ pub mod sharded;
 pub mod solve;
 pub mod structured;
 
+pub use batch::{lift_added_diag, lift_low_rank, lift_scaled, lift_sum, BatchOp};
+pub use cache::SolvePlanCache;
 pub use compose::{AddedDiagOp, DiagOp, ScaledOp, SumOp};
 pub use interp::{InterpOp, SparseInterp};
 pub use lowrank::LowRankOp;
 pub use sharded::ShardedOp;
 pub use solve::{
-    build_preconditioner, plan, solve, solve_strategy, solve_with, SolveOptions, SolvePlan,
+    build_preconditioner, build_preconditioner_batch, plan, plan_batch, solve, solve_batch,
+    solve_cached, solve_strategy, solve_with, CirculantPlan, SolveOptions, SolvePlan,
 };
 pub use structured::{KroneckerOp, ToeplitzLinOp};
 
@@ -45,7 +50,8 @@ use crate::tensor::Mat;
 
 /// Which solve strategy an operator's structure makes optimal. The
 /// dispatcher in [`solve()`] resolves this hint against what the operator
-/// actually exposes ([`LinearOp::noise_split`], [`LinearOp::low_rank_factor`]).
+/// actually exposes ([`LinearOp::noise_split`], [`LinearOp::low_rank_factor`],
+/// [`LinearOp::circulant_column`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SolveHint {
     /// Materialise and Cholesky-factor: right for explicitly dense
@@ -54,10 +60,37 @@ pub enum SolveHint {
     /// Diagonal-plus-low-rank structure: exact Woodbury solve in
     /// O(nk² + k³) — the SGPR direct path.
     Woodbury,
+    /// Circulant structure: exact direct solve by FFT diagonalisation in
+    /// O(n log n) — taken by Toeplitz grid covariances (and their
+    /// AddedDiag/Scaled/Sum compositions) whose column is an exact
+    /// circulant.
+    CirculantFft,
     /// Fast black-box `matmul`: iterative mBCG (the paper's engine).
     /// This is the default.
     Iterative,
 }
+
+/// Out-of-range raw-parameter index handed to a gradient accessor — the
+/// non-panicking twin of the [`LinearOp::dmatmul`] contract violation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParamOutOfRange {
+    /// how many raw parameters the operator has
+    pub n_params: usize,
+    /// the offending index
+    pub param: usize,
+}
+
+impl std::fmt::Display for ParamOutOfRange {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "operator has {} parameters, asked for {}",
+            self.n_params, self.param
+        )
+    }
+}
+
+impl std::error::Error for ParamOutOfRange {}
 
 /// A symmetric positive-(semi)definite linear operator `A`, accessed only
 /// through structured products — the blackbox every engine consumes.
@@ -141,6 +174,60 @@ pub trait LinearOp: Sync {
         None
     }
 
+    /// If the operator is exactly a **circulant** matrix whose size admits
+    /// the in-tree radix-2 FFT (power of two), its first column — the seam
+    /// the exact O(n log n) FFT direct solve runs through.
+    /// [`ToeplitzLinOp`] advertises this when its column is circulant-
+    /// symmetric (`c[k] = c[m−k]`); `AddedDiag`/`Scaled`/`Sum` compositions
+    /// lift it (circulant matrices are closed under all three).
+    fn circulant_column(&self) -> Option<Vec<f64>> {
+        None
+    }
+
+    /// Content fingerprint for solve-plan caching: a hash over the
+    /// operator's shape, parameter count, and a deterministic **probe** of
+    /// its entries. Two operators with the same fingerprint are treated as
+    /// the same matrix by [`SolvePlanCache`], so a hyperparameter update —
+    /// which moves the noise term, the diagonal, or off-diagonal mass
+    /// globally — invalidates cached factorisations automatically. The
+    /// probe is sampled (≈48 entries), not exhaustive: an edit confined to
+    /// unprobed entries (e.g. rewriting one kernel row in place) can slip
+    /// past it, so operators supporting *localized* mutation should
+    /// override this with a version counter. Cost is O(n) (one `diag` plus
+    /// a bounded number of `entry` probes) — negligible next to any
+    /// factorisation or solve.
+    fn fingerprint(&self) -> u64 {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        let (r, c) = self.shape();
+        r.hash(&mut h);
+        c.hash(&mut h);
+        self.n_params().hash(&mut h);
+        self.noise().to_bits().hash(&mut h);
+        let n = self.n();
+        if n == 0 {
+            return h.finish();
+        }
+        // strided diagonal probe (≤ ~16 samples)
+        let d = self.diag();
+        let stride = (n / 16).max(1);
+        let mut i = 0;
+        while i < n {
+            d[i].to_bits().hash(&mut h);
+            i += stride;
+        }
+        // off-diagonal probes on a few rows (lengthscale-style parameters
+        // move off-diagonal mass without touching a stationary diagonal)
+        for &i in &[0, n / 3, (2 * n) / 3, n - 1] {
+            let step = (n / 8).max(1);
+            for k in 0..8usize.min(n) {
+                let j = (i + 1 + k * step) % n;
+                self.entry(i, j).to_bits().hash(&mut h);
+            }
+        }
+        h.finish()
+    }
+
     /// σ² of the outermost added diagonal (0.0 when there is none). Shim
     /// for the seed-era `KernelOperator::noise` surface.
     fn noise(&self) -> f64 {
@@ -200,6 +287,12 @@ macro_rules! linear_op_delegate {
         fn low_rank_factor(&self) -> Option<&$crate::tensor::Mat> {
             self.$field.low_rank_factor()
         }
+        fn circulant_column(&self) -> Option<Vec<f64>> {
+            self.$field.circulant_column()
+        }
+        fn fingerprint(&self) -> u64 {
+            self.$field.fingerprint()
+        }
         fn noise(&self) -> f64 {
             self.$field.noise()
         }
@@ -243,6 +336,12 @@ macro_rules! forward_linear_op {
         }
         fn low_rank_factor(&self) -> Option<&Mat> {
             (**self).low_rank_factor()
+        }
+        fn circulant_column(&self) -> Option<Vec<f64>> {
+            (**self).circulant_column()
+        }
+        fn fingerprint(&self) -> u64 {
+            (**self).fingerprint()
         }
         fn noise(&self) -> f64 {
             (**self).noise()

@@ -1,6 +1,7 @@
 //! The solve-strategy dispatcher: one generic `K̂⁻¹·B` entry point that
-//! picks **direct** (dense Cholesky, Woodbury) or **iterative**
-//! (preconditioned mBCG) from the operator's declared structure.
+//! picks **direct** (dense Cholesky, Woodbury, circulant FFT) or
+//! **iterative** (preconditioned mBCG) from the operator's declared
+//! structure.
 //!
 //! This is the single path exact, SGPR, SKI, sharded, and multitask
 //! models all solve through — `predict`, the serving coordinator, and the
@@ -9,12 +10,26 @@
 //! - [`SolveHint::Woodbury`] + an extractable `L·Lᵀ + σ²I` split → exact
 //!   Woodbury solve in O(nk² + k³) (the SGPR direct path, no CG at all),
 //! - [`SolveHint::DenseCholesky`] → materialise + factor (small/dense),
+//! - [`SolveHint::CirculantFft`] + an extractable circulant column → exact
+//!   FFT diagonalisation solve in O(n log n) — the branch a SKI-style
+//!   grid covariance `K_UU` takes when solved *directly* (a Toeplitz
+//!   operator, or AddedDiag/Scaled/Sum over one, whose column is an exact
+//!   circulant; the full SKI sandwich `W·K_UU·Wᵀ + σ²I` is not circulant
+//!   and stays iterative),
 //! - [`SolveHint::Iterative`] → mBCG with the §4.1 pivoted-Cholesky
 //!   preconditioner built from the operator's [`LinearOp::noise_split`].
+//!
+//! The **batch axis** rides on the same dispatch: [`plan_batch`] /
+//! [`solve_batch`] prepare and execute b systems at once through a
+//! [`BatchOp`] — direct-structure elements solve directly, every
+//! iterative element joins one `mbcg_batch` call — and [`solve_cached`]
+//! reuses plans across calls through a [`super::SolvePlanCache`].
 
+use super::batch::BatchOp;
 use super::{LinearOp, SolveHint};
 use crate::linalg::cholesky::Cholesky;
-use crate::linalg::mbcg::{mbcg, MbcgOptions};
+use crate::linalg::fft::{fft_inplace, Cplx};
+use crate::linalg::mbcg::{mbcg, mbcg_batch, MbcgOptions};
 use crate::linalg::pivoted_cholesky::pivoted_cholesky;
 use crate::linalg::preconditioner::{IdentityPrecond, PartialCholPrecond, Preconditioner};
 use crate::tensor::Mat;
@@ -50,7 +65,8 @@ fn woodbury_parts(op: &dyn LinearOp) -> Option<(&Mat, f64)> {
 
 /// Resolve the operator's hint against the structure it actually exposes:
 /// a `Woodbury` hint only holds when the `L·Lᵀ + σ²I` split is
-/// extractable, otherwise the dispatcher falls back to mBCG.
+/// extractable, a `CirculantFft` hint only when the circulant column is —
+/// otherwise the dispatcher falls back to mBCG.
 pub fn solve_strategy(op: &dyn LinearOp) -> SolveHint {
     match op.solve_hint() {
         SolveHint::Woodbury => {
@@ -60,7 +76,73 @@ pub fn solve_strategy(op: &dyn LinearOp) -> SolveHint {
                 SolveHint::Iterative
             }
         }
+        SolveHint::CirculantFft => {
+            if op.circulant_column().is_some() {
+                SolveHint::CirculantFft
+            } else {
+                SolveHint::Iterative
+            }
+        }
         h => h,
+    }
+}
+
+/// Exact direct solver for a **circulant** SPD matrix: the FFT
+/// diagonalises any circulant, so `C⁻¹·b = F⁻¹(F(b)/λ)` with
+/// `λ = F(first column)` — O(n log n) per column, no iteration, no
+/// preconditioner. Reached by operators advertising
+/// [`LinearOp::circulant_column`]: a SKI-grid `K_UU` whose circulant
+/// embedding is exact, solved as the operator itself (the interpolation
+/// sandwich around it is not circulant and keeps the iterative path).
+pub struct CirculantPlan {
+    /// real eigenvalues of the symmetric circulant (FFT of its column)
+    eigs: Vec<f64>,
+}
+
+impl CirculantPlan {
+    /// Diagonalise the circulant with first column `col`. Returns `None`
+    /// when the size is not a radix-2 FFT length or the spectrum is not
+    /// strictly positive (not SPD — no exact direct solve).
+    pub fn new(col: &[f64]) -> Option<Self> {
+        let m = col.len();
+        if m == 0 || !m.is_power_of_two() {
+            return None;
+        }
+        let mut buf: Vec<Cplx> = col.iter().map(|&v| Cplx::new(v, 0.0)).collect();
+        fft_inplace(&mut buf, false);
+        let mut eigs = Vec::with_capacity(m);
+        for c in &buf {
+            // symmetric circulant ⇒ real spectrum; SPD ⇒ strictly positive
+            if c.re <= 0.0 || !c.re.is_finite() {
+                return None;
+            }
+            eigs.push(c.re);
+        }
+        Some(CirculantPlan { eigs })
+    }
+
+    /// Operator dimension.
+    pub fn n(&self) -> usize {
+        self.eigs.len()
+    }
+
+    /// `C⁻¹ · B` column-by-column via FFT.
+    pub fn solve_mat(&self, b: &Mat) -> Mat {
+        let m = self.eigs.len();
+        assert_eq!(b.rows(), m, "CirculantPlan: RHS row mismatch");
+        let mut out = Mat::zeros(m, b.cols());
+        for c in 0..b.cols() {
+            let mut buf: Vec<Cplx> = (0..m).map(|i| Cplx::new(b.get(i, c), 0.0)).collect();
+            fft_inplace(&mut buf, false);
+            for (v, &lam) in buf.iter_mut().zip(self.eigs.iter()) {
+                *v = Cplx::new(v.re / lam, v.im / lam);
+            }
+            fft_inplace(&mut buf, true);
+            for i in 0..m {
+                out.set(i, c, buf[i].re);
+            }
+        }
+        out
     }
 }
 
@@ -84,16 +166,26 @@ pub fn build_preconditioner(op: &dyn LinearOp, rank: usize) -> Box<dyn Precondit
 }
 
 /// Factorisation state prepared once and reused across solves against a
-/// fixed operator — what a serving loop should hold instead of paying a
-/// refactorisation (capacitance Cholesky, pivoted-Cholesky preconditioner
-/// build) per request batch.
+/// fixed operator — what a serving loop holds (through a
+/// [`super::SolvePlanCache`]) instead of paying a refactorisation
+/// (capacitance Cholesky, circulant spectrum, pivoted-Cholesky
+/// preconditioner build) per request batch.
 pub enum SolvePlan {
     /// direct dense Cholesky factor of the full operator
     Cholesky(Cholesky),
     /// direct Woodbury solve of `L·Lᵀ + σ²I` (capacitance prefactored)
     Woodbury(PartialCholPrecond),
+    /// exact circulant direct solve (spectrum pre-FFT'd)
+    Circulant(CirculantPlan),
     /// preconditioned mBCG with the §4.1 preconditioner prebuilt
     Mbcg(Box<dyn Preconditioner + Send>),
+}
+
+impl SolvePlan {
+    /// True for plans that solve exactly without iteration.
+    pub fn is_direct(&self) -> bool {
+        !matches!(self, SolvePlan::Mbcg(_))
+    }
 }
 
 /// Prepare the solver for an operator once (the expensive, structure-
@@ -109,6 +201,15 @@ pub fn plan(op: &dyn LinearOp, opts: &SolveOptions) -> SolvePlan {
         SolveHint::DenseCholesky => SolvePlan::Cholesky(
             Cholesky::new_with_jitter(&op.dense()).expect("operator not PD even with jitter"),
         ),
+        SolveHint::CirculantFft => {
+            let col = op.circulant_column().expect("strategy guaranteed the column");
+            match CirculantPlan::new(&col) {
+                Some(p) => SolvePlan::Circulant(p),
+                // spectrum not strictly positive — no exact direct solve;
+                // degrade to the iterative engine
+                None => SolvePlan::Mbcg(build_preconditioner(op, opts.precond_rank)),
+            }
+        }
         SolveHint::Iterative => SolvePlan::Mbcg(build_preconditioner(op, opts.precond_rank)),
     }
 }
@@ -119,6 +220,7 @@ pub fn solve_with(plan: &SolvePlan, op: &dyn LinearOp, b: &Mat, opts: &SolveOpti
     match plan {
         SolvePlan::Woodbury(direct) => direct.solve_mat(b),
         SolvePlan::Cholesky(ch) => ch.solve_mat(b),
+        SolvePlan::Circulant(c) => c.solve_mat(b),
         SolvePlan::Mbcg(pre) => mbcg(
             |m| op.matmul(m),
             b,
@@ -135,9 +237,133 @@ pub fn solve_with(plan: &SolvePlan, op: &dyn LinearOp, b: &Mat, opts: &SolveOpti
 
 /// Generic batched solve `op⁻¹ · b`, dispatched on [`solve_strategy`].
 /// One-shot convenience over [`plan`] + [`solve_with`]; callers solving
-/// repeatedly against the same operator should hold the plan.
+/// repeatedly against the same operator should hold the plan (or go
+/// through [`solve_cached`]).
 pub fn solve(op: &dyn LinearOp, b: &Mat, opts: &SolveOptions) -> Mat {
     solve_with(&plan(op, opts), op, b, opts)
+}
+
+/// Cache-aware [`solve`]: the plan is looked up in (or built into)
+/// `cache` under slot `key`, so repeated solves against a fixed operator
+/// pay the factorisation once and hyperparameter changes rebuild it
+/// automatically (content fingerprinting — see [`super::SolvePlanCache`]).
+pub fn solve_cached(
+    cache: &super::SolvePlanCache,
+    key: &str,
+    op: &dyn LinearOp,
+    b: &Mat,
+    opts: &SolveOptions,
+) -> Mat {
+    let plan = cache.get_or_plan(key, op, opts);
+    solve_with(&plan, op, b, opts)
+}
+
+/// Prepare plans for every element of a batch. On the shared-covariance
+/// fast path with an iterative strategy, the rank-k pivoted-Cholesky
+/// factor is computed **once** on the shared covariance and reused across
+/// all b preconditioners (each with its own σ² capacitance) — the batched
+/// analogue of [`build_preconditioner`].
+pub fn plan_batch(batch: &BatchOp<'_>, opts: &SolveOptions) -> Vec<SolvePlan> {
+    if batch.shared_parts().is_some() {
+        let strategy = batch.with_element(0, solve_strategy);
+        if strategy == SolveHint::Iterative {
+            return build_preconditioner_batch(batch, opts.precond_rank)
+                .into_iter()
+                .map(SolvePlan::Mbcg)
+                .collect();
+        }
+    }
+    (0..batch.len())
+        .map(|i| batch.with_element(i, |op| plan(op, opts)))
+        .collect()
+}
+
+/// Batched preconditioner build: identity when `rank == 0`; on the
+/// shared-covariance path one pivoted Cholesky serves every element.
+pub fn build_preconditioner_batch(
+    batch: &BatchOp<'_>,
+    rank: usize,
+) -> Vec<Box<dyn Preconditioner + Send>> {
+    let b = batch.len();
+    if rank == 0 {
+        return (0..b)
+            .map(|_| Box::new(IdentityPrecond) as Box<dyn Preconditioner + Send>)
+            .collect();
+    }
+    if let Some((cov, sigma2s)) = batch.shared_parts() {
+        let diag = cov.diag();
+        let pc = pivoted_cholesky(&diag, |i| cov.row(i), rank, 0.0);
+        if pc.l.cols() == 0 {
+            return (0..b)
+                .map(|_| Box::new(IdentityPrecond) as Box<dyn Preconditioner + Send>)
+                .collect();
+        }
+        return sigma2s
+            .iter()
+            .map(|&s2| {
+                Box::new(PartialCholPrecond::new(pc.l.clone(), s2))
+                    as Box<dyn Preconditioner + Send>
+            })
+            .collect();
+    }
+    (0..b)
+        .map(|i| batch.with_element(i, |op| build_preconditioner(op, rank)))
+        .collect()
+}
+
+/// Batched dispatch: solve `bᵢ` against batch element `i` under its
+/// prepared plan. Direct-structure elements (Cholesky / Woodbury /
+/// circulant) solve immediately; **all** iterative elements run through a
+/// single [`mbcg_batch`] call — one iteration loop, per-system early
+/// stopping, and (on the shared-covariance path) one fused operator
+/// product per iteration for the whole sub-batch.
+pub fn solve_batch(
+    batch: &BatchOp<'_>,
+    plans: &[&SolvePlan],
+    bs: &[&Mat],
+    opts: &SolveOptions,
+) -> Vec<Mat> {
+    let b = batch.len();
+    assert_eq!(plans.len(), b, "solve_batch: plan count mismatch");
+    assert_eq!(bs.len(), b, "solve_batch: RHS count mismatch");
+    let mut out: Vec<Option<Mat>> = (0..b).map(|_| None).collect();
+    let mut iter_idx = Vec::new();
+    for i in 0..b {
+        match plans[i] {
+            SolvePlan::Mbcg(_) => iter_idx.push(i),
+            direct => {
+                out[i] = Some(batch.with_element(i, |op| solve_with(direct, op, bs[i], opts)));
+            }
+        }
+    }
+    if !iter_idx.is_empty() {
+        let sub = batch.subset(&iter_idx);
+        fn mbcg_precond(plan: &SolvePlan) -> &dyn Preconditioner {
+            match plan {
+                SolvePlan::Mbcg(pre) => pre.as_ref(),
+                _ => unreachable!("iter_idx only holds Mbcg plans"),
+            }
+        }
+        let preconds: Vec<&dyn Preconditioner> =
+            iter_idx.iter().map(|&i| mbcg_precond(plans[i])).collect();
+        let sub_bs: Vec<&Mat> = iter_idx.iter().map(|&i| bs[i]).collect();
+        let results = mbcg_batch(
+            &sub,
+            &sub_bs,
+            &preconds,
+            &MbcgOptions {
+                max_iters: opts.max_iters,
+                tol: opts.tol,
+                n_solve_only: usize::MAX, // clamped per system: no tridiags
+            },
+        );
+        for (k, res) in iter_idx.iter().zip(results) {
+            out[*k] = Some(res.solves);
+        }
+    }
+    out.into_iter()
+        .map(|m| m.expect("every element solved"))
+        .collect()
 }
 
 #[cfg(test)]
@@ -216,6 +442,155 @@ mod tests {
         let mut kn = k.clone();
         kn.add_diag(1e-2);
         assert!(got.max_abs_diff(&reference_solve(&kn, &b)) < 1e-6);
+    }
+
+    #[test]
+    fn circulant_branch_is_exact() {
+        use crate::linalg::op::ToeplitzLinOp;
+        // periodic RBF-style column on a wrap-around pow2 grid: circulant
+        let m = 64;
+        let col: Vec<f64> = (0..m)
+            .map(|k| {
+                let d = k.min(m - k) as f64;
+                (-0.05 * d * d).exp()
+            })
+            .collect();
+        let op = AddedDiagOp::new(ToeplitzLinOp::new(col), 0.1);
+        assert_eq!(solve_strategy(&op), SolveHint::CirculantFft);
+        let built = plan(&op, &SolveOptions::default());
+        assert!(built.is_direct());
+        assert!(matches!(built, SolvePlan::Circulant(_)));
+        let mut rng = Rng::new(11);
+        let b = Mat::from_fn(m, 3, |_, _| rng.normal());
+        let got = solve_with(&built, &op, &b, &SolveOptions::default());
+        let want = reference_solve(&op.dense(), &b);
+        assert!(got.max_abs_diff(&want) < 1e-9, "{}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn non_circulant_toeplitz_stays_iterative() {
+        use crate::linalg::op::ToeplitzLinOp;
+        let m = 32;
+        let col: Vec<f64> = (0..m).map(|k| (-0.1 * (k * k) as f64).exp()).collect();
+        let op = AddedDiagOp::new(ToeplitzLinOp::new(col), 0.1);
+        assert_eq!(solve_strategy(&op), SolveHint::Iterative);
+    }
+
+    #[test]
+    fn indefinite_circulant_degrades_to_mbcg_plan() {
+        use crate::linalg::op::ToeplitzLinOp;
+        // strong off-diagonal mass drives an eigenvalue negative: the hint
+        // still says circulant, but the plan must degrade to mBCG — which
+        // then cannot be exact on an indefinite system, so only check the
+        // plan shape
+        let m = 8;
+        let mut col = vec![0.0; m];
+        col[0] = 1.0;
+        col[1] = 10.0;
+        col[m - 1] = 10.0;
+        let op = ToeplitzLinOp::new(col);
+        assert_eq!(solve_strategy(&op), SolveHint::CirculantFft);
+        let built = plan(&op, &SolveOptions::default());
+        assert!(matches!(built, SolvePlan::Mbcg(_)));
+    }
+
+    #[test]
+    fn solve_batch_mixes_direct_and_iterative_plans() {
+        use crate::linalg::op::BatchOp;
+        let mut rng = Rng::new(21);
+        let n = 40;
+        // element 0: Woodbury-direct; element 1: iterative (matmul-only)
+        struct MatmulOnly(Mat);
+        impl crate::linalg::op::LinearOp for MatmulOnly {
+            fn shape(&self) -> (usize, usize) {
+                self.0.shape()
+            }
+            fn matmul(&self, m: &Mat) -> Mat {
+                self.0.matmul(m)
+            }
+            fn diag(&self) -> Vec<f64> {
+                (0..self.0.rows()).map(|i| self.0.get(i, i)).collect()
+            }
+            fn row(&self, i: usize) -> Vec<f64> {
+                self.0.row(i).to_vec()
+            }
+        }
+        let l = Mat::from_fn(n, 4, |_, _| rng.normal());
+        let direct = AddedDiagOp::new(LowRankOp::new(l.clone()), 0.2);
+        let xs: Vec<f64> = (0..n).map(|_| rng.uniform()).collect();
+        let k = Mat::from_fn(n, n, |i, j| {
+            let d = xs[i] - xs[j];
+            (-d * d / 0.1).exp()
+        });
+        let iterative = AddedDiagOp::new(MatmulOnly(k.clone()), 0.05);
+        let batch = BatchOp::new(vec![
+            &direct as &dyn crate::linalg::op::LinearOp,
+            &iterative as &dyn crate::linalg::op::LinearOp,
+        ]);
+        let opts = SolveOptions {
+            max_iters: 300,
+            tol: 1e-12,
+            precond_rank: 6,
+        };
+        let plans = crate::linalg::op::plan_batch(&batch, &opts);
+        assert!(plans[0].is_direct());
+        assert!(!plans[1].is_direct());
+        let b0 = Mat::from_fn(n, 2, |_, _| rng.normal());
+        let b1 = Mat::from_fn(n, 3, |_, _| rng.normal());
+        let plan_refs: Vec<&SolvePlan> = plans.iter().collect();
+        let got = crate::linalg::op::solve_batch(&batch, &plan_refs, &[&b0, &b1], &opts);
+        let want0 = reference_solve(&direct.dense(), &b0);
+        let want1 = reference_solve(&iterative.dense(), &b1);
+        assert!(got[0].max_abs_diff(&want0) < 1e-8);
+        assert!(got[1].max_abs_diff(&want1) < 1e-6);
+    }
+
+    #[test]
+    fn shared_plan_batch_builds_one_pivoted_factor_per_sigma() {
+        use crate::linalg::op::BatchOp;
+        let mut rng = Rng::new(31);
+        let n = 50;
+        let xs: Vec<f64> = (0..n).map(|_| rng.uniform()).collect();
+        let k = Mat::from_fn(n, n, |i, j| {
+            let d = xs[i] - xs[j];
+            (-d * d / 0.08).exp()
+        });
+        struct MatmulOnly(Mat);
+        impl crate::linalg::op::LinearOp for MatmulOnly {
+            fn shape(&self) -> (usize, usize) {
+                self.0.shape()
+            }
+            fn matmul(&self, m: &Mat) -> Mat {
+                self.0.matmul(m)
+            }
+            fn diag(&self) -> Vec<f64> {
+                (0..self.0.rows()).map(|i| self.0.get(i, i)).collect()
+            }
+            fn row(&self, i: usize) -> Vec<f64> {
+                self.0.row(i).to_vec()
+            }
+        }
+        let cov = MatmulOnly(k.clone());
+        let sigma2s = vec![0.05, 0.2, 0.8];
+        let batch = BatchOp::shared(&cov, sigma2s.clone());
+        let opts = SolveOptions {
+            max_iters: 400,
+            tol: 1e-12,
+            precond_rank: 5,
+        };
+        let plans = crate::linalg::op::plan_batch(&batch, &opts);
+        assert_eq!(plans.len(), 3);
+        assert!(plans.iter().all(|p| !p.is_direct()));
+        let bs: Vec<Mat> = (0..3).map(|_| Mat::from_fn(n, 2, |_, _| rng.normal())).collect();
+        let b_refs: Vec<&Mat> = bs.iter().collect();
+        let plan_refs: Vec<&SolvePlan> = plans.iter().collect();
+        let got = crate::linalg::op::solve_batch(&batch, &plan_refs, &b_refs, &opts);
+        for (i, g) in got.iter().enumerate() {
+            let mut kn = k.clone();
+            kn.add_diag(sigma2s[i]);
+            let want = reference_solve(&kn, &bs[i]);
+            assert!(g.max_abs_diff(&want) < 1e-6, "element {i}: {}", g.max_abs_diff(&want));
+        }
     }
 
     #[test]

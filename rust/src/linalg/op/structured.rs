@@ -4,7 +4,7 @@
 //! [`crate::linalg::toeplitz`] lifted into the operator algebra so they
 //! compose with everything else.
 
-use super::LinearOp;
+use super::{LinearOp, SolveHint};
 use crate::linalg::kronecker::{kron_dense, kron_matmul};
 use crate::linalg::toeplitz::ToeplitzOp;
 use crate::tensor::Mat;
@@ -105,6 +105,21 @@ impl ToeplitzLinOp {
     pub fn toeplitz(&self) -> &ToeplitzOp {
         &self.t
     }
+
+    /// True when the Toeplitz matrix is itself **circulant**
+    /// (`c[k] = c[m−k]` for all k) with a power-of-two size — exactly the
+    /// case where FFT diagonalisation solves it directly instead of mBCG
+    /// (a periodic kernel on a regular wrap-around grid, the SKI `K_UU`
+    /// shape where the circulant embedding is exact).
+    pub fn is_circulant(&self) -> bool {
+        let col = self.t.first_column();
+        let m = col.len();
+        if !m.is_power_of_two() {
+            return false;
+        }
+        let scale = col.iter().fold(0.0f64, |a, v| a.max(v.abs())).max(1e-300);
+        (1..m).all(|k| (col[k] - col[m - k]).abs() <= 1e-12 * scale)
+    }
 }
 
 impl LinearOp for ToeplitzLinOp {
@@ -127,6 +142,22 @@ impl LinearOp for ToeplitzLinOp {
 
     fn entry(&self, i: usize, j: usize) -> f64 {
         self.t.first_column()[i.abs_diff(j)]
+    }
+
+    fn solve_hint(&self) -> SolveHint {
+        if self.is_circulant() {
+            SolveHint::CirculantFft
+        } else {
+            SolveHint::Iterative
+        }
+    }
+
+    fn circulant_column(&self) -> Option<Vec<f64>> {
+        if self.is_circulant() {
+            Some(self.t.first_column().to_vec())
+        } else {
+            None
+        }
     }
 
     fn dense(&self) -> Mat {
@@ -166,6 +197,31 @@ mod tests {
             }
             assert!((op.diag()[idx] - want.get(idx, idx)).abs() < 1e-13);
         }
+    }
+
+    #[test]
+    fn circulant_detection() {
+        // wrap-around column c[k] = f(min(k, m−k)) on a pow2 grid → circulant
+        let m = 16;
+        let col: Vec<f64> = (0..m)
+            .map(|k| {
+                let d = k.min(m - k) as f64;
+                (-0.1 * d * d).exp()
+            })
+            .collect();
+        let op = ToeplitzLinOp::new(col);
+        assert!(op.is_circulant());
+        assert_eq!(op.solve_hint(), SolveHint::CirculantFft);
+        assert_eq!(op.circulant_column().unwrap().len(), m);
+        // non-symmetric column → plain Toeplitz, iterative hint
+        let decaying: Vec<f64> = (0..m).map(|k| 1.0 / (1.0 + k as f64)).collect();
+        let plain = ToeplitzLinOp::new(decaying);
+        assert!(!plain.is_circulant());
+        assert_eq!(plain.solve_hint(), SolveHint::Iterative);
+        assert!(plain.circulant_column().is_none());
+        // non-power-of-two size never qualifies
+        let odd = ToeplitzLinOp::new(vec![1.0, 0.2, 0.2]);
+        assert!(!odd.is_circulant());
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! bbmm train   --dataset wine --model exact --engine bbmm --iters 50
 //! bbmm predict --dataset airfoil --model exact --engine bbmm
 //! bbmm serve   --dataset autompg --model exact|sgpr|ski --addr 127.0.0.1:7777
+//! bbmm serve   --tenant wine=exact --tenant fast=sgpr@airfoil   (multi-tenant)
 //! bbmm artifact --name mll_rbf_n256_d4 [--dir artifacts]
 //! bbmm info
 //! ```
@@ -12,7 +13,8 @@
 //! abort the process mid-serve with a panic).
 
 use bbmm_gp::coordinator::{
-    serve, served_predictor, BatchPolicy, DynamicBatcher, ServableModel, ServerConfig,
+    multi_served_predictor, serve, served_predictor, BatchPolicy, DynamicBatcher, ServableModel,
+    ServerConfig, TenantSpec,
 };
 use bbmm_gp::data::synthetic::{generate, spec_by_name};
 use bbmm_gp::gp::exact::{Engine, ExactGp};
@@ -20,7 +22,7 @@ use bbmm_gp::gp::mll::{BbmmEngine, CholeskyEngine, InferenceEngine};
 use bbmm_gp::gp::predict::{mae, rmse};
 use bbmm_gp::gp::{DongEngine, SgprOp, SkiOp};
 use bbmm_gp::kernels::{DenseKernelOp, KernelCov, KernelCovOp, Matern52, Rbf, ShardedCovOp};
-use bbmm_gp::linalg::op::{solve_strategy, AddedDiagOp, LinearOp, SolveOptions};
+use bbmm_gp::linalg::op::{solve_strategy, AddedDiagOp, LinearOp, SolveOptions, SolvePlanCache};
 use bbmm_gp::runtime::{default_artifact_dir, Runtime};
 use bbmm_gp::tensor::Mat;
 use bbmm_gp::train::{TrainConfig, Trainer};
@@ -134,7 +136,10 @@ fn print_help() {
            --kernel rbf|matern52             (default: rbf)\n\
            --iters N --lr F --probes T --cg-iters P --precond-rank K\n\
            --seed S --n N (override dataset size)\n\
-           --shards S          (serve: row-shard the kernel operator)"
+           --shards S          (serve: row-shard the kernel operator)\n\
+           --tenant name=model[@dataset]   (serve: repeatable; host many\n\
+                               models behind one batched BatchOp solve,\n\
+                               routed by the `name:` line-protocol prefix)"
     );
 }
 
@@ -389,22 +394,26 @@ impl ServableModel for SkiServable {
     }
 }
 
-fn cmd_serve(args: &Args) -> Result<(), CliError> {
-    let ds = load_dataset(args)?;
-    let (params, _nmll, _secs) = train_model(args, &ds)?;
+/// Train + compose the served model for the canonical single-model
+/// argument set (the per-tenant launcher reuses this with overridden
+/// `--model`/`--dataset`).
+fn build_servable(
+    args: &Args,
+    ds: &bbmm_gp::data::Dataset,
+) -> Result<Box<dyn ServableModel>, CliError> {
+    let (params, _nmll, _secs) = train_model(args, ds)?;
     let mut kernel = make_kernel(args);
     let nk = kernel.n_params();
     kernel.set_params(&params[..nk]);
     let noise = params[nk].exp();
-    let dim = ds.dim();
     let shards = args.usize_or("shards", 1)?;
     // build the served operator composition for the requested model — the
     // server consumes the ServableModel seam, so any LinearOp composition
     // can sit behind it
-    let model: Box<dyn ServableModel> = match args.get_or("model", "exact") {
+    Ok(match args.get_or("model", "exact") {
         "sgpr" => {
             let m = args.usize_or("inducing", 300)?;
-            let u = draw_inducing(&ds, m, args.u64_or("seed", 0)?);
+            let u = draw_inducing(ds, m, args.u64_or("seed", 0)?);
             Box::new(SgprServable {
                 op: SgprOp::new(ds.x_train.clone(), u, kernel, noise),
                 y: ds.y_train.clone(),
@@ -431,28 +440,107 @@ fn cmd_serve(args: &Args) -> Result<(), CliError> {
                 y: ds.y_train.clone(),
             })
         }
-    };
-    let operator = model.describe();
-    // only the exact backend consumes --shards; record 1 for the others so
-    // the deployment log never claims sharding that is not running
-    let shard_count = match args.get_or("model", "exact") {
-        "sgpr" | "ski" => 1,
-        _ => shards.max(1),
-    };
+    })
+}
+
+fn cmd_serve(args: &Args) -> Result<(), CliError> {
     let solve_opts = SolveOptions {
         max_iters: args.usize_or("cg-iters", 20)?.max(50),
         tol: 1e-8,
         precond_rank: args.usize_or("precond-rank", 5)?,
     };
-    let predictor = served_predictor(model, solve_opts);
-    let batcher = Arc::new(DynamicBatcher::new(
-        dim,
-        BatchPolicy {
-            max_batch: args.usize_or("max-batch", 64)?,
-            max_wait: std::time::Duration::from_millis(args.u64_or("max-wait-ms", 2)?),
-        },
-        predictor,
-    ));
+    let policy = BatchPolicy {
+        max_batch: args.usize_or("max-batch", 64)?,
+        max_wait: std::time::Duration::from_millis(args.u64_or("max-wait-ms", 2)?),
+        max_queue: args.usize_or("max-queue", 1024)?,
+    };
+    let tenant_specs = args.get_all("tenant");
+    let (batcher, operator, shard_count, dims) = if tenant_specs.is_empty() {
+        // single-model deployment (tenant 0, routing name "default")
+        let ds = load_dataset(args)?;
+        let dim = ds.dim();
+        let model = build_servable(args, &ds)?;
+        let operator = model.describe();
+        // only the exact backend consumes --shards; record 1 for the
+        // others so the deployment log never claims sharding that is not
+        // running
+        let shard_count = match args.get_or("model", "exact") {
+            "sgpr" | "ski" => 1,
+            _ => args.usize_or("shards", 1)?.max(1),
+        };
+        let predictor = served_predictor(model, solve_opts);
+        let batcher = Arc::new(DynamicBatcher::new(dim, policy, predictor));
+        (batcher, operator, shard_count, vec![dim])
+    } else {
+        // multi-tenant deployment: every `--tenant name=model[@dataset]`
+        // trains its own posterior; each batching tick answers all
+        // tenants through one BatchOp dispatch with per-tenant plans
+        // cached across predict calls
+        let mut specs: Vec<TenantSpec> = Vec::new();
+        let mut models: Vec<(String, Box<dyn ServableModel>)> = Vec::new();
+        let mut dims = Vec::new();
+        let mut described = Vec::new();
+        let mut max_shards = 1usize;
+        for spec in &tenant_specs {
+            let (name, rest) = spec.split_once('=').ok_or_else(|| CliError {
+                flag: "tenant".to_string(),
+                message: format!("expected name=model[@dataset], got {spec:?}"),
+            })?;
+            // the routing layer resolves names first-match, and the plan
+            // cache keys by name — a duplicate would shadow one tenant and
+            // thrash the other's cache slot, so reject it up front
+            if specs.iter().any(|s| s.name == name) {
+                return Err(CliError {
+                    flag: "tenant".to_string(),
+                    message: format!("duplicate tenant name {name:?}"),
+                });
+            }
+            let (model_name, dataset) = match rest.split_once('@') {
+                Some((m, d)) => (m, Some(d)),
+                None => (rest, None),
+            };
+            // build_servable's match falls back to exact for unknown
+            // names (the single-model path's historic behavior) — here
+            // the name is part of a spec string, so a typo like `sgrp`
+            // must not silently serve an O(n²) exact posterior
+            if !matches!(model_name, "exact" | "sgpr" | "ski") {
+                return Err(CliError {
+                    flag: "tenant".to_string(),
+                    message: format!(
+                        "unknown model {model_name:?} in {spec:?} (expected exact|sgpr|ski)"
+                    ),
+                });
+            }
+            let mut overrides = vec![("model", model_name)];
+            if let Some(d) = dataset {
+                overrides.push(("dataset", d));
+            }
+            let targs = args.with_overrides(&overrides);
+            let ds = load_dataset(&targs)?;
+            println!(
+                "tenant {name}: model={model_name} dataset={} n={} d={}",
+                ds.name,
+                ds.n_train(),
+                ds.dim()
+            );
+            let model = build_servable(&targs, &ds)?;
+            described.push(format!("{name}={}", model.describe()));
+            specs.push(TenantSpec {
+                name: name.to_string(),
+                dim: ds.dim(),
+            });
+            dims.push(ds.dim());
+            models.push((name.to_string(), model));
+            // only exact tenants consume --shards (build_servable reads it)
+            if !matches!(model_name, "sgpr" | "ski") {
+                max_shards = max_shards.max(targs.usize_or("shards", 1)?);
+            }
+        }
+        let cache = Arc::new(SolvePlanCache::new());
+        let predictor = multi_served_predictor(models, solve_opts, cache);
+        let batcher = Arc::new(DynamicBatcher::new_multi(specs, policy, predictor));
+        (batcher, described.join(" | "), max_shards, dims)
+    };
     let config = ServerConfig {
         addr: args.get_or("addr", "127.0.0.1:7777").to_string(),
         operator,
@@ -460,7 +548,7 @@ fn cmd_serve(args: &Args) -> Result<(), CliError> {
         stop: Arc::new(AtomicBool::new(false)),
     };
     println!(
-        "serving {dim}-feature GP predictions — operator: {}",
+        "serving GP predictions (feature dims {dims:?}) — operator: {}",
         config.operator
     );
     serve(config, batcher, |addr| println!("listening on {addr}")).expect("server failed");

@@ -31,6 +31,9 @@ pub struct Args {
     pub positional: Vec<String>,
     /// --key value / --key=value pairs (last occurrence wins)
     pub options: BTreeMap<String, String>,
+    /// every occurrence of each --key, in order (repeatable options like
+    /// `--tenant a=exact --tenant b=sgpr`)
+    pub multi: BTreeMap<String, Vec<String>>,
     /// bare --flags
     pub flags: Vec<String>,
 }
@@ -44,13 +47,15 @@ impl Args {
             if let Some(stripped) = a.strip_prefix("--") {
                 if let Some((k, v)) = stripped.split_once('=') {
                     args.options.insert(k.to_string(), v.to_string());
+                    args.multi.entry(k.to_string()).or_default().push(v.to_string());
                 } else if iter
                     .peek()
                     .map(|nxt| !nxt.starts_with("--"))
                     .unwrap_or(false)
                 {
                     let v = iter.next().unwrap();
-                    args.options.insert(stripped.to_string(), v);
+                    args.options.insert(stripped.to_string(), v.clone());
+                    args.multi.entry(stripped.to_string()).or_default().push(v);
                 } else {
                     args.flags.push(stripped.to_string());
                 }
@@ -76,6 +81,26 @@ impl Args {
 
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
+    }
+
+    /// Every occurrence of a repeatable option, in command-line order
+    /// (empty when the option never appeared).
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.multi
+            .get(name)
+            .map(|vs| vs.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    /// A copy of these arguments with the given options overridden — the
+    /// per-tenant launcher path (`--tenant name=model@dataset` expands to
+    /// the canonical single-model argument set).
+    pub fn with_overrides(&self, overrides: &[(&str, &str)]) -> Args {
+        let mut out = self.clone();
+        for (k, v) in overrides {
+            out.options.insert((*k).to_string(), (*v).to_string());
+        }
+        out
     }
 
     /// Typed option access with a default; a malformed value is a proper
@@ -147,5 +172,24 @@ mod tests {
     fn trailing_flag() {
         let a = parse(&["--verbose"]);
         assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn repeated_options_accumulate_in_order() {
+        let a = parse(&["--tenant", "a=exact", "--tenant", "b=sgpr", "--tenant=c=ski"]);
+        assert_eq!(a.get_all("tenant"), vec!["a=exact", "b=sgpr", "c=ski"]);
+        // last occurrence still wins for scalar access
+        assert_eq!(a.get("tenant"), Some("c=ski"));
+        assert!(a.get_all("missing").is_empty());
+    }
+
+    #[test]
+    fn with_overrides_rewrites_options() {
+        let a = parse(&["serve", "--model", "exact", "--n", "100"]);
+        let b = a.with_overrides(&[("model", "sgpr"), ("dataset", "wine")]);
+        assert_eq!(b.get("model"), Some("sgpr"));
+        assert_eq!(b.get("dataset"), Some("wine"));
+        assert_eq!(b.get("n"), Some("100"));
+        assert_eq!(a.get("model"), Some("exact"));
     }
 }

@@ -1,0 +1,180 @@
+//! Batch-axis properties: `mbcg_batch` must reproduce a loop of generic
+//! `solve` calls to 1e-10 relative across **all four model families**
+//! (exact, SGPR, SKI, sharded) stacked in one `BatchOp`; per-system early
+//! stopping must freeze converged systems; and the `SolvePlanCache` must
+//! hit/miss/invalidate correctly over real model operators.
+
+use bbmm_gp::gp::{SgprOp, SkiOp};
+use bbmm_gp::kernels::{DenseKernelOp, Rbf, ShardedKernelOp};
+use bbmm_gp::linalg::mbcg::{mbcg_batch, MbcgOptions};
+use bbmm_gp::linalg::op::{
+    plan_batch, solve, solve_batch, solve_cached, BatchOp, LinearOp, SolveOptions, SolvePlan,
+    SolvePlanCache,
+};
+use bbmm_gp::linalg::preconditioner::{IdentityPrecond, Preconditioner};
+use bbmm_gp::tensor::Mat;
+use bbmm_gp::util::Rng;
+
+/// One same-n operator per model family: exact (fused dense backend),
+/// sharded, SGPR (low-rank Woodbury composition), SKI (interp sandwich).
+fn four_families(n: usize, seed: u64) -> (Vec<Box<dyn LinearOp>>, Vec<&'static str>) {
+    let mut rng = Rng::new(seed);
+    let x = Mat::from_fn(n, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+    let exact = DenseKernelOp::new(x.clone(), Box::new(Rbf::new(0.5, 1.0)), 0.1);
+    let sharded = ShardedKernelOp::new(x.clone(), Box::new(Rbf::new(0.4, 1.1)), 0.2, 3);
+    let u = Mat::from_fn(12, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+    let sgpr = SgprOp::new(x.clone(), u, Box::new(Rbf::new(0.5, 1.0)), 0.15);
+    let z: Vec<f64> = (0..n).map(|i| x.get(i, 0)).collect();
+    let ski = SkiOp::new(z, 40, Box::new(Rbf::new(0.3, 1.0)), 0.12);
+    let ops: Vec<Box<dyn LinearOp>> =
+        vec![Box::new(exact), Box::new(sharded), Box::new(sgpr), Box::new(ski)];
+    (ops, vec!["exact", "sharded", "sgpr", "ski"])
+}
+
+#[test]
+fn mbcg_batch_matches_a_loop_of_solve_calls_across_all_four_families() {
+    let n = 60;
+    let (ops, names) = four_families(n, 1);
+    let els: Vec<&dyn LinearOp> = ops.iter().map(|o| o.as_ref()).collect();
+    let batch = BatchOp::new(els);
+    assert_eq!(batch.len(), 4);
+    let mut rng = Rng::new(2);
+    let bs: Vec<Mat> = (0..4).map(|_| Mat::from_fn(n, 2, |_, _| rng.normal())).collect();
+    let b_refs: Vec<&Mat> = bs.iter().collect();
+    // b ≥ 4 systems through ONE iteration loop, tight tolerance
+    let id = IdentityPrecond;
+    let preconds: Vec<&dyn Preconditioner> = (0..4).map(|_| &id as &dyn Preconditioner).collect();
+    let results = mbcg_batch(
+        &batch,
+        &b_refs,
+        &preconds,
+        &MbcgOptions {
+            max_iters: 4 * n,
+            tol: 1e-13,
+            n_solve_only: usize::MAX,
+        },
+    );
+    let opts = SolveOptions {
+        max_iters: 4 * n,
+        tol: 1e-13,
+        precond_rank: 5,
+    };
+    for k in 0..4 {
+        // the sequential baseline: the generic dispatcher, one op at a time
+        // (direct Woodbury for SGPR, mBCG elsewhere)
+        let want = solve(&ops[k], &bs[k], &opts);
+        let scale = 1.0 + want.fro_norm();
+        assert!(
+            results[k].solves.max_abs_diff(&want) < 1e-10 * scale,
+            "family {}: {}",
+            names[k],
+            results[k].solves.max_abs_diff(&want)
+        );
+    }
+}
+
+#[test]
+fn solve_batch_matches_a_loop_of_solve_calls_across_all_four_families() {
+    let n = 55;
+    let (ops, names) = four_families(n, 3);
+    let els: Vec<&dyn LinearOp> = ops.iter().map(|o| o.as_ref()).collect();
+    let batch = BatchOp::new(els);
+    let opts = SolveOptions {
+        max_iters: 4 * n,
+        tol: 1e-13,
+        precond_rank: 5,
+    };
+    let plans = plan_batch(&batch, &opts);
+    // SGPR's plan must be the direct Woodbury one — no CG for it even
+    // inside the batch
+    assert!(plans[2].is_direct(), "sgpr should plan direct Woodbury");
+    let mut rng = Rng::new(4);
+    let bs: Vec<Mat> = (0..4).map(|_| Mat::from_fn(n, 3, |_, _| rng.normal())).collect();
+    let b_refs: Vec<&Mat> = bs.iter().collect();
+    let plan_refs: Vec<&SolvePlan> = plans.iter().collect();
+    let got = solve_batch(&batch, &plan_refs, &b_refs, &opts);
+    for k in 0..4 {
+        let want = solve(&ops[k], &bs[k], &opts);
+        let scale = 1.0 + want.fro_norm();
+        assert!(
+            got[k].max_abs_diff(&want) < 1e-10 * scale,
+            "family {}: {}",
+            names[k],
+            got[k].max_abs_diff(&want)
+        );
+    }
+}
+
+#[test]
+fn per_system_early_stopping_leaves_other_systems_running() {
+    // four copies of one covariance at very different noise levels: the
+    // high-noise (well-conditioned) systems converge and freeze while the
+    // low-noise one keeps iterating — per-system counts must differ
+    let n = 80;
+    let mut rng = Rng::new(5);
+    let x = Mat::from_fn(n, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+    let cov = bbmm_gp::kernels::KernelCovOp::new(x, Box::new(Rbf::new(0.5, 1.0)));
+    let sigma2s = vec![5.0, 1e-4, 2.0, 0.5];
+    let batch = BatchOp::shared(&cov, sigma2s.clone());
+    let bs: Vec<Mat> = (0..4).map(|_| Mat::from_fn(n, 2, |_, _| rng.normal())).collect();
+    let b_refs: Vec<&Mat> = bs.iter().collect();
+    let id = IdentityPrecond;
+    let preconds: Vec<&dyn Preconditioner> = (0..4).map(|_| &id as &dyn Preconditioner).collect();
+    let opts = MbcgOptions {
+        max_iters: 2 * n,
+        tol: 1e-10,
+        n_solve_only: usize::MAX,
+    };
+    let results = mbcg_batch(&batch, &b_refs, &preconds, &opts);
+    assert!(
+        results[0].iterations < results[1].iterations,
+        "σ²=5.0 must freeze before σ²=1e-4: {} vs {}",
+        results[0].iterations,
+        results[1].iterations
+    );
+    // frozen system is *converged*, not truncated
+    assert!(results[0].final_residuals.iter().all(|&r| r < 1e-10));
+    // and every system still matches its standalone dispatch
+    let solve_opts = SolveOptions {
+        max_iters: 2 * n,
+        tol: 1e-10,
+        precond_rank: 0,
+    };
+    for (k, res) in results.iter().enumerate() {
+        let want = batch.with_element(k, |op| solve(op, &bs[k], &solve_opts));
+        let scale = 1.0 + want.fro_norm();
+        assert!(
+            res.solves.max_abs_diff(&want) < 1e-8 * scale,
+            "system {k}: {}",
+            res.solves.max_abs_diff(&want)
+        );
+    }
+}
+
+#[test]
+fn solve_cached_round_trips_across_model_families() {
+    let n = 50;
+    let (ops, names) = four_families(n, 6);
+    let cache = SolvePlanCache::new();
+    let opts = SolveOptions {
+        max_iters: 4 * n,
+        tol: 1e-13,
+        precond_rank: 5,
+    };
+    let mut rng = Rng::new(7);
+    let b = Mat::from_fn(n, 2, |_, _| rng.normal());
+    for (op, name) in ops.iter().zip(names.iter().copied()) {
+        let got = solve_cached(&cache, name, op.as_ref(), &b, &opts);
+        let want = solve(op.as_ref(), &b, &opts);
+        let scale = 1.0 + want.fro_norm();
+        assert!(got.max_abs_diff(&want) < 1e-10 * scale, "family {name}");
+    }
+    assert_eq!(cache.misses(), 4);
+    assert_eq!(cache.hits(), 0);
+    // second pass over every family hits
+    for (op, name) in ops.iter().zip(names.iter().copied()) {
+        let _ = solve_cached(&cache, name, op.as_ref(), &b, &opts);
+    }
+    assert_eq!(cache.hits(), 4);
+    assert_eq!(cache.invalidations(), 0);
+}

@@ -1,0 +1,186 @@
+//! Multi-tenant serving integration: a two-tenant deployment served over
+//! TCP (`bbmm serve`'s accept loop) must answer interleaved per-tenant
+//! requests correctly **through one `BatchOp` solve path per tick**, with
+//! per-tenant solve plans cached across predict calls.
+
+use bbmm_gp::coordinator::{
+    multi_served_predictor, serve, BatchPolicy, DynamicBatcher, ServableModel, ServerConfig,
+    TenantSpec,
+};
+use bbmm_gp::kernels::{DenseKernelOp, Matern52, Rbf};
+use bbmm_gp::linalg::cholesky::Cholesky;
+use bbmm_gp::linalg::op::{LinearOp, SolveOptions, SolvePlanCache};
+use bbmm_gp::tensor::Mat;
+use bbmm_gp::util::Rng;
+use std::io::{BufRead, BufReader, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// An exact-GP posterior behind the serving seam (what `bbmm serve`
+/// builds per tenant).
+struct ExactTenant {
+    op: DenseKernelOp,
+    y: Vec<f64>,
+}
+
+impl ServableModel for ExactTenant {
+    fn op(&self) -> &dyn LinearOp {
+        &self.op
+    }
+    fn cross(&self, xs: &Mat) -> Mat {
+        self.op.cross(xs, self.op.x())
+    }
+    fn prior_diag(&self, xs: &Mat) -> Vec<f64> {
+        (0..xs.rows())
+            .map(|i| self.op.kernel().eval(xs.row(i), xs.row(i)))
+            .collect()
+    }
+    fn y(&self) -> &[f64] {
+        &self.y
+    }
+}
+
+fn tenant(n: usize, seed: u64, matern: bool, noise: f64) -> ExactTenant {
+    let mut rng = Rng::new(seed);
+    let x = Mat::from_fn(n, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+    let y: Vec<f64> = (0..n)
+        .map(|i| (3.0 * x.get(i, 0)).sin() - 0.5 * x.get(i, 1) + 0.02 * rng.normal())
+        .collect();
+    let kernel: Box<dyn bbmm_gp::kernels::Kernel> = if matern {
+        Box::new(Matern52::new(0.6, 0.9))
+    } else {
+        Box::new(Rbf::new(0.5, 1.0))
+    };
+    ExactTenant {
+        op: DenseKernelOp::new(x, kernel, noise),
+        y,
+    }
+}
+
+/// Dense-Cholesky reference posterior mean for one tenant at one point.
+fn reference_mean(t: &ExactTenant, x: &[f64]) -> f64 {
+    let kd = t.op.dense();
+    let alpha = Cholesky::new_with_jitter(&kd).unwrap().solve_vec(&t.y);
+    let xs = Mat::from_vec(1, 2, x.to_vec());
+    let k_star = t.op.cross(&xs, t.op.x());
+    k_star.row(0).iter().zip(alpha.iter()).map(|(a, b)| a * b).sum()
+}
+
+#[test]
+fn two_tenant_deployment_answers_interleaved_requests_through_one_batch_path() {
+    let n = 60;
+    let ta = tenant(n, 1, false, 0.05);
+    let tb = tenant(n, 2, true, 0.2);
+    // references computed against the same operators before they move
+    // into the server
+    let probe_a = [0.25, -0.5];
+    let probe_b = [-0.75, 0.1];
+    let want_a = reference_mean(&ta, &probe_a);
+    let want_b = reference_mean(&tb, &probe_b);
+
+    let opts = SolveOptions {
+        max_iters: 400,
+        tol: 1e-10,
+        precond_rank: 5,
+    };
+    let cache = Arc::new(SolvePlanCache::new());
+    let models: Vec<(String, Box<dyn ServableModel>)> = vec![
+        ("alpha".to_string(), Box::new(ta)),
+        ("beta".to_string(), Box::new(tb)),
+    ];
+    let predictor = multi_served_predictor(models, opts, Arc::clone(&cache));
+    let batcher = Arc::new(DynamicBatcher::new_multi(
+        vec![
+            TenantSpec {
+                name: "alpha".into(),
+                dim: 2,
+            },
+            TenantSpec {
+                name: "beta".into(),
+                dim: 2,
+            },
+        ],
+        BatchPolicy {
+            max_batch: 32,
+            max_wait: Duration::from_millis(25),
+            ..BatchPolicy::default()
+        },
+        predictor,
+    ));
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let config = ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        operator: "alpha=exact(rbf) | beta=exact(matern52)".to_string(),
+        shard_count: 1,
+        stop: Arc::clone(&stop),
+    };
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let srv = {
+        let b = Arc::clone(&batcher);
+        std::thread::spawn(move || {
+            serve(config, b, move |addr| {
+                addr_tx.send(addr).unwrap();
+            })
+            .unwrap();
+        })
+    };
+    let addr = addr_rx.recv().unwrap();
+
+    // two concurrent clients interleave tenants so ticks carry BOTH
+    // tenants' blocks — each tick is then one BatchOp dispatch
+    let mut clients = Vec::new();
+    for c in 0..2 {
+        let line = if c == 0 {
+            format!("alpha:{},{}\n", probe_a[0], probe_a[1])
+        } else {
+            format!("beta:{},{}\n", probe_b[0], probe_b[1])
+        };
+        clients.push(std::thread::spawn(move || {
+            let mut conn = std::net::TcpStream::connect(addr).unwrap();
+            let mut means = Vec::new();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            for _ in 0..4 {
+                conn.write_all(line.as_bytes()).unwrap();
+                let mut resp = String::new();
+                reader.read_line(&mut resp).unwrap();
+                assert!(!resp.starts_with("ERR"), "{resp}");
+                let mean: f64 = resp.trim().split(',').next().unwrap().parse().unwrap();
+                means.push(mean);
+            }
+            means
+        }));
+    }
+    let mean_a = clients.remove(0).join().unwrap();
+    let mean_b = clients.remove(0).join().unwrap();
+    for m in &mean_a {
+        assert!((m - want_a).abs() < 1e-5, "alpha: {m} vs {want_a}");
+    }
+    for m in &mean_b {
+        assert!((m - want_b).abs() < 1e-5, "beta: {m} vs {want_b}");
+    }
+
+    // protocol surface: tenant listing + stats + unknown tenant
+    let mut conn = std::net::TcpStream::connect(addr).unwrap();
+    conn.write_all(b"TENANTS\nghost:1.0,2.0\nSTATS\nQUIT\n").unwrap();
+    let mut lines = BufReader::new(conn.try_clone().unwrap()).lines();
+    assert_eq!(lines.next().unwrap().unwrap(), "alpha:2 beta:2");
+    assert!(lines.next().unwrap().unwrap().starts_with("ERR unknown tenant"));
+    let stats = lines.next().unwrap().unwrap();
+    assert!(stats.contains("requests=8"), "{stats}");
+    assert_eq!(lines.next().unwrap().unwrap(), "BYE");
+
+    stop.store(true, Ordering::Relaxed);
+    srv.join().unwrap();
+
+    // per-tenant plans were built exactly once each and then reused
+    // across predict calls (8 requests over ≥1 ticks)
+    assert_eq!(cache.misses(), 2, "{}", cache.stats());
+    assert_eq!(cache.invalidations(), 0);
+    assert!(cache.hits() >= 2, "{}", cache.stats());
+    assert_eq!(cache.len(), 2);
+    // coalescing actually happened: fewer ticks than requests
+    let batches = batcher.metrics.batches.load(Ordering::Relaxed);
+    assert!(batches < 8, "batches={batches}");
+}

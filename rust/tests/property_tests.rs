@@ -360,6 +360,7 @@ fn prop_batcher_preserves_request_response_pairing() {
         BatchPolicy {
             max_batch: 7,
             max_wait: std::time::Duration::from_millis(1),
+            ..BatchPolicy::default()
         },
         f,
     ));
