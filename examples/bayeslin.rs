@@ -12,9 +12,10 @@
 //! ```
 
 use bbmm_gp::bench::bench_budget;
-use bbmm_gp::kernels::{KernelOperator, LinearKernelOp};
+use bbmm_gp::kernels::LinearKernelOp;
 use bbmm_gp::linalg::cholesky::Cholesky;
 use bbmm_gp::linalg::mbcg::{mbcg, MbcgOptions};
+use bbmm_gp::linalg::op::LinearOp;
 use bbmm_gp::tensor::Mat;
 use bbmm_gp::util::cli::Args;
 use bbmm_gp::util::Rng;

@@ -13,9 +13,10 @@
 //! ```
 
 use bbmm_gp::bench::Table;
-use bbmm_gp::kernels::{DenseKernelOp, KernelOperator, Rbf};
+use bbmm_gp::kernels::{DenseKernelOp, Rbf};
 use bbmm_gp::linalg::cholesky::Cholesky;
 use bbmm_gp::linalg::mbcg::{mbcg, MbcgOptions};
+use bbmm_gp::linalg::op::LinearOp;
 use bbmm_gp::linalg::pivoted_cholesky::pivoted_cholesky_dense;
 use bbmm_gp::linalg::preconditioner::{PartialCholPrecond, Preconditioner};
 use bbmm_gp::tensor::Mat;

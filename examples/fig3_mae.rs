@@ -15,8 +15,9 @@ use bbmm_gp::gp::exact::{Engine, ExactGp};
 use bbmm_gp::gp::mll::{BbmmEngine, CholeskyEngine, InferenceEngine};
 use bbmm_gp::gp::predict::{mae, predict_mean};
 use bbmm_gp::gp::{SgprCholeskyEngine, SgprOp};
-use bbmm_gp::kernels::{DenseKernelOp, Kernel, KernelOperator, Matern52, Rbf};
+use bbmm_gp::kernels::{DenseKernelOp, Kernel, Matern52, Rbf};
 use bbmm_gp::linalg::mbcg::{mbcg, MbcgOptions};
+use bbmm_gp::linalg::op::LinearOp;
 use bbmm_gp::tensor::Mat;
 use bbmm_gp::train::{TrainConfig, Trainer};
 use bbmm_gp::util::cli::Args;
@@ -105,7 +106,7 @@ fn sgpr_mae(ds: &bbmm_gp::data::Dataset, m: usize, use_bbmm: bool, iters: usize)
         &k_star,
         |mm| {
             mbcg(
-                |v| bbmm_gp::kernels::KernelOperator::matmul(&op, v),
+                |v| bbmm_gp::linalg::op::LinearOp::matmul(&op, v),
                 mm,
                 |r| r.clone(),
                 &MbcgOptions {

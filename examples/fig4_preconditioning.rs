@@ -20,9 +20,10 @@ use bbmm_gp::bench::Table;
 use bbmm_gp::data::synthetic::{generate_sized, Dataset};
 use bbmm_gp::gp::mll::{BbmmEngine, InferenceEngine};
 use bbmm_gp::gp::predict::mae;
-use bbmm_gp::kernels::{DeepFeatureMap, DenseKernelOp, Kernel, KernelOperator, Matern52, Rbf};
+use bbmm_gp::kernels::{DeepFeatureMap, DenseKernelOp, Kernel, Matern52, Rbf};
 use bbmm_gp::linalg::cg::pcg;
 use bbmm_gp::linalg::mbcg::{mbcg, MbcgOptions};
+use bbmm_gp::linalg::op::LinearOp;
 use bbmm_gp::linalg::preconditioner::Preconditioner;
 use bbmm_gp::tensor::Mat;
 use bbmm_gp::train::{TrainConfig, Trainer};

@@ -196,7 +196,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
 }
 
 fn exact_solve(op: &DenseKernelOp, y: &[f64]) -> Vec<f64> {
-    use bbmm_gp::kernels::KernelOperator;
+    use bbmm_gp::linalg::op::LinearOp;
     let ch = bbmm_gp::linalg::cholesky::Cholesky::new_with_jitter(&op.dense()).unwrap();
     ch.solve_vec(y)
 }

@@ -166,7 +166,7 @@ fn main() {
     let t_pred = Timer::start();
     let k_star = op.cross(&z_test);
     let solves = bbmm_gp::linalg::mbcg::mbcg(
-        |m| bbmm_gp::kernels::KernelOperator::matmul(&op, m),
+        |m| bbmm_gp::linalg::op::LinearOp::matmul(&op, m),
         &bbmm_gp::tensor::Mat::col_from_slice(&y),
         |m| m.clone(),
         &bbmm_gp::linalg::mbcg::MbcgOptions {

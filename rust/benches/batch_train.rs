@@ -1,0 +1,154 @@
+//! Bench: **batched vs sequential sweep training step** — the tentpole
+//! payoff measured. b hyperparameter candidates share one covariance `K`
+//! with per-candidate σ² (a noise sweep / multi-restart over one dataset);
+//! the unit of work is ONE Adam step's evaluation: nmll + gradient for
+//! every candidate.
+//!
+//! The sequential baseline loops a scalar [`BbmmEngine`] over the b
+//! candidates — paying b× the kernel-row generation per CG iteration, b
+//! pivoted-Cholesky preconditioner builds, and 2·b covariance passes per
+//! gradient parameter. The batched path is ONE
+//! [`BatchBbmmEngine::mll_and_grad_batch`] call: one fused `K·[D₁ … D_b]`
+//! per shared iteration, one preconditioner factor, one fused gradient
+//! pass per parameter. Identical numerics (shared probe RNG — asserted
+//! before timing), so the gap is purely the amortised operator work.
+//!
+//! Grid: n ∈ {2k, 8k}, b ∈ {4, 16}. Writes `results/BENCH_train.json`
+//! (the CI perf artifact) plus the usual table/CSV pair.
+//! `BBMM_BENCH_QUICK=1` cuts per-case samples, not the grid, so the
+//! artifact schema is stable across environments.
+
+use bbmm_gp::bench::{bench, Table};
+use bbmm_gp::gp::mll::{BatchBbmmEngine, BatchInferenceEngine, BbmmEngine, InferenceEngine};
+use bbmm_gp::kernels::{KernelCovOp, Rbf};
+use bbmm_gp::linalg::op::{AddedDiagOp, BatchOp};
+use bbmm_gp::tensor::Mat;
+use bbmm_gp::util::par;
+use bbmm_gp::util::Rng;
+
+const CG_ITERS: usize = 4;
+const PROBES: usize = 2;
+const PRECOND_RANK: usize = 5;
+
+struct Case {
+    n: usize,
+    b: usize,
+    sequential_s: f64,
+    batched_s: f64,
+    batched_products: usize,
+    sequential_products: usize,
+}
+
+fn main() {
+    let quick = std::env::var("BBMM_BENCH_QUICK").is_ok();
+    let samples = if quick { 1 } else { 3 };
+    let sizes = [2_000usize, 8_000];
+    let batches = [4usize, 16];
+    println!(
+        "batch_train: cg_iters={CG_ITERS} probes={PROBES} rank={PRECOND_RANK} \
+         samples={samples} threads={}\n",
+        par::num_threads()
+    );
+
+    let mut cases = Vec::new();
+    let mut table = Table::new(&["n", "b", "sequential_s", "batched_s", "speedup"]);
+    for &n in &sizes {
+        let mut rng = Rng::new(n as u64);
+        let x = Mat::from_fn(n, 4, |_, _| rng.uniform_in(-1.0, 1.0));
+        let y: Vec<f64> = (0..n).map(|i| (3.0 * x.get(i, 0)).sin() + 0.05 * rng.normal()).collect();
+        let cov = KernelCovOp::new(x, Box::new(Rbf::new(0.5, 1.0)));
+        let sigma2s: Vec<f64> = (0..16).map(|i| 0.05 * (1.0 + 0.25 * i as f64)).collect();
+        for &b in &batches {
+            let batch = BatchOp::shared(&cov, sigma2s[..b].to_vec());
+
+            // correctness gate before timing: batched == sequential (same
+            // probe RNG stream) for every candidate's nmll and gradient
+            let (batched_products, sequential_products) = {
+                let mut be = BatchBbmmEngine::new(CG_ITERS, PROBES, PRECOND_RANK, 42);
+                let got = be.mll_and_grad_batch(&batch, &y);
+                let mut se = BbmmEngine::new(CG_ITERS, PROBES, PRECOND_RANK, 42);
+                for (k, &s2) in sigma2s[..b].iter().enumerate() {
+                    let op = AddedDiagOp::new(&cov, s2);
+                    let want = se.mll_and_grad(&op, &y);
+                    assert!(
+                        (got[k].nmll - want.nmll).abs() < 1e-8,
+                        "n={n} b={b} candidate {k} diverged: {} vs {}",
+                        got[k].nmll,
+                        want.nmll
+                    );
+                    for p in 0..want.grad.len() {
+                        assert!((got[k].grad[p] - want.grad[p]).abs() < 1e-8);
+                    }
+                }
+                (be.last_stats.batched_products, be.last_stats.system_iterations)
+            };
+
+            let sequential = bench(&format!("train/sequential/n{n}/b{b}"), 1, samples, || {
+                let mut se = BbmmEngine::new(CG_ITERS, PROBES, PRECOND_RANK, 42);
+                for &s2 in &sigma2s[..b] {
+                    let op = AddedDiagOp::new(&cov, s2);
+                    let _ = se.mll_and_grad(&op, &y);
+                }
+            });
+            let batched = bench(&format!("train/batched/n{n}/b{b}"), 1, samples, || {
+                let mut be = BatchBbmmEngine::new(CG_ITERS, PROBES, PRECOND_RANK, 42);
+                let _ = be.mll_and_grad_batch(&batch, &y);
+            });
+            let (ss, bs) = (sequential.median_s(), batched.median_s());
+            table.row(&[
+                n.to_string(),
+                b.to_string(),
+                format!("{ss:.4}"),
+                format!("{bs:.4}"),
+                format!("{:.2}x", ss / bs),
+            ]);
+            cases.push(Case {
+                n,
+                b,
+                sequential_s: ss,
+                batched_s: bs,
+                batched_products,
+                sequential_products,
+            });
+        }
+    }
+    println!();
+    table.print();
+    table.save("bench_batch_train").ok();
+    write_json(&cases).expect("write BENCH_train.json");
+    println!(
+        "\nwrote results/BENCH_train.json — expect batched < sequential as b grows \
+         (kernel-row generation, preconditioner build, and gradient passes amortise)"
+    );
+}
+
+/// Hand-rolled JSON (no serde offline): the schema CI archives as the
+/// perf-trajectory artifact.
+fn write_json(cases: &[Case]) -> std::io::Result<()> {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"bench\": \"batch_train\",\n");
+    out.push_str(&format!("  \"threads\": {},\n", par::num_threads()));
+    out.push_str(&format!("  \"cg_iters\": {CG_ITERS},\n"));
+    out.push_str(&format!("  \"probes\": {PROBES},\n"));
+    out.push_str(&format!("  \"precond_rank\": {PRECOND_RANK},\n"));
+    out.push_str("  \"cases\": [\n");
+    for (i, c) in cases.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"n\": {}, \"b\": {}, \"sequential_s\": {:.6}, \"batched_s\": {:.6}, \
+             \"speedup\": {:.3}, \"batched_products\": {}, \"sequential_products\": {}}}{}\n",
+            c.n,
+            c.b,
+            c.sequential_s,
+            c.batched_s,
+            c.sequential_s / c.batched_s,
+            c.batched_products,
+            c.sequential_products,
+            if i + 1 < cases.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n");
+    out.push_str("}\n");
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/BENCH_train.json", out)
+}

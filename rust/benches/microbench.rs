@@ -3,7 +3,8 @@
 //! FFT mat-vec, pivoted Cholesky build, and a single mBCG iteration.
 
 use bbmm_gp::bench::{bench_budget, Table};
-use bbmm_gp::kernels::{DenseKernelOp, KernelOperator, Rbf};
+use bbmm_gp::kernels::{DenseKernelOp, Rbf};
+use bbmm_gp::linalg::op::LinearOp;
 use bbmm_gp::linalg::pivoted_cholesky::pivoted_cholesky;
 use bbmm_gp::linalg::toeplitz::ToeplitzOp;
 use bbmm_gp::tensor::Mat;

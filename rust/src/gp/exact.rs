@@ -7,12 +7,15 @@
 //! the generic engine + solve-dispatcher paths. This is the model behind
 //! the paper's "Exact" columns in Figures 2 and 3.
 
-use crate::gp::mll::{BbmmEngine, InferenceEngine, MllGrad};
+use crate::gp::mll::{BatchBbmmEngine, BatchInferenceEngine, BbmmEngine, InferenceEngine, MllGrad};
 use crate::gp::predict::{predict, predict_with_plan, Prediction};
 use crate::kernels::{Kernel, KernelCov, KernelCovOp, ShardedCovOp};
 use crate::linalg::cholesky::Cholesky;
-use crate::linalg::op::{AddedDiagOp, LinearOp, SolveOptions, SolvePlanCache};
+use crate::linalg::op::{
+    lift_added_diag, AddedDiagOp, BatchOp, LinearOp, SolveOptions, SolvePlanCache,
+};
 use crate::tensor::Mat;
+use crate::train::{SweepReport, SweepTrainer, TrainConfig};
 
 /// Which inference engine backs the model.
 pub enum Engine {
@@ -121,6 +124,103 @@ impl ExactGp {
                 e.mll_and_grad(&self.op, &self.y)
             }
         }
+    }
+
+    /// **Batched multi-restart training** (the sweep tentpole): optimise
+    /// `b = inits.len()` hyperparameter candidates for the same dataset in
+    /// lockstep, ONE batched MLL + gradient evaluation — one `mbcg_batch`
+    /// call — per Adam step, instead of b scalar engine calls.
+    ///
+    /// Candidate parameters are `[kernel params…, log σ²]` (the `kernel`
+    /// argument is the template each candidate's covariance is cloned
+    /// from). Each candidate owns one [`KernelCovOp`]; the candidates are
+    /// lifted into the batch with [`lift_added_diag`], and each iteration
+    /// the active candidates form a [`BatchOp`]:
+    ///
+    /// - when every active candidate currently has **identical kernel
+    ///   parameters** (a noise sweep — [`crate::train::noise_grid_inits`])
+    ///   the batch takes [`BatchOp::shared`], so every mBCG iteration is
+    ///   one fused covariance product and the pivoted-Cholesky
+    ///   preconditioner is built once for the whole batch (checked per
+    ///   step: per-candidate gradients differ, so Adam drifts kernel
+    ///   parameters apart after the first step and later steps take the
+    ///   general path — a persistent tied-kernel mode is a ROADMAP item);
+    /// - otherwise the general elementwise batch still runs one iteration
+    ///   loop with per-candidate early stopping.
+    ///
+    /// Candidates that converge (patience) or diverge (non-finite values)
+    /// drop out of the batch exactly like `mbcg_batch`'s frozen systems.
+    pub fn fit_sweep(
+        x: &Mat,
+        y: &[f64],
+        kernel: &dyn Kernel,
+        inits: &[Vec<f64>],
+        engine: &mut BatchBbmmEngine,
+        config: TrainConfig,
+    ) -> SweepReport {
+        assert_eq!(x.rows(), y.len());
+        let nk = kernel.n_params();
+        assert!(!inits.is_empty(), "fit_sweep: empty candidate set");
+        for raw in inits {
+            assert_eq!(raw.len(), nk + 1, "fit_sweep: candidate must be [kernel…, log σ²]");
+        }
+        // one covariance operator per candidate, lifted into `K + σᵢ²I`
+        let covs: Vec<KernelCovOp> = inits
+            .iter()
+            .map(|raw| {
+                let mut k = kernel.boxed_clone();
+                k.set_params(&raw[..nk]);
+                KernelCovOp::new(x.clone(), k)
+            })
+            .collect();
+        let sigma2s: Vec<f64> = inits.iter().map(|raw| raw[nk].exp()).collect();
+        let mut ops = lift_added_diag(covs, &sigma2s);
+        let mut trainer = SweepTrainer::new(config, inits.to_vec());
+        let _best = trainer.run(|active| {
+            // push each active candidate's current raw params into its op
+            for (i, raw) in active {
+                ops[*i].inner_mut().set_kernel_params(&raw[..nk]);
+                ops[*i].set_raw_value(raw[nk]);
+            }
+            // shared-covariance fast path when the active candidates'
+            // kernel params coincide (σ² may differ per candidate)
+            let kernel_shared = active
+                .iter()
+                .all(|(_, raw)| raw[..nk] == active[0].1[..nk]);
+            let sig: Vec<f64> = active.iter().map(|(i, _)| ops[*i].value()).collect();
+            if kernel_shared && sig.iter().all(|&s| s > 0.0 && s.is_finite()) {
+                let (i0, _) = active[0];
+                let cov: &dyn LinearOp = ops[i0].inner();
+                let batch = BatchOp::shared(cov, sig);
+                engine.mll_and_grad_batch(&batch, y)
+            } else {
+                let els: Vec<&dyn LinearOp> =
+                    active.iter().map(|(i, _)| &ops[*i] as &dyn LinearOp).collect();
+                let batch = BatchOp::new(els);
+                engine.mll_and_grad_batch(&batch, y)
+            }
+        });
+        trainer.into_report()
+    }
+
+    /// Build the model a finished sweep selected: the winner's raw
+    /// parameters over the template kernel (`None` when every candidate
+    /// diverged).
+    pub fn from_sweep(
+        x: Mat,
+        y: Vec<f64>,
+        kernel: &dyn Kernel,
+        report: &SweepReport,
+        engine: Engine,
+    ) -> Option<Self> {
+        let raw = report.best_params()?;
+        let nk = kernel.n_params();
+        let mut k = kernel.boxed_clone();
+        k.set_params(&raw[..nk]);
+        let mut gp = ExactGp::new(x, y, k, 1.0, engine);
+        // install the exact raw noise (avoids the exp/ln round trip)
+        gp.op.set_raw_value(raw[nk]);
+        Some(gp)
     }
 
     /// Predictive mean+variance at test inputs `xs (n_test × d)`.

@@ -13,8 +13,8 @@
 //! `Tr(Σ₂⁻¹Σ₁) ≈ mean((Σ₂⁻¹zᵢ)ᵀ(Σ₁zᵢ))`, and the tridiagonals for
 //! `log|Σ₂|`; a second (solve-free) mBCG provides `log|Σ₁|`.
 
-use crate::kernels::KernelOperator;
 use crate::linalg::mbcg::{mbcg, MbcgOptions};
+use crate::linalg::op::LinearOp;
 use crate::linalg::trace::paired_trace;
 use crate::linalg::tridiag::SymTridiagEig;
 use crate::tensor::Mat;
@@ -40,8 +40,8 @@ impl Default for KlOptions {
 /// Stochastic estimate of `KL(N(μ₁, Σ₁) ‖ N(μ₂, Σ₂))` using only blackbox
 /// mat-muls with the two covariance operators.
 pub fn mvn_kl_divergence(
-    sigma1: &dyn KernelOperator,
-    sigma2: &dyn KernelOperator,
+    sigma1: &dyn LinearOp,
+    sigma2: &dyn LinearOp,
     mu1: &[f64],
     mu2: &[f64],
     opts: &KlOptions,
@@ -148,7 +148,7 @@ mod tests {
     fn kl_matches_dense_formula() {
         let n = 60;
         let (op1, op2, mu1, mu2) = ops(n, 1);
-        use crate::kernels::KernelOperator;
+        use crate::linalg::op::LinearOp;
         let exact = dense_kl(&op1.dense(), &op2.dense(), &mu1, &mu2);
         // average several probe draws to tame MC noise
         let mut acc = 0.0;

@@ -12,9 +12,15 @@
 //!
 //! Both consume the composable [`LinearOp`] — any operator composition
 //! (exact, SGPR, SKI, sharded, multitask, …) flows through unchanged.
+//!
+//! The **batch axis** extends the single-call promise across a whole
+//! hyperparameter sweep: [`BatchBbmmEngine`] evaluates b candidates'
+//! nmll + gradients through **one** [`mbcg_batch_stats`] call per
+//! optimisation step ([`BatchInferenceEngine`]); the scalar
+//! [`BbmmEngine`] is the b = 1 case of the same core.
 
-use crate::linalg::mbcg::{mbcg, MbcgOptions};
-use crate::linalg::op::LinearOp;
+use crate::linalg::mbcg::{mbcg_batch_stats, MbcgBatchStats, MbcgOptions};
+use crate::linalg::op::{build_preconditioner_batch, BatchOp, LinearOp};
 use crate::linalg::preconditioner::Preconditioner;
 use crate::linalg::trace::paired_trace;
 use crate::linalg::tridiag::SymTridiagEig;
@@ -91,80 +97,339 @@ impl BbmmEngine {
 }
 
 impl InferenceEngine for BbmmEngine {
+    /// The scalar engine **is** the b = 1 case of the batched core: one
+    /// single-element [`BatchOp`] flows through the same shared core as
+    /// [`BatchBbmmEngine`] (numerics identical to a standalone mBCG run —
+    /// the single-system batch performs the same products in the same
+    /// order, so pre-batch-era results are reproduced). Gradients are
+    /// taken on `op` itself, so operators with custom `dmatmul` math
+    /// (e.g. SGPR) keep their exact gradient surface.
     fn mll_and_grad(&mut self, op: &dyn LinearOp, y: &[f64]) -> MllGrad {
-        let n = op.n();
-        assert_eq!(y.len(), n);
-        let t = self.n_probes;
-        let precond = self.build_preconditioner(op);
-
-        // RHS block B = [y  z₁ … z_t]; probes ~ N(0, P̂) when preconditioned
-        // (Rademacher when not — see Preconditioner::sample_probes).
-        let z = precond.sample_probes(n, t, &mut self.rng);
-        let mut b = Mat::zeros(n, 1 + t);
-        b.set_col(0, y);
-        for c in 0..t {
-            b.set_col(1 + c, &z.col(c));
-        }
-
-        // THE single mBCG call (paper §4): solves + tridiagonals together.
-        let res = mbcg(
-            |m| op.matmul(m),
-            &b,
-            |m| precond.solve_mat(m),
-            &MbcgOptions {
-                max_iters: self.max_cg_iters,
-                tol: self.cg_tol,
-                n_solve_only: 1,
-            },
+        let batch = BatchOp::new(vec![op]);
+        let (mut out, _stats) = bbmm_mll_and_grad_core(
+            &batch,
+            Some(&[op]),
+            y,
+            &mut self.rng,
+            self.max_cg_iters,
+            self.cg_tol,
+            self.n_probes,
+            self.precond_rank,
         );
-        let u0 = res.solves.col(0); // K̂⁻¹ y
-        let solves_z = res.solves.cols_range(1, 1 + t); // K̂⁻¹ Z
-
-        // log|K̂| via SLQ on the recovered tridiagonals (eq. 6), corrected by
-        // the preconditioner's exact log-det (§4.1):
-        //   log|K̂| = E[(zᵀP̂⁻¹z) · e₁ᵀ log(T̃) e₁] + log|P̂|
-        let w = precond.solve_mat(&z); // P̂⁻¹ Z (identity → Z)
-        let mut logdet_quad = 0.0;
-        for (i, tri) in res.tridiags.iter().enumerate() {
-            if tri.n() == 0 {
-                continue;
-            }
-            let scale = col_dot(&z, &w, i);
-            let eig = SymTridiagEig::new(&tri.diag, &tri.offdiag);
-            logdet_quad += scale * eig.log_quadrature();
-        }
-        let logdet = logdet_quad / t as f64 + precond.logdet();
-
-        // data fit yᵀ K̂⁻¹ y
-        let datafit: f64 = y.iter().zip(u0.iter()).map(|(a, b)| a * b).sum();
-        let nmll = 0.5 * (datafit + logdet + n as f64 * LN_2PI);
-
-        // gradient: dL/dθ = ½[ −u₀ᵀ dK̂ u₀ + Tr(K̂⁻¹ dK̂) ]
-        // trace term via paired probes (eq. 4): mean_i (K̂⁻¹zᵢ)ᵀ dK̂ (P̂⁻¹zᵢ)
-        // — unbiased because E[zᵢ (P̂⁻¹zᵢ)ᵀ] = I when zᵢ ~ N(0, P̂).
-        let u0_mat = Mat::col_from_slice(&u0);
-        let n_params = op.n_params();
-        let mut grad = Vec::with_capacity(n_params);
-        for p in 0..n_params {
-            let dk_u0 = op.dmatmul(p, &u0_mat);
-            let quad: f64 = (0..n).map(|i| u0[i] * dk_u0.get(i, 0)).sum();
-            let dk_w = op.dmatmul(p, &w);
-            let tr = paired_trace(&solves_z, &dk_w);
-            grad.push(0.5 * (-quad + tr));
-        }
-
-        MllGrad {
-            nmll,
-            grad,
-            iterations: res.iterations,
-            logdet,
-            datafit,
-        }
+        out.pop().expect("b = 1 core returns one result")
     }
 
     fn name(&self) -> &'static str {
         "bbmm"
     }
+}
+
+/// A **batched** inference engine: negative mll + gradient for every
+/// element of a [`BatchOp`] against shared training targets — the
+/// evaluation unit of a hyperparameter sweep's lockstep optimisation step
+/// ([`crate::train::SweepTrainer`]).
+pub trait BatchInferenceEngine {
+    /// One nmll + gradient per batch element, in element order.
+    fn mll_and_grad_batch(&mut self, batch: &BatchOp<'_>, y: &[f64]) -> Vec<MllGrad>;
+    /// Engine name for logs.
+    fn name(&self) -> &'static str;
+}
+
+/// **Batched BBMM** (paper §4, extended across operators): all training
+/// terms for b hyperparameter candidates from **one**
+/// [`mbcg_batch_stats`] call per step.
+///
+/// Per-element probes are drawn element-by-element from ONE shared RNG
+/// stream, so element i of a batch call reproduces — to the bit — the
+/// i-th sequential [`BbmmEngine::mll_and_grad`] call on an engine seeded
+/// identically (the parity contract the sweep tests pin down).
+///
+/// On the shared-covariance fast path (`K + σᵢ²I` over one covariance:
+/// [`BatchOp::shared`] or a noise sweep built with
+/// [`crate::linalg::op::lift_added_diag`] over one inner), three costs
+/// amortise across the batch:
+/// - the rank-k pivoted-Cholesky preconditioner factor is built **once**
+///   ([`build_preconditioner_batch`]),
+/// - every mBCG iteration is one fused `K·[D₁ … D_b]` product,
+/// - each kernel-parameter gradient pass is one fused
+///   `dK·[u₀⁽¹⁾ W⁽¹⁾ … u₀⁽ᵇ⁾ W⁽ᵇ⁾]` product.
+///
+/// General batches (per-candidate kernel hyperparameters, so b distinct
+/// covariances) still run one iteration loop with per-system early
+/// stopping; gradients go through each element's own `dmatmul`.
+pub struct BatchBbmmEngine {
+    /// maximum CG iterations p (paper default 20)
+    pub max_cg_iters: usize,
+    /// CG relative-residual tolerance
+    pub cg_tol: f64,
+    /// number of probe vectors t per element (paper default 10)
+    pub n_probes: usize,
+    /// pivoted-Cholesky preconditioner rank k (paper default 5; 0 disables)
+    pub precond_rank: usize,
+    /// shared probe RNG (advances across calls: fresh probes per step)
+    pub rng: Rng,
+    /// operator-product accounting from the most recent batch call
+    pub last_stats: MbcgBatchStats,
+}
+
+impl Default for BatchBbmmEngine {
+    fn default() -> Self {
+        BatchBbmmEngine::new(20, 10, 5, 0x5EED)
+    }
+}
+
+impl BatchBbmmEngine {
+    /// Engine with the paper-style knobs (mirrors [`BbmmEngine::new`]).
+    pub fn new(max_cg_iters: usize, n_probes: usize, precond_rank: usize, seed: u64) -> Self {
+        BatchBbmmEngine {
+            max_cg_iters,
+            cg_tol: 1e-10,
+            n_probes,
+            precond_rank,
+            rng: Rng::new(seed),
+            last_stats: MbcgBatchStats::default(),
+        }
+    }
+
+    /// [`BatchInferenceEngine::mll_and_grad_batch`] with explicit
+    /// per-element **gradient operators**: solves run through `batch`,
+    /// but element i's `n_params`/`dmatmul` come from `grad_ops[i]`. Use
+    /// this when elements are named wrappers with custom gradient math
+    /// (SGPR) — the batch's structural representation (in particular the
+    /// shared-covariance collapse of a single-element batch) must not
+    /// replace their derivative surface.
+    pub fn mll_and_grad_batch_on(
+        &mut self,
+        batch: &BatchOp<'_>,
+        grad_ops: &[&dyn LinearOp],
+        y: &[f64],
+    ) -> Vec<MllGrad> {
+        let (out, stats) = bbmm_mll_and_grad_core(
+            batch,
+            Some(grad_ops),
+            y,
+            &mut self.rng,
+            self.max_cg_iters,
+            self.cg_tol,
+            self.n_probes,
+            self.precond_rank,
+        );
+        self.last_stats = stats;
+        out
+    }
+}
+
+impl BatchInferenceEngine for BatchBbmmEngine {
+    fn mll_and_grad_batch(&mut self, batch: &BatchOp<'_>, y: &[f64]) -> Vec<MllGrad> {
+        let (out, stats) = bbmm_mll_and_grad_core(
+            batch,
+            None,
+            y,
+            &mut self.rng,
+            self.max_cg_iters,
+            self.cg_tol,
+            self.n_probes,
+            self.precond_rank,
+        );
+        self.last_stats = stats;
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "bbmm-batch"
+    }
+}
+
+/// Sequential fallback: evaluate every batch element through a scalar
+/// [`InferenceEngine`] — the baseline the batched engine is benchmarked
+/// (and parity-tested) against, and the path non-BBMM engines (Cholesky,
+/// Dong) take in a sweep.
+pub fn mll_and_grad_batch_with(
+    engine: &mut dyn InferenceEngine,
+    batch: &BatchOp<'_>,
+    y: &[f64],
+) -> Vec<MllGrad> {
+    (0..batch.len())
+        .map(|i| batch.with_element(i, |op| engine.mll_and_grad(op, y)))
+        .collect()
+}
+
+/// The shared BBMM core (scalar engine = b = 1): preconditioners via
+/// [`build_preconditioner_batch`] (one pivoted-Cholesky factor on the
+/// shared-covariance path), per-element probe draws from one RNG stream,
+/// ONE batched mBCG call, then per-element SLQ log-det + paired-trace
+/// gradients.
+///
+/// `grad_ops`, when given, supplies the operator each element's gradient
+/// is taken on (`n_params`/`dmatmul`) — the scalar engine passes the
+/// original operator so named wrappers with custom gradient math (SGPR)
+/// bypass the batch's structural view. When `None`, gradients run on the
+/// batch's own elements; on the shared-covariance representation those
+/// are `cov + σᵢ²I` views, which makes the fused kernel-gradient pass
+/// exact by construction.
+#[allow(clippy::too_many_arguments)]
+fn bbmm_mll_and_grad_core(
+    batch: &BatchOp<'_>,
+    grad_ops: Option<&[&dyn LinearOp]>,
+    y: &[f64],
+    rng: &mut Rng,
+    max_cg_iters: usize,
+    cg_tol: f64,
+    n_probes: usize,
+    precond_rank: usize,
+) -> (Vec<MllGrad>, MbcgBatchStats) {
+    let b = batch.len();
+    let n = batch.n();
+    assert_eq!(y.len(), n);
+    if let Some(ops) = grad_ops {
+        assert_eq!(ops.len(), b, "grad_ops must match the batch length");
+    }
+    let t = n_probes;
+
+    // §4.1 preconditioners: ONE pivoted-Cholesky factor serves the whole
+    // batch on the shared-covariance path (per-element σ² capacitance).
+    let preconds = build_preconditioner_batch(batch, precond_rank);
+
+    // Per-element RHS [y  z₁ … z_t]; probes ~ N(0, P̂ᵢ) when preconditioned
+    // (Rademacher when not), drawn element-by-element from the one shared
+    // RNG stream — the sequential-parity contract.
+    let mut zs: Vec<Mat> = Vec::with_capacity(b);
+    let mut bs: Vec<Mat> = Vec::with_capacity(b);
+    for pre in &preconds {
+        let z = pre.sample_probes(n, t, rng);
+        let mut rhs = Mat::zeros(n, 1 + t);
+        rhs.set_col(0, y);
+        for c in 0..t {
+            rhs.set_col(1 + c, &z.col(c));
+        }
+        zs.push(z);
+        bs.push(rhs);
+    }
+    let b_refs: Vec<&Mat> = bs.iter().collect();
+    fn upcast(p: &(dyn Preconditioner + Send)) -> &dyn Preconditioner {
+        p
+    }
+    let pre_refs: Vec<&dyn Preconditioner> = preconds.iter().map(|p| upcast(p.as_ref())).collect();
+
+    // THE single batched mBCG call (paper §4 across the whole sweep):
+    // per-element solves + probe solves + tridiagonals together.
+    let (results, stats) = mbcg_batch_stats(
+        batch,
+        &b_refs,
+        &pre_refs,
+        &MbcgOptions {
+            max_iters: max_cg_iters,
+            tol: cg_tol,
+            n_solve_only: 1,
+        },
+    );
+
+    // Per-element value terms: SLQ log-det (eq. 6) + preconditioner
+    // correction (§4.1), deterministic data fit.
+    let mut out: Vec<MllGrad> = Vec::with_capacity(b);
+    let mut u0s: Vec<Vec<f64>> = Vec::with_capacity(b);
+    let mut solves_zs: Vec<Mat> = Vec::with_capacity(b);
+    let mut ws: Vec<Mat> = Vec::with_capacity(b);
+    for (i, res) in results.iter().enumerate() {
+        let u0 = res.solves.col(0); // K̂ᵢ⁻¹ y
+        let solves_z = res.solves.cols_range(1, 1 + t); // K̂ᵢ⁻¹ Zᵢ
+        let w = preconds[i].solve_mat(&zs[i]); // P̂ᵢ⁻¹ Zᵢ (identity → Zᵢ)
+        let mut logdet_quad = 0.0;
+        for (c, tri) in res.tridiags.iter().enumerate() {
+            if tri.n() == 0 {
+                continue;
+            }
+            let scale = col_dot(&zs[i], &w, c);
+            let eig = SymTridiagEig::new(&tri.diag, &tri.offdiag);
+            logdet_quad += scale * eig.log_quadrature();
+        }
+        let logdet = logdet_quad / t as f64 + preconds[i].logdet();
+        let datafit: f64 = y.iter().zip(u0.iter()).map(|(a, b)| a * b).sum();
+        let nmll = 0.5 * (datafit + logdet + n as f64 * LN_2PI);
+        out.push(MllGrad {
+            nmll,
+            grad: Vec::new(),
+            iterations: res.iterations,
+            logdet,
+            datafit,
+        });
+        u0s.push(u0);
+        solves_zs.push(solves_z);
+        ws.push(w);
+    }
+
+    // Gradients: dL/dθ = ½[ −u₀ᵀ dK̂ u₀ + Tr(K̂⁻¹ dK̂) ], trace via paired
+    // probes (eq. 4): mean_c (K̂⁻¹z_c)ᵀ dK̂ (P̂⁻¹z_c).
+    match (grad_ops, batch.shared_parts()) {
+        (None, Some((cov, sigma2s))) => {
+            // Shared covariance ⇒ dK̂ᵢ/dθ_kernel ≡ dK/dθ for every element:
+            // ONE fused dK·[u₀⁽¹⁾ W⁽¹⁾ … u₀⁽ᵇ⁾ W⁽ᵇ⁾] pass per kernel
+            // parameter (column-for-column identical to the elementwise
+            // products), then the σᵢ²-diagonal gradient elementwise.
+            let nk = cov.n_params();
+            let width = 1 + t;
+            let mut block = Mat::zeros(n, b * width);
+            for i in 0..b {
+                let c0 = i * width;
+                block.set_col(c0, &u0s[i]);
+                for c in 0..t {
+                    block.set_col(c0 + 1 + c, &ws[i].col(c));
+                }
+            }
+            for p in 0..nk {
+                let dk = cov.dmatmul(p, &block);
+                for i in 0..b {
+                    let c0 = i * width;
+                    let quad: f64 = (0..n).map(|r| u0s[i][r] * dk.get(r, c0)).sum();
+                    let dk_w = dk.cols_range(c0 + 1, c0 + width);
+                    let tr = paired_trace(&solves_zs[i], &dk_w);
+                    out[i].grad.push(0.5 * (-quad + tr));
+                }
+            }
+            // noise parameter (last, crate-wide convention):
+            // dK̂ᵢ/d(log σᵢ²) = σᵢ²·I
+            for i in 0..b {
+                let s2 = sigma2s[i];
+                let quad: f64 = u0s[i].iter().map(|v| (s2 * v) * v).sum();
+                let mut tr = 0.0;
+                for c in 0..t {
+                    for r in 0..n {
+                        tr += solves_zs[i].get(r, c) * (s2 * ws[i].get(r, c));
+                    }
+                }
+                out[i].grad.push(0.5 * (-quad + tr / t as f64));
+            }
+        }
+        _ => {
+            // General path: each element's own gradient surface.
+            for i in 0..b {
+                out[i].grad = match grad_ops {
+                    Some(ops) => element_grad(ops[i], &u0s[i], &ws[i], &solves_zs[i]),
+                    None => batch
+                        .with_element(i, |op| element_grad(op, &u0s[i], &ws[i], &solves_zs[i])),
+                };
+            }
+        }
+    }
+
+    (out, stats)
+}
+
+/// One element's gradient: per-parameter `dK̂·u₀` quadratic plus the
+/// paired-trace term against that element's probe solves.
+fn element_grad(op: &dyn LinearOp, u0: &[f64], w: &Mat, solves_z: &Mat) -> Vec<f64> {
+    let n = u0.len();
+    let u0_mat = Mat::col_from_slice(u0);
+    let n_params = op.n_params();
+    let mut grad = Vec::with_capacity(n_params);
+    for p in 0..n_params {
+        let dk_u0 = op.dmatmul(p, &u0_mat);
+        let quad: f64 = (0..n).map(|r| u0[r] * dk_u0.get(r, 0)).sum();
+        let dk_w = op.dmatmul(p, w);
+        let tr = paired_trace(solves_z, &dk_w);
+        grad.push(0.5 * (-quad + tr));
+    }
+    grad
 }
 
 /// Exact Cholesky engine — the paper's baseline (O(n³) factor, exact trace).

@@ -27,7 +27,10 @@ pub mod ski;
 pub use dong::DongEngine;
 pub use exact::{Engine, ExactGp};
 pub use fitc::FitcOp;
-pub use mll::{BbmmEngine, CholeskyEngine, InferenceEngine, MllGrad};
+pub use mll::{
+    mll_and_grad_batch_with, BatchBbmmEngine, BatchInferenceEngine, BbmmEngine, CholeskyEngine,
+    InferenceEngine, MllGrad,
+};
 pub use multitask::MultitaskOp;
 pub use sgpr::{SgprCholeskyEngine, SgprModel, SgprOp};
 pub use ski::SkiOp;

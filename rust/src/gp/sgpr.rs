@@ -14,11 +14,13 @@
 //! back to the dense Cholesky engine for non-SGPR operators instead of
 //! panicking).
 
+use crate::gp::mll::BatchBbmmEngine;
 use crate::gp::predict::{predict_with_plan, Prediction};
 use crate::kernels::Kernel;
 use crate::linalg::cholesky::Cholesky;
-use crate::linalg::op::{AddedDiagOp, LinearOp, LowRankOp, SolveOptions, SolvePlanCache};
+use crate::linalg::op::{AddedDiagOp, BatchOp, LinearOp, LowRankOp, SolveOptions, SolvePlanCache};
 use crate::tensor::Mat;
+use crate::train::{SweepReport, SweepTrainer, TrainConfig};
 
 /// SoR kernel operator with inducing points `U (m×d)` — a named wrapper
 /// over `AddedDiagOp(LowRankOp(K_XU·L_uu⁻ᵀ))`.
@@ -181,6 +183,62 @@ impl SgprModel {
     /// the operator fingerprint on the next predict).
     pub fn set_params(&mut self, raw: &[f64]) {
         self.op.set_params(raw);
+    }
+
+    /// **Batched multi-restart SGPR training**: b candidates over the same
+    /// inducing-point set stepped in lockstep — one batched MLL + gradient
+    /// evaluation (one `mbcg_batch` call across the b SoR operators) per
+    /// Adam step. Candidate parameters are `[kernel params…, log σ²]`.
+    ///
+    /// Each candidate owns its own [`SgprOp`] (the SoR factor cache is
+    /// per-candidate, rebuilt on each parameter update); the batch is the
+    /// general elementwise [`BatchOp`], so every candidate keeps SGPR's
+    /// exact custom `dmatmul` gradient math while sharing the single
+    /// iteration loop and per-candidate early stopping.
+    pub fn fit_sweep(
+        x: &Mat,
+        y: &[f64],
+        u: &Mat,
+        kernel: &dyn Kernel,
+        inits: &[Vec<f64>],
+        engine: &mut BatchBbmmEngine,
+        config: TrainConfig,
+    ) -> SweepReport {
+        assert_eq!(x.rows(), y.len());
+        let nk = kernel.n_params();
+        assert!(!inits.is_empty(), "fit_sweep: empty candidate set");
+        for raw in inits {
+            assert_eq!(raw.len(), nk + 1, "fit_sweep: candidate must be [kernel…, log σ²]");
+        }
+        let mut ops: Vec<SgprOp> = inits
+            .iter()
+            .map(|raw| {
+                let mut k = kernel.boxed_clone();
+                k.set_params(&raw[..nk]);
+                SgprOp::new(x.clone(), u.clone(), k, raw[nk].exp().max(1e-12))
+            })
+            .collect();
+        let mut trainer = SweepTrainer::new(config, inits.to_vec());
+        let _best = trainer.run(|active| {
+            for (i, raw) in active {
+                let op = &mut ops[*i];
+                // only the kernel parameters drive the O(n·m²) SoR cache
+                // rebuild — skip it when they are unchanged (iteration 0
+                // right after the constructor, or a noise-only move) and
+                // install the raw noise directly
+                if op.kernel.params() != raw[..nk] {
+                    op.set_params(raw);
+                } else {
+                    op.op.set_raw_value(raw[nk]);
+                }
+            }
+            let els: Vec<&dyn LinearOp> =
+                active.iter().map(|(i, _)| &ops[*i] as &dyn LinearOp).collect();
+            let batch = BatchOp::new(els.clone());
+            // solves run batched; gradients stay on SgprOp's custom dmatmul
+            engine.mll_and_grad_batch_on(&batch, &els, y)
+        });
+        trainer.into_report()
     }
 
     /// Predictive mean+variance at test inputs, through the cached plan

@@ -28,14 +28,6 @@ pub use operator::{DenseKernelOp, KernelCovOp};
 pub use sharded::{ShardedCovOp, ShardedKernelOp};
 pub use stationary::{Matern12, Matern32, Matern52, Rbf};
 
-/// Deprecated shim: the seed-era `KernelOperator` trait **is** the
-/// composable [`crate::linalg::op::LinearOp`] now — this re-export keeps
-/// seed examples compiling. Semantics moved with it: `diag`/`row` describe
-/// the *full* operator (σ² included); the noise-free part is reachable via
-/// [`crate::linalg::op::LinearOp::noise_split`]. New code should import
-/// `LinearOp` directly.
-pub use crate::linalg::op::LinearOp as KernelOperator;
-
 use crate::linalg::op::LinearOp;
 use crate::tensor::Mat;
 

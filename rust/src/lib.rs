@@ -16,12 +16,15 @@
 //! - [`kernels`] — covariance functions (RBF / Matérn / linear /
 //!   compositions / deep-kernel features) and the kernel-side operators of
 //!   the algebra; every model is a thin composition whose only hot method
-//!   is `matmul` (`K̂·M`) with analytic `dK̂/dθ·M`. The seed-era
-//!   [`kernels::KernelOperator`] name re-exports the `LinearOp` trait.
+//!   is `matmul` (`K̂·M`) with analytic `dK̂/dθ·M`. (The seed-era
+//!   `kernels::KernelOperator` re-export of `LinearOp` has been removed.)
 //! - [`gp`] — GP models and inference engines: exact GP with BBMM and
 //!   Cholesky engines, SGPR (SoR), SKI (KISS-GP), and the Dong et al.
-//!   sequential-Lanczos engine used as the SKI baseline.
-//! - [`train`] — Adam on raw hyperparameters plus the training loop.
+//!   sequential-Lanczos engine used as the SKI baseline; the batched
+//!   [`gp::mll::BatchBbmmEngine`] evaluates a whole hyperparameter sweep
+//!   through one `mbcg_batch` call per step.
+//! - [`train`] — Adam on raw hyperparameters, the scalar training loop,
+//!   and the lockstep multi-restart [`train::SweepTrainer`].
 //! - [`data`] — synthetic UCI-equivalent datasets and a CSV loader.
 //! - [`runtime`] — PJRT artifact loading/execution (the L2/L1 AOT bridge).
 //! - [`coordinator`] — prediction server: request router + dynamic batcher.

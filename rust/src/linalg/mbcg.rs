@@ -250,6 +250,25 @@ pub fn mbcg<T: Scalar>(
     sys.into_result(opts.n_solve_only)
 }
 
+/// Operator-product accounting from one [`mbcg_batch_stats`] run — the
+/// observable behind the batched-training claim: a sequential sweep pays
+/// `system_iterations` covariance passes; the batched loop actually pays
+/// `batched_products`. On the shared-covariance fast path every iteration
+/// is ONE fused `K·[D₁ … D_k]` pass (so `batched_products` ≈
+/// `system_iterations / b`); on the general path each active system
+/// contributes its own product and the two counts are equal — the win
+/// there is the single iteration loop + per-system early stopping, not
+/// fused matmuls.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MbcgBatchStats {
+    /// operator products the batched loop actually performed (1 per
+    /// iteration on the shared fast path; one per active system otherwise)
+    pub batched_products: usize,
+    /// sum of per-system iteration counts — the number of operator
+    /// products a sequential per-system loop would have paid
+    pub system_iterations: usize,
+}
+
 /// **Batched mBCG across operators**: run `b` independent systems
 /// `Aᵢ·Xᵢ = Bᵢ` — one per [`crate::linalg::op::BatchOp`] element — through
 /// **one** iteration loop. Every iteration performs a single batched
@@ -270,6 +289,21 @@ pub fn mbcg_batch(
     preconds: &[&dyn crate::linalg::preconditioner::Preconditioner],
     opts: &MbcgOptions,
 ) -> Vec<MbcgResult> {
+    mbcg_batch_stats(batch, bs, preconds, opts).0
+}
+
+/// [`mbcg_batch`] that also reports [`MbcgBatchStats`] — every per-system
+/// result carries its own probe solves, tridiagonal matrices, iteration
+/// count, and residuals, so a batched inference engine
+/// ([`crate::gp::mll::BatchBbmmEngine`]) can run the full §4 derivation
+/// (solve + SLQ log-det + paired-trace) per batch element from this one
+/// call.
+pub fn mbcg_batch_stats(
+    batch: &crate::linalg::op::BatchOp<'_>,
+    bs: &[&Mat],
+    preconds: &[&dyn crate::linalg::preconditioner::Preconditioner],
+    opts: &MbcgOptions,
+) -> (Vec<MbcgResult>, MbcgBatchStats) {
     let b = batch.len();
     assert_eq!(bs.len(), b, "mbcg_batch: RHS count mismatch");
     assert_eq!(preconds.len(), b, "mbcg_batch: preconditioner count mismatch");
@@ -282,6 +316,7 @@ pub fn mbcg_batch(
             CgSystem::new(rhs, pre.solve_mat(rhs))
         })
         .collect();
+    let mut stats = MbcgBatchStats::default();
     loop {
         let active: Vec<usize> = systems
             .iter()
@@ -295,6 +330,7 @@ pub fn mbcg_batch(
         let ds: Vec<&Mat> = active.iter().map(|&i| &systems[i].d).collect();
         let vs = batch.matmul_subset(&active, &ds);
         drop(ds);
+        stats.batched_products += if batch.is_shared() { 1 } else { active.len() };
         for (k, &i) in active.iter().enumerate() {
             let sys = &mut systems[i];
             sys.absorb_product(&vs[k], opts.tol);
@@ -304,10 +340,12 @@ pub fn mbcg_batch(
             }
         }
     }
-    systems
+    stats.system_iterations = systems.iter().map(|sys| sys.iterations).sum();
+    let results = systems
         .into_iter()
         .map(|sys| sys.into_result(opts.n_solve_only))
-        .collect()
+        .collect();
+    (results, stats)
 }
 
 /// [`mbcg`] over a composed [`crate::linalg::op::LinearOp`] — the entry

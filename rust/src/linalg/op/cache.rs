@@ -18,33 +18,65 @@
 //! one factorisation without copying; the map lock is held across a
 //! rebuild (deliberately — racing handlers would otherwise factorise the
 //! same operator twice).
+//!
+//! Long-lived deployments bound the cache with
+//! [`SolvePlanCache::with_policy`]: an **LRU capacity** (slots beyond the
+//! bound are evicted least-recently-used first) and/or an **idle TTL** —
+//! slots idle longer than the TTL are swept out on the next *cold* cache
+//! access (any miss/invalidation/expiry, where a plan rebuild dwarfs the
+//! map walk), so a quiet tenant's factorisation memory is released by
+//! ongoing traffic without taxing the hot hit path. Both are observable
+//! through the [`SolvePlanCache::evictions`] /
+//! [`SolvePlanCache::expirations`] counters; the unbounded default keeps
+//! the original semantics.
 
 use super::solve::{plan, SolveOptions, SolvePlan};
 use super::LinearOp;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 struct Slot {
     fingerprint: u64,
     precond_rank: usize,
     plan: Arc<SolvePlan>,
+    /// last hit/build time (drives both LRU ordering and the idle TTL)
+    last_used: Instant,
 }
 
 /// Cache of prepared [`SolvePlan`]s keyed by deployment slot; see the
-/// module docs for hit/miss/invalidation semantics.
+/// module docs for hit/miss/invalidation/eviction semantics.
 #[derive(Default)]
 pub struct SolvePlanCache {
     slots: Mutex<HashMap<String, Slot>>,
     hits: AtomicU64,
     misses: AtomicU64,
     invalidations: AtomicU64,
+    evictions: AtomicU64,
+    expirations: AtomicU64,
+    /// maximum live slots (`None` = unbounded)
+    capacity: Option<usize>,
+    /// idle time after which a slot is rebuilt on next use (`None` = never)
+    ttl: Option<Duration>,
 }
 
 impl SolvePlanCache {
-    /// Empty cache.
+    /// Empty cache, unbounded (no capacity limit, no TTL).
     pub fn new() -> Self {
         SolvePlanCache::default()
+    }
+
+    /// Empty cache with an eviction policy: keep at most `capacity` slots
+    /// (least-recently-used evicted first) and/or drop slots idle longer
+    /// than `ttl` (swept on any cache access; a swept key rebuilds as a
+    /// miss on its next request). `None` disables the respective bound.
+    pub fn with_policy(capacity: Option<usize>, ttl: Option<Duration>) -> Self {
+        SolvePlanCache {
+            capacity,
+            ttl,
+            ..SolvePlanCache::default()
+        }
     }
 
     /// The plan for `op` under slot `key`, building (miss) or rebuilding
@@ -71,15 +103,43 @@ impl SolvePlanCache {
         op: &dyn LinearOp,
         opts: &SolveOptions,
     ) -> Arc<SolvePlan> {
+        let now = Instant::now();
         let mut slots = self.slots.lock().unwrap();
-        if let Some(slot) = slots.get(key) {
-            if slot.fingerprint == fp && slot.precond_rank == opts.precond_rank {
+        if let Some(slot) = slots.get_mut(key) {
+            let expired = self
+                .ttl
+                .map_or(false, |ttl| now.duration_since(slot.last_used) > ttl);
+            if !expired && slot.fingerprint == fp && slot.precond_rank == opts.precond_rank {
                 self.hits.fetch_add(1, Ordering::Relaxed);
+                slot.last_used = now;
                 return Arc::clone(&slot.plan);
             }
-            self.invalidations.fetch_add(1, Ordering::Relaxed);
+            if expired {
+                // stale by idle time: rebuilt below (counted separately
+                // from content invalidations)
+                self.expirations.fetch_add(1, Ordering::Relaxed);
+            } else {
+                self.invalidations.fetch_add(1, Ordering::Relaxed);
+            }
         } else {
             self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+        // Cold path only (miss / invalidation / expiry — a rebuild is about
+        // to dwarf any map walk): sweep every OTHER expired slot so quiet
+        // tenants' factorisation memory is released by ongoing traffic
+        // without adding an O(slots) scan to the hot hit path. A pure-hit
+        // steady state defers the sweep; pair with a capacity bound when a
+        // hard memory ceiling is required.
+        if let Some(ttl) = self.ttl {
+            let expired: Vec<String> = slots
+                .iter()
+                .filter(|(k2, s)| k2.as_str() != key && now.duration_since(s.last_used) > ttl)
+                .map(|(k2, _)| k2.clone())
+                .collect();
+            for k2 in expired {
+                slots.remove(&k2);
+                self.expirations.fetch_add(1, Ordering::Relaxed);
+            }
         }
         let built = Arc::new(plan(op, opts));
         slots.insert(
@@ -88,8 +148,27 @@ impl SolvePlanCache {
                 fingerprint: fp,
                 precond_rank: opts.precond_rank,
                 plan: Arc::clone(&built),
+                last_used: now,
             },
         );
+        // LRU capacity bound: evict the least-recently-used *other* slots
+        // until the cache fits (the slot just written is always kept).
+        if let Some(cap) = self.capacity {
+            while slots.len() > cap.max(1) {
+                let lru = slots
+                    .iter()
+                    .filter(|(k, _)| k.as_str() != key)
+                    .min_by_key(|(_, s)| s.last_used)
+                    .map(|(k, _)| k.clone());
+                match lru {
+                    Some(k) => {
+                        slots.remove(&k);
+                        self.evictions.fetch_add(1, Ordering::Relaxed);
+                    }
+                    None => break,
+                }
+            }
+        }
         built
     }
 
@@ -123,14 +202,26 @@ impl SolvePlanCache {
         self.invalidations.load(Ordering::Relaxed)
     }
 
-    /// One-line `hits/misses/invalidations` summary for serving logs.
+    /// Slots dropped by the LRU capacity bound.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Rebuilds forced by the idle TTL.
+    pub fn expirations(&self) -> u64 {
+        self.expirations.load(Ordering::Relaxed)
+    }
+
+    /// One-line counter summary for serving logs.
     pub fn stats(&self) -> String {
         format!(
-            "plans={} hits={} misses={} invalidations={}",
+            "plans={} hits={} misses={} invalidations={} evictions={} expirations={}",
             self.len(),
             self.hits(),
             self.misses(),
-            self.invalidations()
+            self.invalidations(),
+            self.evictions(),
+            self.expirations()
         )
     }
 }
@@ -205,6 +296,80 @@ mod tests {
         assert_eq!(cache.len(), 2);
         cache.clear();
         assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn lru_capacity_evicts_least_recently_used() {
+        let cache = SolvePlanCache::with_policy(Some(2), None);
+        let a = model(12, 10);
+        let b = model(12, 11);
+        let c = model(12, 12);
+        let opts = SolveOptions::default();
+        let _ = cache.get_or_plan("a", &a, &opts);
+        let _ = cache.get_or_plan("b", &b, &opts);
+        // touch "a" so "b" becomes the LRU slot
+        let _ = cache.get_or_plan("a", &a, &opts);
+        let _ = cache.get_or_plan("c", &c, &opts);
+        assert_eq!(cache.len(), 2, "capacity bound must hold");
+        assert_eq!(cache.evictions(), 1);
+        // "a" (recently used) and "c" (just built) survive; "b" was evicted
+        let _ = cache.get_or_plan("a", &a, &opts);
+        let _ = cache.get_or_plan("c", &c, &opts);
+        assert_eq!(cache.hits(), 3);
+        let _ = cache.get_or_plan("b", &b, &opts);
+        assert_eq!(cache.misses(), 4, "evicted slot must rebuild as a miss");
+        assert_eq!(cache.evictions(), 2, "reinserting b evicts the next LRU");
+        assert!(cache.stats().contains("evictions=2"));
+    }
+
+    #[test]
+    fn idle_ttl_expires_slots() {
+        let cache = SolvePlanCache::with_policy(None, Some(Duration::from_millis(5)));
+        let op = model(12, 13);
+        let opts = SolveOptions::default();
+        let p1 = cache.get_or_plan("t", &op, &opts);
+        let p2 = cache.get_or_plan("t", &op, &opts);
+        assert!(Arc::ptr_eq(&p1, &p2), "within the TTL the plan is reused");
+        std::thread::sleep(Duration::from_millis(20));
+        let p3 = cache.get_or_plan("t", &op, &opts);
+        assert!(!Arc::ptr_eq(&p1, &p3), "idle slot must rebuild after TTL");
+        assert_eq!(cache.expirations(), 1);
+        assert_eq!(cache.invalidations(), 0, "TTL expiry is not an invalidation");
+        // the rebuilt slot is fresh again
+        let p4 = cache.get_or_plan("t", &op, &opts);
+        assert!(Arc::ptr_eq(&p3, &p4));
+    }
+
+    #[test]
+    fn idle_ttl_sweep_releases_quiet_slots_on_cold_accesses() {
+        // a quiet tenant's factorisation must be dropped by some OTHER
+        // tenant's cold traffic (here: a new tenant's first request) — not
+        // retained until the quiet one returns
+        let cache = SolvePlanCache::with_policy(None, Some(Duration::from_millis(5)));
+        let quiet = model(12, 14);
+        let busy = model(12, 15);
+        let opts = SolveOptions::default();
+        let _ = cache.get_or_plan("quiet", &quiet, &opts);
+        std::thread::sleep(Duration::from_millis(20));
+        let _ = cache.get_or_plan("busy", &busy, &opts);
+        assert_eq!(cache.len(), 1, "quiet slot must be swept by busy traffic");
+        assert_eq!(cache.expirations(), 1);
+        // hot hits on the surviving slot do not sweep (and nothing to sweep)
+        let _ = cache.get_or_plan("busy", &busy, &opts);
+        assert_eq!(cache.hits(), 1);
+    }
+
+    #[test]
+    fn unbounded_default_never_evicts() {
+        let cache = SolvePlanCache::new();
+        let opts = SolveOptions::default();
+        let ops: Vec<DenseKernelOp> = (0..6).map(|i| model(10, 20 + i)).collect();
+        for (i, op) in ops.iter().enumerate() {
+            let _ = cache.get_or_plan(&format!("slot-{i}"), op, &opts);
+        }
+        assert_eq!(cache.len(), 6);
+        assert_eq!(cache.evictions(), 0);
+        assert_eq!(cache.expirations(), 0);
     }
 
     #[test]

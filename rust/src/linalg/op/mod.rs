@@ -22,8 +22,8 @@
 //! operator's declared structure ([`LinearOp::solve_hint`]), so exact,
 //! SGPR, SKI, and sharded models all solve through one generic path.
 //!
-//! The legacy `kernels::KernelOperator` name is kept as a deprecated
-//! re-export of this trait so seed-era code keeps compiling.
+//! (The seed-era `kernels::KernelOperator` trait was folded into this one;
+//! its deprecated re-export has been removed — import [`LinearOp`].)
 
 pub mod batch;
 pub mod cache;

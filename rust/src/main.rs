@@ -18,14 +18,14 @@ use bbmm_gp::coordinator::{
 };
 use bbmm_gp::data::synthetic::{generate, spec_by_name};
 use bbmm_gp::gp::exact::{Engine, ExactGp};
-use bbmm_gp::gp::mll::{BbmmEngine, CholeskyEngine, InferenceEngine};
+use bbmm_gp::gp::mll::{BatchBbmmEngine, BbmmEngine, CholeskyEngine, InferenceEngine};
 use bbmm_gp::gp::predict::{mae, rmse};
-use bbmm_gp::gp::{DongEngine, SgprOp, SkiOp};
+use bbmm_gp::gp::{DongEngine, SgprModel, SgprOp, SkiOp};
 use bbmm_gp::kernels::{DenseKernelOp, KernelCov, KernelCovOp, Matern52, Rbf, ShardedCovOp};
 use bbmm_gp::linalg::op::{solve_strategy, AddedDiagOp, LinearOp, SolveOptions, SolvePlanCache};
 use bbmm_gp::runtime::{default_artifact_dir, Runtime};
 use bbmm_gp::tensor::Mat;
-use bbmm_gp::train::{TrainConfig, Trainer};
+use bbmm_gp::train::{multi_restart_inits, noise_grid_inits, TrainConfig, Trainer};
 use bbmm_gp::util::cli::{Args, CliError};
 use bbmm_gp::util::{Rng, Timer};
 use std::sync::atomic::AtomicBool;
@@ -36,6 +36,7 @@ fn main() {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let result = match cmd {
         "train" => cmd_train(&args),
+        "sweep" => cmd_sweep(&args),
         "predict" => cmd_predict(&args),
         "serve" => cmd_serve(&args),
         "run" => cmd_run(&args),
@@ -124,6 +125,9 @@ fn print_help() {
          \n\
          COMMANDS:\n\
            train     train GP hyperparameters on a dataset\n\
+           sweep     batched multi-restart training: one mBCG call per\n\
+                     Adam step across ALL candidates (--restarts R or\n\
+                     --noises s1,s2,… for a shared-covariance sweep)\n\
            predict   train then evaluate test MAE/RMSE\n\
            serve     train a model and serve predictions over TCP\n\
            artifact  load + execute an AOT HLO artifact via PJRT\n\
@@ -136,7 +140,14 @@ fn print_help() {
            --kernel rbf|matern52             (default: rbf)\n\
            --iters N --lr F --probes T --cg-iters P --precond-rank K\n\
            --seed S --n N (override dataset size)\n\
+           --restarts R        (train/sweep: candidate count; train with\n\
+                               R > 1 routes to the batched sweep)\n\
+           --restart-spread F  (sweep: raw-parameter init perturbation)\n\
+           --noises s1,s2,…    (sweep: explicit noise grid — candidates\n\
+                               share one covariance, the fused fast path)\n\
            --shards S          (serve: row-shard the kernel operator)\n\
+           --plan-cache-cap N --plan-cache-ttl-s S   (serve: bound the\n\
+                               multi-tenant solve-plan cache: LRU + TTL)\n\
            --tenant name=model[@dataset]   (serve: repeatable; host many\n\
                                models behind one batched BatchOp solve,\n\
                                routed by the `name:` line-protocol prefix)"
@@ -246,6 +257,12 @@ fn train_model(
 }
 
 fn cmd_train(args: &Args) -> Result<(), CliError> {
+    // a multi-restart request is the batched sweep by another name — but
+    // the sweep is BBMM-only, so an explicit non-BBMM engine choice must
+    // error loudly instead of being silently replaced
+    if args.usize_or("restarts", 1)? > 1 || args.get("noises").is_some() {
+        return cmd_sweep(args);
+    }
     let ds = load_dataset(args)?;
     println!(
         "dataset {} — n_train={} d={} model={} engine={}",
@@ -258,6 +275,135 @@ fn cmd_train(args: &Args) -> Result<(), CliError> {
     let (params, nmll, secs) = train_model(args, &ds)?;
     println!("trained in {secs:.2}s — final nmll {nmll:.4}");
     println!("raw parameters: {params:?}");
+    Ok(())
+}
+
+/// Batched multi-restart training: R candidates (random restarts or an
+/// explicit `--noises` grid sharing one covariance) trained in lockstep —
+/// ONE `mbcg_batch` call per Adam step for the whole sweep, per-candidate
+/// early stopping, and a winner report.
+fn cmd_sweep(args: &Args) -> Result<(), CliError> {
+    // the batched sweep is BBMM-only: an explicit non-BBMM engine choice
+    // must error loudly instead of being silently replaced
+    if args.get_or("engine", "bbmm") != "bbmm" {
+        return Err(CliError {
+            flag: "engine".to_string(),
+            message: format!(
+                "the batched sweep (sweep / train --restarts/--noises) is bbmm-only, \
+                 got --engine {}",
+                args.get_or("engine", "bbmm")
+            ),
+        });
+    }
+    let ds = load_dataset(args)?;
+    let model = args.get_or("model", "exact").to_string();
+    let seed = args.u64_or("seed", 0)?;
+    let config = TrainConfig {
+        iters: args.usize_or("iters", 30)?,
+        lr: args.f64_or("lr", 0.1)?,
+        tol: args.f64_or("tol", 0.0)?,
+        patience: args.usize_or("patience", 10)?,
+        verbose: args.flag("verbose"),
+    };
+    let mut engine = BatchBbmmEngine::new(
+        args.usize_or("cg-iters", 20)?,
+        args.usize_or("probes", 10)?,
+        args.usize_or("precond-rank", 5)?,
+        seed,
+    );
+    let kernel = make_kernel(args);
+    let mut template = kernel.params();
+    template.push(0.1f64.ln());
+    let noises = args.f64_list_or("noises", &[])?;
+    if let Some(&bad) = noises.iter().find(|&&s| !(s > 0.0) || !s.is_finite()) {
+        return Err(CliError {
+            flag: "noises".to_string(),
+            message: format!("noise levels must be positive and finite, got {bad}"),
+        });
+    }
+    let restarts = args.usize_or("restarts", 8)?;
+    if noises.is_empty() && restarts == 0 {
+        return Err(CliError {
+            flag: "restarts".to_string(),
+            message: "need at least one restart".to_string(),
+        });
+    }
+    let inits = if noises.is_empty() {
+        multi_restart_inits(&template, restarts, args.f64_or("restart-spread", 1.0)?, seed)
+    } else {
+        noise_grid_inits(&template, &noises)
+    };
+    println!(
+        "sweep: dataset {} n_train={} model={model} candidates={}{}",
+        ds.name,
+        ds.n_train(),
+        inits.len(),
+        if noises.is_empty() { "" } else { " (noise grid: fused covariance on shared steps)" }
+    );
+    let timer = Timer::start();
+    let y = ds.y_train.clone();
+    let report = match model.as_str() {
+        "sgpr" => {
+            let m = args.usize_or("inducing", 300)?;
+            let u = draw_inducing(&ds, m, seed);
+            SgprModel::fit_sweep(&ds.x_train, &y, &u, kernel.as_ref(), &inits, &mut engine, config)
+        }
+        "exact" => {
+            ExactGp::fit_sweep(&ds.x_train, &y, kernel.as_ref(), &inits, &mut engine, config)
+        }
+        other => {
+            return Err(CliError {
+                flag: "model".to_string(),
+                message: format!("sweep supports exact|sgpr, got {other:?}"),
+            })
+        }
+    };
+    let secs = timer.elapsed_s();
+    for line in report.summary_lines() {
+        println!("{line}");
+    }
+    println!(
+        "swept {} candidates in {secs:.2}s — last step paid {} operator products \
+         (sequential equivalent: {}; equal counts mean the candidates' kernels \
+         had drifted apart, so no matmul fusion — the win is the single loop + \
+         per-candidate early stopping)",
+        inits.len(),
+        engine.last_stats.batched_products,
+        engine.last_stats.system_iterations
+    );
+    match report.best {
+        None => println!("sweep: every candidate diverged — no winner"),
+        Some(bi) => {
+            println!(
+                "winner: candidate {bi} nmll {:.4} params {:?}",
+                report.best_nmll().unwrap(),
+                report.best_params().unwrap()
+            );
+            if model == "exact" {
+                // evaluate the winning posterior on the held-out split
+                let predict_engine = Engine::Bbmm(BbmmEngine::new(
+                    args.usize_or("cg-iters", 20)?.max(50),
+                    args.usize_or("probes", 10)?,
+                    args.usize_or("precond-rank", 5)?,
+                    seed,
+                ));
+                if let Some(mut gp) = ExactGp::from_sweep(
+                    ds.x_train.clone(),
+                    y.clone(),
+                    kernel.as_ref(),
+                    &report,
+                    predict_engine,
+                ) {
+                    let pred = gp.predict(&ds.x_test);
+                    println!(
+                        "winner test MAE {:.4} RMSE {:.4}",
+                        mae(&pred.mean, &ds.y_test),
+                        rmse(&pred.mean, &ds.y_test)
+                    );
+                }
+            }
+        }
+    }
     Ok(())
 }
 
@@ -536,7 +682,12 @@ fn cmd_serve(args: &Args) -> Result<(), CliError> {
                 max_shards = max_shards.max(targs.usize_or("shards", 1)?);
             }
         }
-        let cache = Arc::new(SolvePlanCache::new());
+        let cap = args.usize_or("plan-cache-cap", 0)?;
+        let ttl_s = args.f64_or("plan-cache-ttl-s", 0.0)?;
+        let cache = Arc::new(SolvePlanCache::with_policy(
+            (cap > 0).then_some(cap),
+            (ttl_s > 0.0).then(|| std::time::Duration::from_secs_f64(ttl_s)),
+        ));
         let predictor = multi_served_predictor(models, solve_opts, cache);
         let batcher = Arc::new(DynamicBatcher::new_multi(specs, policy, predictor));
         (batcher, described.join(" | "), max_shards, dims)

@@ -26,6 +26,18 @@ impl Adam {
         }
     }
 
+    /// [`Adam::step`] with a non-finite guard: a NaN/∞ gradient leaves the
+    /// optimiser state **and** the parameters untouched (a poisoned moment
+    /// vector would corrupt every later step) and returns `false` so the
+    /// caller can mark the trajectory diverged.
+    pub fn step_guarded(&mut self, params: &mut [f64], grad: &[f64]) -> bool {
+        if grad.iter().any(|g| !g.is_finite()) {
+            return false;
+        }
+        self.step(params, grad);
+        true
+    }
+
     /// One update: params ← params − lr·m̂/(√v̂ + ε).
     pub fn step(&mut self, params: &mut [f64], grad: &[f64]) {
         assert_eq!(params.len(), self.m.len());
@@ -86,6 +98,23 @@ mod tests {
         let mut y = vec![0.0];
         opt.step(&mut y, &[1.0]);
         assert!((y[0] + 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn guarded_step_rejects_non_finite_gradients() {
+        let mut opt = Adam::new(2, 0.1);
+        let mut x = vec![1.0, 2.0];
+        assert!(opt.step_guarded(&mut x, &[0.5, -0.5]));
+        let after_good = x.clone();
+        let t_after_good = opt.t;
+        // NaN and ∞ gradients must be no-ops on params AND optimizer state
+        assert!(!opt.step_guarded(&mut x, &[f64::NAN, 0.0]));
+        assert!(!opt.step_guarded(&mut x, &[0.0, f64::INFINITY]));
+        assert_eq!(x, after_good);
+        assert_eq!(opt.t, t_after_good);
+        // and the optimiser still works afterwards
+        assert!(opt.step_guarded(&mut x, &[0.5, -0.5]));
+        assert!(x.iter().all(|v| v.is_finite()));
     }
 
     #[test]

@@ -1,8 +1,15 @@
-//! Hyperparameter optimisation: Adam (the paper's optimiser, §6) plus the
-//! training loop driving any [`crate::gp::InferenceEngine`].
+//! Hyperparameter optimisation: Adam (the paper's optimiser, §6), the
+//! scalar training loop driving any [`crate::gp::InferenceEngine`], and
+//! the batched [`SweepTrainer`] stepping a whole hyperparameter sweep in
+//! lockstep through one [`crate::gp::mll::BatchInferenceEngine`] call per
+//! iteration.
 
 pub mod adam;
+pub mod sweep;
 pub mod trainer;
 
 pub use adam::Adam;
+pub use sweep::{
+    multi_restart_inits, noise_grid_inits, Candidate, CandidateStatus, SweepReport, SweepTrainer,
+};
 pub use trainer::{TrainConfig, TrainRecord, Trainer};

@@ -1,0 +1,467 @@
+//! **Batched hyperparameter sweeps**: b Adam trajectories stepped in
+//! lockstep, one batched MLL + gradient evaluation per iteration — the
+//! training-side payoff of the batch axis (one
+//! [`crate::gp::mll::BatchInferenceEngine`] call per step instead of b
+//! scalar engine calls).
+//!
+//! [`SweepTrainer`] owns the optimisation mechanics only; the model glue
+//! (`ExactGp::fit_sweep`, `SgprModel::fit_sweep`) owns the operators and
+//! supplies a *batched objective* closure that lifts the active
+//! candidates' parameters into a [`crate::linalg::op::BatchOp`] and
+//! evaluates them together. **Per-candidate early stopping** mirrors
+//! `mbcg_batch`'s frozen systems: a candidate that converges (patience on
+//! its own nmll) or diverges (non-finite nmll/gradient) drops out of the
+//! active set, so later iterations batch only the still-improving
+//! candidates — the batched product shrinks exactly like the solver's.
+
+use crate::gp::mll::MllGrad;
+use crate::train::adam::Adam;
+use crate::train::trainer::{TrainConfig, TrainRecord};
+use crate::util::{Rng, Timer};
+
+/// Lifecycle of one sweep candidate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CandidateStatus {
+    /// still evaluated and stepped each iteration
+    Active,
+    /// early-stopped: nmll stopped improving for `patience` steps
+    Converged,
+    /// failed fast on a non-finite nmll/gradient; params keep their last
+    /// finite value and the candidate never re-enters the batch
+    Diverged,
+}
+
+/// One restart's trajectory through the sweep.
+pub struct Candidate {
+    /// current raw (log-space) parameters (end of run: one Adam step past
+    /// the last evaluation — see [`Candidate::best_params`])
+    pub params: Vec<f64>,
+    /// the parameters that *achieved* [`Candidate::best_nmll`] (snapshot
+    /// taken at evaluation time, before that iteration's Adam step) — what
+    /// a winner materialises from
+    pub best_params: Vec<f64>,
+    /// lifecycle state (drives batch membership)
+    pub status: CandidateStatus,
+    /// best (lowest) finite nmll observed
+    pub best_nmll: f64,
+    /// per-iteration training records (same schema as [`TrainRecord`])
+    pub history: Vec<TrainRecord>,
+    adam: Adam,
+    since_best: usize,
+}
+
+impl Candidate {
+    fn new(params: Vec<f64>, lr: f64) -> Self {
+        let adam = Adam::new(params.len(), lr);
+        Candidate {
+            best_params: params.clone(),
+            params,
+            status: CandidateStatus::Active,
+            best_nmll: f64::INFINITY,
+            history: Vec::new(),
+            adam,
+            since_best: 0,
+        }
+    }
+}
+
+/// Steps b Adam states in lockstep against a batched objective; see the
+/// module docs for the candidate lifecycle.
+pub struct SweepTrainer {
+    /// shared optimisation knobs (`tol`/`patience` apply per candidate)
+    pub config: TrainConfig,
+    /// the b candidate trajectories
+    pub candidates: Vec<Candidate>,
+}
+
+impl SweepTrainer {
+    /// One candidate per initial raw-parameter vector (all the same
+    /// length); every candidate gets its own Adam state at `config.lr`.
+    pub fn new(config: TrainConfig, inits: Vec<Vec<f64>>) -> Self {
+        assert!(!inits.is_empty(), "SweepTrainer: empty candidate set");
+        let d = inits[0].len();
+        for p in &inits {
+            assert_eq!(p.len(), d, "SweepTrainer: candidate length mismatch");
+        }
+        let lr = config.lr;
+        SweepTrainer {
+            config,
+            candidates: inits.into_iter().map(|p| Candidate::new(p, lr)).collect(),
+        }
+    }
+
+    /// Run up to `config.iters` lockstep iterations. Each iteration,
+    /// `objective` receives the **active** candidates as `(index, params)`
+    /// pairs — the model glue batches exactly these — and must return one
+    /// [`MllGrad`] per entry, in order. Returns the winning candidate
+    /// index ([`SweepTrainer::best`]).
+    pub fn run(
+        &mut self,
+        mut objective: impl FnMut(&[(usize, Vec<f64>)]) -> Vec<MllGrad>,
+    ) -> Option<usize> {
+        let timer = Timer::start();
+        for it in 0..self.config.iters {
+            let active: Vec<(usize, Vec<f64>)> = self
+                .candidates
+                .iter()
+                .enumerate()
+                .filter(|(_, c)| c.status == CandidateStatus::Active)
+                .map(|(i, c)| (i, c.params.clone()))
+                .collect();
+            if active.is_empty() {
+                break;
+            }
+            let results = objective(&active);
+            assert_eq!(
+                results.len(),
+                active.len(),
+                "sweep objective must return one MllGrad per active candidate"
+            );
+            for ((idx, _), res) in active.iter().zip(results) {
+                let cand = &mut self.candidates[*idx];
+                let gnorm = res.grad.iter().map(|g| g * g).sum::<f64>().sqrt();
+                cand.history.push(TrainRecord {
+                    iter: it,
+                    nmll: res.nmll,
+                    grad_norm: gnorm,
+                    elapsed_s: timer.elapsed_s(),
+                    cg_iterations: res.iterations,
+                });
+                if self.config.verbose {
+                    eprintln!(
+                        "[sweep] iter {it:4} cand {idx:3} nmll {:.6} |g| {:.3e}",
+                        res.nmll, gnorm
+                    );
+                }
+                // fail fast: a diverged candidate is dropped from the batch
+                // instead of poisoning its optimiser (or wasting b-th of
+                // every later batched product on NaNs)
+                if !res.nmll.is_finite() || !gnorm.is_finite() {
+                    cand.status = CandidateStatus::Diverged;
+                    continue;
+                }
+                if res.nmll < cand.best_nmll - self.config.tol {
+                    cand.best_nmll = res.nmll;
+                    // snapshot the params this evaluation was taken at
+                    // (cand.params has not been stepped yet this iteration)
+                    cand.best_params.copy_from_slice(&cand.params);
+                    cand.since_best = 0;
+                } else {
+                    if res.nmll < cand.best_nmll {
+                        cand.best_nmll = res.nmll;
+                        cand.best_params.copy_from_slice(&cand.params);
+                    }
+                    cand.since_best += 1;
+                    if self.config.tol > 0.0 && cand.since_best >= self.config.patience {
+                        cand.status = CandidateStatus::Converged;
+                        continue;
+                    }
+                }
+                if !cand.adam.step_guarded(&mut cand.params, &res.grad) {
+                    cand.status = CandidateStatus::Diverged;
+                }
+            }
+        }
+        self.best()
+    }
+
+    /// The winning candidate: lowest `best_nmll` among candidates that
+    /// never diverged (`None` when every candidate diverged).
+    pub fn best(&self) -> Option<usize> {
+        self.candidates
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.status != CandidateStatus::Diverged && c.best_nmll.is_finite())
+            .min_by(|(_, a), (_, b)| a.best_nmll.total_cmp(&b.best_nmll))
+            .map(|(i, _)| i)
+    }
+
+    /// Indices of candidates still active.
+    pub fn active(&self) -> Vec<usize> {
+        self.candidates
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.status == CandidateStatus::Active)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Consume the trainer into a [`SweepReport`].
+    pub fn into_report(self) -> SweepReport {
+        let best = self.best();
+        SweepReport {
+            best,
+            candidates: self.candidates,
+        }
+    }
+}
+
+/// The outcome of a batched sweep: every candidate's final trajectory plus
+/// the winner.
+pub struct SweepReport {
+    /// winning candidate index (lowest best nmll among non-diverged), or
+    /// `None` when every candidate diverged
+    pub best: Option<usize>,
+    /// per-candidate trajectories, in init order
+    pub candidates: Vec<Candidate>,
+}
+
+impl SweepReport {
+    /// The winner's raw parameters **at its best evaluation** (not its
+    /// end-of-run parameters, which sit one Adam step past the last
+    /// evaluation and can be worse under stochastic gradients).
+    pub fn best_params(&self) -> Option<&[f64]> {
+        self.best.map(|i| self.candidates[i].best_params.as_slice())
+    }
+
+    /// The winner's best nmll.
+    pub fn best_nmll(&self) -> Option<f64> {
+        self.best.map(|i| self.candidates[i].best_nmll)
+    }
+
+    /// One human-readable line per candidate (CLI/report output).
+    pub fn summary_lines(&self) -> Vec<String> {
+        self.candidates
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                let mark = if Some(i) == self.best { " <- best" } else { "" };
+                format!(
+                    "candidate {i:3}: nmll {:>12.4} after {:3} iters [{:?}]{mark}",
+                    c.best_nmll,
+                    c.history.len(),
+                    c.status
+                )
+            })
+            .collect()
+    }
+}
+
+/// Multi-restart initial candidates: candidate 0 is the template itself;
+/// the rest perturb every raw (log-space) parameter by `N(0, spread²)` —
+/// the standard random-restart initialisation for non-convex mll surfaces.
+pub fn multi_restart_inits(
+    template: &[f64],
+    restarts: usize,
+    spread: f64,
+    seed: u64,
+) -> Vec<Vec<f64>> {
+    assert!(restarts > 0, "need at least one restart");
+    let mut rng = Rng::new(seed);
+    (0..restarts)
+        .map(|r| {
+            if r == 0 {
+                template.to_vec()
+            } else {
+                template.iter().map(|v| v + spread * rng.normal()).collect()
+            }
+        })
+        .collect()
+}
+
+/// A **shared-covariance** sweep initialisation: every candidate keeps the
+/// template's kernel parameters and takes one σ² from the grid — the
+/// configuration where the batched engine's fused `K·[D₁ … D_b]` fast
+/// path engages (the covariance is literally shared).
+pub fn noise_grid_inits(template: &[f64], noises: &[f64]) -> Vec<Vec<f64>> {
+    assert!(!noises.is_empty(), "need at least one noise level");
+    assert!(
+        noises.iter().all(|&s| s > 0.0),
+        "noise levels must be positive"
+    );
+    let last = template.len() - 1;
+    noises
+        .iter()
+        .map(|&s2| {
+            let mut p = template.to_vec();
+            p[last] = s2.ln();
+            p
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grad_for(params: &[f64]) -> MllGrad {
+        // quadratic bowl: nmll = Σ (p − 1)², grad = 2(p − 1)
+        let nmll: f64 = params.iter().map(|p| (p - 1.0) * (p - 1.0)).sum();
+        MllGrad {
+            nmll,
+            grad: params.iter().map(|p| 2.0 * (p - 1.0)).collect(),
+            iterations: 1,
+            logdet: 0.0,
+            datafit: 0.0,
+        }
+    }
+
+    #[test]
+    fn lockstep_sweep_minimises_all_candidates_and_picks_the_best() {
+        let inits = vec![vec![3.0, -2.0], vec![1.2, 0.9], vec![-4.0, 4.0]];
+        let mut trainer = SweepTrainer::new(
+            TrainConfig {
+                iters: 300,
+                lr: 0.05,
+                ..Default::default()
+            },
+            inits,
+        );
+        let best = trainer.run(|active| active.iter().map(|(_, p)| grad_for(p)).collect());
+        // candidate 1 starts closest to the optimum and must win
+        assert_eq!(best, Some(1));
+        for c in &trainer.candidates {
+            assert!(c.best_nmll < 0.1, "nmll {}", c.best_nmll);
+        }
+    }
+
+    #[test]
+    fn converged_and_diverged_candidates_drop_out_of_the_batch() {
+        let inits = vec![vec![0.0], vec![0.0], vec![0.0]];
+        let mut trainer = SweepTrainer::new(
+            TrainConfig {
+                iters: 40,
+                lr: 0.1,
+                tol: 1e-9,
+                patience: 3,
+                verbose: false,
+            },
+            inits,
+        );
+        let mut active_sizes = Vec::new();
+        let best = trainer.run(|active| {
+            active_sizes.push(active.len());
+            let step = active_sizes.len();
+            active
+                .iter()
+                .map(|(idx, p)| match idx {
+                    // candidate 0: constant objective — converges by patience
+                    0 => MllGrad {
+                        nmll: 5.0,
+                        grad: vec![0.0],
+                        iterations: 1,
+                        logdet: 0.0,
+                        datafit: 0.0,
+                    },
+                    // candidate 1: goes NaN at step 2 — diverges, fail fast
+                    1 if step >= 2 => MllGrad {
+                        nmll: f64::NAN,
+                        grad: vec![0.0],
+                        iterations: 1,
+                        logdet: 0.0,
+                        datafit: 0.0,
+                    },
+                    // candidate 2: strictly improving forever — stays
+                    // active through every iteration and wins the sweep
+                    _ => MllGrad {
+                        nmll: 4.0 - step as f64,
+                        grad: vec![0.1 + 0.0 * p[0]],
+                        iterations: 1,
+                        logdet: 0.0,
+                        datafit: 0.0,
+                    },
+                })
+                .collect()
+        });
+        assert_eq!(trainer.candidates[0].status, CandidateStatus::Converged);
+        assert_eq!(trainer.candidates[1].status, CandidateStatus::Diverged);
+        assert_eq!(trainer.candidates[2].status, CandidateStatus::Active);
+        // the batch shrank: 3 → (after cand 1 dies at step 2, cand 0 at
+        // patience) → eventually only candidate 2 remains
+        assert_eq!(active_sizes[0], 3);
+        assert_eq!(*active_sizes.last().unwrap(), 1);
+        // candidate 1's params stayed finite (divergence froze them)
+        assert!(trainer.candidates[1].params[0].is_finite());
+        // winner must be the healthy candidate 2
+        assert_eq!(best, Some(2));
+        // diverged candidate never re-entered: history stops at step 2
+        assert_eq!(trainer.candidates[1].history.len(), 2);
+    }
+
+    #[test]
+    fn best_params_snapshot_the_best_evaluation_not_the_last_step() {
+        // nmll dips at step 3 then worsens; the report must hand back the
+        // parameters the dip was evaluated at, not the wandered-off final
+        // ones (stochastic gradients make this the common case)
+        let mut trainer = SweepTrainer::new(
+            TrainConfig {
+                iters: 6,
+                lr: 0.5,
+                ..Default::default()
+            },
+            vec![vec![0.0]],
+        );
+        let nmlls = [10.0, 8.0, 3.0, 9.0, 11.0, 12.0];
+        let mut step = 0usize;
+        let mut params_at_best = f64::NAN;
+        let best = trainer.run(|active| {
+            let p = active[0].1[0];
+            if step == 2 {
+                params_at_best = p;
+            }
+            let nmll = nmlls[step];
+            step += 1;
+            vec![MllGrad {
+                nmll,
+                grad: vec![1.0],
+                iterations: 1,
+                logdet: 0.0,
+                datafit: 0.0,
+            }]
+        });
+        assert_eq!(best, Some(0));
+        let report = trainer.into_report();
+        assert_eq!(report.best_nmll(), Some(3.0));
+        let got = report.best_params().unwrap()[0];
+        assert_eq!(got, params_at_best, "winner params must match the best evaluation");
+        // and the end-of-run params differ (five more Adam steps happened)
+        assert_ne!(report.candidates[0].params[0], got);
+    }
+
+    #[test]
+    fn all_diverged_yields_no_winner() {
+        let mut trainer = SweepTrainer::new(
+            TrainConfig {
+                iters: 5,
+                lr: 0.1,
+                ..Default::default()
+            },
+            vec![vec![0.0]],
+        );
+        let best = trainer.run(|active| {
+            active
+                .iter()
+                .map(|_| MllGrad {
+                    nmll: f64::INFINITY,
+                    grad: vec![f64::NAN],
+                    iterations: 0,
+                    logdet: 0.0,
+                    datafit: 0.0,
+                })
+                .collect()
+        });
+        assert_eq!(best, None);
+        let report = trainer.into_report();
+        assert_eq!(report.best, None);
+        assert!(report.best_params().is_none());
+        assert_eq!(report.summary_lines().len(), 1);
+    }
+
+    #[test]
+    fn init_helpers_shape_the_candidate_set() {
+        let template = vec![0.5, -0.5, (0.1f64).ln()];
+        let inits = multi_restart_inits(&template, 4, 0.3, 7);
+        assert_eq!(inits.len(), 4);
+        assert_eq!(inits[0], template, "candidate 0 is the template");
+        for c in &inits[1..] {
+            assert_eq!(c.len(), 3);
+            assert!(c.iter().zip(&template).any(|(a, b)| a != b));
+        }
+        let grid = noise_grid_inits(&template, &[0.05, 0.2]);
+        assert_eq!(grid.len(), 2);
+        for (g, &s2) in grid.iter().zip(&[0.05, 0.2]) {
+            assert_eq!(&g[..2], &template[..2], "kernel params shared");
+            assert!((g[2] - (s2 as f64).ln()).abs() < 1e-15);
+        }
+    }
+}

@@ -46,6 +46,10 @@ pub struct TrainRecord {
 pub struct Trainer {
     pub config: TrainConfig,
     pub history: Vec<TrainRecord>,
+    /// true once a non-finite nmll/gradient aborted the run — the
+    /// optimiser state is left unpoisoned and `params` keep their last
+    /// finite value (fail fast instead of walking NaNs for `iters` steps)
+    pub diverged: bool,
 }
 
 impl Trainer {
@@ -53,11 +57,13 @@ impl Trainer {
         Trainer {
             config,
             history: Vec::new(),
+            diverged: false,
         }
     }
 
     /// Optimise `params` in place. `objective` must return the nmll and its
-    /// gradient at the supplied raw parameters.
+    /// gradient at the supplied raw parameters. A non-finite nmll or
+    /// gradient stops the run immediately with [`Trainer::diverged`] set.
     pub fn run(
         &mut self,
         params: &mut Vec<f64>,
@@ -85,6 +91,13 @@ impl Trainer {
                     timer.elapsed_s()
                 );
             }
+            if !res.nmll.is_finite() || !gnorm.is_finite() {
+                self.diverged = true;
+                if self.config.verbose {
+                    eprintln!("[train] iter {it:4} diverged (non-finite nmll/grad) — stopping");
+                }
+                break;
+            }
             if res.nmll < best - self.config.tol {
                 best = res.nmll;
                 since_best = 0;
@@ -94,7 +107,10 @@ impl Trainer {
                     break;
                 }
             }
-            adam.step(params, &res.grad);
+            if !adam.step_guarded(params, &res.grad) {
+                self.diverged = true;
+                break;
+            }
         }
         best
     }
@@ -114,7 +130,8 @@ impl Trainer {
 mod tests {
     use super::*;
     use crate::gp::mll::{CholeskyEngine, InferenceEngine};
-    use crate::kernels::{DenseKernelOp, KernelOperator, Rbf};
+    use crate::kernels::{DenseKernelOp, Rbf};
+    use crate::linalg::op::LinearOp;
     use crate::tensor::Mat;
     use crate::util::Rng;
 
@@ -147,6 +164,33 @@ mod tests {
         let learned_noise = op.noise();
         assert!(learned_noise < 0.3, "noise={learned_noise}");
         assert_eq!(trainer.history.len(), 60);
+    }
+
+    #[test]
+    fn non_finite_objective_fails_fast_without_poisoning_params() {
+        let mut trainer = Trainer::new(TrainConfig {
+            iters: 50,
+            lr: 0.1,
+            ..Default::default()
+        });
+        let mut params = vec![1.0, -2.0];
+        let mut calls = 0usize;
+        let best = trainer.run(&mut params, |_| {
+            calls += 1;
+            let nmll = if calls >= 3 { f64::NAN } else { 10.0 - calls as f64 };
+            MllGrad {
+                nmll,
+                grad: vec![0.1, 0.1],
+                iterations: 1,
+                logdet: 0.0,
+                datafit: 0.0,
+            }
+        });
+        assert!(trainer.diverged, "NaN nmll must mark the run diverged");
+        assert_eq!(calls, 3, "must stop at the first non-finite evaluation");
+        assert_eq!(trainer.history.len(), 3);
+        assert!(params.iter().all(|v| v.is_finite()), "params stay finite");
+        assert!(best.is_finite());
     }
 
     #[test]

@@ -120,6 +120,26 @@ impl Args {
         }
     }
 
+    /// Comma-separated f64 list option (`--noises 0.05,0.1,0.4`);
+    /// `default` when the option is absent. Empty items and whitespace
+    /// around items are tolerated (`"0.1, 0.2"`).
+    pub fn f64_list_or(&self, name: &str, default: &[f64]) -> Result<Vec<f64>, CliError> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .map(str::trim)
+                .filter(|tok| !tok.is_empty())
+                .map(|tok| {
+                    tok.parse::<f64>().map_err(|_| CliError {
+                        flag: name.to_string(),
+                        message: format!("cannot parse {tok:?} as f64"),
+                    })
+                })
+                .collect(),
+        }
+    }
+
     pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, CliError> {
         self.get_parse_or(name, default)
     }
@@ -166,6 +186,17 @@ mod tests {
         assert_eq!(err.flag, "n");
         assert!(err.message.contains("abc"), "{err}");
         assert!(format!("{err}").starts_with("--n:"));
+    }
+
+    #[test]
+    fn f64_list_parses_and_rejects() {
+        let a = parse(&["--noises", "0.05, 0.1,0.4"]);
+        assert_eq!(a.f64_list_or("noises", &[]).unwrap(), vec![0.05, 0.1, 0.4]);
+        assert_eq!(a.f64_list_or("absent", &[1.0]).unwrap(), vec![1.0]);
+        let bad = parse(&["--noises", "0.1,zebra"]);
+        let err = bad.f64_list_or("noises", &[]).unwrap_err();
+        assert_eq!(err.flag, "noises");
+        assert!(err.message.contains("zebra"));
     }
 
     #[test]

@@ -3,9 +3,10 @@
 //! (early CG termination, non-PD rescue, server protocol errors).
 
 use bbmm_gp::data::loader::parse_csv;
-use bbmm_gp::kernels::{DenseKernelOp, KernelOperator, Rbf};
+use bbmm_gp::kernels::{DenseKernelOp, Rbf};
 use bbmm_gp::linalg::cholesky::Cholesky;
 use bbmm_gp::linalg::mbcg::{mbcg, MbcgOptions};
+use bbmm_gp::linalg::op::LinearOp;
 use bbmm_gp::tensor::Mat;
 use bbmm_gp::util::Rng;
 

@@ -7,7 +7,8 @@ use bbmm_gp::gp::exact::{Engine, ExactGp};
 use bbmm_gp::gp::mll::{BbmmEngine, CholeskyEngine, InferenceEngine};
 use bbmm_gp::gp::predict::{mae, predict};
 use bbmm_gp::gp::{DongEngine, SgprCholeskyEngine, SgprOp, SkiOp};
-use bbmm_gp::kernels::{DeepFeatureMap, DenseKernelOp, KernelOperator, Matern52, Rbf};
+use bbmm_gp::kernels::{DeepFeatureMap, DenseKernelOp, Matern52, Rbf};
+use bbmm_gp::linalg::op::LinearOp;
 use bbmm_gp::tensor::Mat;
 use bbmm_gp::train::{TrainConfig, Trainer};
 use bbmm_gp::util::Rng;

@@ -4,11 +4,12 @@
 //! of the hypothesis sweeps in python/tests/.
 
 use bbmm_gp::kernels::{
-    DenseKernelOp, Kernel, KernelOperator, Matern32, Matern52, Rbf, ShardedKernelOp, SumKernel,
+    DenseKernelOp, Kernel, Matern32, Matern52, Rbf, ShardedKernelOp, SumKernel,
 };
 use bbmm_gp::linalg::cholesky::Cholesky;
 use bbmm_gp::linalg::fft::{fft_inplace, Cplx};
 use bbmm_gp::linalg::mbcg::{mbcg, mbcg_sharded, MbcgOptions};
+use bbmm_gp::linalg::op::LinearOp;
 use bbmm_gp::linalg::pivoted_cholesky::pivoted_cholesky_dense;
 use bbmm_gp::linalg::toeplitz::ToeplitzOp;
 use bbmm_gp::linalg::tridiag::SymTridiagEig;

@@ -194,7 +194,7 @@ fn predict_artifacts_match_native_posterior() {
         let op = native_op(&x, kind, &params);
         let y64: Vec<f64> = y.iter().map(|&v| v as f64).collect();
         let ch = bbmm_gp::linalg::cholesky::Cholesky::new_with_jitter(
-            &bbmm_gp::kernels::KernelOperator::dense(&op),
+            &bbmm_gp::linalg::op::LinearOp::dense(&op),
         )
         .unwrap();
         let xs64 = Mat::from_vec(m, D, xs.iter().map(|&v| v as f64).collect());
@@ -257,7 +257,7 @@ fn kernel_matmul_artifact_matches_native_fused_matmul() {
     // native (Rust) fused kernel matmul — the same operation at L3
     let op = native_op(&x, "rbf", &params);
     let v64 = Mat::from_vec(N, T, v.iter().map(|&q| q as f64).collect());
-    let want = bbmm_gp::kernels::KernelOperator::matmul(&op, &v64);
+    let want = bbmm_gp::linalg::op::LinearOp::matmul(&op, &v64);
     let mut max_diff = 0.0f64;
     for i in 0..N {
         for c in 0..T {

@@ -1,0 +1,298 @@
+//! Batched-training parity: [`BatchBbmmEngine`] must reproduce the
+//! sequential per-candidate [`BbmmEngine`] **exactly** (shared probe RNG
+//! stream ⇒ element i of one batched call equals the i-th sequential call
+//! on an identically seeded scalar engine), while paying measurably fewer
+//! covariance operator passes on the shared-covariance fast path — the
+//! acceptance bar of the batched-sweep tentpole.
+
+use bbmm_gp::gp::exact::{Engine, ExactGp};
+use bbmm_gp::gp::mll::{
+    mll_and_grad_batch_with, BatchBbmmEngine, BatchInferenceEngine, BbmmEngine, InferenceEngine,
+};
+use bbmm_gp::gp::{SgprModel, SgprOp};
+use bbmm_gp::kernels::{DenseKernelOp, Kernel, KernelCovOp, Rbf};
+use bbmm_gp::linalg::op::{AddedDiagOp, BatchOp, LinearOp};
+use bbmm_gp::tensor::Mat;
+use bbmm_gp::train::{noise_grid_inits, CandidateStatus, TrainConfig};
+use bbmm_gp::util::Rng;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+fn dataset(n: usize, seed: u64) -> (Mat, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let x = Mat::from_fn(n, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+    let y: Vec<f64> = (0..n)
+        .map(|i| {
+            let r = x.row(i);
+            (3.0 * r[0]).sin() + 0.5 * r[1] + 0.05 * rng.normal()
+        })
+        .collect();
+    (x, y)
+}
+
+fn assert_mll_parity(
+    got: &bbmm_gp::gp::MllGrad,
+    want: &bbmm_gp::gp::MllGrad,
+    tol: f64,
+    label: &str,
+) {
+    assert_eq!(got.iterations, want.iterations, "{label}: iterations");
+    assert!(
+        (got.nmll - want.nmll).abs() < tol,
+        "{label}: nmll {} vs {}",
+        got.nmll,
+        want.nmll
+    );
+    assert!((got.datafit - want.datafit).abs() < tol, "{label}: datafit");
+    assert!((got.logdet - want.logdet).abs() < tol, "{label}: logdet");
+    assert_eq!(got.grad.len(), want.grad.len(), "{label}: grad length");
+    for (p, (g, w)) in got.grad.iter().zip(want.grad.iter()).enumerate() {
+        assert!((g - w).abs() < tol, "{label}: grad[{p}] {g} vs {w}");
+    }
+}
+
+#[test]
+fn batched_engine_matches_sequential_engine_on_shared_covariance() {
+    // noise sweep over one covariance: the fused fast path end to end
+    let (x, y) = dataset(45, 1);
+    let cov = KernelCovOp::new(x, Box::new(Rbf::new(0.5, 1.0)));
+    let sigma2s = vec![0.05, 0.3, 1.1, 0.6];
+    let batch = BatchOp::shared(&cov, sigma2s.clone());
+    let mut batched = BatchBbmmEngine::new(45, 8, 4, 7);
+    let got = batched.mll_and_grad_batch(&batch, &y);
+    assert_eq!(got.len(), 4);
+    // the sequential reference: ONE scalar engine with the same seed,
+    // driven candidate-by-candidate through the sequential-baseline
+    // helper (the shared-RNG parity contract)
+    let mut seq = BbmmEngine::new(45, 8, 4, 7);
+    let want = mll_and_grad_batch_with(&mut seq, &batch, &y);
+    for k in 0..sigma2s.len() {
+        assert_mll_parity(&got[k], &want[k], 1e-10, &format!("shared candidate {k}"));
+    }
+    // the engine's accounting shows the batching: one fused product per
+    // shared iteration vs the per-system sum a loop would pay
+    assert!(
+        batched.last_stats.batched_products < batched.last_stats.system_iterations,
+        "stats {:?}",
+        batched.last_stats
+    );
+}
+
+#[test]
+fn batched_engine_matches_sequential_engine_on_distinct_candidates() {
+    // general path: every candidate has its own kernel hyperparameters
+    let (x, y) = dataset(40, 2);
+    let raws = [
+        vec![(0.4f64).ln(), (0.9f64).ln(), (0.05f64).ln()],
+        vec![(0.7f64).ln(), (1.3f64).ln(), (0.25f64).ln()],
+        vec![(1.5f64).ln(), (0.6f64).ln(), (0.80f64).ln()],
+    ];
+    let mut ops: Vec<DenseKernelOp> = raws
+        .iter()
+        .map(|_| DenseKernelOp::new(x.clone(), Box::new(Rbf::new(0.5, 1.0)), 0.1))
+        .collect();
+    for (op, raw) in ops.iter_mut().zip(&raws) {
+        op.set_params(raw);
+    }
+    let els: Vec<&dyn LinearOp> = ops.iter().map(|o| o as &dyn LinearOp).collect();
+    let batch = BatchOp::new(els);
+    assert!(!batch.is_shared());
+    let mut batched = BatchBbmmEngine::new(40, 6, 5, 99);
+    let got = batched.mll_and_grad_batch(&batch, &y);
+    let mut seq = BbmmEngine::new(40, 6, 5, 99);
+    for (k, op) in ops.iter().enumerate() {
+        let want = seq.mll_and_grad(op, &y);
+        assert_mll_parity(&got[k], &want, 1e-10, &format!("general candidate {k}"));
+    }
+}
+
+#[test]
+fn batched_engine_matches_sequential_engine_on_sgpr() {
+    // SGPR operators keep their custom dmatmul through the batch
+    let (x, y) = dataset(50, 3);
+    let mut rng = Rng::new(30);
+    let u = Mat::from_fn(8, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+    let raws = [
+        vec![(0.5f64).ln(), (1.0f64).ln(), (0.10f64).ln()],
+        vec![(0.8f64).ln(), (0.7f64).ln(), (0.30f64).ln()],
+        vec![(0.3f64).ln(), (1.4f64).ln(), (0.06f64).ln()],
+    ];
+    let mut ops: Vec<SgprOp> = raws
+        .iter()
+        .map(|_| SgprOp::new(x.clone(), u.clone(), Box::new(Rbf::new(0.5, 1.0)), 0.1))
+        .collect();
+    for (op, raw) in ops.iter_mut().zip(&raws) {
+        op.set_params(raw);
+    }
+    let els: Vec<&dyn LinearOp> = ops.iter().map(|o| o as &dyn LinearOp).collect();
+    let batch = BatchOp::new(els);
+    let mut batched = BatchBbmmEngine::new(60, 6, 3, 11);
+    let got = batched.mll_and_grad_batch(&batch, &y);
+    let mut seq = BbmmEngine::new(60, 6, 3, 11);
+    for (k, op) in ops.iter().enumerate() {
+        let want = seq.mll_and_grad(op, &y);
+        assert_eq!(got[k].grad.len(), op.n_params(), "sgpr grad arity");
+        assert_mll_parity(&got[k], &want, 1e-10, &format!("sgpr candidate {k}"));
+    }
+}
+
+#[test]
+fn per_candidate_early_stopping_shows_in_iteration_counts() {
+    // a heavy-noise (well-conditioned) candidate must freeze earlier than
+    // a near-noiseless one inside the same batched call
+    let (x, y) = dataset(60, 4);
+    let cov = KernelCovOp::new(x, Box::new(Rbf::new(0.4, 1.0)));
+    let batch = BatchOp::shared(&cov, vec![25.0, 1e-4]);
+    let mut engine = BatchBbmmEngine::new(120, 4, 0, 5);
+    let got = engine.mll_and_grad_batch(&batch, &y);
+    assert!(
+        got[0].iterations < got[1].iterations,
+        "easy {} !< hard {}",
+        got[0].iterations,
+        got[1].iterations
+    );
+}
+
+/// Covariance wrapper that counts every operator pass (`matmul` +
+/// `dmatmul`) — the observable behind "fewer total covariance matmul
+/// passes".
+struct CountingCov {
+    inner: KernelCovOp,
+    calls: AtomicUsize,
+}
+
+impl LinearOp for CountingCov {
+    fn shape(&self) -> (usize, usize) {
+        self.inner.shape()
+    }
+    fn n_params(&self) -> usize {
+        LinearOp::n_params(&self.inner)
+    }
+    fn matmul(&self, m: &Mat) -> Mat {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        self.inner.matmul(m)
+    }
+    fn dmatmul(&self, param: usize, m: &Mat) -> Mat {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        self.inner.dmatmul(param, m)
+    }
+    fn diag(&self) -> Vec<f64> {
+        self.inner.diag()
+    }
+    fn row(&self, i: usize) -> Vec<f64> {
+        self.inner.row(i)
+    }
+    fn entry(&self, i: usize, j: usize) -> f64 {
+        self.inner.entry(i, j)
+    }
+}
+
+#[test]
+fn shared_sweep_pays_fewer_covariance_passes_than_a_sequential_loop() {
+    let (x, y) = dataset(40, 5);
+    let counting = CountingCov {
+        inner: KernelCovOp::new(x, Box::new(Rbf::new(0.5, 1.0))),
+        calls: AtomicUsize::new(0),
+    };
+    let b = 8;
+    let sigma2s: Vec<f64> = (0..b).map(|i| 0.05 * (1.0 + i as f64)).collect();
+
+    let batch = BatchOp::shared(&counting, sigma2s.clone());
+    let mut batched = BatchBbmmEngine::new(15, 4, 0, 3);
+    let got = batched.mll_and_grad_batch(&batch, &y);
+    let batched_calls = counting.calls.swap(0, Ordering::Relaxed);
+
+    let mut seq = BbmmEngine::new(15, 4, 0, 3);
+    let mut want = Vec::new();
+    for &s2 in &sigma2s {
+        let op = AddedDiagOp::new(&counting, s2);
+        want.push(seq.mll_and_grad(&op, &y));
+    }
+    let sequential_calls = counting.calls.load(Ordering::Relaxed);
+
+    // numerics identical…
+    for k in 0..b {
+        assert_mll_parity(&got[k], &want[k], 1e-10, &format!("counted candidate {k}"));
+    }
+    // …at a fraction of the covariance passes (solve iterations fuse into
+    // one product per shared iteration; gradient passes fuse per param)
+    assert!(
+        batched_calls * 2 <= sequential_calls,
+        "batched {batched_calls} passes vs sequential {sequential_calls}"
+    );
+}
+
+#[test]
+fn exact_fit_sweep_trains_lockstep_and_picks_a_winner() {
+    let (x, y) = dataset(60, 8);
+    let kernel = Rbf::new(0.5, 1.0);
+    let mut template = Kernel::params(&kernel);
+    template.push((0.1f64).ln());
+    let inits = noise_grid_inits(&template, &[0.02, 0.1, 0.5]);
+    let mut engine = BatchBbmmEngine::new(60, 8, 5, 13);
+    let report = ExactGp::fit_sweep(
+        &x,
+        &y,
+        &kernel,
+        &inits,
+        &mut engine,
+        TrainConfig {
+            iters: 12,
+            lr: 0.1,
+            ..Default::default()
+        },
+    );
+    let bi = report.best.expect("sweep must produce a winner");
+    let winner = &report.candidates[bi];
+    assert!(winner.best_nmll.is_finite());
+    assert!(!winner.history.is_empty());
+    assert!(
+        winner.history[0].nmll >= winner.best_nmll - 1e-9,
+        "training must not regress below the recorded best"
+    );
+    for c in &report.candidates {
+        assert_ne!(c.status, CandidateStatus::Diverged, "healthy data must not diverge");
+        assert_eq!(c.params.len(), 3);
+    }
+    // the winning hyperparameters materialise into a predictive model
+    let gp = ExactGp::from_sweep(x.clone(), y.clone(), &kernel, &report, Engine::Cholesky);
+    assert!(gp.is_some());
+}
+
+#[test]
+fn sgpr_fit_sweep_runs_end_to_end() {
+    let (x, y) = dataset(70, 9);
+    let mut rng = Rng::new(90);
+    let u = Mat::from_fn(10, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+    let kernel = Rbf::new(0.5, 1.0);
+    let mut template = Kernel::params(&kernel);
+    template.push((0.1f64).ln());
+    let inits = vec![template.clone(), {
+        let mut p = template.clone();
+        p[0] += 0.5;
+        p[2] = (0.4f64).ln();
+        p
+    }];
+    let mut engine = BatchBbmmEngine::new(50, 6, 3, 17);
+    let report = SgprModel::fit_sweep(
+        &x,
+        &y,
+        &u,
+        &kernel,
+        &inits,
+        &mut engine,
+        TrainConfig {
+            iters: 8,
+            lr: 0.1,
+            ..Default::default()
+        },
+    );
+    let bi = report.best.expect("sgpr sweep must produce a winner");
+    assert!(report.candidates[bi].best_nmll.is_finite());
+    assert_eq!(report.candidates.len(), 2);
+    for c in &report.candidates {
+        assert!(!c.history.is_empty());
+        // every recorded gradient has SGPR's full arity (custom dmatmul
+        // survived the batch — the single-active-candidate case included)
+        assert_eq!(c.params.len(), 3);
+    }
+}
