@@ -1,0 +1,66 @@
+#!/usr/bin/env python3
+"""Non-blocking perf-regression alert: diff a fresh BENCH_mmm.json against
+the committed baseline and flag any metric that moved more than the
+threshold in the bad direction (GFLOP/s or speedups falling). Exits 1 on
+an alert so the CI step (marked continue-on-error) shows a warning without
+blocking the PR — CI runners are noisy, so this is a tripwire, not a gate.
+"""
+
+import argparse
+import json
+import sys
+
+
+def index_cases(doc):
+    out = {}
+    for c in doc.get("gemm", []):
+        out[("gemm", c["n"])] = {"gflops": c["gflops"]}
+    for c in doc.get("solves", []):
+        out[("solve", c["n"], c["t"])] = {
+            "cached_speedup": c.get("cached_speedup"),
+            "materialize_speedup": c.get("materialize_speedup"),
+        }
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current")
+    ap.add_argument("baseline")
+    ap.add_argument("--threshold", type=float, default=0.20)
+    args = ap.parse_args()
+
+    with open(args.current) as f:
+        cur = index_cases(json.load(f))
+    with open(args.baseline) as f:
+        base = index_cases(json.load(f))
+
+    alerts = []
+    for key, base_metrics in base.items():
+        cur_metrics = cur.get(key)
+        if cur_metrics is None:
+            alerts.append(f"{key}: missing from current run")
+            continue
+        for name, bval in base_metrics.items():
+            cval = cur_metrics.get(name)
+            if bval is None or cval is None or bval <= 0:
+                continue
+            ratio = cval / bval
+            if ratio < 1.0 - args.threshold:
+                alerts.append(
+                    f"{key} {name}: {cval:.3f} vs baseline {bval:.3f} "
+                    f"({(1.0 - ratio) * 100:.0f}% slower)"
+                )
+
+    if alerts:
+        print("PERF ALERT (non-blocking): metrics regressed past "
+              f"±{args.threshold * 100:.0f}% of the committed baseline:")
+        for a in alerts:
+            print(f"  - {a}")
+        sys.exit(1)
+    print(f"perf within ±{args.threshold * 100:.0f}% of baseline "
+          f"({len(base)} cases checked)")
+
+
+if __name__ == "__main__":
+    main()

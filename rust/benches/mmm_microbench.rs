@@ -1,0 +1,184 @@
+//! Bench: **the iteration-amortised kernel MMM engine measured** — raw
+//! GEMM FLOP rate plus materialisation-plan vs streaming solve wall-clock.
+//!
+//! Two sections, both written to `results/BENCH_mmm.json` (the CI perf
+//! artifact, diffed non-blocking against the committed baseline):
+//!
+//! 1. **GEMM GFLOP/s** — square `Mat::matmul` at a few sizes; the
+//!    register-blocked micro-kernel's first real FLOP-rate number.
+//! 2. **Plan vs stream** — a full stationary mBCG solve (fixed iteration
+//!    budget, tol 0) at n ∈ {2k, 8k}, t ∈ {8, 32}, run under each
+//!    [`MmmPlan`]: `Stream` (rebuild every kernel row per product),
+//!    `CachedDistances` (one r² panel), `MaterializeK` (one K panel, every
+//!    product a GEMM). Solves are parity-gated to 1e-10 relative before
+//!    timing, so the speedup column never reports a wrong answer faster.
+//!
+//! `BBMM_BENCH_QUICK=1` (CI) keeps the grid but cuts the iteration budget
+//! and samples; the full run uses the acceptance configuration
+//! (50 iterations).
+
+use bbmm_gp::bench::{bench, Table};
+use bbmm_gp::kernels::{KernelCovOp, Rbf};
+use bbmm_gp::linalg::mbcg::{mbcg, MbcgOptions};
+use bbmm_gp::linalg::op::{AddedDiagOp, LinearOp, MmmPlan};
+use bbmm_gp::tensor::Mat;
+use bbmm_gp::util::par;
+use bbmm_gp::util::Rng;
+
+struct GemmCase {
+    n: usize,
+    gflops: f64,
+}
+
+struct SolveCase {
+    n: usize,
+    t: usize,
+    iters: usize,
+    stream_s: f64,
+    cached_s: f64,
+    materialize_s: f64,
+}
+
+fn main() {
+    let quick = std::env::var("BBMM_BENCH_QUICK").is_ok();
+    let samples = if quick { 2 } else { 3 };
+    let solve_iters = if quick { 5 } else { 50 };
+    println!(
+        "mmm_microbench: threads={} quick={quick} solve_iters={solve_iters}\n",
+        par::num_threads()
+    );
+
+    // ---- 1) raw GEMM FLOP rate ----
+    let mut gemm_cases = Vec::new();
+    let mut gtable = Table::new(&["n", "median_s", "gflops"]);
+    for &n in &[256usize, 512, 1024] {
+        let mut rng = Rng::new(n as u64);
+        let a = Mat::from_fn(n, n, |_, _| rng.normal());
+        let b = Mat::from_fn(n, n, |_, _| rng.normal());
+        let mut out = Mat::zeros(n, n);
+        let res = bench(&format!("gemm/n{n}"), 1, samples, || {
+            a.matmul_into(&b, &mut out);
+        });
+        let flops = 2.0 * (n as f64).powi(3);
+        let gflops = flops / res.median_s() / 1e9;
+        gtable.row(&[n.to_string(), format!("{:.4}", res.median_s()), format!("{gflops:.2}")]);
+        gemm_cases.push(GemmCase { n, gflops });
+    }
+    println!();
+    gtable.print();
+
+    // ---- 2) materialisation plans vs streaming on a full mBCG solve ----
+    let mut solve_cases = Vec::new();
+    let mut stable = Table::new(&["n", "t", "stream_s", "cached_s", "matk_s", "best_speedup"]);
+    for &n in &[2_000usize, 8_000] {
+        let mut rng = Rng::new(100 + n as u64);
+        let x = Mat::from_fn(n, 4, |_, _| rng.uniform_in(-1.0, 1.0));
+        for &t in &[8usize, 32] {
+            let rhs = Mat::from_fn(n, t, |_, _| rng.normal());
+            // scalar mbcg asserts n_solve_only <= cols (usize::MAX is the
+            // batched path's clamp-per-system convention only)
+            let opts = MbcgOptions {
+                max_iters: solve_iters,
+                tol: 0.0,
+                n_solve_only: t,
+            };
+            let plans = [MmmPlan::Stream, MmmPlan::CachedDistances, MmmPlan::MaterializeK];
+            let mut times = [0.0f64; 3];
+            let mut solves: Vec<Mat> = Vec::new();
+            for (pi, &plan) in plans.iter().enumerate() {
+                let cov = KernelCovOp::new(x.clone(), Box::new(Rbf::new(0.5, 1.0)))
+                    .with_plan(plan);
+                let op = AddedDiagOp::new(cov, 0.1);
+                op.prepare(); // panel builds are per-solve setup, not loop cost
+                let res = bench(
+                    &format!("solve/{}/n{n}/t{t}", plan.name()),
+                    1,
+                    samples,
+                    || {
+                        let _ = mbcg(|m| op.matmul(m), &rhs, |m| m.clone(), &opts);
+                    },
+                );
+                times[pi] = res.median_s();
+                solves.push(mbcg(|m| op.matmul(m), &rhs, |m| m.clone(), &opts).solves);
+            }
+            // parity gate: every plan must produce the same solve
+            let scale = solves[0].fro_norm().max(1.0);
+            for (pi, s) in solves.iter().enumerate().skip(1) {
+                let diff = s.max_abs_diff(&solves[0]) / scale;
+                assert!(
+                    diff < 1e-10,
+                    "plan {} diverged from stream at n={n} t={t}: rel diff {diff}",
+                    plans[pi].name()
+                );
+            }
+            let best = times[0] / times[1].min(times[2]);
+            stable.row(&[
+                n.to_string(),
+                t.to_string(),
+                format!("{:.4}", times[0]),
+                format!("{:.4}", times[1]),
+                format!("{:.4}", times[2]),
+                format!("{best:.2}x"),
+            ]);
+            solve_cases.push(SolveCase {
+                n,
+                t,
+                iters: solve_iters,
+                stream_s: times[0],
+                cached_s: times[1],
+                materialize_s: times[2],
+            });
+        }
+    }
+    println!();
+    stable.print();
+    stable.save("bench_mmm").ok();
+    write_json(&gemm_cases, &solve_cases).expect("write BENCH_mmm.json");
+    println!(
+        "\nwrote results/BENCH_mmm.json — expect cached-r2/materialize-k ≥ 2x over \
+         stream on the full-iteration solve (the panel amortises across every \
+         mBCG product; at 50 iterations the distance+exp work is paid once, not 50x)"
+    );
+}
+
+/// Hand-rolled JSON (no serde offline): the schema CI archives and diffs
+/// against `benches/BENCH_mmm_baseline.json`.
+fn write_json(gemm: &[GemmCase], solves: &[SolveCase]) -> std::io::Result<()> {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"bench\": \"mmm_microbench\",\n");
+    out.push_str(&format!("  \"threads\": {},\n", par::num_threads()));
+    out.push_str("  \"gemm\": [\n");
+    for (i, c) in gemm.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"n\": {}, \"gflops\": {:.3}}}{}\n",
+            c.n,
+            c.gflops,
+            if i + 1 < gemm.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"solves\": [\n");
+    for (i, c) in solves.iter().enumerate() {
+        let cached_speedup = c.stream_s / c.cached_s;
+        let matk_speedup = c.stream_s / c.materialize_s;
+        out.push_str(&format!(
+            "    {{\"n\": {}, \"t\": {}, \"iters\": {}, \"stream_s\": {:.6}, \
+             \"cached_s\": {:.6}, \"materialize_s\": {:.6}, \
+             \"cached_speedup\": {:.3}, \"materialize_speedup\": {:.3}}}{}\n",
+            c.n,
+            c.t,
+            c.iters,
+            c.stream_s,
+            c.cached_s,
+            c.materialize_s,
+            cached_speedup,
+            matk_speedup,
+            if i + 1 < solves.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n");
+    out.push_str("}\n");
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/BENCH_mmm.json", out)
+}

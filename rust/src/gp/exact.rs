@@ -164,15 +164,21 @@ impl ExactGp {
         for raw in inits {
             assert_eq!(raw.len(), nk + 1, "fit_sweep: candidate must be [kernel…, log σ²]");
         }
-        // one covariance operator per candidate, lifted into `K + σᵢ²I`
-        let covs: Vec<KernelCovOp> = inits
-            .iter()
-            .map(|raw| {
-                let mut k = kernel.boxed_clone();
-                k.set_params(&raw[..nk]);
-                KernelCovOp::new(x.clone(), k)
-            })
-            .collect();
+        // one covariance operator per candidate, lifted into `K + σᵢ²I`.
+        // All candidates share ONE copy of the training inputs (and the
+        // cached Xᵀ/norms/r² panel) through the Arc seam — sweep memory
+        // stays flat in the candidate count instead of cloning X b times.
+        let x_shared = std::sync::Arc::new(x.clone());
+        let mut covs: Vec<KernelCovOp> = Vec::with_capacity(inits.len());
+        for raw in inits {
+            let mut k = kernel.boxed_clone();
+            k.set_params(&raw[..nk]);
+            let cov = match covs.first() {
+                Some(first) => first.share_cached(k),
+                None => KernelCovOp::from_shared(std::sync::Arc::clone(&x_shared), k),
+            };
+            covs.push(cov);
+        }
         let sigma2s: Vec<f64> = inits.iter().map(|raw| raw[nk].exp()).collect();
         let mut ops = lift_added_diag(covs, &sigma2s);
         let mut trainer = SweepTrainer::new(config, inits.to_vec());

@@ -1,17 +1,23 @@
 //! Exact-GP covariance operators: the fused noise-free [`KernelCovOp`]
-//! (`K(X,X)·M` without ever materialising the n×n matrix) and the model
-//! composition [`DenseKernelOp`] = `AddedDiagOp(KernelCovOp)` = `K + σ²I`.
+//! and the model composition [`DenseKernelOp`] =
+//! `AddedDiagOp(KernelCovOp)` = `K + σ²I`.
 //!
 //! The fused matmul is the Rust analogue of the L1 Pallas kernel
-//! (`python/compile/kernels/kernel_matmul.py`): rows of K are produced one
-//! cache-tile at a time and immediately contracted against `M`, so peak
-//! memory is O(n·t + tile·n) instead of O(n²). Parallel over row tiles.
+//! (`python/compile/kernels/kernel_matmul.py`): rows of K are produced a
+//! register-tile group at a time and immediately contracted against `M`
+//! through the shared GEMM micro-kernel ([`crate::tensor::gemm`]).
+//! Whether those rows are rebuilt per product, derived from a cached r²
+//! panel, or read from a materialised K is the operator's [`MmmPlan`]
+//! (chosen from the `--mmm-budget-mb` memory budget — streaming keeps
+//! peak memory at O(n·t + tile·n), the plans trade O(n²) memory for
+//! iteration-amortised work).
 
 use super::{Kernel, KernelCov, StationaryFamily, StationaryParams};
-use crate::linalg::op::{AddedDiagOp, LinearOp};
-use crate::tensor::Mat;
+use crate::linalg::op::{mmm, AddedDiagOp, LinearOp, MmmPlan};
+use crate::tensor::{gemm, Mat};
 use crate::util::fastmath::fast_exp;
-use crate::util::par;
+use crate::util::{par, scratch};
+use std::sync::{Arc, OnceLock, RwLock};
 
 /// Which function of r² a stationary tile evaluates (shared with the
 /// sharded operator in [`super::sharded`]).
@@ -114,64 +120,244 @@ pub(crate) fn squared_dists_row(x: &Mat, xt: &Mat, xnorm: &[f64], i: usize, r2: 
     }
 }
 
+/// Rows of kernel tile built per contraction group — matches the GEMM
+/// register-tile height so each group is one micro-kernel panel.
+const GROUP: usize = gemm::MR;
+
 /// Noise-free exact covariance operator `K(X, X)` over a training set
 /// `X (n×d)` — the fused stationary fast path lives here; composing with
 /// [`AddedDiagOp`] yields the training operator `K̂ = K + σ²I`.
+///
+/// Products run under a [`MmmPlan`] chosen from the materialisation
+/// budget (see [`mmm`]): `Stream` rebuilds kernel rows per product,
+/// `CachedDistances` derives every value/derivative tile from one cached
+/// r² panel, `MaterializeK` builds K once per hyperparameter setting and
+/// turns each product into a register-blocked GEMM.
+///
+/// Training inputs and their derived caches (`Xᵀ`, row norms, the r²
+/// panel) sit behind `Arc`s so a hyperparameter sweep's candidates share
+/// one copy ([`KernelCovOp::share_cached`]) — sweep memory stays flat in
+/// the candidate count.
 pub struct KernelCovOp {
-    x: Mat,
+    x: Arc<Mat>,
     kernel: Box<dyn Kernel>,
     /// cached Xᵀ (d×n): the distance pass streams over j
-    xt: Mat,
+    xt: Arc<Mat>,
     /// cached per-row squared norms |xᵢ|²
-    xnorm: Vec<f64>,
+    xnorm: Arc<Vec<f64>>,
+    /// how products materialise (fingerprinted via `mmm_tag`)
+    plan: MmmPlan,
+    /// cached r² panel — depends only on X, so it survives every
+    /// hyperparameter update and is shared across `share_cached` clones
+    r2: Arc<OnceLock<Mat>>,
+    /// materialised K for the CURRENT kernel parameters (cleared by
+    /// `set_kernel_params`; per-clone — K depends on the parameters)
+    kmat: RwLock<Option<Arc<Mat>>>,
 }
 
 impl KernelCovOp {
-    /// Build over training inputs and a covariance function.
+    /// Build over training inputs and a covariance function; the plan is
+    /// chosen automatically from the [`mmm::budget_bytes`] budget.
     pub fn new(x: Mat, kernel: Box<dyn Kernel>) -> Self {
-        let xt = x.transpose();
-        let xnorm: Vec<f64> = (0..x.rows())
-            .map(|i| x.row(i).iter().map(|v| v * v).sum())
-            .collect();
+        Self::from_shared(Arc::new(x), kernel)
+    }
+
+    /// Build over **shared** training inputs (the `Arc<Mat>` seam:
+    /// callers holding several operators over one dataset pass clones of
+    /// one `Arc` instead of cloning the data).
+    pub fn from_shared(x: Arc<Mat>, kernel: Box<dyn Kernel>) -> Self {
+        let xt = Arc::new(x.transpose());
+        let xnorm: Arc<Vec<f64>> = Arc::new(
+            (0..x.rows())
+                .map(|i| x.row(i).iter().map(|v| v * v).sum())
+                .collect(),
+        );
+        let plan = MmmPlan::auto(x.rows(), kernel.stationary().is_some(), mmm::budget_bytes());
         KernelCovOp {
             x,
             kernel,
             xt,
             xnorm,
+            plan,
+            r2: Arc::new(OnceLock::new()),
+            kmat: RwLock::new(None),
         }
     }
 
-    /// Fused stationary mat-mul: `K·M` or `(∂K/∂log ℓ)·M`, with r² blocks
-    /// built by vectorised rank-d updates (no virtual calls, no K).
-    fn stationary_matmul(&self, sp: &StationaryParams, m: &Mat, tf: TileFn) -> Mat {
+    /// A sibling operator over the **same** inputs with a different
+    /// covariance function: shares `X`, `Xᵀ`, the row norms, and the r²
+    /// panel by `Arc` — the seam `fit_sweep` uses so b candidates pay for
+    /// one copy of the dataset and one distance panel between them.
+    ///
+    /// Plan choice under the memory budget: stationary siblings keep the
+    /// budget-neutral `CachedDistances` (the r² panel is shared, so b
+    /// siblings hold ONE panel); non-stationary siblings take `Stream`
+    /// rather than `MaterializeK`, because each sibling's K panel would be
+    /// its own n² allocation — b candidates would hold b panels and blow
+    /// through a budget sized for one (`with_plan` opts back in).
+    pub fn share_cached(&self, kernel: Box<dyn Kernel>) -> Self {
+        let plan = if kernel.stationary().is_some() {
+            MmmPlan::auto(self.x.rows(), true, mmm::budget_bytes())
+        } else {
+            MmmPlan::Stream
+        };
+        KernelCovOp {
+            x: Arc::clone(&self.x),
+            kernel,
+            xt: Arc::clone(&self.xt),
+            xnorm: Arc::clone(&self.xnorm),
+            plan,
+            r2: Arc::clone(&self.r2),
+            kmat: RwLock::new(None),
+        }
+    }
+
+    /// Builder override of the materialisation plan.
+    pub fn with_plan(mut self, plan: MmmPlan) -> Self {
+        self.set_plan(plan);
+        self
+    }
+
+    /// In-place plan override (changes the operator's `mmm_tag`, so cached
+    /// solve plans against it are invalidated).
+    pub fn set_plan(&mut self, plan: MmmPlan) {
+        self.plan = plan;
+        if plan != MmmPlan::MaterializeK {
+            *self.kmat.get_mut().unwrap() = None;
+        }
+    }
+
+    /// The active materialisation plan.
+    pub fn plan(&self) -> MmmPlan {
+        self.plan
+    }
+
+    /// The shared training-input handle (for tests and callers that want
+    /// to build further operators over the same data).
+    pub fn shared_x(&self) -> &Arc<Mat> {
+        &self.x
+    }
+
+    /// The cached r² panel, built on first use (parallel over rows).
+    fn r2_panel(&self) -> &Mat {
+        self.r2.get_or_init(|| {
+            let n = self.x.rows();
+            let x: &Mat = &self.x;
+            let xt: &Mat = &self.xt;
+            let xnorm: &[f64] = &self.xnorm;
+            let mut panel = Mat::zeros(n, n);
+            par::parallel_rows_mut(panel.data_mut(), n, n, |row_lo, chunk| {
+                for (ri, row) in chunk.chunks_mut(n).enumerate() {
+                    squared_dists_row(x, xt, xnorm, row_lo + ri, row);
+                }
+            });
+            panel
+        })
+    }
+
+    /// The materialised K for the current parameters, built on first use.
+    fn k_panel(&self) -> Arc<Mat> {
+        if let Some(k) = self.kmat.read().unwrap().as_ref() {
+            return Arc::clone(k);
+        }
+        let mut guard = self.kmat.write().unwrap();
+        if let Some(k) = guard.as_ref() {
+            return Arc::clone(k);
+        }
+        let built = Arc::new(cross_kernel(self.kernel.as_ref(), &self.x, &self.x));
+        *guard = Some(Arc::clone(&built));
+        built
+    }
+
+    /// Fused stationary tiles: `K·M` or `(∂K/∂log ℓ)·M` written into
+    /// `out`, with r² rows read from the cached panel when available and
+    /// rebuilt by vectorised rank-d updates otherwise. Kernel rows are
+    /// produced [`GROUP`] at a time and contracted through the
+    /// register-blocked GEMM micro-kernel.
+    fn stationary_tiles_into(
+        &self,
+        sp: &StationaryParams,
+        tf: TileFn,
+        m: &Mat,
+        out: &mut Mat,
+        r2_panel: Option<&Mat>,
+    ) {
         let n = self.x.rows();
         assert_eq!(m.rows(), n);
         let t = m.cols();
-        let x = &self.x;
-        let mt = m.transpose(); // t×n: contraction becomes length-n dots
-        let mut out = Mat::zeros(n, t);
-        let xnorm_ref = &self.xnorm;
-        let xt_ref = &self.xt;
-        let mt_ref = &mt;
+        assert_eq!(out.shape(), (n, t), "stationary_tiles_into: output shape");
+        let x: &Mat = &self.x;
+        let xt: &Mat = &self.xt;
+        let xnorm: &[f64] = &self.xnorm;
+        let mdata = m.data();
         par::parallel_rows_mut(out.data_mut(), n, t, |row_lo, chunk| {
-            let mut dots = vec![0.0f64; n];
-            let mut krow = vec![0.0f64; n];
-            for (ri, orow) in chunk.chunks_mut(t).enumerate() {
-                let i = row_lo + ri;
-                squared_dists_row(x, xt_ref, xnorm_ref, i, &mut dots);
-                stationary_apply(sp, tf, &dots, &mut krow);
-                // orow[c] = ⟨krow, Mᵀ[c]⟩ — t fully-vectorised n-dots
-                for (c, o) in orow.iter_mut().enumerate() {
-                    let mtrow = mt_ref.row(c);
-                    let mut acc = 0.0;
-                    for j in 0..n {
-                        acc += krow[j] * mtrow[j];
+            chunk.iter_mut().for_each(|v| *v = 0.0);
+            let rows_here = chunk.len() / t.max(1);
+            scratch::with(2 * GROUP * n, |buf| {
+                let (r2buf, kbuf) = buf.split_at_mut(GROUP * n);
+                let mut r0 = 0;
+                while r0 < rows_here {
+                    let g = GROUP.min(rows_here - r0);
+                    for rr in 0..g {
+                        let i = row_lo + r0 + rr;
+                        let krow = &mut kbuf[rr * n..(rr + 1) * n];
+                        match r2_panel {
+                            Some(panel) => stationary_apply(sp, tf, panel.row(i), krow),
+                            None => {
+                                let r2row = &mut r2buf[rr * n..(rr + 1) * n];
+                                squared_dists_row(x, xt, xnorm, i, r2row);
+                                stationary_apply(sp, tf, r2row, krow);
+                            }
+                        }
                     }
-                    *o = acc;
+                    gemm::gemm_into(
+                        &kbuf[..g * n],
+                        mdata,
+                        &mut chunk[r0 * t..(r0 + g) * t],
+                        g,
+                        n,
+                        t,
+                    );
+                    r0 += g;
                 }
-            }
+            });
         });
-        out
+    }
+
+    /// Generic-kernel tile path: build TILE rows by virtual evaluation,
+    /// contract through the GEMM micro-kernel.
+    fn generic_tiles_into(&self, m: &Mat, out: &mut Mat) {
+        let n = self.x.rows();
+        let t = m.cols();
+        let kern = self.kernel.as_ref();
+        let x: &Mat = &self.x;
+        let mdata = m.data();
+        par::parallel_rows_mut(out.data_mut(), n, t, |row_lo, chunk| {
+            chunk.iter_mut().for_each(|v| *v = 0.0);
+            let rows_here = chunk.len() / t.max(1);
+            scratch::with(TILE * n, |ktile| {
+                let mut r0 = 0;
+                while r0 < rows_here {
+                    let rt = TILE.min(rows_here - r0);
+                    for rr in 0..rt {
+                        let xi = x.row(row_lo + r0 + rr);
+                        let krow = &mut ktile[rr * n..(rr + 1) * n];
+                        for (j, kv) in krow.iter_mut().enumerate() {
+                            *kv = kern.eval(xi, x.row(j));
+                        }
+                    }
+                    gemm::gemm_into(
+                        &ktile[..rt * n],
+                        mdata,
+                        &mut chunk[r0 * t..(r0 + rt) * t],
+                        rt,
+                        n,
+                        t,
+                    );
+                    r0 += rt;
+                }
+            });
+        });
     }
 }
 
@@ -242,44 +428,45 @@ impl LinearOp for KernelCovOp {
     }
 
     fn matmul(&self, m: &Mat) -> Mat {
-        if let Some(sp) = self.kernel.stationary() {
-            return self.stationary_matmul(&sp, m, TileFn::Value);
-        }
+        let mut out = Mat::zeros(self.x.rows(), m.cols());
+        self.matmul_into(m, &mut out);
+        out
+    }
+
+    fn matmul_into(&self, m: &Mat, out: &mut Mat) {
         let n = self.x.rows();
         assert_eq!(m.rows(), n);
-        let t = m.cols();
-        let mut out = Mat::zeros(n, t);
-        let kern = self.kernel.as_ref();
-        let x = &self.x;
-        par::parallel_rows_mut(out.data_mut(), n, t, |row_lo, chunk| {
-            let rows_here = chunk.len() / t;
-            // process TILE rows at a time: build K-tile, contract against M
-            let mut ktile = vec![0.0f64; TILE * n];
-            let mut r0 = 0;
-            while r0 < rows_here {
-                let rt = TILE.min(rows_here - r0);
-                for rr in 0..rt {
-                    let xi = x.row(row_lo + r0 + rr);
-                    let krow = &mut ktile[rr * n..(rr + 1) * n];
-                    for (j, kv) in krow.iter_mut().enumerate() {
-                        *kv = kern.eval(xi, x.row(j));
-                    }
+        assert_eq!(out.shape(), (n, m.cols()), "matmul_into: output shape");
+        if self.plan == MmmPlan::MaterializeK {
+            // K built once per hyperparameter setting; the product is one
+            // register-blocked GEMM
+            return self.k_panel().matmul_into(m, out);
+        }
+        if let Some(sp) = self.kernel.stationary() {
+            let panel = (self.plan == MmmPlan::CachedDistances).then(|| self.r2_panel());
+            return self.stationary_tiles_into(&sp, TileFn::Value, m, out, panel);
+        }
+        // CachedDistances has no meaning without stationary structure:
+        // stream (the plan degrades, it never lies)
+        self.generic_tiles_into(m, out);
+    }
+
+    fn prepare(&self) {
+        match self.plan {
+            MmmPlan::Stream => {}
+            MmmPlan::CachedDistances => {
+                if self.kernel.stationary().is_some() {
+                    let _ = self.r2_panel();
                 }
-                // contract: out[r, :] = K[r, :] · M
-                for rr in 0..rt {
-                    let krow = &ktile[rr * n..(rr + 1) * n];
-                    let orow = &mut chunk[(r0 + rr) * t..(r0 + rr + 1) * t];
-                    for (j, &kv) in krow.iter().enumerate() {
-                        let mrow = m.row(j);
-                        for c in 0..t {
-                            orow[c] += kv * mrow[c];
-                        }
-                    }
-                }
-                r0 += rt;
             }
-        });
-        out
+            MmmPlan::MaterializeK => {
+                let _ = self.k_panel();
+            }
+        }
+    }
+
+    fn mmm_tag(&self) -> u64 {
+        self.plan.tag()
     }
 
     fn dmatmul(&self, param: usize, m: &Mat) -> Mat {
@@ -290,19 +477,25 @@ impl LinearOp for KernelCovOp {
         assert!(param < nk);
         if let Some(sp) = self.kernel.stationary() {
             // stationary layout: param 0 = log ℓ, param 1 = log s;
-            // ∂K/∂log s = K
+            // ∂K/∂log s = K. Derivative tiles derive from the SAME cached
+            // r² panel as value tiles (one distance pass per training step
+            // instead of 1 + n_params); MaterializeK caches only K, so its
+            // derivative products stream.
             let tf = if param == 0 {
                 TileFn::DLogLengthscale
             } else {
                 TileFn::Value
             };
-            return self.stationary_matmul(&sp, m, tf);
+            let mut out = Mat::zeros(n, t);
+            let panel = (self.plan == MmmPlan::CachedDistances).then(|| self.r2_panel());
+            self.stationary_tiles_into(&sp, tf, m, &mut out, panel);
+            return out;
         }
         let mut out = Mat::zeros(n, t);
         let kern = self.kernel.as_ref();
-        let x = &self.x;
+        let x: &Mat = &self.x;
         par::parallel_rows_mut(out.data_mut(), n, t, |row_lo, chunk| {
-            let rows_here = chunk.len() / t;
+            let rows_here = chunk.len() / t.max(1);
             let mut grad = vec![0.0f64; nk];
             for r in 0..rows_here {
                 let xi = x.row(row_lo + r);
@@ -356,6 +549,9 @@ impl KernelCov for KernelCovOp {
 
     fn set_kernel_params(&mut self, raw: &[f64]) {
         self.kernel.set_params(raw);
+        // the materialised K is for the OLD parameters; the r² panel is
+        // parameter-free and survives
+        *self.kmat.get_mut().unwrap() = None;
     }
 }
 

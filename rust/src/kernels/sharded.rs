@@ -20,10 +20,12 @@
 use super::operator::{cross_kernel, squared_dists_row, stationary_apply, TileFn};
 use super::{Kernel, KernelCov};
 use crate::linalg::mbcg::ShardedMmm;
-use crate::linalg::op::{AddedDiagOp, LinearOp};
+use crate::linalg::op::{mmm, AddedDiagOp, LinearOp, MmmPlan};
 use crate::runtime::shard::{partition_rows, run_rows_mut, ShardQueue};
 use crate::tensor::{Mat, Scalar};
+use crate::util::par;
 use std::ops::Range;
+use std::sync::{Arc, OnceLock, RwLock};
 
 /// Rows per scheduled tile inside a shard (matches the dense operator's
 /// cache tile: 64 rows × n cols of f64 stays in L2 for n up to ~8k).
@@ -38,6 +40,11 @@ enum BlockFn {
 }
 
 /// Noise-free exact covariance over `X (n×d)` partitioned into row shards.
+///
+/// Consumes the same [`MmmPlan`] as the dense operator: under
+/// `CachedDistances` every shard's value/derivative rows derive from one
+/// cached r² panel; under `MaterializeK` value rows are read straight from
+/// the materialised K; `Stream` rebuilds rows per product (the seed path).
 pub struct ShardedCovOp {
     x: Mat,
     kernel: Box<dyn Kernel>,
@@ -49,10 +56,17 @@ pub struct ShardedCovOp {
     xt: Mat,
     /// cached per-row squared norms |xᵢ|²
     xnorm: Vec<f64>,
+    /// how products materialise (fingerprinted via `mmm_tag`)
+    plan: MmmPlan,
+    /// cached r² panel (parameter-free)
+    r2: Arc<OnceLock<Mat>>,
+    /// materialised K for the current parameters (cleared on update)
+    kmat: RwLock<Option<Arc<Mat>>>,
 }
 
 impl ShardedCovOp {
-    /// Build over `n_shards` row shards (clamped to `1..=n`).
+    /// Build over `n_shards` row shards (clamped to `1..=n`); the plan is
+    /// chosen automatically from the [`mmm::budget_bytes`] budget.
     pub fn new(x: Mat, kernel: Box<dyn Kernel>, n_shards: usize) -> Self {
         let n = x.rows();
         let shards = partition_rows(n, n_shards);
@@ -60,6 +74,7 @@ impl ShardedCovOp {
         let xnorm: Vec<f64> = (0..n)
             .map(|i| x.row(i).iter().map(|v| v * v).sum())
             .collect();
+        let plan = MmmPlan::auto(n, kernel.stationary().is_some(), mmm::budget_bytes());
         ShardedCovOp {
             x,
             kernel,
@@ -67,7 +82,64 @@ impl ShardedCovOp {
             tile: DEFAULT_TILE,
             xt,
             xnorm,
+            plan,
+            r2: Arc::new(OnceLock::new()),
+            kmat: RwLock::new(None),
         }
+    }
+
+    // Plan/panel plumbing below: KEEP IN SYNC with `KernelCovOp`
+    // (operator.rs) — same invalidation rules (kmat cleared on parameter
+    // or plan change, r² parameter-free); extracting a shared struct is a
+    // ROADMAP item.
+
+    /// Builder override of the materialisation plan.
+    pub fn with_plan(mut self, plan: MmmPlan) -> Self {
+        self.set_plan(plan);
+        self
+    }
+
+    /// In-place plan override (changes `mmm_tag`, invalidating cached
+    /// solve plans against this operator).
+    pub fn set_plan(&mut self, plan: MmmPlan) {
+        self.plan = plan;
+        if plan != MmmPlan::MaterializeK {
+            *self.kmat.get_mut().unwrap() = None;
+        }
+    }
+
+    /// The active materialisation plan.
+    pub fn plan(&self) -> MmmPlan {
+        self.plan
+    }
+
+    /// The cached r² panel, built on first use (parallel over rows).
+    fn r2_panel(&self) -> &Mat {
+        self.r2.get_or_init(|| {
+            let n = self.x.rows();
+            let (x, xt, xnorm) = (&self.x, &self.xt, &self.xnorm[..]);
+            let mut panel = Mat::zeros(n, n);
+            par::parallel_rows_mut(panel.data_mut(), n, n, |row_lo, chunk| {
+                for (ri, row) in chunk.chunks_mut(n).enumerate() {
+                    squared_dists_row(x, xt, xnorm, row_lo + ri, row);
+                }
+            });
+            panel
+        })
+    }
+
+    /// The materialised K for the current parameters, built on first use.
+    fn k_panel(&self) -> Arc<Mat> {
+        if let Some(k) = self.kmat.read().unwrap().as_ref() {
+            return Arc::clone(k);
+        }
+        let mut guard = self.kmat.write().unwrap();
+        if let Some(k) = guard.as_ref() {
+            return Arc::clone(k);
+        }
+        let built = Arc::new(cross_kernel(self.kernel.as_ref(), &self.x, &self.x));
+        *guard = Some(Arc::clone(&built));
+        built
     }
 
     /// Override the scheduler tile size (rows per work item).
@@ -106,50 +178,76 @@ impl ShardedCovOp {
 
     /// Compute rows `rows` of the requested kernel product into `out`
     /// (`rows.len() × m.cols()` row-major, zero-initialised by the caller).
+    /// Row generation follows the operator's [`MmmPlan`]: materialised-K
+    /// rows are read directly, cached-r² rows skip the distance pass, and
+    /// the stream plan rebuilds everything (the seed behaviour).
     fn fill_rows<T: Scalar>(&self, rows: Range<usize>, m: &Mat<T>, bf: &BlockFn, out: &mut [T]) {
         let n = self.x.rows();
         let t = m.cols();
         let sp = self.kernel.stationary();
         let nk = self.kernel.n_params();
+        let kpanel: Option<Arc<Mat>> = (self.plan == MmmPlan::MaterializeK
+            && matches!(bf, BlockFn::Value { .. }))
+        .then(|| self.k_panel());
+        let r2panel: Option<&Mat> =
+            (self.plan == MmmPlan::CachedDistances && sp.is_some()).then(|| self.r2_panel());
         let mut krow = vec![0.0f64; n];
         let mut r2 = vec![0.0f64; n];
         let mut grad = vec![0.0f64; nk];
         for (ri, i) in rows.enumerate() {
             // 1) kernel row i, always evaluated in f64
-            match (bf, &sp) {
-                (BlockFn::Value { .. }, Some(sp)) => {
-                    squared_dists_row(&self.x, &self.xt, &self.xnorm, i, &mut r2);
-                    stationary_apply(sp, TileFn::Value, &r2, &mut krow);
-                }
-                (BlockFn::DParam(p), Some(sp)) => {
-                    // stationary layout: param 0 = log ℓ, param 1 = log s;
-                    // ∂K/∂log s = K (noiseless)
-                    debug_assert!(*p < nk);
-                    squared_dists_row(&self.x, &self.xt, &self.xnorm, i, &mut r2);
-                    let tf = if *p == 0 {
-                        TileFn::DLogLengthscale
-                    } else {
-                        TileFn::Value
-                    };
-                    stationary_apply(sp, tf, &r2, &mut krow);
-                }
-                (BlockFn::Value { .. }, None) => {
-                    let xi = self.x.row(i);
-                    for (j, kv) in krow.iter_mut().enumerate() {
-                        *kv = self.kernel.eval(xi, self.x.row(j));
+            let krow_ref: &[f64] = if let Some(kp) = &kpanel {
+                kp.row(i)
+            } else {
+                match (bf, &sp) {
+                    (BlockFn::Value { .. }, Some(sp)) => {
+                        let r2row: &[f64] = match r2panel {
+                            Some(panel) => panel.row(i),
+                            None => {
+                                squared_dists_row(&self.x, &self.xt, &self.xnorm, i, &mut r2);
+                                &r2
+                            }
+                        };
+                        stationary_apply(sp, TileFn::Value, r2row, &mut krow);
+                    }
+                    (BlockFn::DParam(p), Some(sp)) => {
+                        // stationary layout: param 0 = log ℓ, param 1 = log s;
+                        // ∂K/∂log s = K (noiseless); derivative rows derive
+                        // from the same cached r² panel as value rows
+                        debug_assert!(*p < nk);
+                        let tf = if *p == 0 {
+                            TileFn::DLogLengthscale
+                        } else {
+                            TileFn::Value
+                        };
+                        let r2row: &[f64] = match r2panel {
+                            Some(panel) => panel.row(i),
+                            None => {
+                                squared_dists_row(&self.x, &self.xt, &self.xnorm, i, &mut r2);
+                                &r2
+                            }
+                        };
+                        stationary_apply(sp, tf, r2row, &mut krow);
+                    }
+                    (BlockFn::Value { .. }, None) => {
+                        let xi = self.x.row(i);
+                        for (j, kv) in krow.iter_mut().enumerate() {
+                            *kv = self.kernel.eval(xi, self.x.row(j));
+                        }
+                    }
+                    (BlockFn::DParam(p), None) => {
+                        let xi = self.x.row(i);
+                        for (j, kv) in krow.iter_mut().enumerate() {
+                            self.kernel.eval_grad(xi, self.x.row(j), &mut grad);
+                            *kv = grad[*p];
+                        }
                     }
                 }
-                (BlockFn::DParam(p), None) => {
-                    let xi = self.x.row(i);
-                    for (j, kv) in krow.iter_mut().enumerate() {
-                        self.kernel.eval_grad(xi, self.x.row(j), &mut grad);
-                        *kv = grad[*p];
-                    }
-                }
-            }
+                &krow
+            };
             // 2) contract against M (accumulating in T), streaming M's rows
             let orow = &mut out[ri * t..(ri + 1) * t];
-            for (j, &kv) in krow.iter().enumerate() {
+            for (j, &kv) in krow_ref.iter().enumerate() {
                 if kv == 0.0 {
                     continue;
                 }
@@ -181,6 +279,24 @@ impl LinearOp for ShardedCovOp {
 
     fn matmul(&self, m: &Mat) -> Mat {
         self.block_matmul(m, BlockFn::Value { noise: None })
+    }
+
+    fn prepare(&self) {
+        match self.plan {
+            MmmPlan::Stream => {}
+            MmmPlan::CachedDistances => {
+                if self.kernel.stationary().is_some() {
+                    let _ = self.r2_panel();
+                }
+            }
+            MmmPlan::MaterializeK => {
+                let _ = self.k_panel();
+            }
+        }
+    }
+
+    fn mmm_tag(&self) -> u64 {
+        self.plan.tag()
     }
 
     fn dmatmul(&self, param: usize, m: &Mat) -> Mat {
@@ -221,6 +337,8 @@ impl KernelCov for ShardedCovOp {
 
     fn set_kernel_params(&mut self, raw: &[f64]) {
         self.kernel.set_params(raw);
+        // the materialised K is for the OLD parameters; r² is parameter-free
+        *self.kmat.get_mut().unwrap() = None;
     }
 
     fn shard_count(&self) -> usize {

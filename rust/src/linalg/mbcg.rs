@@ -107,8 +107,10 @@ struct CgSystem<T: Scalar> {
 
 impl<T: Scalar> CgSystem<T> {
     /// Initialise from the RHS block and its preconditioned copy
-    /// `z0 = P̂⁻¹·b` (residual of the zero initial guess).
-    fn new(b: &Mat<T>, z0: Mat<T>) -> Self {
+    /// `z0 = P̂⁻¹·b` (residual of the zero initial guess). `max_iters`
+    /// pre-sizes the α/β streams and the residual history so the
+    /// iteration loop never grows a vector.
+    fn new(b: &Mat<T>, z0: Mat<T>, max_iters: usize) -> Self {
         let s = b.cols();
         let bnorms: Vec<f64> = (0..s).map(|c| col_norm(b, c).max(1e-300)).collect();
         let r = b.clone();
@@ -127,11 +129,14 @@ impl<T: Scalar> CgSystem<T> {
             d,
             bnorms,
             rz_old,
-            alphas: vec![Vec::new(); s],
-            betas: vec![Vec::new(); s],
+            // NOT vec![Vec::with_capacity(..); s] — Vec::clone does not
+            // preserve capacity, which would put growth reallocations
+            // back inside the iteration loop
+            alphas: (0..s).map(|_| Vec::with_capacity(max_iters)).collect(),
+            betas: (0..s).map(|_| Vec::with_capacity(max_iters)).collect(),
             converged,
             final_res: vec![0.0f64; s],
-            history: Vec::new(),
+            history: Vec::with_capacity(max_iters),
             iterations: 0,
         }
     }
@@ -234,7 +239,7 @@ pub fn mbcg<T: Scalar>(
     opts: &MbcgOptions,
 ) -> MbcgResult<T> {
     assert!(opts.n_solve_only <= b.cols());
-    let mut sys = CgSystem::new(b, precond(b));
+    let mut sys = CgSystem::new(b, precond(b), opts.max_iters);
     for _ in 0..opts.max_iters {
         if sys.done() {
             break;
@@ -267,6 +272,40 @@ pub struct MbcgBatchStats {
     /// sum of per-system iteration counts — the number of operator
     /// products a sequential per-system loop would have paid
     pub system_iterations: usize,
+    /// heap allocations observed on the solver thread inside the
+    /// iteration loop (debug builds only — release builds always report
+    /// 0). With operators implementing `matmul_into`, identity/warm
+    /// preconditioners, and a warm [`MbcgWorkspace`], this is 0: the loop
+    /// runs entirely in the per-solve arena.
+    pub loop_allocs: u64,
+}
+
+/// Per-solve scratch arena for the batched iteration loop: the packing
+/// block and fused-product buffer for the shared-covariance path, the
+/// per-system product and preconditioned-residual buffers, and the
+/// active-set index scratch. Everything is sized during setup and reused
+/// across iterations (and, for callers holding the workspace, across
+/// solves), so the loop itself performs **no heap allocation** — counted
+/// in debug builds via [`MbcgBatchStats::loop_allocs`].
+#[derive(Default)]
+pub struct MbcgWorkspace {
+    /// fused-path packing buffer (moved in and out of a shaped `Mat`)
+    block: Vec<f64>,
+    /// fused-path product output buffer
+    kv: Vec<f64>,
+    /// per-system operator-product outputs `Aᵢ·Dᵢ`
+    vs: Vec<Mat>,
+    /// per-system preconditioned residuals `P̂ᵢ⁻¹·Rᵢ`
+    zs: Vec<Mat>,
+    /// still-active system indices (cleared and refilled per iteration)
+    active: Vec<usize>,
+}
+
+impl MbcgWorkspace {
+    /// An empty workspace; buffers are sized on first use.
+    pub fn new() -> Self {
+        MbcgWorkspace::default()
+    }
 }
 
 /// **Batched mBCG across operators**: run `b` independent systems
@@ -304,42 +343,139 @@ pub fn mbcg_batch_stats(
     preconds: &[&dyn crate::linalg::preconditioner::Preconditioner],
     opts: &MbcgOptions,
 ) -> (Vec<MbcgResult>, MbcgBatchStats) {
+    let mut ws = MbcgWorkspace::new();
+    mbcg_batch_stats_ws(batch, bs, preconds, opts, &mut ws)
+}
+
+/// [`mbcg_batch_stats`] against a caller-held [`MbcgWorkspace`]: setup
+/// (system state, buffer sizing, plan materialisation via
+/// [`crate::linalg::op::BatchOp::prepare`]) happens before the loop, and
+/// the loop itself is allocation-free — products are written into the
+/// arena through `matmul_into`/`solve_mat_into`, the fused shared-
+/// covariance block round-trips through the arena's packing buffers, and
+/// the active set reuses one index vector. Callers solving repeatedly
+/// (training steps, serving ticks) hold the workspace across calls so
+/// even setup stays warm.
+pub fn mbcg_batch_stats_ws(
+    batch: &crate::linalg::op::BatchOp<'_>,
+    bs: &[&Mat],
+    preconds: &[&dyn crate::linalg::preconditioner::Preconditioner],
+    opts: &MbcgOptions,
+    ws: &mut MbcgWorkspace,
+) -> (Vec<MbcgResult>, MbcgBatchStats) {
     let b = batch.len();
     assert_eq!(bs.len(), b, "mbcg_batch: RHS count mismatch");
     assert_eq!(preconds.len(), b, "mbcg_batch: preconditioner count mismatch");
     let n = batch.n();
+    // ---- setup: allocation is expected here, never inside the loop ----
+    batch.prepare();
     let mut systems: Vec<CgSystem<f64>> = bs
         .iter()
         .zip(preconds)
         .map(|(&rhs, pre)| {
             assert_eq!(rhs.rows(), n, "mbcg_batch: RHS row mismatch");
-            CgSystem::new(rhs, pre.solve_mat(rhs))
+            CgSystem::new(rhs, pre.solve_mat(rhs), opts.max_iters)
         })
         .collect();
-    let mut stats = MbcgBatchStats::default();
-    loop {
-        let active: Vec<usize> = systems
+    let total_cols: usize = bs.iter().map(|m| m.cols()).sum();
+    if ws.block.len() != n * total_cols {
+        ws.block.clear();
+        ws.block.resize(n * total_cols, 0.0);
+    }
+    if ws.kv.len() != n * total_cols {
+        ws.kv.clear();
+        ws.kv.resize(n * total_cols, 0.0);
+    }
+    let shapes_match = ws.vs.len() == b
+        && ws
+            .vs
             .iter()
-            .enumerate()
-            .filter(|(_, sys)| !sys.done() && sys.iterations < opts.max_iters)
-            .map(|(i, _)| i)
-            .collect();
-        if active.is_empty() {
+            .zip(bs)
+            .all(|(v, rhs)| v.shape() == (n, rhs.cols()));
+    if !shapes_match {
+        ws.vs = bs.iter().map(|rhs| Mat::zeros(n, rhs.cols())).collect();
+        ws.zs = bs.iter().map(|rhs| Mat::zeros(n, rhs.cols())).collect();
+    }
+    ws.active.clear();
+    ws.active.reserve(b);
+    let mut stats = MbcgBatchStats::default();
+    // ---- the iteration loop: the zero-allocation zone ----
+    let alloc0 = crate::util::alloc::thread_allocations();
+    loop {
+        ws.active.clear();
+        for (i, sys) in systems.iter().enumerate() {
+            if !sys.done() && sys.iterations < opts.max_iters {
+                ws.active.push(i);
+            }
+        }
+        if ws.active.is_empty() {
             break;
         }
-        let ds: Vec<&Mat> = active.iter().map(|&i| &systems[i].d).collect();
-        let vs = batch.matmul_subset(&active, &ds);
-        drop(ds);
-        stats.batched_products += if batch.is_shared() { 1 } else { active.len() };
-        for (k, &i) in active.iter().enumerate() {
+        match batch.shared_parts() {
+            Some((cov, sigma2s)) => {
+                // ONE fused covariance product for the whole active set:
+                // pack [D₁ … D_k] row-major (the active set only shrinks,
+                // so truncation never reallocates), multiply, unpack with
+                // the per-system σ²·Dᵢ term — column-for-column identical
+                // to the elementwise products.
+                //
+                // KEEP IN SYNC with `BatchOp::matmul_subset` (batch.rs):
+                // this is its allocation-free twin — same packing layout,
+                // same σ² handling — written against the workspace arena
+                // so the loop stays heap-free.
+                let total: usize = ws.active.iter().map(|&i| systems[i].d.cols()).sum();
+                let mut block_data = std::mem::take(&mut ws.block);
+                block_data.truncate(n * total);
+                for r in 0..n {
+                    let mut c0 = r * total;
+                    for &i in ws.active.iter() {
+                        let drow = systems[i].d.row(r);
+                        block_data[c0..c0 + drow.len()].copy_from_slice(drow);
+                        c0 += drow.len();
+                    }
+                }
+                let block = Mat::from_vec(n, total, block_data);
+                let mut kv_data = std::mem::take(&mut ws.kv);
+                kv_data.truncate(n * total);
+                let mut kv = Mat::from_vec(n, total, kv_data);
+                cov.matmul_into(&block, &mut kv);
+                for r in 0..n {
+                    let kvrow = kv.row(r);
+                    let mut c0 = 0;
+                    for &i in ws.active.iter() {
+                        let s2 = sigma2s[i];
+                        let sys = &systems[i];
+                        let t = sys.d.cols();
+                        let drow = sys.d.row(r);
+                        let orow = &mut ws.vs[i].row_mut(r)[..t];
+                        for c in 0..t {
+                            orow[c] = kvrow[c0 + c] + s2 * drow[c];
+                        }
+                        c0 += t;
+                    }
+                }
+                ws.block = block.into_vec();
+                ws.kv = kv.into_vec();
+                stats.batched_products += 1;
+            }
+            None => {
+                for &i in ws.active.iter() {
+                    batch.with_element(i, |op| op.matmul_into(&systems[i].d, &mut ws.vs[i]));
+                }
+                stats.batched_products += ws.active.len();
+            }
+        }
+        for k in 0..ws.active.len() {
+            let i = ws.active[k];
             let sys = &mut systems[i];
-            sys.absorb_product(&vs[k], opts.tol);
+            sys.absorb_product(&ws.vs[i], opts.tol);
             if !sys.done() {
-                let z = preconds[i].solve_mat(&sys.r);
-                sys.refresh_directions(&z);
+                preconds[i].solve_mat_into(&sys.r, &mut ws.zs[i]);
+                sys.refresh_directions(&ws.zs[i]);
             }
         }
     }
+    stats.loop_allocs = crate::util::alloc::thread_allocations().saturating_sub(alloc0);
     stats.system_iterations = systems.iter().map(|sys| sys.iterations).sum();
     let results = systems
         .into_iter()
@@ -460,11 +596,26 @@ pub fn tridiag_from_coeffs(alphas: &[f64], betas: &[f64]) -> TriDiag {
     TriDiag { diag, offdiag }
 }
 
+/// Strided column dot with four independent accumulators — the α/β
+/// reductions of every CG step run through here, and a single accumulator
+/// would serialise them on the add latency.
 #[inline]
 fn col_dot<T: Scalar>(a: &Mat<T>, b: &Mat<T>, c: usize) -> f64 {
-    let mut s = 0.0;
-    for i in 0..a.rows() {
+    let n = a.rows();
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    let end = n - n % 4;
+    let mut i = 0;
+    while i < end {
+        s0 += a.get(i, c).to_f64() * b.get(i, c).to_f64();
+        s1 += a.get(i + 1, c).to_f64() * b.get(i + 1, c).to_f64();
+        s2 += a.get(i + 2, c).to_f64() * b.get(i + 2, c).to_f64();
+        s3 += a.get(i + 3, c).to_f64() * b.get(i + 3, c).to_f64();
+        i += 4;
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    while i < n {
         s += a.get(i, c).to_f64() * b.get(i, c).to_f64();
+        i += 1;
     }
     s
 }

@@ -126,6 +126,21 @@ impl<'a> BatchOp<'a> {
         matches!(self.repr, Repr::Shared { .. })
     }
 
+    /// Build every element's plan-dependent materialisations now (the
+    /// shared fast path prepares its one covariance once) — called by
+    /// [`crate::linalg::mbcg::mbcg_batch`] before the iteration loop so
+    /// the loop itself starts warm.
+    pub fn prepare(&self) {
+        match &self.repr {
+            Repr::General(els) => {
+                for e in els {
+                    e.prepare();
+                }
+            }
+            Repr::Shared { cov, .. } => cov.prepare(),
+        }
+    }
+
     /// The shared covariance and per-element σ² when the fast path is
     /// engaged (the batched preconditioner builder pivots on this).
     pub fn shared_parts(&self) -> Option<(&dyn LinearOp, &[f64])> {
@@ -169,6 +184,10 @@ impl<'a> BatchOp<'a> {
     /// splitting the result back — column-for-column identical to the
     /// elementwise products (each column's accumulation order is
     /// unchanged).
+    ///
+    /// KEEP IN SYNC with the allocation-free twin of this pack/multiply/
+    /// unpack inside `mbcg_batch_stats_ws` (`linalg/mbcg.rs`) — the two
+    /// must stay bit-identical.
     pub fn matmul_subset(&self, idx: &[usize], ms: &[&Mat]) -> Vec<Mat> {
         assert_eq!(idx.len(), ms.len());
         match &self.repr {

@@ -60,6 +60,18 @@ impl<A: LinearOp> AddedDiagOp<A> {
     pub fn set_raw_value(&mut self, raw: f64) {
         self.raw = raw;
     }
+
+    /// `out += σ²·M` — the composition's own contribution to a product.
+    fn add_noise_term(&self, m: &Mat, out: &mut Mat) {
+        let sigma2 = self.value();
+        for r in 0..out.rows() {
+            let mrow = m.row(r);
+            let orow = out.row_mut(r);
+            for c in 0..orow.len() {
+                orow[c] += sigma2 * mrow[c];
+            }
+        }
+    }
 }
 
 impl<A: LinearOp> LinearOp for AddedDiagOp<A> {
@@ -73,15 +85,21 @@ impl<A: LinearOp> LinearOp for AddedDiagOp<A> {
 
     fn matmul(&self, m: &Mat) -> Mat {
         let mut out = self.inner.matmul(m);
-        let sigma2 = self.value();
-        for r in 0..out.rows() {
-            let mrow = m.row(r);
-            let orow = out.row_mut(r);
-            for c in 0..orow.len() {
-                orow[c] += sigma2 * mrow[c];
-            }
-        }
+        self.add_noise_term(m, &mut out);
         out
+    }
+
+    fn matmul_into(&self, m: &Mat, out: &mut Mat) {
+        self.inner.matmul_into(m, out);
+        self.add_noise_term(m, out);
+    }
+
+    fn prepare(&self) {
+        self.inner.prepare()
+    }
+
+    fn mmm_tag(&self) -> u64 {
+        self.inner.mmm_tag()
     }
 
     fn dmatmul(&self, param: usize, m: &Mat) -> Mat {

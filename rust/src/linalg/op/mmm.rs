@@ -1,0 +1,151 @@
+//! **Solve-scoped kernel materialisation plans** — deciding, per operator
+//! and memory budget, *how* the per-iteration `K·M` product is produced.
+//!
+//! BBMM streams kernel tiles so no n×n matrix is ever formed — the right
+//! call at the memory ceiling, but wasteful below it: a 50-iteration mBCG
+//! solve re-evaluates every squared distance and `exp()` fifty times.
+//! Following Wang et al. 2019 (*Exact GPs on a Million Data Points*), the
+//! choice to materialise or stream is made deliberately:
+//!
+//! - [`MmmPlan::MaterializeK`] — build `K` once, reuse it across **all**
+//!   mBCG iterations (and across a batched sweep's per-step products);
+//!   every later product is one register-blocked GEMM. Invalidated by a
+//!   hyperparameter update.
+//! - [`MmmPlan::CachedDistances`] — stationary kernels cache the r² panel
+//!   once; both the value tile and the ∂/∂log ℓ tile (`matmul` *and*
+//!   `dmatmul`) derive from the same cached r², so a training step pays
+//!   **one** distance pass instead of `1 + n_params` — and, because r²
+//!   depends only on `X`, the panel survives every hyperparameter update.
+//! - [`MmmPlan::Stream`] — the tile path (the seed behaviour), for `n`
+//!   over budget.
+//!
+//! The budget comes from `--mmm-budget-mb` / `BBMM_MMM_BUDGET_MB`
+//! (default [`DEFAULT_BUDGET_MB`]); [`MmmPlan::auto`] picks the plan.
+//! `KernelCovOp`, `ShardedCovOp`, and (through the shared covariance)
+//! `BatchOp::shared` consume the plan; `SolvePlanCache` fingerprints
+//! include it via [`super::LinearOp::mmm_tag`], so switching plans rebuilds
+//! cached solve plans instead of silently mixing them. A device-aware
+//! variant ("materialise on backend X") is the ROADMAP's multi-backend
+//! seam.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// How a kernel covariance operator produces its matrix-matrix products.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MmmPlan {
+    /// Stream kernel tiles per product (O(n·t) peak memory, the seed path).
+    Stream,
+    /// Cache the n×n squared-distance panel once (stationary kernels);
+    /// value and derivative tiles both derive from it.
+    CachedDistances,
+    /// Materialise K once per hyperparameter setting; products are GEMMs.
+    MaterializeK,
+}
+
+impl MmmPlan {
+    /// Stable discriminant mixed into operator fingerprints.
+    pub fn tag(self) -> u64 {
+        match self {
+            MmmPlan::Stream => 1,
+            MmmPlan::CachedDistances => 2,
+            MmmPlan::MaterializeK => 3,
+        }
+    }
+
+    /// Short name for logs and bench tables.
+    pub fn name(self) -> &'static str {
+        match self {
+            MmmPlan::Stream => "stream",
+            MmmPlan::CachedDistances => "cached-r2",
+            MmmPlan::MaterializeK => "materialize-k",
+        }
+    }
+
+    /// Pick a plan for an n×n covariance under `budget_bytes` of panel
+    /// memory: over budget streams; under budget, stationary kernels cache
+    /// r² (derivatives ride the same panel and hyperparameter updates keep
+    /// it), others materialise K (per-entry virtual evaluation is the cost
+    /// worth amortising there).
+    ///
+    /// The budget bounds **each operator's** panel: b independent
+    /// covariances (e.g. per-tenant datasets) can hold b panels, so size
+    /// the budget for the deployment's operator count. Sweep candidates
+    /// built through `KernelCovOp::share_cached` share one r² panel (and
+    /// non-stationary siblings decline `MaterializeK`), so a sweep stays
+    /// within one panel regardless of b.
+    pub fn auto(n: usize, stationary: bool, budget_bytes: usize) -> MmmPlan {
+        let panel = n
+            .saturating_mul(n)
+            .saturating_mul(std::mem::size_of::<f64>());
+        if n == 0 || panel > budget_bytes {
+            MmmPlan::Stream
+        } else if stationary {
+            MmmPlan::CachedDistances
+        } else {
+            MmmPlan::MaterializeK
+        }
+    }
+}
+
+/// Default materialisation budget when neither the flag nor the env var is
+/// set: 1 GiB admits the panel up to n ≈ 11.5k.
+pub const DEFAULT_BUDGET_MB: usize = 1024;
+
+static BUDGET_MB: AtomicUsize = AtomicUsize::new(0);
+
+/// The materialisation budget in bytes (cached after first read;
+/// `BBMM_MMM_BUDGET_MB` overrides the default, [`set_budget_mb`] overrides
+/// both).
+pub fn budget_bytes() -> usize {
+    budget_mb().saturating_mul(1024 * 1024)
+}
+
+fn budget_mb() -> usize {
+    let cached = BUDGET_MB.load(Ordering::Relaxed);
+    if cached != 0 {
+        return cached;
+    }
+    let mb = std::env::var("BBMM_MMM_BUDGET_MB")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&m| m > 0)
+        .unwrap_or(DEFAULT_BUDGET_MB);
+    BUDGET_MB.store(mb, Ordering::Relaxed);
+    mb
+}
+
+/// Override the budget (the `--mmm-budget-mb` CLI flag). Affects operators
+/// constructed after the call.
+pub fn set_budget_mb(mb: usize) {
+    if mb > 0 {
+        BUDGET_MB.store(mb, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auto_respects_the_budget() {
+        let mb = 8 * 1024 * 1024; // 8 MB → n up to 1024
+        assert_eq!(MmmPlan::auto(1024, true, mb), MmmPlan::CachedDistances);
+        assert_eq!(MmmPlan::auto(1024, false, mb), MmmPlan::MaterializeK);
+        assert_eq!(MmmPlan::auto(1025, true, mb), MmmPlan::Stream);
+        assert_eq!(MmmPlan::auto(0, true, mb), MmmPlan::Stream);
+        // saturation guard: enormous n must not overflow the panel size
+        assert_eq!(MmmPlan::auto(usize::MAX, true, mb), MmmPlan::Stream);
+    }
+
+    #[test]
+    fn tags_are_distinct() {
+        assert_ne!(MmmPlan::Stream.tag(), MmmPlan::CachedDistances.tag());
+        assert_ne!(MmmPlan::CachedDistances.tag(), MmmPlan::MaterializeK.tag());
+        assert_eq!(MmmPlan::Stream.name(), "stream");
+    }
+
+    #[test]
+    fn budget_has_a_positive_default() {
+        assert!(budget_bytes() > 0);
+    }
+}

@@ -30,6 +30,7 @@ pub mod cache;
 pub mod compose;
 pub mod interp;
 pub mod lowrank;
+pub mod mmm;
 pub mod sharded;
 pub mod solve;
 pub mod structured;
@@ -39,6 +40,7 @@ pub use cache::SolvePlanCache;
 pub use compose::{AddedDiagOp, DiagOp, ScaledOp, SumOp};
 pub use interp::{InterpOp, SparseInterp};
 pub use lowrank::LowRankOp;
+pub use mmm::MmmPlan;
 pub use sharded::ShardedOp;
 pub use solve::{
     build_preconditioner, build_preconditioner_batch, plan, plan_batch, solve, solve_batch,
@@ -122,6 +124,30 @@ pub trait LinearOp: Sync {
     /// `A · M` — the hot path (one call per mBCG iteration).
     fn matmul(&self, m: &Mat) -> Mat;
 
+    /// `A · M` written into a caller-owned, same-shaped output — the
+    /// zero-allocation seam the solver workspaces drive. The default
+    /// delegates to [`LinearOp::matmul`] (which allocates) and copies;
+    /// hot-path operators override it to write `out` directly.
+    fn matmul_into(&self, m: &Mat, out: &mut Mat) {
+        let r = self.matmul(m);
+        assert_eq!(out.shape(), r.shape(), "matmul_into: output shape mismatch");
+        out.copy_from(&r);
+    }
+
+    /// Build any plan-dependent materialisations now (kernel panel, r²
+    /// panel — see [`mmm::MmmPlan`]) so the per-iteration products, and
+    /// any allocation accounting around them, start from a warm state.
+    /// Idempotent; default is a no-op.
+    fn prepare(&self) {}
+
+    /// Discriminant of the operator's materialisation plan, mixed into the
+    /// default [`LinearOp::fingerprint`] so a plan switch invalidates
+    /// cached solve plans. Operators without a plan report 0; wrappers
+    /// forward their inner operator's tag.
+    fn mmm_tag(&self) -> u64 {
+        0
+    }
+
     /// `(∂A/∂raw_p) · M`. Operators with `n_params() == 0` never receive
     /// this call; the default makes a stray call loud.
     fn dmatmul(&self, param: usize, m: &Mat) -> Mat {
@@ -203,6 +229,7 @@ pub trait LinearOp: Sync {
         r.hash(&mut h);
         c.hash(&mut h);
         self.n_params().hash(&mut h);
+        self.mmm_tag().hash(&mut h);
         self.noise().to_bits().hash(&mut h);
         let n = self.n();
         if n == 0 {
@@ -269,6 +296,15 @@ macro_rules! linear_op_delegate {
         fn matmul(&self, m: &$crate::tensor::Mat) -> $crate::tensor::Mat {
             self.$field.matmul(m)
         }
+        fn matmul_into(&self, m: &$crate::tensor::Mat, out: &mut $crate::tensor::Mat) {
+            self.$field.matmul_into(m, out)
+        }
+        fn prepare(&self) {
+            self.$field.prepare()
+        }
+        fn mmm_tag(&self) -> u64 {
+            self.$field.mmm_tag()
+        }
         fn diag(&self) -> Vec<f64> {
             self.$field.diag()
         }
@@ -315,6 +351,15 @@ macro_rules! forward_linear_op {
         }
         fn matmul(&self, m: &Mat) -> Mat {
             (**self).matmul(m)
+        }
+        fn matmul_into(&self, m: &Mat, out: &mut Mat) {
+            (**self).matmul_into(m, out)
+        }
+        fn prepare(&self) {
+            (**self).prepare()
+        }
+        fn mmm_tag(&self) -> u64 {
+            (**self).mmm_tag()
         }
         fn dmatmul(&self, param: usize, m: &Mat) -> Mat {
             (**self).dmatmul(param, m)
@@ -390,6 +435,10 @@ impl LinearOp for DenseOp {
 
     fn matmul(&self, m: &Mat) -> Mat {
         self.a.matmul(m)
+    }
+
+    fn matmul_into(&self, m: &Mat, out: &mut Mat) {
+        self.a.matmul_into(m, out)
     }
 
     fn diag(&self) -> Vec<f64> {

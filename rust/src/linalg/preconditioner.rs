@@ -18,6 +18,15 @@ use crate::util::Rng;
 pub trait Preconditioner: Sync {
     /// `P̂⁻¹ · M`
     fn solve_mat(&self, m: &Mat) -> Mat;
+    /// `P̂⁻¹ · M` written into a caller-owned, same-shaped output — the
+    /// zero-allocation seam the solver workspaces drive. The default
+    /// delegates to [`Preconditioner::solve_mat`] (which allocates) and
+    /// copies; the identity overrides it with a pure copy.
+    fn solve_mat_into(&self, m: &Mat, out: &mut Mat) {
+        let r = self.solve_mat(m);
+        assert_eq!(out.shape(), r.shape(), "solve_mat_into: output shape mismatch");
+        out.copy_from(&r);
+    }
     /// `P̂⁻¹ · v`
     fn solve_vec(&self, v: &[f64]) -> Vec<f64> {
         let m = Mat::col_from_slice(v);
@@ -39,6 +48,9 @@ pub struct IdentityPrecond;
 impl Preconditioner for IdentityPrecond {
     fn solve_mat(&self, m: &Mat) -> Mat {
         m.clone()
+    }
+    fn solve_mat_into(&self, m: &Mat, out: &mut Mat) {
+        out.copy_from(m);
     }
     fn logdet(&self) -> f64 {
         0.0

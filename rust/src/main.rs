@@ -31,8 +31,27 @@ use bbmm_gp::util::{Rng, Timer};
 use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 
+/// Apply process-wide performance knobs before any operator or pool is
+/// built: `--threads N` sizes the persistent worker pool (the flag form of
+/// `BBMM_THREADS`), `--mmm-budget-mb M` bounds the kernel materialisation
+/// plans (the flag form of `BBMM_MMM_BUDGET_MB`).
+fn apply_perf_flags(args: &Args) -> Result<(), CliError> {
+    if args.get("threads").is_some() {
+        bbmm_gp::util::par::set_threads(args.usize_or("threads", 0)?);
+    }
+    if args.get("mmm-budget-mb").is_some() {
+        bbmm_gp::linalg::op::mmm::set_budget_mb(args.usize_or("mmm-budget-mb", 0)?);
+    }
+    Ok(())
+}
+
 fn main() {
     let args = Args::from_env();
+    if let Err(e) = apply_perf_flags(&args) {
+        eprintln!("error: {e}");
+        eprintln!("run `bbmm help` for usage");
+        std::process::exit(2);
+    }
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let result = match cmd {
         "train" => cmd_train(&args),
@@ -146,6 +165,12 @@ fn print_help() {
            --noises s1,s2,…    (sweep: explicit noise grid — candidates\n\
                                share one covariance, the fused fast path)\n\
            --shards S          (serve: row-shard the kernel operator)\n\
+           --threads N         (size the persistent worker pool; flag\n\
+                               form of BBMM_THREADS)\n\
+           --mmm-budget-mb M   (kernel materialisation budget: under it,\n\
+                               stationary ops cache the r² panel or K\n\
+                               itself; over it they stream tiles — flag\n\
+                               form of BBMM_MMM_BUDGET_MB, default 1024)\n\
            --plan-cache-cap N --plan-cache-ttl-s S   (serve: bound the\n\
                                multi-tenant solve-plan cache: LRU + TTL)\n\
            --tenant name=model[@dataset]   (serve: repeatable; host many\n\
@@ -701,6 +726,11 @@ fn cmd_serve(args: &Args) -> Result<(), CliError> {
     println!(
         "serving GP predictions (feature dims {dims:?}) — operator: {}",
         config.operator
+    );
+    println!(
+        "perf: threads={} mmm-budget={}MB",
+        bbmm_gp::util::par::num_threads(),
+        bbmm_gp::linalg::op::mmm::budget_bytes() / (1024 * 1024)
     );
     serve(config, batcher, |addr| println!("listening on {addr}")).expect("server failed");
     Ok(())

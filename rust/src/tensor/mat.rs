@@ -1,5 +1,6 @@
-//! Row-major dense matrix with a parallel, cache-blocked GEMM.
+//! Row-major dense matrix with a parallel, register-blocked GEMM.
 
+use super::gemm;
 use super::scalar::Scalar;
 use crate::util::par;
 
@@ -53,6 +54,19 @@ impl<T: Scalar> Mat<T> {
     pub fn from_vec(rows: usize, cols: usize, data: Vec<T>) -> Self {
         assert_eq!(data.len(), rows * cols, "buffer size mismatch");
         Mat { rows, cols, data }
+    }
+
+    /// Reclaim the underlying row-major buffer (the allocation-free
+    /// round-trip workspaces use: move a scratch `Vec` into a shaped `Mat`
+    /// with [`Mat::from_vec`], compute, and take the buffer back).
+    pub fn into_vec(self) -> Vec<T> {
+        self.data
+    }
+
+    /// Overwrite from a same-shaped matrix without reallocating.
+    pub fn copy_from(&mut self, other: &Mat<T>) {
+        assert_eq!(self.shape(), other.shape(), "copy_from: shape mismatch");
+        self.data.copy_from_slice(&other.data);
     }
 
     /// Build from a function of (row, col).
@@ -142,37 +156,33 @@ impl<T: Scalar> Mat<T> {
         out
     }
 
-    /// Matrix product `self · other` — the BBMM hot path.
-    ///
-    /// Parallel over row chunks; inner loop is ikj (row-major streaming)
-    /// which autovectorizes well, with k-blocking for L2 residency.
+    /// Matrix product `self · other` — the BBMM hot path. Parallel over
+    /// output-row chunks; each chunk runs the register-blocked
+    /// [`gemm::gemm_into`] micro-kernel.
     pub fn matmul(&self, other: &Mat<T>) -> Mat<T> {
+        let mut out = Mat::zeros(self.rows, other.cols);
+        self.matmul_into(other, &mut out);
+        out
+    }
+
+    /// `self · other` written into a caller-owned output (overwritten) —
+    /// the zero-allocation seam the solver workspaces use. `out` must be
+    /// pre-shaped to `(self.rows, other.cols)`.
+    pub fn matmul_into(&self, other: &Mat<T>, out: &mut Mat<T>) {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        assert_eq!(
+            out.shape(),
+            (self.rows, other.cols),
+            "matmul_into: output shape mismatch"
+        );
         let (m, k, n) = (self.rows, self.cols, other.cols);
-        let mut out = Mat::zeros(m, n);
-        const KB: usize = 256;
         let a = &self.data;
         let b = &other.data;
         par::parallel_rows_mut(&mut out.data, m, n, |row_lo, chunk| {
-            for kb in (0..k).step_by(KB) {
-                let kend = (kb + KB).min(k);
-                for (ri, orow) in chunk.chunks_mut(n).enumerate() {
-                    let r = row_lo + ri;
-                    let arow = &a[r * k..(r + 1) * k];
-                    for kk in kb..kend {
-                        let aval = arow[kk];
-                        if aval == T::ZERO {
-                            continue;
-                        }
-                        let brow = &b[kk * n..(kk + 1) * n];
-                        for j in 0..n {
-                            orow[j] += aval * brow[j];
-                        }
-                    }
-                }
-            }
+            chunk.iter_mut().for_each(|v| *v = T::ZERO);
+            let rows_here = chunk.len() / n.max(1);
+            gemm::gemm_into(&a[row_lo * k..(row_lo + rows_here) * k], b, chunk, rows_here, k, n);
         });
-        out
     }
 
     /// `selfᵀ · other` without materialising the transpose.
@@ -180,60 +190,31 @@ impl<T: Scalar> Mat<T> {
         assert_eq!(self.rows, other.rows, "t_matmul shape mismatch");
         let (k, m, n) = (self.rows, self.cols, other.cols);
         let mut out = Mat::zeros(m, n);
-        // out[i,j] = sum_r a[r,i] * b[r,j]; accumulate rank-1 updates.
-        // Parallelise by splitting over r with per-thread accumulators.
+        // out[i,j] = sum_r a[r,i] * b[r,j]: rank-1 updates over r, split
+        // across threads with per-thread accumulators (summed at the end).
         let nt = par::num_threads().min(k).max(1);
         if nt <= 1 || m * n < 1024 {
-            for r in 0..k {
-                let arow = self.row(r);
-                let brow = other.row(r);
-                for i in 0..m {
-                    let av = arow[i];
-                    if av == T::ZERO {
-                        continue;
-                    }
-                    let orow = &mut out.data[i * n..(i + 1) * n];
-                    for j in 0..n {
-                        orow[j] += av * brow[j];
-                    }
-                }
-            }
+            gemm::gemm_atb_into(&self.data, &other.data, &mut out.data, k, m, n);
             return out;
         }
         let chunk = k.div_ceil(nt);
-        let partials: Vec<Mat<T>> = std::thread::scope(|s| {
-            let mut handles = Vec::new();
-            for t in 0..nt {
-                let lo = t * chunk;
-                let hi = ((t + 1) * chunk).min(k);
-                if lo >= hi {
-                    break;
-                }
-                let a = &self;
-                let b = &other;
-                handles.push(s.spawn(move || {
-                    let mut acc = Mat::zeros(m, n);
-                    for r in lo..hi {
-                        let arow = a.row(r);
-                        let brow = b.row(r);
-                        for i in 0..m {
-                            let av = arow[i];
-                            if av == T::ZERO {
-                                continue;
-                            }
-                            let orow = &mut acc.data[i * n..(i + 1) * n];
-                            for j in 0..n {
-                                orow[j] += av * brow[j];
-                            }
-                        }
-                    }
-                    acc
-                }));
+        let n_parts = k.div_ceil(chunk);
+        // per-thread partials as pseudo-rows of one flat buffer, so the
+        // existing disjoint-rows parallel driver distributes them
+        let mut partials = vec![T::ZERO; n_parts * m * n];
+        let a = &self.data;
+        let b = &other.data;
+        par::parallel_rows_mut(&mut partials, n_parts, m * n, |part_lo, pchunk| {
+            for (pi, acc) in pchunk.chunks_mut(m * n).enumerate() {
+                let lo = (part_lo + pi) * chunk;
+                let hi = (lo + chunk).min(k);
+                gemm::gemm_atb_into(&a[lo * m..hi * m], &b[lo * n..hi * n], acc, hi - lo, m, n);
             }
-            handles.into_iter().map(|h| h.join().unwrap()).collect()
         });
-        for p in partials {
-            out.add_assign(&p);
+        for p in partials.chunks(m * n) {
+            for (o, &v) in out.data.iter_mut().zip(p) {
+                *o += v;
+            }
         }
         out
     }
@@ -246,18 +227,9 @@ impl<T: Scalar> Mat<T> {
         let a = &self.data;
         let b = &other.data;
         par::parallel_rows_mut(&mut out.data, m, n, |row_lo, chunk| {
-            for (ri, orow) in chunk.chunks_mut(n).enumerate() {
-                let r = row_lo + ri;
-                let arow = &a[r * k..(r + 1) * k];
-                for j in 0..n {
-                    let brow = &b[j * k..(j + 1) * k];
-                    let mut s = T::ZERO;
-                    for kk in 0..k {
-                        s += arow[kk] * brow[kk];
-                    }
-                    orow[j] = s;
-                }
-            }
+            let rows_here = chunk.len() / n.max(1);
+            let a_rows = &a[row_lo * k..(row_lo + rows_here) * k];
+            gemm::gemm_abt_into(a_rows, b, chunk, rows_here, k, n);
         });
         out
     }
@@ -268,12 +240,7 @@ impl<T: Scalar> Mat<T> {
         let mut out = vec![T::ZERO; self.rows];
         par::parallel_rows_mut(&mut out, self.rows, 1, |row_lo, chunk| {
             for (i, o) in chunk.iter_mut().enumerate() {
-                let row = self.row(row_lo + i);
-                let mut s = T::ZERO;
-                for c in 0..self.cols {
-                    s += row[c] * v[c];
-                }
-                *o = s;
+                *o = gemm::dot(self.row(row_lo + i), v);
             }
         });
         out

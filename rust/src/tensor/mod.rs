@@ -5,31 +5,43 @@
 //! thread-parallel GEMM — because every mBCG iteration is one kernel
 //! mat-mul plus O(nt) vector work (paper App. B).
 
+pub mod gemm;
 pub mod mat;
 pub mod scalar;
 
 pub use mat::Mat;
 pub use scalar::Scalar;
 
-/// Column-stacked vector helpers over flat `Vec<f64>`s.
+/// Column-stacked vector helpers over flat `Vec<f64>`s, unrolled to four
+/// independent accumulator/FMA chains (a single chain serialises on add
+/// latency — the mBCG α/β reductions are exactly these calls).
 pub mod vecops {
-    /// dot product
+    /// dot product (four-accumulator unroll — see [`crate::tensor::gemm::dot`])
     #[inline]
     pub fn dot(a: &[f64], b: &[f64]) -> f64 {
         debug_assert_eq!(a.len(), b.len());
-        let mut s = 0.0;
-        for i in 0..a.len() {
-            s += a[i] * b[i];
-        }
-        s
+        super::gemm::dot(a, b)
     }
 
-    /// y += alpha * x
+    /// y += alpha * x, four independent update streams per pass
     #[inline]
     pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+        // equal lengths are the contract; a mismatch must fail loudly (the
+        // indexing below panics), never silently truncate the update
         debug_assert_eq!(x.len(), y.len());
-        for i in 0..x.len() {
+        let n = x.len();
+        let end = n - n % 4;
+        let mut i = 0;
+        while i < end {
             y[i] += alpha * x[i];
+            y[i + 1] += alpha * x[i + 1];
+            y[i + 2] += alpha * x[i + 2];
+            y[i + 3] += alpha * x[i + 3];
+            i += 4;
+        }
+        while i < n {
+            y[i] += alpha * x[i];
+            i += 1;
         }
     }
 

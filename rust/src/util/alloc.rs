@@ -1,0 +1,90 @@
+//! Debug-build heap-allocation counter — the observable behind the
+//! zero-allocation claim on the mBCG iteration loop.
+//!
+//! In debug builds (`cfg(debug_assertions)`) the crate installs a counting
+//! global allocator: every `alloc`/`realloc`/`alloc_zeroed` bumps a
+//! **thread-local** counter before delegating to the system allocator.
+//! [`thread_allocations`] reads the calling thread's count, so a solver
+//! can snapshot it around its iteration loop and report the delta
+//! (`MbcgBatchStats::loop_allocs`) without interference from concurrently
+//! running tests or pool workers. Release builds keep the plain system
+//! allocator; the counter then always reads 0.
+
+use std::cell::Cell;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Heap allocations performed by **this thread** since it started
+/// (always 0 in release builds, where no counting allocator is installed).
+pub fn thread_allocations() -> u64 {
+    ALLOCS.try_with(|c| c.get()).unwrap_or(0)
+}
+
+#[inline]
+fn bump() {
+    // try_with: allocations during thread teardown must not panic
+    let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+}
+
+/// System-allocator wrapper that counts allocation calls per thread.
+pub struct CountingAlloc;
+
+// SAFETY: delegates every operation to `std::alloc::System`; the counter
+// bump has no effect on allocator behaviour.
+unsafe impl std::alloc::GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: std::alloc::Layout) -> *mut u8 {
+        bump();
+        std::alloc::System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: std::alloc::Layout) {
+        std::alloc::System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: std::alloc::Layout, new_size: usize) -> *mut u8 {
+        bump();
+        std::alloc::System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: std::alloc::Layout) -> *mut u8 {
+        bump();
+        std::alloc::System.alloc_zeroed(layout)
+    }
+}
+
+#[cfg(debug_assertions)]
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_sees_debug_allocations() {
+        let before = thread_allocations();
+        let v: Vec<u64> = (0..64).collect();
+        assert_eq!(v.len(), 64);
+        let after = thread_allocations();
+        if cfg!(debug_assertions) {
+            assert!(after > before, "debug builds must count the Vec allocation");
+        } else {
+            assert_eq!(after, before, "release builds do not count");
+        }
+    }
+
+    #[test]
+    fn pure_arithmetic_allocates_nothing() {
+        // warm any lazy state, then measure a no-allocation region
+        let _ = thread_allocations();
+        let before = thread_allocations();
+        let mut acc = 0u64;
+        for i in 0..1000u64 {
+            acc = acc.wrapping_mul(31).wrapping_add(i);
+        }
+        assert!(acc != 1, "keep the loop alive");
+        assert_eq!(thread_allocations(), before);
+    }
+}

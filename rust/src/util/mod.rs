@@ -4,10 +4,12 @@
 //! so the usual ecosystem pieces (rand, rayon, clap) are implemented here,
 //! scoped to exactly what the BBMM stack needs.
 
+pub mod alloc;
 pub mod cli;
 pub mod fastmath;
 pub mod par;
 pub mod rng;
+pub mod scratch;
 pub mod timer;
 
 pub use par::parallel_for;

@@ -1,15 +1,32 @@
-//! Minimal data-parallelism substrate (rayon is unavailable offline).
+//! Minimal data-parallelism substrate (rayon is unavailable offline),
+//! backed by a **lazily-started persistent worker pool**.
 //!
-//! `parallel_for` splits an index range across `std::thread::scope` workers.
-//! Thread spawn costs ~20µs, so callers gate on problem size (the helpers
-//! here do that automatically via `GRAIN`).
+//! The seed implementation spawned `std::thread::scope` workers on every
+//! parallel region (~20µs per spawn), which a 50-iteration mBCG solve pays
+//! hundreds of times. The pool here is started once — `num_threads() − 1`
+//! channel-fed workers (`BBMM_THREADS`-sized, see [`set_threads`]) parked
+//! on a condvar — and every region after that is a lock-push plus a wake.
+//!
+//! Regions are **allocation-free**: the batch descriptor lives on the
+//! submitting thread's stack, workers claim chunk indices with an atomic
+//! counter, and the submitter both participates in its own batch and
+//! blocks until every claimed chunk has finished (so stack borrows stay
+//! valid — the same guarantee `thread::scope` gave, enforced here with a
+//! completion count plus a worker reference count). Nested regions are
+//! safe: a submitter inside a worker drains its own batch itself if no
+//! peer is free, so progress never depends on pool capacity.
 
+use std::collections::VecDeque;
+use std::panic::{self, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock};
 
-/// Number of worker threads to use (cached; override with BBMM_THREADS).
+static THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Number of worker threads to use (cached; `BBMM_THREADS` overrides the
+/// detected parallelism, [`set_threads`] overrides both).
 pub fn num_threads() -> usize {
-    static N: AtomicUsize = AtomicUsize::new(0);
-    let cached = N.load(Ordering::Relaxed);
+    let cached = THREADS.load(Ordering::Relaxed);
     if cached != 0 {
         return cached;
     }
@@ -22,17 +39,196 @@ pub fn num_threads() -> usize {
                 .map(|n| n.get())
                 .unwrap_or(1)
         });
-    N.store(n, Ordering::Relaxed);
+    THREADS.store(n, Ordering::Relaxed);
     n
+}
+
+/// Override the worker count (the `--threads` CLI flag). Takes full effect
+/// when called before the first parallel region — the pool spawns its
+/// workers lazily at that point; afterwards it only changes the serial/
+/// parallel gating, not the number of live workers.
+pub fn set_threads(n: usize) {
+    if n > 0 {
+        THREADS.store(n, Ordering::Relaxed);
+    }
 }
 
 /// Minimum amount of per-thread work (in "items") below which we stay serial.
 const GRAIN: usize = 4;
 
-/// Run `body(i)` for every `i in 0..n`, splitting the range across threads.
-///
-/// `body` must be `Sync` (called concurrently from several threads). Each
-/// index is visited exactly once.
+/// One parallel region: `n` chunk tasks claimed by index. Lives on the
+/// submitting thread's stack; the queue holds raw pointers to it, made
+/// sound by the submit protocol (see [`submit_and_run`]).
+struct Batch {
+    /// the chunk body, lifetime-erased; valid until the submitter returns
+    task: *const (dyn Fn(usize) + Sync),
+    /// number of chunk tasks
+    n: usize,
+    /// next unclaimed chunk index
+    next: AtomicUsize,
+    /// chunks fully executed
+    done: AtomicUsize,
+    /// pool workers currently holding a reference (bumped under the queue
+    /// lock, so a batch still in the queue is never freed mid-grab)
+    refs: AtomicUsize,
+    /// completion flag + wakeups for the submitter
+    finished: Mutex<bool>,
+    cv: Condvar,
+    /// first panic payload from any chunk (re-thrown by the submitter)
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+// SAFETY: the raw task pointer is only dereferenced while the submitter
+// is blocked in `submit_and_run` (claimed chunks keep `done < n`).
+unsafe impl Send for Batch {}
+unsafe impl Sync for Batch {}
+
+struct Pool {
+    queue: Mutex<VecDeque<*const Batch>>,
+    ready: Condvar,
+}
+
+// SAFETY: the queued pointers are managed by the submit protocol above.
+unsafe impl Send for Pool {}
+unsafe impl Sync for Pool {}
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<&'static Pool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let pool: &'static Pool = Box::leak(Box::new(Pool {
+            queue: Mutex::new(VecDeque::with_capacity(64)),
+            ready: Condvar::new(),
+        }));
+        let workers = num_threads().saturating_sub(1);
+        for w in 0..workers {
+            std::thread::Builder::new()
+                .name(format!("bbmm-worker-{w}"))
+                .spawn(move || worker_loop(pool))
+                .expect("failed to spawn pool worker");
+        }
+        pool
+    })
+}
+
+fn worker_loop(pool: &'static Pool) {
+    loop {
+        let batch: &Batch = {
+            let mut q = pool.queue.lock().unwrap();
+            loop {
+                if let Some(&front) = q.front() {
+                    // bump refs under the lock: the submitter cannot free
+                    // the batch while it is queued, and cannot dequeue-and-
+                    // return before observing our reference
+                    unsafe {
+                        (*front).refs.fetch_add(1, Ordering::AcqRel);
+                        break &*front;
+                    }
+                }
+                q = pool.ready.wait(q).unwrap();
+            }
+        };
+        run_batch(pool, batch);
+        // Release. This MUST be the worker's final touch of the batch: the
+        // submitter spins on `refs` (it does not condvar-wait on it), so
+        // the moment this RMW completes it may free the stack batch —
+        // locking/notifying anything on it here would be use-after-free.
+        batch.refs.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// Claim and execute chunks of `batch` until none remain, then drop the
+/// batch from the queue front (if it is still there).
+fn run_batch(pool: &Pool, batch: &Batch) {
+    loop {
+        let i = batch.next.fetch_add(1, Ordering::Relaxed);
+        if i >= batch.n {
+            let mut q = pool.queue.lock().unwrap();
+            if let Some(&front) = q.front() {
+                if std::ptr::eq(front, batch as *const Batch) {
+                    q.pop_front();
+                }
+            }
+            return;
+        }
+        let task: &(dyn Fn(usize) + Sync) = unsafe { &*batch.task };
+        if let Err(payload) = panic::catch_unwind(AssertUnwindSafe(|| task(i))) {
+            let mut slot = batch.panic.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(payload);
+            }
+        }
+        if batch.done.fetch_add(1, Ordering::AcqRel) + 1 == batch.n {
+            let mut f = batch.finished.lock().unwrap();
+            *f = true;
+            batch.cv.notify_all();
+        }
+    }
+}
+
+/// Run `task(0..n)` across the pool. The submitting thread participates;
+/// returns only after every chunk has executed and no worker still holds
+/// the (stack-allocated) batch. Panics in chunks are re-thrown here.
+fn submit_and_run(n: usize, task: &(dyn Fn(usize) + Sync)) {
+    if n == 0 {
+        return;
+    }
+    if n == 1 || num_threads() <= 1 {
+        for i in 0..n {
+            task(i);
+        }
+        return;
+    }
+    let pool = pool();
+    let batch = Batch {
+        task: task as *const (dyn Fn(usize) + Sync),
+        n,
+        next: AtomicUsize::new(0),
+        done: AtomicUsize::new(0),
+        refs: AtomicUsize::new(0),
+        finished: Mutex::new(false),
+        cv: Condvar::new(),
+        panic: Mutex::new(None),
+    };
+    {
+        let mut q = pool.queue.lock().unwrap();
+        q.push_back(&batch as *const Batch);
+        pool.ready.notify_all();
+    }
+    // participate: the submitter drains its own batch (alone, if every
+    // worker is busy — this is what makes nested regions deadlock-free)
+    run_batch(pool, &batch);
+    // wait for chunks claimed by pool workers
+    {
+        let mut f = batch.finished.lock().unwrap();
+        while !*f {
+            f = batch.cv.wait(f).unwrap();
+        }
+    }
+    // unqueue (no new grabs), then wait for grabbed references to drain so
+    // the stack batch cannot be touched after we return
+    {
+        let mut q = pool.queue.lock().unwrap();
+        if let Some(pos) = q.iter().position(|&p| std::ptr::eq(p, &batch as *const Batch)) {
+            q.remove(pos);
+        }
+    }
+    // Spin-drain rather than condvar-wait: a worker's release is a single
+    // atomic decrement with no lock/notify after it, so observing refs == 0
+    // (Acquire) happens-after the worker's LAST access to the batch and it
+    // is then safe to free. The window is tiny — every chunk has already
+    // completed (`finished` above), so lingering references are workers
+    // between their last chunk and the decrement.
+    while batch.refs.load(Ordering::Acquire) != 0 {
+        std::thread::yield_now();
+    }
+    if let Some(payload) = batch.panic.lock().unwrap().take() {
+        panic::resume_unwind(payload);
+    }
+}
+
+/// Run `body(i)` for every `i in 0..n`, splitting the range across the
+/// pool. `body` must be `Sync` (called concurrently from several threads).
+/// Each index is visited exactly once.
 pub fn parallel_for<F: Fn(usize) + Sync>(n: usize, body: F) {
     let nt = num_threads().min(n.div_ceil(GRAIN)).max(1);
     if nt <= 1 || n == 0 {
@@ -42,19 +238,12 @@ pub fn parallel_for<F: Fn(usize) + Sync>(n: usize, body: F) {
         return;
     }
     let chunk = n.div_ceil(nt);
-    std::thread::scope(|s| {
-        for t in 0..nt {
-            let lo = t * chunk;
-            let hi = ((t + 1) * chunk).min(n);
-            if lo >= hi {
-                break;
-            }
-            let body = &body;
-            s.spawn(move || {
-                for i in lo..hi {
-                    body(i);
-                }
-            });
+    let n_chunks = n.div_ceil(chunk);
+    submit_and_run(n_chunks, &|t| {
+        let lo = t * chunk;
+        let hi = ((t + 1) * chunk).min(n);
+        for i in lo..hi {
+            body(i);
         }
     });
 }
@@ -72,22 +261,26 @@ pub fn parallel_chunks<F: Fn(usize, usize, usize) + Sync>(n: usize, min_chunk: u
         return;
     }
     let chunk = n.div_ceil(nt);
-    std::thread::scope(|s| {
-        for t in 0..nt {
-            let lo = t * chunk;
-            let hi = ((t + 1) * chunk).min(n);
-            if lo >= hi {
-                break;
-            }
-            let body = &body;
-            s.spawn(move || body(t, lo, hi));
+    let n_chunks = n.div_ceil(chunk);
+    submit_and_run(n_chunks, &|t| {
+        let lo = t * chunk;
+        let hi = ((t + 1) * chunk).min(n);
+        if lo < hi {
+            body(t, lo, hi);
         }
     });
 }
 
+/// Shareable base pointer for the disjoint-rows driver below.
+struct SendPtr<T>(*mut T);
+// SAFETY: each chunk task touches a disjoint row range of the buffer.
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
 /// Map over mutable row-chunks of a flat buffer: splits `buf` (logically
-/// `rows × row_len`) into contiguous row ranges, one per thread, and calls
-/// `body(row_lo, rows_chunk)` with the mutable sub-slice for those rows.
+/// `rows × row_len`) into contiguous row ranges, one per chunk task, and
+/// calls `body(row_lo, rows_chunk)` with the mutable sub-slice for those
+/// rows.
 pub fn parallel_rows_mut<T: Send, F: Fn(usize, &mut [T]) + Sync>(
     buf: &mut [T],
     rows: usize,
@@ -101,18 +294,20 @@ pub fn parallel_rows_mut<T: Send, F: Fn(usize, &mut [T]) + Sync>(
         return;
     }
     let chunk = rows.div_ceil(nt);
-    std::thread::scope(|s| {
-        let mut rest = buf;
-        let mut row_lo = 0usize;
-        while row_lo < rows {
-            let take = chunk.min(rows - row_lo);
-            let (head, tail) = rest.split_at_mut(take * row_len);
-            rest = tail;
-            let body = &body;
-            let lo = row_lo;
-            s.spawn(move || body(lo, head));
-            row_lo += take;
+    let n_chunks = rows.div_ceil(chunk);
+    let base = SendPtr(buf.as_mut_ptr());
+    submit_and_run(n_chunks, &|t| {
+        let lo = t * chunk;
+        let hi = ((t + 1) * chunk).min(rows);
+        if lo >= hi {
+            return;
         }
+        // SAFETY: chunk tasks own disjoint row ranges of the buffer, and
+        // the submitter blocks until every task completes.
+        let slice = unsafe {
+            std::slice::from_raw_parts_mut(base.0.add(lo * row_len), (hi - lo) * row_len)
+        };
+        body(lo, slice);
     });
 }
 
@@ -169,5 +364,49 @@ mod tests {
         for s in &seen {
             assert_eq!(s.load(Ordering::Relaxed), 1);
         }
+    }
+
+    #[test]
+    fn pool_survives_many_back_to_back_regions() {
+        // the persistent pool must stay healthy across thousands of tiny
+        // regions (the per-iteration cadence of an mBCG solve)
+        let total = AtomicU64::new(0);
+        for _ in 0..2000 {
+            parallel_for(64, |i| {
+                total.fetch_add(i as u64, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 2000 * (64 * 63 / 2));
+    }
+
+    #[test]
+    fn nested_regions_complete() {
+        let hits: Vec<AtomicU64> = (0..16 * 16).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(16, |outer| {
+            parallel_for(16, |inner| {
+                hits[outer * 16 + inner].fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        for h in &hits {
+            assert_eq!(h.load(Ordering::Relaxed), 1);
+        }
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_the_submitter() {
+        let result = std::panic::catch_unwind(|| {
+            parallel_for(64, |i| {
+                if i == 13 {
+                    panic!("boom from chunk");
+                }
+            });
+        });
+        assert!(result.is_err(), "a chunk panic must reach the caller");
+        // and the pool still works afterwards
+        let total = AtomicU64::new(0);
+        parallel_for(100, |i| {
+            total.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 100 * 99 / 2);
     }
 }

@@ -1,0 +1,60 @@
+//! Per-thread reusable scratch buffers for the fused kernel-tile paths.
+//!
+//! The streaming covariance products need a few rows of r²/kernel-row
+//! workspace per worker. Allocating those inside every product call puts
+//! heap traffic in the mBCG iteration loop, so each thread keeps one
+//! grow-only `Vec<f64>` here: the first product on a thread sizes it, and
+//! every later call on that thread (pool workers are persistent —
+//! [`crate::util::par`]) is allocation-free.
+//!
+//! Regions must not nest on one thread (a `with` inside a `with` would
+//! alias the buffer); the kernel operators take a single buffer per
+//! parallel chunk and split it, which keeps that invariant locally
+//! checkable.
+
+use std::cell::RefCell;
+
+thread_local! {
+    static SCRATCH: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Run `f` with a scratch slice of length `len`, reusing this thread's
+/// buffer (grow-only; no shrink, no per-call allocation once warm). The
+/// slice contents are **unspecified** — callers overwrite what they read.
+/// Panics if called re-entrantly on one thread.
+pub fn with<R>(len: usize, f: impl FnOnce(&mut [f64]) -> R) -> R {
+    SCRATCH.with(|cell| {
+        let mut buf = cell
+            .try_borrow_mut()
+            .expect("util::scratch::with must not nest on one thread");
+        if buf.len() < len {
+            buf.resize(len, 0.0);
+        }
+        f(&mut buf[..len])
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scratch_reuses_capacity() {
+        with(128, |buf| {
+            assert_eq!(buf.len(), 128);
+            buf[0] = 7.0;
+        });
+        let before = crate::util::alloc::thread_allocations();
+        with(64, |buf| {
+            assert_eq!(buf.len(), 64);
+        });
+        with(128, |buf| {
+            assert_eq!(buf.len(), 128);
+        });
+        assert_eq!(
+            crate::util::alloc::thread_allocations(),
+            before,
+            "warm scratch must not allocate"
+        );
+    }
+}

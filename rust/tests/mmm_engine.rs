@@ -1,0 +1,311 @@
+//! Property tests for the iteration-amortised MMM engine: the GEMM
+//! micro-kernel vs the naive reference, every [`MmmPlan`] variant vs the
+//! dense materialisation, derivative tiles from the cached r² panel vs
+//! finite differences, the `Arc<Mat>` sharing seam, plan-aware
+//! fingerprints, and the zero-allocation batched iteration loop.
+
+use bbmm_gp::kernels::{Kernel, KernelCov, KernelCovOp, Matern32, Rbf, ShardedCovOp};
+use bbmm_gp::linalg::mbcg::{mbcg_batch_stats_ws, MbcgOptions, MbcgWorkspace};
+use bbmm_gp::linalg::op::{AddedDiagOp, BatchOp, LinearOp, MmmPlan, SolveOptions, SolvePlanCache};
+use bbmm_gp::linalg::preconditioner::{IdentityPrecond, Preconditioner};
+use bbmm_gp::tensor::{gemm, Mat};
+use bbmm_gp::util::Rng;
+use std::sync::Arc;
+
+const PLANS: [MmmPlan; 3] = [MmmPlan::Stream, MmmPlan::CachedDistances, MmmPlan::MaterializeK];
+
+fn rand_mat(r: usize, c: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::from_fn(r, c, |_, _| rng.normal())
+}
+
+fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+    let mut out = Mat::zeros(a.rows(), b.cols());
+    for i in 0..a.rows() {
+        for j in 0..b.cols() {
+            let mut s = 0.0;
+            for k in 0..a.cols() {
+                s += a.get(i, k) * b.get(k, j);
+            }
+            out.set(i, j, s);
+        }
+    }
+    out
+}
+
+#[test]
+fn gemm_backed_matmul_matches_naive_on_odd_and_degenerate_shapes() {
+    // shapes straddling every register-tile boundary (MR=4, NR=8, KB=256)
+    for &(m, k, n) in &[
+        (1usize, 1usize, 1usize),
+        (2, 3, 5),
+        (4, 8, 8),
+        (5, 9, 7),
+        (7, 255, 9),
+        (9, 256, 15),
+        (12, 257, 17),
+        (33, 70, 40),
+        (3, 300, 1),
+        (1, 512, 24),
+    ] {
+        let a = rand_mat(m, k, (m * 1000 + k * 10 + n) as u64);
+        let b = rand_mat(k, n, (n * 1000 + k) as u64);
+        let got = a.matmul(&b);
+        let want = naive_matmul(&a, &b);
+        let scale = want.fro_norm().max(1.0);
+        assert!(
+            got.max_abs_diff(&want) / scale < 1e-10,
+            "({m},{k},{n}): rel diff {}",
+            got.max_abs_diff(&want) / scale
+        );
+        // matmul_into writes the identical product into a caller buffer
+        let mut out = Mat::zeros(m, n);
+        a.matmul_into(&b, &mut out);
+        assert!(out.max_abs_diff(&got) == 0.0, "matmul_into must match matmul");
+    }
+    // degenerate: empty contraction axis
+    let a = Mat::zeros(3, 0);
+    let b = Mat::zeros(0, 4);
+    assert_eq!(a.matmul(&b).shape(), (3, 4));
+}
+
+#[test]
+fn f32_gemm_backed_matmul_tracks_f64() {
+    let a = rand_mat(19, 33, 1);
+    let b = rand_mat(33, 11, 2);
+    let want = naive_matmul(&a, &b);
+    let got32 = a.cast::<f32>().matmul(&b.cast::<f32>());
+    let scale = want.fro_norm().max(1.0);
+    assert!(got32.cast::<f64>().max_abs_diff(&want) / scale < 1e-4);
+}
+
+#[test]
+fn unrolled_dot_matches_reference() {
+    for &len in &[0usize, 1, 2, 3, 4, 5, 31, 32, 33, 100] {
+        let x = rand_mat(1, len, 3 + len as u64);
+        let y = rand_mat(1, len, 4 + len as u64);
+        let want: f64 = x.data().iter().zip(y.data()).map(|(a, b)| a * b).sum();
+        let got = gemm::dot(x.data(), y.data());
+        assert!((got - want).abs() < 1e-10 * (1.0 + want.abs()), "len {len}");
+    }
+}
+
+/// Every plan variant must produce the dense reference product — value
+/// AND derivative tiles — to 1e-10 relative, for stationary and
+/// non-stationary kernels and shapes that are odd w.r.t. every tile size.
+#[test]
+fn every_mmm_plan_matches_the_dense_reference() {
+    for &(n, t) in &[(37usize, 1usize), (64, 3), (131, 5)] {
+        let mut rng = Rng::new(n as u64);
+        let x = Mat::from_fn(n, 3, |_, _| rng.uniform_in(-1.0, 1.0));
+        let m = Mat::from_fn(n, t, |_, _| rng.normal());
+        for kernel in [
+            Box::new(Rbf::new(0.6, 1.1)) as Box<dyn Kernel>,
+            Box::new(Matern32::new(0.4, 0.8)) as Box<dyn Kernel>,
+        ] {
+            let reference = KernelCovOp::new(x.clone(), kernel.boxed_clone());
+            let kdense = reference.dense();
+            let want = kdense.matmul(&m);
+            let scale = want.fro_norm().max(1.0);
+            for plan in PLANS {
+                let cov = KernelCovOp::new(x.clone(), kernel.boxed_clone()).with_plan(plan);
+                assert_eq!(cov.plan(), plan);
+                let got = cov.matmul(&m);
+                assert!(
+                    got.max_abs_diff(&want) / scale < 1e-10,
+                    "plan {} n={n} t={t}: {}",
+                    plan.name(),
+                    got.max_abs_diff(&want) / scale
+                );
+                // derivative products for every kernel parameter
+                for p in 0..cov.n_params() {
+                    let got_d = cov.dmatmul(p, &m);
+                    let want_d = reference.dmatmul(p, &m);
+                    let dscale = want_d.fro_norm().max(1.0);
+                    assert!(
+                        got_d.max_abs_diff(&want_d) / dscale < 1e-10,
+                        "plan {} dmatmul({p})",
+                        plan.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_op_consumes_every_plan() {
+    let n = 83;
+    let mut rng = Rng::new(7);
+    let x = Mat::from_fn(n, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+    let m = Mat::from_fn(n, 3, |_, _| rng.normal());
+    let reference = KernelCovOp::new(x.clone(), Box::new(Rbf::new(0.5, 1.2)));
+    let want = reference.dense().matmul(&m);
+    let scale = want.fro_norm().max(1.0);
+    for plan in PLANS {
+        let cov = ShardedCovOp::new(x.clone(), Box::new(Rbf::new(0.5, 1.2)), 5).with_plan(plan);
+        let got = cov.matmul(&m);
+        assert!(
+            got.max_abs_diff(&want) / scale < 1e-10,
+            "sharded plan {}: {}",
+            plan.name(),
+            got.max_abs_diff(&want) / scale
+        );
+        for p in 0..cov.n_params() {
+            let diff = cov.dmatmul(p, &m).max_abs_diff(&reference.dmatmul(p, &m));
+            assert!(diff / scale < 1e-10, "sharded plan {} dmatmul({p})", plan.name());
+        }
+    }
+}
+
+/// The cached-r² derivative tile (`dmatmul` under `CachedDistances`) must
+/// agree with central finite differences of the value product.
+#[test]
+fn dmatmul_from_cached_r2_matches_finite_differences() {
+    let n = 40;
+    let mut rng = Rng::new(11);
+    let x = Mat::from_fn(n, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+    let m = Mat::from_fn(n, 2, |_, _| rng.normal());
+    let mut cov = KernelCovOp::new(x, Box::new(Rbf::new(0.5, 1.0)))
+        .with_plan(MmmPlan::CachedDistances);
+    // materialise the r² panel first so both value and derivative tiles
+    // demonstrably derive from it
+    cov.prepare();
+    let raw = cov.kernel().params();
+    let h = 1e-6;
+    for p in 0..cov.n_params() {
+        let analytic = cov.dmatmul(p, &m);
+        let mut plus = raw.clone();
+        plus[p] += h;
+        cov.set_kernel_params(&plus);
+        let fp = cov.matmul(&m);
+        let mut minus = raw.clone();
+        minus[p] -= h;
+        cov.set_kernel_params(&minus);
+        let fm = cov.matmul(&m);
+        cov.set_kernel_params(&raw);
+        let mut fd = fp.sub(&fm);
+        fd.scale_assign(1.0 / (2.0 * h));
+        assert!(
+            analytic.max_abs_diff(&fd) < 1e-4,
+            "param {p}: {}",
+            analytic.max_abs_diff(&fd)
+        );
+    }
+}
+
+#[test]
+fn materialized_k_invalidates_on_parameter_update() {
+    let n = 30;
+    let mut rng = Rng::new(13);
+    let x = Mat::from_fn(n, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+    let m = Mat::from_fn(n, 2, |_, _| rng.normal());
+    let mut cov = KernelCovOp::new(x.clone(), Box::new(Rbf::new(0.5, 1.0)))
+        .with_plan(MmmPlan::MaterializeK);
+    let _ = cov.matmul(&m); // builds K for the current parameters
+    let mut raw = cov.kernel().params();
+    raw[0] += 0.3;
+    cov.set_kernel_params(&raw);
+    let reference = {
+        let mut k = Box::new(Rbf::new(0.5, 1.0)) as Box<dyn Kernel>;
+        k.set_params(&raw);
+        KernelCovOp::new(x, k).with_plan(MmmPlan::Stream)
+    };
+    let got = cov.matmul(&m);
+    let want = reference.matmul(&m);
+    assert!(
+        got.max_abs_diff(&want) < 1e-12,
+        "stale K panel served after a hyperparameter update: {}",
+        got.max_abs_diff(&want)
+    );
+}
+
+/// `share_cached` clones share the training inputs and caches by Arc —
+/// the fit_sweep memory seam — and stay numerically identical.
+#[test]
+fn share_cached_shares_inputs_and_matches() {
+    let n = 50;
+    let mut rng = Rng::new(17);
+    let x = Arc::new(Mat::from_fn(n, 3, |_, _| rng.uniform_in(-1.0, 1.0)));
+    let m = Mat::from_fn(n, 2, |_, _| rng.normal());
+    let a = KernelCovOp::from_shared(Arc::clone(&x), Box::new(Rbf::new(0.5, 1.0)));
+    let mut k2 = Box::new(Rbf::new(0.5, 1.0)) as Box<dyn Kernel>;
+    let mut p2 = k2.params();
+    p2[0] += 0.4;
+    k2.set_params(&p2);
+    let b = a.share_cached(k2.boxed_clone());
+    assert!(Arc::ptr_eq(a.shared_x(), b.shared_x()), "X must be shared, not cloned");
+    assert!(Arc::ptr_eq(a.shared_x(), &x));
+    // the sibling computes exactly what an independently-built op does
+    let independent = KernelCovOp::new((*x).clone(), k2);
+    assert!(b.matmul(&m).max_abs_diff(&independent.matmul(&m)) < 1e-12);
+    // and the original is unaffected by the sibling's different kernel
+    let fresh = KernelCovOp::from_shared(Arc::clone(&x), Box::new(Rbf::new(0.5, 1.0)));
+    assert!(a.matmul(&m).max_abs_diff(&fresh.matmul(&m)) == 0.0);
+}
+
+/// Switching the materialisation plan changes the operator fingerprint
+/// (via `mmm_tag`), so a `SolvePlanCache` rebuilds instead of serving a
+/// plan prepared under different product semantics.
+#[test]
+fn plan_switch_invalidates_cached_solve_plans() {
+    let n = 24;
+    let mut rng = Rng::new(19);
+    let x = Mat::from_fn(n, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+    let cov = KernelCovOp::new(x, Box::new(Rbf::new(0.5, 1.0))).with_plan(MmmPlan::Stream);
+    let mut op = AddedDiagOp::new(cov, 0.1);
+    let cache = SolvePlanCache::new();
+    let opts = SolveOptions::default();
+    let fp_stream = op.fingerprint();
+    let _ = cache.get_or_plan("slot", &op, &opts);
+    op.inner_mut().set_plan(MmmPlan::MaterializeK);
+    assert_ne!(fp_stream, op.fingerprint(), "plan must be part of the fingerprint");
+    let _ = cache.get_or_plan("slot", &op, &opts);
+    assert_eq!(cache.invalidations(), 1, "plan switch must rebuild the slot");
+    let _ = cache.get_or_plan("slot", &op, &opts);
+    assert_eq!(cache.hits(), 1);
+}
+
+/// The acceptance observable: with materialisation plans, `matmul_into`
+/// operators, identity preconditioners, and a warm workspace, the batched
+/// iteration loop performs ZERO heap allocations (counted by the
+/// debug-build allocation counter; release builds report 0 trivially).
+#[test]
+fn warm_mbcg_batch_iteration_loop_is_allocation_free() {
+    let n = 200;
+    let b = 3;
+    let mut rng = Rng::new(23);
+    let x = Mat::from_fn(n, 3, |_, _| rng.uniform_in(-1.0, 1.0));
+    let cov = KernelCovOp::new(x, Box::new(Rbf::new(0.6, 1.0))).with_plan(MmmPlan::MaterializeK);
+    let sigma2s: Vec<f64> = (0..b).map(|i| 0.1 + 0.05 * i as f64).collect();
+    let batch = BatchOp::shared(&cov, sigma2s);
+    let bs: Vec<Mat> = (0..b)
+        .map(|_| Mat::from_fn(n, 2, |_, _| rng.normal()))
+        .collect();
+    let b_refs: Vec<&Mat> = bs.iter().collect();
+    let id = IdentityPrecond;
+    let preconds: Vec<&dyn Preconditioner> =
+        (0..b).map(|_| &id as &dyn Preconditioner).collect();
+    let opts = MbcgOptions {
+        max_iters: 8,
+        tol: 0.0,
+        n_solve_only: usize::MAX,
+    };
+    let mut ws = MbcgWorkspace::new();
+    // call 1: warms the pool, the K panel, the workspace, and per-thread
+    // scratch; its loop may allocate while those come up
+    let (_r1, _s1) = mbcg_batch_stats_ws(&batch, &b_refs, &preconds, &opts, &mut ws);
+    // call 2: the steady state a training loop or serving tick lives in
+    let (r2, s2) = mbcg_batch_stats_ws(&batch, &b_refs, &preconds, &opts, &mut ws);
+    assert_eq!(
+        s2.loop_allocs, 0,
+        "warm batched iteration loop must not touch the heap (saw {} allocations)",
+        s2.loop_allocs
+    );
+    // and it still solves: parity against the one-shot entry point
+    let (r_ref, _) = bbmm_gp::linalg::mbcg::mbcg_batch_stats(&batch, &b_refs, &preconds, &opts);
+    for (a, c) in r2.iter().zip(r_ref.iter()) {
+        assert_eq!(a.iterations, c.iterations);
+        assert!(a.solves.max_abs_diff(&c.solves) == 0.0);
+    }
+}
