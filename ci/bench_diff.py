@@ -1,65 +1,174 @@
 #!/usr/bin/env python3
-"""Non-blocking perf-regression alert: diff a fresh BENCH_mmm.json against
-the committed baseline and flag any metric that moved more than the
-threshold in the bad direction (GFLOP/s or speedups falling). Exits 1 on
-an alert so the CI step (marked continue-on-error) shows a warning without
-blocking the PR — CI runners are noisy, so this is a tripwire, not a gate.
+"""Perf-regression gate: diff fresh BENCH_*.json artifacts against their
+committed baselines and fail when a rate/speedup metric falls more than
+the threshold below baseline.
+
+Two modes:
+
+  pair mode (legacy):   bench_diff.py CURRENT.json BASELINE.json
+  directory mode:       bench_diff.py --results rust/results --baselines rust/benches
+
+Directory mode diffs every ``BENCH_<name>.json`` under ``--results``
+against ``BENCH_<name>_baseline.json`` under ``--baselines``; a bench with
+no committed baseline yet is reported and skipped (new benches land before
+their first baseline).
+
+The schema is duck-typed: every list-valued top-level key holds cases,
+each case's identity is its identifying keys (``n``, ``b``, ``t``,
+``rank``, …) and its metrics are the higher-is-better keys (``gflops``,
+``speedup``, ``*_speedup``, ``qps``). Absolute seconds are deliberately
+NOT diffed — they are runner-dependent; only rates and ratios gate.
+
+The step is blocking. ``--warn-only`` prints the same report but exits 0 —
+CI offers it as an escape hatch (label-gated) for PRs that intentionally
+trade a benched metric away.
 """
 
 import argparse
+import glob
 import json
+import os
 import sys
 
+# keys that identify a case within its section (order fixes the label)
+IDENTITY_KEYS = ("name", "n", "b", "t", "r", "rank", "m", "d", "iters")
+# higher-is-better metrics; anything else (raw seconds, counts) is ignored
+METRIC_KEYS = ("gflops", "speedup", "qps")
+METRIC_SUFFIXES = ("_speedup", "_gflops", "_qps")
 
-def index_cases(doc):
+
+def is_metric(key):
+    return key in METRIC_KEYS or key.endswith(METRIC_SUFFIXES)
+
+
+def case_identity(section, case):
+    ident = [("section", section)]
+    for k in IDENTITY_KEYS:
+        if k in case and not is_metric(k):
+            ident.append((k, case[k]))
+    return tuple(ident)
+
+
+def case_metrics(case):
+    return {
+        k: v
+        for k, v in case.items()
+        if is_metric(k) and isinstance(v, (int, float)) and not isinstance(v, bool)
+    }
+
+
+def index_doc(doc):
+    """Map case identity -> {metric: value} for every list section."""
     out = {}
-    for c in doc.get("gemm", []):
-        out[("gemm", c["n"])] = {"gflops": c["gflops"]}
-    for c in doc.get("solves", []):
-        out[("solve", c["n"], c["t"])] = {
-            "cached_speedup": c.get("cached_speedup"),
-            "materialize_speedup": c.get("materialize_speedup"),
-        }
+    for section, val in doc.items():
+        if not isinstance(val, list):
+            continue
+        for case in val:
+            if not isinstance(case, dict):
+                continue
+            metrics = case_metrics(case)
+            if metrics:
+                out[case_identity(section, case)] = metrics
     return out
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("current")
-    ap.add_argument("baseline")
-    ap.add_argument("--threshold", type=float, default=0.20)
-    args = ap.parse_args()
+def fmt_key(key):
+    return "/".join(f"{k}={v}" for k, v in key)
 
-    with open(args.current) as f:
-        cur = index_cases(json.load(f))
-    with open(args.baseline) as f:
-        base = index_cases(json.load(f))
 
+def diff_indexed(cur, base, threshold):
+    """Alerts for baseline metrics that regressed or went missing."""
     alerts = []
     for key, base_metrics in base.items():
         cur_metrics = cur.get(key)
         if cur_metrics is None:
-            alerts.append(f"{key}: missing from current run")
+            alerts.append(f"{fmt_key(key)}: case missing from current run")
             continue
         for name, bval in base_metrics.items():
+            if bval is None or bval <= 0:
+                continue
             cval = cur_metrics.get(name)
-            if bval is None or cval is None or bval <= 0:
+            if cval is None:
+                alerts.append(f"{fmt_key(key)} {name}: metric missing from current run")
                 continue
             ratio = cval / bval
-            if ratio < 1.0 - args.threshold:
+            if ratio < 1.0 - threshold:
                 alerts.append(
-                    f"{key} {name}: {cval:.3f} vs baseline {bval:.3f} "
+                    f"{fmt_key(key)} {name}: {cval:.3f} vs baseline {bval:.3f} "
                     f"({(1.0 - ratio) * 100:.0f}% slower)"
                 )
+    return alerts
 
+
+def diff_files(current_path, baseline_path, threshold):
+    with open(current_path) as f:
+        cur = index_doc(json.load(f))
+    with open(baseline_path) as f:
+        base = index_doc(json.load(f))
+    return diff_indexed(cur, base, threshold), len(base)
+
+
+def run_pair(args):
+    alerts, checked = diff_files(args.current, args.baseline, args.threshold)
+    return alerts, checked, []
+
+
+def run_dirs(args):
+    alerts, checked, skipped = [], 0, []
+    pattern = os.path.join(args.results, "BENCH_*.json")
+    found = sorted(glob.glob(pattern))
+    if not found:
+        print(f"ERROR: no BENCH_*.json artifacts under {args.results}", file=sys.stderr)
+        sys.exit(2)
+    for path in found:
+        bench = os.path.basename(path)[len("BENCH_") : -len(".json")]
+        baseline = os.path.join(args.baselines, f"BENCH_{bench}_baseline.json")
+        if not os.path.exists(baseline):
+            skipped.append(bench)
+            continue
+        file_alerts, n = diff_files(path, baseline, args.threshold)
+        alerts.extend(f"[{bench}] {a}" for a in file_alerts)
+        checked += n
+    return alerts, checked, skipped
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", nargs="?", help="fresh BENCH json (pair mode)")
+    ap.add_argument("baseline", nargs="?", help="committed baseline json (pair mode)")
+    ap.add_argument("--results", help="directory of fresh BENCH_*.json artifacts")
+    ap.add_argument("--baselines", help="directory of BENCH_*_baseline.json files")
+    ap.add_argument("--threshold", type=float, default=0.20)
+    ap.add_argument(
+        "--warn-only",
+        action="store_true",
+        help="report regressions but exit 0 (CI escape hatch)",
+    )
+    args = ap.parse_args()
+
+    if args.results and args.baselines:
+        alerts, checked, skipped = run_dirs(args)
+    elif args.current and args.baseline:
+        alerts, checked, skipped = run_pair(args)
+    else:
+        ap.error("need either CURRENT BASELINE or --results DIR --baselines DIR")
+        return  # unreachable; keeps linters happy
+
+    for bench in skipped:
+        print(f"note: bench '{bench}' has no committed baseline yet — skipped")
     if alerts:
-        print("PERF ALERT (non-blocking): metrics regressed past "
-              f"±{args.threshold * 100:.0f}% of the committed baseline:")
+        kind = "PERF ALERT (warn-only)" if args.warn_only else "PERF REGRESSION"
+        print(
+            f"{kind}: metrics fell more than {args.threshold * 100:.0f}% "
+            "below the committed baseline:"
+        )
         for a in alerts:
             print(f"  - {a}")
-        sys.exit(1)
-    print(f"perf within ±{args.threshold * 100:.0f}% of baseline "
-          f"({len(base)} cases checked)")
+        sys.exit(0 if args.warn_only else 1)
+    print(
+        f"perf within -{args.threshold * 100:.0f}% of baseline "
+        f"({checked} cases checked, {len(skipped)} bench(es) without baselines)"
+    )
 
 
 if __name__ == "__main__":

@@ -1,0 +1,152 @@
+#!/usr/bin/env python3
+"""Unit tests for ci/bench_diff.py (run with `python3 ci/test_bench_diff.py`
+or `python3 -m pytest ci/test_bench_diff.py -q`). Covers the schema
+duck-typing, missing-key alerts, new-bench skips, the threshold edge, and
+the warn-only escape hatch."""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import bench_diff  # noqa: E402
+
+SCRIPT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "bench_diff.py")
+
+
+def doc(cases, section="cases", **top):
+    d = {"bench": "t", section: cases}
+    d.update(top)
+    return d
+
+
+class IndexDocTest(unittest.TestCase):
+    def test_generic_schema_picks_rate_metrics_only(self):
+        idx = bench_diff.index_doc(
+            doc([{"n": 2000, "rank": 64, "speedup": 12.0, "solve_query_s": 0.4, "build_s": 1.0}])
+        )
+        key = (("section", "cases"), ("n", 2000), ("rank", 64))
+        # absolute seconds are runner-dependent and must NOT gate
+        self.assertEqual(idx, {key: {"speedup": 12.0}})
+
+    def test_legacy_mmm_schema_indexes_both_sections(self):
+        idx = bench_diff.index_doc(
+            {
+                "bench": "mmm_microbench",
+                "threads": 2,
+                "gemm": [{"n": 256, "gflops": 4.0}],
+                "solves": [{"n": 2000, "t": 8, "cached_speedup": 1.3, "materialize_speedup": 1.8}],
+            }
+        )
+        self.assertEqual(len(idx), 2)
+        self.assertIn((("section", "gemm"), ("n", 256)), idx)
+        solves = idx[(("section", "solves"), ("n", 2000), ("t", 8))]
+        self.assertEqual(solves, {"cached_speedup": 1.3, "materialize_speedup": 1.8})
+
+
+class DiffTest(unittest.TestCase):
+    def diff(self, cur_cases, base_cases, threshold=0.20):
+        return bench_diff.diff_indexed(
+            bench_diff.index_doc(doc(cur_cases)),
+            bench_diff.index_doc(doc(base_cases)),
+            threshold,
+        )
+
+    def test_regression_past_threshold_alerts(self):
+        alerts = self.diff([{"n": 1, "speedup": 7.9}], [{"n": 1, "speedup": 10.0}])
+        self.assertEqual(len(alerts), 1)
+        self.assertIn("21% slower", alerts[0])
+
+    def test_exactly_at_threshold_passes(self):
+        # ratio == 1 - threshold is NOT "more than threshold slower"
+        self.assertEqual(self.diff([{"n": 1, "speedup": 8.0}], [{"n": 1, "speedup": 10.0}]), [])
+
+    def test_just_inside_threshold_passes(self):
+        self.assertEqual(self.diff([{"n": 1, "speedup": 8.01}], [{"n": 1, "speedup": 10.0}]), [])
+
+    def test_improvement_passes(self):
+        self.assertEqual(self.diff([{"n": 1, "speedup": 99.0}], [{"n": 1, "speedup": 10.0}]), [])
+
+    def test_missing_case_alerts(self):
+        alerts = self.diff([{"n": 1, "speedup": 10.0}], [{"n": 1, "speedup": 10.0}, {"n": 2, "speedup": 5.0}])
+        self.assertEqual(len(alerts), 1)
+        self.assertIn("case missing", alerts[0])
+
+    def test_missing_metric_alerts(self):
+        alerts = self.diff([{"n": 1, "qps": 100.0}], [{"n": 1, "qps": 100.0, "speedup": 3.0}])
+        self.assertEqual(len(alerts), 1)
+        self.assertIn("metric missing", alerts[0])
+
+    def test_extra_current_cases_and_metrics_are_ignored(self):
+        # fresh runs may grow the grid before the baseline is refreshed
+        alerts = self.diff(
+            [{"n": 1, "speedup": 10.0, "extra_speedup": 1.0}, {"n": 2, "speedup": 1.0}],
+            [{"n": 1, "speedup": 10.0}],
+        )
+        self.assertEqual(alerts, [])
+
+    def test_nonpositive_baseline_is_skipped(self):
+        self.assertEqual(self.diff([{"n": 1, "speedup": 0.1}], [{"n": 1, "speedup": 0.0}]), [])
+
+
+class CliTest(unittest.TestCase):
+    def setUp(self):
+        self.tmp = tempfile.TemporaryDirectory()
+        self.results = os.path.join(self.tmp.name, "results")
+        self.baselines = os.path.join(self.tmp.name, "benches")
+        os.makedirs(self.results)
+        os.makedirs(self.baselines)
+
+    def tearDown(self):
+        self.tmp.cleanup()
+
+    def write(self, dirname, fname, cases):
+        with open(os.path.join(dirname, fname), "w") as f:
+            json.dump(doc(cases), f)
+
+    def run_cli(self, *argv):
+        return subprocess.run(
+            [sys.executable, SCRIPT, *argv], capture_output=True, text=True
+        )
+
+    def test_dir_mode_gates_regressions(self):
+        self.write(self.results, "BENCH_love.json", [{"n": 8000, "speedup": 2.0}])
+        self.write(self.baselines, "BENCH_love_baseline.json", [{"n": 8000, "speedup": 10.0}])
+        p = self.run_cli("--results", self.results, "--baselines", self.baselines)
+        self.assertEqual(p.returncode, 1, p.stdout + p.stderr)
+        self.assertIn("[love]", p.stdout)
+
+    def test_dir_mode_skips_new_bench_without_baseline(self):
+        self.write(self.results, "BENCH_new.json", [{"n": 100, "speedup": 1.0}])
+        p = self.run_cli("--results", self.results, "--baselines", self.baselines)
+        self.assertEqual(p.returncode, 0, p.stdout + p.stderr)
+        self.assertIn("no committed baseline", p.stdout)
+
+    def test_warn_only_reports_but_passes(self):
+        self.write(self.results, "BENCH_love.json", [{"n": 8000, "speedup": 2.0}])
+        self.write(self.baselines, "BENCH_love_baseline.json", [{"n": 8000, "speedup": 10.0}])
+        p = self.run_cli("--results", self.results, "--baselines", self.baselines, "--warn-only")
+        self.assertEqual(p.returncode, 0, p.stdout + p.stderr)
+        self.assertIn("warn-only", p.stdout)
+
+    def test_pair_mode_still_works(self):
+        cur = os.path.join(self.tmp.name, "cur.json")
+        base = os.path.join(self.tmp.name, "base.json")
+        with open(cur, "w") as f:
+            json.dump(doc([{"n": 1, "gflops": 4.1}]), f)
+        with open(base, "w") as f:
+            json.dump(doc([{"n": 1, "gflops": 4.0}]), f)
+        p = self.run_cli(cur, base)
+        self.assertEqual(p.returncode, 0, p.stdout + p.stderr)
+        self.assertIn("1 cases checked", p.stdout)
+
+    def test_empty_results_dir_is_a_usage_error(self):
+        p = self.run_cli("--results", self.results, "--baselines", self.baselines)
+        self.assertEqual(p.returncode, 2)
+
+
+if __name__ == "__main__":
+    unittest.main()

@@ -46,7 +46,10 @@ fn op_norm(apply: impl Fn(&[f64]) -> Vec<f64>, n: usize, iters: usize, rng: &mut
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
-    let n = args.usize_or("n", 800).unwrap();
+    // BBMM_EXAMPLE_SMOKE: the CI examples job runs every example end
+    // to end at toy sizes — same code path, seconds not minutes
+    let smoke = std::env::var("BBMM_EXAMPLE_SMOKE").is_ok();
+    let n = args.usize_or("n", if smoke { 200 } else { 800 }).unwrap();
     let noise = args.f64_or("noise", 1e-3).unwrap();
     let mut rng = Rng::new(3);
     // univariate RBF kernel — the setting of Lemma 1

@@ -22,7 +22,10 @@ use bbmm_gp::util::Rng;
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
-    let n = args.usize_or("n", 20_000).unwrap();
+    // BBMM_EXAMPLE_SMOKE: the CI examples job runs every example end
+    // to end at toy sizes — same code path, seconds not minutes
+    let smoke = std::env::var("BBMM_EXAMPLE_SMOKE").is_ok();
+    let n = args.usize_or("n", if smoke { 2_000 } else { 20_000 }).unwrap();
     let d = args.usize_or("d", 20).unwrap();
     let noise: f64 = 0.05;
     let prior_var = 10.0;

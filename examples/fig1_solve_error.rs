@@ -36,7 +36,12 @@ fn rel_residual(k: &Mat, x: &[f64], y: &[f64]) -> f64 {
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
-    let sizes: &[usize] = if args.flag("full") {
+    // BBMM_EXAMPLE_SMOKE: the CI examples job runs every example end to
+    // end at toy sizes — same code path, seconds not minutes
+    let smoke = std::env::var("BBMM_EXAMPLE_SMOKE").is_ok();
+    let sizes: &[usize] = if smoke {
+        &[250, 500]
+    } else if args.flag("full") {
         &[250, 500, 1000, 2000, 3500]
     } else {
         &[250, 500, 1000, 2000]

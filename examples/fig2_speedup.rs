@@ -37,6 +37,17 @@ fn main() {
     }
 }
 
+/// BBMM_EXAMPLE_SMOKE: the CI examples job runs every example end to end
+/// at toy sizes — same code path, seconds not minutes
+fn smoke() -> bool {
+    std::env::var("BBMM_EXAMPLE_SMOKE").is_ok()
+}
+
+/// per-measurement time budget: slashed in smoke mode
+fn budget() -> f64 {
+    if smoke() { 0.2 } else { 3.0 }
+}
+
 /// quick mode caps n so the whole figure regenerates in minutes; --full
 /// runs the paper's dataset sizes
 fn capped(specs: &[DatasetSpec], cap: usize, full: bool) -> Vec<DatasetSpec> {
@@ -53,16 +64,16 @@ fn capped(specs: &[DatasetSpec], cap: usize, full: bool) -> Vec<DatasetSpec> {
 fn run_exact(full: bool) {
     println!("\n=== Figure 2 (left): Exact GPs — BBMM vs Cholesky ===\n");
     let mut table = Table::new(&["dataset", "n", "d", "chol_s", "bbmm_s", "speedup"]);
-    for spec in capped(UCI_EXACT, 1200, full) {
+    for spec in capped(UCI_EXACT, if smoke() { 300 } else { 1200 }, full) {
         let ds = generate(&spec, 0);
         let y = ds.y_train.clone();
         let mut op = DenseKernelOp::new(ds.x_train.clone(), Box::new(Rbf::new(0.5, 1.0)), 0.05);
         let _ = &mut op;
-        let chol = bench_budget(&format!("exact/chol/{}", spec.name), 3.0, || {
+        let chol = bench_budget(&format!("exact/chol/{}", spec.name), budget(), || {
             let _ = CholeskyEngine.mll_and_grad(&op, &y);
         });
         let mut bbmm_engine = BbmmEngine::default();
-        let bbmm = bench_budget(&format!("exact/bbmm/{}", spec.name), 3.0, || {
+        let bbmm = bench_budget(&format!("exact/bbmm/{}", spec.name), budget(), || {
             let _ = bbmm_engine.mll_and_grad(&op, &y);
         });
         table.row(&[
@@ -80,9 +91,15 @@ fn run_exact(full: bool) {
 
 fn run_sgpr(full: bool) {
     println!("\n=== Figure 2 (middle): SGPR — BBMM vs Woodbury-Cholesky ===\n");
-    let m_inducing = if full { 300 } else { 150 };
+    let m_inducing = if smoke() {
+        50
+    } else if full {
+        300
+    } else {
+        150
+    };
     let mut table = Table::new(&["dataset", "n", "m", "chol_s", "bbmm_s", "speedup"]);
-    for spec in capped(UCI_SGPR, 8000, full) {
+    for spec in capped(UCI_SGPR, if smoke() { 800 } else { 8000 }, full) {
         let ds = generate(&spec, 0);
         let y = ds.y_train.clone();
         let mut rng = Rng::new(1);
@@ -92,13 +109,13 @@ fn run_sgpr(full: bool) {
             u.row_mut(r).copy_from_slice(ds.x_train.row(src));
         }
         let op = SgprOp::new(ds.x_train.clone(), u, Box::new(Rbf::new(0.5, 1.0)), 0.05);
-        let chol = bench_budget(&format!("sgpr/chol/{}", spec.name), 3.0, || {
+        let chol = bench_budget(&format!("sgpr/chol/{}", spec.name), budget(), || {
             let _ = SgprCholeskyEngine.mll_and_grad_sgpr(&op, &y);
         });
         // SGPR's SoR system is well-conditioned; the paper's SGPR runs skip
         // the pivoted-Cholesky preconditioner (rank 0)
         let mut engine = BbmmEngine::new(20, 10, 0, 7);
-        let bbmm = bench_budget(&format!("sgpr/bbmm/{}", spec.name), 3.0, || {
+        let bbmm = bench_budget(&format!("sgpr/bbmm/{}", spec.name), budget(), || {
             let _ = engine.mll_and_grad(&op, &y);
         });
         table.row(&[
@@ -116,9 +133,15 @@ fn run_sgpr(full: bool) {
 
 fn run_ski(full: bool) {
     println!("\n=== Figure 2 (right): SKI+DKL — BBMM vs Dong et al. ===\n");
-    let grid_m = if full { 10_000 } else { 2_000 };
+    let grid_m = if smoke() {
+        500
+    } else if full {
+        10_000
+    } else {
+        2_000
+    };
     let mut table = Table::new(&["dataset", "n", "grid_m", "dong_s", "bbmm_s", "speedup"]);
-    for spec in capped(UCI_SKI, 60_000, full) {
+    for spec in capped(UCI_SKI, if smoke() { 2_000 } else { 60_000 }, full) {
         let ds = generate(&spec, 0);
         let y = ds.y_train.clone();
         // deep kernel: random MLP features → 1-D grid (paper's SKI+DKL)
@@ -128,11 +151,11 @@ fn run_ski(full: bool) {
         let z: Vec<f64> = (0..ds.n_train()).map(|i| feat.get(i, 0)).collect();
         let op = SkiOp::new(z, grid_m, Box::new(Rbf::new(0.3, 1.0)), 0.05);
         let mut dong_engine = DongEngine::new(20, 10, 3);
-        let dong = bench_budget(&format!("ski/dong/{}", spec.name), 3.0, || {
+        let dong = bench_budget(&format!("ski/dong/{}", spec.name), budget(), || {
             let _ = dong_engine.mll_and_grad(&op, &y);
         });
         let mut bbmm_engine = BbmmEngine::new(20, 10, 0, 3);
-        let bbmm = bench_budget(&format!("ski/bbmm/{}", spec.name), 3.0, || {
+        let bbmm = bench_budget(&format!("ski/bbmm/{}", spec.name), budget(), || {
             let _ = bbmm_engine.mll_and_grad(&op, &y);
         });
         table.row(&[

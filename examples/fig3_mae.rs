@@ -124,11 +124,39 @@ fn sgpr_mae(ds: &bbmm_gp::data::Dataset, m: usize, use_bbmm: bool, iters: usize)
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
+    // BBMM_EXAMPLE_SMOKE: the CI examples job runs every example end
+    // to end at toy sizes — same code path, seconds not minutes
+    let smoke = std::env::var("BBMM_EXAMPLE_SMOKE").is_ok();
     let full = args.flag("full");
-    let iters = args.usize_or("iters", if full { 25 } else { 15 }).unwrap();
-    let cap_exact = if full { usize::MAX } else { 900 };
-    let cap_sgpr = if full { usize::MAX } else { 5000 };
-    let m_inducing = if full { 300 } else { 100 };
+    let default_iters = if full {
+        25
+    } else if smoke {
+        6
+    } else {
+        15
+    };
+    let iters = args.usize_or("iters", default_iters).unwrap();
+    let cap_exact = if full {
+        usize::MAX
+    } else if smoke {
+        250
+    } else {
+        900
+    };
+    let cap_sgpr = if full {
+        usize::MAX
+    } else if smoke {
+        800
+    } else {
+        5000
+    };
+    let m_inducing = if full {
+        300
+    } else if smoke {
+        40
+    } else {
+        100
+    };
 
     for kernel_name in ["rbf", "matern52"] {
         println!("\n=== Figure 3: Exact GPs, {kernel_name} kernel ===\n");

@@ -182,11 +182,19 @@ fn mae_tradeoff(name: &str, op: &DenseKernelOp, ds: &Dataset, feat_test: &Mat) {
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
-    let n = args
-        .usize_or("n", if args.flag("full") { 4000 } else { 1500 })
-        .unwrap();
-    let train_iters = args.usize_or("iters", 15).unwrap();
-    let max_cg = args.usize_or("max-cg", 80).unwrap();
+    // BBMM_EXAMPLE_SMOKE: the CI examples job runs every example end
+    // to end at toy sizes — same code path, seconds not minutes
+    let smoke = std::env::var("BBMM_EXAMPLE_SMOKE").is_ok();
+    let default_n = if args.flag("full") {
+        4000
+    } else if smoke {
+        400
+    } else {
+        1500
+    };
+    let n = args.usize_or("n", default_n).unwrap();
+    let train_iters = args.usize_or("iters", if smoke { 4 } else { 15 }).unwrap();
+    let max_cg = args.usize_or("max-cg", if smoke { 30 } else { 80 }).unwrap();
 
     // NOTE on hyperparameters: the paper trains the full deep kernel
     // (MLP + GP hypers) before measuring convergence. Our feature

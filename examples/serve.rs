@@ -21,9 +21,12 @@ use std::sync::Arc;
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
-    let n = args.usize_or("n", 800).unwrap();
-    let clients = args.usize_or("clients", 16).unwrap();
-    let reqs_per_client = args.usize_or("requests", 50).unwrap();
+    // BBMM_EXAMPLE_SMOKE: the CI examples job runs every example end
+    // to end at toy sizes — same code path, seconds not minutes
+    let smoke = std::env::var("BBMM_EXAMPLE_SMOKE").is_ok();
+    let n = args.usize_or("n", if smoke { 200 } else { 800 }).unwrap();
+    let clients = args.usize_or("clients", if smoke { 8 } else { 16 }).unwrap();
+    let reqs_per_client = args.usize_or("requests", if smoke { 10 } else { 50 }).unwrap();
 
     // ---- train ----------------------------------------------------------
     let ds = generate_sized("serve_demo", n, 4, 3);

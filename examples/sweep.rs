@@ -20,9 +20,12 @@ use bbmm_gp::util::Timer;
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
-    let n = args.usize_or("n", 400).unwrap();
-    let restarts = args.usize_or("restarts", 6).unwrap();
-    let iters = args.usize_or("iters", 20).unwrap();
+    // BBMM_EXAMPLE_SMOKE: the CI examples job runs every example end
+    // to end at toy sizes — same code path, seconds not minutes
+    let smoke = std::env::var("BBMM_EXAMPLE_SMOKE").is_ok();
+    let n = args.usize_or("n", if smoke { 150 } else { 400 }).unwrap();
+    let restarts = args.usize_or("restarts", if smoke { 2 } else { 6 }).unwrap();
+    let iters = args.usize_or("iters", if smoke { 5 } else { 20 }).unwrap();
 
     let ds = generate_sized("sweep_demo", n, 3, 7);
     println!("dataset: n_train={} d={}", ds.n_train(), ds.dim());

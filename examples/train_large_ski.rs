@@ -23,11 +23,21 @@ use bbmm_gp::util::{Rng, Timer};
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
+    // BBMM_EXAMPLE_SMOKE: the CI examples job runs every example end
+    // to end at toy sizes — same code path, seconds not minutes
+    let smoke = std::env::var("BBMM_EXAMPLE_SMOKE").is_ok();
     let full = args.flag("full");
-    let n = args.usize_or("n", if full { 515_345 } else { 100_000 }).unwrap();
+    let default_n = if full {
+        515_345
+    } else if smoke {
+        5_000
+    } else {
+        100_000
+    };
+    let n = args.usize_or("n", default_n).unwrap();
     let d = args.usize_or("d", if full { 90 } else { 8 }).unwrap();
-    let grid_m = args.usize_or("inducing", 10_000).unwrap();
-    let iters = args.usize_or("iters", 40).unwrap();
+    let grid_m = args.usize_or("inducing", if smoke { 1_000 } else { 10_000 }).unwrap();
+    let iters = args.usize_or("iters", if smoke { 5 } else { 40 }).unwrap();
 
     println!("=== end-to-end SKI+DKL training: n={n} d={d} grid_m={grid_m} ===");
     // Workload: a single-index regression task y = g(wᵀx) + ε — the

@@ -1,0 +1,162 @@
+//! Bench: **LOVE posterior cache vs per-query solve** — the constant-time
+//! predictive-variance payoff measured.
+//!
+//! The serving regime: a trained exact GP answers single-point
+//! mean+variance queries. The baseline pays one dispatched mBCG solve per
+//! query (cross build + `K̂⁻¹[y k_*ᵀ]`); the LOVE path freezes the
+//! posterior once (`α = K̂⁻¹y` + rank-r Lanczos root) and answers every
+//! query with two skinny GEMMs — O(n·iters·n) → O(n·r) per query.
+//!
+//! Parity is gated before timing: LOVE mean/variance must match the
+//! solve path to 1e-5 at every probe (d=1 RBF data keeps the effective
+//! spectrum well inside rank 64, so the cached root is near-exact).
+//!
+//! Grid: n ∈ {2k, 8k}. Writes `results/BENCH_love.json` (the CI
+//! perf artifact) plus the usual table/CSV pair. `BBMM_BENCH_QUICK=1`
+//! cuts per-case samples, not the grid.
+
+use bbmm_gp::bench::{bench, Table};
+use bbmm_gp::gp::LovePosterior;
+use bbmm_gp::kernels::{Kernel, KernelCovOp, Rbf};
+use bbmm_gp::linalg::op::{solve, AddedDiagOp, SolveOptions};
+use bbmm_gp::tensor::Mat;
+use bbmm_gp::util::par;
+use bbmm_gp::util::Rng;
+use std::time::Instant;
+
+const RANK: usize = 64;
+const SOLVE_QUERIES: usize = 2;
+const LOVE_QUERIES: usize = 64;
+
+struct Case {
+    n: usize,
+    solve_query_s: f64,
+    love_query_s: f64,
+    build_s: f64,
+    speedup: f64,
+}
+
+fn cross_row(kernel: &dyn Kernel, x: &Mat, xt: f64) -> Mat {
+    Mat::from_fn(1, x.rows(), |_, j| kernel.eval(&[xt], x.row(j)))
+}
+
+fn main() {
+    let quick = std::env::var("BBMM_BENCH_QUICK").is_ok();
+    let samples = if quick { 2 } else { 3 };
+    let sizes = [2_000usize, 8_000];
+    println!(
+        "love_predict: rank={RANK} samples={samples} threads={}\n",
+        par::num_threads()
+    );
+
+    let opts = SolveOptions {
+        max_iters: 50,
+        tol: 1e-8,
+        precond_rank: 5,
+    };
+    let mut cases = Vec::new();
+    let mut table = Table::new(&["n", "solve_query_s", "love_query_s", "build_s", "speedup"]);
+    for &n in &sizes {
+        let mut rng = Rng::new(n as u64);
+        let mut x_raw: Vec<f64> = (0..n).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        x_raw.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let x = Mat::from_vec(n, 1, x_raw);
+        let y: Vec<f64> = (0..n).map(|i| (4.0 * x.get(i, 0)).sin() + 0.05 * rng.normal()).collect();
+        let kernel = Rbf::new(0.4, 1.0);
+        let cov = KernelCovOp::new(x.clone(), Box::new(Rbf::new(0.4, 1.0)));
+        let op = AddedDiagOp::new(cov, 0.05);
+        let probes: Vec<f64> = (0..LOVE_QUERIES).map(|_| rng.uniform_in(-0.9, 0.9)).collect();
+
+        // freeze the posterior once — this is the cost LOVE amortises
+        let t0 = Instant::now();
+        let post = LovePosterior::build(&op, &y, RANK, &opts);
+        let build_s = t0.elapsed().as_secs_f64();
+
+        // parity gate before timing: cached-root answers must match the
+        // per-query solve path
+        for &xt in probes.iter().take(4) {
+            let k_star = cross_row(&kernel, &x, xt);
+            let kss = kernel.eval(&[xt], &[xt]);
+            let love = post.predict(&k_star, &[kss]);
+            let reference =
+                bbmm_gp::gp::predict::predict(&k_star, &[kss], |m| solve(&op, m, &opts), &y);
+            let dm = (love.mean[0] - reference.mean[0]).abs();
+            let dv = (love.var[0] - reference.var[0]).abs() / reference.var[0].abs().max(1e-9);
+            assert!(dm < 1e-5, "n={n} x={xt}: mean diverged {dm}");
+            assert!(dv < 1e-5, "n={n} x={xt}: var diverged {dv}");
+        }
+
+        let solved = bench(&format!("predict/solve/n{n}"), 1, samples, || {
+            for &xt in probes.iter().take(SOLVE_QUERIES) {
+                let k_star = cross_row(&kernel, &x, xt);
+                let kss = kernel.eval(&[xt], &[xt]);
+                let _ = bbmm_gp::gp::predict::predict(
+                    &k_star,
+                    &[kss],
+                    |m| solve(&op, m, &opts),
+                    &y,
+                );
+            }
+        });
+        let loved = bench(&format!("predict/love/n{n}"), 1, samples, || {
+            for &xt in &probes {
+                let k_star = cross_row(&kernel, &x, xt);
+                let kss = kernel.eval(&[xt], &[xt]);
+                let _ = post.predict(&k_star, &[kss]);
+            }
+        });
+        let solve_query_s = solved.median_s() / SOLVE_QUERIES as f64;
+        let love_query_s = loved.median_s() / LOVE_QUERIES as f64;
+        let speedup = solve_query_s / love_query_s;
+        table.row(&[
+            n.to_string(),
+            format!("{solve_query_s:.5}"),
+            format!("{love_query_s:.6}"),
+            format!("{build_s:.3}"),
+            format!("{speedup:.1}x"),
+        ]);
+        cases.push(Case {
+            n,
+            solve_query_s,
+            love_query_s,
+            build_s,
+            speedup,
+        });
+    }
+    println!();
+    table.print();
+    table.save("bench_love_predict").ok();
+    write_json(&cases).expect("write BENCH_love.json");
+    println!(
+        "\nwrote results/BENCH_love.json — expect speedup to grow with n \
+         (per-query solve pays O(n·iters·n); the cached root pays O(n·r))"
+    );
+}
+
+/// Hand-rolled JSON (no serde offline): the schema CI archives and
+/// `ci/bench_diff.py` gates against the committed baseline.
+fn write_json(cases: &[Case]) -> std::io::Result<()> {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"bench\": \"love_predict\",\n");
+    out.push_str(&format!("  \"threads\": {},\n", par::num_threads()));
+    out.push_str(&format!("  \"rank\": {RANK},\n"));
+    out.push_str("  \"cases\": [\n");
+    for (i, c) in cases.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"n\": {}, \"rank\": {}, \"solve_query_s\": {:.6}, \"love_query_s\": {:.8}, \
+             \"build_s\": {:.4}, \"speedup\": {:.3}}}{}\n",
+            c.n,
+            RANK,
+            c.solve_query_s,
+            c.love_query_s,
+            c.build_s,
+            c.speedup,
+            if i + 1 < cases.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n");
+    out.push_str("}\n");
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/BENCH_love.json", out)
+}

@@ -7,6 +7,10 @@
 //! ← 0.873,0.0021\n           (mean, variance)
 //! → wine:0.12,3.4,-1.0\n     (routed to the tenant named `wine`)
 //! ← 0.873,0.0021\n
+//! → VAR wine:0.12,3.4,-1.0\n (LOVE constant-time variance)
+//! ← 0.0021\n
+//! → SAMPLE 3 wine:0.12,3.4,-1.0\n
+//! ← 0.871,0.902,0.845\n      (posterior draws from the cached root)
 //! → TENANTS\n
 //! ← wine:11 airfoil:5\n      (name:dim per hosted tenant)
 //! → STATS\n
@@ -19,18 +23,27 @@
 //! ([`multi_served_predictor`]), every tick answers all tenants through
 //! **one** `BatchOp` dispatch with per-tenant solve plans cached across
 //! predict calls.
+//!
+//! With LOVE enabled ([`serve_with_love`] + a [`LoveServeCtx`]) the
+//! `VAR`/`SAMPLE` verbs bypass the batcher entirely: each is answered in
+//! O(n·r) from the tenant's cached [`LovePosterior`] — the point of the
+//! posterior cache is that these queries need no coalescing because they
+//! no longer pay a solve.
 
 use crate::coordinator::batcher::{DynamicBatcher, MultiPredictFn, PredictFn, TenantBatch};
+use crate::gp::posterior::{LovePosterior, PosteriorCache};
 use crate::gp::predict::{predict_batch_op, predict_with_plan, PosteriorQuery, Prediction};
 use crate::linalg::op::{
     solve_strategy, BatchOp, LinearOp, SolveOptions, SolvePlan, SolvePlanCache,
 };
 use crate::tensor::Mat;
+use crate::util::Rng;
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 /// Server configuration.
 pub struct ServerConfig {
@@ -84,6 +97,122 @@ pub trait ServableModel: Send + Sync {
             solve_strategy(self.op())
         )
     }
+}
+
+/// Shared LOVE serving state: the hosted models plus a per-tenant
+/// [`PosteriorCache`] keyed by tenant name. Connection handlers answer
+/// `VAR`/`SAMPLE` through it directly, and the LOVE tick predictors
+/// ([`served_predictor_love`] / [`multi_served_predictor_love`]) answer
+/// ordinary mean,variance lines from the same cached posteriors — one
+/// posterior build per tenant per hyperparameter setting, shared by every
+/// path.
+pub struct LoveServeCtx {
+    models: Vec<(String, Arc<dyn ServableModel>)>,
+    /// per-tenant operator fingerprints, computed once (served models are
+    /// immutable behind the Arc)
+    fps: Vec<u64>,
+    rank: usize,
+    opts: SolveOptions,
+    posteriors: Arc<PosteriorCache>,
+    /// sampler state shared across connection handlers
+    rng: Mutex<Rng>,
+}
+
+impl LoveServeCtx {
+    /// Bundle the hosted `models` (tenant order must match the batcher's
+    /// [`TenantSpec`](crate::coordinator::batcher::TenantSpec) order) with
+    /// a posterior cache at LOVE rank `rank`.
+    pub fn new(
+        models: Vec<(String, Arc<dyn ServableModel>)>,
+        rank: usize,
+        opts: SolveOptions,
+        posteriors: Arc<PosteriorCache>,
+        seed: u64,
+    ) -> Self {
+        assert!(rank > 0, "LOVE rank must be positive");
+        assert!(!models.is_empty(), "LoveServeCtx needs at least one model");
+        let fps = models.iter().map(|(_, m)| m.op().fingerprint()).collect();
+        LoveServeCtx {
+            models,
+            fps,
+            rank,
+            opts,
+            posteriors,
+            rng: Mutex::new(Rng::new(seed)),
+        }
+    }
+
+    /// Hosted tenant count.
+    pub fn tenant_count(&self) -> usize {
+        self.models.len()
+    }
+
+    /// Configured LOVE rank.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// The tenant's cached posterior (built on first use, O(1) after).
+    fn posterior_for(&self, tenant: usize) -> Arc<LovePosterior> {
+        let (name, m) = &self.models[tenant];
+        self.posteriors.get_or_build_with_fingerprint(
+            name,
+            self.fps[tenant],
+            m.op(),
+            m.y(),
+            self.rank,
+            &self.opts,
+        )
+    }
+
+    /// Mean + variance for a tenant's query block from the cached
+    /// posterior — two skinny GEMMs, no solve.
+    pub fn predict(&self, tenant: usize, xs: &Mat) -> Prediction {
+        let (_, m) = &self.models[tenant];
+        let k_star = m.cross(xs);
+        let diag = m.prior_diag(xs);
+        self.posterior_for(tenant).predict(&k_star, &diag)
+    }
+
+    /// Constant-time predictive variance at one point (the `VAR` verb).
+    pub fn variance(&self, tenant: usize, x: Vec<f64>) -> f64 {
+        let xs = Mat::from_vec(1, x.len(), x);
+        self.predict(tenant, &xs).var[0]
+    }
+
+    /// `k` posterior draws at one point from the cached root (the
+    /// `SAMPLE` verb).
+    pub fn sample(&self, tenant: usize, x: Vec<f64>, k: usize) -> Vec<f64> {
+        let (_, m) = &self.models[tenant];
+        let xs = Mat::from_vec(1, x.len(), x);
+        let k_star = m.cross(&xs);
+        let prior = Mat::from_vec(1, 1, vec![m.prior_diag(&xs)[0]]);
+        let post = self.posterior_for(tenant);
+        let mut rng = self.rng.lock().unwrap();
+        let draws = post.sample(&k_star, &prior, k, &mut rng);
+        draws.row(0).to_vec()
+    }
+
+    /// Posterior-cache counter summary (appended to `STATS`).
+    pub fn stats(&self) -> String {
+        self.posteriors.stats()
+    }
+}
+
+/// Single-model LOVE tick predictor: ordinary mean,variance lines are
+/// answered from the tenant-0 cached posterior instead of a per-batch
+/// solve.
+pub fn served_predictor_love(ctx: Arc<LoveServeCtx>) -> PredictFn {
+    Box::new(move |xs: &Mat| ctx.predict(0, xs))
+}
+
+/// Multi-tenant LOVE tick predictor: every tenant block in the tick is
+/// answered from that tenant's cached posterior — the batcher still
+/// coalesces, but a tick is b skinny GEMMs instead of a `BatchOp` solve.
+pub fn multi_served_predictor_love(ctx: Arc<LoveServeCtx>) -> MultiPredictFn {
+    Box::new(move |blocks: &[TenantBatch]| {
+        blocks.iter().map(|tb| ctx.predict(tb.tenant, &tb.xs)).collect()
+    })
 }
 
 /// Wrap a servable model into the batcher's [`PredictFn`]: each coalesced
@@ -183,6 +312,18 @@ pub fn serve(
     batcher: Arc<DynamicBatcher>,
     on_ready: impl FnOnce(std::net::SocketAddr),
 ) -> std::io::Result<()> {
+    serve_with_love(config, batcher, None, on_ready)
+}
+
+/// [`serve`] with an optional LOVE context: when present, the `VAR` and
+/// `SAMPLE` verbs are live and answered constant-time from the per-tenant
+/// posterior cache; when `None` they return `ERR LOVE disabled`.
+pub fn serve_with_love(
+    config: ServerConfig,
+    batcher: Arc<DynamicBatcher>,
+    love: Option<Arc<LoveServeCtx>>,
+    on_ready: impl FnOnce(std::net::SocketAddr),
+) -> std::io::Result<()> {
     let listener = TcpListener::bind(&config.addr)?;
     listener.set_nonblocking(true)?;
     if !config.operator.is_empty() {
@@ -195,7 +336,8 @@ pub fn serve(
         match listener.accept() {
             Ok((stream, _peer)) => {
                 let b = Arc::clone(&batcher);
-                handles.push(std::thread::spawn(move || handle_conn(stream, b)));
+                let l = love.clone();
+                handles.push(std::thread::spawn(move || handle_conn(stream, b, l)));
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 std::thread::sleep(std::time::Duration::from_millis(1));
@@ -209,7 +351,7 @@ pub fn serve(
     Ok(())
 }
 
-fn handle_conn(stream: TcpStream, batcher: Arc<DynamicBatcher>) {
+fn handle_conn(stream: TcpStream, batcher: Arc<DynamicBatcher>, love: Option<Arc<LoveServeCtx>>) {
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
@@ -220,7 +362,7 @@ fn handle_conn(stream: TcpStream, batcher: Arc<DynamicBatcher>) {
             Ok(l) => l,
             Err(_) => break,
         };
-        let response = handle_line(&line, &batcher);
+        let response = handle_request(&line, &batcher, love.as_deref());
         if writer.write_all(response.as_bytes()).is_err() {
             break;
         }
@@ -235,13 +377,50 @@ fn handle_conn(stream: TcpStream, batcher: Arc<DynamicBatcher>) {
 
 /// Pure request handler (unit-testable without sockets). A `name:` prefix
 /// routes the request to that tenant; bare feature lines go to tenant 0.
+/// Equivalent to [`handle_request`] with no LOVE context.
 pub fn handle_line(line: &str, batcher: &DynamicBatcher) -> String {
+    handle_request(line, batcher, None)
+}
+
+/// Route a `[name:]features` payload to a tenant and parse + dimension-
+/// check the feature vector (the shared front half of the `VAR`/`SAMPLE`
+/// paths). Errors come back as ready-to-send `ERR …` lines.
+fn parse_routed(payload: &str, batcher: &DynamicBatcher) -> Result<(usize, Vec<f64>), String> {
+    let (tenant, rest) = match payload.split_once(':') {
+        Some((name, rest)) => match batcher.tenant_index(name.trim()) {
+            Some(t) => (t, rest),
+            None => return Err(format!("ERR unknown tenant {:?}", name.trim())),
+        },
+        None => (0, payload),
+    };
+    let x: Vec<f64> = rest
+        .split(',')
+        .map(|f| f.trim().parse::<f64>())
+        .collect::<Result<_, _>>()
+        .map_err(|e| format!("ERR parse: {e}"))?;
+    if let Some(spec) = batcher.tenants().get(tenant) {
+        if x.len() != spec.dim {
+            return Err(format!("ERR dim: expected {} features, got {}", spec.dim, x.len()));
+        }
+    }
+    Ok((tenant, x))
+}
+
+/// [`handle_line`] with an optional LOVE context enabling the `VAR` and
+/// `SAMPLE` verbs (constant-time, answered outside the batcher — they pay
+/// no solve, so there is nothing to coalesce).
+pub fn handle_request(line: &str, batcher: &DynamicBatcher, love: Option<&LoveServeCtx>) -> String {
     let line = line.trim();
     if line.is_empty() {
         return "ERR empty request".to_string();
     }
     if line == "STATS" {
-        return batcher.metrics.summary();
+        let mut s = batcher.metrics.summary();
+        if let Some(ctx) = love {
+            s.push(' ');
+            s.push_str(&ctx.stats());
+        }
+        return s;
     }
     if line == "TENANTS" {
         return batcher
@@ -253,6 +432,57 @@ pub fn handle_line(line: &str, batcher: &DynamicBatcher) -> String {
     }
     if line == "QUIT" {
         return "BYE".to_string();
+    }
+    if let Some(rest) = line.strip_prefix("VAR ") {
+        let Some(ctx) = love else {
+            batcher.metrics.record_error();
+            return "ERR LOVE disabled".to_string();
+        };
+        return match parse_routed(rest, batcher) {
+            Err(e) => {
+                batcher.metrics.record_error();
+                e
+            }
+            Ok((tenant, x)) => {
+                let t0 = Instant::now();
+                let var = ctx.variance(tenant, x);
+                batcher.metrics.record_request(t0.elapsed().as_micros() as u64);
+                format!("{var:.9}")
+            }
+        };
+    }
+    if let Some(rest) = line.strip_prefix("SAMPLE ") {
+        let Some(ctx) = love else {
+            batcher.metrics.record_error();
+            return "ERR LOVE disabled".to_string();
+        };
+        let Some((k_str, payload)) = rest.trim().split_once(' ') else {
+            batcher.metrics.record_error();
+            return "ERR usage: SAMPLE <k> [tenant:]<features>".to_string();
+        };
+        let k: usize = match k_str.trim().parse() {
+            Ok(k) if k > 0 => k,
+            _ => {
+                batcher.metrics.record_error();
+                return format!("ERR sample count {:?} must be a positive integer", k_str.trim());
+            }
+        };
+        return match parse_routed(payload, batcher) {
+            Err(e) => {
+                batcher.metrics.record_error();
+                e
+            }
+            Ok((tenant, x)) => {
+                let t0 = Instant::now();
+                let draws = ctx.sample(tenant, x, k);
+                batcher.metrics.record_request(t0.elapsed().as_micros() as u64);
+                draws
+                    .iter()
+                    .map(|d| format!("{d:.9}"))
+                    .collect::<Vec<_>>()
+                    .join(",")
+            }
+        };
     }
     let (tenant, payload) = match line.split_once(':') {
         Some((name, rest)) => match batcher.tenant_index(name.trim()) {
@@ -405,6 +635,97 @@ mod tests {
         let want: f64 = kstar.iter().zip(alpha.iter()).map(|(a, b)| a * b).sum();
         let got: f64 = resp.split(',').next().unwrap().parse().unwrap();
         assert!((got - want).abs() < 1e-6, "{got} vs {want}");
+    }
+
+    #[test]
+    fn var_and_sample_verbs_answer_from_the_posterior_cache() {
+        use crate::kernels::{DenseKernelOp, Rbf};
+        use crate::util::Rng;
+
+        struct ExactModel {
+            op: DenseKernelOp,
+            y: Vec<f64>,
+        }
+        impl ServableModel for ExactModel {
+            fn op(&self) -> &dyn LinearOp {
+                &self.op
+            }
+            fn cross(&self, xs: &Mat) -> Mat {
+                self.op.cross(xs, self.op.x())
+            }
+            fn prior_diag(&self, xs: &Mat) -> Vec<f64> {
+                (0..xs.rows())
+                    .map(|i| self.op.kernel().eval(xs.row(i), xs.row(i)))
+                    .collect()
+            }
+            fn y(&self) -> &[f64] {
+                &self.y
+            }
+        }
+
+        let n = 50;
+        let mut rng = Rng::new(11);
+        let x = Mat::from_fn(n, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+        let y: Vec<f64> = (0..n).map(|i| (3.0 * x.get(i, 0)).sin()).collect();
+        let model = ExactModel {
+            op: DenseKernelOp::new(x, Box::new(Rbf::new(0.5, 1.0)), 0.1),
+            y,
+        };
+        // dense reference variance at the probe point
+        let kd = model.op.dense();
+        let xs = Mat::from_vec(1, 2, vec![0.3, -0.2]);
+        let k_star = model.cross(&xs);
+        let kss = model.prior_diag(&xs)[0];
+        let ch = crate::linalg::cholesky::Cholesky::new_with_jitter(&kd).unwrap();
+        let solved = ch.solve_mat(&k_star.transpose());
+        let quad: f64 = (0..n).map(|i| k_star.get(0, i) * solved.get(i, 0)).sum();
+        let want_var = kss - quad;
+
+        let opts = SolveOptions {
+            max_iters: 400,
+            tol: 1e-10,
+            precond_rank: 5,
+        };
+        let posteriors = Arc::new(PosteriorCache::new());
+        let ctx = Arc::new(LoveServeCtx::new(
+            vec![("default".to_string(), Arc::new(model) as Arc<dyn ServableModel>)],
+            n, // full rank ⇒ exact
+            opts,
+            Arc::clone(&posteriors),
+            1,
+        ));
+        let b = DynamicBatcher::new(
+            2,
+            BatchPolicy::default(),
+            served_predictor_love(Arc::clone(&ctx)),
+        );
+
+        // VAR answers the dense-reference variance constant-time
+        let resp = handle_request("VAR 0.3,-0.2", &b, Some(&ctx));
+        let got: f64 = resp.parse().expect(&resp);
+        assert!((got - want_var).abs() < 1e-6, "{got} vs {want_var}");
+        // the ordinary mean,var line agrees with VAR through the LOVE
+        // tick predictor
+        let line = handle_request("0.3,-0.2", &b, Some(&ctx));
+        let var_part: f64 = line.split(',').nth(1).unwrap().parse().unwrap();
+        assert!((var_part - got).abs() < 1e-9, "{line}");
+        // SAMPLE returns k finite draws
+        let resp = handle_request("SAMPLE 5 default:0.3,-0.2", &b, Some(&ctx));
+        let draws: Vec<f64> = resp.split(',').map(|d| d.parse().unwrap()).collect();
+        assert_eq!(draws.len(), 5);
+        assert!(draws.iter().all(|d| d.is_finite()));
+        // one posterior build served every verb
+        assert_eq!(posteriors.misses(), 1, "{}", posteriors.stats());
+        assert!(posteriors.hits() >= 2);
+        // protocol errors
+        assert!(handle_request("VAR 0.3,-0.2", &b, None).starts_with("ERR LOVE disabled"));
+        assert!(handle_request("SAMPLE 0 default:0.3,-0.2", &b, Some(&ctx)).starts_with("ERR"));
+        assert!(handle_request("SAMPLE x", &b, Some(&ctx)).starts_with("ERR"));
+        assert!(handle_request("VAR ghost:0.3,-0.2", &b, Some(&ctx)).starts_with("ERR unknown"));
+        assert!(handle_request("VAR 0.3", &b, Some(&ctx)).starts_with("ERR dim"));
+        // STATS carries the posterior-cache counters when LOVE is live
+        let stats = handle_request("STATS", &b, Some(&ctx));
+        assert!(stats.contains("posteriors=1"), "{stats}");
     }
 
     #[test]

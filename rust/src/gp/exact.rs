@@ -8,6 +8,7 @@
 //! the paper's "Exact" columns in Figures 2 and 3.
 
 use crate::gp::mll::{BatchBbmmEngine, BatchInferenceEngine, BbmmEngine, InferenceEngine, MllGrad};
+use crate::gp::posterior::PosteriorCache;
 use crate::gp::predict::{predict, predict_with_plan, Prediction};
 use crate::kernels::{Kernel, KernelCov, KernelCovOp, ShardedCovOp};
 use crate::linalg::cholesky::Cholesky;
@@ -16,6 +17,7 @@ use crate::linalg::op::{
 };
 use crate::tensor::Mat;
 use crate::train::{SweepReport, SweepTrainer, TrainConfig};
+use crate::util::Rng;
 
 /// Which inference engine backs the model.
 pub enum Engine {
@@ -35,6 +37,9 @@ pub struct ExactGp {
     y: Vec<f64>,
     engine: Engine,
     plans: SolvePlanCache,
+    /// LOVE rank for constant-time variances (`None` = solve per predict)
+    love: Option<usize>,
+    posterior: PosteriorCache,
 }
 
 impl ExactGp {
@@ -67,7 +72,31 @@ impl ExactGp {
             y,
             engine,
             plans: SolvePlanCache::new(),
+            love: None,
+            posterior: PosteriorCache::new(),
         }
+    }
+
+    /// Enable LOVE: predictions answer variances from a cached rank-`rank`
+    /// posterior ([`crate::gp::posterior::LovePosterior`]) instead of
+    /// paying a solve per predict call. Higher rank = tighter variances
+    /// (exact at `rank = n`); the posterior rebuilds automatically when
+    /// `set_params` changes the operator fingerprint.
+    pub fn with_love_rank(mut self, rank: usize) -> Self {
+        self.set_love_rank(Some(rank));
+        self
+    }
+
+    /// Switch the LOVE rank (or disable LOVE with `None`) on a live model.
+    pub fn set_love_rank(&mut self, rank: Option<usize>) {
+        assert!(rank != Some(0), "LOVE rank must be positive");
+        self.love = rank;
+    }
+
+    /// The model's posterior cache (counters observable for tests and
+    /// serving logs).
+    pub fn posterior_cache(&self) -> &PosteriorCache {
+        &self.posterior
     }
 
     /// The composed training operator `K̂ = K + σ²I`.
@@ -229,6 +258,23 @@ impl ExactGp {
         Some(gp)
     }
 
+    /// Solve options matching the configured engine (the options the
+    /// LOVE build's mean solve and the per-predict solve path share).
+    fn solve_opts(&self) -> SolveOptions {
+        match &self.engine {
+            Engine::Bbmm(e) => SolveOptions {
+                max_iters: e.max_cg_iters.max(50),
+                tol: 1e-8,
+                precond_rank: e.precond_rank,
+            },
+            Engine::Cholesky => SolveOptions {
+                max_iters: 400,
+                tol: 1e-10,
+                precond_rank: 5,
+            },
+        }
+    }
+
     /// Predictive mean+variance at test inputs `xs (n_test × d)`.
     pub fn predict(&mut self, xs: &Mat) -> Prediction {
         let cov = self.op.inner();
@@ -236,6 +282,15 @@ impl ExactGp {
         let diag: Vec<f64> = (0..xs.rows())
             .map(|i| cov.kernel().eval(xs.row(i), xs.row(i)))
             .collect();
+        if let Some(rank) = self.love {
+            // constant-time path: mean + variance from the cached LOVE
+            // posterior, rebuilt only when the fingerprint or rank moves
+            let opts = self.solve_opts();
+            let post = self
+                .posterior
+                .get_or_build("exact-gp", &self.op, &self.y, rank, &opts);
+            return post.predict(&k_star, &diag);
+        }
         match &mut self.engine {
             Engine::Cholesky => {
                 let ch =
@@ -254,6 +309,23 @@ impl ExactGp {
                 predict_with_plan(&self.op, &k_star, &diag, &self.y, &plan, &opts)
             }
         }
+    }
+
+    /// Draw `n_samples` correlated posterior samples at test inputs `xs`
+    /// from the cached LOVE root (building it on first use — rank
+    /// defaults to `min(n, 64)` when LOVE was not explicitly enabled).
+    /// Returns an `n_test × n_samples` matrix whose columns are draws.
+    pub fn sample_posterior(&mut self, xs: &Mat, n_samples: usize, seed: u64) -> Mat {
+        let rank = self.love.unwrap_or_else(|| self.y.len().min(64));
+        let opts = self.solve_opts();
+        let cov = self.op.inner();
+        let k_star = cov.cross(xs, cov.x());
+        let prior = cov.cross(xs, xs);
+        let post = self
+            .posterior
+            .get_or_build("exact-gp", &self.op, &self.y, rank, &opts);
+        let mut rng = Rng::new(seed);
+        post.sample(&k_star, &prior, n_samples, &mut rng)
     }
 }
 
@@ -378,6 +450,51 @@ mod tests {
         gp.set_params(&raw);
         let _ = gp.predict(&xt);
         assert_eq!(gp.plan_cache().invalidations(), 1);
+    }
+
+    #[test]
+    fn love_predictions_match_solve_path_and_cache_rebuilds_on_set_params() {
+        let (x, y, xt, _yt) = dataset(90, 6);
+        let mut solve_gp = ExactGp::new(
+            x.clone(),
+            y.clone(),
+            Box::new(Rbf::new(0.5, 1.0)),
+            0.05,
+            Engine::Bbmm(BbmmEngine::new(200, 10, 5, 1)),
+        );
+        let n = y.len();
+        let mut love_gp = ExactGp::new(
+            x,
+            y,
+            Box::new(Rbf::new(0.5, 1.0)),
+            0.05,
+            Engine::Bbmm(BbmmEngine::new(200, 10, 5, 1)),
+        )
+        .with_love_rank(n); // full rank ⇒ exact
+        let ps = solve_gp.predict(&xt);
+        let pl = love_gp.predict(&xt);
+        for i in 0..xt.rows() {
+            assert!((ps.mean[i] - pl.mean[i]).abs() < 1e-5, "mean {i}");
+            assert!((ps.var[i] - pl.var[i]).abs() < 1e-5, "var {i}");
+        }
+        // repeated predicts hit the cached posterior
+        let _ = love_gp.predict(&xt);
+        assert_eq!(love_gp.posterior_cache().misses(), 1);
+        assert_eq!(love_gp.posterior_cache().hits(), 1);
+        // hyperparameter change → fingerprint moves → posterior rebuilt
+        let mut raw = love_gp.params();
+        raw[0] += 0.2;
+        love_gp.set_params(&raw);
+        let _ = love_gp.predict(&xt);
+        assert_eq!(love_gp.posterior_cache().invalidations(), 1);
+        // sampling from the cached root has posterior-consistent moments
+        let draws = love_gp.sample_posterior(&xt, 800, 7);
+        let pred = love_gp.predict(&xt);
+        for i in 0..3 {
+            let row = draws.row(i);
+            let emp = row.iter().sum::<f64>() / 800.0;
+            assert!((emp - pred.mean[i]).abs() < 0.1, "sample mean {i}");
+        }
     }
 
     #[test]

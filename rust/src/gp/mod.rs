@@ -20,6 +20,7 @@ pub mod fitc;
 pub mod kl;
 pub mod mll;
 pub mod multitask;
+pub mod posterior;
 pub mod predict;
 pub mod sgpr;
 pub mod ski;
@@ -32,5 +33,6 @@ pub use mll::{
     InferenceEngine, MllGrad,
 };
 pub use multitask::MultitaskOp;
+pub use posterior::{LovePosterior, PosteriorCache};
 pub use sgpr::{SgprCholeskyEngine, SgprModel, SgprOp};
 pub use ski::SkiOp;

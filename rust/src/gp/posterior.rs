@@ -1,0 +1,397 @@
+//! **`PosteriorCache`** — the LOVE state cached *across* predictive
+//! queries, the serve-path analogue of
+//! [`SolvePlanCache`](crate::linalg::op::SolvePlanCache).
+//!
+//! A [`LovePosterior`] bundles everything a trained GP needs to answer
+//! mean + variance + posterior-sample queries in O(n·r) per test point:
+//! the exact mean solve `α = K̂⁻¹y` (one dispatched solve at build time)
+//! and the rank-r LOVE factor `R ≈ K̂⁻¹`-root
+//! ([`crate::linalg::love::LoveFactors`]). A predict call is then two
+//! skinny GEMMs — `K_*·α` for the mean, `R·K_*ᵀ` for every variance —
+//! with no mBCG iteration in sight.
+//!
+//! The cache keys posteriors by deployment slot (tenant name, `"default"`,
+//! …) and invalidates on operator-content change: a `set_params` /
+//! sweep hot-swap rewrites the operator's entries, its
+//! [`fingerprint`](crate::linalg::op::LinearOp::fingerprint) moves, and
+//! the next query rebuilds the posterior exactly once. A changed LOVE
+//! rank likewise rebuilds.
+
+use crate::gp::predict::Prediction;
+use crate::linalg::cholesky::Cholesky;
+use crate::linalg::love::LoveFactors;
+use crate::linalg::op::{solve, LinearOp, SolveOptions};
+use crate::tensor::Mat;
+use crate::util::Rng;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A trained GP posterior frozen into constant-time query form: the exact
+/// mean solve plus the rank-r LOVE variance factor. Build once per
+/// hyperparameter setting, answer every query from the cached state.
+pub struct LovePosterior {
+    /// operator content fingerprint at build time (drives invalidation)
+    fingerprint: u64,
+    /// requested rank (the achieved factor rank may be lower; see
+    /// [`LovePosterior::rank`])
+    rank_requested: usize,
+    /// `α = K̂⁻¹y` — the mean weights, solved exactly at build time
+    alpha: Vec<f64>,
+    factors: LoveFactors,
+}
+
+impl LovePosterior {
+    /// Freeze the posterior of `op` (the trained `K̂`) with targets `y`:
+    /// one exact dispatched solve for `α = K̂⁻¹y`, then the rank-`rank`
+    /// LOVE factor. `y` doubles as the Lanczos probe (the Krylov space is
+    /// then aligned with the data; an all-zero `y` falls back to a ones
+    /// probe).
+    pub fn build(op: &dyn LinearOp, y: &[f64], rank: usize, opts: &SolveOptions) -> LovePosterior {
+        let n = op.n();
+        assert_eq!(y.len(), n, "LovePosterior: y length must match operator");
+        let fingerprint = op.fingerprint();
+        let alpha = solve(op, &Mat::col_from_slice(y), opts).col(0);
+        let probe: Vec<f64> = if y.iter().any(|v| *v != 0.0) {
+            y.to_vec()
+        } else {
+            vec![1.0; n]
+        };
+        let factors = LoveFactors::build_op(op, &probe, rank);
+        LovePosterior {
+            fingerprint,
+            rank_requested: rank,
+            alpha,
+            factors,
+        }
+    }
+
+    /// Mean + marginal variance for a test block — two skinny GEMMs
+    /// against the cached state, O(n·r) per test point.
+    ///
+    /// * `k_star` — `n_test × n` cross-covariance `K(X*, X)`
+    /// * `k_star_diag` — prior variances `k(x*, x*)` per test point
+    pub fn predict(&self, k_star: &Mat, k_star_diag: &[f64]) -> Prediction {
+        let n_test = k_star.rows();
+        assert_eq!(k_star_diag.len(), n_test, "predict: diag length mismatch");
+        let quads = self.factors.quad_diag(k_star);
+        let mut mean = vec![0.0; n_test];
+        let mut var = vec![0.0; n_test];
+        for j in 0..n_test {
+            let krow = k_star.row(j);
+            mean[j] = krow.iter().zip(self.alpha.iter()).map(|(a, b)| a * b).sum();
+            var[j] = (k_star_diag[j] - quads[j]).max(0.0);
+        }
+        Prediction { mean, var }
+    }
+
+    /// Full posterior covariance at a test block:
+    /// `K_** − K_* K̂⁻¹ K_*ᵀ` from the cached factor. `prior_cov` is the
+    /// `n_test × n_test` prior block `K(X*, X*)`.
+    pub fn posterior_cov(&self, k_star: &Mat, prior_cov: &Mat) -> Mat {
+        let s = k_star.rows();
+        assert_eq!(prior_cov.rows(), s, "posterior_cov: prior block mismatch");
+        assert_eq!(prior_cov.cols(), s, "posterior_cov: prior block mismatch");
+        let quad = self.factors.quad_cross(k_star, k_star);
+        // symmetrize: the quad block is symmetric up to roundoff, and the
+        // sampler downstream Cholesky-factors this matrix
+        Mat::from_fn(s, s, |i, j| {
+            let q = 0.5 * (quad.get(i, j) + quad.get(j, i));
+            prior_cov.get(i, j) - q
+        })
+    }
+
+    /// Draw `n_samples` correlated posterior samples at a test block
+    /// (CIQ-style, from the cached root — no fresh solve). Returns an
+    /// `n_test × n_samples` matrix whose columns are draws from
+    /// `N(μ(X*), K_** − K_* K̂⁻¹ K_*ᵀ)`.
+    pub fn sample(
+        &self,
+        k_star: &Mat,
+        prior_cov: &Mat,
+        n_samples: usize,
+        rng: &mut Rng,
+    ) -> Mat {
+        let s = k_star.rows();
+        let mean = self.predict_mean(k_star);
+        let mut cov = self.posterior_cov(k_star, prior_cov);
+        // tiny absolute jitter: near-interpolation posteriors are
+        // numerically semidefinite
+        cov.add_diag(1e-12);
+        let ch = Cholesky::new_with_jitter(&cov)
+            .expect("sample: posterior covariance not factorizable");
+        let mut z = Mat::zeros(s, n_samples);
+        for j in 0..n_samples {
+            for i in 0..s {
+                z.set(i, j, rng.normal());
+            }
+        }
+        let corr = ch.l().matmul(&z);
+        Mat::from_fn(s, n_samples, |i, j| mean[i] + corr.get(i, j))
+    }
+
+    /// Mean only — one skinny GEMV against the cached `α`.
+    pub fn predict_mean(&self, k_star: &Mat) -> Vec<f64> {
+        assert_eq!(k_star.cols(), self.alpha.len(), "predict_mean: width mismatch");
+        (0..k_star.rows())
+            .map(|j| {
+                k_star
+                    .row(j)
+                    .iter()
+                    .zip(self.alpha.iter())
+                    .map(|(a, b)| a * b)
+                    .sum()
+            })
+            .collect()
+    }
+
+    /// Operator fingerprint the posterior was built against.
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    /// Achieved LOVE rank (≤ requested when Lanczos truncated on an
+    /// invariant subspace).
+    pub fn rank(&self) -> usize {
+        self.factors.rank()
+    }
+
+    /// The underlying LOVE factor.
+    pub fn factors(&self) -> &LoveFactors {
+        &self.factors
+    }
+}
+
+struct Slot {
+    fingerprint: u64,
+    rank: usize,
+    post: Arc<LovePosterior>,
+}
+
+/// Cache of frozen [`LovePosterior`]s keyed by deployment slot,
+/// invalidated by operator fingerprint or LOVE-rank change — the
+/// posterior-side sibling of
+/// [`SolvePlanCache`](crate::linalg::op::SolvePlanCache).
+#[derive(Default)]
+pub struct PosteriorCache {
+    slots: Mutex<HashMap<String, Slot>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    invalidations: AtomicU64,
+}
+
+impl PosteriorCache {
+    /// Empty cache.
+    pub fn new() -> Self {
+        PosteriorCache::default()
+    }
+
+    /// The posterior for `op`/`y` under slot `key`, building (miss) or
+    /// rebuilding (fingerprint or rank change) as needed. Recomputes the
+    /// O(n) content fingerprint per call; serving loops holding an
+    /// immutable operator should fingerprint once and use
+    /// [`PosteriorCache::get_or_build_with_fingerprint`].
+    pub fn get_or_build(
+        &self,
+        key: &str,
+        op: &dyn LinearOp,
+        y: &[f64],
+        rank: usize,
+        opts: &SolveOptions,
+    ) -> Arc<LovePosterior> {
+        self.get_or_build_with_fingerprint(key, op.fingerprint(), op, y, rank, opts)
+    }
+
+    /// [`PosteriorCache::get_or_build`] with a caller-computed
+    /// fingerprint — the hit path does no operator probing at all.
+    pub fn get_or_build_with_fingerprint(
+        &self,
+        key: &str,
+        fp: u64,
+        op: &dyn LinearOp,
+        y: &[f64],
+        rank: usize,
+        opts: &SolveOptions,
+    ) -> Arc<LovePosterior> {
+        let mut slots = self.slots.lock().unwrap();
+        if let Some(slot) = slots.get(key) {
+            if slot.fingerprint == fp && slot.rank == rank {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Arc::clone(&slot.post);
+            }
+            self.invalidations.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+        // the lock is held across the rebuild on purpose: racing request
+        // handlers must not freeze the same posterior twice
+        let built = Arc::new(LovePosterior::build(op, y, rank, opts));
+        slots.insert(
+            key.to_string(),
+            Slot {
+                fingerprint: fp,
+                rank,
+                post: Arc::clone(&built),
+            },
+        );
+        built
+    }
+
+    /// Cached posterior count.
+    pub fn len(&self) -> usize {
+        self.slots.lock().unwrap().len()
+    }
+
+    /// True when no posterior is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every cached posterior (deployment reload).
+    pub fn clear(&self) {
+        self.slots.lock().unwrap().clear();
+    }
+
+    /// Queries answered from the cache.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// First-time posterior builds.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Rebuilds forced by an operator-content or rank change.
+    pub fn invalidations(&self) -> u64 {
+        self.invalidations.load(Ordering::Relaxed)
+    }
+
+    /// One-line counter summary for serving logs.
+    pub fn stats(&self) -> String {
+        format!(
+            "posteriors={} hits={} misses={} invalidations={}",
+            self.len(),
+            self.hits(),
+            self.misses(),
+            self.invalidations()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{DenseKernelOp, Rbf};
+    use crate::util::Rng;
+
+    fn model(n: usize, seed: u64) -> (DenseKernelOp, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let x = Mat::from_fn(n, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+        let y: Vec<f64> = (0..n)
+            .map(|i| (3.0 * x.get(i, 0)).sin() - 0.5 * x.get(i, 1) + 0.02 * rng.normal())
+            .collect();
+        (DenseKernelOp::new(x, Box::new(Rbf::new(0.5, 1.0)), 0.1), y)
+    }
+
+    fn dense_reference(op: &DenseKernelOp, y: &[f64], k_star: &Mat, diag: &[f64]) -> Prediction {
+        let ch = Cholesky::new_with_jitter(&op.dense()).unwrap();
+        crate::gp::predict::predict(k_star, diag, |m| ch.solve_mat(m), y)
+    }
+
+    #[test]
+    fn full_rank_posterior_matches_dense_reference() {
+        let n = 40;
+        let (op, y) = model(n, 1);
+        let mut rng = Rng::new(2);
+        let xs = Mat::from_fn(6, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+        let k_star = op.cross(&xs, op.x());
+        let diag: Vec<f64> = (0..6).map(|i| op.kernel().eval(xs.row(i), xs.row(i))).collect();
+        let opts = SolveOptions {
+            max_iters: 400,
+            tol: 1e-12,
+            precond_rank: 5,
+        };
+        let post = LovePosterior::build(&op, &y, n, &opts);
+        let got = post.predict(&k_star, &diag);
+        let want = dense_reference(&op, &y, &k_star, &diag);
+        for j in 0..6 {
+            assert!((got.mean[j] - want.mean[j]).abs() < 1e-7, "mean {j}");
+            assert!(
+                (got.var[j] - want.var[j]).abs() <= 1e-6 * want.var[j].abs().max(1e-9),
+                "var {j}: {} vs {}",
+                got.var[j],
+                want.var[j]
+            );
+        }
+    }
+
+    #[test]
+    fn cache_miss_hit_invalidate_cycle() {
+        let cache = PosteriorCache::new();
+        let (op, y) = model(30, 3);
+        let opts = SolveOptions::default();
+        let p1 = cache.get_or_build("t", &op, &y, 16, &opts);
+        let p2 = cache.get_or_build("t", &op, &y, 16, &opts);
+        assert!(Arc::ptr_eq(&p1, &p2), "second lookup must reuse the posterior");
+        assert_eq!((cache.misses(), cache.hits(), cache.invalidations()), (1, 1, 0));
+        // rank change rebuilds
+        let p3 = cache.get_or_build("t", &op, &y, 24, &opts);
+        assert!(!Arc::ptr_eq(&p2, &p3));
+        assert_eq!(cache.invalidations(), 1);
+        assert!(cache.stats().contains("invalidations=1"));
+        assert_eq!(cache.len(), 1);
+        cache.clear();
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn fingerprint_change_invalidates() {
+        let cache = PosteriorCache::new();
+        let (mut op, y) = model(25, 4);
+        let opts = SolveOptions::default();
+        let p1 = cache.get_or_build("t", &op, &y, 12, &opts);
+        let mut raw = op.params();
+        raw[0] += 0.3; // lengthscale moves → new fingerprint
+        op.set_params(&raw);
+        let p2 = cache.get_or_build("t", &op, &y, 12, &opts);
+        assert!(!Arc::ptr_eq(&p1, &p2), "stale posterior must be rebuilt");
+        assert_eq!((cache.misses(), cache.hits(), cache.invalidations()), (1, 0, 1));
+    }
+
+    #[test]
+    fn sampling_matches_posterior_moments() {
+        let n = 35;
+        let (op, y) = model(n, 5);
+        let xs = Mat::from_vec(3, 2, vec![-0.5, 0.2, 0.0, 0.0, 0.4, -0.3]);
+        let k_star = op.cross(&xs, op.x());
+        let prior = op.cross(&xs, &xs);
+        let diag: Vec<f64> = (0..3).map(|i| prior.get(i, i)).collect();
+        let opts = SolveOptions {
+            max_iters: 400,
+            tol: 1e-12,
+            precond_rank: 5,
+        };
+        let post = LovePosterior::build(&op, &y, n, &opts);
+        let want = post.predict(&k_star, &diag);
+        let m = 4000;
+        let mut rng = Rng::new(6);
+        let draws = post.sample(&k_star, &prior, m, &mut rng);
+        for i in 0..3 {
+            let row = draws.row(i);
+            let emp_mean = row.iter().sum::<f64>() / m as f64;
+            let emp_var =
+                row.iter().map(|v| (v - emp_mean) * (v - emp_mean)).sum::<f64>() / m as f64;
+            assert!(
+                (emp_mean - want.mean[i]).abs() < 0.05,
+                "mean {i}: {emp_mean} vs {}",
+                want.mean[i]
+            );
+            assert!(
+                (emp_var - want.var[i]).abs() < 0.05,
+                "var {i}: {emp_var} vs {}",
+                want.var[i]
+            );
+        }
+    }
+}

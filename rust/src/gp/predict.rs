@@ -110,6 +110,19 @@ pub fn predict_with_plan(
     predict(k_star, k_star_diag, |m| solve_with(plan, op, m, opts), y)
 }
 
+/// [`predict_with_plan`]'s constant-time sibling: answer a test block
+/// from a **frozen** [`crate::gp::posterior::LovePosterior`] — two skinny
+/// GEMMs against the cached mean solve and LOVE variance factor, O(n·r)
+/// per test point with no solve at all. This is the serve-path fast lane;
+/// accuracy is governed by the posterior's LOVE rank (exact at r=n).
+pub fn predict_with_posterior(
+    post: &crate::gp::posterior::LovePosterior,
+    k_star: &Mat,
+    k_star_diag: &[f64],
+) -> Prediction {
+    post.predict(k_star, k_star_diag)
+}
+
 /// One posterior query against one batch element: the cross-covariance
 /// block, prior variances, and targets of the posterior it addresses.
 pub struct PosteriorQuery<'a> {

@@ -25,6 +25,7 @@ pub mod cholesky;
 pub mod fft;
 pub mod kronecker;
 pub mod lanczos;
+pub mod love;
 pub mod mbcg;
 pub mod op;
 pub mod pivoted_cholesky;
@@ -37,6 +38,7 @@ pub use cg::{pcg, PcgResult};
 pub use cholesky::Cholesky;
 pub use kronecker::{kron_dense, kron_matmul, kron_matvec};
 pub use lanczos::lanczos_tridiag;
+pub use love::LoveFactors;
 pub use mbcg::{mbcg, mbcg_batch, mbcg_op, MbcgOptions, MbcgResult, TriDiag};
 pub use op::{BatchOp, LinearOp, SolveHint, SolveOptions, SolvePlanCache};
 pub use pivoted_cholesky::{pivoted_cholesky, pivoted_cholesky_op, PivotedCholesky};

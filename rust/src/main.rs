@@ -13,8 +13,9 @@
 //! abort the process mid-serve with a panic).
 
 use bbmm_gp::coordinator::{
-    multi_served_predictor, serve, served_predictor, BatchPolicy, DynamicBatcher, ServableModel,
-    ServerConfig, TenantSpec,
+    multi_served_predictor, multi_served_predictor_love, serve_with_love, served_predictor,
+    served_predictor_love, BatchPolicy, DynamicBatcher, LoveServeCtx, ServableModel, ServerConfig,
+    TenantSpec,
 };
 use bbmm_gp::data::synthetic::{generate, spec_by_name};
 use bbmm_gp::gp::exact::{Engine, ExactGp};
@@ -175,7 +176,13 @@ fn print_help() {
                                multi-tenant solve-plan cache: LRU + TTL)\n\
            --tenant name=model[@dataset]   (serve: repeatable; host many\n\
                                models behind one batched BatchOp solve,\n\
-                               routed by the `name:` line-protocol prefix)"
+                               routed by the `name:` line-protocol prefix)\n\
+           --love-rank R       (serve: LOVE posterior-cache rank, default\n\
+                               64 — predictions and the VAR/SAMPLE verbs\n\
+                               answer in O(n·R) from cached factors;\n\
+                               higher R = tighter variances, exact at R=n)\n\
+           --no-love           (serve: disable the LOVE cache and pay a\n\
+                               solve per predictive query)"
     );
 }
 
@@ -625,8 +632,20 @@ fn cmd_serve(args: &Args) -> Result<(), CliError> {
         max_wait: std::time::Duration::from_millis(args.u64_or("max-wait-ms", 2)?),
         max_queue: args.usize_or("max-queue", 1024)?,
     };
+    // LOVE posterior cache: on by default — predictions (and the VAR /
+    // SAMPLE verbs) answer from cached rank-r factors in O(n·r) instead
+    // of paying a solve per query. `--no-love` restores the solve path.
+    let love_rank = args.usize_or("love-rank", 64)?;
+    if love_rank == 0 {
+        return Err(CliError {
+            flag: "love-rank".to_string(),
+            message: "LOVE rank must be positive (use --no-love to disable)".to_string(),
+        });
+    }
+    let love_enabled = !args.flag("no-love");
+    let seed = args.u64_or("seed", 0)?;
     let tenant_specs = args.get_all("tenant");
-    let (batcher, operator, shard_count, dims) = if tenant_specs.is_empty() {
+    let (batcher, love_ctx, operator, shard_count, dims) = if tenant_specs.is_empty() {
         // single-model deployment (tenant 0, routing name "default")
         let ds = load_dataset(args)?;
         let dim = ds.dim();
@@ -639,9 +658,21 @@ fn cmd_serve(args: &Args) -> Result<(), CliError> {
             "sgpr" | "ski" => 1,
             _ => args.usize_or("shards", 1)?.max(1),
         };
-        let predictor = served_predictor(model, solve_opts);
+        let (predictor, love_ctx) = if love_enabled {
+            let m: Arc<dyn ServableModel> = Arc::from(model);
+            let ctx = Arc::new(LoveServeCtx::new(
+                vec![("default".to_string(), m)],
+                love_rank,
+                solve_opts,
+                Arc::new(bbmm_gp::gp::PosteriorCache::new()),
+                seed,
+            ));
+            (served_predictor_love(Arc::clone(&ctx)), Some(ctx))
+        } else {
+            (served_predictor(model, solve_opts), None)
+        };
         let batcher = Arc::new(DynamicBatcher::new(dim, policy, predictor));
-        (batcher, operator, shard_count, vec![dim])
+        (batcher, love_ctx, operator, shard_count, vec![dim])
     } else {
         // multi-tenant deployment: every `--tenant name=model[@dataset]`
         // trains its own posterior; each batching tick answers all
@@ -709,13 +740,28 @@ fn cmd_serve(args: &Args) -> Result<(), CliError> {
         }
         let cap = args.usize_or("plan-cache-cap", 0)?;
         let ttl_s = args.f64_or("plan-cache-ttl-s", 0.0)?;
-        let cache = Arc::new(SolvePlanCache::with_policy(
-            (cap > 0).then_some(cap),
-            (ttl_s > 0.0).then(|| std::time::Duration::from_secs_f64(ttl_s)),
-        ));
-        let predictor = multi_served_predictor(models, solve_opts, cache);
+        let (predictor, love_ctx) = if love_enabled {
+            let arcs: Vec<(String, Arc<dyn ServableModel>)> = models
+                .into_iter()
+                .map(|(name, m)| (name, Arc::from(m) as Arc<dyn ServableModel>))
+                .collect();
+            let ctx = Arc::new(LoveServeCtx::new(
+                arcs,
+                love_rank,
+                solve_opts,
+                Arc::new(bbmm_gp::gp::PosteriorCache::new()),
+                seed,
+            ));
+            (multi_served_predictor_love(Arc::clone(&ctx)), Some(ctx))
+        } else {
+            let cache = Arc::new(SolvePlanCache::with_policy(
+                (cap > 0).then_some(cap),
+                (ttl_s > 0.0).then(|| std::time::Duration::from_secs_f64(ttl_s)),
+            ));
+            (multi_served_predictor(models, solve_opts, cache), None)
+        };
         let batcher = Arc::new(DynamicBatcher::new_multi(specs, policy, predictor));
-        (batcher, described.join(" | "), max_shards, dims)
+        (batcher, love_ctx, described.join(" | "), max_shards, dims)
     };
     let config = ServerConfig {
         addr: args.get_or("addr", "127.0.0.1:7777").to_string(),
@@ -727,12 +773,21 @@ fn cmd_serve(args: &Args) -> Result<(), CliError> {
         "serving GP predictions (feature dims {dims:?}) — operator: {}",
         config.operator
     );
+    match &love_ctx {
+        Some(ctx) => println!(
+            "love: rank={} ({} tenant posteriors cached; VAR/SAMPLE enabled)",
+            ctx.rank(),
+            ctx.tenant_count()
+        ),
+        None => println!("love: disabled (per-query solve path; VAR/SAMPLE return ERR)"),
+    }
     println!(
         "perf: threads={} mmm-budget={}MB",
         bbmm_gp::util::par::num_threads(),
         bbmm_gp::linalg::op::mmm::budget_bytes() / (1024 * 1024)
     );
-    serve(config, batcher, |addr| println!("listening on {addr}")).expect("server failed");
+    serve_with_love(config, batcher, love_ctx, |addr| println!("listening on {addr}"))
+        .expect("server failed");
     Ok(())
 }
 

@@ -1,0 +1,351 @@
+//! LOVE posterior integration: full-rank LOVE variances must agree with
+//! the dense-Cholesky posterior across every operator family (exact,
+//! SGPR, SKI), the `PosteriorCache` must invalidate when `set_params`
+//! moves the operator fingerprint, correlated posterior samples must
+//! reproduce the analytic posterior moments, and the `VAR`/`SAMPLE`
+//! protocol verbs must round-trip through a live two-tenant TCP
+//! deployment answering from cached factors.
+
+use bbmm_gp::coordinator::{
+    multi_served_predictor_love, serve_with_love, BatchPolicy, DynamicBatcher, LoveServeCtx,
+    ServableModel, ServerConfig, TenantSpec,
+};
+use bbmm_gp::gp::predict::{predict, Prediction};
+use bbmm_gp::gp::{LovePosterior, PosteriorCache, SgprOp, SkiOp};
+use bbmm_gp::kernels::{DenseKernelOp, Kernel, Matern52, Rbf};
+use bbmm_gp::linalg::cholesky::Cholesky;
+use bbmm_gp::linalg::op::{LinearOp, SolveOptions};
+use bbmm_gp::tensor::Mat;
+use bbmm_gp::util::Rng;
+use std::io::{BufRead, BufReader, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn tight_opts() -> SolveOptions {
+    SolveOptions {
+        max_iters: 400,
+        tol: 1e-12,
+        precond_rank: 5,
+    }
+}
+
+/// Dense-Cholesky posterior for any operator, using the *same* cross
+/// block and prior diagonal as the LOVE path — the ground truth LOVE
+/// must reproduce at full rank.
+fn dense_posterior(op: &dyn LinearOp, y: &[f64], k_star: &Mat, diag: &[f64]) -> Prediction {
+    let ch = Cholesky::new_with_jitter(&op.dense()).unwrap();
+    predict(k_star, diag, |m| ch.solve_mat(m), y)
+}
+
+fn assert_close(got: &Prediction, want: &Prediction, tag: &str) {
+    for j in 0..want.mean.len() {
+        assert!(
+            (got.mean[j] - want.mean[j]).abs() <= 1e-6 * want.mean[j].abs().max(1.0),
+            "{tag} mean {j}: {} vs {}",
+            got.mean[j],
+            want.mean[j]
+        );
+        assert!(
+            (got.var[j] - want.var[j]).abs() <= 1e-6 * want.var[j].abs().max(1e-9),
+            "{tag} var {j}: {} vs {}",
+            got.var[j],
+            want.var[j]
+        );
+    }
+}
+
+#[test]
+fn love_matches_dense_posterior_for_exact_operator() {
+    let n = 70;
+    let mut rng = Rng::new(11);
+    let x = Mat::from_fn(n, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+    let y: Vec<f64> = (0..n)
+        .map(|i| (2.5 * x.get(i, 0)).sin() + 0.4 * x.get(i, 1) + 0.02 * rng.normal())
+        .collect();
+    let op = DenseKernelOp::new(x, Box::new(Rbf::new(0.6, 1.2)), 0.05);
+    let xs = Mat::from_fn(8, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+    let k_star = op.cross(&xs, op.x());
+    let diag: Vec<f64> = (0..8).map(|i| op.kernel().eval(xs.row(i), xs.row(i))).collect();
+
+    let post = LovePosterior::build(&op, &y, n, &tight_opts());
+    assert_close(&post.predict(&k_star, &diag), &dense_posterior(&op, &y, &k_star, &diag), "exact");
+}
+
+#[test]
+fn love_matches_dense_posterior_for_sgpr_operator() {
+    let n = 90;
+    let m = 20;
+    let mut rng = Rng::new(12);
+    let x = Mat::from_fn(n, 1, |_, _| rng.uniform_in(-2.0, 2.0));
+    let u = Mat::from_fn(m, 1, |i, _| -2.0 + 4.0 * (i as f64 + 0.5) / m as f64);
+    let y: Vec<f64> = (0..n).map(|i| x.get(i, 0).sin() + 0.05 * rng.normal()).collect();
+    let op = SgprOp::new(x, u, Box::new(Rbf::new(0.7, 1.0)), 0.1);
+    let xs = Mat::from_fn(6, 1, |_, _| rng.uniform_in(-2.0, 2.0));
+    // SoR-consistent cross block: the same K(X*,U)K_UU⁻¹K(U,X) the
+    // operator itself represents, so the dense reference and LOVE see
+    // identical posterior algebra
+    let k_star = op.cross_sor(&xs);
+    let diag: Vec<f64> = (0..6).map(|i| op.kernel().eval(xs.row(i), xs.row(i))).collect();
+
+    // full-rank request; Lanczos truncates on the rank-(m+1)-ish
+    // invariant subspace of the SoR operator and stays exact
+    let post = LovePosterior::build(&op, &y, n, &tight_opts());
+    assert!(post.rank() <= m + 2, "SoR Lanczos should truncate: rank={}", post.rank());
+    assert_close(&post.predict(&k_star, &diag), &dense_posterior(&op, &y, &k_star, &diag), "sgpr");
+}
+
+#[test]
+fn love_matches_dense_posterior_for_ski_operator() {
+    let n = 80;
+    let mut rng = Rng::new(13);
+    let z: Vec<f64> = (0..n).map(|_| rng.uniform_in(-3.0, 3.0)).collect();
+    let y: Vec<f64> = z.iter().map(|&zi| (1.3 * zi).cos() + 0.05 * rng.normal()).collect();
+    let op = SkiOp::new(z, 64, Box::new(Matern52::new(0.8, 1.0)), 0.08);
+    let z_test: Vec<f64> = (0..5).map(|_| rng.uniform_in(-2.5, 2.5)).collect();
+    // SKI-consistent cross block W* K_UU Wᵀ — matches the served path
+    let k_star = op.cross(&z_test);
+    let diag: Vec<f64> = z_test.iter().map(|&zt| op.kernel().eval(&[zt], &[zt])).collect();
+
+    let post = LovePosterior::build(&op, &y, n, &tight_opts());
+    assert_close(&post.predict(&k_star, &diag), &dense_posterior(&op, &y, &k_star, &diag), "ski");
+}
+
+#[test]
+fn posterior_cache_invalidates_when_set_params_moves_the_fingerprint() {
+    let n = 50;
+    let mut rng = Rng::new(14);
+    let z: Vec<f64> = (0..n).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+    let y: Vec<f64> = z.iter().map(|&zi| zi.sin()).collect();
+    let mut op = SkiOp::new(z, 40, Box::new(Rbf::new(0.5, 1.0)), 0.1);
+    let cache = PosteriorCache::new();
+    let opts = tight_opts();
+
+    let p1 = cache.get_or_build("ski", &op, &y, 24, &opts);
+    let p2 = cache.get_or_build("ski", &op, &y, 24, &opts);
+    assert!(Arc::ptr_eq(&p1, &p2), "unchanged operator must hit the cache");
+    assert_eq!((cache.misses(), cache.hits(), cache.invalidations()), (1, 1, 0));
+
+    // a sweep/training step rewrites the kernel hyperparameters: the
+    // operator content fingerprint moves and the stale posterior must go
+    let mut raw = op.params();
+    raw[0] += 0.4;
+    op.set_params(&raw);
+    let p3 = cache.get_or_build("ski", &op, &y, 24, &opts);
+    assert!(!Arc::ptr_eq(&p2, &p3), "stale posterior served after set_params");
+    assert_eq!(p3.fingerprint(), op.fingerprint());
+    assert_eq!((cache.misses(), cache.hits(), cache.invalidations()), (1, 1, 1));
+    assert_eq!(cache.len(), 1);
+}
+
+#[test]
+fn sample_covariance_of_many_draws_matches_the_analytic_posterior() {
+    let n = 45;
+    let mut rng = Rng::new(15);
+    let x = Mat::from_fn(n, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+    let y: Vec<f64> = (0..n)
+        .map(|i| (3.0 * x.get(i, 0)).sin() - 0.5 * x.get(i, 1) + 0.02 * rng.normal())
+        .collect();
+    let op = DenseKernelOp::new(x, Box::new(Rbf::new(0.5, 1.0)), 0.1);
+    let xs = Mat::from_vec(3, 2, vec![-0.4, 0.1, 0.0, 0.3, 0.5, -0.2]);
+    let k_star = op.cross(&xs, op.x());
+    let prior = op.cross(&xs, &xs);
+
+    let post = LovePosterior::build(&op, &y, n, &tight_opts());
+    let want_mean = post.predict_mean(&k_star);
+    let want_cov = post.posterior_cov(&k_star, &prior);
+
+    let m = 1500;
+    let mut srng = Rng::new(16);
+    let draws = post.sample(&k_star, &prior, m, &mut srng);
+    let emp_mean: Vec<f64> =
+        (0..3).map(|i| draws.row(i).iter().sum::<f64>() / m as f64).collect();
+    for i in 0..3 {
+        assert!(
+            (emp_mean[i] - want_mean[i]).abs() < 0.06,
+            "mean {i}: {} vs {}",
+            emp_mean[i],
+            want_mean[i]
+        );
+        // full covariance including cross terms: draws must be
+        // *correlated* across test points, not independent marginals
+        for j in 0..3 {
+            let emp_cov = draws
+                .row(i)
+                .iter()
+                .zip(draws.row(j).iter())
+                .map(|(a, b)| (a - emp_mean[i]) * (b - emp_mean[j]))
+                .sum::<f64>()
+                / m as f64;
+            assert!(
+                (emp_cov - want_cov.get(i, j)).abs() < 0.06,
+                "cov ({i},{j}): {emp_cov} vs {}",
+                want_cov.get(i, j)
+            );
+        }
+    }
+}
+
+/// An exact-GP tenant behind the serving seam (mirrors what `bbmm serve`
+/// builds per tenant).
+struct ExactTenant {
+    op: DenseKernelOp,
+    y: Vec<f64>,
+}
+
+impl ServableModel for ExactTenant {
+    fn op(&self) -> &dyn LinearOp {
+        &self.op
+    }
+    fn cross(&self, xs: &Mat) -> Mat {
+        self.op.cross(xs, self.op.x())
+    }
+    fn prior_diag(&self, xs: &Mat) -> Vec<f64> {
+        (0..xs.rows())
+            .map(|i| self.op.kernel().eval(xs.row(i), xs.row(i)))
+            .collect()
+    }
+    fn y(&self) -> &[f64] {
+        &self.y
+    }
+}
+
+fn tenant(n: usize, seed: u64, matern: bool, noise: f64) -> ExactTenant {
+    let mut rng = Rng::new(seed);
+    let x = Mat::from_fn(n, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+    let y: Vec<f64> = (0..n)
+        .map(|i| (3.0 * x.get(i, 0)).sin() - 0.5 * x.get(i, 1) + 0.02 * rng.normal())
+        .collect();
+    let kernel: Box<dyn Kernel> = if matern {
+        Box::new(Matern52::new(0.6, 0.9))
+    } else {
+        Box::new(Rbf::new(0.5, 1.0))
+    };
+    ExactTenant {
+        op: DenseKernelOp::new(x, kernel, noise),
+        y,
+    }
+}
+
+/// Dense-Cholesky reference posterior (mean, variance) at one point.
+fn reference(t: &ExactTenant, x: &[f64]) -> (f64, f64) {
+    let xs = Mat::from_vec(1, 2, x.to_vec());
+    let k_star = t.op.cross(&xs, t.op.x());
+    let kss = t.op.kernel().eval(xs.row(0), xs.row(0));
+    let p = dense_posterior(&t.op, &t.y, &k_star, &[kss]);
+    (p.mean[0], p.var[0])
+}
+
+#[test]
+fn var_and_sample_verbs_roundtrip_through_a_two_tenant_deployment() {
+    let n = 60;
+    let ta = tenant(n, 21, false, 0.05);
+    let tb = tenant(n, 22, true, 0.2);
+    let probe_a = [0.25, -0.5];
+    let probe_b = [-0.75, 0.1];
+    let (mean_a, var_a) = reference(&ta, &probe_a);
+    let (_, var_b) = reference(&tb, &probe_b);
+
+    let posteriors = Arc::new(PosteriorCache::new());
+    let models: Vec<(String, Arc<dyn ServableModel>)> = vec![
+        ("alpha".to_string(), Arc::new(ta)),
+        ("beta".to_string(), Arc::new(tb)),
+    ];
+    // full rank → LOVE variances are exact, so the wire values must
+    // match the dense reference to formatting precision
+    let ctx = Arc::new(LoveServeCtx::new(models, n, tight_opts(), Arc::clone(&posteriors), 7));
+    let batcher = Arc::new(DynamicBatcher::new_multi(
+        vec![
+            TenantSpec {
+                name: "alpha".into(),
+                dim: 2,
+            },
+            TenantSpec {
+                name: "beta".into(),
+                dim: 2,
+            },
+        ],
+        BatchPolicy {
+            max_batch: 32,
+            max_wait: Duration::from_millis(25),
+            ..BatchPolicy::default()
+        },
+        multi_served_predictor_love(Arc::clone(&ctx)),
+    ));
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let config = ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        operator: "alpha=exact(rbf) | beta=exact(matern52)".to_string(),
+        shard_count: 1,
+        stop: Arc::clone(&stop),
+    };
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let srv = {
+        let b = Arc::clone(&batcher);
+        let love = Some(Arc::clone(&ctx));
+        std::thread::spawn(move || {
+            serve_with_love(config, b, love, move |addr| {
+                addr_tx.send(addr).unwrap();
+            })
+            .unwrap();
+        })
+    };
+    let addr = addr_rx.recv().unwrap();
+
+    let mut conn = std::net::TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut ask = |line: &str| -> String {
+        conn.write_all(line.as_bytes()).unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        resp.trim().to_string()
+    };
+
+    // VAR answers per tenant from the cached root, matching the dense
+    // posterior at full rank
+    let got_var_a: f64 = ask(&format!("VAR alpha:{},{}\n", probe_a[0], probe_a[1]))
+        .parse()
+        .unwrap();
+    assert!((got_var_a - var_a).abs() < 1e-6, "alpha VAR {got_var_a} vs {var_a}");
+    let got_var_b: f64 = ask(&format!("VAR beta:{},{}\n", probe_b[0], probe_b[1]))
+        .parse()
+        .unwrap();
+    assert!((got_var_b - var_b).abs() < 1e-6, "beta VAR {got_var_b} vs {var_b}");
+
+    // ordinary mean,var lines go through the batcher but answer from the
+    // SAME cached posteriors — the two paths must agree on the wire
+    let line = ask(&format!("alpha:{},{}\n", probe_a[0], probe_a[1]));
+    let mut fields = line.split(',');
+    let line_mean: f64 = fields.next().unwrap().parse().unwrap();
+    let line_var: f64 = fields.next().unwrap().parse().unwrap();
+    assert!((line_mean - mean_a).abs() < 1e-5, "mean {line_mean} vs {mean_a}");
+    assert!((line_var - got_var_a).abs() < 1e-8, "tick var {line_var} vs VAR {got_var_a}");
+
+    // SAMPLE returns k finite correlated draws from the cached root
+    let draws: Vec<f64> = ask(&format!("SAMPLE 8 beta:{},{}\n", probe_b[0], probe_b[1]))
+        .split(',')
+        .map(|v| v.parse().unwrap())
+        .collect();
+    assert_eq!(draws.len(), 8);
+    assert!(draws.iter().all(|v| v.is_finite()));
+
+    // protocol errors
+    assert!(ask("VAR ghost:1.0,2.0\n").starts_with("ERR unknown tenant"));
+    assert!(ask("VAR alpha:1.0\n").starts_with("ERR dim"));
+    assert!(ask("SAMPLE 0 alpha:1.0,2.0\n").starts_with("ERR"));
+    assert!(ask("SAMPLE x alpha:1.0,2.0\n").starts_with("ERR"));
+
+    // STATS reports the posterior cache alongside the request metrics
+    let stats = ask("STATS\n");
+    assert!(stats.contains("posteriors=2"), "{stats}");
+
+    stop.store(true, Ordering::Relaxed);
+    srv.join().unwrap();
+
+    // each tenant's posterior was frozen exactly once, then every verb
+    // (VAR, SAMPLE, and the batched mean path) reused it
+    assert_eq!(posteriors.misses(), 2, "{}", posteriors.stats());
+    assert_eq!(posteriors.invalidations(), 0);
+    assert!(posteriors.hits() >= 2, "{}", posteriors.stats());
+}
