@@ -1,0 +1,154 @@
+//! Bench: **in-process vs multi-process shard placement** for the
+//! partitioned-kernel mBCG product loop (Wang et al. 2019 §3: broadcast
+//! the skinny RHS, gather per-shard partials — O(n·t) traffic per
+//! iteration regardless of worker count).
+//!
+//! Both placements run the identical fixed-iteration mBCG solve over the
+//! identical shard partition; the only variable is where shard rows are
+//! generated and contracted — the calling process's thread pool vs forked
+//! `bbmm shard-worker` processes on the wire protocol. Parity is gated to
+//! 1e-8 before anything is timed.
+//!
+//! Grid: n ∈ {32768, 131072} × workers ∈ {1, 2, 4} (quick mode:
+//! n = 2048, workers ∈ {1, 2} — CI-sized, where the expectation is
+//! parity-not-regression; process parallelism pays off at the full
+//! sizes on multi-core hosts). Writes `results/BENCH_dist.json` (the CI
+//! perf artifact; `"b"` carries the worker count) plus the table/CSV
+//! pair.
+
+use bbmm_gp::bench::{bench, Table};
+use bbmm_gp::kernels::{Rbf, ShardedKernelOp};
+use bbmm_gp::linalg::mbcg::{mbcg_op, MbcgOptions};
+use bbmm_gp::runtime::dist::{MultiProcessBackend, ShardBackend, WorkerLaunch};
+use bbmm_gp::tensor::Mat;
+use bbmm_gp::util::par;
+use bbmm_gp::util::Rng;
+use std::sync::Arc;
+
+const T_COLS: usize = 8;
+const ITERS: usize = 10;
+const WORKER_BUDGET_MB: usize = 512;
+
+struct Case {
+    n: usize,
+    workers: usize,
+    inproc_s: f64,
+    proc_s: f64,
+    speedup: f64,
+}
+
+fn main() {
+    let quick = std::env::var("BBMM_BENCH_QUICK").is_ok();
+    let sizes: &[usize] = if quick { &[2_048] } else { &[32_768, 131_072] };
+    let worker_grid: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4] };
+    let samples = if quick { 2 } else { 3 };
+    let shards = par::num_threads().max(4);
+    println!(
+        "dist_scaling: t={T_COLS} iters={ITERS} shards={shards} threads={}\n",
+        par::num_threads()
+    );
+
+    let launch = WorkerLaunch {
+        exe: env!("CARGO_BIN_EXE_bbmm").into(),
+        ..WorkerLaunch::default()
+    };
+    let opts = MbcgOptions {
+        max_iters: ITERS,
+        tol: 0.0,
+        n_solve_only: T_COLS,
+    };
+    let mut cases = Vec::new();
+    let mut table = Table::new(&["n", "workers", "inproc_s", "proc_s", "speedup"]);
+    for &n in sizes {
+        let mut rng = Rng::new(n as u64);
+        let x = Mat::from_fn(n, 3, |_, _| rng.uniform_in(-1.0, 1.0));
+        let b = Mat::from_fn(n, T_COLS, |_, _| rng.normal());
+        let inproc = ShardedKernelOp::new(x.clone(), Box::new(Rbf::new(0.5, 1.0)), 0.05, shards);
+        let reference = mbcg_op(&inproc, &b, |m| m.clone(), &opts);
+        let in_t = bench(&format!("mbcg/inproc/n{n}"), 1, samples, || {
+            let _ = mbcg_op(&inproc, &b, |m| m.clone(), &opts);
+        });
+        for &w in worker_grid {
+            let kernel = Rbf::new(0.5, 1.0);
+            let proc = MultiProcessBackend::launch(
+                x.clone(),
+                &kernel,
+                0.05,
+                shards,
+                w,
+                WORKER_BUDGET_MB,
+                launch.clone(),
+            )
+            .expect("fork shard workers");
+            let routed = ShardedKernelOp::new(x.clone(), Box::new(Rbf::new(0.5, 1.0)), 0.05, shards)
+                .with_backend(Arc::new(proc));
+
+            // parity gate before timing: the distributed placement must
+            // reproduce the in-process solve to 1e-8 relative
+            let got = mbcg_op(&routed, &b, |m| m.clone(), &opts);
+            let scale = reference.solves.fro_norm().max(1.0);
+            let diff = got.solves.max_abs_diff(&reference.solves) / scale;
+            assert!(diff < 1e-8, "n={n} workers={w}: placement diverged {diff}");
+
+            let p_t = bench(&format!("mbcg/proc{w}/n{n}"), 1, samples, || {
+                let _ = mbcg_op(&routed, &b, |m| m.clone(), &opts);
+            });
+            let restarts = routed.backend().unwrap().stats().restarts;
+            assert_eq!(restarts, 0, "n={n} workers={w}: workers crashed during the bench");
+            drop(routed); // shuts the worker fleet down before the next config
+
+            let speedup = in_t.median_s() / p_t.median_s();
+            table.row(&[
+                n.to_string(),
+                w.to_string(),
+                format!("{:.4}", in_t.median_s()),
+                format!("{:.4}", p_t.median_s()),
+                format!("{speedup:.2}x"),
+            ]);
+            cases.push(Case {
+                n,
+                workers: w,
+                inproc_s: in_t.median_s(),
+                proc_s: p_t.median_s(),
+                speedup,
+            });
+        }
+    }
+    println!();
+    table.print();
+    table.save("bench_dist_scaling").ok();
+    write_json(&cases).expect("write BENCH_dist.json");
+    println!(
+        "\nwrote results/BENCH_dist.json — expect speedup ≥ 1 once per-shard \
+         kernel work dominates the O(n·t) broadcast/gather round trip"
+    );
+}
+
+/// Hand-rolled JSON (no serde offline): the schema CI archives and
+/// `ci/bench_diff.py` gates against the committed baseline. `"b"` is the
+/// worker count (an identity key for the differ).
+fn write_json(cases: &[Case]) -> std::io::Result<()> {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"bench\": \"dist_scaling\",\n");
+    out.push_str(&format!("  \"threads\": {},\n", par::num_threads()));
+    out.push_str(&format!("  \"t\": {T_COLS},\n"));
+    out.push_str(&format!("  \"iters\": {ITERS},\n"));
+    out.push_str("  \"cases\": [\n");
+    for (i, c) in cases.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"name\": \"proc_vs_inproc\", \"n\": {}, \"b\": {}, \"inproc_s\": {:.4}, \
+             \"proc_s\": {:.4}, \"speedup\": {:.3}}}{}\n",
+            c.n,
+            c.workers,
+            c.inproc_s,
+            c.proc_s,
+            c.speedup,
+            if i + 1 < cases.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n");
+    out.push_str("}\n");
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/BENCH_dist.json", out)
+}

@@ -32,7 +32,8 @@
 
 use crate::coordinator::batcher::{DynamicBatcher, MultiPredictFn, PredictFn, TenantBatch};
 use crate::gp::posterior::{LovePosterior, PosteriorCache};
-use crate::gp::predict::{predict_batch_op, predict_with_plan, PosteriorQuery, Prediction};
+use crate::gp::predict::{predict_batch_op_ws, predict_with_plan, PosteriorQuery, Prediction};
+use crate::linalg::mbcg::MbcgWorkspace;
 use crate::linalg::op::{
     solve_strategy, BatchOp, LinearOp, SolveOptions, SolvePlan, SolvePlanCache,
 };
@@ -245,11 +246,13 @@ pub fn served_predictor_cached(
 
 /// Host **many** tenants behind one predictor: each batching tick carries
 /// every tenant's coalesced RHS block, and this closure answers them all
-/// through a single [`predict_batch_op`] dispatch — same-shape tenants
+/// through a single [`predict_batch_op_ws`] dispatch — same-shape tenants
 /// stack into one [`BatchOp`] (iterative ones then share one `mbcg_batch`
 /// iteration loop), per-tenant [`SolvePlan`]s come from `cache` keyed by
 /// tenant name, so factorisations/preconditioners persist across predict
-/// calls and rebuild only on hyperparameter change.
+/// calls and rebuild only on hyperparameter change. The solver's
+/// [`MbcgWorkspace`] persists the same way — one warm arena per tenant
+/// group size, held across ticks, instead of a rebuild per call.
 pub fn multi_served_predictor(
     models: Vec<(String, Box<dyn ServableModel>)>,
     opts: SolveOptions,
@@ -258,6 +261,11 @@ pub fn multi_served_predictor(
     // served models are moved into the closure with no mutation path, so
     // per-tenant fingerprints are computed once, not per tick
     let fps: Vec<u64> = models.iter().map(|(_, m)| m.op().fingerprint()).collect();
+    // group-size n → warm solver workspace, reused every tick (the
+    // predictor must be Sync, so ticks take the workspace through a lock;
+    // same-n groups from concurrent ticks serialise on it, which is the
+    // batcher's cadence anyway)
+    let workspaces: Mutex<BTreeMap<usize, MbcgWorkspace>> = Mutex::new(BTreeMap::new());
     Box::new(move |blocks: &[TenantBatch]| -> Vec<Prediction> {
         // per-block posterior pieces + cached plans
         let mut kstars = Vec::with_capacity(blocks.len());
@@ -281,7 +289,7 @@ pub fn multi_served_predictor(
             by_n.entry(models[tb.tenant].1.op().n()).or_default().push(g);
         }
         let mut out: Vec<Option<Prediction>> = (0..blocks.len()).map(|_| None).collect();
-        for idxs in by_n.values() {
+        for (&gn, idxs) in by_n.iter() {
             let ops: Vec<&dyn LinearOp> =
                 idxs.iter().map(|&g| models[blocks[g].tenant].1.op()).collect();
             let batch = BatchOp::new(ops);
@@ -294,7 +302,9 @@ pub fn multi_served_predictor(
                 })
                 .collect();
             let plan_refs: Vec<&SolvePlan> = idxs.iter().map(|&g| plans[g].as_ref()).collect();
-            let preds = predict_batch_op(&batch, &queries, &plan_refs, &opts);
+            let mut wss = workspaces.lock().unwrap();
+            let ws = wss.entry(gn).or_default();
+            let preds = predict_batch_op_ws(&batch, &queries, &plan_refs, &opts, ws);
             for (&g, p) in idxs.iter().zip(preds) {
                 out[g] = Some(p);
             }

@@ -11,8 +11,9 @@
 //! (direct Woodbury for SGPR-shaped compositions, dense Cholesky for
 //! explicit matrices, preconditioned mBCG otherwise).
 
+use crate::linalg::mbcg::MbcgWorkspace;
 use crate::linalg::op::{
-    plan, solve_batch, solve_with, BatchOp, LinearOp, SolveOptions, SolvePlan,
+    plan, solve_batch_ws, solve_with, BatchOp, LinearOp, SolveOptions, SolvePlan,
 };
 use crate::tensor::Mat;
 
@@ -146,10 +147,25 @@ pub fn predict_batch_op(
     plans: &[&SolvePlan],
     opts: &SolveOptions,
 ) -> Vec<Prediction> {
+    let mut ws = MbcgWorkspace::new();
+    predict_batch_op_ws(batch, queries, plans, opts, &mut ws)
+}
+
+/// [`predict_batch_op`] against a caller-held [`MbcgWorkspace`]: a serving
+/// loop answering the same tenant group every tick holds one workspace per
+/// group, so the iterative sub-batch's solver buffers stay warm across
+/// ticks instead of being rebuilt per call.
+pub fn predict_batch_op_ws(
+    batch: &BatchOp<'_>,
+    queries: &[PosteriorQuery<'_>],
+    plans: &[&SolvePlan],
+    opts: &SolveOptions,
+    ws: &mut MbcgWorkspace,
+) -> Vec<Prediction> {
     assert_eq!(queries.len(), batch.len(), "predict_batch_op: query count mismatch");
     let rhs: Vec<Mat> = queries.iter().map(|q| posterior_rhs(q.k_star, q.y)).collect();
     let rhs_refs: Vec<&Mat> = rhs.iter().collect();
-    let solved = solve_batch(batch, plans, &rhs_refs, opts);
+    let solved = solve_batch_ws(batch, plans, &rhs_refs, opts, ws);
     queries
         .iter()
         .zip(solved)

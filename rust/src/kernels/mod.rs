@@ -25,7 +25,7 @@ pub use compose::{ProductKernel, SumKernel};
 pub use deep::DeepFeatureMap;
 pub use linear::LinearKernelOp;
 pub use operator::{DenseKernelOp, KernelCovOp};
-pub use sharded::{ShardedCovOp, ShardedKernelOp};
+pub use sharded::{ShardBlock, ShardedCovOp, ShardedKernelOp};
 pub use stationary::{Matern12, Matern32, Matern52, Rbf};
 
 use crate::linalg::op::LinearOp;

@@ -21,6 +21,7 @@ use super::operator::{cross_kernel, squared_dists_row, stationary_apply, TileFn}
 use super::{Kernel, KernelCov};
 use crate::linalg::mbcg::ShardedMmm;
 use crate::linalg::op::{mmm, AddedDiagOp, LinearOp, MmmPlan};
+use crate::runtime::dist::ShardBackend;
 use crate::runtime::shard::{partition_rows, run_rows_mut, ShardQueue};
 use crate::tensor::{Mat, Scalar};
 use crate::util::par;
@@ -31,13 +32,22 @@ use std::sync::{Arc, OnceLock, RwLock};
 /// cache tile: 64 rows × n cols of f64 stays in L2 for n up to ~8k).
 pub const DEFAULT_TILE: usize = 64;
 
-/// Which kernel function a block fill evaluates.
-enum BlockFn {
+/// Which kernel function a block fill evaluates — the unit of work a shard
+/// backend ([`crate::runtime::dist::ShardBackend`]) dispatches, so it is
+/// public and wire-encodable (`runtime/dist/protocol.rs`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ShardBlock {
     /// `K·M`, optionally plus `σ²M` fused into the shard pass
-    Value { noise: Option<f64> },
+    Value {
+        /// fused added-diagonal term (`None` = noise-free covariance)
+        noise: Option<f64>,
+    },
     /// `(∂K/∂raw_p)·M` for a kernel parameter `p` (noise handled upstream)
     DParam(usize),
 }
+
+/// Former internal name, kept as an alias so the fill paths read unchanged.
+type BlockFn = ShardBlock;
 
 /// Noise-free exact covariance over `X (n×d)` partitioned into row shards.
 ///
@@ -62,6 +72,10 @@ pub struct ShardedCovOp {
     r2: Arc<OnceLock<Mat>>,
     /// materialised K for the current parameters (cleared on update)
     kmat: RwLock<Option<Arc<Mat>>>,
+    /// where shard products execute: `None` = this process's thread pool
+    /// (the seed behaviour); `Some` routes every f64 product through a
+    /// [`ShardBackend`] (worker processes / out-of-core panels)
+    backend: Option<Arc<dyn ShardBackend>>,
 }
 
 impl ShardedCovOp {
@@ -85,7 +99,34 @@ impl ShardedCovOp {
             plan,
             r2: Arc::new(OnceLock::new()),
             kmat: RwLock::new(None),
+            backend: None,
         }
+    }
+
+    /// Builder form of [`ShardedCovOp::set_backend`].
+    pub fn with_backend(mut self, backend: Arc<dyn ShardBackend>) -> Self {
+        self.set_backend(backend);
+        self
+    }
+
+    /// Route every f64 product (`matmul` / `matmul_into` / `dmatmul`)
+    /// through `backend` instead of the local thread pool. The backend must
+    /// cover the same `n` rows; its shard plan may differ from this
+    /// operator's (it owns its own partition). Kernel-parameter updates are
+    /// forwarded via [`ShardBackend::set_params`]. `prepare()` becomes a
+    /// no-op locally — the backend's workers hold the materialised state.
+    pub fn set_backend(&mut self, backend: Arc<dyn ShardBackend>) {
+        assert_eq!(
+            backend.n(),
+            self.x.rows(),
+            "backend covers a different row count"
+        );
+        self.backend = Some(backend);
+    }
+
+    /// The attached shard backend, if any.
+    pub fn backend(&self) -> Option<&Arc<dyn ShardBackend>> {
+        self.backend.as_ref()
     }
 
     // Plan/panel plumbing below: KEEP IN SYNC with `KernelCovOp`
@@ -158,12 +199,23 @@ impl ShardedCovOp {
         &self.shards
     }
 
-    /// Schedule the requested kernel product over the shard queues.
-    fn block_matmul<T: Scalar>(&self, m: &Mat<T>, bf: BlockFn) -> Mat<T> {
+    /// Schedule the requested kernel product over the local shard queues
+    /// (always in-process — backends call this on their *own* operator).
+    pub fn block_matmul<T: Scalar>(&self, m: &Mat<T>, bf: BlockFn) -> Mat<T> {
+        let n = self.x.rows();
+        let mut out = Mat::<T>::zeros(n, m.cols());
+        self.block_matmul_into(m, bf, &mut out);
+        out
+    }
+
+    /// [`ShardedCovOp::block_matmul`] into a caller-owned `n × t` output
+    /// (overwritten), so backends and the solver can reuse buffers.
+    pub fn block_matmul_into<T: Scalar>(&self, m: &Mat<T>, bf: BlockFn, out: &mut Mat<T>) {
         let n = self.x.rows();
         assert_eq!(m.rows(), n);
         let t = m.cols();
-        let mut out = Mat::<T>::zeros(n, t);
+        assert_eq!(out.shape(), (n, t));
+        out.data_mut().fill(T::from_f64(0.0));
         let queues: Vec<ShardQueue> = self
             .shards
             .iter()
@@ -173,7 +225,58 @@ impl ShardedCovOp {
         run_rows_mut(out.data_mut(), n, t, &queues, |_shard, rows, chunk| {
             self.fill_rows(rows, m, bf_ref, chunk);
         });
-        out
+    }
+
+    /// Compute shard `s`'s row-block of the requested product into `out`
+    /// (`shards[s].len() × m.cols()` row-major, zeroed here) — the unit a
+    /// [`ShardBackend`] dispatches. Serial on purpose: the caller owns the
+    /// parallelism (thread pool, worker process, panel stream).
+    pub fn fill_shard<T: Scalar>(&self, s: usize, m: &Mat<T>, bf: &BlockFn, out: &mut [T]) {
+        let rows = self.shards[s].clone();
+        assert_eq!(out.len(), rows.len() * m.cols());
+        out.fill(T::from_f64(0.0));
+        self.fill_rows(rows, m, bf, out);
+    }
+
+    /// Materialise shard `s`'s noise-free kernel rows `K[rows(s), :]` as a
+    /// `shards[s].len() × n` panel — identical values to what the stream
+    /// path produces, so panel-based products (out-of-core checkpoints,
+    /// worker-resident panels) stay bit-compatible with streamed ones.
+    pub fn shard_panel(&self, s: usize) -> Mat {
+        let rows = self.shards[s].clone();
+        let n = self.x.rows();
+        let mut panel = Mat::zeros(rows.len(), n);
+        let sp = self.kernel.stationary();
+        let mut r2 = vec![0.0f64; n];
+        for (ri, i) in rows.enumerate() {
+            let out = panel.row_mut(ri);
+            match &sp {
+                Some(sp) => {
+                    squared_dists_row(&self.x, &self.xt, &self.xnorm, i, &mut r2);
+                    stationary_apply(sp, TileFn::Value, &r2, out);
+                }
+                None => {
+                    let xi = self.x.row(i);
+                    for (j, kv) in out.iter_mut().enumerate() {
+                        *kv = self.kernel.eval(xi, self.x.row(j));
+                    }
+                }
+            }
+        }
+        panel
+    }
+
+    /// Shard `s`'s squared-distance rows (`shards[s].len() × n`) — the
+    /// parameter-free panel a worker caches under `CachedDistances` so
+    /// hyperparameter updates don't force a rebuild.
+    pub fn shard_r2_panel(&self, s: usize) -> Mat {
+        let rows = self.shards[s].clone();
+        let n = self.x.rows();
+        let mut panel = Mat::zeros(rows.len(), n);
+        for (ri, i) in rows.enumerate() {
+            squared_dists_row(&self.x, &self.xt, &self.xnorm, i, panel.row_mut(ri));
+        }
+        panel
     }
 
     /// Compute rows `rows` of the requested kernel product into `out`
@@ -278,10 +381,23 @@ impl LinearOp for ShardedCovOp {
     }
 
     fn matmul(&self, m: &Mat) -> Mat {
-        self.block_matmul(m, BlockFn::Value { noise: None })
+        let mut out = Mat::zeros(m.rows(), m.cols());
+        self.matmul_into(m, &mut out);
+        out
+    }
+
+    fn matmul_into(&self, m: &Mat, out: &mut Mat) {
+        match &self.backend {
+            Some(b) => b.matmul_block(&BlockFn::Value { noise: None }, m, out),
+            None => self.block_matmul_into(m, BlockFn::Value { noise: None }, out),
+        }
     }
 
     fn prepare(&self) {
+        if self.backend.is_some() {
+            // workers/panels hold the materialised state; nothing local
+            return;
+        }
         match self.plan {
             MmmPlan::Stream => {}
             MmmPlan::CachedDistances => {
@@ -301,7 +417,14 @@ impl LinearOp for ShardedCovOp {
 
     fn dmatmul(&self, param: usize, m: &Mat) -> Mat {
         assert!(param < self.kernel.n_params());
-        self.block_matmul(m, BlockFn::DParam(param))
+        match &self.backend {
+            Some(b) => {
+                let mut out = Mat::zeros(m.rows(), m.cols());
+                b.matmul_block(&BlockFn::DParam(param), m, &mut out);
+                out
+            }
+            None => self.block_matmul(m, BlockFn::DParam(param)),
+        }
     }
 
     fn diag(&self) -> Vec<f64> {
@@ -339,6 +462,9 @@ impl KernelCov for ShardedCovOp {
         self.kernel.set_params(raw);
         // the materialised K is for the OLD parameters; r² is parameter-free
         *self.kmat.get_mut().unwrap() = None;
+        if let Some(b) = &self.backend {
+            b.set_params(raw, None);
+        }
     }
 
     fn shard_count(&self) -> usize {
@@ -367,6 +493,26 @@ impl ShardedKernelOp {
     pub fn with_tile(mut self, tile: usize) -> Self {
         self.op.inner_mut().set_tile(tile);
         self
+    }
+
+    /// Override the covariance part's [`MmmPlan`]. Shard executors
+    /// (out-of-core spools, worker processes) force `Stream` here and
+    /// manage per-shard panels themselves, so the full-matrix panels the
+    /// in-process plans would build never materialise.
+    pub fn set_plan(&mut self, plan: MmmPlan) {
+        self.op.inner_mut().set_plan(plan);
+    }
+
+    /// Route the covariance part's products through a [`ShardBackend`]
+    /// (the σ²I term stays local — backends see the noise-free K).
+    pub fn with_backend(mut self, backend: Arc<dyn ShardBackend>) -> Self {
+        self.op.inner_mut().set_backend(backend);
+        self
+    }
+
+    /// The attached shard backend, if any.
+    pub fn backend(&self) -> Option<&Arc<dyn ShardBackend>> {
+        self.op.inner().backend()
     }
 
     /// Training inputs.

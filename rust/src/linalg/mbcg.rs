@@ -411,60 +411,19 @@ pub fn mbcg_batch_stats_ws(
         if ws.active.is_empty() {
             break;
         }
-        match batch.shared_parts() {
-            Some((cov, sigma2s)) => {
-                // ONE fused covariance product for the whole active set:
-                // pack [D₁ … D_k] row-major (the active set only shrinks,
-                // so truncation never reallocates), multiply, unpack with
-                // the per-system σ²·Dᵢ term — column-for-column identical
-                // to the elementwise products.
-                //
-                // KEEP IN SYNC with `BatchOp::matmul_subset` (batch.rs):
-                // this is its allocation-free twin — same packing layout,
-                // same σ² handling — written against the workspace arena
-                // so the loop stays heap-free.
-                let total: usize = ws.active.iter().map(|&i| systems[i].d.cols()).sum();
-                let mut block_data = std::mem::take(&mut ws.block);
-                block_data.truncate(n * total);
-                for r in 0..n {
-                    let mut c0 = r * total;
-                    for &i in ws.active.iter() {
-                        let drow = systems[i].d.row(r);
-                        block_data[c0..c0 + drow.len()].copy_from_slice(drow);
-                        c0 += drow.len();
-                    }
-                }
-                let block = Mat::from_vec(n, total, block_data);
-                let mut kv_data = std::mem::take(&mut ws.kv);
-                kv_data.truncate(n * total);
-                let mut kv = Mat::from_vec(n, total, kv_data);
-                cov.matmul_into(&block, &mut kv);
-                for r in 0..n {
-                    let kvrow = kv.row(r);
-                    let mut c0 = 0;
-                    for &i in ws.active.iter() {
-                        let s2 = sigma2s[i];
-                        let sys = &systems[i];
-                        let t = sys.d.cols();
-                        let drow = sys.d.row(r);
-                        let orow = &mut ws.vs[i].row_mut(r)[..t];
-                        for c in 0..t {
-                            orow[c] = kvrow[c0 + c] + s2 * drow[c];
-                        }
-                        c0 += t;
-                    }
-                }
-                ws.block = block.into_vec();
-                ws.kv = kv.into_vec();
-                stats.batched_products += 1;
-            }
-            None => {
-                for &i in ws.active.iter() {
-                    batch.with_element(i, |op| op.matmul_into(&systems[i].d, &mut ws.vs[i]));
-                }
-                stats.batched_products += ws.active.len();
-            }
-        }
+        // ONE fused covariance product for the whole active set on the
+        // shared path (pack, multiply, unpack through the workspace
+        // arena — the active set only shrinks, so the scratch buffers
+        // sized during setup never regrow); elementwise products
+        // otherwise. Both paths live in `BatchOp::matmul_subset_into`,
+        // the single implementation of the pack/multiply/unpack.
+        stats.batched_products += batch.matmul_subset_into(
+            &ws.active,
+            |i| &systems[i].d,
+            &mut ws.vs,
+            &mut ws.block,
+            &mut ws.kv,
+        );
         for k in 0..ws.active.len() {
             let i = ws.active[k];
             let sys = &mut systems[i];

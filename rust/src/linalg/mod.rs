@@ -39,7 +39,7 @@ pub use cholesky::Cholesky;
 pub use kronecker::{kron_dense, kron_matmul, kron_matvec};
 pub use lanczos::lanczos_tridiag;
 pub use love::LoveFactors;
-pub use mbcg::{mbcg, mbcg_batch, mbcg_op, MbcgOptions, MbcgResult, TriDiag};
+pub use mbcg::{mbcg, mbcg_batch, mbcg_op, MbcgOptions, MbcgResult, MbcgWorkspace, TriDiag};
 pub use op::{BatchOp, LinearOp, SolveHint, SolveOptions, SolvePlanCache};
 pub use pivoted_cholesky::{pivoted_cholesky, pivoted_cholesky_op, PivotedCholesky};
 pub use preconditioner::{IdentityPrecond, PartialCholPrecond, Preconditioner};

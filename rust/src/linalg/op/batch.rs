@@ -178,52 +178,106 @@ impl<'a> BatchOp<'a> {
         }
     }
 
-    /// Batched product: `out[k] = A_{idx[k]} · ms[k]`. The shared path
-    /// concatenates the right-hand blocks, pays **one** covariance product
-    /// for the whole subset, and adds the per-element σ²·M axpy while
-    /// splitting the result back — column-for-column identical to the
-    /// elementwise products (each column's accumulation order is
-    /// unchanged).
-    ///
-    /// KEEP IN SYNC with the allocation-free twin of this pack/multiply/
-    /// unpack inside `mbcg_batch_stats_ws` (`linalg/mbcg.rs`) — the two
-    /// must stay bit-identical.
+    /// Batched product: `out[k] = A_{idx[k]} · ms[k]` (`idx` must be
+    /// distinct — each index addresses its own output). A thin allocating
+    /// wrapper over [`BatchOp::matmul_subset_into`], the single
+    /// implementation of the shared-path pack/multiply/unpack.
     pub fn matmul_subset(&self, idx: &[usize], ms: &[&Mat]) -> Vec<Mat> {
         assert_eq!(idx.len(), ms.len());
+        let n = self.n();
+        let slots = idx.iter().map(|&i| i + 1).max().unwrap_or(0);
+        let mut pos = vec![usize::MAX; slots];
+        for (k, &i) in idx.iter().enumerate() {
+            assert!(pos[i] == usize::MAX, "BatchOp: duplicate subset index {i}");
+            pos[i] = k;
+        }
+        let mut outs: Vec<Mat> = (0..slots)
+            .map(|i| {
+                if pos[i] == usize::MAX {
+                    Mat::zeros(0, 0)
+                } else {
+                    Mat::zeros(n, ms[pos[i]].cols())
+                }
+            })
+            .collect();
+        let (mut block, mut kv) = (Vec::new(), Vec::new());
+        self.matmul_subset_into(idx, |i| ms[pos[i]], &mut outs, &mut block, &mut kv);
+        idx.iter()
+            .map(|&i| std::mem::replace(&mut outs[i], Mat::zeros(0, 0)))
+            .collect()
+    }
+
+    /// The allocation-free core of [`BatchOp::matmul_subset`], shaped for
+    /// iteration loops: write `outs[i] = A_i · get_m(i)` for each distinct
+    /// `i` in `idx` (outputs are indexed by batch element, so `outs` spans
+    /// the whole batch and untouched slots may be empty placeholders). The
+    /// shared path concatenates the right-hand blocks through the caller's
+    /// `block` scratch, pays **one** covariance product into `kv`, and adds
+    /// the per-element σ²·M axpy while splitting the result back —
+    /// column-for-column identical to the elementwise products (each
+    /// column's accumulation order is unchanged). Scratch buffers only grow
+    /// on demand, so callers that pre-size them (the mBCG workspace) see a
+    /// heap-free call. Returns the number of operator products performed
+    /// (1 on the shared path, `idx.len()` elementwise).
+    pub fn matmul_subset_into<'m>(
+        &self,
+        idx: &[usize],
+        get_m: impl Fn(usize) -> &'m Mat,
+        outs: &mut [Mat],
+        block: &mut Vec<f64>,
+        kv: &mut Vec<f64>,
+    ) -> usize {
         match &self.repr {
-            Repr::General(els) => idx.iter().zip(ms).map(|(&i, &m)| els[i].matmul(m)).collect(),
+            Repr::General(els) => {
+                for &i in idx {
+                    els[i].matmul_into(get_m(i), &mut outs[i]);
+                }
+                idx.len()
+            }
             Repr::Shared { cov, sigma2s } => {
                 let n = cov.n();
-                let total: usize = ms.iter().map(|m| m.cols()).sum();
-                let mut block = Mat::zeros(n, total);
-                let mut c0 = 0;
-                for m in ms {
-                    assert_eq!(m.rows(), n, "BatchOp: RHS row mismatch");
-                    let t = m.cols();
-                    for r in 0..n {
-                        block.row_mut(r)[c0..c0 + t].copy_from_slice(m.row(r));
-                    }
-                    c0 += t;
+                let total: usize = idx.iter().map(|&i| get_m(i).cols()).sum();
+                let mut block_data = std::mem::take(block);
+                if block_data.len() < n * total {
+                    block_data.resize(n * total, 0.0);
                 }
-                let kv = cov.matmul(&block);
-                let mut out = Vec::with_capacity(ms.len());
-                let mut c0 = 0;
-                for (k, m) in ms.iter().enumerate() {
-                    let s2 = sigma2s[idx[k]];
-                    let t = m.cols();
-                    let mut o = Mat::zeros(n, t);
-                    for r in 0..n {
-                        let kr = &kv.row(r)[c0..c0 + t];
-                        let mr = m.row(r);
-                        let orow = o.row_mut(r);
+                block_data.truncate(n * total);
+                for r in 0..n {
+                    let mut c0 = r * total;
+                    for &i in idx {
+                        let m = get_m(i);
+                        assert_eq!(m.rows(), n, "BatchOp: RHS row mismatch");
+                        let mrow = m.row(r);
+                        block_data[c0..c0 + mrow.len()].copy_from_slice(mrow);
+                        c0 += mrow.len();
+                    }
+                }
+                let packed = Mat::from_vec(n, total, block_data);
+                let mut kv_data = std::mem::take(kv);
+                if kv_data.len() < n * total {
+                    kv_data.resize(n * total, 0.0);
+                }
+                kv_data.truncate(n * total);
+                let mut prod = Mat::from_vec(n, total, kv_data);
+                cov.matmul_into(&packed, &mut prod);
+                for r in 0..n {
+                    let kvrow = prod.row(r);
+                    let mut c0 = 0;
+                    for &i in idx {
+                        let s2 = sigma2s[i];
+                        let m = get_m(i);
+                        let t = m.cols();
+                        let mrow = m.row(r);
+                        let orow = &mut outs[i].row_mut(r)[..t];
                         for c in 0..t {
-                            orow[c] = kr[c] + s2 * mr[c];
+                            orow[c] = kvrow[c0 + c] + s2 * mrow[c];
                         }
+                        c0 += t;
                     }
-                    out.push(o);
-                    c0 += t;
                 }
-                out
+                *block = packed.into_vec();
+                *kv = prod.into_vec();
+                1
             }
         }
     }

@@ -85,6 +85,31 @@ impl MmmPlan {
             MmmPlan::MaterializeK
         }
     }
+
+    /// Device/worker-aware [`MmmPlan::auto`]: "materialise shard `s` on
+    /// backend `b`". Plans for **one shard's** `shard_len × n` panel
+    /// against that worker's own budget, so a
+    /// [`crate::runtime::dist::ShardBackend`] with W workers shards the
+    /// aggregate K storage W ways instead of replicating the single-process
+    /// decision — each worker materialises (or streams) exactly its own
+    /// row-block. Same plan preferences as [`MmmPlan::auto`].
+    pub fn auto_sharded(
+        shard_len: usize,
+        n: usize,
+        stationary: bool,
+        budget_bytes: usize,
+    ) -> MmmPlan {
+        let panel = shard_len
+            .saturating_mul(n)
+            .saturating_mul(std::mem::size_of::<f64>());
+        if n == 0 || shard_len == 0 || panel > budget_bytes {
+            MmmPlan::Stream
+        } else if stationary {
+            MmmPlan::CachedDistances
+        } else {
+            MmmPlan::MaterializeK
+        }
+    }
 }
 
 /// Default materialisation budget when neither the flag nor the env var is
@@ -135,6 +160,27 @@ mod tests {
         assert_eq!(MmmPlan::auto(0, true, mb), MmmPlan::Stream);
         // saturation guard: enormous n must not overflow the panel size
         assert_eq!(MmmPlan::auto(usize::MAX, true, mb), MmmPlan::Stream);
+    }
+
+    #[test]
+    fn auto_sharded_plans_per_worker_panels() {
+        let mb = 8 * 1024 * 1024; // admits shard_len·n up to 1024²
+        // a full-row plan would stream at n = 4096, but a 256-row shard fits
+        assert_eq!(MmmPlan::auto(4096, true, mb), MmmPlan::Stream);
+        assert_eq!(
+            MmmPlan::auto_sharded(256, 4096, true, mb),
+            MmmPlan::CachedDistances
+        );
+        assert_eq!(
+            MmmPlan::auto_sharded(256, 4096, false, mb),
+            MmmPlan::MaterializeK
+        );
+        assert_eq!(MmmPlan::auto_sharded(512, 4096, true, mb), MmmPlan::Stream);
+        assert_eq!(MmmPlan::auto_sharded(0, 4096, true, mb), MmmPlan::Stream);
+        assert_eq!(
+            MmmPlan::auto_sharded(usize::MAX, usize::MAX, true, mb),
+            MmmPlan::Stream
+        );
     }
 
     #[test]

@@ -44,7 +44,8 @@ pub use mmm::MmmPlan;
 pub use sharded::ShardedOp;
 pub use solve::{
     build_preconditioner, build_preconditioner_batch, plan, plan_batch, solve, solve_batch,
-    solve_cached, solve_strategy, solve_with, CirculantPlan, SolveOptions, SolvePlan,
+    solve_batch_ws, solve_cached, solve_strategy, solve_with, CirculantPlan, SolveOptions,
+    SolvePlan,
 };
 pub use structured::{KroneckerOp, ToeplitzLinOp};
 

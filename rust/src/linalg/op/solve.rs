@@ -29,7 +29,7 @@ use super::batch::BatchOp;
 use super::{LinearOp, SolveHint};
 use crate::linalg::cholesky::Cholesky;
 use crate::linalg::fft::{fft_inplace, Cplx};
-use crate::linalg::mbcg::{mbcg, mbcg_batch, MbcgOptions};
+use crate::linalg::mbcg::{mbcg, mbcg_batch_stats_ws, MbcgOptions, MbcgWorkspace};
 use crate::linalg::pivoted_cholesky::pivoted_cholesky;
 use crate::linalg::preconditioner::{IdentityPrecond, PartialCholPrecond, Preconditioner};
 use crate::tensor::Mat;
@@ -323,6 +323,22 @@ pub fn solve_batch(
     bs: &[&Mat],
     opts: &SolveOptions,
 ) -> Vec<Mat> {
+    let mut ws = MbcgWorkspace::new();
+    solve_batch_ws(batch, plans, bs, opts, &mut ws)
+}
+
+/// [`solve_batch`] against a caller-held [`MbcgWorkspace`]: the iterative
+/// sub-batch runs through `mbcg_batch_stats_ws`, so callers solving
+/// repeatedly against same-shaped batches (a serving loop answering every
+/// tenant per tick) keep the solver's packing/product/residual buffers
+/// warm across calls instead of re-allocating them per request batch.
+pub fn solve_batch_ws(
+    batch: &BatchOp<'_>,
+    plans: &[&SolvePlan],
+    bs: &[&Mat],
+    opts: &SolveOptions,
+    ws: &mut MbcgWorkspace,
+) -> Vec<Mat> {
     let b = batch.len();
     assert_eq!(plans.len(), b, "solve_batch: plan count mismatch");
     assert_eq!(bs.len(), b, "solve_batch: RHS count mismatch");
@@ -347,7 +363,7 @@ pub fn solve_batch(
         let preconds: Vec<&dyn Preconditioner> =
             iter_idx.iter().map(|&i| mbcg_precond(plans[i])).collect();
         let sub_bs: Vec<&Mat> = iter_idx.iter().map(|&i| bs[i]).collect();
-        let results = mbcg_batch(
+        let (results, _stats) = mbcg_batch_stats_ws(
             &sub,
             &sub_bs,
             &preconds,
@@ -356,6 +372,7 @@ pub fn solve_batch(
                 tol: opts.tol,
                 n_solve_only: usize::MAX, // clamped per system: no tridiags
             },
+            ws,
         );
         for (k, res) in iter_idx.iter().zip(results) {
             out[*k] = Some(res.solves);

@@ -5,6 +5,7 @@
 //! bbmm predict --dataset airfoil --model exact --engine bbmm
 //! bbmm serve   --dataset autompg --model exact|sgpr|ski --addr 127.0.0.1:7777
 //! bbmm serve   --tenant wine=exact --tenant fast=sgpr@airfoil   (multi-tenant)
+//! bbmm serve   --model exact --backend proc:4      (shards on worker processes)
 //! bbmm artifact --name mll_rbf_n256_d4 [--dir artifacts]
 //! bbmm info
 //! ```
@@ -22,8 +23,11 @@ use bbmm_gp::gp::exact::{Engine, ExactGp};
 use bbmm_gp::gp::mll::{BatchBbmmEngine, BbmmEngine, CholeskyEngine, InferenceEngine};
 use bbmm_gp::gp::predict::{mae, rmse};
 use bbmm_gp::gp::{DongEngine, SgprModel, SgprOp, SkiOp};
-use bbmm_gp::kernels::{DenseKernelOp, KernelCov, KernelCovOp, Matern52, Rbf, ShardedCovOp};
+use bbmm_gp::kernels::{
+    DenseKernelOp, KernelCov, KernelCovOp, Matern52, Rbf, ShardedCovOp, ShardedKernelOp,
+};
 use bbmm_gp::linalg::op::{solve_strategy, AddedDiagOp, LinearOp, SolveOptions, SolvePlanCache};
+use bbmm_gp::runtime::dist::{BackendSpec, MultiProcessBackend, OutOfCoreBackend, WorkerLaunch};
 use bbmm_gp::runtime::{default_artifact_dir, Runtime};
 use bbmm_gp::tensor::Mat;
 use bbmm_gp::train::{multi_restart_inits, noise_grid_inits, TrainConfig, Trainer};
@@ -59,6 +63,7 @@ fn main() {
         "sweep" => cmd_sweep(&args),
         "predict" => cmd_predict(&args),
         "serve" => cmd_serve(&args),
+        "shard-worker" => cmd_shard_worker(&args),
         "run" => cmd_run(&args),
         "artifact" => {
             cmd_artifact(&args);
@@ -137,6 +142,23 @@ fn cmd_run(args: &Args) -> Result<(), CliError> {
     }
 }
 
+/// Shard-worker process body — forked by `MultiProcessBackend` (the
+/// `--backend proc:N` serve path and the dist tests), not meant for
+/// interactive use: connect back to the driver and serve shard products
+/// until told to shut down.
+fn cmd_shard_worker(args: &Args) -> Result<(), CliError> {
+    let Some(addr) = args.get("connect") else {
+        return Err(CliError {
+            flag: "connect".to_string(),
+            message: "bbmm shard-worker requires --connect <addr>".to_string(),
+        });
+    };
+    bbmm_gp::runtime::dist::worker::run_worker(addr).map_err(|e| CliError {
+        flag: "connect".to_string(),
+        message: format!("shard worker failed: {e}"),
+    })
+}
+
 fn print_help() {
     println!(
         "bbmm — Blackbox Matrix-Matrix GP inference (GPyTorch reproduction)\n\
@@ -150,6 +172,8 @@ fn print_help() {
                      --noises s1,s2,… for a shared-covariance sweep)\n\
            predict   train then evaluate test MAE/RMSE\n\
            serve     train a model and serve predictions over TCP\n\
+           shard-worker  (internal) shard-product worker process, forked\n\
+                     by --backend proc:N — not for interactive use\n\
            artifact  load + execute an AOT HLO artifact via PJRT\n\
            info      environment / thread / artifact report\n\
          \n\
@@ -166,6 +190,14 @@ fn print_help() {
            --noises s1,s2,…    (sweep: explicit noise grid — candidates\n\
                                share one covariance, the fused fast path)\n\
            --shards S          (serve: row-shard the kernel operator)\n\
+           --backend inproc|proc:N|ooc:N   (serve, exact model: where the\n\
+                               row shards live and execute — the local\n\
+                               thread pool, N forked worker processes\n\
+                               speaking the shard wire protocol, or an\n\
+                               out-of-core spool of N checkpointed kernel\n\
+                               panels streamed under a memory budget)\n\
+           --worker-budget-mb M (per-worker materialisation / out-of-core\n\
+                               window budget; default --mmm-budget-mb)\n\
            --threads N         (size the persistent worker pool; flag\n\
                                form of BBMM_THREADS)\n\
            --mmm-budget-mb M   (kernel materialisation budget: under it,\n\
@@ -477,6 +509,9 @@ fn cmd_predict(args: &Args) -> Result<(), CliError> {
 struct ExactServable {
     op: AddedDiagOp<Box<dyn KernelCov>>,
     y: Vec<f64>,
+    /// shard-backend description when the shards execute somewhere other
+    /// than the local thread pool (`--backend proc:N` / `ooc:N`)
+    backend: Option<String>,
 }
 
 impl ServableModel for ExactServable {
@@ -495,12 +530,16 @@ impl ServableModel for ExactServable {
         &self.y
     }
     fn describe(&self) -> String {
-        format!(
+        let base = format!(
             "AddedDiag(KernelCov × {} shards) n={} strategy={:?}",
             self.op.inner().shard_count(),
             self.op.n(),
             solve_strategy(&self.op)
-        )
+        );
+        match &self.backend {
+            Some(b) => format!("{base} backend={b}"),
+            None => base,
+        }
     }
 }
 
@@ -607,15 +646,71 @@ fn build_servable(
         }
         _ => {
             // exact: monolithic or row-sharded covariance backend, sized
-            // to traffic with --shards N (same numerics either way)
-            let cov: Box<dyn KernelCov> = if shards > 1 {
-                Box::new(ShardedCovOp::new(ds.x_train.clone(), kernel, shards))
-            } else {
-                Box::new(KernelCovOp::new(ds.x_train.clone(), kernel))
+            // to traffic with --shards N, and placed with --backend:
+            // in-process threads (default), forked worker processes, or an
+            // out-of-core panel spool — same numerics on every placement
+            let backend = match args.get("backend") {
+                None => BackendSpec::InProcess,
+                Some(s) => BackendSpec::parse(s).map_err(|message| CliError {
+                    flag: "backend".to_string(),
+                    message,
+                })?,
+            };
+            let budget_mb = args.usize_or(
+                "worker-budget-mb",
+                bbmm_gp::linalg::op::mmm::budget_bytes() >> 20,
+            )?;
+            let (cov, backend_desc): (Box<dyn KernelCov>, Option<String>) = match backend {
+                BackendSpec::InProcess if shards > 1 => (
+                    Box::new(ShardedCovOp::new(ds.x_train.clone(), kernel, shards)),
+                    None,
+                ),
+                BackendSpec::InProcess => {
+                    (Box::new(KernelCovOp::new(ds.x_train.clone(), kernel)), None)
+                }
+                BackendSpec::MultiProcess { workers } => {
+                    // at least one shard per worker; --shards can refine
+                    let n_shards = shards.max(workers);
+                    let proc = MultiProcessBackend::launch(
+                        ds.x_train.clone(),
+                        kernel.as_ref(),
+                        noise,
+                        n_shards,
+                        workers,
+                        budget_mb,
+                        WorkerLaunch::default(),
+                    )
+                    .map_err(|e| CliError {
+                        flag: "backend".to_string(),
+                        message: format!("failed to launch shard workers: {e}"),
+                    })?;
+                    let desc = proc.describe();
+                    let op = ShardedCovOp::new(ds.x_train.clone(), kernel, n_shards)
+                        .with_backend(Arc::new(proc));
+                    (Box::new(op), Some(desc))
+                }
+                BackendSpec::OutOfCore { shards: panels } => {
+                    let n_shards = shards.max(panels);
+                    // the spool generator carries its own kernel instance
+                    let mut spool_kernel = make_kernel(args);
+                    spool_kernel.set_params(&params[..nk]);
+                    let inner =
+                        ShardedKernelOp::new(ds.x_train.clone(), spool_kernel, noise, n_shards);
+                    let ooc =
+                        OutOfCoreBackend::new(inner, budget_mb << 20).map_err(|e| CliError {
+                            flag: "backend".to_string(),
+                            message: format!("failed to spool out-of-core panels: {e}"),
+                        })?;
+                    let desc = ooc.describe();
+                    let op = ShardedCovOp::new(ds.x_train.clone(), kernel, n_shards)
+                        .with_backend(Arc::new(ooc));
+                    (Box::new(op), Some(desc))
+                }
             };
             Box::new(ExactServable {
                 op: AddedDiagOp::new(cov, noise),
                 y: ds.y_train.clone(),
+                backend: backend_desc,
             })
         }
     })

@@ -1,0 +1,301 @@
+//! Out-of-core shard backend: checkpointed kernel panels.
+//!
+//! Wang et al. 2019 train million-point GPs by never holding K resident:
+//! each partition's rows are (re)materialised under a per-worker memory
+//! budget. [`OutOfCoreBackend`] is the single-host version of that memory
+//! model — every shard's noise-free kernel rows are materialised **once**
+//! per hyperparameter setting and checkpointed to a disk spool, then each
+//! product streams the panels back through a bounded window
+//! ([`OutOfCoreBackend::window_rows`]) and contracts them against the
+//! broadcast RHS. Resident kernel memory is O(window · n) regardless of
+//! how many shards exist, while repeated products still amortise the
+//! kernel evaluation exactly like [`crate::linalg::op::MmmPlan`]'s
+//! `MaterializeK` — the plan decision is per shard, against the spool
+//! window, via [`crate::linalg::op::MmmPlan::auto_sharded`].
+//!
+//! Numerics: panels are written by `ShardedCovOp::shard_panel` and
+//! contracted by `contract_panel_rows`, both of which mirror the streaming
+//! fill exactly, so out-of-core products are bit-identical to in-process
+//! ones (asserted in the tests).
+
+use super::{contract_panel_rows, BackendStats, ShardBackend};
+use crate::kernels::{ShardBlock, ShardedKernelOp};
+use crate::linalg::op::MmmPlan;
+use crate::tensor::Mat;
+use std::fs::{self, File};
+use std::io::{self, Read, Write};
+use std::ops::Range;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, RwLock};
+
+static SPOOL_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Checkpointed-panel backend: shard kernel rows live on disk, products
+/// stream them through a bounded in-memory window.
+pub struct OutOfCoreBackend {
+    /// the generator for panels and the fallback for streamed derivatives;
+    /// plan forced to `Stream` so it never materialises n×n state itself
+    op: RwLock<ShardedKernelOp>,
+    /// spool directory holding one `panel_<s>.f64` per shard
+    dir: PathBuf,
+    /// panel-window budget in bytes (max resident spool bytes per product)
+    budget_bytes: usize,
+    stats: Mutex<BackendStats>,
+}
+
+impl OutOfCoreBackend {
+    /// Materialise every shard panel of `op` into a fresh spool directory
+    /// under the system temp dir. `budget_bytes` bounds the read-back
+    /// window per product (not the spool size — that is the whole point).
+    pub fn new(mut op: ShardedKernelOp, budget_bytes: usize) -> io::Result<OutOfCoreBackend> {
+        assert!(
+            op.backend().is_none(),
+            "OutOfCoreBackend must wrap a backend-less operator"
+        );
+        op.set_plan(MmmPlan::Stream);
+        let dir = std::env::temp_dir().join(format!(
+            "bbmm-ooc-{}-{}",
+            std::process::id(),
+            SPOOL_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        fs::create_dir_all(&dir)?;
+        let backend = OutOfCoreBackend {
+            op: RwLock::new(op),
+            dir,
+            budget_bytes: budget_bytes.max(1),
+            stats: Mutex::new(BackendStats::default()),
+        };
+        backend.checkpoint_panels()?;
+        Ok(backend)
+    }
+
+    /// Rows of panel data the streaming window holds at once.
+    pub fn window_rows(&self) -> usize {
+        let n = self.n();
+        (self.budget_bytes / (n.max(1) * 8)).max(1)
+    }
+
+    /// The spool directory (tests probe it; removed by `shutdown`/drop).
+    pub fn spool_dir(&self) -> &PathBuf {
+        &self.dir
+    }
+
+    fn panel_path(&self, s: usize) -> PathBuf {
+        self.dir.join(format!("panel_{s}.f64"))
+    }
+
+    /// (Re)write every shard's noise-free kernel rows to the spool.
+    fn checkpoint_panels(&self) -> io::Result<()> {
+        let op = self.op.read().unwrap();
+        let mut written = 0u64;
+        for s in 0..op.shard_count() {
+            let panel = op.cov().shard_panel(s);
+            let mut f = File::create(self.panel_path(s))?;
+            let mut bytes = Vec::with_capacity(panel.data().len() * 8);
+            for v in panel.data() {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+            f.write_all(&bytes)?;
+            written += bytes.len() as u64;
+        }
+        self.stats.lock().unwrap().bytes_tx += written;
+        Ok(())
+    }
+
+    /// Stream one shard's spooled panel through the window, contracting
+    /// each chunk of rows against `m` into the matching rows of `out`.
+    fn stream_shard(
+        &self,
+        s: usize,
+        rows: Range<usize>,
+        noise: Option<f64>,
+        m: &Mat,
+        out: &mut Mat,
+    ) -> io::Result<u64> {
+        let n = m.rows();
+        let t = m.cols();
+        let window = self.window_rows();
+        let mut f = File::open(self.panel_path(s))?;
+        let mut raw = Vec::new();
+        let mut panel = Vec::new();
+        let mut read = 0u64;
+        let mut row = rows.start;
+        while row < rows.end {
+            let chunk = window.min(rows.end - row);
+            raw.resize(chunk * n * 8, 0);
+            f.read_exact(&mut raw)?;
+            read += raw.len() as u64;
+            panel.clear();
+            panel.extend(
+                raw.chunks_exact(8)
+                    .map(|c| f64::from_le_bytes(c.try_into().unwrap())),
+            );
+            let out_rows = &mut out.data_mut()[row * t..(row + chunk) * t];
+            contract_panel_rows(&panel, n, m, noise, row, out_rows);
+            row += chunk;
+        }
+        Ok(read)
+    }
+}
+
+impl ShardBackend for OutOfCoreBackend {
+    fn describe(&self) -> String {
+        format!(
+            "ooc:{} (spool {}, window {} rows)",
+            self.n_shards(),
+            self.dir.display(),
+            self.window_rows()
+        )
+    }
+
+    fn n(&self) -> usize {
+        self.op.read().unwrap().x().rows()
+    }
+
+    fn n_shards(&self) -> usize {
+        self.op.read().unwrap().shard_count()
+    }
+
+    fn shard_rows(&self, s: usize) -> Range<usize> {
+        self.op.read().unwrap().shards()[s].clone()
+    }
+
+    fn matmul_block(&self, block: &ShardBlock, m: &Mat, out: &mut Mat) {
+        let n = m.rows();
+        let t = m.cols();
+        assert_eq!(out.shape(), (n, t));
+        let op = self.op.read().unwrap();
+        assert_eq!(n, op.x().rows());
+        let stationary = op.kernel().stationary().is_some();
+        // which requests the K spool can serve: value products always, and
+        // ∂/∂log-outputscale (= the value tile) for stationary kernels
+        let spooled: Option<Option<f64>> = match block {
+            ShardBlock::Value { noise } => Some(*noise),
+            ShardBlock::DParam(1) if stationary => Some(None),
+            ShardBlock::DParam(_) => None,
+        };
+        let mut read = 0u64;
+        for s in 0..op.shard_count() {
+            let rows = op.shards()[s].clone();
+            match spooled {
+                Some(noise) => {
+                    read += self
+                        .stream_shard(s, rows, noise, m, out)
+                        .unwrap_or_else(|e| panic!("ooc spool read failed: {e}"));
+                }
+                None => {
+                    // parameter derivatives that aren't the value tile are
+                    // streamed from X (plan is Stream, so O(row) memory)
+                    let out_rows = &mut out.data_mut()[rows.start * t..rows.end * t];
+                    op.cov().fill_shard(s, m, block, out_rows);
+                }
+            }
+        }
+        let mut st = self.stats.lock().unwrap();
+        st.rounds += 1;
+        st.bytes_rx += read;
+    }
+
+    fn set_params(&self, raw: &[f64], sigma2: Option<f64>) {
+        {
+            let mut op = self.op.write().unwrap();
+            let nk = op.kernel().n_params();
+            assert_eq!(raw.len(), nk);
+            let mut full = raw.to_vec();
+            let cur = op.params();
+            full.push(match sigma2 {
+                Some(s2) => s2.ln(),
+                None => cur[nk],
+            });
+            op.set_params(&full);
+        }
+        // panels hold values for the old parameters — rebuild the spool
+        self.checkpoint_panels()
+            .unwrap_or_else(|e| panic!("ooc spool rebuild failed: {e}"));
+    }
+
+    fn stats(&self) -> BackendStats {
+        *self.stats.lock().unwrap()
+    }
+
+    fn shutdown(&self) {
+        let _ = fs::remove_dir_all(&self.dir);
+    }
+}
+
+impl Drop for OutOfCoreBackend {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{DenseKernelOp, Rbf};
+    use crate::linalg::op::LinearOp;
+    use crate::util::Rng;
+
+    fn setup(n: usize, shards: usize, budget: usize) -> (OutOfCoreBackend, DenseKernelOp, Mat) {
+        let mut rng = Rng::new(41);
+        let x = Mat::from_fn(n, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+        let m = Mat::from_fn(n, 4, |_, _| rng.normal());
+        let op = ShardedKernelOp::new(x.clone(), Box::new(Rbf::new(0.5, 1.2)), 0.1, shards);
+        let dense = DenseKernelOp::new(x, Box::new(Rbf::new(0.5, 1.2)), 0.1);
+        (OutOfCoreBackend::new(op, budget).unwrap(), dense, m)
+    }
+
+    #[test]
+    fn spooled_products_match_dense_bit_for_tiny_windows() {
+        // budget of one row: the window is as small as it gets
+        let (backend, dense, m) = setup(50, 3, 1);
+        assert_eq!(backend.window_rows(), 1);
+        assert!(backend.spool_dir().join("panel_0.f64").exists());
+        let mut got = Mat::zeros(50, 4);
+        backend.matmul_block(&ShardBlock::Value { noise: Some(0.1) }, &m, &mut got);
+        assert!(got.max_abs_diff(&dense.matmul(&m)) < 1e-12);
+        // noise-free + derivatives
+        let mut noisefree = Mat::zeros(50, 4);
+        backend.matmul_block(&ShardBlock::Value { noise: None }, &m, &mut noisefree);
+        let mut d0 = Mat::zeros(50, 4);
+        backend.matmul_block(&ShardBlock::DParam(0), &m, &mut d0);
+        let mut d1 = Mat::zeros(50, 4);
+        backend.matmul_block(&ShardBlock::DParam(1), &m, &mut d1);
+        assert!(d0.max_abs_diff(&dense.dmatmul(0, &m)) < 1e-12);
+        assert!(d1.max_abs_diff(&dense.dmatmul(1, &m)) < 1e-12);
+        let st = backend.stats();
+        assert_eq!(st.rounds, 4);
+        assert!(st.bytes_tx > 0 && st.bytes_rx > 0);
+    }
+
+    #[test]
+    fn set_params_rebuilds_the_spool() {
+        let (backend, _dense, m) = setup(40, 2, 1 << 20);
+        let raw = vec![-0.3, 0.25];
+        backend.set_params(&raw, Some(0.05));
+        let mut fresh = DenseKernelOp::new(
+            {
+                let mut rng = Rng::new(41);
+                Mat::from_fn(40, 2, |_, _| rng.uniform_in(-1.0, 1.0))
+            },
+            Box::new(Rbf::new(0.5, 1.2)),
+            0.1,
+        );
+        fresh.set_params(&[raw[0], raw[1], 0.05f64.ln()]);
+        let mut got = Mat::zeros(40, 4);
+        backend.matmul_block(&ShardBlock::Value { noise: Some(0.05) }, &m, &mut got);
+        assert!(got.max_abs_diff(&fresh.matmul(&m)) < 1e-12);
+    }
+
+    #[test]
+    fn shutdown_removes_the_spool() {
+        let (backend, _dense, _m) = setup(20, 2, 1 << 20);
+        let dir = backend.spool_dir().clone();
+        assert!(dir.exists());
+        backend.shutdown();
+        assert!(!dir.exists());
+        // idempotent
+        backend.shutdown();
+    }
+}

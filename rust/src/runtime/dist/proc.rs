@@ -1,0 +1,527 @@
+//! Multi-process shard backend: forked `bbmm shard-worker` children.
+//!
+//! The driver binds an ephemeral localhost TCP listener, forks N worker
+//! processes (`bbmm shard-worker --connect <addr>`), and hands each a
+//! round-robin subset of the shard partition via
+//! [`WireMsg::LoadShard`]. Every product is then one broadcast/gather
+//! round: the skinny RHS goes out to all workers in one frame each, the
+//! per-shard row-blocks come back in one frame each — O(n·t) bytes per
+//! mBCG iteration, no per-tile traffic.
+//!
+//! **Fault model.** Workers are stateless beyond what `LoadShard` carries,
+//! so recovery is re-derivation: a heartbeat monitor pings workers between
+//! products, and any socket error (heartbeat or mid-gather) kills the
+//! slot, forks a replacement, replays `LoadShard` with the *current*
+//! hyperparameters, and re-dispatches the same product. Shard fills are
+//! deterministic serial loops, so the re-computed block is bit-identical
+//! to what the lost worker would have sent — a crash can delay an answer
+//! but never change it (asserted in `tests/dist_backend.rs`).
+
+use super::protocol::{ResultBlock, WireMsg, PROTOCOL_VERSION};
+use super::{kernel_wire_name, BackendStats, ShardBackend};
+use crate::kernels::{Kernel, ShardBlock};
+use crate::runtime::shard::partition_rows;
+use crate::tensor::Mat;
+use std::io::{self, Write};
+use std::net::{TcpListener, TcpStream};
+use std::ops::Range;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// How worker processes are forked and supervised.
+#[derive(Debug, Clone)]
+pub struct WorkerLaunch {
+    /// worker executable (default: this process's own binary)
+    pub exe: PathBuf,
+    /// leading argv (the connect address is appended as the final arg)
+    pub args: Vec<String>,
+    /// heartbeat period in ms; 0 disables the background monitor
+    pub heartbeat_ms: u64,
+    /// deadline for a forked worker to connect and greet
+    pub spawn_timeout_ms: u64,
+    /// per-product read deadline (a hung worker counts as crashed)
+    pub product_timeout_ms: u64,
+}
+
+impl Default for WorkerLaunch {
+    fn default() -> WorkerLaunch {
+        WorkerLaunch {
+            exe: std::env::current_exe().unwrap_or_else(|_| PathBuf::from("bbmm")),
+            args: vec!["shard-worker".into(), "--connect".into()],
+            heartbeat_ms: 1000,
+            spawn_timeout_ms: 15_000,
+            product_timeout_ms: 600_000,
+        }
+    }
+}
+
+struct WorkerProc {
+    child: Child,
+    stream: TcpStream,
+}
+
+struct ProcState {
+    workers: Vec<Option<WorkerProc>>,
+    raw: Vec<f64>,
+    sigma2: f64,
+    shut: bool,
+}
+
+struct MpInner {
+    n: usize,
+    partition: Vec<Range<usize>>,
+    /// per worker slot: the shard ids it owns (round-robin, fixed)
+    assign: Vec<Vec<usize>>,
+    kernel_name: String,
+    x: Mat,
+    budget_mb: u64,
+    launch: WorkerLaunch,
+    listener: TcpListener,
+    addr: String,
+    state: Mutex<ProcState>,
+    stats: Mutex<BackendStats>,
+    stop: AtomicBool,
+}
+
+/// Process-parallel shard backend (see module docs).
+pub struct MultiProcessBackend {
+    inner: Arc<MpInner>,
+    monitor: Option<JoinHandle<()>>,
+}
+
+const MAX_ROUND_ATTEMPTS: usize = 3;
+
+impl MpInner {
+    fn accept_deadline(&self) -> io::Result<TcpStream> {
+        let deadline = Instant::now() + Duration::from_millis(self.launch.spawn_timeout_ms);
+        loop {
+            match self.listener.accept() {
+                Ok((s, _)) => {
+                    s.set_nonblocking(false)?;
+                    return Ok(s);
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        return Err(io::Error::new(
+                            io::ErrorKind::TimedOut,
+                            "shard worker did not connect in time",
+                        ));
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Fork one worker, wait for its greeting, leave it ready for LoadShard.
+    fn spawn_one(&self) -> io::Result<WorkerProc> {
+        let mut child = Command::new(&self.launch.exe)
+            .args(&self.launch.args)
+            .arg(&self.addr)
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .spawn()?;
+        let stream = match self.accept_deadline() {
+            Ok(s) => s,
+            Err(e) => {
+                let _ = child.kill();
+                let _ = child.wait();
+                return Err(e);
+            }
+        };
+        let _ = stream.set_nodelay(true);
+        stream.set_read_timeout(Some(Duration::from_millis(self.launch.spawn_timeout_ms)))?;
+        let hello = WireMsg::decode(&mut (&stream));
+        match hello {
+            Ok(WireMsg::Hello { version, .. }) if version == PROTOCOL_VERSION => {}
+            other => {
+                let _ = child.kill();
+                let _ = child.wait();
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("bad worker greeting: {other:?}"),
+                ));
+            }
+        }
+        stream.set_read_timeout(Some(Duration::from_millis(self.launch.product_timeout_ms)))?;
+        Ok(WorkerProc { child, stream })
+    }
+
+    fn send_load(&self, state: &ProcState, w: usize) -> io::Result<()> {
+        let msg = WireMsg::LoadShard {
+            x: self.x.clone(),
+            kernel: self.kernel_name.clone(),
+            raw: state.raw.clone(),
+            sigma2: state.sigma2,
+            n_shards: self.partition.len() as u64,
+            owned: self.assign[w].iter().map(|&s| s as u64).collect(),
+            budget_mb: self.budget_mb,
+        };
+        let wp = state.workers[w].as_ref().expect("booting an empty slot");
+        msg.encode(&mut (&wp.stream))
+    }
+
+    /// Fill slot `w` with a freshly forked + loaded worker.
+    fn boot(&self, state: &mut ProcState, w: usize) -> io::Result<()> {
+        state.workers[w] = Some(self.spawn_one()?);
+        self.send_load(state, w)
+    }
+
+    /// Kill + re-fork slot `w`, replaying current params (counts a restart).
+    fn respawn(&self, state: &mut ProcState, w: usize) -> io::Result<()> {
+        if let Some(mut wp) = state.workers[w].take() {
+            let _ = wp.child.kill();
+            let _ = wp.child.wait();
+        }
+        self.boot(state, w)?;
+        self.stats.lock().unwrap().restarts += 1;
+        Ok(())
+    }
+
+    /// One broadcast/gather round with crash recovery (see module docs).
+    fn round(&self, block: &ShardBlock, m: &Mat, out: &mut Mat) {
+        let t = m.cols();
+        assert_eq!(m.rows(), self.n);
+        assert_eq!(out.shape(), (self.n, t));
+        let mut frame = Vec::new();
+        WireMsg::Matmul {
+            block: *block,
+            m: m.clone(),
+        }
+        .encode(&mut frame)
+        .expect("in-memory encode cannot fail");
+
+        let mut state = self.state.lock().unwrap();
+        assert!(!state.shut, "backend is shut down");
+        let nw = state.workers.len();
+        let mut done = vec![false; nw];
+        let mut covered = vec![false; self.partition.len()];
+        let (mut tx, mut rx) = (0u64, 0u64);
+        for attempt in 0..MAX_ROUND_ATTEMPTS {
+            // 1) make every pending slot live (respawn replays params)
+            for w in 0..nw {
+                if !done[w] && state.workers[w].is_none() {
+                    if let Err(e) = self.respawn(&mut state, w) {
+                        if attempt + 1 == MAX_ROUND_ATTEMPTS {
+                            panic!("shard worker {w} cannot be respawned: {e}");
+                        }
+                        continue;
+                    }
+                }
+            }
+            // 2) broadcast the RHS to every pending worker (pipelined: all
+            //    writes go out before any gather blocks on a read)
+            for w in 0..nw {
+                if done[w] {
+                    continue;
+                }
+                let sent = match state.workers[w].as_ref() {
+                    Some(wp) => (&wp.stream).write_all(&frame).is_ok(),
+                    None => continue,
+                };
+                if sent {
+                    tx += frame.len() as u64;
+                } else {
+                    state.workers[w] = None; // discovered dead on write
+                }
+            }
+            // 3) gather per-shard row-blocks; any failure marks the slot
+            //    dead for the next attempt's deterministic re-dispatch
+            for w in 0..nw {
+                if done[w] {
+                    continue;
+                }
+                let gathered = match state.workers[w].as_ref() {
+                    Some(wp) => WireMsg::decode(&mut (&wp.stream)),
+                    None => continue,
+                };
+                match gathered {
+                    Ok(WireMsg::MatmulResult { blocks }) => {
+                        for rb in &blocks {
+                            rx += self.scatter(rb, t, &mut covered, out);
+                        }
+                        done[w] = true;
+                    }
+                    Ok(WireMsg::Err { message }) => {
+                        // a worker-side *logic* error is deterministic —
+                        // respawning cannot fix it
+                        panic!("shard worker {w} failed: {message}");
+                    }
+                    _ => state.workers[w] = None,
+                }
+            }
+            if done.iter().all(|&d| d) {
+                break;
+            }
+        }
+        assert!(
+            done.iter().all(|&d| d),
+            "shard workers kept failing after {MAX_ROUND_ATTEMPTS} dispatch attempts"
+        );
+        assert!(
+            covered.iter().all(|&c| c),
+            "gathered blocks do not cover the shard partition"
+        );
+        let mut st = self.stats.lock().unwrap();
+        st.rounds += 1;
+        st.bytes_tx += tx;
+        st.bytes_rx += rx;
+    }
+
+    /// Copy one gathered row-block into the assembled product.
+    fn scatter(&self, rb: &ResultBlock, t: usize, covered: &mut [bool], out: &mut Mat) -> u64 {
+        let s = rb.shard as usize;
+        assert!(s < self.partition.len(), "worker returned unknown shard");
+        let rows = self.partition[s].clone();
+        assert_eq!(
+            rb.data.shape(),
+            (rows.len(), t),
+            "worker returned a misshapen block"
+        );
+        assert!(!covered[s], "shard {s} gathered twice in one round");
+        covered[s] = true;
+        out.data_mut()[rows.start * t..rows.end * t].copy_from_slice(rb.data.data());
+        rb.data.data().len() as u64 * 8
+    }
+
+    /// Ping every worker; respawn the dead. Skips (without error) when a
+    /// product currently holds the state lock — active traffic is its own
+    /// liveness proof.
+    fn heartbeat(&self) {
+        let Ok(mut state) = self.state.try_lock() else {
+            return;
+        };
+        if state.shut {
+            return;
+        }
+        for w in 0..state.workers.len() {
+            let alive = match state.workers[w].as_ref() {
+                None => false,
+                Some(wp) => {
+                    let _ = wp
+                        .stream
+                        .set_read_timeout(Some(Duration::from_millis(2000)));
+                    let ok = WireMsg::Ping.encode(&mut (&wp.stream)).is_ok()
+                        && matches!(WireMsg::decode(&mut (&wp.stream)), Ok(WireMsg::Pong));
+                    let _ = wp.stream.set_read_timeout(Some(Duration::from_millis(
+                        self.launch.product_timeout_ms,
+                    )));
+                    ok
+                }
+            };
+            if !alive {
+                if let Some(mut wp) = state.workers[w].take() {
+                    let _ = wp.child.kill();
+                    let _ = wp.child.wait();
+                }
+                let _ = self.respawn(&mut state, w); // next round retries on failure
+            }
+        }
+    }
+
+    fn shutdown_workers(&self) {
+        let mut state = self.state.lock().unwrap();
+        state.shut = true;
+        for slot in state.workers.iter_mut() {
+            if let Some(mut wp) = slot.take() {
+                let _ = WireMsg::Shutdown.encode(&mut (&wp.stream));
+                // grace period, then force
+                let deadline = Instant::now() + Duration::from_millis(500);
+                loop {
+                    match wp.child.try_wait() {
+                        Ok(Some(_)) => break,
+                        Ok(None) if Instant::now() < deadline => {
+                            std::thread::sleep(Duration::from_millis(10))
+                        }
+                        _ => {
+                            let _ = wp.child.kill();
+                            let _ = wp.child.wait();
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl MultiProcessBackend {
+    /// Fork `workers` shard workers over an `n_shards` partition of
+    /// `K(x, x)` and load them. `budget_mb` is the **per-worker**
+    /// materialisation budget (each worker plans its own shards via
+    /// [`crate::linalg::op::MmmPlan::auto_sharded`], so aggregate K
+    /// storage is sharded, never replicated). Errors if the kernel family
+    /// is not wire-encodable ([`kernel_wire_name`]) or workers fail to
+    /// fork/connect.
+    pub fn launch(
+        x: Mat,
+        kernel: &dyn Kernel,
+        sigma2: f64,
+        n_shards: usize,
+        workers: usize,
+        budget_mb: usize,
+        launch: WorkerLaunch,
+    ) -> io::Result<MultiProcessBackend> {
+        let kernel_name = kernel_wire_name(kernel)
+            .ok_or_else(|| {
+                io::Error::new(
+                    io::ErrorKind::InvalidInput,
+                    "kernel family is not wire-encodable (proc backend supports \
+                     rbf/matern12/matern32/matern52)",
+                )
+            })?
+            .to_string();
+        let n = x.rows();
+        let partition = partition_rows(n, n_shards);
+        let nw = workers.clamp(1, partition.len().max(1));
+        let assign: Vec<Vec<usize>> = (0..nw)
+            .map(|w| (w..partition.len()).step_by(nw).collect())
+            .collect();
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?.to_string();
+        let inner = Arc::new(MpInner {
+            n,
+            partition,
+            assign,
+            kernel_name,
+            x,
+            budget_mb: budget_mb as u64,
+            launch,
+            listener,
+            addr,
+            state: Mutex::new(ProcState {
+                workers: (0..nw).map(|_| None).collect(),
+                raw: kernel.params(),
+                sigma2,
+                shut: false,
+            }),
+            stats: Mutex::new(BackendStats::default()),
+            stop: AtomicBool::new(false),
+        });
+        {
+            let mut state = inner.state.lock().unwrap();
+            for w in 0..nw {
+                inner.boot(&mut state, w)?;
+            }
+        }
+        let monitor = (inner.launch.heartbeat_ms > 0).then(|| {
+            let mon = Arc::clone(&inner);
+            std::thread::spawn(move || {
+                let step = Duration::from_millis(50);
+                let mut since_ping = 0u64;
+                while !mon.stop.load(Ordering::Relaxed) {
+                    std::thread::sleep(step);
+                    since_ping += 50;
+                    if since_ping >= mon.launch.heartbeat_ms {
+                        since_ping = 0;
+                        mon.heartbeat();
+                    }
+                }
+            })
+        });
+        Ok(MultiProcessBackend { inner, monitor })
+    }
+
+    /// Worker process count.
+    pub fn workers(&self) -> usize {
+        self.inner.assign.len()
+    }
+
+    /// The listener address workers connect back to.
+    pub fn addr(&self) -> &str {
+        &self.inner.addr
+    }
+
+    /// Kill worker `w`'s process **without** clearing its slot — the next
+    /// round (or heartbeat) must *discover* the death and recover. This is
+    /// the chaos hook for the crash-mid-solve tests.
+    pub fn kill_worker(&self, w: usize) {
+        let mut state = self.inner.state.lock().unwrap();
+        if let Some(wp) = state.workers[w].as_mut() {
+            let _ = wp.child.kill();
+            let _ = wp.child.wait();
+        }
+    }
+
+    /// Synchronously ping every worker, respawning the dead; returns the
+    /// live count afterwards.
+    pub fn ping_all(&self) -> usize {
+        self.inner.heartbeat();
+        let state = self.inner.state.lock().unwrap();
+        state.workers.iter().filter(|w| w.is_some()).count()
+    }
+}
+
+impl ShardBackend for MultiProcessBackend {
+    fn describe(&self) -> String {
+        format!(
+            "proc:{} ({} shards @ {})",
+            self.workers(),
+            self.inner.partition.len(),
+            self.inner.addr
+        )
+    }
+
+    fn n(&self) -> usize {
+        self.inner.n
+    }
+
+    fn n_shards(&self) -> usize {
+        self.inner.partition.len()
+    }
+
+    fn shard_rows(&self, s: usize) -> Range<usize> {
+        self.inner.partition[s].clone()
+    }
+
+    fn matmul_block(&self, block: &ShardBlock, m: &Mat, out: &mut Mat) {
+        self.inner.round(block, m, out);
+    }
+
+    fn set_params(&self, raw: &[f64], sigma2: Option<f64>) {
+        let mut state = self.inner.state.lock().unwrap();
+        state.raw = raw.to_vec();
+        if let Some(s2) = sigma2 {
+            state.sigma2 = s2;
+        }
+        let msg = WireMsg::SetParams {
+            raw: raw.to_vec(),
+            sigma2,
+        };
+        for w in 0..state.workers.len() {
+            let dead = match state.workers[w].as_ref() {
+                Some(wp) => msg.encode(&mut (&wp.stream)).is_err(),
+                None => false,
+            };
+            if dead {
+                // respawn later with the new params via LoadShard replay
+                state.workers[w] = None;
+            }
+        }
+    }
+
+    fn stats(&self) -> BackendStats {
+        *self.inner.stats.lock().unwrap()
+    }
+
+    fn shutdown(&self) {
+        self.inner.stop.store(true, Ordering::Relaxed);
+        self.inner.shutdown_workers();
+    }
+}
+
+impl Drop for MultiProcessBackend {
+    fn drop(&mut self) {
+        self.inner.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.monitor.take() {
+            let _ = h.join();
+        }
+        self.inner.shutdown_workers();
+    }
+}

@@ -1,0 +1,479 @@
+//! Length-prefixed binary wire protocol between the driver and `bbmm
+//! shard-worker` processes.
+//!
+//! Every message is one frame: `[tag: u8][payload_len: u64 LE][payload]`.
+//! Payloads are flat little-endian scalars — no self-describing container,
+//! because both ends are the same binary and the vocabulary is tiny. The
+//! driver broadcasts one [`WireMsg::Matmul`] per mBCG iteration (the skinny
+//! RHS, `n × t`) and gathers one [`WireMsg::MatmulResult`] per worker (that
+//! worker's owned row-blocks), so traffic is O(n·t) per iteration — never
+//! per tile.
+
+use crate::kernels::ShardBlock;
+use crate::tensor::Mat;
+use std::io::{self, Read, Write};
+
+/// Protocol version — bumped on any wire-format change; [`WireMsg::Hello`]
+/// carries it and the driver refuses mismatched workers.
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// Refuse frames claiming more than this many payload bytes (corruption
+/// guard; a 10⁶-row broadcast at t = 64 is ~0.5 GiB, well under the cap).
+const MAX_FRAME: u64 = 1 << 34;
+
+/// One row-block of a gathered partial product.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResultBlock {
+    /// global shard id (indexes the driver's partition)
+    pub shard: u64,
+    /// the shard's rows of the product, `shard_len × t`
+    pub data: Mat,
+}
+
+/// Every message either side can send. See module docs for framing.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireMsg {
+    /// worker → driver greeting, sent once after connecting
+    Hello {
+        /// must equal [`PROTOCOL_VERSION`]
+        version: u32,
+        /// worker process id (diagnostics)
+        pid: u32,
+    },
+    /// driver → worker: full problem state (sent at spawn and respawn)
+    LoadShard {
+        /// training inputs, `n × d` (every worker holds X; only K is sharded)
+        x: Mat,
+        /// kernel family name (see `worker::kernel_by_name`)
+        kernel: String,
+        /// raw kernel parameters
+        raw: Vec<f64>,
+        /// noise σ² (used only when a product asks for a fused diagonal)
+        sigma2: f64,
+        /// total shard count of the driver's partition
+        n_shards: u64,
+        /// shard ids this worker owns
+        owned: Vec<u64>,
+        /// per-worker MmmPlan budget (MiB) for panel materialisation
+        budget_mb: u64,
+    },
+    /// driver → worker: hyperparameter update (panels for old params drop)
+    SetParams {
+        /// raw kernel parameters
+        raw: Vec<f64>,
+        /// new σ², if the noise changed too
+        sigma2: Option<f64>,
+    },
+    /// driver → worker: compute owned row-blocks of one kernel product
+    Matmul {
+        /// which kernel function (value / fused-noise value / ∂ param)
+        block: ShardBlock,
+        /// the broadcast RHS, `n × t`
+        m: Mat,
+    },
+    /// worker → driver: the owned row-blocks for the last [`WireMsg::Matmul`]
+    MatmulResult {
+        /// one block per owned shard, in owned order
+        blocks: Vec<ResultBlock>,
+    },
+    /// driver → worker heartbeat probe
+    Ping,
+    /// worker → driver heartbeat reply
+    Pong,
+    /// driver → worker: exit cleanly
+    Shutdown,
+    /// either direction: fatal condition description
+    Err {
+        /// human-readable cause
+        message: String,
+    },
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64s(buf: &mut Vec<u8>, vs: &[f64]) {
+    put_u64(buf, vs.len() as u64);
+    buf.reserve(vs.len() * 8);
+    for v in vs {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u64(buf, s.len() as u64);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn put_mat(buf: &mut Vec<u8>, m: &Mat) {
+    put_u64(buf, m.rows() as u64);
+    put_u64(buf, m.cols() as u64);
+    buf.reserve(m.data().len() * 8);
+    for v in m.data() {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn put_block(buf: &mut Vec<u8>, b: &ShardBlock) {
+    match b {
+        ShardBlock::Value { noise: None } => {
+            buf.push(0);
+            put_f64(buf, 0.0);
+        }
+        ShardBlock::Value { noise: Some(s2) } => {
+            buf.push(1);
+            put_f64(buf, *s2);
+        }
+        ShardBlock::DParam(p) => {
+            buf.push(2);
+            put_f64(buf, 0.0);
+            put_u64(buf, *p as u64);
+        }
+    }
+}
+
+/// Byte-slice cursor for payload parsing; truncation reads as `InvalidData`.
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+fn bad(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, format!("wire: {msg}"))
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, len: usize) -> io::Result<&'a [u8]> {
+        if self.pos + len > self.buf.len() {
+            return Err(bad("truncated payload"));
+        }
+        let s = &self.buf[self.pos..self.pos + len];
+        self.pos += len;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> io::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> io::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> io::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn usize(&mut self) -> io::Result<usize> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| bad("length overflows usize"))
+    }
+
+    fn f64(&mut self) -> io::Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64s(&mut self) -> io::Result<Vec<f64>> {
+        let len = self.usize()?;
+        let raw = self.take(len * 8)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn str(&mut self) -> io::Result<String> {
+        let len = self.usize()?;
+        String::from_utf8(self.take(len)?.to_vec()).map_err(|_| bad("non-utf8 string"))
+    }
+
+    fn mat(&mut self) -> io::Result<Mat> {
+        let rows = self.usize()?;
+        let cols = self.usize()?;
+        let raw = self.take(rows * cols * 8)?;
+        let data: Vec<f64> = raw
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(Mat::from_vec(rows, cols, data))
+    }
+
+    fn block(&mut self) -> io::Result<ShardBlock> {
+        let code = self.u8()?;
+        let noise = self.f64()?;
+        Ok(match code {
+            0 => ShardBlock::Value { noise: None },
+            1 => ShardBlock::Value { noise: Some(noise) },
+            2 => ShardBlock::DParam(self.usize()?),
+            _ => return Err(bad("unknown ShardBlock code")),
+        })
+    }
+
+    fn done(&self) -> io::Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(bad("trailing payload bytes"));
+        }
+        Ok(())
+    }
+}
+
+impl WireMsg {
+    fn tag(&self) -> u8 {
+        match self {
+            WireMsg::Hello { .. } => 1,
+            WireMsg::LoadShard { .. } => 2,
+            WireMsg::SetParams { .. } => 3,
+            WireMsg::Matmul { .. } => 4,
+            WireMsg::MatmulResult { .. } => 5,
+            WireMsg::Ping => 6,
+            WireMsg::Pong => 7,
+            WireMsg::Shutdown => 8,
+            WireMsg::Err { .. } => 9,
+        }
+    }
+
+    /// Serialise to one frame (`tag`, length, payload) on `w`. One
+    /// `write_all` per frame so a concurrent reader never sees a torn
+    /// header.
+    pub fn encode(&self, w: &mut impl Write) -> io::Result<()> {
+        let mut payload = Vec::new();
+        match self {
+            WireMsg::Hello { version, pid } => {
+                put_u32(&mut payload, *version);
+                put_u32(&mut payload, *pid);
+            }
+            WireMsg::LoadShard {
+                x,
+                kernel,
+                raw,
+                sigma2,
+                n_shards,
+                owned,
+                budget_mb,
+            } => {
+                put_mat(&mut payload, x);
+                put_str(&mut payload, kernel);
+                put_f64s(&mut payload, raw);
+                put_f64(&mut payload, *sigma2);
+                put_u64(&mut payload, *n_shards);
+                put_u64(&mut payload, owned.len() as u64);
+                for s in owned {
+                    put_u64(&mut payload, *s);
+                }
+                put_u64(&mut payload, *budget_mb);
+            }
+            WireMsg::SetParams { raw, sigma2 } => {
+                put_f64s(&mut payload, raw);
+                match sigma2 {
+                    Some(s2) => {
+                        payload.push(1);
+                        put_f64(&mut payload, *s2);
+                    }
+                    None => payload.push(0),
+                }
+            }
+            WireMsg::Matmul { block, m } => {
+                put_block(&mut payload, block);
+                put_mat(&mut payload, m);
+            }
+            WireMsg::MatmulResult { blocks } => {
+                put_u64(&mut payload, blocks.len() as u64);
+                for b in blocks {
+                    put_u64(&mut payload, b.shard);
+                    put_mat(&mut payload, &b.data);
+                }
+            }
+            WireMsg::Ping | WireMsg::Pong | WireMsg::Shutdown => {}
+            WireMsg::Err { message } => put_str(&mut payload, message),
+        }
+        let mut frame = Vec::with_capacity(9 + payload.len());
+        frame.push(self.tag());
+        frame.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        frame.extend_from_slice(&payload);
+        w.write_all(&frame)
+    }
+
+    /// Read and parse one frame from `r` (blocking until a full frame or an
+    /// I/O error — a closed peer surfaces as `UnexpectedEof`).
+    pub fn decode(r: &mut impl Read) -> io::Result<WireMsg> {
+        let mut header = [0u8; 9];
+        r.read_exact(&mut header)?;
+        let tag = header[0];
+        let len = u64::from_le_bytes(header[1..9].try_into().unwrap());
+        if len > MAX_FRAME {
+            return Err(bad("oversized frame"));
+        }
+        let mut payload = vec![0u8; len as usize];
+        r.read_exact(&mut payload)?;
+        let mut c = Cur {
+            buf: &payload,
+            pos: 0,
+        };
+        let msg = match tag {
+            1 => WireMsg::Hello {
+                version: c.u32()?,
+                pid: c.u32()?,
+            },
+            2 => {
+                let x = c.mat()?;
+                let kernel = c.str()?;
+                let raw = c.f64s()?;
+                let sigma2 = c.f64()?;
+                let n_shards = c.u64()?;
+                let n_owned = c.usize()?;
+                let mut owned = Vec::with_capacity(n_owned);
+                for _ in 0..n_owned {
+                    owned.push(c.u64()?);
+                }
+                let budget_mb = c.u64()?;
+                WireMsg::LoadShard {
+                    x,
+                    kernel,
+                    raw,
+                    sigma2,
+                    n_shards,
+                    owned,
+                    budget_mb,
+                }
+            }
+            3 => {
+                let raw = c.f64s()?;
+                let sigma2 = match c.u8()? {
+                    0 => None,
+                    1 => Some(c.f64()?),
+                    _ => return Err(bad("bad Option tag")),
+                };
+                WireMsg::SetParams { raw, sigma2 }
+            }
+            4 => WireMsg::Matmul {
+                block: c.block()?,
+                m: c.mat()?,
+            },
+            5 => {
+                let nb = c.usize()?;
+                let mut blocks = Vec::with_capacity(nb);
+                for _ in 0..nb {
+                    let shard = c.u64()?;
+                    let data = c.mat()?;
+                    blocks.push(ResultBlock { shard, data });
+                }
+                WireMsg::MatmulResult { blocks }
+            }
+            6 => WireMsg::Ping,
+            7 => WireMsg::Pong,
+            8 => WireMsg::Shutdown,
+            9 => WireMsg::Err { message: c.str()? },
+            _ => return Err(bad("unknown message tag")),
+        };
+        c.done()?;
+        Ok(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn roundtrip(msg: WireMsg) {
+        let mut buf = Vec::new();
+        msg.encode(&mut buf).unwrap();
+        let got = WireMsg::decode(&mut Cursor::new(&buf)).unwrap();
+        assert_eq!(got, msg);
+        // framing is exact: nothing left in the stream
+        let mut c = Cursor::new(&buf);
+        WireMsg::decode(&mut c).unwrap();
+        assert_eq!(c.position() as usize, buf.len());
+    }
+
+    #[test]
+    fn all_messages_roundtrip() {
+        roundtrip(WireMsg::Hello {
+            version: PROTOCOL_VERSION,
+            pid: 4242,
+        });
+        roundtrip(WireMsg::LoadShard {
+            x: Mat::from_vec(2, 3, vec![1.0, -2.5, 0.0, 3.25, 4.0, -0.125]),
+            kernel: "rbf".into(),
+            raw: vec![-0.7, 0.2],
+            sigma2: 0.01,
+            n_shards: 8,
+            owned: vec![1, 5],
+            budget_mb: 256,
+        });
+        roundtrip(WireMsg::SetParams {
+            raw: vec![0.1],
+            sigma2: None,
+        });
+        roundtrip(WireMsg::SetParams {
+            raw: vec![],
+            sigma2: Some(0.5),
+        });
+        roundtrip(WireMsg::Matmul {
+            block: ShardBlock::Value { noise: Some(0.25) },
+            m: Mat::from_vec(3, 1, vec![1.0, 2.0, 3.0]),
+        });
+        roundtrip(WireMsg::Matmul {
+            block: ShardBlock::DParam(1),
+            m: Mat::zeros(1, 1),
+        });
+        roundtrip(WireMsg::MatmulResult {
+            blocks: vec![
+                ResultBlock {
+                    shard: 0,
+                    data: Mat::from_vec(1, 2, vec![9.0, -9.0]),
+                },
+                ResultBlock {
+                    shard: 3,
+                    data: Mat::zeros(2, 2),
+                },
+            ],
+        });
+        roundtrip(WireMsg::Ping);
+        roundtrip(WireMsg::Pong);
+        roundtrip(WireMsg::Shutdown);
+        roundtrip(WireMsg::Err {
+            message: "worker died".into(),
+        });
+    }
+
+    #[test]
+    fn consecutive_frames_stream() {
+        let mut buf = Vec::new();
+        WireMsg::Ping.encode(&mut buf).unwrap();
+        WireMsg::Pong.encode(&mut buf).unwrap();
+        WireMsg::Shutdown.encode(&mut buf).unwrap();
+        let mut c = Cursor::new(&buf);
+        assert_eq!(WireMsg::decode(&mut c).unwrap(), WireMsg::Ping);
+        assert_eq!(WireMsg::decode(&mut c).unwrap(), WireMsg::Pong);
+        assert_eq!(WireMsg::decode(&mut c).unwrap(), WireMsg::Shutdown);
+    }
+
+    #[test]
+    fn corrupt_frames_error_cleanly() {
+        // truncated header
+        assert!(WireMsg::decode(&mut Cursor::new(&[1u8, 2, 3])).is_err());
+        // unknown tag
+        let mut buf = vec![99u8];
+        buf.extend_from_slice(&0u64.to_le_bytes());
+        assert!(WireMsg::decode(&mut Cursor::new(&buf)).is_err());
+        // oversized frame claim
+        let mut buf = vec![6u8];
+        buf.extend_from_slice(&u64::MAX.to_le_bytes());
+        assert!(WireMsg::decode(&mut Cursor::new(&buf)).is_err());
+        // trailing garbage inside the payload
+        let mut buf = vec![6u8];
+        buf.extend_from_slice(&1u64.to_le_bytes());
+        buf.push(0);
+        assert!(WireMsg::decode(&mut Cursor::new(&buf)).is_err());
+    }
+}

@@ -1,0 +1,426 @@
+//! The `bbmm shard-worker` process body.
+//!
+//! A worker connects back to the driver, greets, and then serves a strict
+//! request/response loop: [`WireMsg::LoadShard`] hands it the full inputs
+//! X plus the shard ids it owns, [`WireMsg::Matmul`] asks for its owned
+//! row-blocks of one kernel product, [`WireMsg::SetParams`] swaps
+//! hyperparameters, [`WireMsg::Ping`] answers liveness.
+//!
+//! Each worker plans its **own** memory: [`MmmPlan::auto_sharded`] decides
+//! per owned shard-set, against the per-worker budget from `LoadShard`,
+//! whether to hold cached panels (`CachedDistances` keeps the r² rows —
+//! hyperparameter updates keep them; `MaterializeK` keeps kernel rows) or
+//! stream every product. Aggregate K storage across W workers is therefore
+//! sharded W ways — the Wang et al. 2019 memory model. The wrapped
+//! operator itself is forced to `Stream` so no full-matrix panel can ever
+//! materialise inside a worker.
+//!
+//! Workers are deliberately stateless beyond `LoadShard`: the driver can
+//! kill one at any point and re-derive its blocks on a replacement with
+//! bit-identical results (panel fills and contractions mirror
+//! `ShardedCovOp::fill_rows` exactly).
+
+use super::contract_panel_rows;
+use super::protocol::{ResultBlock, WireMsg, PROTOCOL_VERSION};
+use crate::kernels::operator::{stationary_apply, TileFn};
+use crate::kernels::{Kernel, Matern12, Matern32, Matern52, Rbf, ShardBlock, ShardedKernelOp};
+use crate::linalg::op::MmmPlan;
+use crate::tensor::Mat;
+use std::io;
+use std::net::TcpStream;
+
+/// Construct a kernel from its wire name (parameters are overwritten by
+/// the `raw` vector that travels with it). Inverse of
+/// [`super::kernel_wire_name`].
+pub fn kernel_by_name(name: &str) -> Option<Box<dyn Kernel>> {
+    match name {
+        "rbf" => Some(Box::new(Rbf::new(1.0, 1.0))),
+        "matern12" => Some(Box::new(Matern12::new(1.0, 1.0))),
+        "matern32" => Some(Box::new(Matern32::new(1.0, 1.0))),
+        "matern52" => Some(Box::new(Matern52::new(1.0, 1.0))),
+        _ => None,
+    }
+}
+
+/// One worker's resident state: the operator over full X (plan forced to
+/// `Stream`), the owned shard ids, and this worker's own panel plan.
+pub struct WorkerState {
+    op: ShardedKernelOp,
+    owned: Vec<usize>,
+    plan: MmmPlan,
+    /// per owned shard: kernel rows (plan `MaterializeK`; param-dependent)
+    k_panels: Vec<Option<Mat>>,
+    /// per owned shard: r² rows (plan `CachedDistances`; parameter-free)
+    r2_panels: Vec<Option<Mat>>,
+}
+
+impl WorkerState {
+    /// Build from the fields of a [`WireMsg::LoadShard`].
+    pub fn build(
+        x: Mat,
+        kernel_name: &str,
+        raw: &[f64],
+        sigma2: f64,
+        n_shards: usize,
+        owned: Vec<usize>,
+        budget_mb: u64,
+    ) -> Result<WorkerState, String> {
+        let mut kernel = kernel_by_name(kernel_name)
+            .ok_or_else(|| format!("unknown kernel family '{kernel_name}'"))?;
+        if raw.len() != kernel.n_params() {
+            return Err(format!(
+                "kernel '{kernel_name}' expects {} raw params, got {}",
+                kernel.n_params(),
+                raw.len()
+            ));
+        }
+        kernel.set_params(raw);
+        let stationary = kernel.stationary().is_some();
+        let n = x.rows();
+        let mut op = ShardedKernelOp::new(x, kernel, sigma2, n_shards);
+        op.set_plan(MmmPlan::Stream);
+        if let Some(&bad) = owned.iter().find(|&&s| s >= op.shard_count()) {
+            return Err(format!("owned shard {bad} out of range"));
+        }
+        let max_len = owned
+            .iter()
+            .map(|&s| op.shards()[s].len())
+            .max()
+            .unwrap_or(0);
+        let plan = MmmPlan::auto_sharded(
+            max_len,
+            n,
+            stationary,
+            (budget_mb as usize).saturating_mul(1024 * 1024),
+        );
+        let mut st = WorkerState {
+            op,
+            owned,
+            plan,
+            k_panels: Vec::new(),
+            r2_panels: Vec::new(),
+        };
+        st.build_panels();
+        Ok(st)
+    }
+
+    /// This worker's panel plan (its own `auto_sharded` decision).
+    pub fn plan(&self) -> MmmPlan {
+        self.plan
+    }
+
+    fn build_panels(&mut self) {
+        let cov = self.op.cov();
+        self.k_panels = match self.plan {
+            MmmPlan::MaterializeK => self
+                .owned
+                .iter()
+                .map(|&s| Some(cov.shard_panel(s)))
+                .collect(),
+            _ => vec![None; self.owned.len()],
+        };
+        if self.r2_panels.is_empty() || self.r2_panels.len() != self.owned.len() {
+            // r² is parameter-free: built once, kept across SetParams
+            self.r2_panels = match self.plan {
+                MmmPlan::CachedDistances => self
+                    .owned
+                    .iter()
+                    .map(|&s| Some(cov.shard_r2_panel(s)))
+                    .collect(),
+                _ => vec![None; self.owned.len()],
+            };
+        }
+    }
+
+    /// Swap hyperparameters; parameter-dependent panels rebuild, the r²
+    /// panels survive.
+    pub fn set_params(&mut self, raw: &[f64], sigma2: Option<f64>) {
+        let nk = self.op.kernel().n_params();
+        assert_eq!(raw.len(), nk);
+        let mut full = raw.to_vec();
+        let cur = self.op.params();
+        full.push(match sigma2 {
+            Some(s2) => s2.ln(),
+            None => cur[nk],
+        });
+        self.op.set_params(&full);
+        if self.plan == MmmPlan::MaterializeK {
+            self.k_panels = self
+                .owned
+                .iter()
+                .map(|&s| Some(self.op.cov().shard_panel(s)))
+                .collect();
+        }
+    }
+
+    /// Compute this worker's owned row-blocks of one product.
+    pub fn product(&self, block: &ShardBlock, m: &Mat) -> Vec<ResultBlock> {
+        let n = self.op.x().rows();
+        assert_eq!(m.rows(), n);
+        let t = m.cols();
+        let sp = self.op.kernel().stationary();
+        let mut blocks = Vec::with_capacity(self.owned.len());
+        let mut krow = vec![0.0f64; n];
+        for (i, &s) in self.owned.iter().enumerate() {
+            let rows = self.op.shards()[s].clone();
+            let mut out = Mat::zeros(rows.len(), t);
+            // which fused noise the K-valued panel path should apply, if
+            // this request is panel-servable at all (∂/∂log-outputscale of
+            // a stationary kernel IS the value tile)
+            let panel_noise: Option<Option<f64>> = match block {
+                ShardBlock::Value { noise } => Some(*noise),
+                ShardBlock::DParam(1) if sp.is_some() => Some(None),
+                ShardBlock::DParam(_) => None,
+            };
+            match (self.plan, panel_noise, &sp) {
+                (MmmPlan::MaterializeK, Some(noise), _) => {
+                    let panel = self.k_panels[i].as_ref().expect("k panel built");
+                    contract_panel_rows(panel.data(), n, m, noise, rows.start, out.data_mut());
+                }
+                (MmmPlan::CachedDistances, _, Some(sp)) => {
+                    let panel = self.r2_panels[i].as_ref().expect("r2 panel built");
+                    let (tf, noise) = match block {
+                        ShardBlock::Value { noise } => (TileFn::Value, *noise),
+                        ShardBlock::DParam(0) => (TileFn::DLogLengthscale, None),
+                        ShardBlock::DParam(_) => (TileFn::Value, None),
+                    };
+                    for (ri, gi) in rows.clone().enumerate() {
+                        stationary_apply(sp, tf, panel.row(ri), &mut krow);
+                        let orow = &mut out.data_mut()[ri * t..(ri + 1) * t];
+                        for (j, &kv) in krow.iter().enumerate() {
+                            if kv == 0.0 {
+                                continue;
+                            }
+                            let mrow = m.row(j);
+                            for c in 0..t {
+                                orow[c] += kv * mrow[c];
+                            }
+                        }
+                        if let Some(s2) = noise {
+                            let mrow = m.row(gi);
+                            for c in 0..t {
+                                orow[c] += s2 * mrow[c];
+                            }
+                        }
+                    }
+                }
+                _ => {
+                    // stream from X: the wrapped op's plan is Stream, so
+                    // this is O(row) memory per product
+                    self.op.cov().fill_shard(s, m, block, out.data_mut());
+                }
+            }
+            blocks.push(ResultBlock {
+                shard: s as u64,
+                data: out,
+            });
+        }
+        blocks
+    }
+}
+
+/// Run the worker protocol loop over a fresh connection to `connect`.
+/// Returns when the driver sends [`WireMsg::Shutdown`] or closes the
+/// socket (a vanished driver is a normal exit, not an error).
+pub fn run_worker(connect: &str) -> io::Result<()> {
+    let stream = TcpStream::connect(connect)?;
+    let _ = stream.set_nodelay(true);
+    WireMsg::Hello {
+        version: PROTOCOL_VERSION,
+        pid: std::process::id(),
+    }
+    .encode(&mut (&stream))?;
+    let mut state: Option<WorkerState> = None;
+    loop {
+        let msg = match WireMsg::decode(&mut (&stream)) {
+            Ok(m) => m,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    io::ErrorKind::UnexpectedEof | io::ErrorKind::ConnectionReset
+                ) =>
+            {
+                return Ok(());
+            }
+            Err(e) => return Err(e),
+        };
+        match msg {
+            WireMsg::LoadShard {
+                x,
+                kernel,
+                raw,
+                sigma2,
+                n_shards,
+                owned,
+                budget_mb,
+            } => {
+                let owned: Vec<usize> = owned.iter().map(|&s| s as usize).collect();
+                match WorkerState::build(
+                    x,
+                    &kernel,
+                    &raw,
+                    sigma2,
+                    n_shards as usize,
+                    owned,
+                    budget_mb,
+                ) {
+                    Ok(st) => state = Some(st),
+                    Err(message) => WireMsg::Err { message }.encode(&mut (&stream))?,
+                }
+            }
+            WireMsg::SetParams { raw, sigma2 } => match state.as_mut() {
+                Some(st) => st.set_params(&raw, sigma2),
+                None => {
+                    WireMsg::Err {
+                        message: "SetParams before LoadShard".into(),
+                    }
+                    .encode(&mut (&stream))?;
+                }
+            },
+            WireMsg::Matmul { block, m } => match state.as_ref() {
+                Some(st) => {
+                    let blocks = st.product(&block, &m);
+                    WireMsg::MatmulResult { blocks }.encode(&mut (&stream))?;
+                }
+                None => {
+                    WireMsg::Err {
+                        message: "Matmul before LoadShard".into(),
+                    }
+                    .encode(&mut (&stream))?;
+                }
+            },
+            WireMsg::Ping => WireMsg::Pong.encode(&mut (&stream))?,
+            WireMsg::Shutdown => return Ok(()),
+            other => {
+                WireMsg::Err {
+                    message: format!("unexpected message: {other:?}"),
+                }
+                .encode(&mut (&stream))?;
+            }
+        }
+    }
+}
+
+/// Self-exec guard for examples/binaries that fork themselves as workers:
+/// call first thing in `main`; when the process was invoked as
+/// `<exe> shard-worker --connect <addr>` this runs the worker loop and
+/// returns `true` (the caller should exit immediately).
+pub fn maybe_run_worker() -> bool {
+    let args: Vec<String> = std::env::args().collect();
+    if args.get(1).map(String::as_str) != Some("shard-worker") {
+        return false;
+    }
+    let addr = args
+        .windows(2)
+        .find(|w| w[0] == "--connect")
+        .map(|w| w[1].clone());
+    match addr {
+        Some(addr) => {
+            if let Err(e) = run_worker(&addr) {
+                eprintln!("shard-worker: {e}");
+                std::process::exit(1);
+            }
+        }
+        None => {
+            eprintln!("shard-worker: missing --connect <addr>");
+            std::process::exit(2);
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::DenseKernelOp;
+    use crate::linalg::op::LinearOp;
+    use crate::util::Rng;
+
+    fn dense_ref(n: usize, seed: u64) -> (Mat, Mat, DenseKernelOp) {
+        let mut rng = Rng::new(seed);
+        let x = Mat::from_fn(n, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+        let m = Mat::from_fn(n, 3, |_, _| rng.normal());
+        let dense = DenseKernelOp::new(x.clone(), Box::new(Matern32::new(0.6, 1.1)), 0.08);
+        (x, m, dense)
+    }
+
+    fn assemble(blocks: &[ResultBlock], st: &WorkerState, n: usize, t: usize) -> Mat {
+        let mut out = Mat::zeros(n, t);
+        for rb in blocks {
+            let rows = st.op.shards()[rb.shard as usize].clone();
+            out.data_mut()[rows.start * t..rows.end * t].copy_from_slice(rb.data.data());
+        }
+        out
+    }
+
+    #[test]
+    fn worker_products_match_dense_across_plans() {
+        let n = 48;
+        let (x, m, dense) = dense_ref(n, 51);
+        let raw = dense.params();
+        // budget 0 → Stream; huge budget → CachedDistances (stationary)
+        for (budget_mb, want_plan) in [(0u64, MmmPlan::Stream), (1024, MmmPlan::CachedDistances)] {
+            // two "workers" covering a 3-shard partition between them
+            let build = |owned: Vec<usize>| {
+                WorkerState::build(x.clone(), "matern32", &raw[..2], 0.08, 3, owned, budget_mb)
+                    .unwrap()
+            };
+            let a = build(vec![0, 2]);
+            let b = build(vec![1]);
+            assert_eq!(a.plan(), want_plan);
+            for block in [
+                ShardBlock::Value { noise: Some(0.08) },
+                ShardBlock::Value { noise: None },
+                ShardBlock::DParam(0),
+                ShardBlock::DParam(1),
+            ] {
+                let mut blocks = a.product(&block, &m);
+                blocks.extend(b.product(&block, &m));
+                let got = assemble(&blocks, &a, n, 3);
+                let want = match block {
+                    ShardBlock::Value { noise: Some(_) } => dense.matmul(&m),
+                    ShardBlock::Value { noise: None } => {
+                        let mut w = dense.matmul(&m);
+                        let mut noise_m = m.clone();
+                        noise_m.scale_assign(0.08);
+                        w.sub_assign(&noise_m);
+                        w
+                    }
+                    ShardBlock::DParam(p) => dense.dmatmul(p, &m),
+                };
+                let diff = got.max_abs_diff(&want);
+                assert!(diff < 1e-12, "plan {want_plan:?} block {block:?}: {diff}");
+            }
+        }
+    }
+
+    #[test]
+    fn worker_set_params_matches_rebuilt_dense() {
+        let n = 40;
+        let (x, m, dense) = dense_ref(n, 52);
+        let raw0 = dense.params();
+        let mut st =
+            WorkerState::build(x.clone(), "matern32", &raw0[..2], 0.08, 2, vec![0, 1], 1024)
+                .unwrap();
+        st.set_params(&[-0.4, 0.3], Some(0.02));
+        let mut fresh = DenseKernelOp::new(x, Box::new(Matern32::new(0.6, 1.1)), 0.08);
+        fresh.set_params(&[-0.4, 0.3, 0.02f64.ln()]);
+        let got = assemble(
+            &st.product(&ShardBlock::Value { noise: Some(0.02) }, &m),
+            &st,
+            n,
+            3,
+        );
+        assert!(got.max_abs_diff(&fresh.matmul(&m)) < 1e-12);
+    }
+
+    #[test]
+    fn build_rejects_bad_configs() {
+        let x = Mat::zeros(8, 1);
+        assert!(WorkerState::build(x.clone(), "nope", &[0.0, 0.0], 0.1, 2, vec![0], 64).is_err());
+        assert!(WorkerState::build(x.clone(), "rbf", &[0.0], 0.1, 2, vec![0], 64).is_err());
+        assert!(WorkerState::build(x, "rbf", &[0.0, 0.0], 0.1, 2, vec![7], 64).is_err());
+        assert!(kernel_by_name("rbf").is_some());
+        assert!(kernel_by_name("linear").is_none());
+    }
+}

@@ -4,6 +4,11 @@
 //!
 //! - [`shard`] — the in-process scheduler (static striping + work stealing
 //!   over row shards) that backs [`crate::kernels::ShardedKernelOp`].
+//! - [`dist`] — the distributed shard layer: a [`dist::ShardBackend`]
+//!   trait saying *where* a shard's rows live and execute, with in-process,
+//!   multi-process (forked `bbmm shard-worker` children over a
+//!   length-prefixed TCP protocol) and out-of-core (checkpointed panel)
+//!   implementations.
 //! - [`Runtime`] — the L3↔L2 bridge of the three-layer architecture.
 //!   `python/compile/aot.py` lowers the JAX/Pallas BBMM graphs to **HLO
 //!   text** (text, not serialized proto: jax ≥ 0.5 emits 64-bit instruction
@@ -19,6 +24,7 @@
 //! works everywhere, while `load`/`execute_f32` fail cleanly and
 //! [`Runtime::backend_available`] reports `false` so callers can skip.
 
+pub mod dist;
 pub mod shard;
 
 #[cfg(feature = "pjrt")]

@@ -1,0 +1,308 @@
+//! Placement-parity and fault-tolerance tests for the distributed shard
+//! backends: multi-process workers must reproduce the in-process operators
+//! (products to 1e-10, GP training/prediction to 1e-8), a worker killed
+//! mid-solve must be respawned without changing the final answer, the
+//! heartbeat must resurrect dead slots, and the out-of-core spool must
+//! round-trip checkpointed panels under a budget smaller than one shard.
+//!
+//! Worker processes are forked from the `bbmm` binary Cargo builds for
+//! this test run (`CARGO_BIN_EXE_bbmm`), exercising the real
+//! `bbmm shard-worker --connect` entry point and wire protocol.
+
+use bbmm_gp::gp::exact::{Engine, ExactGp};
+use bbmm_gp::gp::mll::BbmmEngine;
+use bbmm_gp::gp::sgpr::SgprOp;
+use bbmm_gp::kernels::{KernelCov, Matern32, Rbf, ShardedCovOp, ShardedKernelOp};
+use bbmm_gp::linalg::mbcg::{mbcg_op, MbcgOptions};
+use bbmm_gp::linalg::op::{plan_batch, solve_batch, BatchOp, LinearOp, SolveOptions, SolvePlan};
+use bbmm_gp::runtime::dist::{MultiProcessBackend, OutOfCoreBackend, ShardBackend, WorkerLaunch};
+use bbmm_gp::tensor::Mat;
+use bbmm_gp::util::Rng;
+use std::cell::Cell;
+use std::sync::Arc;
+
+/// A smooth regression problem: inputs in [-1.5, 1.5]², targets a noisy
+/// wave, plus a held-out query grid.
+fn dataset(n: usize, seed: u64) -> (Mat, Vec<f64>, Mat) {
+    let mut rng = Rng::new(seed);
+    let x = Mat::from_fn(n, 2, |_, _| rng.uniform_in(-1.5, 1.5));
+    let y: Vec<f64> = (0..n)
+        .map(|i| (2.0 * x.get(i, 0)).sin() + 0.5 * x.get(i, 1).cos() + 0.05 * rng.normal())
+        .collect();
+    let xt = Mat::from_fn(40, 2, |_, _| rng.uniform_in(-1.5, 1.5));
+    (x, y, xt)
+}
+
+/// Fork workers from the `bbmm` binary built for this test profile.
+fn worker_launch() -> WorkerLaunch {
+    WorkerLaunch {
+        exe: env!("CARGO_BIN_EXE_bbmm").into(),
+        ..WorkerLaunch::default()
+    }
+}
+
+fn rel_diff(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut scale = 1.0f64;
+    let mut diff = 0.0f64;
+    for (p, q) in a.iter().zip(b) {
+        scale = scale.max(q.abs());
+        diff = diff.max((p - q).abs());
+    }
+    diff / scale
+}
+
+/// Raw operator parity: value and derivative products routed through
+/// worker processes match the in-process sharded operator, before and
+/// after a hyperparameter push over the wire.
+#[test]
+fn proc_backend_products_match_inprocess() {
+    let n = 150;
+    let (x, _y, _xt) = dataset(n, 3);
+    let mut rng = Rng::new(4);
+    let m = Mat::from_fn(n, 5, |_, _| rng.normal());
+    let kernel = Rbf::new(0.7, 1.1);
+    let mut inproc = ShardedCovOp::new(x.clone(), Box::new(Rbf::new(0.7, 1.1)), 6);
+    let proc = MultiProcessBackend::launch(x.clone(), &kernel, 0.0, 6, 2, 4, worker_launch())
+        .expect("fork shard workers");
+    assert_eq!(proc.workers(), 2);
+    let mut routed = ShardedCovOp::new(x, Box::new(Rbf::new(0.7, 1.1)), 6)
+        .with_backend(Arc::new(proc));
+
+    let check = |routed: &ShardedCovOp, inproc: &ShardedCovOp, tag: &str| {
+        let want = inproc.matmul(&m);
+        let scale = want.fro_norm().max(1.0);
+        let diff = routed.matmul(&m).max_abs_diff(&want) / scale;
+        assert!(diff < 1e-10, "{tag} value product: rel diff {diff}");
+        for p in 0..inproc.n_params() {
+            let want_d = inproc.dmatmul(p, &m);
+            let dscale = want_d.fro_norm().max(1.0);
+            let ddiff = routed.dmatmul(p, &m).max_abs_diff(&want_d) / dscale;
+            assert!(ddiff < 1e-10, "{tag} dmatmul({p}): rel diff {ddiff}");
+        }
+    };
+    check(&routed, &inproc, "initial params");
+
+    // push new hyperparameters to the workers and re-check every product
+    let mut raw = inproc.kernel().params();
+    raw[0] += 0.3;
+    raw[1] -= 0.2;
+    inproc.set_kernel_params(&raw);
+    routed.set_kernel_params(&raw);
+    check(&routed, &inproc, "updated params");
+
+    let stats = routed.backend().unwrap().stats();
+    assert!(stats.rounds >= 6, "expected ≥6 round trips, saw {}", stats.rounds);
+    assert!(stats.bytes_tx > 0 && stats.bytes_rx > 0);
+    assert_eq!(stats.restarts, 0, "no worker should have crashed");
+}
+
+/// End-to-end GP parity: training (mll + gradients) and prediction over a
+/// process-parallel covariance agree with the in-process placement to
+/// 1e-8 relative at fixed seeds.
+#[test]
+fn proc_exact_gp_matches_inprocess_training_and_prediction() {
+    let (x, y, xt) = dataset(220, 11);
+    let noise = 0.05;
+    let engine = || Engine::Bbmm(BbmmEngine::new(150, 8, 8, 42));
+    let mut reference = ExactGp::over(
+        Box::new(ShardedCovOp::new(x.clone(), Box::new(Matern32::new(0.6, 1.0)), 5)),
+        y.clone(),
+        noise,
+        engine(),
+    );
+    let kernel = Matern32::new(0.6, 1.0);
+    let proc = MultiProcessBackend::launch(x.clone(), &kernel, noise, 5, 2, 4, worker_launch())
+        .expect("fork shard workers");
+    let routed = ShardedCovOp::new(x, Box::new(Matern32::new(0.6, 1.0)), 5)
+        .with_backend(Arc::new(proc));
+    let mut distributed = ExactGp::over(Box::new(routed), y, noise, engine());
+
+    let g_ref = reference.mll_and_grad();
+    let g_dist = distributed.mll_and_grad();
+    let mll_diff = (g_dist.nmll - g_ref.nmll).abs() / g_ref.nmll.abs().max(1.0);
+    assert!(mll_diff < 1e-8, "nmll rel diff {mll_diff}");
+    let grad_diff = rel_diff(&g_dist.grad, &g_ref.grad);
+    assert!(grad_diff < 1e-8, "gradient rel diff {grad_diff}");
+
+    let p_ref = reference.predict(&xt);
+    let p_dist = distributed.predict(&xt);
+    let mean_diff = rel_diff(&p_dist.mean, &p_ref.mean);
+    let var_diff = rel_diff(&p_dist.var, &p_ref.var);
+    assert!(mean_diff < 1e-8, "predictive mean rel diff {mean_diff}");
+    assert!(var_diff < 1e-8, "predictive variance rel diff {var_diff}");
+}
+
+/// SIGKILL one worker in the middle of an mBCG solve (from inside the
+/// per-iteration preconditioner hook, so the timing is deterministic):
+/// the dispatcher must respawn it, replay its shards, and produce the
+/// bit-identical answer a crash-free run of the same backend produces.
+#[test]
+fn worker_crash_mid_solve_recovers_and_preserves_the_answer() {
+    let n = 160;
+    let (x, _y, _xt) = dataset(n, 21);
+    let mut rng = Rng::new(22);
+    let b = Mat::from_fn(n, 3, |_, _| rng.normal());
+    let kernel = Rbf::new(0.6, 1.0);
+    let inproc = ShardedKernelOp::new(x.clone(), Box::new(Rbf::new(0.6, 1.0)), 0.25, 4);
+    // heartbeat disabled: recovery must come from the product path itself
+    let proc = Arc::new(
+        MultiProcessBackend::launch(
+            x.clone(),
+            &kernel,
+            0.25,
+            4,
+            2,
+            4,
+            WorkerLaunch {
+                heartbeat_ms: 0,
+                ..worker_launch()
+            },
+        )
+        .expect("fork shard workers"),
+    );
+    let routed = ShardedKernelOp::new(x, Box::new(Rbf::new(0.6, 1.0)), 0.25, 4)
+        .with_backend(proc.clone() as Arc<dyn ShardBackend>);
+    let opts = MbcgOptions {
+        max_iters: 20,
+        tol: 0.0,
+        n_solve_only: usize::MAX,
+    };
+    // crash-free run of the same backend: the determinism baseline
+    let want = mbcg_op(&routed, &b, |r| r.clone(), &opts);
+    let calls = Cell::new(0usize);
+    let got = mbcg_op(
+        &routed,
+        &b,
+        |r| {
+            calls.set(calls.get() + 1);
+            if calls.get() == 3 {
+                proc.kill_worker(0);
+            }
+            r.clone()
+        },
+        &opts,
+    );
+    assert!(calls.get() > 3, "the kill must land mid-solve");
+    assert_eq!(got.iterations, want.iterations);
+    assert!(
+        got.solves.max_abs_diff(&want.solves) == 0.0,
+        "crash recovery changed the solve: diff {}",
+        got.solves.max_abs_diff(&want.solves)
+    );
+    assert!(proc.stats().restarts >= 1, "the killed worker was never respawned");
+    // and the distributed answer is still the in-process answer
+    let reference = mbcg_op(&inproc, &b, |r| r.clone(), &opts);
+    let scale = reference.solves.fro_norm().max(1.0);
+    let diff = got.solves.max_abs_diff(&reference.solves) / scale;
+    assert!(diff < 1e-8, "in-process parity after recovery: {diff}");
+}
+
+/// The background heartbeat notices a killed worker and respawns it even
+/// when no product is in flight.
+#[test]
+fn ping_all_respawns_killed_workers() {
+    let (x, _y, _xt) = dataset(60, 51);
+    let kernel = Rbf::new(0.6, 1.0);
+    let proc = MultiProcessBackend::launch(
+        x,
+        &kernel,
+        0.1,
+        4,
+        2,
+        4,
+        WorkerLaunch {
+            heartbeat_ms: 0, // drive the monitor by hand for determinism
+            ..worker_launch()
+        },
+    )
+    .expect("fork shard workers");
+    assert_eq!(proc.ping_all(), 2);
+    proc.kill_worker(0);
+    assert_eq!(proc.ping_all(), 2, "heartbeat must respawn the dead slot");
+    assert!(proc.stats().restarts >= 1);
+    proc.shutdown();
+}
+
+/// Heterogeneous serving batch — an SGPR (direct Woodbury) element next
+/// to a process-parallel sharded element — planned and solved through the
+/// same dispatcher, matching the all-in-process batch.
+#[test]
+fn mixed_sgpr_and_proc_sharded_batch_solves_match_inprocess() {
+    let n = 140;
+    let (x, _y, _xt) = dataset(n, 31);
+    let mut rng = Rng::new(32);
+    let u = Mat::from_fn(15, 2, |_, _| rng.uniform_in(-1.5, 1.5));
+    let sgpr = SgprOp::new(x.clone(), u, Box::new(Rbf::new(0.8, 1.0)), 0.05);
+    let kernel = Rbf::new(0.5, 0.9);
+    let inproc = ShardedKernelOp::new(x.clone(), Box::new(Rbf::new(0.5, 0.9)), 0.25, 4);
+    let proc = MultiProcessBackend::launch(x.clone(), &kernel, 0.25, 4, 2, 4, worker_launch())
+        .expect("fork shard workers");
+    let routed = ShardedKernelOp::new(x, Box::new(Rbf::new(0.5, 0.9)), 0.25, 4)
+        .with_backend(Arc::new(proc));
+    let bs: Vec<Mat> = (0..2)
+        .map(|_| Mat::from_fn(n, 2, |_, _| rng.normal()))
+        .collect();
+    let b_refs: Vec<&Mat> = bs.iter().collect();
+    let opts = SolveOptions {
+        max_iters: 400,
+        tol: 1e-12,
+        ..SolveOptions::default()
+    };
+    let solve_pair = |second: &dyn LinearOp| {
+        let batch = BatchOp::new(vec![&sgpr as &dyn LinearOp, second]);
+        let plans = plan_batch(&batch, &opts);
+        let plan_refs: Vec<&SolvePlan> = plans.iter().collect();
+        solve_batch(&batch, &plan_refs, &b_refs, &opts)
+    };
+    let want = solve_pair(&inproc);
+    let got = solve_pair(&routed);
+    for (i, (a, c)) in got.iter().zip(want.iter()).enumerate() {
+        let scale = c.fro_norm().max(1.0);
+        let diff = a.max_abs_diff(c) / scale;
+        assert!(diff < 1e-8, "batch element {i}: rel diff {diff}");
+    }
+}
+
+/// Out-of-core round-trip: panels checkpointed to the spool under a
+/// window budget smaller than one shard must reproduce in-process
+/// training and prediction, and the spool must vanish on shutdown.
+#[test]
+fn ooc_backend_spools_panels_and_matches_inprocess() {
+    let n = 180;
+    let shards = 6;
+    let (x, y, xt) = dataset(n, 41);
+    let noise = 0.05;
+    let engine = || Engine::Bbmm(BbmmEngine::new(150, 8, 8, 7));
+    let mut reference = ExactGp::over(
+        Box::new(ShardedCovOp::new(x.clone(), Box::new(Rbf::new(0.6, 1.0)), shards)),
+        y.clone(),
+        noise,
+        engine(),
+    );
+    let spool_op = ShardedKernelOp::new(x.clone(), Box::new(Rbf::new(0.6, 1.0)), noise, shards);
+    let ooc = OutOfCoreBackend::new(spool_op, 16 * 1024).expect("spool panels");
+    assert!(
+        ooc.window_rows() < n / shards,
+        "budget must force chunked panel streaming (window {} rows)",
+        ooc.window_rows()
+    );
+    let dir = ooc.spool_dir().clone();
+    assert!(dir.is_dir(), "spool directory missing");
+    let routed = ShardedCovOp::new(x, Box::new(Rbf::new(0.6, 1.0)), shards)
+        .with_backend(Arc::new(ooc));
+    let mut out_of_core = ExactGp::over(Box::new(routed), y, noise, engine());
+
+    let g_ref = reference.mll_and_grad();
+    let g_ooc = out_of_core.mll_and_grad();
+    let mll_diff = (g_ooc.nmll - g_ref.nmll).abs() / g_ref.nmll.abs().max(1.0);
+    assert!(mll_diff < 1e-8, "nmll rel diff {mll_diff}");
+    assert!(rel_diff(&g_ooc.grad, &g_ref.grad) < 1e-8);
+    let p_ref = reference.predict(&xt);
+    let p_ooc = out_of_core.predict(&xt);
+    assert!(rel_diff(&p_ooc.mean, &p_ref.mean) < 1e-8);
+    assert!(rel_diff(&p_ooc.var, &p_ref.var) < 1e-8);
+
+    drop(out_of_core); // drops the last backend handle → shutdown
+    assert!(!dir.exists(), "shutdown must remove the spool directory");
+}
