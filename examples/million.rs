@@ -17,14 +17,17 @@
 //!
 //! Tunables: `BBMM_MILLION_N` (rows), `BBMM_MILLION_WORKERS` (processes),
 //! `BBMM_MILLION_ITERS` (mBCG iteration cap), `BBMM_MILLION_BUDGET_MB`
-//! (per-worker materialisation budget). Smoke mode shrinks to n = 3000 /
-//! 2 workers and parity-checks the distributed solve against the
-//! in-process placement to 1e-8 before serving.
+//! (per-worker materialisation budget), `BBMM_PRECISION=f64|mixed`
+//! (tile-compute precision — inherited by the forked workers through the
+//! environment, so driver and fleet always agree). Smoke mode shrinks to
+//! n = 3000 / 2 workers and parity-checks the distributed solve against
+//! the in-process placement to 1e-8 before serving.
 
 use bbmm_gp::kernels::{Kernel, Rbf, ShardedKernelOp};
 use bbmm_gp::linalg::mbcg::{mbcg_op, MbcgOptions};
+use bbmm_gp::linalg::op::{mmm, MmmPlan};
 use bbmm_gp::runtime::dist::{worker, MultiProcessBackend, ShardBackend, WorkerLaunch};
-use bbmm_gp::tensor::Mat;
+use bbmm_gp::tensor::{simd, Mat};
 use bbmm_gp::util::{par, Rng};
 use std::sync::Arc;
 use std::time::Instant;
@@ -64,8 +67,11 @@ fn main() {
     let kernel = Rbf::new(0.5, 1.0);
     println!(
         "million: n={n} workers={workers} shards={shards} iters={iters} \
-         budget={budget_mb}MB/worker threads={} (aggregate K would be {:.1} GB — never built)",
+         budget={budget_mb}MB/worker threads={} precision={} simd={} \
+         (aggregate K would be {:.1} GB — never built)",
         par::num_threads(),
+        mmm::default_precision().name(),
+        simd::active().name(),
         (n as f64) * (n as f64) * 8.0 / 1e9
     );
 
@@ -112,11 +118,17 @@ fn main() {
     let result = mbcg_op(&routed, &b, |m| m.clone(), &opts);
     let solve_s = t0.elapsed().as_secs_f64();
     let stats = proc.stats();
+    // each mBCG iteration pays one K̂·d product: 2n² flops at t = 1
+    let solve_gflops =
+        result.iterations as f64 * 2.0 * (n as f64) * (n as f64) / solve_s.max(1e-9) / 1e9;
     println!(
-        "solve: {} mBCG iterations in {:.2}s — {} round trips, {:.1} MB out / {:.1} MB back \
+        "solve: {} mBCG iterations in {:.2}s ({solve_gflops:.2} GFLOP/s effective, \
+         precision={}, simd={}) — {} round trips, {:.1} MB out / {:.1} MB back \
          ({:.2} MB per round: O(n·t), independent of K)",
         result.iterations,
         solve_s,
+        mmm::default_precision().name(),
+        simd::active().name(),
         stats.rounds,
         stats.bytes_tx as f64 / 1e6,
         stats.bytes_rx as f64 / 1e6,
@@ -127,7 +139,13 @@ fn main() {
     // smoke only: the distributed placement must match in-process exactly
     // (the bench and tests gate this too; here it guards the CI path)
     if smoke {
-        let inproc = ShardedKernelOp::new(x.clone(), Box::new(Rbf::new(0.5, 1.0)), NOISE, shards);
+        let mut inproc =
+            ShardedKernelOp::new(x.clone(), Box::new(Rbf::new(0.5, 1.0)), NOISE, shards);
+        // match the workers' execution exactly: they stream rows (never
+        // panel) and inherit the same BBMM_PRECISION default through the
+        // environment, so pinning the reference to Stream keeps the parity
+        // bit-exact under mixed precision too
+        inproc.set_plan(MmmPlan::Stream);
         let want = mbcg_op(&inproc, &b, |m| m.clone(), &opts);
         let scale = want.solves.fro_norm().max(1.0);
         let diff = alpha.max_abs_diff(&want.solves) / scale;

@@ -13,6 +13,18 @@
 //!    product a GEMM). Solves are parity-gated to 1e-10 relative before
 //!    timing, so the speedup column never reports a wrong answer faster.
 //!
+//! 3. **SIMD × precision GEMM cells** — the same contraction per
+//!    (precision, dispatch) cell: f64/f32/mixed under the forced-scalar
+//!    portable path and under the runtime-detected SIMD path, reporting
+//!    GFLOP/s, the SIMD-over-scalar speedup, and the fraction of the
+//!    ideal lane-width speedup achieved (the roofline fraction — explicit
+//!    lanes can't beat `lanes×` over an autovectorised scalar loop, so
+//!    `speedup/lanes` is the honest efficiency number).
+//! 4. **Mixed-precision solve cells** — the Stream/CachedDistances solves
+//!    of section 2 re-run under [`Precision::Mixed`] (f32 tiles, f64
+//!    reductions), parity-gated at 1e-3 relative against the f64 solve
+//!    before timing.
+//!
 //! `BBMM_BENCH_QUICK=1` (CI) keeps the grid but cuts the iteration budget
 //! and samples; the full run uses the acceptance configuration
 //! (50 iterations).
@@ -20,14 +32,23 @@
 use bbmm_gp::bench::{bench, Table};
 use bbmm_gp::kernels::{KernelCovOp, Rbf};
 use bbmm_gp::linalg::mbcg::{mbcg, MbcgOptions};
-use bbmm_gp::linalg::op::{AddedDiagOp, LinearOp, MmmPlan};
-use bbmm_gp::tensor::Mat;
+use bbmm_gp::linalg::op::{AddedDiagOp, LinearOp, MmmPlan, Precision};
+use bbmm_gp::tensor::{gemm, simd, Mat};
 use bbmm_gp::util::par;
 use bbmm_gp::util::Rng;
 
 struct GemmCase {
     n: usize,
     gflops: f64,
+}
+
+struct SimdCase {
+    name: &'static str,
+    dispatch: &'static str,
+    n: usize,
+    gflops: f64,
+    scalar_speedup: f64,
+    roofline_frac: f64,
 }
 
 struct SolveCase {
@@ -37,6 +58,14 @@ struct SolveCase {
     stream_s: f64,
     cached_s: f64,
     materialize_s: f64,
+}
+
+struct MixedSolveCase {
+    name: &'static str,
+    n: usize,
+    t: usize,
+    f64_s: f64,
+    mixed_s: f64,
 }
 
 fn main() {
@@ -67,8 +96,89 @@ fn main() {
     println!();
     gtable.print();
 
+    // ---- 1b) SIMD dispatch × precision GEMM cells ----
+    // One contraction shape, each precision timed twice: dispatcher pinned
+    // to the portable scalar path, then the runtime-detected SIMD path
+    // (identical timings when no SIMD arm exists for this target).
+    let mut simd_cases = Vec::new();
+    {
+        let n = 512usize;
+        let flops = 2.0 * (n as f64).powi(3);
+        let mut rng = Rng::new(512);
+        let a = Mat::from_fn(n, n, |_, _| rng.normal());
+        let b = Mat::from_fn(n, n, |_, _| rng.normal());
+        let a32 = a.cast::<f32>();
+        let b32 = b.cast::<f32>();
+        let mut out = Mat::zeros(n, n);
+        let mut out32 = Mat::<f32>::zeros(n, n);
+
+        simd::set_forced_scalar(true);
+        let r = bench("gemm_f64/scalar", 1, samples, || {
+            out.data_mut().fill(0.0);
+            gemm::gemm_into(a.data(), b.data(), out.data_mut(), n, n, n);
+        });
+        let sc_f64 = flops / r.median_s() / 1e9;
+        let r = bench("gemm_f32/scalar", 1, samples, || {
+            out32.data_mut().fill(0.0);
+            gemm::gemm_into(a32.data(), b32.data(), out32.data_mut(), n, n, n);
+        });
+        let sc_f32 = flops / r.median_s() / 1e9;
+        let r = bench("gemm_mixed/scalar", 1, samples, || {
+            out.data_mut().fill(0.0);
+            gemm::gemm_mixed_into(a32.data(), b32.data(), out.data_mut(), n, n, n);
+        });
+        let sc_mixed = flops / r.median_s() / 1e9;
+        simd::set_forced_scalar(false);
+
+        let d = simd::active();
+        let r = bench(&format!("gemm_f64/{}", d.name()), 1, samples, || {
+            out.data_mut().fill(0.0);
+            gemm::gemm_into(a.data(), b.data(), out.data_mut(), n, n, n);
+        });
+        let v_f64 = flops / r.median_s() / 1e9;
+        let r = bench(&format!("gemm_f32/{}", d.name()), 1, samples, || {
+            out32.data_mut().fill(0.0);
+            gemm::gemm_into(a32.data(), b32.data(), out32.data_mut(), n, n, n);
+        });
+        let v_f32 = flops / r.median_s() / 1e9;
+        let r = bench(&format!("gemm_mixed/{}", d.name()), 1, samples, || {
+            out.data_mut().fill(0.0);
+            gemm::gemm_mixed_into(a32.data(), b32.data(), out.data_mut(), n, n, n);
+        });
+        let v_mixed = flops / r.median_s() / 1e9;
+
+        for (name, v, sc, lanes) in [
+            ("gemm_f64", v_f64, sc_f64, d.lanes_f64()),
+            ("gemm_f32", v_f32, sc_f32, d.lanes_f32()),
+            ("gemm_mixed", v_mixed, sc_mixed, d.lanes_f32()),
+        ] {
+            simd_cases.push(SimdCase {
+                name,
+                dispatch: d.name(),
+                n,
+                gflops: v,
+                scalar_speedup: v / sc,
+                roofline_frac: (v / sc) / lanes as f64,
+            });
+        }
+        println!();
+        let mut ttable =
+            Table::new(&["cell", "dispatch", "gflops", "speedup_vs_scalar", "roofline_frac"]);
+        for c in &simd_cases {
+            ttable.row(&[
+                c.name.to_string(),
+                c.dispatch.to_string(),
+                format!("{:.2}", c.gflops),
+                format!("{:.2}x", c.scalar_speedup),
+                format!("{:.2}", c.roofline_frac),
+            ]);
+        }
+        ttable.print();
+    }
+
     // ---- 2) materialisation plans vs streaming on a full mBCG solve ----
     let mut solve_cases = Vec::new();
+    let mut mixed_cases: Vec<MixedSolveCase> = Vec::new();
     let mut stable = Table::new(&["n", "t", "stream_s", "cached_s", "matk_s", "best_speedup"]);
     for &n in &[2_000usize, 8_000] {
         let mut rng = Rng::new(100 + n as u64);
@@ -128,26 +238,86 @@ fn main() {
                 cached_s: times[1],
                 materialize_s: times[2],
             });
+            // ---- 4) mixed-precision full-solve cells ----
+            // Stream + CachedDistances re-run under f32 tiles / f64
+            // reductions; parity-gated against the f64 solve BEFORE
+            // timing, so the speedup column never reports a wrong answer
+            // faster (gate 1e-3: f32 tile rounding through the solve).
+            for (pi, &(plan, pname)) in
+                [(MmmPlan::Stream, "stream"), (MmmPlan::CachedDistances, "cached-r2")]
+                    .iter()
+                    .enumerate()
+            {
+                let cov = KernelCovOp::new(x.clone(), Box::new(Rbf::new(0.5, 1.0)))
+                    .with_plan(plan)
+                    .with_precision(Precision::Mixed);
+                let op = AddedDiagOp::new(cov, 0.1);
+                op.prepare();
+                let got = mbcg(|m| op.matmul(m), &rhs, |m| m.clone(), &opts).solves;
+                let diff = got.max_abs_diff(&solves[pi]) / scale;
+                assert!(
+                    diff < 1e-3,
+                    "mixed {pname} diverged from f64 at n={n} t={t}: rel diff {diff}"
+                );
+                let res = bench(&format!("solve/mixed-{pname}/n{n}/t{t}"), 1, samples, || {
+                    let _ = mbcg(|m| op.matmul(m), &rhs, |m| m.clone(), &opts);
+                });
+                mixed_cases.push(MixedSolveCase {
+                    name: pname,
+                    n,
+                    t,
+                    f64_s: times[pi],
+                    mixed_s: res.median_s(),
+                });
+            }
         }
     }
     println!();
     stable.print();
+    println!();
+    let mut mtable = Table::new(&["plan", "n", "t", "f64_s", "mixed_s", "mixed_speedup"]);
+    for c in &mixed_cases {
+        mtable.row(&[
+            c.name.to_string(),
+            c.n.to_string(),
+            c.t.to_string(),
+            format!("{:.4}", c.f64_s),
+            format!("{:.4}", c.mixed_s),
+            format!("{:.2}x", c.f64_s / c.mixed_s),
+        ]);
+    }
+    mtable.print();
     stable.save("bench_mmm").ok();
-    write_json(&gemm_cases, &solve_cases).expect("write BENCH_mmm.json");
+    write_json(&gemm_cases, &simd_cases, &solve_cases, &mixed_cases)
+        .expect("write BENCH_mmm.json");
     println!(
         "\nwrote results/BENCH_mmm.json — expect cached-r2/materialize-k ≥ 2x over \
          stream on the full-iteration solve (the panel amortises across every \
-         mBCG product; at 50 iterations the distance+exp work is paid once, not 50x)"
+         mBCG product; at 50 iterations the distance+exp work is paid once, not \
+         50x), SIMD f64 GEMM ≥ 2x the forced-scalar rate, and mixed ≥ 1.5x the \
+         f64 stream/cached-r2 solves (f32 tiles at twice the lane width, f64 \
+         reductions — parity-gated above)"
     );
 }
 
 /// Hand-rolled JSON (no serde offline): the schema CI archives and diffs
 /// against `benches/BENCH_mmm_baseline.json`.
-fn write_json(gemm: &[GemmCase], solves: &[SolveCase]) -> std::io::Result<()> {
+///
+/// Solve iteration counts are written as `solve_iters` on purpose:
+/// `iters` is one of `ci/bench_diff.py`'s case-identity keys, and the CI
+/// quick run uses a different budget than the full run — encoding it in
+/// the identity would make every baseline case "missing" on one of them.
+fn write_json(
+    gemm: &[GemmCase],
+    simd_cells: &[SimdCase],
+    solves: &[SolveCase],
+    mixed: &[MixedSolveCase],
+) -> std::io::Result<()> {
     let mut out = String::new();
     out.push_str("{\n");
     out.push_str("  \"bench\": \"mmm_microbench\",\n");
     out.push_str(&format!("  \"threads\": {},\n", par::num_threads()));
+    out.push_str(&format!("  \"dispatch\": \"{}\",\n", simd::active().name()));
     out.push_str("  \"gemm\": [\n");
     for (i, c) in gemm.iter().enumerate() {
         out.push_str(&format!(
@@ -158,12 +328,28 @@ fn write_json(gemm: &[GemmCase], solves: &[SolveCase]) -> std::io::Result<()> {
         ));
     }
     out.push_str("  ],\n");
+    out.push_str("  \"simd\": [\n");
+    for (i, c) in simd_cells.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"dispatch\": \"{}\", \"n\": {}, \
+             \"gflops\": {:.3}, \"scalar_speedup\": {:.3}, \
+             \"roofline_frac\": {:.3}}}{}\n",
+            c.name,
+            c.dispatch,
+            c.n,
+            c.gflops,
+            c.scalar_speedup,
+            c.roofline_frac,
+            if i + 1 < simd_cells.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ],\n");
     out.push_str("  \"solves\": [\n");
     for (i, c) in solves.iter().enumerate() {
         let cached_speedup = c.stream_s / c.cached_s;
         let matk_speedup = c.stream_s / c.materialize_s;
         out.push_str(&format!(
-            "    {{\"n\": {}, \"t\": {}, \"iters\": {}, \"stream_s\": {:.6}, \
+            "    {{\"n\": {}, \"t\": {}, \"solve_iters\": {}, \"stream_s\": {:.6}, \
              \"cached_s\": {:.6}, \"materialize_s\": {:.6}, \
              \"cached_speedup\": {:.3}, \"materialize_speedup\": {:.3}}}{}\n",
             c.n,
@@ -175,6 +361,21 @@ fn write_json(gemm: &[GemmCase], solves: &[SolveCase]) -> std::io::Result<()> {
             cached_speedup,
             matk_speedup,
             if i + 1 < solves.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"mixed_solves\": [\n");
+    for (i, c) in mixed.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"n\": {}, \"t\": {}, \"f64_s\": {:.6}, \
+             \"mixed_s\": {:.6}, \"mixed_speedup\": {:.3}}}{}\n",
+            c.name,
+            c.n,
+            c.t,
+            c.f64_s,
+            c.mixed_s,
+            c.f64_s / c.mixed_s,
+            if i + 1 < mixed.len() { "," } else { "" }
         ));
     }
     out.push_str("  ]\n");

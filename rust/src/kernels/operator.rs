@@ -13,11 +13,11 @@
 //! iteration-amortised work).
 
 use super::{Kernel, KernelCov, StationaryFamily, StationaryParams};
-use crate::linalg::op::{mmm, AddedDiagOp, LinearOp, MmmPlan};
+use crate::linalg::op::{mmm, AddedDiagOp, LinearOp, MmmPlan, Precision};
 use crate::tensor::{gemm, Mat};
-use crate::util::fastmath::fast_exp;
+use crate::util::fastmath::{fast_exp_slice, fast_exp_slice_f32};
 use crate::util::{par, scratch};
-use std::sync::{Arc, OnceLock, RwLock};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
 
 /// Which function of r² a stationary tile evaluates (shared with the
 /// sharded operator in [`super::sharded`]).
@@ -31,65 +31,182 @@ pub(crate) enum TileFn {
 
 /// Vectorised stationary-kernel row: given squared distances `r2`, write
 /// `out[j] = f(r2[j])` for the family/derivative requested. This is the
-/// scalar-free inner loop of the fused mat-mul fast path — everything here
-/// autovectorizes (fast_exp is branch-free, sqrt is an instruction).
+/// scalar-free inner loop of the fused mat-mul fast path, organised as
+/// three whole-row passes so the expensive middle one runs through the
+/// **batched SIMD exp** ([`fast_exp_slice`]): (1) write the exp argument
+/// (−a·r² or −u) into `out`, (2) exponentiate the whole row in place,
+/// (3) multiply the family's prefactor (recomputing `u = c·√r²` from the
+/// untouched `r2` slice where needed — a sqrt is one instruction, the exp
+/// was the bottleneck).
 pub(crate) fn stationary_apply(sp: &StationaryParams, tf: TileFn, r2: &[f64], out: &mut [f64]) {
     let s = sp.outputscale;
     let ls = sp.lengthscale;
+    let m = r2.len();
     match (sp.family, tf) {
         (StationaryFamily::Rbf, TileFn::Value) => {
             let a = 1.0 / (2.0 * ls * ls);
-            for j in 0..r2.len() {
-                out[j] = s * fast_exp(-a * r2[j]);
+            for j in 0..m {
+                out[j] = -a * r2[j];
+            }
+            fast_exp_slice(&mut out[..m]);
+            for o in out[..m].iter_mut() {
+                *o = s * *o;
             }
         }
         (StationaryFamily::Rbf, TileFn::DLogLengthscale) => {
             let a = 1.0 / (2.0 * ls * ls);
             let b = 1.0 / (ls * ls);
-            for j in 0..r2.len() {
-                out[j] = s * fast_exp(-a * r2[j]) * (b * r2[j]);
+            for j in 0..m {
+                out[j] = -a * r2[j];
+            }
+            fast_exp_slice(&mut out[..m]);
+            for j in 0..m {
+                out[j] = s * out[j] * (b * r2[j]);
             }
         }
         (StationaryFamily::Matern12, TileFn::Value) => {
             let c = 1.0 / ls;
-            for j in 0..r2.len() {
-                let u = c * r2[j].sqrt();
-                out[j] = s * fast_exp(-u);
+            for j in 0..m {
+                out[j] = -(c * r2[j].sqrt());
+            }
+            fast_exp_slice(&mut out[..m]);
+            for o in out[..m].iter_mut() {
+                *o = s * *o;
             }
         }
         (StationaryFamily::Matern12, TileFn::DLogLengthscale) => {
             let c = 1.0 / ls;
-            for j in 0..r2.len() {
+            for j in 0..m {
+                out[j] = -(c * r2[j].sqrt());
+            }
+            fast_exp_slice(&mut out[..m]);
+            for j in 0..m {
                 let u = c * r2[j].sqrt();
-                out[j] = s * fast_exp(-u) * u;
+                out[j] = s * out[j] * u;
             }
         }
         (StationaryFamily::Matern32, TileFn::Value) => {
             let c = 3f64.sqrt() / ls;
-            for j in 0..r2.len() {
+            for j in 0..m {
+                out[j] = -(c * r2[j].sqrt());
+            }
+            fast_exp_slice(&mut out[..m]);
+            for j in 0..m {
                 let u = c * r2[j].sqrt();
-                out[j] = s * (1.0 + u) * fast_exp(-u);
+                out[j] = s * (1.0 + u) * out[j];
             }
         }
         (StationaryFamily::Matern32, TileFn::DLogLengthscale) => {
             let c = 3f64.sqrt() / ls;
-            for j in 0..r2.len() {
+            for j in 0..m {
+                out[j] = -(c * r2[j].sqrt());
+            }
+            fast_exp_slice(&mut out[..m]);
+            for j in 0..m {
                 let u = c * r2[j].sqrt();
-                out[j] = s * u * u * fast_exp(-u);
+                out[j] = s * u * u * out[j];
             }
         }
         (StationaryFamily::Matern52, TileFn::Value) => {
             let c = 5f64.sqrt() / ls;
-            for j in 0..r2.len() {
+            for j in 0..m {
+                out[j] = -(c * r2[j].sqrt());
+            }
+            fast_exp_slice(&mut out[..m]);
+            for j in 0..m {
                 let u = c * r2[j].sqrt();
-                out[j] = s * (1.0 + u + u * u / 3.0) * fast_exp(-u);
+                out[j] = s * (1.0 + u + u * u / 3.0) * out[j];
             }
         }
         (StationaryFamily::Matern52, TileFn::DLogLengthscale) => {
             let c = 5f64.sqrt() / ls;
-            for j in 0..r2.len() {
+            for j in 0..m {
+                out[j] = -(c * r2[j].sqrt());
+            }
+            fast_exp_slice(&mut out[..m]);
+            for j in 0..m {
                 let u = c * r2[j].sqrt();
-                out[j] = s * fast_exp(-u) * u * u * (1.0 + u) / 3.0;
+                out[j] = s * out[j] * u * u * (1.0 + u) / 3.0;
+            }
+        }
+    }
+}
+
+/// f32 twin of [`stationary_apply`] for the mixed-precision tile path:
+/// distances stay f64 (they come from the shared r² panel / distance
+/// pass), exp arguments are rounded **once** to f32, the batched f32 exp
+/// runs at double lane width, and prefactors are computed in f64 and
+/// rounded at the store — so the only precision lost is the final f32
+/// representation, ~1e-7 relative per entry.
+pub(crate) fn stationary_apply_f32(sp: &StationaryParams, tf: TileFn, r2: &[f64], out: &mut [f32]) {
+    let s = sp.outputscale;
+    let ls = sp.lengthscale;
+    let m = r2.len();
+    let c = match sp.family {
+        StationaryFamily::Rbf => 0.0,
+        StationaryFamily::Matern12 => 1.0 / ls,
+        StationaryFamily::Matern32 => 3f64.sqrt() / ls,
+        StationaryFamily::Matern52 => 5f64.sqrt() / ls,
+    };
+    // pass 1: exp arguments (−a·r² or −u), rounded to f32 once
+    if sp.family == StationaryFamily::Rbf {
+        let a = 1.0 / (2.0 * ls * ls);
+        for j in 0..m {
+            out[j] = (-a * r2[j]) as f32;
+        }
+    } else {
+        for j in 0..m {
+            out[j] = (-(c * r2[j].sqrt())) as f32;
+        }
+    }
+    // pass 2: batched exp at f32 lane width
+    fast_exp_slice_f32(&mut out[..m]);
+    // pass 3: prefactor epilogue (f64 math, one rounding at the store)
+    match (sp.family, tf) {
+        (StationaryFamily::Rbf, TileFn::Value) => {
+            for o in out[..m].iter_mut() {
+                *o = (s * *o as f64) as f32;
+            }
+        }
+        (StationaryFamily::Rbf, TileFn::DLogLengthscale) => {
+            let b = 1.0 / (ls * ls);
+            for j in 0..m {
+                out[j] = (s * out[j] as f64 * (b * r2[j])) as f32;
+            }
+        }
+        (StationaryFamily::Matern12, TileFn::Value) => {
+            for o in out[..m].iter_mut() {
+                *o = (s * *o as f64) as f32;
+            }
+        }
+        (StationaryFamily::Matern12, TileFn::DLogLengthscale) => {
+            for j in 0..m {
+                let u = c * r2[j].sqrt();
+                out[j] = (s * out[j] as f64 * u) as f32;
+            }
+        }
+        (StationaryFamily::Matern32, TileFn::Value) => {
+            for j in 0..m {
+                let u = c * r2[j].sqrt();
+                out[j] = (s * (1.0 + u) * out[j] as f64) as f32;
+            }
+        }
+        (StationaryFamily::Matern32, TileFn::DLogLengthscale) => {
+            for j in 0..m {
+                let u = c * r2[j].sqrt();
+                out[j] = (s * u * u * out[j] as f64) as f32;
+            }
+        }
+        (StationaryFamily::Matern52, TileFn::Value) => {
+            for j in 0..m {
+                let u = c * r2[j].sqrt();
+                out[j] = (s * (1.0 + u + u * u / 3.0) * out[j] as f64) as f32;
+            }
+        }
+        (StationaryFamily::Matern52, TileFn::DLogLengthscale) => {
+            for j in 0..m {
+                let u = c * r2[j].sqrt();
+                out[j] = (s * out[j] as f64 * u * u * (1.0 + u) / 3.0) as f32;
             }
         }
     }
@@ -147,12 +264,21 @@ pub struct KernelCovOp {
     xnorm: Arc<Vec<f64>>,
     /// how products materialise (fingerprinted via `mmm_tag`)
     plan: MmmPlan,
+    /// tile arithmetic precision (fingerprinted via `mmm_tag`): Mixed
+    /// computes stationary `Stream`/`CachedDistances` tiles in f32 with
+    /// f64 accumulation; every other path degrades to f64
+    precision: Precision,
     /// cached r² panel — depends only on X, so it survives every
     /// hyperparameter update and is shared across `share_cached` clones
     r2: Arc<OnceLock<Mat>>,
     /// materialised K for the CURRENT kernel parameters (cleared by
     /// `set_kernel_params`; per-clone — K depends on the parameters)
     kmat: RwLock<Option<Arc<Mat>>>,
+    /// grow-only staging buffer for the Mixed path's f32 copy of `M`
+    /// (taken out under the lock for the duration of a product, so warm
+    /// products stay allocation-free without touching the per-thread
+    /// scratch slots the workers use)
+    m32_staging: Mutex<Vec<f32>>,
 }
 
 impl KernelCovOp {
@@ -179,8 +305,10 @@ impl KernelCovOp {
             xt,
             xnorm,
             plan,
+            precision: mmm::default_precision(),
             r2: Arc::new(OnceLock::new()),
             kmat: RwLock::new(None),
+            m32_staging: Mutex::new(Vec::new()),
         }
     }
 
@@ -207,8 +335,10 @@ impl KernelCovOp {
             xt: Arc::clone(&self.xt),
             xnorm: Arc::clone(&self.xnorm),
             plan,
+            precision: self.precision,
             r2: Arc::clone(&self.r2),
             kmat: RwLock::new(None),
+            m32_staging: Mutex::new(Vec::new()),
         }
     }
 
@@ -230,6 +360,32 @@ impl KernelCovOp {
     /// The active materialisation plan.
     pub fn plan(&self) -> MmmPlan {
         self.plan
+    }
+
+    /// Builder override of the tile precision.
+    pub fn with_precision(mut self, precision: Precision) -> Self {
+        self.set_precision(precision);
+        self
+    }
+
+    /// In-place precision override (changes the operator's `mmm_tag`, so
+    /// cached solve plans against it are invalidated).
+    pub fn set_precision(&mut self, precision: Precision) {
+        self.precision = precision;
+    }
+
+    /// The active tile precision.
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    /// Whether products will actually run the mixed f32-tile path (Mixed
+    /// precision degrades to f64 for `MaterializeK` and non-stationary
+    /// kernels — it degrades, it never lies).
+    pub fn mixed_active(&self) -> bool {
+        self.precision == Precision::Mixed
+            && self.plan != MmmPlan::MaterializeK
+            && self.kernel.stationary().is_some()
     }
 
     /// The shared training-input handle (for tests and callers that want
@@ -322,6 +478,71 @@ impl KernelCovOp {
                 }
             });
         });
+    }
+
+    /// Mixed-precision twin of [`KernelCovOp::stationary_tiles_into`]:
+    /// kernel rows are evaluated into **f32** tiles (double SIMD lane
+    /// width, half the tile bandwidth) and contracted against an f32 copy
+    /// of `M` through [`gemm::gemm_mixed_into`], which accumulates into
+    /// the f64 output at `KB`-block granularity. Distances stay f64 (the
+    /// r² panel is shared with the f64 path). The f32 copy of `M` is
+    /// staged once per product in the operator's grow-only buffer.
+    fn stationary_tiles_into_mixed(
+        &self,
+        sp: &StationaryParams,
+        tf: TileFn,
+        m: &Mat,
+        out: &mut Mat,
+        r2_panel: Option<&Mat>,
+    ) {
+        let n = self.x.rows();
+        assert_eq!(m.rows(), n);
+        let t = m.cols();
+        assert_eq!(out.shape(), (n, t), "stationary_tiles_into_mixed: output shape");
+        let x: &Mat = &self.x;
+        let xt: &Mat = &self.xt;
+        let xnorm: &[f64] = &self.xnorm;
+        // stage M → f32 once per product (grow-only; warm products are
+        // allocation-free). Taken out of the lock so the parallel region
+        // below can share it immutably.
+        let mut m32 = std::mem::take(&mut *self.m32_staging.lock().unwrap());
+        m32.clear();
+        m32.extend(m.data().iter().map(|&v| v as f32));
+        let m32_ref: &[f32] = &m32;
+        par::parallel_rows_mut(out.data_mut(), n, t, |row_lo, chunk| {
+            chunk.iter_mut().for_each(|v| *v = 0.0);
+            let rows_here = chunk.len() / t.max(1);
+            scratch::with(GROUP * n, |r2buf| {
+                scratch::with_f32(GROUP * n, |kbuf| {
+                    let mut r0 = 0;
+                    while r0 < rows_here {
+                        let g = GROUP.min(rows_here - r0);
+                        for rr in 0..g {
+                            let i = row_lo + r0 + rr;
+                            let krow = &mut kbuf[rr * n..(rr + 1) * n];
+                            match r2_panel {
+                                Some(panel) => stationary_apply_f32(sp, tf, panel.row(i), krow),
+                                None => {
+                                    let r2row = &mut r2buf[rr * n..(rr + 1) * n];
+                                    squared_dists_row(x, xt, xnorm, i, r2row);
+                                    stationary_apply_f32(sp, tf, r2row, krow);
+                                }
+                            }
+                        }
+                        gemm::gemm_mixed_into(
+                            &kbuf[..g * n],
+                            m32_ref,
+                            &mut chunk[r0 * t..(r0 + g) * t],
+                            g,
+                            n,
+                            t,
+                        );
+                        r0 += g;
+                    }
+                });
+            });
+        });
+        *self.m32_staging.lock().unwrap() = m32;
     }
 
     /// Generic-kernel tile path: build TILE rows by virtual evaluation,
@@ -444,10 +665,14 @@ impl LinearOp for KernelCovOp {
         }
         if let Some(sp) = self.kernel.stationary() {
             let panel = (self.plan == MmmPlan::CachedDistances).then(|| self.r2_panel());
+            if self.mixed_active() {
+                return self.stationary_tiles_into_mixed(&sp, TileFn::Value, m, out, panel);
+            }
             return self.stationary_tiles_into(&sp, TileFn::Value, m, out, panel);
         }
         // CachedDistances has no meaning without stationary structure:
-        // stream (the plan degrades, it never lies)
+        // stream (the plan degrades, it never lies). The same degradation
+        // applies to Mixed precision — the generic path computes in f64.
         self.generic_tiles_into(m, out);
     }
 
@@ -466,7 +691,10 @@ impl LinearOp for KernelCovOp {
     }
 
     fn mmm_tag(&self) -> u64 {
-        self.plan.tag()
+        // plan in the low byte, precision above it — a precision switch
+        // re-fingerprints the operator just like a plan switch, so
+        // SolvePlanCache never serves a plan built at the other precision
+        self.plan.tag() | (self.precision.tag() << 8)
     }
 
     fn dmatmul(&self, param: usize, m: &Mat) -> Mat {
@@ -488,7 +716,16 @@ impl LinearOp for KernelCovOp {
             };
             let mut out = Mat::zeros(n, t);
             let panel = (self.plan == MmmPlan::CachedDistances).then(|| self.r2_panel());
-            self.stationary_tiles_into(&sp, tf, m, &mut out, panel);
+            // mixed_active (not a raw precision check): under MaterializeK
+            // the value products are bit-exact f64 GEMMs against the cached
+            // panel, so the streamed derivative products must stay f64 too —
+            // a gradient computed at lower precision than its objective
+            // would silently skew training
+            if self.mixed_active() {
+                self.stationary_tiles_into_mixed(&sp, tf, m, &mut out, panel);
+            } else {
+                self.stationary_tiles_into(&sp, tf, m, &mut out, panel);
+            }
             return out;
         }
         let mut out = Mat::zeros(n, t);
@@ -568,6 +805,14 @@ impl DenseKernelOp {
         DenseKernelOp {
             op: AddedDiagOp::new(KernelCovOp::new(x, kernel), noise),
         }
+    }
+
+    /// Builder override of the covariance tile precision (see
+    /// [`KernelCovOp::with_precision`]; the default is the process-wide
+    /// [`mmm::default_precision`]).
+    pub fn with_precision(mut self, precision: Precision) -> Self {
+        self.op.inner_mut().set_precision(precision);
+        self
     }
 
     /// Training inputs.
@@ -711,6 +956,58 @@ mod tests {
                 assert!((c.get(i, j) - want).abs() < 1e-9);
             }
         }
+    }
+
+    #[test]
+    fn mixed_precision_tracks_f64_per_plan() {
+        let mut rng = Rng::new(11);
+        let x = Mat::from_fn(70, 3, |_, _| rng.uniform_in(-1.0, 1.0));
+        let m = Mat::from_fn(70, 4, |_, _| rng.normal());
+        for plan in [MmmPlan::Stream, MmmPlan::CachedDistances] {
+            let op64 = KernelCovOp::new(x.clone(), Box::new(Rbf::new(0.5, 1.2))).with_plan(plan);
+            let opmx = KernelCovOp::new(x.clone(), Box::new(Rbf::new(0.5, 1.2)))
+                .with_plan(plan)
+                .with_precision(Precision::Mixed);
+            assert!(opmx.mixed_active());
+            assert_ne!(op64.mmm_tag(), opmx.mmm_tag(), "precision must re-tag");
+            let want = op64.matmul(&m);
+            let got = opmx.matmul(&m);
+            assert!(
+                got.max_abs_diff(&want) < 1e-3,
+                "{}: mixed vs f64 diff {}",
+                plan.name(),
+                got.max_abs_diff(&want)
+            );
+            // derivative tiles ride the same mixed path
+            let dwant = op64.dmatmul(0, &m);
+            let dgot = opmx.dmatmul(0, &m);
+            assert!(dgot.max_abs_diff(&dwant) < 1e-3, "{}: dmatmul", plan.name());
+        }
+        // Matern exercises the sqrt/u epilogues
+        let op64 = KernelCovOp::new(x.clone(), Box::new(Matern52::new(0.4, 0.9)));
+        let opmx = KernelCovOp::new(x.clone(), Box::new(Matern52::new(0.4, 0.9)))
+            .with_precision(Precision::Mixed);
+        assert!(opmx.matmul(&m).max_abs_diff(&op64.matmul(&m)) < 1e-3);
+    }
+
+    #[test]
+    fn mixed_precision_degrades_to_f64_when_it_cannot_apply() {
+        let mut rng = Rng::new(12);
+        let x = Mat::from_fn(24, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+        let m = Mat::from_fn(24, 2, |_, _| rng.normal());
+        // MaterializeK has no f32 tile path: Mixed must be bit-identical
+        let op64 = KernelCovOp::new(x.clone(), Box::new(Rbf::new(0.5, 1.2)))
+            .with_plan(MmmPlan::MaterializeK);
+        let opmx = KernelCovOp::new(x.clone(), Box::new(Rbf::new(0.5, 1.2)))
+            .with_plan(MmmPlan::MaterializeK)
+            .with_precision(Precision::Mixed);
+        assert!(!opmx.mixed_active());
+        assert_eq!(opmx.matmul(&m).max_abs_diff(&op64.matmul(&m)), 0.0);
+        // derivative products stream under MaterializeK — they must degrade
+        // to f64 with the value products, not run mixed on their own
+        assert_eq!(opmx.dmatmul(0, &m).max_abs_diff(&op64.dmatmul(0, &m)), 0.0);
+        // …but the tag still distinguishes them (plans must not be shared)
+        assert_ne!(op64.mmm_tag(), opmx.mmm_tag());
     }
 
     #[test]

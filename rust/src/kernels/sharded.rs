@@ -17,10 +17,12 @@
 //! same summation order), and kernel rows are still produced on the fly,
 //! so peak memory stays O(n·t + tile·n) — no n×n matrix is ever formed.
 
-use super::operator::{cross_kernel, squared_dists_row, stationary_apply, TileFn};
+use super::operator::{
+    cross_kernel, squared_dists_row, stationary_apply, stationary_apply_f32, TileFn,
+};
 use super::{Kernel, KernelCov};
 use crate::linalg::mbcg::ShardedMmm;
-use crate::linalg::op::{mmm, AddedDiagOp, LinearOp, MmmPlan};
+use crate::linalg::op::{mmm, AddedDiagOp, LinearOp, MmmPlan, Precision};
 use crate::runtime::dist::ShardBackend;
 use crate::runtime::shard::{partition_rows, run_rows_mut, ShardQueue};
 use crate::tensor::{Mat, Scalar};
@@ -68,6 +70,12 @@ pub struct ShardedCovOp {
     xnorm: Vec<f64>,
     /// how products materialise (fingerprinted via `mmm_tag`)
     plan: MmmPlan,
+    /// tile-compute precision (fingerprinted via `mmm_tag`): under
+    /// [`Precision::Mixed`] stationary kernel rows are evaluated in f32
+    /// (vectorised exp at twice the lane width) and widened once, while
+    /// the contraction against M stays in f64 — distances, derivative
+    /// epilogue math, and the fused σ²M term are untouched
+    precision: Precision,
     /// cached r² panel (parameter-free)
     r2: Arc<OnceLock<Mat>>,
     /// materialised K for the current parameters (cleared on update)
@@ -97,6 +105,7 @@ impl ShardedCovOp {
             xt,
             xnorm,
             plan,
+            precision: mmm::default_precision(),
             r2: Arc::new(OnceLock::new()),
             kmat: RwLock::new(None),
             backend: None,
@@ -152,6 +161,32 @@ impl ShardedCovOp {
     /// The active materialisation plan.
     pub fn plan(&self) -> MmmPlan {
         self.plan
+    }
+
+    /// Builder override of the tile-compute precision.
+    pub fn with_precision(mut self, precision: Precision) -> Self {
+        self.set_precision(precision);
+        self
+    }
+
+    /// In-place precision override (changes `mmm_tag`, invalidating cached
+    /// solve plans against this operator).
+    pub fn set_precision(&mut self, precision: Precision) {
+        self.precision = precision;
+    }
+
+    /// The active tile-compute precision.
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    /// Whether mixed-precision row evaluation actually applies: it needs a
+    /// stationary kernel and a non-materialised plan (materialised-K rows
+    /// are read from the f64 panel — the knob degrades to f64, never lies).
+    pub fn mixed_active(&self) -> bool {
+        self.precision == Precision::Mixed
+            && self.kernel.stationary().is_some()
+            && self.plan != MmmPlan::MaterializeK
     }
 
     /// The cached r² panel, built on first use (parallel over rows).
@@ -294,7 +329,12 @@ impl ShardedCovOp {
         .then(|| self.k_panel());
         let r2panel: Option<&Mat> =
             (self.plan == MmmPlan::CachedDistances && sp.is_some()).then(|| self.r2_panel());
+        // Mixed: stationary rows are evaluated in f32 (vectorised exp) into
+        // `krow32`, widened once into `krow`; the contraction below stays
+        // f64 regardless, so only the tile values carry f32 rounding.
+        let mixed = self.mixed_active();
         let mut krow = vec![0.0f64; n];
+        let mut krow32 = vec![0.0f32; if mixed { n } else { 0 }];
         let mut r2 = vec![0.0f64; n];
         let mut grad = vec![0.0f64; nk];
         for (ri, i) in rows.enumerate() {
@@ -311,7 +351,14 @@ impl ShardedCovOp {
                                 &r2
                             }
                         };
-                        stationary_apply(sp, TileFn::Value, r2row, &mut krow);
+                        if mixed {
+                            stationary_apply_f32(sp, TileFn::Value, r2row, &mut krow32);
+                            for (d, &s) in krow.iter_mut().zip(&krow32[..]) {
+                                *d = f64::from(s);
+                            }
+                        } else {
+                            stationary_apply(sp, TileFn::Value, r2row, &mut krow);
+                        }
                     }
                     (BlockFn::DParam(p), Some(sp)) => {
                         // stationary layout: param 0 = log ℓ, param 1 = log s;
@@ -330,7 +377,14 @@ impl ShardedCovOp {
                                 &r2
                             }
                         };
-                        stationary_apply(sp, tf, r2row, &mut krow);
+                        if mixed {
+                            stationary_apply_f32(sp, tf, r2row, &mut krow32);
+                            for (d, &s) in krow.iter_mut().zip(&krow32[..]) {
+                                *d = f64::from(s);
+                            }
+                        } else {
+                            stationary_apply(sp, tf, r2row, &mut krow);
+                        }
                     }
                     (BlockFn::Value { .. }, None) => {
                         let xi = self.x.row(i);
@@ -412,7 +466,7 @@ impl LinearOp for ShardedCovOp {
     }
 
     fn mmm_tag(&self) -> u64 {
-        self.plan.tag()
+        self.plan.tag() | (self.precision.tag() << 8)
     }
 
     fn dmatmul(&self, param: usize, m: &Mat) -> Mat {
@@ -501,6 +555,17 @@ impl ShardedKernelOp {
     /// in-process plans would build never materialise.
     pub fn set_plan(&mut self, plan: MmmPlan) {
         self.op.inner_mut().set_plan(plan);
+    }
+
+    /// Override the covariance part's tile-compute [`Precision`].
+    pub fn with_precision(mut self, precision: Precision) -> Self {
+        self.set_precision(precision);
+        self
+    }
+
+    /// In-place precision override (see [`ShardedCovOp::set_precision`]).
+    pub fn set_precision(&mut self, precision: Precision) {
+        self.op.inner_mut().set_precision(precision);
     }
 
     /// Route the covariance part's products through a [`ShardBackend`]
@@ -714,6 +779,41 @@ mod tests {
         let got32 = sharded.matmul_scalar::<f32>(&m.cast());
         let diff = got32.cast::<f64>().max_abs_diff(&want);
         assert!(diff < 1e-3 * (1.0 + want.fro_norm()), "diff {diff}");
+    }
+
+    #[test]
+    fn mixed_precision_tracks_f64_and_retags() {
+        let (mut sharded, dense) = setup(64, 3, 4, 20);
+        sharded.set_plan(MmmPlan::Stream);
+        let f64_tag = LinearOp::mmm_tag(&sharded);
+        let sharded = sharded.with_precision(Precision::Mixed);
+        assert!(sharded.cov().mixed_active());
+        assert_ne!(
+            LinearOp::mmm_tag(&sharded),
+            f64_tag,
+            "precision switch must change the operator fingerprint"
+        );
+        let mut rng = Rng::new(21);
+        let m = Mat::from_fn(64, 3, |_, _| rng.normal());
+        let want = dense.matmul(&m);
+        let got = sharded.matmul(&m);
+        let diff = got.max_abs_diff(&want);
+        assert!(diff < 1e-3 * (1.0 + want.fro_norm()), "diff {diff}");
+        // derivative rows go through the same f32 tile path
+        for p in 0..sharded.kernel().n_params() {
+            let dd = sharded
+                .dmatmul(p, &m)
+                .max_abs_diff(&dense.dmatmul(p, &m));
+            assert!(dd < 1e-3 * (1.0 + want.fro_norm()), "param {p}: {dd}");
+        }
+        // materialised-K rows come from the f64 panel: bit-identical to f64
+        let (mut sh2, dn2) = setup(48, 2, 3, 22);
+        sh2.set_plan(MmmPlan::MaterializeK);
+        let sh2 = sh2.with_precision(Precision::Mixed);
+        assert!(!sh2.cov().mixed_active());
+        let mut rng = Rng::new(23);
+        let m2 = Mat::from_fn(48, 2, |_, _| rng.normal());
+        assert!(sh2.matmul(&m2).max_abs_diff(&dn2.matmul(&m2)) < 1e-12);
     }
 
     #[test]

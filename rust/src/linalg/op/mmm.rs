@@ -28,7 +28,64 @@
 //! variant ("materialise on backend X") is the ROADMAP's multi-backend
 //! seam.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+
+/// Arithmetic precision of the per-iteration kernel MMM.
+///
+/// mBCG's *reductions* (α/β dots, tridiagonal tracking, residual norms)
+/// always run in f64 — what this knob selects is how the `Stream` /
+/// `CachedDistances` **tiles** are computed and stored:
+///
+/// - [`Precision::F64`] — everything in f64 (the default; bit-identical
+///   to the historical path).
+/// - [`Precision::Mixed`] — kernel tiles and probe panels in f32
+///   (double the SIMD lane count, half the panel memory), with the tile
+///   contraction accumulating into f64 at `KB`-block granularity
+///   ([`crate::tensor::gemm::gemm_mixed_into`]). Per-product error is
+///   ~1e-6 relative, solve-level mean/variance error ~1e-5 relative —
+///   the accuracy contract the precision-parity tests gate.
+///
+/// Mixed mode **degrades, never lies**: plans/operators that have no f32
+/// tile path (`MaterializeK`, non-stationary kernels, cross-covariance
+/// blocks) silently compute in f64. The precision is part of
+/// `mmm_tag`/`fingerprint()`, so `SolvePlanCache` (and the LOVE posterior
+/// cache) invalidate on a precision switch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    /// Full f64 tiles (default).
+    #[default]
+    F64,
+    /// f32 tile compute/storage, f64 accumulation.
+    Mixed,
+}
+
+impl Precision {
+    /// Stable discriminant mixed into operator fingerprints (shifted next
+    /// to [`MmmPlan::tag`] by the operators).
+    pub fn tag(self) -> u64 {
+        match self {
+            Precision::F64 => 0,
+            Precision::Mixed => 1,
+        }
+    }
+
+    /// Short name for logs, flags, and bench tables.
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::Mixed => "mixed",
+        }
+    }
+
+    /// Parse a `--precision` flag value (`f64` | `mixed`).
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s.to_ascii_lowercase().as_str() {
+            "f64" | "double" => Some(Precision::F64),
+            "mixed" | "f32" => Some(Precision::Mixed),
+            _ => None,
+        }
+    }
+}
 
 /// How a kernel covariance operator produces its matrix-matrix products.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -147,6 +204,35 @@ pub fn set_budget_mb(mb: usize) {
     }
 }
 
+// 0 = unset (read env once), 1 = F64, 2 = Mixed — same caching pattern as
+// BUDGET_MB so `--precision` and `BBMM_PRECISION` behave alike
+static PRECISION: AtomicU8 = AtomicU8::new(0);
+
+/// The process-default [`Precision`] (cached after first read;
+/// `BBMM_PRECISION=f64|mixed` overrides the default,
+/// [`set_default_precision`] overrides both). Operators constructed
+/// without an explicit precision pick this up.
+pub fn default_precision() -> Precision {
+    match PRECISION.load(Ordering::Relaxed) {
+        1 => Precision::F64,
+        2 => Precision::Mixed,
+        _ => {
+            let p = std::env::var("BBMM_PRECISION")
+                .ok()
+                .and_then(|s| Precision::parse(&s))
+                .unwrap_or(Precision::F64);
+            PRECISION.store(if p == Precision::Mixed { 2 } else { 1 }, Ordering::Relaxed);
+            p
+        }
+    }
+}
+
+/// Override the default precision (the `--precision` CLI flag). Affects
+/// operators constructed after the call.
+pub fn set_default_precision(p: Precision) {
+    PRECISION.store(if p == Precision::Mixed { 2 } else { 1 }, Ordering::Relaxed);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -193,5 +279,16 @@ mod tests {
     #[test]
     fn budget_has_a_positive_default() {
         assert!(budget_bytes() > 0);
+    }
+
+    #[test]
+    fn precision_tags_names_and_parsing() {
+        assert_ne!(Precision::F64.tag(), Precision::Mixed.tag());
+        assert_eq!(Precision::default(), Precision::F64);
+        assert_eq!(Precision::parse("mixed"), Some(Precision::Mixed));
+        assert_eq!(Precision::parse("F64"), Some(Precision::F64));
+        assert_eq!(Precision::parse("f32"), Some(Precision::Mixed));
+        assert_eq!(Precision::parse("half"), None);
+        assert_eq!(Precision::Mixed.name(), "mixed");
     }
 }

@@ -40,7 +40,7 @@ pub use cache::SolvePlanCache;
 pub use compose::{AddedDiagOp, DiagOp, ScaledOp, SumOp};
 pub use interp::{InterpOp, SparseInterp};
 pub use lowrank::LowRankOp;
-pub use mmm::MmmPlan;
+pub use mmm::{MmmPlan, Precision};
 pub use sharded::ShardedOp;
 pub use solve::{
     build_preconditioner, build_preconditioner_batch, plan, plan_batch, solve, solve_batch,

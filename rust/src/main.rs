@@ -39,13 +39,26 @@ use std::sync::Arc;
 /// Apply process-wide performance knobs before any operator or pool is
 /// built: `--threads N` sizes the persistent worker pool (the flag form of
 /// `BBMM_THREADS`), `--mmm-budget-mb M` bounds the kernel materialisation
-/// plans (the flag form of `BBMM_MMM_BUDGET_MB`).
+/// plans (the flag form of `BBMM_MMM_BUDGET_MB`), and `--precision
+/// f64|mixed` sets the default tile-compute precision every kernel
+/// operator built afterwards inherits (the flag form of `BBMM_PRECISION`).
 fn apply_perf_flags(args: &Args) -> Result<(), CliError> {
     if args.get("threads").is_some() {
         bbmm_gp::util::par::set_threads(args.usize_or("threads", 0)?);
     }
     if args.get("mmm-budget-mb").is_some() {
         bbmm_gp::linalg::op::mmm::set_budget_mb(args.usize_or("mmm-budget-mb", 0)?);
+    }
+    if let Some(p) = args.get("precision") {
+        match bbmm_gp::linalg::op::Precision::parse(p) {
+            Some(prec) => bbmm_gp::linalg::op::mmm::set_default_precision(prec),
+            None => {
+                return Err(CliError {
+                    flag: "precision".to_string(),
+                    message: format!("unknown precision `{p}` (expected f64|mixed)"),
+                })
+            }
+        }
     }
     Ok(())
 }
@@ -204,6 +217,13 @@ fn print_help() {
                                stationary ops cache the r² panel or K\n\
                                itself; over it they stream tiles — flag\n\
                                form of BBMM_MMM_BUDGET_MB, default 1024)\n\
+           --precision f64|mixed  (tile-compute precision: mixed evaluates\n\
+                               stationary kernel tiles in f32 — twice the\n\
+                               SIMD lane width — while every mBCG\n\
+                               reduction accumulates in f64; ~1e-5\n\
+                               relative on solves, falls back to full\n\
+                               f64 where it cannot apply — flag form of\n\
+                               BBMM_PRECISION, default f64)\n\
            --plan-cache-cap N --plan-cache-ttl-s S   (serve: bound the\n\
                                multi-tenant solve-plan cache: LRU + TTL)\n\
            --tenant name=model[@dataset]   (serve: repeatable; host many\n\
@@ -435,6 +455,30 @@ fn cmd_sweep(args: &Args) -> Result<(), CliError> {
         engine.last_stats.batched_products,
         engine.last_stats.system_iterations
     );
+    // one timed K̂·M product at the winning parameters: the achieved rate
+    // of the streaming compute core under the active precision + dispatch
+    {
+        let n = ds.n_train();
+        let t = args.usize_or("probes", 10)?;
+        let mut probe_op = DenseKernelOp::new(ds.x_train.clone(), make_kernel(args), 0.1);
+        if let Some(p) = report.best_params() {
+            if p.len() == LinearOp::n_params(&probe_op) {
+                probe_op.set_params(p);
+            }
+        }
+        let mut rng = Rng::new(seed ^ 0x5eed);
+        let m = Mat::from_fn(n, t, |_, _| rng.normal());
+        probe_op.prepare();
+        let pt = Timer::start();
+        let _ = probe_op.matmul(&m);
+        let psecs = pt.elapsed_s().max(1e-9);
+        let gflops = 2.0 * (n as f64) * (n as f64) * (t as f64) / psecs / 1e9;
+        println!(
+            "mmm: precision={} simd={} — K̂·M probe ({n}×{n} by {n}×{t}) at {gflops:.2} GFLOP/s",
+            bbmm_gp::linalg::op::mmm::default_precision().name(),
+            bbmm_gp::tensor::simd::active().name()
+        );
+    }
     match report.best {
         None => println!("sweep: every candidate diverged — no winner"),
         Some(bi) => {
@@ -877,9 +921,11 @@ fn cmd_serve(args: &Args) -> Result<(), CliError> {
         None => println!("love: disabled (per-query solve path; VAR/SAMPLE return ERR)"),
     }
     println!(
-        "perf: threads={} mmm-budget={}MB",
+        "perf: threads={} mmm-budget={}MB precision={} simd={}",
         bbmm_gp::util::par::num_threads(),
-        bbmm_gp::linalg::op::mmm::budget_bytes() / (1024 * 1024)
+        bbmm_gp::linalg::op::mmm::budget_bytes() / (1024 * 1024),
+        bbmm_gp::linalg::op::mmm::default_precision().name(),
+        bbmm_gp::tensor::simd::active().name()
     );
     serve_with_love(config, batcher, love_ctx, |addr| println!("listening on {addr}"))
         .expect("server failed");

@@ -11,7 +11,14 @@
 //!   unroll removes the loop-carried dependence so LLVM autovectorises
 //!   the inner loop into wide FMA lanes,
 //! - `k` is blocked (`KB` = 256) so the `B` panel stays L2-resident,
-//! - everything is generic over [`Scalar`] (f32 doubles the lane count).
+//! - everything is generic over [`Scalar`] (f32 doubles the lane count),
+//! - for the concrete f32/f64 instantiations, [`gemm_into`] routes through
+//!   the explicit-SIMD arms in [`super::simd`] (AVX2/FMA or NEON, runtime
+//!   dispatched) instead of relying on autovectorisation; the generic
+//!   portable kernel below remains the always-compiled fallback. The
+//!   mixed-precision [`gemm_mixed_into`] (f32 storage/compute, f64
+//!   accumulation) lives here too — it is the compute mode behind
+//!   [`crate::linalg::op::mmm::Precision::Mixed`].
 //!
 //! All entry points are **serial** and write into caller-owned buffers
 //! (`out += …`); thread-level parallelism is layered above by splitting
@@ -19,13 +26,36 @@
 //! zero-allocation solve paths call these directly with workspace slices.
 
 use super::scalar::Scalar;
+use super::simd;
+use std::any::TypeId;
 
 /// Register-tile rows (independent accumulator rows per micro-kernel call).
 pub const MR: usize = 4;
 /// Register-tile columns (contiguous lanes per accumulator row).
 pub const NR: usize = 8;
 /// k-blocking: `KB × NR` of `B` stays cache-resident across a row sweep.
-const KB: usize = 256;
+/// Public because the SIMD arms reuse the same walk, and because `KB` is
+/// the f32 accumulation length that bounds mixed-precision error.
+pub const KB: usize = 256;
+
+/// Identity slice cast used by the TypeId-dispatched SIMD fast paths.
+///
+/// # Safety
+/// Caller must ensure `T` and `U` are the same type (checked by the
+/// `TypeId` guard at every call site) — then this is a no-op transmute.
+unsafe fn cast_slice<T: 'static, U: 'static>(s: &[T]) -> &[U] {
+    debug_assert_eq!(TypeId::of::<T>(), TypeId::of::<U>());
+    std::slice::from_raw_parts(s.as_ptr() as *const U, s.len())
+}
+
+/// Mutable twin of [`cast_slice`].
+///
+/// # Safety
+/// Same contract: `T` and `U` must be the same type.
+unsafe fn cast_slice_mut<T: 'static, U: 'static>(s: &mut [T]) -> &mut [U] {
+    debug_assert_eq!(TypeId::of::<T>(), TypeId::of::<U>());
+    std::slice::from_raw_parts_mut(s.as_mut_ptr() as *mut U, s.len())
+}
 
 /// The `MRxNR` micro-kernel: `out[0..MR_, 0..NR] += A[0..MR_, 0..k] ·
 /// B[0..k, 0..NR]` with row strides `lda`/`ldb`/`ldo`. `MR_` is a const
@@ -68,6 +98,25 @@ pub fn gemm_into<T: Scalar>(a: &[T], b: &[T], out: &mut [T], m: usize, k: usize,
     if m == 0 || n == 0 || k == 0 {
         return;
     }
+    // Explicit-SIMD fast path: `Scalar` is `'static`, so the concrete
+    // element type is recoverable here and the casts are identity.
+    if TypeId::of::<T>() == TypeId::of::<f64>() {
+        // SAFETY: T == f64, just checked
+        let done = unsafe {
+            simd::gemm_f64(cast_slice(a), cast_slice(b), cast_slice_mut(out), m, k, n)
+        };
+        if done {
+            return;
+        }
+    } else if TypeId::of::<T>() == TypeId::of::<f32>() {
+        // SAFETY: T == f32, just checked
+        let done = unsafe {
+            simd::gemm_f32(cast_slice(a), cast_slice(b), cast_slice_mut(out), m, k, n)
+        };
+        if done {
+            return;
+        }
+    }
     let mut k0 = 0;
     while k0 < k {
         let kb = KB.min(k - k0);
@@ -104,6 +153,38 @@ pub fn gemm_into<T: Scalar>(a: &[T], b: &[T], out: &mut [T], m: usize, k: usize,
             i0 += mh;
         }
         k0 += kb;
+    }
+}
+
+/// Mixed-precision GEMM: `out (m×n, f64) += A (m×k, f32) · B (k×n, f32)`.
+///
+/// Products run in f32 (full SIMD lane count — twice the f64 width), and
+/// the accumulation is widened to f64 at [`KB`] granularity in the SIMD
+/// arms (per element in the portable fallback), so per-entry error is
+/// bounded by `KB · ε₃₂ ≈ 1.5e-5` relative to the f32-rounded inputs.
+/// This is the tile contraction behind
+/// [`crate::linalg::op::mmm::Precision::Mixed`].
+pub fn gemm_mixed_into(a: &[f32], b: &[f32], out: &mut [f64], m: usize, k: usize, n: usize) {
+    debug_assert!(a.len() >= m * k, "gemm_mixed_into: A buffer too small");
+    debug_assert!(b.len() >= k * n, "gemm_mixed_into: B buffer too small");
+    debug_assert!(out.len() >= m * n, "gemm_mixed_into: out buffer too small");
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    if simd::gemm_mixed(a, b, out, m, k, n) {
+        return;
+    }
+    // portable fallback: f32 products widened per element into the f64
+    // accumulator (strictly more accurate than the KB-blocked SIMD arms)
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for (kk, &av) in arow.iter().enumerate() {
+            let brow = &b[kk * n..(kk + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += (av * bv) as f64;
+            }
+        }
     }
 }
 
@@ -317,6 +398,43 @@ mod tests {
         let want = naive(&a, &b, m, k, n);
         for i in 0..m * n {
             assert!((out32[i] as f64 - want[i]).abs() < 1e-3 * (1.0 + want[i].abs()));
+        }
+    }
+
+    #[test]
+    fn mixed_gemm_tracks_f64_within_f32_bound() {
+        // spans the KB boundary so the SIMD arms' blocked widening is hit
+        for &(m, k, n) in &[(5usize, 33usize, 9usize), (7, 300, 12), (4, 257, 8)] {
+            let a = rand_buf(m * k, 40 + k as u64);
+            let b = rand_buf(k * n, 41 + k as u64);
+            let a32: Vec<f32> = a.iter().map(|&v| v as f32).collect();
+            let b32: Vec<f32> = b.iter().map(|&v| v as f32).collect();
+            let mut out = vec![0.0f64; m * n];
+            gemm_mixed_into(&a32, &b32, &mut out, m, k, n);
+            let want = naive(&a, &b, m, k, n);
+            for i in 0..m * n {
+                assert!(
+                    (out[i] - want[i]).abs() < 5e-4 * (1.0 + want[i].abs()),
+                    "({m},{k},{n}) entry {i}: {} vs {}",
+                    out[i],
+                    want[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_gemm_accumulates_into_out() {
+        let (m, k, n) = (3, 5, 11);
+        let a = rand_buf(m * k, 50);
+        let b = rand_buf(k * n, 51);
+        let a32: Vec<f32> = a.iter().map(|&v| v as f32).collect();
+        let b32: Vec<f32> = b.iter().map(|&v| v as f32).collect();
+        let mut out = vec![1.0f64; m * n];
+        gemm_mixed_into(&a32, &b32, &mut out, m, k, n);
+        let want = naive(&a, &b, m, k, n);
+        for i in 0..m * n {
+            assert!((out[i] - 1.0 - want[i]).abs() < 1e-4 * (1.0 + want[i].abs()));
         }
     }
 }

@@ -8,6 +8,7 @@
 pub mod gemm;
 pub mod mat;
 pub mod scalar;
+pub mod simd;
 
 pub use mat::Mat;
 pub use scalar::Scalar;

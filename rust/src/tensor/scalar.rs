@@ -41,6 +41,11 @@ pub trait Scalar:
     fn max_s(self, other: Self) -> Self;
     fn min_s(self, other: Self) -> Self;
     fn is_finite(self) -> bool;
+    /// Fused multiply-add `self * a + b` with a single rounding — generic
+    /// code can now express FMA chains explicitly instead of hoping LLVM
+    /// contracts `a * b + c` (it may not, and contraction is not
+    /// guaranteed to be stable across versions).
+    fn mul_add(self, a: Self, b: Self) -> Self;
 }
 
 impl Scalar for f64 {
@@ -83,6 +88,10 @@ impl Scalar for f64 {
     #[inline]
     fn is_finite(self) -> bool {
         f64::is_finite(self)
+    }
+    #[inline]
+    fn mul_add(self, a: f64, b: f64) -> f64 {
+        f64::mul_add(self, a, b)
     }
 }
 
@@ -127,6 +136,10 @@ impl Scalar for f32 {
     fn is_finite(self) -> bool {
         f32::is_finite(self)
     }
+    #[inline]
+    fn mul_add(self, a: f32, b: f32) -> f32 {
+        f32::mul_add(self, a, b)
+    }
 }
 
 #[cfg(test)]
@@ -139,6 +152,10 @@ mod tests {
         assert!((T::from_f64(1.0).exp().to_f64() - std::f64::consts::E).abs() < 1e-6);
         assert!(T::from_f64(-3.0).abs().to_f64() == 3.0);
         assert!(T::from_f64(f64::NAN).is_finite() == false);
+        assert_eq!(
+            T::from_f64(2.0).mul_add(T::from_f64(3.0), T::from_f64(1.0)).to_f64(),
+            7.0
+        );
     }
 
     #[test]

@@ -1,0 +1,990 @@
+//! Explicit SIMD lanes behind **runtime dispatch** — the compute arms the
+//! streaming kernel-MMM engine selects from at process start.
+//!
+//! LLVM autovectorises the portable kernels in [`super::gemm`] well enough
+//! on a good day, but the mBCG hot path cannot depend on a good day: this
+//! module pins the 4×8 GEMM register tile, the mixed-precision
+//! f32-compute/f64-accumulate tile, and the batched `exp()` used by
+//! stationary kernel rows to explicit AVX2/FMA (x86_64) or NEON (aarch64)
+//! intrinsics. The scalar fallback is **always compiled** and always
+//! correct; the SIMD arms are selected once per process:
+//!
+//! - `BBMM_FORCE_SCALAR=1` forces the scalar arm (the CI leg and the
+//!   debugging knob),
+//! - on x86_64, `is_x86_feature_detected!("avx2")` + `"fma"` selects
+//!   [`Dispatch::Avx2Fma`] (4 × f64 / 8 × f32 lanes),
+//! - on aarch64, NEON is part of the baseline ABI, so [`Dispatch::Neon`]
+//!   (2 × f64 / 4 × f32 lanes) is selected unconditionally.
+//!
+//! Every public entry point is **safe**: it checks [`active`] itself and
+//! reports (via `bool`/prefix-length returns) when the caller must run the
+//! portable fallback instead. The `#[target_feature]` internals are only
+//! reachable after detection confirmed the features, which is exactly the
+//! soundness contract those functions require.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Which lane implementation the process selected at runtime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dispatch {
+    /// Portable scalar/autovectorised fallback (always compiled; forced
+    /// by `BBMM_FORCE_SCALAR`).
+    Scalar,
+    /// AVX2 + FMA 256-bit lanes (x86_64, detected at runtime).
+    Avx2Fma,
+    /// NEON 128-bit lanes (aarch64 baseline).
+    Neon,
+}
+
+impl Dispatch {
+    /// Short name for logs, bench tables, and the serve banner.
+    pub fn name(self) -> &'static str {
+        match self {
+            Dispatch::Scalar => "scalar",
+            Dispatch::Avx2Fma => "avx2+fma",
+            Dispatch::Neon => "neon",
+        }
+    }
+
+    /// f64 elements per vector register under this arm.
+    pub fn lanes_f64(self) -> usize {
+        match self {
+            Dispatch::Scalar => 1,
+            Dispatch::Avx2Fma => 4,
+            Dispatch::Neon => 2,
+        }
+    }
+
+    /// f32 elements per vector register under this arm (twice the f64
+    /// width — the reason Mixed precision exists).
+    pub fn lanes_f32(self) -> usize {
+        match self {
+            Dispatch::Scalar => 1,
+            Dispatch::Avx2Fma => 8,
+            Dispatch::Neon => 4,
+        }
+    }
+}
+
+const UNSET: u8 = 0;
+static ACTIVE: AtomicU8 = AtomicU8::new(UNSET);
+
+fn encode(d: Dispatch) -> u8 {
+    match d {
+        Dispatch::Scalar => 1,
+        Dispatch::Avx2Fma => 2,
+        Dispatch::Neon => 3,
+    }
+}
+
+fn decode(v: u8) -> Option<Dispatch> {
+    match v {
+        1 => Some(Dispatch::Scalar),
+        2 => Some(Dispatch::Avx2Fma),
+        3 => Some(Dispatch::Neon),
+        _ => None,
+    }
+}
+
+/// The active dispatch arm (detected on first call, then cached — one
+/// relaxed atomic load per query, so hot loops may hoist but need not).
+pub fn active() -> Dispatch {
+    match decode(ACTIVE.load(Ordering::Relaxed)) {
+        Some(d) => d,
+        None => {
+            let d = detect();
+            ACTIVE.store(encode(d), Ordering::Relaxed);
+            d
+        }
+    }
+}
+
+/// `BBMM_FORCE_SCALAR` set to anything but `""`/`"0"` forces the scalar
+/// arm — the debugging/CI knob documented in the README.
+fn forced_scalar_env() -> bool {
+    std::env::var("BBMM_FORCE_SCALAR")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false)
+}
+
+fn detect() -> Dispatch {
+    if forced_scalar_env() {
+        return Dispatch::Scalar;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            return Dispatch::Avx2Fma;
+        }
+    }
+    if cfg!(target_arch = "aarch64") {
+        // NEON is mandatory in the aarch64 baseline ABI — no runtime probe
+        return Dispatch::Neon;
+    }
+    Dispatch::Scalar
+}
+
+/// Test/debug hook: force the scalar arm (`true`) or re-run detection
+/// (`false`, which still honours `BBMM_FORCE_SCALAR`). Takes effect for
+/// every subsequent [`active`] query process-wide.
+pub fn set_forced_scalar(forced: bool) {
+    let d = if forced { Dispatch::Scalar } else { detect() };
+    ACTIVE.store(encode(d), Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// Safe dispatched entry points
+// ---------------------------------------------------------------------------
+
+/// `out (m×n) += A (m×k) · B (k×n)` in f64 through the active SIMD arm.
+/// Returns `false` under scalar dispatch — the caller runs the portable
+/// kernel in [`super::gemm`] instead.
+#[inline]
+pub fn gemm_f64(a: &[f64], b: &[f64], out: &mut [f64], m: usize, k: usize, n: usize) -> bool {
+    debug_assert!(a.len() >= m * k && b.len() >= k * n && out.len() >= m * n);
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: detection confirmed avx2+fma on this CPU
+        Dispatch::Avx2Fma => {
+            unsafe { avx2::gemm_f64(a, b, out, m, k, n) };
+            true
+        }
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64
+        Dispatch::Neon => {
+            unsafe { neon::gemm_f64(a, b, out, m, k, n) };
+            true
+        }
+        _ => {
+            let _ = (&a, &b, &out, m, k, n);
+            false
+        }
+    }
+}
+
+/// `out (m×n) += A (m×k) · B (k×n)` in f32 through the active SIMD arm
+/// (double the lane count of [`gemm_f64`]). Returns `false` under scalar
+/// dispatch.
+#[inline]
+pub fn gemm_f32(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) -> bool {
+    debug_assert!(a.len() >= m * k && b.len() >= k * n && out.len() >= m * n);
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: detection confirmed avx2+fma on this CPU
+        Dispatch::Avx2Fma => {
+            unsafe { avx2::gemm_f32(a, b, out, m, k, n) };
+            true
+        }
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64
+        Dispatch::Neon => {
+            unsafe { neon::gemm_f32(a, b, out, m, k, n) };
+            true
+        }
+        _ => {
+            let _ = (&a, &b, &out, m, k, n);
+            false
+        }
+    }
+}
+
+/// Mixed-precision tile: `out (m×n, f64) += A (m×k, f32) · B (k×n, f32)`,
+/// products and register accumulation in f32 (full lane count), widened
+/// into the f64 output once per `KB`-sized k-block — the compute mode of
+/// [`crate::linalg::op::mmm::Precision::Mixed`]. Returns `false` under
+/// scalar dispatch.
+#[inline]
+pub fn gemm_mixed(a: &[f32], b: &[f32], out: &mut [f64], m: usize, k: usize, n: usize) -> bool {
+    debug_assert!(a.len() >= m * k && b.len() >= k * n && out.len() >= m * n);
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: detection confirmed avx2+fma on this CPU
+        Dispatch::Avx2Fma => {
+            unsafe { avx2::gemm_mixed(a, b, out, m, k, n) };
+            true
+        }
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64
+        Dispatch::Neon => {
+            unsafe { neon::gemm_mixed(a, b, out, m, k, n) };
+            true
+        }
+        _ => {
+            let _ = (&a, &b, &out, m, k, n);
+            false
+        }
+    }
+}
+
+/// In-place `x[i] = e^{x[i]}` over the longest lane-aligned prefix of `x`
+/// through the active SIMD arm. Returns the number of leading elements
+/// processed (a multiple of the f64 lane width; `0` under scalar dispatch)
+/// — the caller finishes the tail with the scalar `fast_exp`.
+#[inline]
+pub fn exp_f64_prefix(x: &mut [f64]) -> usize {
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: detection confirmed avx2+fma on this CPU
+        Dispatch::Avx2Fma => unsafe { avx2::exp_f64(x) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64
+        Dispatch::Neon => unsafe { neon::exp_f64(x) },
+        _ => {
+            let _ = &x;
+            0
+        }
+    }
+}
+
+/// f32 twin of [`exp_f64_prefix`] (twice the lane width; ~1e-7 relative
+/// accuracy — the Mixed tile path's batched exp).
+#[inline]
+pub fn exp_f32_prefix(x: &mut [f32]) -> usize {
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: detection confirmed avx2+fma on this CPU
+        Dispatch::Avx2Fma => unsafe { avx2::exp_f32(x) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64
+        Dispatch::Neon => unsafe { neon::exp_f32(x) },
+        _ => {
+            let _ = &x;
+            0
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 + FMA arm (x86_64)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use crate::tensor::gemm::{KB, MR, NR};
+    use crate::util::fastmath::{
+        EXP_HI_F32, EXP_HI_F64, EXP_LO_F32, EXP_LO_F64, EXP_POLY_F32, EXP_POLY_F64, LN2_HI_F32,
+        LN2_HI_F64, LN2_LO_F32, LN2_LO_F64,
+    };
+    use core::arch::x86_64::*;
+
+    /// `MR_×NR` f64 tile: two 4-lane accumulator vectors per row, FMA
+    /// contraction over `kb`, added into `out` once at the end.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn tile_f64<const MR_: usize>(
+        a: *const f64,
+        lda: usize,
+        b: *const f64,
+        ldb: usize,
+        out: *mut f64,
+        ldo: usize,
+        kb: usize,
+    ) {
+        let mut acc0 = [_mm256_setzero_pd(); MR_];
+        let mut acc1 = [_mm256_setzero_pd(); MR_];
+        for kk in 0..kb {
+            let bp = b.add(kk * ldb);
+            let b0 = _mm256_loadu_pd(bp);
+            let b1 = _mm256_loadu_pd(bp.add(4));
+            for i in 0..MR_ {
+                let av = _mm256_set1_pd(*a.add(i * lda + kk));
+                acc0[i] = _mm256_fmadd_pd(av, b0, acc0[i]);
+                acc1[i] = _mm256_fmadd_pd(av, b1, acc1[i]);
+            }
+        }
+        for i in 0..MR_ {
+            let op = out.add(i * ldo);
+            _mm256_storeu_pd(op, _mm256_add_pd(_mm256_loadu_pd(op), acc0[i]));
+            _mm256_storeu_pd(op.add(4), _mm256_add_pd(_mm256_loadu_pd(op.add(4)), acc1[i]));
+        }
+    }
+
+    /// `MR_×NR` f32 tile: one 8-lane accumulator vector per row.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn tile_f32<const MR_: usize>(
+        a: *const f32,
+        lda: usize,
+        b: *const f32,
+        ldb: usize,
+        out: *mut f32,
+        ldo: usize,
+        kb: usize,
+    ) {
+        let mut acc = [_mm256_setzero_ps(); MR_];
+        for kk in 0..kb {
+            let bv = _mm256_loadu_ps(b.add(kk * ldb));
+            for i in 0..MR_ {
+                let av = _mm256_set1_ps(*a.add(i * lda + kk));
+                acc[i] = _mm256_fmadd_ps(av, bv, acc[i]);
+            }
+        }
+        for i in 0..MR_ {
+            let op = out.add(i * ldo);
+            _mm256_storeu_ps(op, _mm256_add_ps(_mm256_loadu_ps(op), acc[i]));
+        }
+    }
+
+    /// Mixed tile: f32 FMA accumulation (8 lanes), both halves widened to
+    /// f64 and added into the output — once per tile call, so the caller's
+    /// `KB` blocking bounds the f32 accumulation length.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn tile_mixed<const MR_: usize>(
+        a: *const f32,
+        lda: usize,
+        b: *const f32,
+        ldb: usize,
+        out: *mut f64,
+        ldo: usize,
+        kb: usize,
+    ) {
+        let mut acc = [_mm256_setzero_ps(); MR_];
+        for kk in 0..kb {
+            let bv = _mm256_loadu_ps(b.add(kk * ldb));
+            for i in 0..MR_ {
+                let av = _mm256_set1_ps(*a.add(i * lda + kk));
+                acc[i] = _mm256_fmadd_ps(av, bv, acc[i]);
+            }
+        }
+        for i in 0..MR_ {
+            let lo = _mm256_cvtps_pd(_mm256_castps256_ps128(acc[i]));
+            let hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(acc[i]));
+            let op = out.add(i * ldo);
+            _mm256_storeu_pd(op, _mm256_add_pd(_mm256_loadu_pd(op), lo));
+            _mm256_storeu_pd(op.add(4), _mm256_add_pd(_mm256_loadu_pd(op.add(4)), hi));
+        }
+    }
+
+    /// The blocked f64 driver — the same `KB`/`MR`/`NR` walk as the
+    /// portable `gemm_into`, with the micro-kernel pinned to FMA lanes.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn gemm_f64(a: &[f64], b: &[f64], out: &mut [f64], m: usize, k: usize, n: usize) {
+        if m == 0 || n == 0 || k == 0 {
+            return;
+        }
+        let mut k0 = 0;
+        while k0 < k {
+            let kb = KB.min(k - k0);
+            let mut i0 = 0;
+            while i0 < m {
+                let mh = MR.min(m - i0);
+                let mut j0 = 0;
+                while j0 + NR <= n {
+                    let ap = a.as_ptr().add(i0 * k + k0);
+                    let bp = b.as_ptr().add(k0 * n + j0);
+                    let op = out.as_mut_ptr().add(i0 * n + j0);
+                    match mh {
+                        4 => tile_f64::<4>(ap, k, bp, n, op, n, kb),
+                        3 => tile_f64::<3>(ap, k, bp, n, op, n, kb),
+                        2 => tile_f64::<2>(ap, k, bp, n, op, n, kb),
+                        _ => tile_f64::<1>(ap, k, bp, n, op, n, kb),
+                    }
+                    j0 += NR;
+                }
+                if j0 < n {
+                    // remainder columns (< NR): scalar, FMA-contracted by LLVM
+                    for ii in 0..mh {
+                        let r = i0 + ii;
+                        for kk in 0..kb {
+                            let av = a[r * k + k0 + kk];
+                            let brow = &b[(k0 + kk) * n + j0..(k0 + kk) * n + n];
+                            let orow = &mut out[r * n + j0..r * n + n];
+                            for (o, &bv) in orow.iter_mut().zip(brow) {
+                                *o += av * bv;
+                            }
+                        }
+                    }
+                }
+                i0 += mh;
+            }
+            k0 += kb;
+        }
+    }
+
+    /// The blocked f32 driver (8 lanes per accumulator row).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn gemm_f32(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+        if m == 0 || n == 0 || k == 0 {
+            return;
+        }
+        let mut k0 = 0;
+        while k0 < k {
+            let kb = KB.min(k - k0);
+            let mut i0 = 0;
+            while i0 < m {
+                let mh = MR.min(m - i0);
+                let mut j0 = 0;
+                while j0 + NR <= n {
+                    let ap = a.as_ptr().add(i0 * k + k0);
+                    let bp = b.as_ptr().add(k0 * n + j0);
+                    let op = out.as_mut_ptr().add(i0 * n + j0);
+                    match mh {
+                        4 => tile_f32::<4>(ap, k, bp, n, op, n, kb),
+                        3 => tile_f32::<3>(ap, k, bp, n, op, n, kb),
+                        2 => tile_f32::<2>(ap, k, bp, n, op, n, kb),
+                        _ => tile_f32::<1>(ap, k, bp, n, op, n, kb),
+                    }
+                    j0 += NR;
+                }
+                if j0 < n {
+                    for ii in 0..mh {
+                        let r = i0 + ii;
+                        for kk in 0..kb {
+                            let av = a[r * k + k0 + kk];
+                            let brow = &b[(k0 + kk) * n + j0..(k0 + kk) * n + n];
+                            let orow = &mut out[r * n + j0..r * n + n];
+                            for (o, &bv) in orow.iter_mut().zip(brow) {
+                                *o += av * bv;
+                            }
+                        }
+                    }
+                }
+                i0 += mh;
+            }
+            k0 += kb;
+        }
+    }
+
+    /// The blocked mixed driver: f32 inputs, f64 accumulation at `KB`
+    /// granularity (error per entry ≤ KB·ε₃₂ ≈ 1.5e-5 · |row|·|col|).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn gemm_mixed(a: &[f32], b: &[f32], out: &mut [f64], m: usize, k: usize, n: usize) {
+        if m == 0 || n == 0 || k == 0 {
+            return;
+        }
+        let mut k0 = 0;
+        while k0 < k {
+            let kb = KB.min(k - k0);
+            let mut i0 = 0;
+            while i0 < m {
+                let mh = MR.min(m - i0);
+                let mut j0 = 0;
+                while j0 + NR <= n {
+                    let ap = a.as_ptr().add(i0 * k + k0);
+                    let bp = b.as_ptr().add(k0 * n + j0);
+                    let op = out.as_mut_ptr().add(i0 * n + j0);
+                    match mh {
+                        4 => tile_mixed::<4>(ap, k, bp, n, op, n, kb),
+                        3 => tile_mixed::<3>(ap, k, bp, n, op, n, kb),
+                        2 => tile_mixed::<2>(ap, k, bp, n, op, n, kb),
+                        _ => tile_mixed::<1>(ap, k, bp, n, op, n, kb),
+                    }
+                    j0 += NR;
+                }
+                if j0 < n {
+                    // remainder columns: f32 products widened per element
+                    for ii in 0..mh {
+                        let r = i0 + ii;
+                        for kk in 0..kb {
+                            let av = a[r * k + k0 + kk];
+                            let brow = &b[(k0 + kk) * n + j0..(k0 + kk) * n + n];
+                            let orow = &mut out[r * n + j0..r * n + n];
+                            for (o, &bv) in orow.iter_mut().zip(brow) {
+                                *o += (av * bv) as f64;
+                            }
+                        }
+                    }
+                }
+                i0 += mh;
+            }
+            k0 += kb;
+        }
+    }
+
+    /// 4-lane `e^x` over the aligned prefix of `x`, in place. Same range
+    /// reduction + degree-9 Horner polynomial as the scalar `fast_exp`
+    /// (shared coefficient tables), with round-to-nearest `k` extracted by
+    /// the shift-add magic-number trick and `2^k` assembled in the
+    /// exponent bits. Returns the prefix length processed.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn exp_f64(x: &mut [f64]) -> usize {
+        let len = x.len() - x.len() % 4;
+        let lo = _mm256_set1_pd(EXP_LO_F64);
+        let hi = _mm256_set1_pd(EXP_HI_F64);
+        let log2e = _mm256_set1_pd(std::f64::consts::LOG2_E);
+        let ln2_hi = _mm256_set1_pd(LN2_HI_F64);
+        let ln2_lo = _mm256_set1_pd(LN2_LO_F64);
+        // 1.5·2^52: adding it pushes the integer part of a small float
+        // into the low mantissa bits (round-to-nearest), so the two's-
+        // complement k is the bit difference from the magic constant
+        let magic = _mm256_set1_pd(6755399441055744.0);
+        let magic_bits = _mm256_set1_epi64x(0x4338000000000000u64 as i64);
+        let bias = _mm256_set1_epi64x(1023);
+        let mut i = 0;
+        while i < len {
+            let p = x.as_mut_ptr().add(i);
+            let v = _mm256_min_pd(_mm256_max_pd(_mm256_loadu_pd(p), lo), hi);
+            // k = round(x·log2 e) with matching float and integer forms
+            let t = _mm256_add_pd(_mm256_mul_pd(v, log2e), magic);
+            let ki = _mm256_sub_epi64(_mm256_castpd_si256(t), magic_bits);
+            let kf = _mm256_sub_pd(t, magic);
+            // r = x − k·ln 2 in two pieces
+            let r = _mm256_fnmadd_pd(kf, ln2_hi, v);
+            let r = _mm256_fnmadd_pd(kf, ln2_lo, r);
+            // Horner over the shared coefficient table
+            let mut poly = _mm256_set1_pd(EXP_POLY_F64[0]);
+            for &c in &EXP_POLY_F64[1..] {
+                poly = _mm256_fmadd_pd(poly, r, _mm256_set1_pd(c));
+            }
+            // 2^k through the exponent bits (k ∈ [−1022, 1023] after clamp)
+            let scale =
+                _mm256_castsi256_pd(_mm256_slli_epi64::<52>(_mm256_add_epi64(ki, bias)));
+            _mm256_storeu_pd(p, _mm256_mul_pd(poly, scale));
+            i += 4;
+        }
+        len
+    }
+
+    /// 8-lane f32 `e^x` over the aligned prefix of `x`, in place
+    /// (~1e-7 relative). Returns the prefix length processed.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn exp_f32(x: &mut [f32]) -> usize {
+        let len = x.len() - x.len() % 8;
+        let lo = _mm256_set1_ps(EXP_LO_F32);
+        let hi = _mm256_set1_ps(EXP_HI_F32);
+        let log2e = _mm256_set1_ps(std::f32::consts::LOG2_E);
+        let ln2_hi = _mm256_set1_ps(LN2_HI_F32);
+        let ln2_lo = _mm256_set1_ps(LN2_LO_F32);
+        let bias = _mm256_set1_epi32(127);
+        let mut i = 0;
+        while i < len {
+            let p = x.as_mut_ptr().add(i);
+            let v = _mm256_min_ps(_mm256_max_ps(_mm256_loadu_ps(p), lo), hi);
+            // cvtps_epi32 rounds to nearest under the default MXCSR mode
+            let ki = _mm256_cvtps_epi32(_mm256_mul_ps(v, log2e));
+            let kf = _mm256_cvtepi32_ps(ki);
+            let r = _mm256_fnmadd_ps(kf, ln2_hi, v);
+            let r = _mm256_fnmadd_ps(kf, ln2_lo, r);
+            let mut poly = _mm256_set1_ps(EXP_POLY_F32[0]);
+            for &c in &EXP_POLY_F32[1..] {
+                poly = _mm256_fmadd_ps(poly, r, _mm256_set1_ps(c));
+            }
+            let scale = _mm256_castsi256_ps(_mm256_slli_epi32::<23>(_mm256_add_epi32(ki, bias)));
+            _mm256_storeu_ps(p, _mm256_mul_ps(poly, scale));
+            i += 8;
+        }
+        len
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON arm (aarch64)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use crate::tensor::gemm::{KB, MR, NR};
+    use crate::util::fastmath::{
+        EXP_HI_F32, EXP_HI_F64, EXP_LO_F32, EXP_LO_F64, EXP_POLY_F32, EXP_POLY_F64, LN2_HI_F32,
+        LN2_HI_F64, LN2_LO_F32, LN2_LO_F64,
+    };
+    use core::arch::aarch64::*;
+
+    /// `MR_×NR` f64 tile: four 2-lane accumulator vectors per row.
+    #[target_feature(enable = "neon")]
+    unsafe fn tile_f64<const MR_: usize>(
+        a: *const f64,
+        lda: usize,
+        b: *const f64,
+        ldb: usize,
+        out: *mut f64,
+        ldo: usize,
+        kb: usize,
+    ) {
+        let mut acc = [[vdupq_n_f64(0.0); 4]; MR_];
+        for kk in 0..kb {
+            let bp = b.add(kk * ldb);
+            let b0 = vld1q_f64(bp);
+            let b1 = vld1q_f64(bp.add(2));
+            let b2 = vld1q_f64(bp.add(4));
+            let b3 = vld1q_f64(bp.add(6));
+            for i in 0..MR_ {
+                let av = vdupq_n_f64(*a.add(i * lda + kk));
+                acc[i][0] = vfmaq_f64(acc[i][0], av, b0);
+                acc[i][1] = vfmaq_f64(acc[i][1], av, b1);
+                acc[i][2] = vfmaq_f64(acc[i][2], av, b2);
+                acc[i][3] = vfmaq_f64(acc[i][3], av, b3);
+            }
+        }
+        for i in 0..MR_ {
+            let op = out.add(i * ldo);
+            for v in 0..4 {
+                let o = op.add(2 * v);
+                vst1q_f64(o, vaddq_f64(vld1q_f64(o), acc[i][v]));
+            }
+        }
+    }
+
+    /// `MR_×NR` f32 tile: two 4-lane accumulator vectors per row.
+    #[target_feature(enable = "neon")]
+    unsafe fn tile_f32<const MR_: usize>(
+        a: *const f32,
+        lda: usize,
+        b: *const f32,
+        ldb: usize,
+        out: *mut f32,
+        ldo: usize,
+        kb: usize,
+    ) {
+        let mut acc = [[vdupq_n_f32(0.0); 2]; MR_];
+        for kk in 0..kb {
+            let bp = b.add(kk * ldb);
+            let b0 = vld1q_f32(bp);
+            let b1 = vld1q_f32(bp.add(4));
+            for i in 0..MR_ {
+                let av = vdupq_n_f32(*a.add(i * lda + kk));
+                acc[i][0] = vfmaq_f32(acc[i][0], av, b0);
+                acc[i][1] = vfmaq_f32(acc[i][1], av, b1);
+            }
+        }
+        for i in 0..MR_ {
+            let op = out.add(i * ldo);
+            vst1q_f32(op, vaddq_f32(vld1q_f32(op), acc[i][0]));
+            vst1q_f32(op.add(4), vaddq_f32(vld1q_f32(op.add(4)), acc[i][1]));
+        }
+    }
+
+    /// Mixed tile: f32 accumulation, both halves of each vector widened
+    /// to f64 and added into the output once per tile call.
+    #[target_feature(enable = "neon")]
+    unsafe fn tile_mixed<const MR_: usize>(
+        a: *const f32,
+        lda: usize,
+        b: *const f32,
+        ldb: usize,
+        out: *mut f64,
+        ldo: usize,
+        kb: usize,
+    ) {
+        let mut acc = [[vdupq_n_f32(0.0); 2]; MR_];
+        for kk in 0..kb {
+            let bp = b.add(kk * ldb);
+            let b0 = vld1q_f32(bp);
+            let b1 = vld1q_f32(bp.add(4));
+            for i in 0..MR_ {
+                let av = vdupq_n_f32(*a.add(i * lda + kk));
+                acc[i][0] = vfmaq_f32(acc[i][0], av, b0);
+                acc[i][1] = vfmaq_f32(acc[i][1], av, b1);
+            }
+        }
+        for i in 0..MR_ {
+            let op = out.add(i * ldo);
+            for v in 0..2 {
+                let lo = vcvt_f64_f32(vget_low_f32(acc[i][v]));
+                let hi = vcvt_high_f64_f32(acc[i][v]);
+                let o = op.add(4 * v);
+                vst1q_f64(o, vaddq_f64(vld1q_f64(o), lo));
+                vst1q_f64(o.add(2), vaddq_f64(vld1q_f64(o.add(2)), hi));
+            }
+        }
+    }
+
+    /// The blocked f64 driver (see the AVX2 twin for the walk).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn gemm_f64(a: &[f64], b: &[f64], out: &mut [f64], m: usize, k: usize, n: usize) {
+        if m == 0 || n == 0 || k == 0 {
+            return;
+        }
+        let mut k0 = 0;
+        while k0 < k {
+            let kb = KB.min(k - k0);
+            let mut i0 = 0;
+            while i0 < m {
+                let mh = MR.min(m - i0);
+                let mut j0 = 0;
+                while j0 + NR <= n {
+                    let ap = a.as_ptr().add(i0 * k + k0);
+                    let bp = b.as_ptr().add(k0 * n + j0);
+                    let op = out.as_mut_ptr().add(i0 * n + j0);
+                    match mh {
+                        4 => tile_f64::<4>(ap, k, bp, n, op, n, kb),
+                        3 => tile_f64::<3>(ap, k, bp, n, op, n, kb),
+                        2 => tile_f64::<2>(ap, k, bp, n, op, n, kb),
+                        _ => tile_f64::<1>(ap, k, bp, n, op, n, kb),
+                    }
+                    j0 += NR;
+                }
+                if j0 < n {
+                    for ii in 0..mh {
+                        let r = i0 + ii;
+                        for kk in 0..kb {
+                            let av = a[r * k + k0 + kk];
+                            let brow = &b[(k0 + kk) * n + j0..(k0 + kk) * n + n];
+                            let orow = &mut out[r * n + j0..r * n + n];
+                            for (o, &bv) in orow.iter_mut().zip(brow) {
+                                *o += av * bv;
+                            }
+                        }
+                    }
+                }
+                i0 += mh;
+            }
+            k0 += kb;
+        }
+    }
+
+    /// The blocked f32 driver.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn gemm_f32(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+        if m == 0 || n == 0 || k == 0 {
+            return;
+        }
+        let mut k0 = 0;
+        while k0 < k {
+            let kb = KB.min(k - k0);
+            let mut i0 = 0;
+            while i0 < m {
+                let mh = MR.min(m - i0);
+                let mut j0 = 0;
+                while j0 + NR <= n {
+                    let ap = a.as_ptr().add(i0 * k + k0);
+                    let bp = b.as_ptr().add(k0 * n + j0);
+                    let op = out.as_mut_ptr().add(i0 * n + j0);
+                    match mh {
+                        4 => tile_f32::<4>(ap, k, bp, n, op, n, kb),
+                        3 => tile_f32::<3>(ap, k, bp, n, op, n, kb),
+                        2 => tile_f32::<2>(ap, k, bp, n, op, n, kb),
+                        _ => tile_f32::<1>(ap, k, bp, n, op, n, kb),
+                    }
+                    j0 += NR;
+                }
+                if j0 < n {
+                    for ii in 0..mh {
+                        let r = i0 + ii;
+                        for kk in 0..kb {
+                            let av = a[r * k + k0 + kk];
+                            let brow = &b[(k0 + kk) * n + j0..(k0 + kk) * n + n];
+                            let orow = &mut out[r * n + j0..r * n + n];
+                            for (o, &bv) in orow.iter_mut().zip(brow) {
+                                *o += av * bv;
+                            }
+                        }
+                    }
+                }
+                i0 += mh;
+            }
+            k0 += kb;
+        }
+    }
+
+    /// The blocked mixed driver: f32 inputs, f64 accumulation at `KB`
+    /// granularity.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn gemm_mixed(a: &[f32], b: &[f32], out: &mut [f64], m: usize, k: usize, n: usize) {
+        if m == 0 || n == 0 || k == 0 {
+            return;
+        }
+        let mut k0 = 0;
+        while k0 < k {
+            let kb = KB.min(k - k0);
+            let mut i0 = 0;
+            while i0 < m {
+                let mh = MR.min(m - i0);
+                let mut j0 = 0;
+                while j0 + NR <= n {
+                    let ap = a.as_ptr().add(i0 * k + k0);
+                    let bp = b.as_ptr().add(k0 * n + j0);
+                    let op = out.as_mut_ptr().add(i0 * n + j0);
+                    match mh {
+                        4 => tile_mixed::<4>(ap, k, bp, n, op, n, kb),
+                        3 => tile_mixed::<3>(ap, k, bp, n, op, n, kb),
+                        2 => tile_mixed::<2>(ap, k, bp, n, op, n, kb),
+                        _ => tile_mixed::<1>(ap, k, bp, n, op, n, kb),
+                    }
+                    j0 += NR;
+                }
+                if j0 < n {
+                    for ii in 0..mh {
+                        let r = i0 + ii;
+                        for kk in 0..kb {
+                            let av = a[r * k + k0 + kk];
+                            let brow = &b[(k0 + kk) * n + j0..(k0 + kk) * n + n];
+                            let orow = &mut out[r * n + j0..r * n + n];
+                            for (o, &bv) in orow.iter_mut().zip(brow) {
+                                *o += (av * bv) as f64;
+                            }
+                        }
+                    }
+                }
+                i0 += mh;
+            }
+            k0 += kb;
+        }
+    }
+
+    /// 2-lane f64 `e^x` over the aligned prefix of `x`, in place.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn exp_f64(x: &mut [f64]) -> usize {
+        let len = x.len() - x.len() % 2;
+        let lo = vdupq_n_f64(EXP_LO_F64);
+        let hi = vdupq_n_f64(EXP_HI_F64);
+        let log2e = vdupq_n_f64(std::f64::consts::LOG2_E);
+        let ln2_hi = vdupq_n_f64(LN2_HI_F64);
+        let ln2_lo = vdupq_n_f64(LN2_LO_F64);
+        let bias = vdupq_n_s64(1023);
+        let mut i = 0;
+        while i < len {
+            let p = x.as_mut_ptr().add(i);
+            let v = vminq_f64(vmaxq_f64(vld1q_f64(p), lo), hi);
+            let ki = vcvtnq_s64_f64(vmulq_f64(v, log2e)); // round to nearest
+            let kf = vcvtq_f64_s64(ki);
+            let r = vfmsq_f64(v, kf, ln2_hi);
+            let r = vfmsq_f64(r, kf, ln2_lo);
+            let mut poly = vdupq_n_f64(EXP_POLY_F64[0]);
+            for &c in &EXP_POLY_F64[1..] {
+                poly = vfmaq_f64(vdupq_n_f64(c), poly, r);
+            }
+            let scale = vreinterpretq_f64_s64(vshlq_n_s64::<52>(vaddq_s64(ki, bias)));
+            vst1q_f64(p, vmulq_f64(poly, scale));
+            i += 2;
+        }
+        len
+    }
+
+    /// 4-lane f32 `e^x` over the aligned prefix of `x`, in place.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn exp_f32(x: &mut [f32]) -> usize {
+        let len = x.len() - x.len() % 4;
+        let lo = vdupq_n_f32(EXP_LO_F32);
+        let hi = vdupq_n_f32(EXP_HI_F32);
+        let log2e = vdupq_n_f32(std::f32::consts::LOG2_E);
+        let ln2_hi = vdupq_n_f32(LN2_HI_F32);
+        let ln2_lo = vdupq_n_f32(LN2_LO_F32);
+        let bias = vdupq_n_s32(127);
+        let mut i = 0;
+        while i < len {
+            let p = x.as_mut_ptr().add(i);
+            let v = vminq_f32(vmaxq_f32(vld1q_f32(p), lo), hi);
+            let ki = vcvtnq_s32_f32(vmulq_f32(v, log2e));
+            let kf = vcvtq_f32_s32(ki);
+            let r = vfmsq_f32(v, kf, ln2_hi);
+            let r = vfmsq_f32(r, kf, ln2_lo);
+            let mut poly = vdupq_n_f32(EXP_POLY_F32[0]);
+            for &c in &EXP_POLY_F32[1..] {
+                poly = vfmaq_f32(vdupq_n_f32(c), poly, r);
+            }
+            let scale = vreinterpretq_f32_s32(vshlq_n_s32::<23>(vaddq_s32(ki, bias)));
+            vst1q_f32(p, vmulq_f32(poly, scale));
+            i += 4;
+        }
+        len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_f64(len: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..len).map(|_| rng.normal()).collect()
+    }
+
+    fn naive(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+        let mut out = vec![0.0; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for kk in 0..k {
+                    s += a[i * k + kk] * b[kk * n + j];
+                }
+                out[i * n + j] = s;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn lane_widths_are_consistent() {
+        assert_eq!(Dispatch::Scalar.lanes_f64(), 1);
+        assert_eq!(Dispatch::Scalar.lanes_f32(), 1);
+        assert_eq!(Dispatch::Avx2Fma.lanes_f64(), 4);
+        assert_eq!(Dispatch::Avx2Fma.lanes_f32(), 8);
+        assert_eq!(Dispatch::Neon.lanes_f64(), 2);
+        assert_eq!(Dispatch::Neon.lanes_f32(), 4);
+        for d in [Dispatch::Scalar, Dispatch::Avx2Fma, Dispatch::Neon] {
+            assert_eq!(d.lanes_f32(), 2 * d.lanes_f64(), "{}", d.name());
+        }
+    }
+
+    #[test]
+    fn forced_scalar_toggle_roundtrips() {
+        let before = active();
+        set_forced_scalar(true);
+        assert_eq!(active(), Dispatch::Scalar);
+        set_forced_scalar(false);
+        assert_eq!(active(), before, "un-forcing must restore detection");
+    }
+
+    #[test]
+    fn simd_gemm_f64_matches_naive_tightly() {
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (5, 9, 7), (9, 300, 15), (12, 257, 17)] {
+            let a = rand_f64(m * k, 1 + (m * k) as u64);
+            let b = rand_f64(k * n, 2 + (k * n) as u64);
+            let mut out = vec![0.0; m * n];
+            if !gemm_f64(&a, &b, &mut out, m, k, n) {
+                return; // scalar dispatch: nothing to compare against
+            }
+            let want = naive(&a, &b, m, k, n);
+            for i in 0..m * n {
+                // FMA vs mul+add differ only at rounding level
+                assert!(
+                    (out[i] - want[i]).abs() < 1e-12 * (1.0 + want[i].abs()),
+                    "({m},{k},{n}) entry {i}: {} vs {}",
+                    out[i],
+                    want[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn simd_gemm_f32_and_mixed_track_f64() {
+        let (m, k, n) = (7, 257, 11);
+        let a = rand_f64(m * k, 31);
+        let b = rand_f64(k * n, 32);
+        let a32: Vec<f32> = a.iter().map(|&v| v as f32).collect();
+        let b32: Vec<f32> = b.iter().map(|&v| v as f32).collect();
+        let want = naive(&a, &b, m, k, n);
+        let mut out32 = vec![0.0f32; m * n];
+        if gemm_f32(&a32, &b32, &mut out32, m, k, n) {
+            for i in 0..m * n {
+                assert!((out32[i] as f64 - want[i]).abs() < 5e-4 * (1.0 + want[i].abs()));
+            }
+        }
+        let mut outm = vec![0.0f64; m * n];
+        if gemm_mixed(&a32, &b32, &mut outm, m, k, n) {
+            for i in 0..m * n {
+                assert!(
+                    (outm[i] - want[i]).abs() < 5e-4 * (1.0 + want[i].abs()),
+                    "mixed entry {i}: {} vs {}",
+                    outm[i],
+                    want[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn simd_exp_matches_libm() {
+        let mut xs: Vec<f64> = Vec::new();
+        let mut v = -60.0;
+        while v <= 4.0 {
+            xs.push(v);
+            v += 0.173;
+        }
+        let want: Vec<f64> = xs.iter().map(|&x| x.exp()).collect();
+        let done = exp_f64_prefix(&mut xs);
+        assert_eq!(done % active().lanes_f64().max(1), 0);
+        for i in 0..done {
+            let rel = (xs[i] - want[i]).abs() / want[i];
+            assert!(rel < 5e-10, "exp_f64[{i}] rel err {rel}");
+        }
+        let mut xs32: Vec<f32> = (0..257).map(|i| -40.0 + 0.17 * i as f32).collect();
+        let want32: Vec<f32> = xs32.iter().map(|&x| x.exp()).collect();
+        let done = exp_f32_prefix(&mut xs32);
+        for i in 0..done {
+            let rel = ((xs32[i] - want32[i]) / want32[i]).abs();
+            assert!(rel < 3e-7, "exp_f32[{i}] rel err {rel}");
+        }
+    }
+}

@@ -1,48 +1,137 @@
 //! Branch-free vectorizable math kernels for the fused kernel mat-mul hot
 //! path. `exp` via libm is a scalar call (~20–40 ns); the polynomial
-//! version below autovectorizes under AVX-512 and is accurate to ~2e-10
-//! relative over the range kernel evaluations use.
+//! versions below run 4–8 elements per cycle through the explicit SIMD
+//! arms in [`crate::tensor::simd`] (slice entry points), and the scalar
+//! forms autovectorize as a fallback. Accuracy: ~2e-10 relative (f64),
+//! ~1e-7 relative (f32) over the range kernel evaluations use.
+//!
+//! The range-reduction constants and polynomial coefficient tables are
+//! `pub(crate)` so the SIMD lanes and the scalar fallbacks are *the same
+//! approximation* — one source of truth, verified against libm in both
+//! modules' tests.
 
-/// Fast `e^x` for x ∈ [−746, 710) (clamped outside), max relative error
-/// ≈ 2e-10 — far below the Monte-Carlo noise floor of BBMM's estimators.
+/// `log₂ e`-scaled split of ln 2: high piece (f64). `ln 2 = LN2_HI + LN2_LO`.
+pub(crate) const LN2_HI_F64: f64 = 6.93147180369123816490e-01;
+/// Low piece of the two-piece ln 2 (f64).
+pub(crate) const LN2_LO_F64: f64 = 1.90821492927058770002e-10;
+/// Input clamp floor: keeps `2^k` a *normal* f64 (e^{−708} ≈ 3e-308).
+pub(crate) const EXP_LO_F64: f64 = -708.0;
+/// Input clamp ceiling: largest x with e^x finite in f64.
+pub(crate) const EXP_HI_F64: f64 = 709.0;
+/// Degree-9 `e^r` polynomial over |r| ≤ ln2/2, highest coefficient first
+/// (Horner order) — truncation error ≤ r¹⁰/10! ≈ 7e-12.
+pub(crate) const EXP_POLY_F64: [f64; 10] = [
+    2.755731922398589e-6,
+    2.480158729876093e-5,
+    1.984126984200918683e-4,
+    1.388888889423061626e-3,
+    8.333333333331493192e-3,
+    4.166666666666452278e-2,
+    1.666666666666666574e-1,
+    0.5,
+    1.0,
+    1.0,
+];
+
+/// High piece of the two-piece ln 2 (f32): exactly representable prefix.
+pub(crate) const LN2_HI_F32: f32 = 0.693_359_375;
+/// Low piece of the two-piece ln 2 (f32); note `ln 2 = HI + LO`, LO < 0.
+pub(crate) const LN2_LO_F32: f32 = -2.121_944_4e-4;
+/// Input clamp floor (f32): keeps `2^k` normal (Cephes MINLOGF).
+pub(crate) const EXP_LO_F32: f32 = -87.336_544;
+/// Input clamp ceiling (f32): keeps k ≤ 127 so `2^k` stays finite
+/// (Cephes MAXLOGF — deliberately below ln(f32::MAX) ≈ 88.72 because the
+/// exponent-bit scaling needs a normal `2^k`).
+pub(crate) const EXP_HI_F32: f32 = 88.376_26;
+/// Degree-6 `e^r` polynomial over |r| ≤ ln2/2 (Cephes expf), highest
+/// coefficient first (Horner order) — ~1e-7 relative.
+pub(crate) const EXP_POLY_F32: [f32; 8] = [
+    1.987_569_1e-4,
+    1.398_199_9e-3,
+    8.333_452e-3,
+    4.166_579_6e-2,
+    1.666_666_5e-1,
+    5.000_000_2e-1,
+    1.0,
+    1.0,
+];
+
+/// Fast `e^x` for x ∈ [−708, 709] (clamped outside: anything below −708
+/// is ≤ 3e-308 ≈ 0 for every kernel purpose, and the clamp keeps the
+/// `2^k` exponent-bit scale a normal float), max relative error ≈ 2e-10 —
+/// far below the Monte-Carlo noise floor of BBMM's estimators.
 ///
-/// Cephes-style: x = k·ln2 + r with r ∈ [−ln2/2, ln2/2]; e^r by a degree-7
-/// Taylor/minimax polynomial; scale by 2^k through exponent bits.
+/// Cephes-style: x = k·ln2 + r with r ∈ [−ln2/2, ln2/2]; e^r by a
+/// degree-9 polynomial; scale by 2^k through exponent bits.
 #[inline]
 pub fn fast_exp(x: f64) -> f64 {
     const LOG2E: f64 = std::f64::consts::LOG2_E;
-    const LN2_HI: f64 = 6.93147180369123816490e-01;
-    const LN2_LO: f64 = 1.90821492927058770002e-10;
-    // clamp to the *normal* range (2^k stays a normal float; anything
-    // below −708 is ≤ 3e-308 ≈ 0 for every kernel purpose)
-    let x = x.clamp(-708.0, 709.0);
+    let x = x.clamp(EXP_LO_F64, EXP_HI_F64);
     let k = (x * LOG2E + if x >= 0.0 { 0.5 } else { -0.5 }) as i64;
     let kf = k as f64;
     // r = x − k·ln2, in two pieces for accuracy
-    let r = (x - kf * LN2_HI) - kf * LN2_LO;
-    // e^r, degree-9 polynomial (Horner) — |r| ≤ ln2/2 ≈ 0.347,
-    // truncation error ≤ r¹⁰/10! ≈ 7e-12
-    let p = 1.0
-        + r * (1.0
-            + r * (0.5
-                + r * (1.666666666666666574e-1
-                    + r * (4.166666666666452278e-2
-                        + r * (8.333333333331493192e-3
-                            + r * (1.388888889423061626e-3
-                                + r * (1.984126984200918683e-4
-                                    + r * (2.480158729876093e-5
-                                        + r * 2.755731922398589e-6))))))));
+    let r = (x - kf * LN2_HI_F64) - kf * LN2_LO_F64;
+    // e^r by Horner over the shared coefficient table (compile-time
+    // unrolled; same association as the SIMD lanes)
+    let mut p = EXP_POLY_F64[0];
+    for &c in &EXP_POLY_F64[1..] {
+        p = p * r + c;
+    }
     // scale by 2^k via exponent bits
     let bits = ((k + 1023) as u64) << 52;
     p * f64::from_bits(bits)
 }
 
-/// Apply `out[i] = s · e^{−a·x[i]}` over a slice — the RBF tile epilogue.
+/// f32 twin of [`fast_exp`]: x ∈ [−87.34, 88.38] (clamped outside), max
+/// relative error ≈ 1e-7 — the Mixed-precision tile epilogue's exp.
+#[inline]
+pub fn fast_exp_f32(x: f32) -> f32 {
+    const LOG2E: f32 = std::f32::consts::LOG2_E;
+    let x = x.clamp(EXP_LO_F32, EXP_HI_F32);
+    let k = (x * LOG2E + if x >= 0.0 { 0.5 } else { -0.5 }) as i32;
+    let kf = k as f32;
+    let r = (x - kf * LN2_HI_F32) - kf * LN2_LO_F32;
+    let mut p = EXP_POLY_F32[0];
+    for &c in &EXP_POLY_F32[1..] {
+        p = p * r + c;
+    }
+    let bits = ((k + 127) as u32) << 23;
+    p * f32::from_bits(bits)
+}
+
+/// In-place `x[i] = e^{x[i]}` over a whole slice — the batched form the
+/// stationary kernel tiles call once per r² row. The SIMD arm (AVX2/FMA
+/// or NEON, runtime dispatched) covers the lane-aligned prefix; the tail
+/// (and the scalar-dispatch case) falls back to [`fast_exp`].
+#[inline]
+pub fn fast_exp_slice(x: &mut [f64]) {
+    let done = crate::tensor::simd::exp_f64_prefix(x);
+    for v in &mut x[done..] {
+        *v = fast_exp(*v);
+    }
+}
+
+/// f32 twin of [`fast_exp_slice`] (twice the SIMD lane width).
+#[inline]
+pub fn fast_exp_slice_f32(x: &mut [f32]) {
+    let done = crate::tensor::simd::exp_f32_prefix(x);
+    for v in &mut x[done..] {
+        *v = fast_exp_f32(*v);
+    }
+}
+
+/// Apply `out[i] = s · e^{−a·x[i]}` over a slice — the RBF tile epilogue,
+/// batched: one multiply pass to form the arguments, one vectorised exp
+/// sweep, one scale pass.
 #[inline]
 pub fn exp_neg_scaled(x: &[f64], a: f64, s: f64, out: &mut [f64]) {
     debug_assert_eq!(x.len(), out.len());
-    for i in 0..x.len() {
-        out[i] = s * fast_exp(-a * x[i]);
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = -a * v;
+    }
+    fast_exp_slice(out);
+    for o in out.iter_mut() {
+        *o *= s;
     }
 }
 
@@ -66,6 +155,24 @@ mod tests {
     }
 
     #[test]
+    fn f32_matches_libm_over_kernel_range() {
+        let mut max_rel = 0.0f32;
+        let mut x = -40.0f32;
+        while x <= 1.0 {
+            let got = fast_exp_f32(x);
+            let want = x.exp();
+            let rel = if want > 0.0 { (got - want).abs() / want } else { 0.0 };
+            max_rel = max_rel.max(rel);
+            x += 0.0113;
+        }
+        assert!(max_rel < 3e-7, "max rel err {max_rel}");
+        // clamping behaviour mirrors the f64 version
+        assert!(fast_exp_f32(-1.0e4).is_finite());
+        assert!(fast_exp_f32(-1.0e4) < 1e-37);
+        assert!(fast_exp_f32(1.0e4).is_finite()); // clamped at MAXLOGF
+    }
+
+    #[test]
     fn wide_range_and_clamping() {
         assert!((fast_exp(0.0) - 1.0).abs() < 1e-12);
         assert!((fast_exp(1.0) - std::f64::consts::E).abs() < 1e-9);
@@ -74,6 +181,23 @@ mod tests {
         assert!(fast_exp(1000.0).is_finite()); // clamped at 709
         let big = fast_exp(700.0);
         assert!((big.ln() - 700.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn slice_exp_matches_scalar_and_libm() {
+        // odd length so both the SIMD prefix and the scalar tail run
+        let mut xs: Vec<f64> = (0..203).map(|i| -50.0 + 0.29 * i as f64).collect();
+        let want: Vec<f64> = xs.iter().map(|&x| x.exp()).collect();
+        fast_exp_slice(&mut xs);
+        for (i, (&got, &w)) in xs.iter().zip(&want).enumerate() {
+            assert!((got - w).abs() < 5e-10 * w.max(1e-300), "entry {i}: {got} vs {w}");
+        }
+        let mut xs32: Vec<f32> = (0..101).map(|i| -30.0 + 0.31 * i as f32).collect();
+        let want32: Vec<f32> = xs32.iter().map(|&x| x.exp()).collect();
+        fast_exp_slice_f32(&mut xs32);
+        for (i, (&got, &w)) in xs32.iter().zip(&want32).enumerate() {
+            assert!((got - w).abs() < 3e-7 * w.max(1e-30), "entry {i}: {got} vs {w}");
+        }
     }
 
     #[test]

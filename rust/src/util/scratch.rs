@@ -16,6 +16,10 @@ use std::cell::RefCell;
 
 thread_local! {
     static SCRATCH: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
+    // separate slot for f32 staging so a `with_f32` can run while the f64
+    // region is NOT held (and vice versa) without tripping the no-nest
+    // guard — the mixed-precision path stages inputs before fanning out
+    static SCRATCH_F32: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
 }
 
 /// Run `f` with a scratch slice of length `len`, reusing this thread's
@@ -27,6 +31,23 @@ pub fn with<R>(len: usize, f: impl FnOnce(&mut [f64]) -> R) -> R {
         let mut buf = cell
             .try_borrow_mut()
             .expect("util::scratch::with must not nest on one thread");
+        if buf.len() < len {
+            buf.resize(len, 0.0);
+        }
+        f(&mut buf[..len])
+    })
+}
+
+/// f32 twin of [`with`], backed by its **own** per-thread buffer — the
+/// mixed-precision tile paths hold an f64 region and an f32 region on the
+/// same worker thread simultaneously (f32 tiles, f64 accumulators), which
+/// the single-slot guard would otherwise forbid. The same no-nest rule
+/// applies *within* the f32 slot.
+pub fn with_f32<R>(len: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
+    SCRATCH_F32.with(|cell| {
+        let mut buf = cell
+            .try_borrow_mut()
+            .expect("util::scratch::with_f32 must not nest on one thread");
         if buf.len() < len {
             buf.resize(len, 0.0);
         }
@@ -55,6 +76,27 @@ mod tests {
             crate::util::alloc::thread_allocations(),
             before,
             "warm scratch must not allocate"
+        );
+    }
+
+    #[test]
+    fn f32_slot_is_independent_of_f64_slot() {
+        // holding the f64 region while opening the f32 region must NOT
+        // trip the no-nest guard — that's the mixed-tile usage pattern
+        with(32, |f64buf| {
+            f64buf[0] = 1.0;
+            with_f32(16, |f32buf| {
+                assert_eq!(f32buf.len(), 16);
+                f32buf[0] = 2.0;
+            });
+            assert_eq!(f64buf[0], 1.0);
+        });
+        let before = crate::util::alloc::thread_allocations();
+        with_f32(16, |buf| assert_eq!(buf.len(), 16));
+        assert_eq!(
+            crate::util::alloc::thread_allocations(),
+            before,
+            "warm f32 scratch must not allocate"
         );
     }
 }

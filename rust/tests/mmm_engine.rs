@@ -4,11 +4,16 @@
 //! finite differences, the `Arc<Mat>` sharing seam, plan-aware
 //! fingerprints, and the zero-allocation batched iteration loop.
 
-use bbmm_gp::kernels::{Kernel, KernelCov, KernelCovOp, Matern32, Rbf, ShardedCovOp};
-use bbmm_gp::linalg::mbcg::{mbcg_batch_stats_ws, MbcgOptions, MbcgWorkspace};
-use bbmm_gp::linalg::op::{AddedDiagOp, BatchOp, LinearOp, MmmPlan, SolveOptions, SolvePlanCache};
+use bbmm_gp::gp::SkiOp;
+use bbmm_gp::kernels::{
+    DenseKernelOp, Kernel, KernelCov, KernelCovOp, Matern32, Rbf, ShardedCovOp, ShardedKernelOp,
+};
+use bbmm_gp::linalg::mbcg::{mbcg_batch_stats_ws, mbcg_op, MbcgOptions, MbcgWorkspace};
+use bbmm_gp::linalg::op::{
+    AddedDiagOp, BatchOp, LinearOp, MmmPlan, Precision, SolveOptions, SolvePlanCache,
+};
 use bbmm_gp::linalg::preconditioner::{IdentityPrecond, Preconditioner};
-use bbmm_gp::tensor::{gemm, Mat};
+use bbmm_gp::tensor::{gemm, simd, Mat};
 use bbmm_gp::util::Rng;
 use std::sync::Arc;
 
@@ -308,4 +313,136 @@ fn warm_mbcg_batch_iteration_loop_is_allocation_free() {
         assert_eq!(a.iterations, c.iterations);
         assert!(a.solves.max_abs_diff(&c.solves) == 0.0);
     }
+}
+
+/// The runtime dispatcher must pick a lane set consistent with the build
+/// target, and the CI forced-scalar leg (`BBMM_FORCE_SCALAR`) must pin it
+/// to the portable path — the expectation is computed from the env so the
+/// same test is green on both CI legs.
+#[test]
+fn runtime_dispatch_is_consistent_with_target_and_env() {
+    let d = simd::active();
+    let forced = std::env::var("BBMM_FORCE_SCALAR")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    if forced {
+        assert_eq!(
+            d,
+            simd::Dispatch::Scalar,
+            "BBMM_FORCE_SCALAR must pin the scalar path"
+        );
+    }
+    match d {
+        simd::Dispatch::Scalar => {
+            assert_eq!((d.lanes_f64(), d.lanes_f32()), (1, 1));
+        }
+        simd::Dispatch::Avx2Fma => {
+            assert!(cfg!(target_arch = "x86_64"), "AVX2 selected off-target");
+            assert_eq!((d.lanes_f64(), d.lanes_f32()), (4, 8));
+        }
+        simd::Dispatch::Neon => {
+            assert!(cfg!(target_arch = "aarch64"), "NEON selected off-target");
+            assert_eq!((d.lanes_f64(), d.lanes_f32()), (2, 4));
+        }
+    }
+    // the mixed-precision premise: f32 never has fewer lanes than f64
+    assert!(d.lanes_f32() >= d.lanes_f64());
+}
+
+/// The explicit-SIMD f64 GEMM must be near-bit-comparable to the scalar
+/// register-blocked reference: same k-order accumulation, FMA contraction
+/// differences only — gated at 1e-12 relative. Skipped (vacuously green)
+/// under scalar dispatch, where there is no second implementation to
+/// compare.
+#[test]
+fn simd_f64_gemm_is_near_bit_comparable_to_scalar() {
+    for &(m, k, n) in &[(5usize, 9usize, 7usize), (9, 256, 15), (12, 257, 17), (33, 300, 40)] {
+        let a = rand_mat(m, k, (31 * m + k) as u64);
+        let b = rand_mat(k, n, (37 * n + k) as u64);
+        let want = naive_matmul(&a, &b);
+        let mut out = Mat::zeros(m, n);
+        if !simd::gemm_f64(a.data(), b.data(), out.data_mut(), m, k, n) {
+            return; // scalar dispatch (or BBMM_FORCE_SCALAR): nothing to compare
+        }
+        let scale = want.fro_norm().max(1.0);
+        assert!(
+            out.max_abs_diff(&want) / scale < 1e-12,
+            "({m},{k},{n}): rel diff {}",
+            out.max_abs_diff(&want) / scale
+        );
+    }
+}
+
+/// Mixed-precision mBCG solves must track the f64 reference across the
+/// operator families that carry the knob — the exact dense operator and
+/// the sharded operator, under both streaming plans — and SKI must not
+/// pretend to carry it at all. Typical solve drift is ~1e-5 relative
+/// (f32 tiles, f64 reductions); the gate leaves conditioning headroom.
+#[test]
+fn mixed_precision_solves_track_f64_across_operators() {
+    let n = 96;
+    let mut rng = Rng::new(29);
+    let x = Mat::from_fn(n, 3, |_, _| rng.uniform_in(-1.0, 1.0));
+    let y = Mat::from_fn(n, 1, |_, _| rng.normal());
+    // n_solve_only == cols: solve-only, no tridiagonal recovery needed
+    let opts = MbcgOptions {
+        max_iters: 200,
+        tol: 1e-12,
+        n_solve_only: 1,
+    };
+    let id = |m: &Mat| m.clone();
+    let kern = || Box::new(Rbf::new(0.6, 1.1)) as Box<dyn Kernel>;
+    for plan in [MmmPlan::Stream, MmmPlan::CachedDistances] {
+        // exact dense operator: mean weights K̂⁻¹y
+        let f64_op = AddedDiagOp::new(KernelCovOp::new(x.clone(), kern()).with_plan(plan), 1.0);
+        let mix_op = AddedDiagOp::new(
+            KernelCovOp::new(x.clone(), kern())
+                .with_plan(plan)
+                .with_precision(Precision::Mixed),
+            1.0,
+        );
+        assert!(mix_op.inner().mixed_active());
+        let want = mbcg_op(&f64_op, &y, id, &opts).solves;
+        let got = mbcg_op(&mix_op, &y, id, &opts).solves;
+        let rel = got.max_abs_diff(&want) / want.fro_norm().max(1.0);
+        assert!(rel < 5e-4, "exact plan {}: solve rel diff {rel}", plan.name());
+        // sharded operator, same contract
+        let mut sh64 = ShardedKernelOp::new(x.clone(), kern(), 1.0, 4);
+        sh64.set_plan(plan);
+        let mut shmx = ShardedKernelOp::new(x.clone(), kern(), 1.0, 4)
+            .with_precision(Precision::Mixed);
+        shmx.set_plan(plan);
+        let want_s = mbcg_op(&sh64, &y, id, &opts).solves;
+        let got_s = mbcg_op(&shmx, &y, id, &opts).solves;
+        let rel_s = got_s.max_abs_diff(&want_s) / want_s.fro_norm().max(1.0);
+        assert!(rel_s < 5e-4, "sharded plan {}: solve rel diff {rel_s}", plan.name());
+    }
+    // predictive variances: the quadratic form k*ᵀ K̂⁻¹ k* with the same
+    // f64 cross-covariances on both sides, isolating the mixed solve
+    let xs = Mat::from_fn(7, 3, |_, _| rng.uniform_in(-1.0, 1.0));
+    let d64 = DenseKernelOp::new(x.clone(), kern(), 1.0);
+    let dmx = DenseKernelOp::new(x.clone(), kern(), 1.0).with_precision(Precision::Mixed);
+    let kstar = d64.cross(&xs, d64.x()); // 7×n, f64 on both sides
+    let rhs = kstar.transpose();
+    let opts7 = MbcgOptions { n_solve_only: rhs.cols(), ..opts };
+    let q64 = kstar.matmul(&mbcg_op(&d64, &rhs, id, &opts7).solves);
+    let qmx = kstar.matmul(&mbcg_op(&dmx, &rhs, id, &opts7).solves);
+    for i in 0..xs.rows() {
+        let (a, b) = (q64.get(i, i), qmx.get(i, i));
+        assert!(
+            (a - b).abs() / (1.0 + a.abs()) < 5e-4,
+            "variance term {i}: {a} vs {b}"
+        );
+    }
+    // SKI is grid-structured (Toeplitz over an inducing grid) — there is
+    // no stationary tile pass for Mixed to shorten, so it advertises no
+    // precision bit and its products stay pure f64 ("degrades, never
+    // lies" — the knob must not change SKI fingerprints or numerics).
+    let z: Vec<f64> = (0..n).map(|i| i as f64 / n as f64).collect();
+    let ski = SkiOp::new(z, 32, kern(), 1.0);
+    assert_eq!(
+        LinearOp::mmm_tag(&ski) >> 8,
+        0,
+        "SKI must not advertise a precision tag bit"
+    );
 }
