@@ -15,6 +15,13 @@
 //!
 //! The submit path is bounded: `max_queue` pending requests, beyond which
 //! `submit` fails fast instead of building an unbounded backlog.
+//!
+//! **Deadlines.** A tenant (or the policy) may carry a deadline class.
+//! Admission control sheds a request up front — error line `ERR deadline …`
+//! — when the smoothed tick latency times the queue backlog says the
+//! deadline cannot be met; a request that expires while queued is
+//! fast-failed by the worker instead of being solved past its deadline.
+//! Without a deadline class the batcher behaves exactly as before.
 
 use crate::coordinator::metrics::Metrics;
 use crate::gp::predict::Prediction;
@@ -42,13 +49,35 @@ pub struct TenantBatch {
 /// row-for-row.
 pub type MultiPredictFn = Box<dyn Fn(&[TenantBatch]) -> Vec<Prediction> + Send + Sync>;
 
-/// A served tenant: routing name and feature dimension.
+/// A served tenant: routing name, feature dimension, and optional
+/// deadline class.
 #[derive(Clone, Debug)]
 pub struct TenantSpec {
     /// routing key (the `name:` prefix of the line protocol)
     pub name: String,
     /// expected feature count per request
     pub dim: usize,
+    /// deadline class: requests for this tenant must be answered within
+    /// this budget or they are shed/fast-failed. `None` falls back to the
+    /// policy's [`BatchPolicy::default_deadline`].
+    pub deadline: Option<Duration>,
+}
+
+impl TenantSpec {
+    /// A tenant with no deadline class of its own.
+    pub fn new(name: impl Into<String>, dim: usize) -> Self {
+        TenantSpec {
+            name: name.into(),
+            dim,
+            deadline: None,
+        }
+    }
+
+    /// Attach a deadline class.
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
 }
 
 /// Batching policy knobs.
@@ -58,6 +87,9 @@ pub struct BatchPolicy {
     pub max_wait: Duration,
     /// pending-request bound: `submit` fails fast beyond this
     pub max_queue: usize,
+    /// deadline applied to tenants without their own class; `None`
+    /// disables deadline handling entirely (legacy behaviour)
+    pub default_deadline: Option<Duration>,
 }
 
 impl Default for BatchPolicy {
@@ -66,6 +98,7 @@ impl Default for BatchPolicy {
             max_batch: 64,
             max_wait: Duration::from_millis(2),
             max_queue: 1024,
+            default_deadline: None,
         }
     }
 }
@@ -73,8 +106,10 @@ impl Default for BatchPolicy {
 struct Request {
     tenant: usize,
     x: Vec<f64>,
-    reply: Sender<(f64, f64)>,
+    reply: Sender<Result<(f64, f64), String>>,
     enqueued: Instant,
+    /// absolute expiry computed at submit (tenant class, else policy default)
+    deadline: Option<Instant>,
 }
 
 /// Dynamic batcher handle. Submit from any thread.
@@ -84,6 +119,8 @@ pub struct DynamicBatcher {
     tenants: Vec<TenantSpec>,
     pending: Arc<AtomicUsize>,
     max_queue: usize,
+    max_batch: usize,
+    default_deadline: Option<Duration>,
     worker: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -94,14 +131,7 @@ impl DynamicBatcher {
         let multi: MultiPredictFn = Box::new(move |batches: &[TenantBatch]| {
             batches.iter().map(|tb| predict(&tb.xs)).collect()
         });
-        Self::new_multi(
-            vec![TenantSpec {
-                name: "default".to_string(),
-                dim,
-            }],
-            policy,
-            multi,
-        )
+        Self::new_multi(vec![TenantSpec::new("default", dim)], policy, multi)
     }
 
     /// Spawn the batching worker around a multi-tenant predictor.
@@ -110,9 +140,20 @@ impl DynamicBatcher {
         policy: BatchPolicy,
         predict: MultiPredictFn,
     ) -> Self {
+        Self::new_multi_with_metrics(tenants, policy, predict, Arc::new(Metrics::new()))
+    }
+
+    /// Like [`DynamicBatcher::new_multi`], but shares an existing metrics
+    /// sink — the fused serving path uses this so the predictor can count
+    /// fused solves on the same `Metrics` the batcher reports through.
+    pub fn new_multi_with_metrics(
+        tenants: Vec<TenantSpec>,
+        policy: BatchPolicy,
+        predict: MultiPredictFn,
+        metrics: Arc<Metrics>,
+    ) -> Self {
         assert!(!tenants.is_empty(), "batcher needs at least one tenant");
         let (tx, rx) = channel::<Request>();
-        let metrics = Arc::new(Metrics::new());
         let pending = Arc::new(AtomicUsize::new(0));
         let m2 = Arc::clone(&metrics);
         let p2 = Arc::clone(&pending);
@@ -126,6 +167,8 @@ impl DynamicBatcher {
             tenants,
             pending,
             max_queue: policy.max_queue.max(1),
+            max_batch: policy.max_batch.max(1),
+            default_deadline: policy.default_deadline,
             worker: Some(worker),
         }
     }
@@ -156,7 +199,29 @@ impl DynamicBatcher {
                     Err(_) => break,
                 }
             }
-            pending.fetch_sub(batch.len(), Ordering::Relaxed);
+            let left = pending.fetch_sub(batch.len(), Ordering::Relaxed) - batch.len();
+            metrics.set_queue_depth(left as u64);
+            // fast-fail requests whose deadline already passed while they
+            // sat in the queue — solving them would waste the tick on
+            // answers nobody can use
+            let now = Instant::now();
+            let mut live = Vec::with_capacity(batch.len());
+            for req in batch {
+                match req.deadline {
+                    Some(d) if now > d => {
+                        metrics.record_expired();
+                        let waited = now.duration_since(req.enqueued).as_micros();
+                        let _ = req.reply.send(Err(format!(
+                            "deadline expired: waited {waited}us in queue"
+                        )));
+                    }
+                    _ => live.push(req),
+                }
+            }
+            if live.is_empty() {
+                continue;
+            }
+            let batch = live;
             // route: coalesce same-tenant requests into one RHS block,
             // preserving arrival order within each tenant
             let mut groups: Vec<Vec<usize>> = vec![Vec::new(); dims.len()];
@@ -177,7 +242,9 @@ impl DynamicBatcher {
                 blocks.push(TenantBatch { tenant, xs });
             }
             // one predictor call per tick: every tenant's block at once
+            let tick_start = Instant::now();
             let preds = predict(&blocks);
+            metrics.record_tick(tick_start.elapsed().as_micros() as u64);
             debug_assert_eq!(preds.len(), blocks.len());
             metrics.record_batch();
             let now = Instant::now();
@@ -186,15 +253,21 @@ impl DynamicBatcher {
                 metrics.record_request(latency);
                 let (g, row) = slot[j];
                 // receiver may have gone away; that's fine
-                let _ = req.reply.send((preds[g].mean[row], preds[g].var[row]));
+                let _ = req.reply.send(Ok((preds[g].mean[row], preds[g].var[row])));
             }
         }
     }
 
     /// Submit one query point for a specific tenant; returns a receiver
-    /// for (mean, variance). Fails fast on unknown tenant, feature-count
-    /// mismatch, or a full queue.
-    pub fn submit_to(&self, tenant: usize, x: Vec<f64>) -> Result<Receiver<(f64, f64)>, String> {
+    /// for `Ok((mean, variance))` or a deadline fast-fail. Fails fast on
+    /// unknown tenant, feature-count mismatch, a full queue, or — when the
+    /// tenant carries a deadline class — an unmeetable deadline at the
+    /// current queue depth (admission control).
+    pub fn submit_to(
+        &self,
+        tenant: usize,
+        x: Vec<f64>,
+    ) -> Result<Receiver<Result<(f64, f64), String>>, String> {
         let spec = self
             .tenants
             .get(tenant)
@@ -207,6 +280,26 @@ impl DynamicBatcher {
                 x.len()
             ));
         }
+        let deadline = spec.deadline.or(self.default_deadline);
+        if let Some(d) = deadline {
+            // admission control: estimate the wait this request faces from
+            // the smoothed tick latency and the ticks already queued ahead
+            // of it; shed now rather than queue work that must expire
+            let ewma = self.metrics.ewma_tick_us();
+            if ewma > 0 {
+                let depth = self.pending.load(Ordering::Relaxed);
+                let ticks_ahead = 1 + depth / self.max_batch;
+                let est_wait_us = ewma.saturating_mul(ticks_ahead as u64);
+                if est_wait_us > d.as_micros() as u64 {
+                    self.metrics.record_shed();
+                    return Err(format!(
+                        "deadline {}ms unmeetable: estimated wait {est_wait_us}us \
+                         at queue depth {depth}",
+                        d.as_millis()
+                    ));
+                }
+            }
+        }
         let was = self.pending.fetch_add(1, Ordering::Relaxed);
         if was >= self.max_queue {
             self.pending.fetch_sub(1, Ordering::Relaxed);
@@ -215,12 +308,15 @@ impl DynamicBatcher {
                 self.max_queue
             ));
         }
+        self.metrics.set_queue_depth((was + 1) as u64);
         let (reply_tx, reply_rx) = channel();
+        let enqueued = Instant::now();
         match self.tx.send(Request {
             tenant,
             x,
             reply: reply_tx,
-            enqueued: Instant::now(),
+            enqueued,
+            deadline: deadline.map(|d| enqueued + d),
         }) {
             Ok(()) => Ok(reply_rx),
             Err(_) => {
@@ -231,14 +327,14 @@ impl DynamicBatcher {
     }
 
     /// Submit one query point to tenant 0 (single-model deployments).
-    pub fn submit(&self, x: Vec<f64>) -> Result<Receiver<(f64, f64)>, String> {
+    pub fn submit(&self, x: Vec<f64>) -> Result<Receiver<Result<(f64, f64), String>>, String> {
         self.submit_to(0, x)
     }
 
     /// Blocking convenience: submit to a tenant and wait.
     pub fn predict_for(&self, tenant: usize, x: Vec<f64>) -> Result<(f64, f64), String> {
         let rx = self.submit_to(tenant, x)?;
-        rx.recv().map_err(|_| "worker dropped reply".to_string())
+        rx.recv().map_err(|_| "worker dropped reply".to_string())?
     }
 
     /// Blocking convenience: submit to tenant 0 and wait.
@@ -337,6 +433,7 @@ mod tests {
                 max_batch: 1,
                 max_wait: Duration::from_millis(1),
                 max_queue: 3,
+                ..BatchPolicy::default()
             },
             blocked,
         );
@@ -437,16 +534,7 @@ mod tests {
                 .collect()
         });
         let b = Arc::new(DynamicBatcher::new_multi(
-            vec![
-                TenantSpec {
-                    name: "a".into(),
-                    dim: 1,
-                },
-                TenantSpec {
-                    name: "b".into(),
-                    dim: 2,
-                },
-            ],
+            vec![TenantSpec::new("a", 1), TenantSpec::new("b", 2)],
             BatchPolicy {
                 max_batch: 16,
                 max_wait: Duration::from_millis(20),
@@ -478,5 +566,74 @@ mod tests {
         }
         // interleaved tenants were still coalesced into shared ticks
         assert!(b.metrics.mean_batch_size() > 1.0);
+    }
+
+    #[test]
+    fn deadline_admission_sheds_unmeetable_requests() {
+        let b = DynamicBatcher::new_multi(
+            vec![TenantSpec::new("fast", 1).with_deadline(Duration::from_millis(1))],
+            BatchPolicy::default(),
+            Box::new(|blocks: &[TenantBatch]| {
+                blocks
+                    .iter()
+                    .map(|tb| Prediction {
+                        mean: vec![0.0; tb.xs.rows()],
+                        var: vec![1.0; tb.xs.rows()],
+                    })
+                    .collect()
+            }),
+        );
+        // no tick history yet → no estimate → admitted and answered
+        assert!(b.predict_for(0, vec![1.0]).is_ok());
+        // fake a pathological tick history: every tick takes ~10s, so a
+        // 1ms deadline is provably unmeetable and admission must shed
+        b.metrics.record_tick(10_000_000);
+        let err = b.predict_for(0, vec![1.0]).unwrap_err();
+        assert!(err.starts_with("deadline"), "{err}");
+        assert!(err.contains("unmeetable"), "{err}");
+        assert_eq!(b.metrics.shed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn expired_requests_are_fast_failed_by_the_worker() {
+        // block the worker inside a tick, queue a short-deadline request,
+        // and let it expire before the gate opens: the worker must reply
+        // with the documented deadline error instead of solving it
+        let (gate_tx, gate_rx) = channel::<()>();
+        let (entered_tx, entered_rx) = channel::<()>();
+        let gate = Mutex::new((entered_tx, gate_rx));
+        let blocked: PredictFn = Box::new(move |xs: &Mat| {
+            let guard = gate.lock().unwrap();
+            let _ = guard.0.send(());
+            let _ = guard.1.recv();
+            Prediction {
+                mean: vec![7.0; xs.rows()],
+                var: vec![1.0; xs.rows()],
+            }
+        });
+        let b = DynamicBatcher::new(
+            1,
+            BatchPolicy {
+                max_batch: 1,
+                max_wait: Duration::from_millis(1),
+                default_deadline: Some(Duration::from_millis(5)),
+                ..BatchPolicy::default()
+            },
+            blocked,
+        );
+        // first request enters a tick and parks the worker on the gate
+        let rx0 = b.submit(vec![0.0]).unwrap();
+        entered_rx.recv().unwrap();
+        // second request waits in the queue past its 5ms deadline
+        let rx1 = b.submit(vec![1.0]).unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        let _ = gate_tx.send(());
+        assert!(rx0.recv().unwrap().is_ok());
+        let err = rx1.recv().unwrap().unwrap_err();
+        assert!(err.starts_with("deadline expired"), "{err}");
+        assert_eq!(b.metrics.expired.load(Ordering::Relaxed), 1);
+        // gate stays open for any stray tick
+        let _ = gate_tx.send(());
+        while entered_rx.try_recv().is_ok() {}
     }
 }

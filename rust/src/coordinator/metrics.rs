@@ -1,50 +1,27 @@
-//! Serving metrics: counters plus a simple latency histogram.
+//! Serving metrics: counters plus simple latency histograms.
+//!
+//! Two histograms share one log₂-bucket layout: per-request latency
+//! (enqueue → reply) and per-tick latency (one batched predictor call).
+//! The tick EWMA feeds the batcher's deadline admission control — the
+//! estimated wait a new request faces is a small multiple of it.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
-/// Lock-free serving metrics (shared across worker threads).
+/// log₂-bucketed latency histogram: bucket i counts latencies in
+/// [2^i, 2^{i+1}) microseconds.
 #[derive(Default)]
-pub struct Metrics {
-    pub requests: AtomicU64,
-    pub batches: AtomicU64,
-    pub errors: AtomicU64,
-    /// total latency in microseconds (for mean)
-    total_latency_us: AtomicU64,
-    /// log₂-bucketed latency histogram: bucket i counts latencies in
-    /// [2^i, 2^{i+1}) microseconds
+struct LatencyHist {
     buckets: [AtomicU64; 24],
 }
 
-impl Metrics {
-    pub fn new() -> Self {
-        Metrics::default()
-    }
-
-    pub fn record_request(&self, latency_us: u64) {
-        self.requests.fetch_add(1, Ordering::Relaxed);
-        self.total_latency_us.fetch_add(latency_us, Ordering::Relaxed);
-        let bucket = (64 - latency_us.max(1).leading_zeros() as usize - 1).min(23);
+impl LatencyHist {
+    fn record(&self, us: u64) {
+        let bucket = (64 - us.max(1).leading_zeros() as usize - 1).min(23);
         self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
     }
 
-    pub fn record_batch(&self) {
-        self.batches.fetch_add(1, Ordering::Relaxed);
-    }
-
-    pub fn record_error(&self) {
-        self.errors.fetch_add(1, Ordering::Relaxed);
-    }
-
-    pub fn mean_latency_us(&self) -> f64 {
-        let n = self.requests.load(Ordering::Relaxed);
-        if n == 0 {
-            return 0.0;
-        }
-        self.total_latency_us.load(Ordering::Relaxed) as f64 / n as f64
-    }
-
-    /// approximate p-quantile latency from the histogram (µs)
-    pub fn quantile_latency_us(&self, q: f64) -> f64 {
+    /// approximate p-quantile from the histogram (µs)
+    fn quantile(&self, q: f64) -> f64 {
         let total: u64 = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum();
         if total == 0 {
             return 0.0;
@@ -59,6 +36,115 @@ impl Metrics {
         }
         (1u64 << 23) as f64
     }
+}
+
+/// Lock-free serving metrics (shared across worker threads).
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub errors: AtomicU64,
+    /// requests refused at admission: the deadline could not be met at the
+    /// current queue depth (backpressure, counted before any queueing)
+    pub shed: AtomicU64,
+    /// requests that expired while queued and were fast-failed by the
+    /// worker instead of being solved past their deadline
+    pub expired: AtomicU64,
+    /// fused heterogeneous ticks (one per mixed-tenant batched solve)
+    pub fused_solves: AtomicU64,
+    /// tenant blocks answered across all fused ticks (occupancy numerator;
+    /// divide by `fused_solves` for mean fused-block occupancy)
+    pub fused_blocks: AtomicU64,
+    /// queue-depth gauge: pending requests at the last submit/drain
+    queue_depth: AtomicU64,
+    /// total latency in microseconds (for mean)
+    total_latency_us: AtomicU64,
+    /// per-request latency histogram (enqueue → reply)
+    lat: LatencyHist,
+    /// per-tick latency histogram (one batched predictor call)
+    tick: LatencyHist,
+    /// EWMA of tick latency in µs (admission control's wait estimate)
+    ewma_tick_us: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    pub fn record_request(&self, latency_us: u64) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.total_latency_us.fetch_add(latency_us, Ordering::Relaxed);
+        self.lat.record(latency_us);
+    }
+
+    pub fn record_batch(&self) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request was refused at admission (deadline unmeetable).
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A queued request expired before its tick and was fast-failed.
+    pub fn record_expired(&self) {
+        self.expired.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One fused heterogeneous tick answered `blocks` tenant blocks.
+    pub fn record_fused(&self, blocks: u64) {
+        self.fused_solves.fetch_add(1, Ordering::Relaxed);
+        self.fused_blocks.fetch_add(blocks, Ordering::Relaxed);
+    }
+
+    /// Publish the current pending-queue depth (a gauge, not a counter).
+    pub fn set_queue_depth(&self, depth: u64) {
+        self.queue_depth.store(depth, Ordering::Relaxed);
+    }
+
+    /// Last published queue depth.
+    pub fn queue_depth(&self) -> u64 {
+        self.queue_depth.load(Ordering::Relaxed)
+    }
+
+    /// One batched predictor call took `us` µs: histogram + EWMA update.
+    /// (Single writer — the batching worker — so the read-modify-write
+    /// EWMA needs no CAS loop.)
+    pub fn record_tick(&self, us: u64) {
+        self.tick.record(us);
+        let old = self.ewma_tick_us.load(Ordering::Relaxed);
+        let new = if old == 0 { us } else { (3 * old + us) / 4 };
+        self.ewma_tick_us.store(new, Ordering::Relaxed);
+    }
+
+    /// Smoothed tick latency in µs (0 until the first tick completes) —
+    /// what admission control multiplies by the queue backlog.
+    pub fn ewma_tick_us(&self) -> u64 {
+        self.ewma_tick_us.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_latency_us(&self) -> f64 {
+        let n = self.requests.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.total_latency_us.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    /// approximate p-quantile request latency from the histogram (µs)
+    pub fn quantile_latency_us(&self, q: f64) -> f64 {
+        self.lat.quantile(q)
+    }
+
+    /// approximate p-quantile tick latency (µs)
+    pub fn quantile_tick_us(&self, q: f64) -> f64 {
+        self.tick.quantile(q)
+    }
 
     /// requests per batch (batching efficiency)
     pub fn mean_batch_size(&self) -> f64 {
@@ -71,14 +157,24 @@ impl Metrics {
 
     pub fn summary(&self) -> String {
         format!(
-            "requests={} batches={} errors={} mean_batch={:.2} mean_lat={:.0}us p50={:.0}us p99={:.0}us",
+            "requests={} batches={} errors={} shed={} expired={} queue={} \
+             fused={} fused_blocks={} mean_batch={:.2} mean_lat={:.0}us \
+             p50={:.0}us p99={:.0}us tick_p50={:.0}us tick_p95={:.0}us tick_p99={:.0}us",
             self.requests.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.errors.load(Ordering::Relaxed),
+            self.shed.load(Ordering::Relaxed),
+            self.expired.load(Ordering::Relaxed),
+            self.queue_depth(),
+            self.fused_solves.load(Ordering::Relaxed),
+            self.fused_blocks.load(Ordering::Relaxed),
             self.mean_batch_size(),
             self.mean_latency_us(),
             self.quantile_latency_us(0.5),
             self.quantile_latency_us(0.99),
+            self.quantile_tick_us(0.5),
+            self.quantile_tick_us(0.95),
+            self.quantile_tick_us(0.99),
         )
     }
 }
@@ -116,5 +212,32 @@ mod tests {
         assert_eq!(m.mean_latency_us(), 0.0);
         assert_eq!(m.quantile_latency_us(0.9), 0.0);
         assert_eq!(m.mean_batch_size(), 0.0);
+        assert_eq!(m.quantile_tick_us(0.9), 0.0);
+        assert_eq!(m.ewma_tick_us(), 0);
+        assert_eq!(m.queue_depth(), 0);
+    }
+
+    #[test]
+    fn backpressure_counters_round_trip_through_summary() {
+        let m = Metrics::new();
+        m.record_shed();
+        m.record_shed();
+        m.record_expired();
+        m.record_fused(3);
+        m.record_fused(2);
+        m.set_queue_depth(7);
+        m.record_tick(1000);
+        m.record_tick(3000);
+        let s = m.summary();
+        assert!(s.contains("shed=2"), "{s}");
+        assert!(s.contains("expired=1"), "{s}");
+        assert!(s.contains("queue=7"), "{s}");
+        assert!(s.contains("fused=2"), "{s}");
+        assert!(s.contains("fused_blocks=5"), "{s}");
+        assert!(s.contains("tick_p50="), "{s}");
+        // EWMA moved toward the latest tick but remembers the first
+        let e = m.ewma_tick_us();
+        assert!(e > 1000 && e < 3000, "ewma {e}");
+        assert!(m.quantile_tick_us(0.5) > 0.0);
     }
 }

@@ -16,7 +16,7 @@ pub use batcher::{
 };
 pub use metrics::Metrics;
 pub use server::{
-    handle_line, handle_request, multi_served_predictor, multi_served_predictor_love, serve,
-    serve_with_love, served_predictor, served_predictor_cached, served_predictor_love,
-    LoveServeCtx, ServableModel, ServerConfig,
+    handle_line, handle_request, multi_served_predictor, multi_served_predictor_fused,
+    multi_served_predictor_love, serve, serve_with_love, served_predictor,
+    served_predictor_cached, served_predictor_love, LoveServeCtx, ServableModel, ServerConfig,
 };

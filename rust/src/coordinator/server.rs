@@ -31,8 +31,11 @@
 //! no longer pay a solve.
 
 use crate::coordinator::batcher::{DynamicBatcher, MultiPredictFn, PredictFn, TenantBatch};
+use crate::coordinator::metrics::Metrics;
 use crate::gp::posterior::{LovePosterior, PosteriorCache};
-use crate::gp::predict::{predict_batch_op_ws, predict_with_plan, PosteriorQuery, Prediction};
+use crate::gp::predict::{
+    predict_batch_hetero_ws, predict_batch_op_ws, PosteriorQuery, Prediction,
+};
 use crate::linalg::mbcg::MbcgWorkspace;
 use crate::linalg::op::{
     solve_strategy, BatchOp, LinearOp, SolveOptions, SolvePlan, SolvePlanCache,
@@ -198,6 +201,15 @@ impl LoveServeCtx {
     pub fn stats(&self) -> String {
         self.posteriors.stats()
     }
+
+    /// Build every tenant's posterior now instead of on first use, so the
+    /// first request after startup pays two skinny GEMMs — not a LOVE
+    /// factorisation. `bbmm serve` calls this before binding the socket.
+    pub fn prime(&self) {
+        for t in 0..self.models.len() {
+            let _ = self.posterior_for(t);
+        }
+    }
 }
 
 /// Single-model LOVE tick predictor: ordinary mean,variance lines are
@@ -234,13 +246,27 @@ pub fn served_predictor_cached(
     cache: Arc<SolvePlanCache>,
 ) -> PredictFn {
     // the served model is moved into the closure with no mutation path,
-    // so its content fingerprint is computed once, not per tick
+    // so its content fingerprint is computed once, not per tick —
+    // and the plan (factorisation / preconditioner) is primed here so
+    // the first request after startup pays a solve, not a plan build
     let fp = model.op().fingerprint();
+    let _ = cache.get_or_plan_with_fingerprint("default", fp, model.op(), &opts);
+    // one warm solver workspace held across ticks: without it every
+    // predict call rebuilt the mBCG arena from cold
+    let ws: Mutex<MbcgWorkspace> = Mutex::new(MbcgWorkspace::new());
     Box::new(move |xs: &Mat| -> Prediction {
         let k_star = model.cross(xs);
         let diag = model.prior_diag(xs);
         let plan = cache.get_or_plan_with_fingerprint("default", fp, model.op(), &opts);
-        predict_with_plan(model.op(), &k_star, &diag, model.y(), &plan, &opts)
+        let batch = BatchOp::new(vec![model.op()]);
+        let queries = [PosteriorQuery {
+            k_star: &k_star,
+            k_star_diag: &diag,
+            y: model.y(),
+        }];
+        let mut guard = ws.lock().unwrap();
+        let mut preds = predict_batch_op_ws(&batch, &queries, &[plan.as_ref()], &opts, &mut guard);
+        preds.pop().expect("one query answered")
     })
 }
 
@@ -259,8 +285,12 @@ pub fn multi_served_predictor(
     cache: Arc<SolvePlanCache>,
 ) -> MultiPredictFn {
     // served models are moved into the closure with no mutation path, so
-    // per-tenant fingerprints are computed once, not per tick
+    // per-tenant fingerprints are computed once, not per tick — and every
+    // tenant's plan is primed now so no request pays a factorisation
     let fps: Vec<u64> = models.iter().map(|(_, m)| m.op().fingerprint()).collect();
+    for ((name, m), &fp) in models.iter().zip(&fps) {
+        let _ = cache.get_or_plan_with_fingerprint(name, fp, m.op(), &opts);
+    }
     // group-size n → warm solver workspace, reused every tick (the
     // predictor must be Sync, so ticks take the workspace through a lock;
     // same-n groups from concurrent ticks serialise on it, which is the
@@ -312,6 +342,72 @@ pub fn multi_served_predictor(
         out.into_iter()
             .map(|p| p.expect("every block answered"))
             .collect()
+    })
+}
+
+/// The heterogeneous serving hot path: every tenant block of a tick —
+/// regardless of training-set size `n` or model family — is answered
+/// through **one** fused iterative solve per tick
+/// ([`predict_batch_hetero_ws`]). Direct-planned tenants (Cholesky /
+/// Woodbury / circulant) ride the same loop as preconditioners and
+/// converge in one iteration; per-block early stopping drops each block
+/// as its own tolerance is met. Compare [`multi_served_predictor`], which
+/// pays one solve *per distinct n* per tick.
+///
+/// Every fused tick is counted on `metrics`
+/// ([`Metrics::record_fused`]: one solve + its block occupancy), so
+/// `STATS` exposes `fused=`/`fused_blocks=` — share the same `Arc` with
+/// the batcher via
+/// [`DynamicBatcher::new_multi_with_metrics`](crate::coordinator::batcher::DynamicBatcher::new_multi_with_metrics).
+/// Plans are primed at construction; the solver workspace is keyed by the
+/// tick's total stacked size and kept warm across ticks.
+pub fn multi_served_predictor_fused(
+    models: Vec<(String, Box<dyn ServableModel>)>,
+    opts: SolveOptions,
+    cache: Arc<SolvePlanCache>,
+    metrics: Arc<Metrics>,
+) -> MultiPredictFn {
+    let fps: Vec<u64> = models.iter().map(|(_, m)| m.op().fingerprint()).collect();
+    for ((name, m), &fp) in models.iter().zip(&fps) {
+        let _ = cache.get_or_plan_with_fingerprint(name, fp, m.op(), &opts);
+    }
+    // total stacked size Σnᵢ → warm solver workspace, reused every tick
+    let workspaces: Mutex<BTreeMap<usize, MbcgWorkspace>> = Mutex::new(BTreeMap::new());
+    Box::new(move |blocks: &[TenantBatch]| -> Vec<Prediction> {
+        let mut kstars = Vec::with_capacity(blocks.len());
+        let mut diags = Vec::with_capacity(blocks.len());
+        let mut plans: Vec<Arc<SolvePlan>> = Vec::with_capacity(blocks.len());
+        let mut stacked = 0usize;
+        for tb in blocks {
+            let (name, model) = &models[tb.tenant];
+            kstars.push(model.cross(&tb.xs));
+            diags.push(model.prior_diag(&tb.xs));
+            plans.push(cache.get_or_plan_with_fingerprint(
+                name,
+                fps[tb.tenant],
+                model.op(),
+                &opts,
+            ));
+            stacked += model.op().n();
+        }
+        let els: Vec<&dyn LinearOp> =
+            blocks.iter().map(|tb| models[tb.tenant].1.op()).collect();
+        let queries: Vec<PosteriorQuery<'_>> = blocks
+            .iter()
+            .enumerate()
+            .map(|(g, tb)| PosteriorQuery {
+                k_star: &kstars[g],
+                k_star_diag: &diags[g],
+                y: models[tb.tenant].1.y(),
+            })
+            .collect();
+        let plan_refs: Vec<&SolvePlan> = plans.iter().map(|p| p.as_ref()).collect();
+        let per_opts = vec![opts; blocks.len()];
+        let mut wss = workspaces.lock().unwrap();
+        let ws = wss.entry(stacked).or_default();
+        let (preds, _stats) = predict_batch_hetero_ws(&els, &queries, &plan_refs, &per_opts, ws);
+        metrics.record_fused(blocks.len() as u64);
+        preds
     })
 }
 
@@ -568,16 +664,7 @@ mod tests {
                 .collect()
         });
         let b = DynamicBatcher::new_multi(
-            vec![
-                TenantSpec {
-                    name: "a".into(),
-                    dim: 1,
-                },
-                TenantSpec {
-                    name: "b".into(),
-                    dim: 2,
-                },
-            ],
+            vec![TenantSpec::new("a", 1), TenantSpec::new("b", 2)],
             BatchPolicy::default(),
             multi,
         );

@@ -11,9 +11,10 @@
 //! (direct Woodbury for SGPR-shaped compositions, dense Cholesky for
 //! explicit matrices, preconditioned mBCG otherwise).
 
-use crate::linalg::mbcg::MbcgWorkspace;
+use crate::linalg::mbcg::{MbcgBatchStats, MbcgWorkspace};
 use crate::linalg::op::{
-    plan, solve_batch_ws, solve_with, BatchOp, LinearOp, SolveOptions, SolvePlan,
+    plan, solve_batch_hetero_ws, solve_batch_ws, solve_with, BatchOp, LinearOp, SolveOptions,
+    SolvePlan,
 };
 use crate::tensor::Mat;
 
@@ -171,6 +172,35 @@ pub fn predict_batch_op_ws(
         .zip(solved)
         .map(|(q, s)| posterior_from_solves(q.k_star, q.k_star_diag, &s))
         .collect()
+}
+
+/// **Heterogeneous batched posterior answering** — the fused serving
+/// tick: query `i` is answered by posterior operator `els[i]`, with
+/// tenants of **any mix of training sizes and model families** sharing
+/// exactly ONE iterative loop through
+/// [`crate::linalg::op::solve_batch_hetero_ws`] (direct-planned tenants
+/// converge at the first α-step via
+/// [`crate::linalg::op::PlanPrecond`]; iterative tenants run to their own
+/// per-tenant tolerance `opts[i]`). Returns the per-tenant predictions
+/// plus the fused loop's stats — the serving metrics' fused-tick
+/// occupancy counters.
+pub fn predict_batch_hetero_ws(
+    els: &[&dyn LinearOp],
+    queries: &[PosteriorQuery<'_>],
+    plans: &[&SolvePlan],
+    opts: &[SolveOptions],
+    ws: &mut MbcgWorkspace,
+) -> (Vec<Prediction>, MbcgBatchStats) {
+    assert_eq!(queries.len(), els.len(), "predict_batch_hetero: query count mismatch");
+    let rhs: Vec<Mat> = queries.iter().map(|q| posterior_rhs(q.k_star, q.y)).collect();
+    let rhs_refs: Vec<&Mat> = rhs.iter().collect();
+    let (solved, stats) = solve_batch_hetero_ws(els, plans, &rhs_refs, opts, ws);
+    let preds = queries
+        .iter()
+        .zip(solved)
+        .map(|(q, s)| posterior_from_solves(q.k_star, q.k_star_diag, &s))
+        .collect();
+    (preds, stats)
 }
 
 /// Mean-only prediction (one solve total, reused across all test points).

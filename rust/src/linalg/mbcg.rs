@@ -49,6 +49,7 @@ impl TriDiag {
 }
 
 /// Options for [`mbcg`].
+#[derive(Debug, Clone, Copy)]
 pub struct MbcgOptions {
     /// maximum CG iterations `p`
     pub max_iters: usize,
@@ -363,38 +364,76 @@ pub fn mbcg_batch_stats_ws(
     opts: &MbcgOptions,
     ws: &mut MbcgWorkspace,
 ) -> (Vec<MbcgResult>, MbcgBatchStats) {
+    // setup-phase allocation: per-system option fan-out for the shared core
+    let per: Vec<MbcgOptions> = (0..batch.len()).map(|_| *opts).collect();
+    mbcg_batch_hetero_ws(batch, bs, preconds, &per, ws)
+}
+
+/// **Heterogeneous batched mBCG**: the per-system-options core of
+/// [`mbcg_batch_stats_ws`]. Systems may have **different dimensions**
+/// (a [`crate::linalg::op::BatchOp::hetero`] stack of mixed-n tenants) and
+/// each carries its own `MbcgOptions` — per-block tolerance, iteration
+/// cap, and `n_solve_only` — so a mixed batch pays ONE iteration loop per
+/// tick while every block stops exactly where its own accuracy target
+/// says. A block whose preconditioner is an exact direct solve (see
+/// [`crate::linalg::op::solve::PlanPrecond`]) converges at the first
+/// α-step and drops out of the batched product immediately, which is how
+/// exact-planned (Cholesky/Woodbury/circulant) tenants ride the same fused
+/// loop as iterative ones.
+pub fn mbcg_batch_hetero_ws(
+    batch: &crate::linalg::op::BatchOp<'_>,
+    bs: &[&Mat],
+    preconds: &[&dyn crate::linalg::preconditioner::Preconditioner],
+    opts: &[MbcgOptions],
+    ws: &mut MbcgWorkspace,
+) -> (Vec<MbcgResult>, MbcgBatchStats) {
     let b = batch.len();
     assert_eq!(bs.len(), b, "mbcg_batch: RHS count mismatch");
     assert_eq!(preconds.len(), b, "mbcg_batch: preconditioner count mismatch");
-    let n = batch.n();
+    assert_eq!(opts.len(), b, "mbcg_batch: options count mismatch");
     // ---- setup: allocation is expected here, never inside the loop ----
     batch.prepare();
     let mut systems: Vec<CgSystem<f64>> = bs
         .iter()
         .zip(preconds)
-        .map(|(&rhs, pre)| {
-            assert_eq!(rhs.rows(), n, "mbcg_batch: RHS row mismatch");
-            CgSystem::new(rhs, pre.solve_mat(rhs), opts.max_iters)
+        .enumerate()
+        .map(|(i, (&rhs, pre))| {
+            assert_eq!(rhs.rows(), batch.element_n(i), "mbcg_batch: RHS row mismatch");
+            CgSystem::new(rhs, pre.solve_mat(rhs), opts[i].max_iters)
         })
         .collect();
-    let total_cols: usize = bs.iter().map(|m| m.cols()).sum();
-    if ws.block.len() != n * total_cols {
+    // the shared fast path packs through `block`/`kv` (uniform n by
+    // construction); the elementwise path never touches them
+    let pack_len = if batch.is_shared() {
+        batch.n() * bs.iter().map(|m| m.cols()).sum::<usize>()
+    } else {
+        0
+    };
+    if ws.block.len() != pack_len {
         ws.block.clear();
-        ws.block.resize(n * total_cols, 0.0);
+        ws.block.resize(pack_len, 0.0);
     }
-    if ws.kv.len() != n * total_cols {
+    if ws.kv.len() != pack_len {
         ws.kv.clear();
-        ws.kv.resize(n * total_cols, 0.0);
+        ws.kv.resize(pack_len, 0.0);
     }
     let shapes_match = ws.vs.len() == b
         && ws
             .vs
             .iter()
-            .zip(bs)
-            .all(|(v, rhs)| v.shape() == (n, rhs.cols()));
+            .zip(bs.iter().enumerate())
+            .all(|(v, (i, rhs))| v.shape() == (batch.element_n(i), rhs.cols()));
     if !shapes_match {
-        ws.vs = bs.iter().map(|rhs| Mat::zeros(n, rhs.cols())).collect();
-        ws.zs = bs.iter().map(|rhs| Mat::zeros(n, rhs.cols())).collect();
+        ws.vs = bs
+            .iter()
+            .enumerate()
+            .map(|(i, rhs)| Mat::zeros(batch.element_n(i), rhs.cols()))
+            .collect();
+        ws.zs = bs
+            .iter()
+            .enumerate()
+            .map(|(i, rhs)| Mat::zeros(batch.element_n(i), rhs.cols()))
+            .collect();
     }
     ws.active.clear();
     ws.active.reserve(b);
@@ -404,7 +443,7 @@ pub fn mbcg_batch_stats_ws(
     loop {
         ws.active.clear();
         for (i, sys) in systems.iter().enumerate() {
-            if !sys.done() && sys.iterations < opts.max_iters {
+            if !sys.done() && sys.iterations < opts[i].max_iters {
                 ws.active.push(i);
             }
         }
@@ -427,7 +466,7 @@ pub fn mbcg_batch_stats_ws(
         for k in 0..ws.active.len() {
             let i = ws.active[k];
             let sys = &mut systems[i];
-            sys.absorb_product(&ws.vs[i], opts.tol);
+            sys.absorb_product(&ws.vs[i], opts[i].tol);
             if !sys.done() {
                 preconds[i].solve_mat_into(&sys.r, &mut ws.zs[i]);
                 sys.refresh_directions(&ws.zs[i]);
@@ -438,7 +477,8 @@ pub fn mbcg_batch_stats_ws(
     stats.system_iterations = systems.iter().map(|sys| sys.iterations).sum();
     let results = systems
         .into_iter()
-        .map(|sys| sys.into_result(opts.n_solve_only))
+        .zip(opts)
+        .map(|(sys, o)| sys.into_result(o.n_solve_only))
         .collect();
     (results, stats)
 }
@@ -555,12 +595,33 @@ pub fn tridiag_from_coeffs(alphas: &[f64], betas: &[f64]) -> TriDiag {
     TriDiag { diag, offdiag }
 }
 
-/// Strided column dot with four independent accumulators — the α/β
-/// reductions of every CG step run through here, and a single accumulator
-/// would serialise them on the add latency.
+/// Strided column dot — the α/β reductions of every CG step run through
+/// here. f64 columns dispatch through [`crate::tensor::simd`] (contiguous
+/// kernel when `t == 1`, the serving predict shape; lane-composed strided
+/// kernel otherwise); the portable path keeps four independent
+/// accumulators so a single chain never serialises on the add latency.
+/// Neither path allocates — this sits inside the mBCG zero-alloc loop.
 #[inline]
 fn col_dot<T: Scalar>(a: &Mat<T>, b: &Mat<T>, c: usize) -> f64 {
     let n = a.rows();
+    if std::any::TypeId::of::<T>() == std::any::TypeId::of::<f64>() && a.cols() == b.cols() {
+        // SAFETY: T == f64, just checked — identity casts
+        let (af, bf) = unsafe {
+            (
+                crate::tensor::gemm::cast_slice::<T, f64>(a.data()),
+                crate::tensor::gemm::cast_slice::<T, f64>(b.data()),
+            )
+        };
+        let t = a.cols();
+        let hit = if t == 1 {
+            crate::tensor::simd::dot_f64(af, bf)
+        } else {
+            crate::tensor::simd::dot_strided_f64(af, bf, c, t, n)
+        };
+        if let Some(s) = hit {
+            return s;
+        }
+    }
     let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
     let end = n - n % 4;
     let mut i = 0;
@@ -1010,5 +1071,90 @@ mod tests {
         );
         let want = Cholesky::new(&a64).unwrap().solve_mat(&b64);
         assert!(res.solves.cast::<f64>().max_abs_diff(&want) < 1e-3);
+    }
+
+    #[test]
+    fn mbcg_batch_hetero_matches_standalone_per_system() {
+        use crate::linalg::op::{BatchOp, DenseOp, LinearOp};
+        use crate::linalg::preconditioner::{IdentityPrecond, Preconditioner};
+        // mixed sizes — the heterogeneous serving shape
+        let ns = [23usize, 57, 40];
+        let ops: Vec<DenseOp> = ns
+            .iter()
+            .enumerate()
+            .map(|(k, &n)| DenseOp::new(spd(n, 70 + k as u64)))
+            .collect();
+        let els: Vec<&dyn LinearOp> = ops.iter().map(|o| o as &dyn LinearOp).collect();
+        let batch = BatchOp::hetero(els);
+        let mut rng = Rng::new(71);
+        let bs: Vec<Mat> = ns
+            .iter()
+            .enumerate()
+            .map(|(k, &n)| Mat::from_fn(n, 1 + k % 2, |_, _| rng.normal()))
+            .collect();
+        let b_refs: Vec<&Mat> = bs.iter().collect();
+        let id = IdentityPrecond;
+        let preconds: Vec<&dyn Preconditioner> =
+            (0..3).map(|_| &id as &dyn Preconditioner).collect();
+        let opts: Vec<MbcgOptions> = ns
+            .iter()
+            .map(|&n| MbcgOptions {
+                max_iters: n,
+                tol: 1e-11,
+                n_solve_only: 0,
+            })
+            .collect();
+        let mut ws = MbcgWorkspace::new();
+        let (batched, stats) = mbcg_batch_hetero_ws(&batch, &b_refs, &preconds, &opts, &mut ws);
+        assert!(stats.batched_products > 0);
+        for (k, res) in batched.iter().enumerate() {
+            let mono = mbcg(|m| ops[k].matmul(m), &bs[k], |m| m.clone(), &opts[k]);
+            // same operator product order per column ⇒ bitwise-equal runs
+            assert_eq!(res.iterations, mono.iterations, "system {k}");
+            assert!(res.solves.max_abs_diff(&mono.solves) < 1e-12, "system {k}");
+        }
+        // workspace reuse across a second call must not disturb results
+        let (again, _) = mbcg_batch_hetero_ws(&batch, &b_refs, &preconds, &opts, &mut ws);
+        for (a, b) in batched.iter().zip(&again) {
+            assert!(a.solves.max_abs_diff(&b.solves) == 0.0);
+        }
+    }
+
+    #[test]
+    fn mbcg_batch_hetero_per_block_tolerance_stops_blocks_independently() {
+        use crate::linalg::op::{BatchOp, DenseOp, LinearOp};
+        use crate::linalg::preconditioner::{IdentityPrecond, Preconditioner};
+        let (na, nb) = (48usize, 32usize);
+        let oa = DenseOp::new(spd(na, 80));
+        let ob = DenseOp::new(spd(nb, 81));
+        let batch = BatchOp::hetero(vec![&oa as &dyn LinearOp, &ob as &dyn LinearOp]);
+        let mut rng = Rng::new(82);
+        let ba = Mat::from_fn(na, 2, |_, _| rng.normal());
+        let bb = Mat::from_fn(nb, 2, |_, _| rng.normal());
+        let id = IdentityPrecond;
+        let preconds: Vec<&dyn Preconditioner> = vec![&id, &id];
+        // block 0 wants full accuracy, block 1 accepts a loose answer
+        let opts = [
+            MbcgOptions {
+                max_iters: na,
+                tol: 1e-11,
+                n_solve_only: usize::MAX,
+            },
+            MbcgOptions {
+                max_iters: nb,
+                tol: 1e-2,
+                n_solve_only: usize::MAX,
+            },
+        ];
+        let mut ws = MbcgWorkspace::new();
+        let (res, _) = mbcg_batch_hetero_ws(&batch, &[&ba, &bb], &preconds, &opts, &mut ws);
+        assert!(
+            res[1].iterations < res[0].iterations,
+            "loose-tol block must drop out of the fused loop early: {} vs {}",
+            res[1].iterations,
+            res[0].iterations
+        );
+        assert!(res[0].final_residuals.iter().all(|&r| r < 1e-11));
+        assert!(res[1].final_residuals.iter().all(|&r| r < 1e-2));
     }
 }

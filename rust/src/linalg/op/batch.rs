@@ -88,6 +88,33 @@ impl<'a> BatchOp<'a> {
         }
     }
 
+    /// Stack operators of **different** shapes (heterogeneous serving:
+    /// tenants of different n, different model families, one batch).
+    /// Always the elementwise representation — there is no shared
+    /// covariance across sizes — so every batched product dispatches each
+    /// element's own structured `matmul_into`. Consumers that size
+    /// per-element buffers must use [`BatchOp::element_n`], not
+    /// [`BatchOp::n`].
+    pub fn hetero(elements: Vec<&'a dyn LinearOp>) -> Self {
+        assert!(!elements.is_empty(), "BatchOp: empty batch");
+        for &e in &elements {
+            let (r, c) = e.shape();
+            assert_eq!(r, c, "BatchOp: hetero elements must be square");
+        }
+        BatchOp {
+            repr: Repr::General(elements),
+        }
+    }
+
+    /// Dimension of element `i` (elements of a [`BatchOp::hetero`] batch
+    /// differ; for uniform batches this equals [`BatchOp::n`]).
+    pub fn element_n(&self, i: usize) -> usize {
+        match &self.repr {
+            Repr::General(els) => els[i].n(),
+            Repr::Shared { cov, .. } => cov.n(),
+        }
+    }
+
     /// The explicit shared fast path: element `i` is `cov + sigma2s[i]·I`.
     pub fn shared(cov: &'a dyn LinearOp, sigma2s: Vec<f64>) -> Self {
         assert!(!sigma2s.is_empty(), "BatchOp: empty batch");
@@ -184,7 +211,6 @@ impl<'a> BatchOp<'a> {
     /// implementation of the shared-path pack/multiply/unpack.
     pub fn matmul_subset(&self, idx: &[usize], ms: &[&Mat]) -> Vec<Mat> {
         assert_eq!(idx.len(), ms.len());
-        let n = self.n();
         let slots = idx.iter().map(|&i| i + 1).max().unwrap_or(0);
         let mut pos = vec![usize::MAX; slots];
         for (k, &i) in idx.iter().enumerate() {
@@ -196,7 +222,7 @@ impl<'a> BatchOp<'a> {
                 if pos[i] == usize::MAX {
                     Mat::zeros(0, 0)
                 } else {
-                    Mat::zeros(n, ms[pos[i]].cols())
+                    Mat::zeros(self.element_n(i), ms[pos[i]].cols())
                 }
             })
             .collect();
@@ -448,6 +474,28 @@ mod tests {
         for k in 0..3 {
             assert!(got[k].max_abs_diff(&want_dense[k].matmul(&m)) < 1e-10, "element {k}");
         }
+    }
+
+    #[test]
+    fn hetero_batch_applies_per_element_shapes() {
+        let a = DenseOp::new(spd(9, 21));
+        let b = DenseOp::new(spd(14, 22));
+        let batch = BatchOp::hetero(vec![&a as &dyn LinearOp, &b as &dyn LinearOp]);
+        assert!(!batch.is_shared());
+        assert_eq!(batch.len(), 2);
+        assert_eq!(batch.element_n(0), 9);
+        assert_eq!(batch.element_n(1), 14);
+        let mut rng = Rng::new(23);
+        let m1 = Mat::from_fn(9, 2, |_, _| rng.normal());
+        let m2 = Mat::from_fn(14, 3, |_, _| rng.normal());
+        let got = batch.matmul_multi(&[&m1, &m2]);
+        assert!(got[0].max_abs_diff(&a.matmul(&m1)) == 0.0);
+        assert!(got[1].max_abs_diff(&b.matmul(&m2)) == 0.0);
+        // subsets preserve per-element shapes
+        let sub = batch.subset(&[1]);
+        assert_eq!(sub.element_n(0), 14);
+        let got = sub.matmul_subset(&[0], &[&m2]);
+        assert!(got[0].max_abs_diff(&b.matmul(&m2)) == 0.0);
     }
 
     #[test]

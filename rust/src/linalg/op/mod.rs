@@ -26,6 +26,7 @@
 //! its deprecated re-export has been removed — import [`LinearOp`].)
 
 pub mod batch;
+pub mod blockdiag;
 pub mod cache;
 pub mod compose;
 pub mod interp;
@@ -36,6 +37,7 @@ pub mod solve;
 pub mod structured;
 
 pub use batch::{lift_added_diag, lift_low_rank, lift_scaled, lift_sum, BatchOp};
+pub use blockdiag::BlockDiagOp;
 pub use cache::SolvePlanCache;
 pub use compose::{AddedDiagOp, DiagOp, ScaledOp, SumOp};
 pub use interp::{InterpOp, SparseInterp};
@@ -44,8 +46,8 @@ pub use mmm::{MmmPlan, Precision};
 pub use sharded::ShardedOp;
 pub use solve::{
     build_preconditioner, build_preconditioner_batch, plan, plan_batch, solve, solve_batch,
-    solve_batch_ws, solve_cached, solve_strategy, solve_with, CirculantPlan, SolveOptions,
-    SolvePlan,
+    solve_batch_hetero_ws, solve_batch_ws, solve_cached, solve_strategy, solve_with,
+    CirculantPlan, PlanPrecond, SolveOptions, SolvePlan,
 };
 pub use structured::{KroneckerOp, ToeplitzLinOp};
 

@@ -14,9 +14,9 @@
 //! abort the process mid-serve with a panic).
 
 use bbmm_gp::coordinator::{
-    multi_served_predictor, multi_served_predictor_love, serve_with_love, served_predictor,
-    served_predictor_love, BatchPolicy, DynamicBatcher, LoveServeCtx, ServableModel, ServerConfig,
-    TenantSpec,
+    multi_served_predictor, multi_served_predictor_fused, multi_served_predictor_love,
+    serve_with_love, served_predictor, served_predictor_love, BatchPolicy, DynamicBatcher,
+    LoveServeCtx, Metrics, ServableModel, ServerConfig, TenantSpec,
 };
 use bbmm_gp::data::synthetic::{generate, spec_by_name};
 use bbmm_gp::gp::exact::{Engine, ExactGp};
@@ -76,6 +76,7 @@ fn main() {
         "sweep" => cmd_sweep(&args),
         "predict" => cmd_predict(&args),
         "serve" => cmd_serve(&args),
+        "bench-serve" => cmd_bench_serve(&args),
         "shard-worker" => cmd_shard_worker(&args),
         "run" => cmd_run(&args),
         "artifact" => {
@@ -185,6 +186,10 @@ fn print_help() {
                      --noises s1,s2,… for a shared-covariance sweep)\n\
            predict   train then evaluate test MAE/RMSE\n\
            serve     train a model and serve predictions over TCP\n\
+           bench-serve  closed-loop serving benchmark: N concurrent TCP\n\
+                     clients over a heterogeneous tenant mix (mixed n,\n\
+                     mixed family), fused-tick vs per-group-solve servers,\n\
+                     parity-gated; writes results/BENCH_serve.json\n\
            shard-worker  (internal) shard-product worker process, forked\n\
                      by --backend proc:N — not for interactive use\n\
            artifact  load + execute an AOT HLO artifact via PJRT\n\
@@ -227,8 +232,21 @@ fn print_help() {
            --plan-cache-cap N --plan-cache-ttl-s S   (serve: bound the\n\
                                multi-tenant solve-plan cache: LRU + TTL)\n\
            --tenant name=model[@dataset]   (serve: repeatable; host many\n\
-                               models behind one batched BatchOp solve,\n\
-                               routed by the `name:` line-protocol prefix)\n\
+                               models behind ONE fused iterative solve per\n\
+                               batching tick — mixed sizes and families\n\
+                               share the loop — routed by the `name:`\n\
+                               line-protocol prefix)\n\
+           --grouped           (serve: revert the multi-tenant tick to one\n\
+                               solve per distinct training size instead of\n\
+                               the fused heterogeneous solve)\n\
+           --deadline-ms D     (serve: deadline class for every tenant —\n\
+                               requests that cannot meet it are shed with\n\
+                               `ERR deadline …` at admission or fast-failed\n\
+                               in queue; 0 = no deadlines)\n\
+           --tenant-deadline name=ms   (serve: repeatable per-tenant\n\
+                               deadline class, overrides --deadline-ms)\n\
+           --clients C --requests R    (bench-serve: closed-loop drivers\n\
+                               and requests per driver)\n\
            --love-rank R       (serve: LOVE posterior-cache rank, default\n\
                                64 — predictions and the VAR/SAMPLE verbs\n\
                                answer in O(n·R) from cached factors;\n\
@@ -770,6 +788,13 @@ fn cmd_serve(args: &Args) -> Result<(), CliError> {
         max_batch: args.usize_or("max-batch", 64)?,
         max_wait: std::time::Duration::from_millis(args.u64_or("max-wait-ms", 2)?),
         max_queue: args.usize_or("max-queue", 1024)?,
+        // --deadline-ms D arms admission control: requests whose deadline
+        // cannot be met at the current queue depth are shed with an
+        // `ERR deadline …` line instead of queueing doomed work
+        default_deadline: match args.u64_or("deadline-ms", 0)? {
+            0 => None,
+            ms => Some(std::time::Duration::from_millis(ms)),
+        },
     };
     // LOVE posterior cache: on by default — predictions (and the VAR /
     // SAMPLE verbs) answer from cached rank-r factors in O(n·r) instead
@@ -866,10 +891,7 @@ fn cmd_serve(args: &Args) -> Result<(), CliError> {
             );
             let model = build_servable(&targs, &ds)?;
             described.push(format!("{name}={}", model.describe()));
-            specs.push(TenantSpec {
-                name: name.to_string(),
-                dim: ds.dim(),
-            });
+            specs.push(TenantSpec::new(name, ds.dim()));
             dims.push(ds.dim());
             models.push((name.to_string(), model));
             // only exact tenants consume --shards (build_servable reads it)
@@ -877,8 +899,30 @@ fn cmd_serve(args: &Args) -> Result<(), CliError> {
                 max_shards = max_shards.max(targs.usize_or("shards", 1)?);
             }
         }
+        // per-tenant deadline classes: `--tenant-deadline name=ms`
+        // (repeatable) overrides the policy-wide --deadline-ms for that
+        // tenant's requests
+        for td in args.get_all("tenant-deadline") {
+            let err = |message: String| CliError {
+                flag: "tenant-deadline".to_string(),
+                message,
+            };
+            let (name, ms) = td
+                .split_once('=')
+                .ok_or_else(|| err(format!("expected name=ms, got {td:?}")))?;
+            let ms: u64 = ms
+                .trim()
+                .parse()
+                .map_err(|e| err(format!("bad deadline in {td:?}: {e}")))?;
+            let spec = specs
+                .iter_mut()
+                .find(|s| s.name == name)
+                .ok_or_else(|| err(format!("unknown tenant {name:?}")))?;
+            spec.deadline = Some(std::time::Duration::from_millis(ms));
+        }
         let cap = args.usize_or("plan-cache-cap", 0)?;
         let ttl_s = args.f64_or("plan-cache-ttl-s", 0.0)?;
+        let metrics = Arc::new(Metrics::new());
         let (predictor, love_ctx) = if love_enabled {
             let arcs: Vec<(String, Arc<dyn ServableModel>)> = models
                 .into_iter()
@@ -897,9 +941,20 @@ fn cmd_serve(args: &Args) -> Result<(), CliError> {
                 (cap > 0).then_some(cap),
                 (ttl_s > 0.0).then(|| std::time::Duration::from_secs_f64(ttl_s)),
             ));
-            (multi_served_predictor(models, solve_opts, cache), None)
+            // the heterogeneous hot path: ONE fused iterative solve per
+            // tick across every tenant (mixed n, mixed family), counted on
+            // the shared metrics; --grouped restores one solve per
+            // distinct n per tick
+            let p = if args.flag("grouped") {
+                multi_served_predictor(models, solve_opts, cache)
+            } else {
+                multi_served_predictor_fused(models, solve_opts, cache, Arc::clone(&metrics))
+            };
+            (p, None)
         };
-        let batcher = Arc::new(DynamicBatcher::new_multi(specs, policy, predictor));
+        let batcher = Arc::new(DynamicBatcher::new_multi_with_metrics(
+            specs, policy, predictor, metrics,
+        ));
         (batcher, love_ctx, described.join(" | "), max_shards, dims)
     };
     let config = ServerConfig {
@@ -913,11 +968,16 @@ fn cmd_serve(args: &Args) -> Result<(), CliError> {
         config.operator
     );
     match &love_ctx {
-        Some(ctx) => println!(
-            "love: rank={} ({} tenant posteriors cached; VAR/SAMPLE enabled)",
-            ctx.rank(),
-            ctx.tenant_count()
-        ),
+        Some(ctx) => {
+            // prime every tenant's posterior before the socket binds: the
+            // first request pays two skinny GEMMs, not a factorisation
+            ctx.prime();
+            println!(
+                "love: rank={} ({} tenant posteriors primed; VAR/SAMPLE enabled)",
+                ctx.rank(),
+                ctx.tenant_count()
+            )
+        }
         None => println!("love: disabled (per-query solve path; VAR/SAMPLE return ERR)"),
     }
     println!(
@@ -929,6 +989,262 @@ fn cmd_serve(args: &Args) -> Result<(), CliError> {
     );
     serve_with_love(config, batcher, love_ctx, |addr| println!("listening on {addr}"))
         .expect("server failed");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// bench-serve: closed-loop TCP benchmark over a heterogeneous tenant mix.
+// ---------------------------------------------------------------------------
+
+/// Synthetic inputs/targets for one bench tenant (d = 3).
+fn bench_serve_xy(n: usize, seed: u64) -> (Mat, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let x = Mat::from_fn(n, 3, |_, _| rng.uniform_in(-1.0, 1.0));
+    let y: Vec<f64> = (0..n)
+        .map(|i| (3.0 * x.get(i, 0)).sin() - 0.5 * x.get(i, 1) + 0.3 * x.get(i, 2))
+        .collect();
+    (x, y)
+}
+
+/// The heterogeneous tenant mix: two exact tenants with different
+/// training sizes plus an SGPR tenant (Woodbury direct plan) — ≥2 sizes
+/// AND ≥2 model families, so a mixed tick exercises the fused path's full
+/// generality. Deterministic, so every call builds identical models.
+fn bench_serve_models(quick: bool) -> Vec<(String, Box<dyn ServableModel>)> {
+    let (n_small, n_large, n_sgpr) = if quick { (120, 240, 160) } else { (240, 480, 320) };
+    let exact = |n: usize, seed: u64, matern: bool| -> Box<dyn ServableModel> {
+        let (x, y) = bench_serve_xy(n, seed);
+        let kernel: Box<dyn bbmm_gp::kernels::Kernel> = if matern {
+            Box::new(Matern52::new(0.6, 0.9))
+        } else {
+            Box::new(Rbf::new(0.5, 1.0))
+        };
+        let cov: Box<dyn KernelCov> = Box::new(KernelCovOp::new(x, kernel));
+        Box::new(ExactServable {
+            op: AddedDiagOp::new(cov, 0.05),
+            y,
+            backend: None,
+        })
+    };
+    let sgpr = |n: usize, seed: u64| -> Box<dyn ServableModel> {
+        let (x, y) = bench_serve_xy(n, seed);
+        let mut rng = Rng::new(seed + 7);
+        let m = 40.min(n);
+        let mut u = Mat::zeros(m, 3);
+        for r in 0..m {
+            u.row_mut(r).copy_from_slice(x.row(rng.below(n)));
+        }
+        Box::new(SgprServable {
+            op: SgprOp::new(x, u, Box::new(Rbf::new(0.5, 1.0)), 0.1),
+            y,
+        })
+    };
+    vec![
+        ("small".to_string(), exact(n_small, 11, false)),
+        ("large".to_string(), exact(n_large, 22, true)),
+        ("sgpr".to_string(), sgpr(n_sgpr, 33)),
+    ]
+}
+
+/// One closed-loop run: serve the tenant mix with the given predictor
+/// flavour, drive it with `clients` concurrent TCP clients of `requests`
+/// requests each (round-robin over tenants), and report rates.
+struct ServeRun {
+    qps: f64,
+    p50_us: f64,
+    p99_us: f64,
+    ticks: u64,
+    fused_ticks: u64,
+    fused_blocks: u64,
+}
+
+fn run_serve_loop(fused: bool, quick: bool, clients: usize, requests: usize) -> ServeRun {
+    use std::io::{BufRead, BufReader, Write};
+    use std::sync::atomic::Ordering;
+    let opts = SolveOptions {
+        max_iters: 400,
+        tol: 1e-10,
+        precond_rank: 5,
+    };
+    let models = bench_serve_models(quick);
+    let specs: Vec<TenantSpec> =
+        models.iter().map(|(name, _)| TenantSpec::new(name.clone(), 3)).collect();
+    let metrics = Arc::new(Metrics::new());
+    let cache = Arc::new(SolvePlanCache::new());
+    let predictor = if fused {
+        multi_served_predictor_fused(models, opts, cache, Arc::clone(&metrics))
+    } else {
+        multi_served_predictor(models, opts, cache)
+    };
+    let policy = BatchPolicy {
+        max_batch: 64,
+        max_wait: std::time::Duration::from_millis(1),
+        ..BatchPolicy::default()
+    };
+    let batcher = Arc::new(DynamicBatcher::new_multi_with_metrics(
+        specs, policy, predictor, metrics,
+    ));
+    let stop = Arc::new(AtomicBool::new(false));
+    let config = ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        operator: String::new(),
+        shard_count: 1,
+        stop: Arc::clone(&stop),
+    };
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let srv = {
+        let b = Arc::clone(&batcher);
+        std::thread::spawn(move || {
+            serve_with_love(config, b, None, move |addr| {
+                addr_tx.send(addr).unwrap();
+            })
+            .unwrap();
+        })
+    };
+    let addr = addr_rx.recv().unwrap();
+    let lines = [
+        "small:0.2,-0.4,0.1\n".to_string(),
+        "large:-0.3,0.5,0.2\n".to_string(),
+        "sgpr:0.1,0.3,-0.5\n".to_string(),
+    ];
+    let timer = Timer::start();
+    let mut drivers = Vec::new();
+    for c in 0..clients {
+        let lines = lines.clone();
+        drivers.push(std::thread::spawn(move || {
+            let conn = std::net::TcpStream::connect(addr).unwrap();
+            let mut writer = conn.try_clone().unwrap();
+            let mut reader = BufReader::new(conn);
+            for r in 0..requests {
+                writer.write_all(lines[(c + r) % lines.len()].as_bytes()).unwrap();
+                let mut resp = String::new();
+                reader.read_line(&mut resp).unwrap();
+                assert!(!resp.starts_with("ERR"), "serve error: {resp}");
+            }
+        }));
+    }
+    for d in drivers {
+        d.join().unwrap();
+    }
+    let elapsed = timer.elapsed_s().max(1e-9);
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    srv.join().unwrap();
+    let m = &batcher.metrics;
+    ServeRun {
+        qps: (clients * requests) as f64 / elapsed,
+        p50_us: m.quantile_latency_us(0.5),
+        p99_us: m.quantile_latency_us(0.99),
+        ticks: m.batches.load(Ordering::Relaxed),
+        fused_ticks: m.fused_solves.load(Ordering::Relaxed),
+        fused_blocks: m.fused_blocks.load(Ordering::Relaxed),
+    }
+}
+
+/// `bbmm bench-serve`: parity-gate the fused heterogeneous tick against
+/// the per-group-solve tick on identical mixed blocks, then drive both
+/// servers closed-loop over TCP and report QPS + the fused-vs-grouped
+/// speedup. Writes `results/BENCH_serve.json` (gated in CI against
+/// `rust/benches/BENCH_serve_baseline.json`).
+fn cmd_bench_serve(args: &Args) -> Result<(), CliError> {
+    use bbmm_gp::coordinator::TenantBatch;
+    let quick = args.flag("quick") || std::env::var("BBMM_BENCH_QUICK").is_ok();
+    let clients = args.usize_or("clients", if quick { 4 } else { 8 })?;
+    let requests = args.usize_or("requests", if quick { 50 } else { 250 })?;
+    let opts = SolveOptions {
+        max_iters: 400,
+        tol: 1e-10,
+        precond_rank: 5,
+    };
+
+    // parity gate BEFORE timing: the fused tick must reproduce the
+    // per-group tick on an identical mixed-tenant block set
+    let fused_p = multi_served_predictor_fused(
+        bench_serve_models(quick),
+        opts,
+        Arc::new(SolvePlanCache::new()),
+        Arc::new(Metrics::new()),
+    );
+    let grouped_p = multi_served_predictor(
+        bench_serve_models(quick),
+        opts,
+        Arc::new(SolvePlanCache::new()),
+    );
+    let probes = [
+        vec![0.2, -0.4, 0.1],
+        vec![-0.3, 0.5, 0.2],
+        vec![0.1, 0.3, -0.5],
+    ];
+    let blocks: Vec<TenantBatch> = probes
+        .iter()
+        .enumerate()
+        .map(|(t, p)| TenantBatch {
+            tenant: t,
+            xs: Mat::from_vec(1, 3, p.clone()),
+        })
+        .collect();
+    let want = grouped_p(&blocks);
+    let got = fused_p(&blocks);
+    for (t, (g, w)) in got.iter().zip(&want).enumerate() {
+        for (a, b) in g.mean.iter().zip(&w.mean).chain(g.var.iter().zip(&w.var)) {
+            let rel = (a - b).abs() / b.abs().max(1e-12);
+            assert!(rel < 1e-8, "tenant {t}: fused/grouped diverged ({a} vs {b})");
+        }
+    }
+    println!("parity: fused tick matches per-group tick on a mixed block set (<1e-8 rel)");
+
+    println!(
+        "bench-serve: clients={clients} requests={requests} quick={quick} \
+         tenants=small(exact)+large(exact)+sgpr"
+    );
+    let grouped = run_serve_loop(false, quick, clients, requests);
+    let fused = run_serve_loop(true, quick, clients, requests);
+    assert!(fused.fused_ticks > 0, "fused run recorded no fused solves");
+    let speedup = fused.qps / grouped.qps.max(1e-9);
+    println!(
+        "grouped: {:.0} qps p50={:.0}us p99={:.0}us ticks={}",
+        grouped.qps, grouped.p50_us, grouped.p99_us, grouped.ticks
+    );
+    println!(
+        "fused:   {:.0} qps p50={:.0}us p99={:.0}us ticks={} \
+         fused_ticks={} mean_occupancy={:.2} blocks/tick",
+        fused.qps,
+        fused.p50_us,
+        fused.p99_us,
+        fused.ticks,
+        fused.fused_ticks,
+        fused.fused_blocks as f64 / fused.fused_ticks.max(1) as f64
+    );
+    println!("fused-vs-grouped speedup: {speedup:.2}x");
+
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"bench\": \"serve\",\n");
+    out.push_str(
+        "  \"comment\": \"closed-loop TCP serving over a heterogeneous tenant mix \
+         (two exact sizes + sgpr); fused = one iterative solve per tick across all \
+         tenants, grouped = one solve per distinct training size; parity-gated \
+         before timing\",\n",
+    );
+    out.push_str(&format!("  \"clients\": {clients},\n"));
+    out.push_str(&format!("  \"requests_per_client\": {requests},\n"));
+    out.push_str("  \"cases\": [\n");
+    out.push_str(&format!(
+        "    {{\"name\": \"grouped\", \"qps\": {:.2}, \"p50_us\": {:.0}, \
+         \"p99_us\": {:.0}, \"ticks\": {}}},\n",
+        grouped.qps, grouped.p50_us, grouped.p99_us, grouped.ticks
+    ));
+    out.push_str(&format!(
+        "    {{\"name\": \"fused\", \"qps\": {:.2}, \"p50_us\": {:.0}, \
+         \"p99_us\": {:.0}, \"ticks\": {}, \"fused_ticks\": {}, \
+         \"fused_blocks\": {}, \"speedup\": {:.3}}}\n",
+        fused.qps, fused.p50_us, fused.p99_us, fused.ticks, fused.fused_ticks,
+        fused.fused_blocks, speedup
+    ));
+    out.push_str("  ]\n");
+    out.push_str("}\n");
+    std::fs::create_dir_all("results").expect("create results dir");
+    std::fs::write("results/BENCH_serve.json", out).expect("write BENCH_serve.json");
+    println!("wrote results/BENCH_serve.json");
     Ok(())
 }
 

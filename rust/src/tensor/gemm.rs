@@ -43,7 +43,7 @@ pub const KB: usize = 256;
 /// # Safety
 /// Caller must ensure `T` and `U` are the same type (checked by the
 /// `TypeId` guard at every call site) — then this is a no-op transmute.
-unsafe fn cast_slice<T: 'static, U: 'static>(s: &[T]) -> &[U] {
+pub(crate) unsafe fn cast_slice<T: 'static, U: 'static>(s: &[T]) -> &[U] {
     debug_assert_eq!(TypeId::of::<T>(), TypeId::of::<U>());
     std::slice::from_raw_parts(s.as_ptr() as *const U, s.len())
 }

@@ -13,23 +13,31 @@ pub mod simd;
 pub use mat::Mat;
 pub use scalar::Scalar;
 
-/// Column-stacked vector helpers over flat `Vec<f64>`s, unrolled to four
-/// independent accumulator/FMA chains (a single chain serialises on add
-/// latency — the mBCG α/β reductions are exactly these calls).
+/// Column-stacked vector helpers over flat `Vec<f64>`s, dispatched through
+/// [`super::simd`] (AVX2/NEON FMA chains) with a four-accumulator portable
+/// fallback — the mBCG α/β reductions are exactly these calls.
 pub mod vecops {
-    /// dot product (four-accumulator unroll — see [`crate::tensor::gemm::dot`])
+    /// dot product — SIMD when the dispatcher has an arm, else the
+    /// four-accumulator unroll in [`crate::tensor::gemm::dot`]
     #[inline]
     pub fn dot(a: &[f64], b: &[f64]) -> f64 {
         debug_assert_eq!(a.len(), b.len());
-        super::gemm::dot(a, b)
+        match super::simd::dot_f64(a, b) {
+            Some(s) => s,
+            None => super::gemm::dot(a, b),
+        }
     }
 
-    /// y += alpha * x, four independent update streams per pass
+    /// y += alpha * x — SIMD FMA stores when dispatched, else four
+    /// independent update streams per pass
     #[inline]
     pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
         // equal lengths are the contract; a mismatch must fail loudly (the
         // indexing below panics), never silently truncate the update
         debug_assert_eq!(x.len(), y.len());
+        if super::simd::axpy_f64(alpha, x, y) {
+            return;
+        }
         let n = x.len();
         let end = n - n % 4;
         let mut i = 0;

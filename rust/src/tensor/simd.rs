@@ -254,6 +254,81 @@ pub fn exp_f32_prefix(x: &mut [f32]) -> usize {
     }
 }
 
+/// Contiguous f64 dot product through the active SIMD arm (four FMA
+/// accumulator chains, matching the portable kernel's latency hiding).
+/// Returns `None` under scalar dispatch — the caller runs the portable
+/// 4-accumulator kernel instead. The mBCG α/β reductions and
+/// `vecops::dot` route through here.
+#[inline]
+pub fn dot_f64(a: &[f64], b: &[f64]) -> Option<f64> {
+    debug_assert_eq!(a.len(), b.len());
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: detection confirmed avx2+fma on this CPU
+        Dispatch::Avx2Fma => Some(unsafe { avx2::dot_f64(a, b) }),
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64
+        Dispatch::Neon => Some(unsafe { neon::dot_f64(a, b) }),
+        _ => {
+            let _ = (&a, &b);
+            None
+        }
+    }
+}
+
+/// `y += α·x` in f64 through the active SIMD arm. Returns `false` under
+/// scalar dispatch — the caller runs the portable unrolled loop.
+#[inline]
+pub fn axpy_f64(alpha: f64, x: &[f64], y: &mut [f64]) -> bool {
+    debug_assert_eq!(x.len(), y.len());
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: detection confirmed avx2+fma on this CPU
+        Dispatch::Avx2Fma => {
+            unsafe { avx2::axpy_f64(alpha, x, y) };
+            true
+        }
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64
+        Dispatch::Neon => {
+            unsafe { neon::axpy_f64(alpha, x, y) };
+            true
+        }
+        _ => {
+            let _ = (alpha, &x, &y);
+            false
+        }
+    }
+}
+
+/// Strided f64 dot: `Σₖ a[offset + k·stride] · b[offset + k·stride]` for
+/// `k ∈ [0, count)` — one matrix column of a row-major `count×stride`
+/// buffer. Vectorised only on AVX2 (lane-composed loads + FMA chains);
+/// NEON has no gather and its 2-lane compose gains nothing over the
+/// portable 4-accumulator kernel, so it returns `None` like scalar
+/// dispatch. Never allocates — safe inside the mBCG zero-alloc loop.
+#[inline]
+pub fn dot_strided_f64(
+    a: &[f64],
+    b: &[f64],
+    offset: usize,
+    stride: usize,
+    count: usize,
+) -> Option<f64> {
+    debug_assert!(stride > 0);
+    debug_assert!(count == 0 || offset + (count - 1) * stride < a.len());
+    debug_assert!(count == 0 || offset + (count - 1) * stride < b.len());
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: detection confirmed avx2+fma on this CPU; bounds checked above
+        Dispatch::Avx2Fma => Some(unsafe { avx2::dot_strided_f64(a, b, offset, stride, count) }),
+        _ => {
+            let _ = (&a, &b, offset, stride, count);
+            None
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // AVX2 + FMA arm (x86_64)
 // ---------------------------------------------------------------------------
@@ -563,6 +638,128 @@ mod avx2 {
         }
         len
     }
+
+    /// Horizontal sum of a 4-lane f64 vector.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn hsum_pd(v: __m256d) -> f64 {
+        let hi = _mm256_extractf128_pd::<1>(v);
+        let lo = _mm256_castpd256_pd128(v);
+        let s = _mm_add_pd(lo, hi);
+        _mm_cvtsd_f64(_mm_add_sd(s, _mm_unpackhi_pd(s, s)))
+    }
+
+    /// Contiguous dot with four 4-lane FMA chains (16 elements in flight).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot_f64(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len();
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc0 = _mm256_setzero_pd();
+        let mut acc1 = _mm256_setzero_pd();
+        let mut acc2 = _mm256_setzero_pd();
+        let mut acc3 = _mm256_setzero_pd();
+        let mut i = 0;
+        while i + 16 <= n {
+            acc0 = _mm256_fmadd_pd(_mm256_loadu_pd(pa.add(i)), _mm256_loadu_pd(pb.add(i)), acc0);
+            acc1 = _mm256_fmadd_pd(
+                _mm256_loadu_pd(pa.add(i + 4)),
+                _mm256_loadu_pd(pb.add(i + 4)),
+                acc1,
+            );
+            acc2 = _mm256_fmadd_pd(
+                _mm256_loadu_pd(pa.add(i + 8)),
+                _mm256_loadu_pd(pb.add(i + 8)),
+                acc2,
+            );
+            acc3 = _mm256_fmadd_pd(
+                _mm256_loadu_pd(pa.add(i + 12)),
+                _mm256_loadu_pd(pb.add(i + 12)),
+                acc3,
+            );
+            i += 16;
+        }
+        while i + 4 <= n {
+            acc0 = _mm256_fmadd_pd(_mm256_loadu_pd(pa.add(i)), _mm256_loadu_pd(pb.add(i)), acc0);
+            i += 4;
+        }
+        let mut s = hsum_pd(_mm256_add_pd(_mm256_add_pd(acc0, acc1), _mm256_add_pd(acc2, acc3)));
+        while i < n {
+            s += *pa.add(i) * *pb.add(i);
+            i += 1;
+        }
+        s
+    }
+
+    /// `y += α·x`, two 4-lane FMA stores per step.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn axpy_f64(alpha: f64, x: &[f64], y: &mut [f64]) {
+        let n = x.len();
+        let (px, py) = (x.as_ptr(), y.as_mut_ptr());
+        let av = _mm256_set1_pd(alpha);
+        let mut i = 0;
+        while i + 8 <= n {
+            let p0 = py.add(i);
+            let p1 = py.add(i + 4);
+            _mm256_storeu_pd(
+                p0,
+                _mm256_fmadd_pd(av, _mm256_loadu_pd(px.add(i)), _mm256_loadu_pd(p0)),
+            );
+            _mm256_storeu_pd(
+                p1,
+                _mm256_fmadd_pd(av, _mm256_loadu_pd(px.add(i + 4)), _mm256_loadu_pd(p1)),
+            );
+            i += 8;
+        }
+        while i + 4 <= n {
+            let p0 = py.add(i);
+            _mm256_storeu_pd(
+                p0,
+                _mm256_fmadd_pd(av, _mm256_loadu_pd(px.add(i)), _mm256_loadu_pd(p0)),
+            );
+            i += 4;
+        }
+        while i < n {
+            *py.add(i) += alpha * *px.add(i);
+            i += 1;
+        }
+    }
+
+    /// Strided column dot: lane-composed loads (`set_pd` of four strided
+    /// scalars — cheaper and safer than a gather on every µarch this
+    /// targets) feeding two FMA chains.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot_strided_f64(
+        a: &[f64],
+        b: &[f64],
+        offset: usize,
+        stride: usize,
+        count: usize,
+    ) -> f64 {
+        let pa = a.as_ptr().add(offset);
+        let pb = b.as_ptr().add(offset);
+        let mut acc0 = _mm256_setzero_pd();
+        let mut acc1 = _mm256_setzero_pd();
+        let mut k = 0;
+        while k + 8 <= count {
+            let qa = pa.add(k * stride);
+            let qb = pb.add(k * stride);
+            // set_pd takes lanes high-to-low
+            let va0 = _mm256_set_pd(*qa.add(3 * stride), *qa.add(2 * stride), *qa.add(stride), *qa);
+            let vb0 = _mm256_set_pd(*qb.add(3 * stride), *qb.add(2 * stride), *qb.add(stride), *qb);
+            let qa = qa.add(4 * stride);
+            let qb = qb.add(4 * stride);
+            let va1 = _mm256_set_pd(*qa.add(3 * stride), *qa.add(2 * stride), *qa.add(stride), *qa);
+            let vb1 = _mm256_set_pd(*qb.add(3 * stride), *qb.add(2 * stride), *qb.add(stride), *qb);
+            acc0 = _mm256_fmadd_pd(va0, vb0, acc0);
+            acc1 = _mm256_fmadd_pd(va1, vb1, acc1);
+            k += 8;
+        }
+        let mut s = hsum_pd(_mm256_add_pd(acc0, acc1));
+        while k < count {
+            s += *pa.add(k * stride) * *pb.add(k * stride);
+            k += 1;
+        }
+        s
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -867,6 +1064,60 @@ mod neon {
         }
         len
     }
+
+    /// Contiguous dot with four 2-lane FMA chains (8 elements in flight).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_f64(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len();
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc0 = vdupq_n_f64(0.0);
+        let mut acc1 = vdupq_n_f64(0.0);
+        let mut acc2 = vdupq_n_f64(0.0);
+        let mut acc3 = vdupq_n_f64(0.0);
+        let mut i = 0;
+        while i + 8 <= n {
+            acc0 = vfmaq_f64(acc0, vld1q_f64(pa.add(i)), vld1q_f64(pb.add(i)));
+            acc1 = vfmaq_f64(acc1, vld1q_f64(pa.add(i + 2)), vld1q_f64(pb.add(i + 2)));
+            acc2 = vfmaq_f64(acc2, vld1q_f64(pa.add(i + 4)), vld1q_f64(pb.add(i + 4)));
+            acc3 = vfmaq_f64(acc3, vld1q_f64(pa.add(i + 6)), vld1q_f64(pb.add(i + 6)));
+            i += 8;
+        }
+        while i + 2 <= n {
+            acc0 = vfmaq_f64(acc0, vld1q_f64(pa.add(i)), vld1q_f64(pb.add(i)));
+            i += 2;
+        }
+        let mut s = vaddvq_f64(vaddq_f64(vaddq_f64(acc0, acc1), vaddq_f64(acc2, acc3)));
+        while i < n {
+            s += *pa.add(i) * *pb.add(i);
+            i += 1;
+        }
+        s
+    }
+
+    /// `y += α·x`, two 2-lane FMA stores per step.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy_f64(alpha: f64, x: &[f64], y: &mut [f64]) {
+        let n = x.len();
+        let (px, py) = (x.as_ptr(), y.as_mut_ptr());
+        let av = vdupq_n_f64(alpha);
+        let mut i = 0;
+        while i + 4 <= n {
+            let p0 = py.add(i);
+            let p1 = py.add(i + 2);
+            vst1q_f64(p0, vfmaq_f64(vld1q_f64(p0), av, vld1q_f64(px.add(i))));
+            vst1q_f64(p1, vfmaq_f64(vld1q_f64(p1), av, vld1q_f64(px.add(i + 2))));
+            i += 4;
+        }
+        while i + 2 <= n {
+            let p0 = py.add(i);
+            vst1q_f64(p0, vfmaq_f64(vld1q_f64(p0), av, vld1q_f64(px.add(i))));
+            i += 2;
+        }
+        while i < n {
+            *py.add(i) += alpha * *px.add(i);
+            i += 1;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -986,5 +1237,77 @@ mod tests {
             let rel = ((xs32[i] - want32[i]) / want32[i]).abs();
             assert!(rel < 3e-7, "exp_f32[{i}] rel err {rel}");
         }
+    }
+
+    #[test]
+    fn simd_dot_matches_scalar() {
+        for &n in &[0usize, 1, 3, 4, 15, 16, 17, 64, 257] {
+            let a = rand_f64(n, 100 + n as u64);
+            let b = rand_f64(n, 200 + n as u64);
+            let Some(got) = dot_f64(&a, &b) else {
+                return; // scalar dispatch: nothing to compare against
+            };
+            let want: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!(
+                (got - want).abs() < 1e-12 * (1.0 + want.abs()),
+                "dot n={n}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn simd_axpy_matches_scalar() {
+        for &n in &[0usize, 1, 5, 8, 9, 64, 131] {
+            let x = rand_f64(n, 300 + n as u64);
+            let y0 = rand_f64(n, 400 + n as u64);
+            let mut y = y0.clone();
+            if !axpy_f64(0.37, &x, &mut y) {
+                return; // scalar dispatch
+            }
+            for i in 0..n {
+                let want = y0[i] + 0.37 * x[i];
+                assert!(
+                    (y[i] - want).abs() < 1e-14 * (1.0 + want.abs()),
+                    "axpy n={n} i={i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn simd_strided_dot_matches_scalar() {
+        for &(count, stride, offset) in
+            &[(1usize, 3usize, 0usize), (7, 1, 0), (8, 5, 2), (33, 4, 1), (50, 7, 3)]
+        {
+            let len = offset + (count - 1) * stride + 1;
+            let a = rand_f64(len, 500 + len as u64);
+            let b = rand_f64(len, 600 + len as u64);
+            let Some(got) = dot_strided_f64(&a, &b, offset, stride, count) else {
+                return; // scalar or NEON dispatch: no strided kernel
+            };
+            let want: f64 = (0..count)
+                .map(|k| a[offset + k * stride] * b[offset + k * stride])
+                .sum();
+            assert!(
+                (got - want).abs() < 1e-12 * (1.0 + want.abs()),
+                "strided ({count},{stride},{offset}): {got} vs {want}"
+            );
+        }
+    }
+
+    /// The dispatched vector ops must agree with the portable kernels under
+    /// the `BBMM_FORCE_SCALAR` toggle — the same guarantee the CI
+    /// forced-scalar job checks for the whole suite.
+    #[test]
+    fn forced_scalar_disables_vector_ops() {
+        let a = rand_f64(40, 900);
+        let b = rand_f64(40, 901);
+        set_forced_scalar(true);
+        assert!(dot_f64(&a, &b).is_none());
+        assert!(dot_strided_f64(&a, &b, 0, 2, 20).is_none());
+        let mut y = b.clone();
+        assert!(!axpy_f64(1.5, &a, &mut y));
+        assert_eq!(y, b, "scalar-dispatch axpy must not touch y");
+        set_forced_scalar(false);
     }
 }

@@ -91,16 +91,7 @@ fn two_tenant_deployment_answers_interleaved_requests_through_one_batch_path() {
     ];
     let predictor = multi_served_predictor(models, opts, Arc::clone(&cache));
     let batcher = Arc::new(DynamicBatcher::new_multi(
-        vec![
-            TenantSpec {
-                name: "alpha".into(),
-                dim: 2,
-            },
-            TenantSpec {
-                name: "beta".into(),
-                dim: 2,
-            },
-        ],
+        vec![TenantSpec::new("alpha", 2), TenantSpec::new("beta", 2)],
         BatchPolicy {
             max_batch: 32,
             max_wait: Duration::from_millis(25),

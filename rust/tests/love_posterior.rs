@@ -255,16 +255,7 @@ fn var_and_sample_verbs_roundtrip_through_a_two_tenant_deployment() {
     // match the dense reference to formatting precision
     let ctx = Arc::new(LoveServeCtx::new(models, n, tight_opts(), Arc::clone(&posteriors), 7));
     let batcher = Arc::new(DynamicBatcher::new_multi(
-        vec![
-            TenantSpec {
-                name: "alpha".into(),
-                dim: 2,
-            },
-            TenantSpec {
-                name: "beta".into(),
-                dim: 2,
-            },
-        ],
+        vec![TenantSpec::new("alpha", 2), TenantSpec::new("beta", 2)],
         BatchPolicy {
             max_batch: 32,
             max_wait: Duration::from_millis(25),

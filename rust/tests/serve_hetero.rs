@@ -1,0 +1,273 @@
+//! Heterogeneous serving hot path, end to end: block-diagonal operator
+//! parity, ONE fused iterative solve per mixed-tenant tick (verified via
+//! stats counters over TCP), deadline admission control's documented
+//! `ERR deadline` line, and backpressure counters round-tripping through
+//! the `STATS` verb.
+
+use bbmm_gp::coordinator::{
+    handle_request, multi_served_predictor_fused, serve, served_predictor_cached, BatchPolicy,
+    DynamicBatcher, Metrics, ServableModel, ServerConfig, TenantSpec,
+};
+use bbmm_gp::gp::predict::Prediction;
+use bbmm_gp::gp::SgprOp;
+use bbmm_gp::kernels::{DenseKernelOp, Matern52, Rbf};
+use bbmm_gp::linalg::op::{
+    solve, AddedDiagOp, BlockDiagOp, LinearOp, LowRankOp, SolveOptions, SolvePlanCache,
+};
+use bbmm_gp::tensor::Mat;
+use bbmm_gp::util::Rng;
+use std::io::{BufRead, BufReader, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Exact-GP tenant (dense kernel operator) behind the serving seam.
+struct ExactTenant {
+    op: DenseKernelOp,
+    y: Vec<f64>,
+}
+
+impl ServableModel for ExactTenant {
+    fn op(&self) -> &dyn LinearOp {
+        &self.op
+    }
+    fn cross(&self, xs: &Mat) -> Mat {
+        self.op.cross(xs, self.op.x())
+    }
+    fn prior_diag(&self, xs: &Mat) -> Vec<f64> {
+        (0..xs.rows())
+            .map(|i| self.op.kernel().eval(xs.row(i), xs.row(i)))
+            .collect()
+    }
+    fn y(&self) -> &[f64] {
+        &self.y
+    }
+}
+
+/// SGPR tenant — its plan is Woodbury **direct**, so a mixed tick with an
+/// exact tenant exercises two model families in one fused solve.
+struct SgprTenant {
+    op: SgprOp,
+    y: Vec<f64>,
+}
+
+impl ServableModel for SgprTenant {
+    fn op(&self) -> &dyn LinearOp {
+        &self.op
+    }
+    fn cross(&self, xs: &Mat) -> Mat {
+        self.op.cross_sor(xs)
+    }
+    fn prior_diag(&self, xs: &Mat) -> Vec<f64> {
+        let k = self.op.kernel();
+        (0..xs.rows()).map(|i| k.eval(xs.row(i), xs.row(i))).collect()
+    }
+    fn y(&self) -> &[f64] {
+        &self.y
+    }
+}
+
+fn exact_tenant(n: usize, seed: u64, matern: bool) -> ExactTenant {
+    let mut rng = Rng::new(seed);
+    let x = Mat::from_fn(n, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+    let y: Vec<f64> = (0..n)
+        .map(|i| (3.0 * x.get(i, 0)).sin() - 0.5 * x.get(i, 1) + 0.02 * rng.normal())
+        .collect();
+    let kernel: Box<dyn bbmm_gp::kernels::Kernel> = if matern {
+        Box::new(Matern52::new(0.6, 0.9))
+    } else {
+        Box::new(Rbf::new(0.5, 1.0))
+    };
+    ExactTenant {
+        op: DenseKernelOp::new(x, kernel, 0.1),
+        y,
+    }
+}
+
+fn sgpr_tenant(n: usize, m: usize, seed: u64) -> SgprTenant {
+    let mut rng = Rng::new(seed);
+    let x = Mat::from_fn(n, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+    let y: Vec<f64> = (0..n).map(|i| (2.0 * x.get(i, 0)).cos() + 0.3 * x.get(i, 1)).collect();
+    let mut u = Mat::zeros(m, 2);
+    for r in 0..m {
+        u.row_mut(r).copy_from_slice(x.row(rng.below(n)));
+    }
+    SgprTenant {
+        op: SgprOp::new(x, u, Box::new(Rbf::new(0.5, 1.0)), 0.1),
+        y,
+    }
+}
+
+/// The block-diagonal operator solves a stacked mixed-size, mixed-family
+/// system to the same answer as solving every block on its own — the
+/// operator-level statement of the fused serving tick.
+#[test]
+fn block_diagonal_solve_matches_per_block_sequential() {
+    let mut rng = Rng::new(9);
+    // exact tenant (dense kernel, n=40) + SGPR-style Woodbury (n=25)
+    let exact = exact_tenant(40, 1, false);
+    let l = Mat::from_fn(25, 4, |_, _| rng.normal());
+    let sgpr = AddedDiagOp::new(LowRankOp::new(l), 0.2);
+    let blocks: Vec<&dyn LinearOp> = vec![exact.op(), &sgpr];
+    let bd = BlockDiagOp::new(blocks.clone());
+    assert_eq!(bd.n(), 65);
+
+    let opts = SolveOptions {
+        max_iters: 1000,
+        tol: 1e-12,
+        precond_rank: 5,
+    };
+    let b = Mat::from_fn(65, 3, |_, _| rng.normal());
+    let stacked = solve(&bd, &b, &opts);
+    for (i, &el) in blocks.iter().enumerate() {
+        let r = bd.block_range(i);
+        let (lo, hi) = (r.start, r.end);
+        let mut bi = Mat::zeros(hi - lo, b.cols());
+        for r in lo..hi {
+            bi.row_mut(r - lo).copy_from_slice(b.row(r));
+        }
+        let seq = solve(el, &bi, &opts);
+        let mut got = Mat::zeros(hi - lo, b.cols());
+        for r in lo..hi {
+            got.row_mut(r - lo).copy_from_slice(stacked.row(r));
+        }
+        let rel = got.max_abs_diff(&seq) / seq.fro_norm().max(1e-300);
+        assert!(rel < 1e-10, "block {i}: rel diff {rel}");
+    }
+}
+
+/// Two tenants with different training sizes AND different model families
+/// served over TCP: one coalesced tick answers both through exactly ONE
+/// fused iterative solve, proven by the `fused=`/`fused_blocks=` counters
+/// — which also round-trip through the `STATS` verb.
+#[test]
+fn mixed_tick_runs_one_fused_solve_over_tcp() {
+    let ta = exact_tenant(40, 3, true);
+    let tb = sgpr_tenant(60, 12, 4);
+    let models: Vec<(String, Box<dyn ServableModel>)> =
+        vec![("exact".to_string(), Box::new(ta)), ("sgpr".to_string(), Box::new(tb))];
+    let opts = SolveOptions {
+        max_iters: 400,
+        tol: 1e-10,
+        precond_rank: 5,
+    };
+    let cache = Arc::new(SolvePlanCache::new());
+    let metrics = Arc::new(Metrics::new());
+    let predictor = multi_served_predictor_fused(models, opts, cache, Arc::clone(&metrics));
+    let batcher = Arc::new(DynamicBatcher::new_multi_with_metrics(
+        vec![TenantSpec::new("exact", 2), TenantSpec::new("sgpr", 2)],
+        BatchPolicy {
+            max_batch: 8,
+            // a long fill window so both clients' requests land in ONE tick
+            max_wait: Duration::from_millis(250),
+            ..BatchPolicy::default()
+        },
+        predictor,
+        metrics,
+    ));
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let config = ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        operator: String::new(),
+        shard_count: 1,
+        stop: Arc::clone(&stop),
+    };
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let srv = {
+        let b = Arc::clone(&batcher);
+        std::thread::spawn(move || {
+            serve(config, b, move |addr| {
+                addr_tx.send(addr).unwrap();
+            })
+            .unwrap();
+        })
+    };
+    let addr = addr_rx.recv().unwrap();
+
+    let mut clients = Vec::new();
+    for line in ["exact:0.2,-0.4\n", "sgpr:-0.1,0.3\n"] {
+        clients.push(std::thread::spawn(move || {
+            let mut conn = std::net::TcpStream::connect(addr).unwrap();
+            conn.write_all(line.as_bytes()).unwrap();
+            let mut resp = String::new();
+            BufReader::new(conn).read_line(&mut resp).unwrap();
+            assert!(!resp.starts_with("ERR"), "{resp}");
+            let mean: f64 = resp.trim().split(',').next().unwrap().parse().unwrap();
+            assert!(mean.is_finite());
+        }));
+    }
+    for c in clients {
+        c.join().unwrap();
+    }
+
+    // exactly ONE fused solve answered both tenants' blocks
+    assert_eq!(batcher.metrics.fused_solves.load(Ordering::Relaxed), 1);
+    assert_eq!(batcher.metrics.fused_blocks.load(Ordering::Relaxed), 2);
+    assert_eq!(batcher.metrics.batches.load(Ordering::Relaxed), 1);
+
+    // the counters round-trip through the STATS verb
+    let mut conn = std::net::TcpStream::connect(addr).unwrap();
+    conn.write_all(b"STATS\nQUIT\n").unwrap();
+    let mut lines = BufReader::new(conn.try_clone().unwrap()).lines();
+    let stats = lines.next().unwrap().unwrap();
+    assert!(stats.contains("requests=2"), "{stats}");
+    assert!(stats.contains("fused=1"), "{stats}");
+    assert!(stats.contains("fused_blocks=2"), "{stats}");
+    assert!(stats.contains("shed=0"), "{stats}");
+    assert!(stats.contains("tick_p50="), "{stats}");
+
+    stop.store(true, Ordering::Relaxed);
+    srv.join().unwrap();
+}
+
+/// A tenant with an unmeetable deadline class is shed at admission with
+/// the documented `ERR deadline …` line, and the shed counter reaches the
+/// STATS summary.
+#[test]
+fn deadline_shedding_returns_documented_err_line() {
+    let echo: bbmm_gp::coordinator::PredictFn = Box::new(|xs: &Mat| Prediction {
+        mean: vec![0.0; xs.rows()],
+        var: vec![1.0; xs.rows()],
+    });
+    let b = DynamicBatcher::new(
+        2,
+        BatchPolicy {
+            default_deadline: Some(Duration::from_millis(500)),
+            ..BatchPolicy::default()
+        },
+        echo,
+    );
+    // no tick history yet → admission has no estimate → served normally
+    assert!(!handle_request("0.5,0.5", &b, None).starts_with("ERR"));
+    // pathological tick history: ~10s per tick makes a 500ms deadline
+    // provably unmeetable, so the next request must shed at admission
+    b.metrics.record_tick(10_000_000);
+    let resp = handle_request("0.5,0.5", &b, None);
+    assert!(resp.starts_with("ERR deadline"), "{resp}");
+    assert!(resp.contains("unmeetable"), "{resp}");
+    let stats = handle_request("STATS", &b, None);
+    assert!(stats.contains("shed=1"), "{stats}");
+    assert!(stats.contains("errors=1"), "{stats}");
+}
+
+/// `served_predictor_cached` primes the tenant's solve plan at
+/// construction — the first request after startup hits a warm cache
+/// instead of paying the factorisation/preconditioner build.
+#[test]
+fn served_predictor_primes_plan_cache_at_startup() {
+    let model = exact_tenant(30, 5, false);
+    let opts = SolveOptions {
+        max_iters: 200,
+        tol: 1e-10,
+        precond_rank: 5,
+    };
+    let cache = Arc::new(SolvePlanCache::new());
+    let predictor = served_predictor_cached(Box::new(model), opts, Arc::clone(&cache));
+    // plan built before any request arrived
+    assert_eq!(cache.misses(), 1, "{}", cache.stats());
+    let pred = predictor(&Mat::from_vec(1, 2, vec![0.1, -0.2]));
+    assert!(pred.mean[0].is_finite() && pred.var[0] >= 0.0);
+    assert_eq!(cache.misses(), 1, "{}", cache.stats());
+    assert!(cache.hits() >= 1, "{}", cache.stats());
+}
