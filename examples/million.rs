@@ -17,16 +17,23 @@
 //!
 //! Tunables: `BBMM_MILLION_N` (rows), `BBMM_MILLION_WORKERS` (processes),
 //! `BBMM_MILLION_ITERS` (mBCG iteration cap), `BBMM_MILLION_BUDGET_MB`
-//! (per-worker materialisation budget), `BBMM_PRECISION=f64|mixed`
-//! (tile-compute precision — inherited by the forked workers through the
-//! environment, so driver and fleet always agree). Smoke mode shrinks to
-//! n = 3000 / 2 workers and parity-checks the distributed solve against
-//! the in-process placement to 1e-8 before serving.
+//! (per-worker materialisation budget), `BBMM_MILLION_TRANSPORT=shm|tcp`
+//! (data plane — default `shm`, the zero-copy shared-memory lane, which
+//! degrades to TCP where no segment can map), `BBMM_MILLION_NUMA=auto|off`
+//! (worker placement across NUMA nodes — default `auto`),
+//! `BBMM_PRECISION=f64|mixed` (tile-compute precision — inherited by the
+//! forked workers through the environment, so driver and fleet always
+//! agree). Smoke mode shrinks to n = 3000 / 2 workers, parity-checks the
+//! distributed solve against the in-process placement to 1e-8 before
+//! serving, and asserts the shm lane moved zero payload bytes through the
+//! socket when the segment mapped.
 
 use bbmm_gp::kernels::{Kernel, Rbf, ShardedKernelOp};
 use bbmm_gp::linalg::mbcg::{mbcg_op, MbcgOptions};
 use bbmm_gp::linalg::op::{mmm, MmmPlan};
-use bbmm_gp::runtime::dist::{worker, MultiProcessBackend, ShardBackend, WorkerLaunch};
+use bbmm_gp::runtime::dist::{
+    worker, MultiProcessBackend, NumaMode, ShardBackend, ShmOptions, Transport, WorkerLaunch,
+};
 use bbmm_gp::tensor::{simd, Mat};
 use bbmm_gp::util::{par, Rng};
 use std::sync::Arc;
@@ -64,11 +71,23 @@ fn main() {
         )
     };
     let budget_mb = env_usize("BBMM_MILLION_BUDGET_MB", 1024);
+    let transport = match std::env::var("BBMM_MILLION_TRANSPORT").as_deref() {
+        Ok("tcp") => Transport::Tcp,
+        _ => Transport::Shm(ShmOptions::default()),
+    };
+    let numa = match std::env::var("BBMM_MILLION_NUMA").as_deref() {
+        Ok("off") => NumaMode::Off,
+        _ => NumaMode::Auto,
+    };
     let kernel = Rbf::new(0.5, 1.0);
     println!(
         "million: n={n} workers={workers} shards={shards} iters={iters} \
-         budget={budget_mb}MB/worker threads={} precision={} simd={} \
-         (aggregate K would be {:.1} GB — never built)",
+         budget={budget_mb}MB/worker transport={} numa={numa} threads={} \
+         precision={} simd={} (aggregate K would be {:.1} GB — never built)",
+        match &transport {
+            Transport::Tcp => "tcp",
+            Transport::Shm(_) => "shm",
+        },
         par::num_threads(),
         mmm::default_precision().name(),
         simd::active().name(),
@@ -88,7 +107,7 @@ fn main() {
     // ---- fork the worker fleet and load the shard partition ------------
     let t0 = Instant::now();
     let proc = Arc::new(
-        MultiProcessBackend::launch(
+        MultiProcessBackend::launch_with(
             x.clone(),
             &kernel,
             NOISE,
@@ -96,6 +115,8 @@ fn main() {
             workers,
             budget_mb,
             WorkerLaunch::default(),
+            transport,
+            numa,
         )
         .expect("fork shard workers"),
     );
@@ -123,16 +144,19 @@ fn main() {
         result.iterations as f64 * 2.0 * (n as f64) * (n as f64) / solve_s.max(1e-9) / 1e9;
     println!(
         "solve: {} mBCG iterations in {:.2}s ({solve_gflops:.2} GFLOP/s effective, \
-         precision={}, simd={}) — {} round trips, {:.1} MB out / {:.1} MB back \
-         ({:.2} MB per round: O(n·t), independent of K)",
+         precision={}, simd={}) — {} round trips ({} zero-copy), {:.1} MB out / \
+         {:.1} MB back ({:.2} MB per round: O(n·t), independent of K), \
+         control plane {:.1} kB",
         result.iterations,
         solve_s,
         mmm::default_precision().name(),
         simd::active().name(),
         stats.rounds,
+        stats.shm_rounds,
         stats.bytes_tx as f64 / 1e6,
         stats.bytes_rx as f64 / 1e6,
-        (stats.bytes_tx + stats.bytes_rx) as f64 / 1e6 / stats.rounds.max(1) as f64
+        (stats.bytes_tx + stats.bytes_rx) as f64 / 1e6 / stats.rounds.max(1) as f64,
+        stats.ctrl_bytes as f64 / 1e3
     );
     let alpha = result.solves;
 
@@ -151,6 +175,18 @@ fn main() {
         let diff = alpha.max_abs_diff(&want.solves) / scale;
         assert!(diff < 1e-8, "distributed solve diverged from in-process: {diff}");
         println!("parity: distributed == in-process to {diff:.2e}");
+        // zero-copy contract: with the segment mapped, mBCG payload never
+        // touches the socket — only control-plane frames do
+        if proc.shm_active() {
+            let s = proc.stats();
+            assert!(
+                s.bytes_tx == 0 && s.bytes_rx == 0,
+                "shm lane leaked payload onto the socket ({} tx / {} rx)",
+                s.bytes_tx,
+                s.bytes_rx
+            );
+            println!("zero-copy: {} rounds, 0 payload bytes on the socket", s.shm_rounds);
+        }
     }
 
     // ---- serving: chunked cross-covariance against the solved weights --

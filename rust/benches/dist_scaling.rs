@@ -12,14 +12,20 @@
 //! Grid: n ∈ {32768, 131072} × workers ∈ {1, 2, 4} (quick mode:
 //! n = 2048, workers ∈ {1, 2} — CI-sized, where the expectation is
 //! parity-not-regression; process parallelism pays off at the full
-//! sizes on multi-core hosts). Writes `results/BENCH_dist.json` (the CI
-//! perf artifact; `"b"` carries the worker count) plus the table/CSV
-//! pair.
+//! sizes on multi-core hosts). Each cell is then re-run with the
+//! shared-memory data plane (`shm_vs_tcp` rows): identical partition,
+//! identical solve, parity-gated against the same reference, with the
+//! per-round bytes actually crossing the socket reported for both
+//! transports — the shm lane's payload traffic must be **zero**. Writes
+//! `results/BENCH_dist.json` (the CI perf artifact; `"b"` carries the
+//! worker count) plus the table/CSV pair.
 
 use bbmm_gp::bench::{bench, Table};
 use bbmm_gp::kernels::{Rbf, ShardedKernelOp};
 use bbmm_gp::linalg::mbcg::{mbcg_op, MbcgOptions};
-use bbmm_gp::runtime::dist::{MultiProcessBackend, ShardBackend, WorkerLaunch};
+use bbmm_gp::runtime::dist::{
+    MultiProcessBackend, NumaMode, ShardBackend, ShmOptions, Transport, WorkerLaunch,
+};
 use bbmm_gp::tensor::Mat;
 use bbmm_gp::util::par;
 use bbmm_gp::util::Rng;
@@ -35,6 +41,19 @@ struct Case {
     inproc_s: f64,
     proc_s: f64,
     speedup: f64,
+}
+
+/// One shm-vs-TCP cell: same partition and solve, only the data plane
+/// differs. `*_wire_b` is the mean payload bytes crossing the socket per
+/// Matmul round (control-plane bytes excluded for both).
+struct ShmCase {
+    n: usize,
+    workers: usize,
+    tcp_s: f64,
+    shm_s: f64,
+    speedup: f64,
+    tcp_wire_b: u64,
+    shm_wire_b: u64,
 }
 
 fn main() {
@@ -58,7 +77,9 @@ fn main() {
         n_solve_only: T_COLS,
     };
     let mut cases = Vec::new();
+    let mut shm_cases = Vec::new();
     let mut table = Table::new(&["n", "workers", "inproc_s", "proc_s", "speedup"]);
+    let mut shm_table = Table::new(&["n", "workers", "tcp_s", "shm_s", "speedup", "wire_B/round"]);
     for &n in sizes {
         let mut rng = Rng::new(n as u64);
         let x = Mat::from_fn(n, 3, |_, _| rng.uniform_in(-1.0, 1.0));
@@ -93,8 +114,13 @@ fn main() {
             let p_t = bench(&format!("mbcg/proc{w}/n{n}"), 1, samples, || {
                 let _ = mbcg_op(&routed, &b, |m| m.clone(), &opts);
             });
-            let restarts = routed.backend().unwrap().stats().restarts;
-            assert_eq!(restarts, 0, "n={n} workers={w}: workers crashed during the bench");
+            let tcp_stats = routed.backend().unwrap().stats();
+            assert_eq!(
+                tcp_stats.restarts, 0,
+                "n={n} workers={w}: workers crashed during the bench"
+            );
+            let tcp_wire_b =
+                (tcp_stats.bytes_tx + tcp_stats.bytes_rx) / tcp_stats.rounds.max(1);
             drop(routed); // shuts the worker fleet down before the next config
 
             let speedup = in_t.median_s() / p_t.median_s();
@@ -112,12 +138,74 @@ fn main() {
                 proc_s: p_t.median_s(),
                 speedup,
             });
+
+            // same cell over the zero-copy data plane (degrades to TCP —
+            // speedup ≈ 1 — where the segment cannot map, so the cell is
+            // emitted either way and the committed floor stays meaningful)
+            let kernel = Rbf::new(0.5, 1.0);
+            let shm_proc = Arc::new(
+                MultiProcessBackend::launch_with(
+                    x.clone(),
+                    &kernel,
+                    0.05,
+                    shards,
+                    w,
+                    WORKER_BUDGET_MB,
+                    launch.clone(),
+                    Transport::Shm(ShmOptions::default()),
+                    NumaMode::Auto,
+                )
+                .expect("fork shard workers over shm"),
+            );
+            if !shm_proc.shm_active() {
+                println!("  ! shm degraded: {}", shm_proc.describe());
+            }
+            let shm_routed =
+                ShardedKernelOp::new(x.clone(), Box::new(Rbf::new(0.5, 1.0)), 0.05, shards)
+                    .with_backend(shm_proc.clone() as Arc<dyn ShardBackend>);
+            let got = mbcg_op(&shm_routed, &b, |m| m.clone(), &opts);
+            let diff = got.solves.max_abs_diff(&reference.solves) / scale;
+            assert!(diff < 1e-8, "n={n} workers={w}: shm placement diverged {diff}");
+            let s_t = bench(&format!("mbcg/shm{w}/n{n}"), 1, samples, || {
+                let _ = mbcg_op(&shm_routed, &b, |m| m.clone(), &opts);
+            });
+            let shm_stats = shm_proc.stats();
+            assert_eq!(
+                shm_stats.restarts, 0,
+                "n={n} workers={w}: shm workers crashed during the bench"
+            );
+            let shm_wire_b =
+                (shm_stats.bytes_tx + shm_stats.bytes_rx) / shm_stats.rounds.max(1);
+            drop(shm_routed);
+            drop(shm_proc);
+
+            let shm_speedup = p_t.median_s() / s_t.median_s();
+            shm_table.row(&[
+                n.to_string(),
+                w.to_string(),
+                format!("{:.4}", p_t.median_s()),
+                format!("{:.4}", s_t.median_s()),
+                format!("{shm_speedup:.2}x"),
+                format!("{shm_wire_b} (tcp {tcp_wire_b})"),
+            ]);
+            shm_cases.push(ShmCase {
+                n,
+                workers: w,
+                tcp_s: p_t.median_s(),
+                shm_s: s_t.median_s(),
+                speedup: shm_speedup,
+                tcp_wire_b,
+                shm_wire_b,
+            });
         }
     }
     println!();
     table.print();
+    println!();
+    shm_table.print();
     table.save("bench_dist_scaling").ok();
-    write_json(&cases).expect("write BENCH_dist.json");
+    shm_table.save("bench_dist_scaling_shm").ok();
+    write_json(&cases, &shm_cases).expect("write BENCH_dist.json");
     println!(
         "\nwrote results/BENCH_dist.json — expect speedup ≥ 1 once per-shard \
          kernel work dominates the O(n·t) broadcast/gather round trip"
@@ -126,8 +214,10 @@ fn main() {
 
 /// Hand-rolled JSON (no serde offline): the schema CI archives and
 /// `ci/bench_diff.py` gates against the committed baseline. `"b"` is the
-/// worker count (an identity key for the differ).
-fn write_json(cases: &[Case]) -> std::io::Result<()> {
+/// worker count (an identity key for the differ); the differ gates on
+/// `speedup` for both the `proc_vs_inproc` and `shm_vs_tcp` rows, while
+/// the `*_wire_b` fields are informational (payload bytes per round).
+fn write_json(cases: &[Case], shm_cases: &[ShmCase]) -> std::io::Result<()> {
     let mut out = String::new();
     out.push_str("{\n");
     out.push_str("  \"bench\": \"dist_scaling\",\n");
@@ -136,15 +226,25 @@ fn write_json(cases: &[Case]) -> std::io::Result<()> {
     out.push_str(&format!("  \"iters\": {ITERS},\n"));
     out.push_str("  \"cases\": [\n");
     for (i, c) in cases.iter().enumerate() {
+        let sep = if i + 1 < cases.len() || !shm_cases.is_empty() { "," } else { "" };
         out.push_str(&format!(
             "    {{\"name\": \"proc_vs_inproc\", \"n\": {}, \"b\": {}, \"inproc_s\": {:.4}, \
-             \"proc_s\": {:.4}, \"speedup\": {:.3}}}{}\n",
+             \"proc_s\": {:.4}, \"speedup\": {:.3}}}{sep}\n",
+            c.n, c.workers, c.inproc_s, c.proc_s, c.speedup,
+        ));
+    }
+    for (i, c) in shm_cases.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"name\": \"shm_vs_tcp\", \"n\": {}, \"b\": {}, \"tcp_s\": {:.4}, \
+             \"shm_s\": {:.4}, \"speedup\": {:.3}, \"tcp_wire_b\": {}, \"shm_wire_b\": {}}}{}\n",
             c.n,
             c.workers,
-            c.inproc_s,
-            c.proc_s,
+            c.tcp_s,
+            c.shm_s,
             c.speedup,
-            if i + 1 < cases.len() { "," } else { "" }
+            c.tcp_wire_b,
+            c.shm_wire_b,
+            if i + 1 < shm_cases.len() { "," } else { "" }
         ));
     }
     out.push_str("  ]\n");

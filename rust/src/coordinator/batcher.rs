@@ -112,6 +112,13 @@ struct Request {
     deadline: Option<Instant>,
 }
 
+/// Earliest-deadline-first order for a drained tick: deadlined requests
+/// ascending by absolute expiry, then the deadline-free tail; the stable
+/// sort keeps arrival order inside every tie class.
+fn edf_sort(batch: &mut [Request]) {
+    batch.sort_by_key(|r| (r.deadline.is_none(), r.deadline));
+}
+
 /// Dynamic batcher handle. Submit from any thread.
 pub struct DynamicBatcher {
     tx: Sender<Request>,
@@ -221,19 +228,27 @@ impl DynamicBatcher {
             if live.is_empty() {
                 continue;
             }
-            let batch = live;
+            // earliest-deadline-first drain: the tick solves every drained
+            // request regardless, but EDF ordering puts the most urgent
+            // rows (and below, the most urgent tenant blocks) first, so
+            // replies stream back in deadline order once the solve lands
+            let mut batch = live;
+            edf_sort(&mut batch);
             // route: coalesce same-tenant requests into one RHS block,
-            // preserving arrival order within each tenant
+            // preserving EDF order within each tenant
             let mut groups: Vec<Vec<usize>> = vec![Vec::new(); dims.len()];
             for (j, req) in batch.iter().enumerate() {
                 groups[req.tenant].push(j);
             }
+            // tenant blocks assemble in order of each tenant's most urgent
+            // request (batch is EDF-sorted, so that is its first index)
+            let mut tenant_order: Vec<usize> =
+                (0..dims.len()).filter(|&tn| !groups[tn].is_empty()).collect();
+            tenant_order.sort_by_key(|&tn| groups[tn][0]);
             let mut blocks: Vec<TenantBatch> = Vec::new();
             let mut slot = vec![(0usize, 0usize); batch.len()];
-            for (tenant, idxs) in groups.iter().enumerate() {
-                if idxs.is_empty() {
-                    continue;
-                }
+            for &tenant in &tenant_order {
+                let idxs = &groups[tenant];
                 let mut xs = Mat::zeros(idxs.len(), dims[tenant]);
                 for (row, &j) in idxs.iter().enumerate() {
                     xs.row_mut(row).copy_from_slice(&batch[j].x);
@@ -458,6 +473,87 @@ mod tests {
         assert!(b.predict_one(vec![1.0]).is_ok());
         // drain the entry signals so the channel closing is clean
         while entered_rx.try_recv().is_ok() {}
+    }
+
+    #[test]
+    fn edf_sort_orders_deadlines_ascending_then_deadline_free_arrivals() {
+        let now = Instant::now();
+        let mk = |tenant: usize, deadline: Option<Duration>| {
+            let (reply, _rx) = channel();
+            Request {
+                tenant,
+                x: Vec::new(),
+                reply,
+                enqueued: now,
+                deadline: deadline.map(|d| now + d),
+            }
+        };
+        let mut batch = vec![
+            mk(0, None),
+            mk(1, Some(Duration::from_millis(30))),
+            mk(2, Some(Duration::from_millis(10))),
+            mk(3, None),
+            mk(4, Some(Duration::from_millis(20))),
+        ];
+        edf_sort(&mut batch);
+        let order: Vec<usize> = batch.iter().map(|r| r.tenant).collect();
+        // deadlines ascending first; the deadline-free pair keeps arrival order
+        assert_eq!(order, vec![2, 4, 1, 0, 3]);
+    }
+
+    #[test]
+    fn ticks_assemble_tenant_blocks_in_deadline_order() {
+        // park the worker inside a first tick, queue a slow-deadline and
+        // then a fast-deadline request, and check the second tick's block
+        // order put the fast tenant first even though it arrived last
+        let calls: Arc<Mutex<Vec<Vec<usize>>>> = Arc::new(Mutex::new(Vec::new()));
+        let (gate_tx, gate_rx) = channel::<()>();
+        let (entered_tx, entered_rx) = channel::<()>();
+        let gate = Mutex::new((entered_tx, gate_rx));
+        let c2 = Arc::clone(&calls);
+        let predict: MultiPredictFn = Box::new(move |blocks: &[TenantBatch]| {
+            c2.lock()
+                .unwrap()
+                .push(blocks.iter().map(|tb| tb.tenant).collect());
+            let guard = gate.lock().unwrap();
+            let _ = guard.0.send(());
+            let _ = guard.1.recv();
+            blocks
+                .iter()
+                .map(|tb| Prediction {
+                    mean: vec![0.0; tb.xs.rows()],
+                    var: vec![0.0; tb.xs.rows()],
+                })
+                .collect()
+        });
+        let b = DynamicBatcher::new_multi(
+            vec![
+                TenantSpec::new("slow", 1).with_deadline(Duration::from_secs(60)),
+                TenantSpec::new("fast", 1).with_deadline(Duration::from_secs(2)),
+            ],
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(30),
+                ..BatchPolicy::default()
+            },
+            predict,
+        );
+        let first = b.submit_to(0, vec![0.0]).unwrap();
+        entered_rx.recv().unwrap(); // tick 1 is parked on the gate
+        let slow = b.submit_to(0, vec![1.0]).unwrap();
+        let fast = b.submit_to(1, vec![2.0]).unwrap();
+        gate_tx.send(()).unwrap(); // release tick 1; tick 2 drains both
+        entered_rx.recv().unwrap();
+        gate_tx.send(()).unwrap();
+        first.recv().unwrap().unwrap();
+        slow.recv().unwrap().unwrap();
+        fast.recv().unwrap().unwrap();
+        let calls = calls.lock().unwrap();
+        assert_eq!(calls.len(), 2, "expected exactly two ticks");
+        assert_eq!(calls[0], vec![0]);
+        // EDF: tenant 1's absolute deadline (2 s out) beats tenant 0's
+        // (60 s out), so its block assembles first in the shared tick
+        assert_eq!(calls[1], vec![1, 0]);
     }
 
     #[test]

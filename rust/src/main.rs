@@ -27,7 +27,10 @@ use bbmm_gp::kernels::{
     DenseKernelOp, KernelCov, KernelCovOp, Matern52, Rbf, ShardedCovOp, ShardedKernelOp,
 };
 use bbmm_gp::linalg::op::{solve_strategy, AddedDiagOp, LinearOp, SolveOptions, SolvePlanCache};
-use bbmm_gp::runtime::dist::{BackendSpec, MultiProcessBackend, OutOfCoreBackend, WorkerLaunch};
+use bbmm_gp::runtime::dist::{
+    BackendSpec, MultiProcessBackend, NumaMode, OutOfCoreBackend, ShmOptions, Transport,
+    WorkerLaunch,
+};
 use bbmm_gp::runtime::{default_artifact_dir, Runtime};
 use bbmm_gp::tensor::Mat;
 use bbmm_gp::train::{multi_restart_inits, noise_grid_inits, TrainConfig, Trainer};
@@ -167,6 +170,14 @@ fn cmd_shard_worker(args: &Args) -> Result<(), CliError> {
             message: "bbmm shard-worker requires --connect <addr>".to_string(),
         });
     };
+    // NUMA placement: pin before LoadShard so panel pages are
+    // first-touched on this worker's node
+    if let Some(list) = args.get("pin-cpus") {
+        let cpus = bbmm_gp::runtime::dist::shm::parse_cpulist(list);
+        if !cpus.is_empty() {
+            let _ = bbmm_gp::runtime::dist::shm::pin_to_cpus(&cpus);
+        }
+    }
     bbmm_gp::runtime::dist::worker::run_worker(addr).map_err(|e| CliError {
         flag: "connect".to_string(),
         message: format!("shard worker failed: {e}"),
@@ -208,12 +219,20 @@ fn print_help() {
            --noises s1,s2,…    (sweep: explicit noise grid — candidates\n\
                                share one covariance, the fused fast path)\n\
            --shards S          (serve: row-shard the kernel operator)\n\
-           --backend inproc|proc:N|ooc:N   (serve, exact model: where the\n\
-                               row shards live and execute — the local\n\
-                               thread pool, N forked worker processes\n\
-                               speaking the shard wire protocol, or an\n\
+           --backend inproc|proc:N|shm:N|ooc:N   (serve, exact model:\n\
+                               where the row shards live and execute — the\n\
+                               local thread pool, N forked worker processes\n\
+                               speaking the shard wire protocol over TCP,\n\
+                               the same fleet with a zero-copy /dev/shm\n\
+                               data plane (TCP stays the control plane and\n\
+                               the fallback if mapping fails), or an\n\
                                out-of-core spool of N checkpointed kernel\n\
                                panels streamed under a memory budget)\n\
+           --numa auto|off     (proc/shm backends: round-robin workers\n\
+                               across /sys NUMA nodes and pin them so\n\
+                               panels are first-touched on the owning\n\
+                               node; auto is a no-op on single-node\n\
+                               hosts — default auto)\n\
            --worker-budget-mb M (per-worker materialisation / out-of-core\n\
                                window budget; default --mmm-budget-mb)\n\
            --threads N         (size the persistent worker pool; flag\n\
@@ -730,10 +749,20 @@ fn build_servable(
                 BackendSpec::InProcess => {
                     (Box::new(KernelCovOp::new(ds.x_train.clone(), kernel)), None)
                 }
-                BackendSpec::MultiProcess { workers } => {
+                BackendSpec::MultiProcess { workers } | BackendSpec::Shm { workers } => {
                     // at least one shard per worker; --shards can refine
                     let n_shards = shards.max(workers);
-                    let proc = MultiProcessBackend::launch(
+                    let transport = match backend {
+                        BackendSpec::Shm { .. } => Transport::Shm(ShmOptions::default()),
+                        _ => Transport::Tcp,
+                    };
+                    let numa = NumaMode::parse(args.get_or("numa", "auto")).map_err(
+                        |message| CliError {
+                            flag: "numa".to_string(),
+                            message,
+                        },
+                    )?;
+                    let proc = MultiProcessBackend::launch_with(
                         ds.x_train.clone(),
                         kernel.as_ref(),
                         noise,
@@ -741,6 +770,8 @@ fn build_servable(
                         workers,
                         budget_mb,
                         WorkerLaunch::default(),
+                        transport,
+                        numa,
                     )
                     .map_err(|e| CliError {
                         flag: "backend".to_string(),

@@ -18,7 +18,12 @@
 //!   speaking the length-prefixed binary protocol of [`protocol`] over
 //!   TCP, with heartbeats, restart-on-crash, and deterministic re-dispatch
 //!   of a lost worker's shards (recomputing a shard is bit-identical, so a
-//!   crash never changes the answer).
+//!   crash never changes the answer). Its data plane is pluggable
+//!   ([`proc::Transport`]): with `Transport::Shm`, same-host workers map a
+//!   shared segment ([`shm`]) and a round is "write probe, bump sequence,
+//!   wait doorbells" — zero payload bytes on the socket, TCP demoted to
+//!   control plane + fallback. NUMA-aware placement ([`shm::NumaMode`])
+//!   pins workers round-robin across `/sys/devices/system/node/` nodes.
 //! - [`ooc::OutOfCoreBackend`] — checkpointed panels: every shard's kernel
 //!   rows are materialised once to disk and streamed back through a small
 //!   window per product, so resident K memory is O(window) while keeping
@@ -36,20 +41,30 @@ use std::sync::{Mutex, RwLock};
 pub mod ooc;
 pub mod proc;
 pub mod protocol;
+pub mod shm;
 pub mod worker;
 
 pub use ooc::OutOfCoreBackend;
-pub use proc::{MultiProcessBackend, WorkerLaunch};
+pub use proc::{MultiProcessBackend, Transport, WorkerLaunch};
+pub use shm::{NumaMode, ShmOptions};
 
 /// Traffic and liveness counters a backend accumulates across products.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct BackendStats {
     /// broadcast/gather round trips (one per product = one per iteration)
     pub rounds: u64,
-    /// bytes sent to workers / written to spool
+    /// rounds served entirely by the shared-memory data plane (no payload
+    /// frame written to any socket)
+    pub shm_rounds: u64,
+    /// payload bytes sent to workers / written to spool (Matmul frames)
     pub bytes_tx: u64,
-    /// bytes received from workers / read back from spool
+    /// payload bytes received from workers / read back from spool
+    /// (MatmulResult frames)
     pub bytes_rx: u64,
+    /// control-plane socket bytes (LoadShard, SetParams + acks, the shm
+    /// attach handshake, heartbeats, shutdown) — the O(1)-per-event
+    /// traffic that remains when the shm plane carries the payload
+    pub ctrl_bytes: u64,
     /// worker processes restarted after a crash or failed heartbeat
     pub restarts: u64,
 }
@@ -93,13 +108,19 @@ pub trait ShardBackend: Send + Sync {
     fn shutdown(&self) {}
 }
 
-/// Parsed `--backend` CLI spec: `inproc` | `proc:N` | `ooc:N`.
+/// Parsed `--backend` CLI spec: `inproc` | `proc:N` | `shm:N` | `ooc:N`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BackendSpec {
     /// thread-pool execution in this process (the default)
     InProcess,
-    /// N forked `bbmm shard-worker` processes
+    /// N forked `bbmm shard-worker` processes (TCP data plane)
     MultiProcess {
+        /// worker process count (≥ 1)
+        workers: usize,
+    },
+    /// N forked workers with the zero-copy shared-memory data plane
+    /// (TCP control plane; automatic TCP fallback if mapping fails)
+    Shm {
         /// worker process count (≥ 1)
         workers: usize,
     },
@@ -125,13 +146,17 @@ impl BackendSpec {
             Ok(BackendSpec::MultiProcess {
                 workers: count(w, "worker")?,
             })
+        } else if let Some(w) = s.strip_prefix("shm:") {
+            Ok(BackendSpec::Shm {
+                workers: count(w, "worker")?,
+            })
         } else if let Some(w) = s.strip_prefix("ooc:") {
             Ok(BackendSpec::OutOfCore {
                 shards: count(w, "shard")?,
             })
         } else {
             Err(format!(
-                "unknown backend spec '{s}' (expected inproc | proc:N | ooc:N)"
+                "unknown backend spec '{s}' (expected inproc | proc:N | shm:N | ooc:N)"
             ))
         }
     }
@@ -142,6 +167,7 @@ impl std::fmt::Display for BackendSpec {
         match self {
             BackendSpec::InProcess => write!(f, "inproc"),
             BackendSpec::MultiProcess { workers } => write!(f, "proc:{workers}"),
+            BackendSpec::Shm { workers } => write!(f, "shm:{workers}"),
             BackendSpec::OutOfCore { shards } => write!(f, "ooc:{shards}"),
         }
     }
@@ -287,13 +313,22 @@ mod tests {
             BackendSpec::MultiProcess { workers: 4 }
         );
         assert_eq!(
+            BackendSpec::parse("shm:3").unwrap(),
+            BackendSpec::Shm { workers: 3 }
+        );
+        assert_eq!(
             BackendSpec::parse("ooc:2").unwrap(),
             BackendSpec::OutOfCore { shards: 2 }
         );
-        for bad in ["", "proc", "proc:0", "proc:x", "ooc:", "threads:2"] {
+        for bad in ["", "proc", "proc:0", "proc:x", "shm", "shm:0", "ooc:", "threads:2"] {
             assert!(BackendSpec::parse(bad).is_err(), "accepted {bad:?}");
         }
         assert_eq!(BackendSpec::MultiProcess { workers: 2 }.to_string(), "proc:2");
+        assert_eq!(BackendSpec::Shm { workers: 4 }.to_string(), "shm:4");
+        assert_eq!(
+            BackendSpec::parse(&BackendSpec::Shm { workers: 4 }.to_string()).unwrap(),
+            BackendSpec::Shm { workers: 4 }
+        );
         assert_eq!(
             BackendSpec::parse(&BackendSpec::OutOfCore { shards: 3 }.to_string()).unwrap(),
             BackendSpec::OutOfCore { shards: 3 }

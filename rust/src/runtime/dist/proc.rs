@@ -8,6 +8,18 @@
 //! per-shard row-blocks come back in one frame each — O(n·t) bytes per
 //! mBCG iteration, no per-tile traffic.
 //!
+//! **Transports.** The socket round above is the [`Transport::Tcp`] data
+//! plane. With [`Transport::Shm`] the driver additionally creates one
+//! shared-memory segment (`super::shm`) that every same-host worker maps:
+//! a round becomes "write probe, bump sequence, wait on per-worker
+//! doorbells, copy rows out" — zero per-iteration serialization and zero
+//! payload bytes on the socket. TCP always remains the **control plane**
+//! (LoadShard, SetParams + acks, heartbeats, Shutdown, the ShmAttach
+//! handshake itself) and the automatic per-worker fallback when the
+//! segment cannot be created or a worker fails to map it; rounds wider
+//! than the segment's probe capacity also ride TCP per round.
+//! `BackendStats::shm_rounds` / `ctrl_bytes` make the split observable.
+//!
 //! **Fault model.** Workers are stateless beyond what `LoadShard` carries,
 //! so recovery is re-derivation: a heartbeat monitor pings workers between
 //! products, and any socket error (heartbeat or mid-gather) kills the
@@ -15,9 +27,14 @@
 //! hyperparameters, and re-dispatches the same product. Shard fills are
 //! deterministic serial loops, so the re-computed block is bit-identical
 //! to what the lost worker would have sent — a crash can delay an answer
-//! but never change it (asserted in `tests/dist_backend.rs`).
+//! but never change it (asserted in `tests/dist_backend.rs`). Over shm
+//! the re-dispatch is a **re-post**: the sequence word is bumped again, so
+//! every attached worker recomputes the round — the survivors' rewrites
+//! are bit-identical to what the driver already copied out, and the
+//! respawned worker (which joined at the stale sequence) serves it fresh.
 
 use super::protocol::{ResultBlock, WireMsg, PROTOCOL_VERSION};
+use super::shm::{self, backoff, NumaMode, ShmOptions, ShmSegment};
 use super::{kernel_wire_name, BackendStats, ShardBackend};
 use crate::kernels::{Kernel, ShardBlock};
 use crate::runtime::shard::partition_rows;
@@ -59,9 +76,21 @@ impl Default for WorkerLaunch {
     }
 }
 
+/// Which data plane carries the per-iteration Matmul traffic.
+#[derive(Debug, Clone)]
+pub enum Transport {
+    /// every round through the socket (works across hosts)
+    Tcp,
+    /// same-host zero-copy segment for rounds; the socket stays the
+    /// control plane and the per-worker fallback when mapping fails
+    Shm(ShmOptions),
+}
+
 struct WorkerProc {
     child: Child,
     stream: TcpStream,
+    /// this worker mapped the segment (ShmReady ok) — rounds go via shm
+    shm: bool,
 }
 
 struct ProcState {
@@ -85,6 +114,25 @@ struct MpInner {
     state: Mutex<ProcState>,
     stats: Mutex<BackendStats>,
     stop: AtomicBool,
+    /// the shared data-plane segment (`None` = pure TCP, by choice or
+    /// because creation failed — see `shm_fallback`)
+    seg: Option<ShmSegment>,
+    /// probe capacity the segment was sized for (0 when `seg` is None)
+    t_max: usize,
+    /// why the requested shm transport fell back to TCP, for `describe`
+    shm_fallback: Option<String>,
+    /// per worker slot: the cpulist it is pinned to (NUMA round-robin);
+    /// `None` = unpinned (numa off, or fewer than two nodes)
+    numa_cpus: Vec<Option<String>>,
+    /// human-readable placement summary for `describe`
+    numa_note: String,
+}
+
+/// Exact frame size of `msg` on the wire (control-plane accounting).
+fn frame_len(msg: &WireMsg) -> u64 {
+    let mut buf = Vec::new();
+    msg.encode(&mut buf).expect("in-memory encode cannot fail");
+    buf.len() as u64
 }
 
 /// Process-parallel shard backend (see module docs).
@@ -118,14 +166,20 @@ impl MpInner {
         }
     }
 
+    fn note_ctrl(&self, bytes: u64) {
+        self.stats.lock().unwrap().ctrl_bytes += bytes;
+    }
+
     /// Fork one worker, wait for its greeting, leave it ready for LoadShard.
-    fn spawn_one(&self) -> io::Result<WorkerProc> {
-        let mut child = Command::new(&self.launch.exe)
-            .args(&self.launch.args)
-            .arg(&self.addr)
-            .stdin(Stdio::null())
-            .stdout(Stdio::null())
-            .spawn()?;
+    fn spawn_one(&self, w: usize) -> io::Result<WorkerProc> {
+        let mut cmd = Command::new(&self.launch.exe);
+        cmd.args(&self.launch.args).arg(&self.addr);
+        // NUMA placement: the worker pins itself before building panels,
+        // so first-touch lands the pages on its node
+        if let Some(cpus) = self.numa_cpus.get(w).and_then(|c| c.as_ref()) {
+            cmd.arg("--pin-cpus").arg(cpus);
+        }
+        let mut child = cmd.stdin(Stdio::null()).stdout(Stdio::null()).spawn()?;
         let stream = match self.accept_deadline() {
             Ok(s) => s,
             Err(e) => {
@@ -138,7 +192,9 @@ impl MpInner {
         stream.set_read_timeout(Some(Duration::from_millis(self.launch.spawn_timeout_ms)))?;
         let hello = WireMsg::decode(&mut (&stream));
         match hello {
-            Ok(WireMsg::Hello { version, .. }) if version == PROTOCOL_VERSION => {}
+            Ok(WireMsg::Hello { version, pid }) if version == PROTOCOL_VERSION => {
+                self.note_ctrl(frame_len(&WireMsg::Hello { version, pid }));
+            }
             other => {
                 let _ = child.kill();
                 let _ = child.wait();
@@ -149,7 +205,11 @@ impl MpInner {
             }
         }
         stream.set_read_timeout(Some(Duration::from_millis(self.launch.product_timeout_ms)))?;
-        Ok(WorkerProc { child, stream })
+        Ok(WorkerProc {
+            child,
+            stream,
+            shm: false,
+        })
     }
 
     fn send_load(&self, state: &ProcState, w: usize) -> io::Result<()> {
@@ -162,14 +222,63 @@ impl MpInner {
             owned: self.assign[w].iter().map(|&s| s as u64).collect(),
             budget_mb: self.budget_mb,
         };
+        let mut frame = Vec::new();
+        msg.encode(&mut frame).expect("in-memory encode cannot fail");
         let wp = state.workers[w].as_ref().expect("booting an empty slot");
-        msg.encode(&mut (&wp.stream))
+        (&wp.stream).write_all(&frame)?;
+        self.note_ctrl(frame.len() as u64);
+        Ok(())
     }
 
-    /// Fill slot `w` with a freshly forked + loaded worker.
+    /// Offer slot `w` the shared segment. On `ShmReady { ok: true }` the
+    /// worker's rounds move to the shm lane; a refused or failed attach
+    /// (remote host, map error) keeps it on TCP — never fatal. A worker
+    /// that dies during the handshake is dropped for the next round's
+    /// respawn path.
+    fn attach_worker(&self, state: &mut ProcState, w: usize) {
+        let Some(seg) = self.seg.as_ref() else {
+            return;
+        };
+        let msg = WireMsg::ShmAttach {
+            path: seg.path().to_string_lossy().into_owned(),
+            t_max: seg.t_max() as u64,
+            slot: w as u64,
+        };
+        let mut ctrl = 0u64;
+        let outcome: Option<bool> = match state.workers[w].as_ref() {
+            None => return,
+            Some(wp) => {
+                if msg.encode(&mut (&wp.stream)).is_err() {
+                    None
+                } else {
+                    ctrl += frame_len(&msg);
+                    match WireMsg::decode(&mut (&wp.stream)) {
+                        Ok(WireMsg::ShmReady { ok, detail }) => {
+                            ctrl += frame_len(&WireMsg::ShmReady { ok, detail });
+                            Some(ok)
+                        }
+                        _ => None,
+                    }
+                }
+            }
+        };
+        match outcome {
+            Some(ok) => {
+                if let Some(wp) = state.workers[w].as_mut() {
+                    wp.shm = ok;
+                }
+            }
+            None => state.workers[w] = None,
+        }
+        self.note_ctrl(ctrl);
+    }
+
+    /// Fill slot `w` with a freshly forked + loaded (+ attached) worker.
     fn boot(&self, state: &mut ProcState, w: usize) -> io::Result<()> {
-        state.workers[w] = Some(self.spawn_one()?);
-        self.send_load(state, w)
+        state.workers[w] = Some(self.spawn_one(w)?);
+        self.send_load(state, w)?;
+        self.attach_worker(state, w);
+        Ok(())
     }
 
     /// Kill + re-fork slot `w`, replaying current params (counts a restart).
@@ -184,17 +293,18 @@ impl MpInner {
     }
 
     /// One broadcast/gather round with crash recovery (see module docs).
+    ///
+    /// Workers attached to the segment are served over the shm lane (post
+    /// sequence, wait doorbells, copy rows out of shared pages); everyone
+    /// else gets the classic TCP broadcast/gather. The TCP frame is built
+    /// lazily, so an all-shm round performs **zero serialization**.
     fn round(&self, block: &ShardBlock, m: &Mat, out: &mut Mat) {
         let t = m.cols();
         assert_eq!(m.rows(), self.n);
         assert_eq!(out.shape(), (self.n, t));
-        let mut frame = Vec::new();
-        WireMsg::Matmul {
-            block: *block,
-            m: m.clone(),
-        }
-        .encode(&mut frame)
-        .expect("in-memory encode cannot fail");
+        // rounds wider than the segment's probe capacity ride TCP
+        let shm_capable = self.seg.is_some() && t <= self.t_max;
+        let mut frame: Option<Vec<u8>> = None;
 
         let mut state = self.state.lock().unwrap();
         assert!(!state.shut, "backend is shut down");
@@ -202,8 +312,11 @@ impl MpInner {
         let mut done = vec![false; nw];
         let mut covered = vec![false; self.partition.len()];
         let (mut tx, mut rx) = (0u64, 0u64);
+        let mut posted: Option<u64> = None;
+        let mut tcp_used = false;
         for attempt in 0..MAX_ROUND_ATTEMPTS {
-            // 1) make every pending slot live (respawn replays params)
+            // 1) make every pending slot live (respawn replays params and
+            //    re-attaches the segment)
             for w in 0..nw {
                 if !done[w] && state.workers[w].is_none() {
                     if let Err(e) = self.respawn(&mut state, w) {
@@ -214,26 +327,55 @@ impl MpInner {
                     }
                 }
             }
-            // 2) broadcast the RHS to every pending worker (pipelined: all
-            //    writes go out before any gather blocks on a read)
+            let on_shm_lane = |state: &ProcState, w: usize| {
+                shm_capable && matches!(state.workers[w].as_ref(), Some(wp) if wp.shm)
+            };
+            // 2) shm lane: (re)post the round. A re-post after a respawn
+            //    bumps the sequence so every attached worker recomputes —
+            //    survivors rewrite the bits the driver already copied, and
+            //    the replacement (which joined at the stale sequence)
+            //    serves the round fresh.
+            let shm_pending: Vec<usize> = (0..nw)
+                .filter(|&w| !done[w] && on_shm_lane(&state, w))
+                .collect();
+            if !shm_pending.is_empty() {
+                let seg = self.seg.as_ref().expect("shm lane implies a segment");
+                posted = Some(match posted {
+                    None => seg.post_round(block, m),
+                    Some(_) => seg.repost(),
+                });
+            }
+            // 3) TCP lane: broadcast the RHS to every pending worker
+            //    (pipelined: all writes go out before any gather blocks)
             for w in 0..nw {
-                if done[w] {
+                if done[w] || on_shm_lane(&state, w) {
                     continue;
                 }
+                let f = frame.get_or_insert_with(|| {
+                    let mut buf = Vec::new();
+                    WireMsg::Matmul {
+                        block: *block,
+                        m: m.clone(),
+                    }
+                    .encode(&mut buf)
+                    .expect("in-memory encode cannot fail");
+                    buf
+                });
                 let sent = match state.workers[w].as_ref() {
-                    Some(wp) => (&wp.stream).write_all(&frame).is_ok(),
+                    Some(wp) => (&wp.stream).write_all(f).is_ok(),
                     None => continue,
                 };
                 if sent {
-                    tx += frame.len() as u64;
+                    tx += f.len() as u64;
+                    tcp_used = true;
                 } else {
                     state.workers[w] = None; // discovered dead on write
                 }
             }
-            // 3) gather per-shard row-blocks; any failure marks the slot
-            //    dead for the next attempt's deterministic re-dispatch
+            // 4) TCP gathers; any failure marks the slot dead for the next
+            //    attempt's deterministic re-dispatch
             for w in 0..nw {
-                if done[w] {
+                if done[w] || on_shm_lane(&state, w) {
                     continue;
                 }
                 let gathered = match state.workers[w].as_ref() {
@@ -255,6 +397,59 @@ impl MpInner {
                     _ => state.workers[w] = None,
                 }
             }
+            // 5) shm doorbell wait: accept a worker once its ack reaches
+            //    the latest posted sequence, then lift its rows straight
+            //    out of the segment. A worker whose process exits
+            //    mid-round is dropped for the next attempt.
+            if let (Some(seq), false) = (posted, shm_pending.is_empty()) {
+                let seg = self.seg.as_ref().expect("shm lane implies a segment");
+                let deadline =
+                    Instant::now() + Duration::from_millis(self.launch.product_timeout_ms);
+                let mut step = 0u32;
+                loop {
+                    let mut waiting = false;
+                    for &w in &shm_pending {
+                        if done[w] {
+                            continue;
+                        }
+                        if seg.ack_of(w) == seq {
+                            for &s in &self.assign[w] {
+                                let rows = self.partition[s].clone();
+                                assert!(!covered[s], "shard {s} gathered twice in one round");
+                                covered[s] = true;
+                                seg.read_result_rows(
+                                    rows.clone(),
+                                    t,
+                                    &mut out.data_mut()[rows.start * t..rows.end * t],
+                                );
+                            }
+                            done[w] = true;
+                            continue;
+                        }
+                        let died = match state.workers[w].as_mut() {
+                            Some(wp) => matches!(wp.child.try_wait(), Ok(Some(_))),
+                            None => continue,
+                        };
+                        if died {
+                            state.workers[w] = None;
+                        } else {
+                            waiting = true;
+                        }
+                    }
+                    if !waiting {
+                        break;
+                    }
+                    if Instant::now() >= deadline {
+                        for &w in &shm_pending {
+                            if !done[w] {
+                                state.workers[w] = None; // hung: treat as crashed
+                            }
+                        }
+                        break;
+                    }
+                    backoff(&mut step);
+                }
+            }
             if done.iter().all(|&d| d) {
                 break;
             }
@@ -269,6 +464,9 @@ impl MpInner {
         );
         let mut st = self.stats.lock().unwrap();
         st.rounds += 1;
+        if posted.is_some() && !tcp_used {
+            st.shm_rounds += 1;
+        }
         st.bytes_tx += tx;
         st.bytes_rx += rx;
     }
@@ -311,6 +509,9 @@ impl MpInner {
                     let _ = wp.stream.set_read_timeout(Some(Duration::from_millis(
                         self.launch.product_timeout_ms,
                     )));
+                    if ok {
+                        self.note_ctrl(frame_len(&WireMsg::Ping) + frame_len(&WireMsg::Pong));
+                    }
                     ok
                 }
             };
@@ -327,6 +528,10 @@ impl MpInner {
     fn shutdown_workers(&self) {
         let mut state = self.state.lock().unwrap();
         state.shut = true;
+        // wake the data-plane threads first so workers can exit cleanly
+        if let Some(seg) = self.seg.as_ref() {
+            seg.request_shutdown();
+        }
         for slot in state.workers.iter_mut() {
             if let Some(mut wp) = slot.take() {
                 let _ = WireMsg::Shutdown.encode(&mut (&wp.stream));
@@ -367,6 +572,38 @@ impl MultiProcessBackend {
         budget_mb: usize,
         launch: WorkerLaunch,
     ) -> io::Result<MultiProcessBackend> {
+        Self::launch_with(
+            x,
+            kernel,
+            sigma2,
+            n_shards,
+            workers,
+            budget_mb,
+            launch,
+            Transport::Tcp,
+            NumaMode::Off,
+        )
+    }
+
+    /// [`Self::launch`] with an explicit data-plane transport and NUMA
+    /// placement policy. A requested shm transport that cannot create its
+    /// segment (no usable directory, unsupported target, too many
+    /// workers) degrades to TCP with the cause recorded in
+    /// [`ShardBackend::describe`] — launching never fails for transport
+    /// reasons. With `NumaMode::Auto` and ≥ 2 detected nodes, worker
+    /// slots are pinned round-robin across node cpulists.
+    #[allow(clippy::too_many_arguments)]
+    pub fn launch_with(
+        x: Mat,
+        kernel: &dyn Kernel,
+        sigma2: f64,
+        n_shards: usize,
+        workers: usize,
+        budget_mb: usize,
+        launch: WorkerLaunch,
+        transport: Transport,
+        numa: NumaMode,
+    ) -> io::Result<MultiProcessBackend> {
         let kernel_name = kernel_wire_name(kernel)
             .ok_or_else(|| {
                 io::Error::new(
@@ -385,6 +622,43 @@ impl MultiProcessBackend {
         let listener = TcpListener::bind("127.0.0.1:0")?;
         listener.set_nonblocking(true)?;
         let addr = listener.local_addr()?.to_string();
+        let nodes = match numa {
+            NumaMode::Auto => shm::numa_nodes(),
+            NumaMode::Off => Vec::new(),
+        };
+        let (numa_cpus, numa_note) = if nodes.len() >= 2 {
+            let cpus = (0..nw)
+                .map(|w| Some(nodes[w % nodes.len()].cpulist.clone()))
+                .collect();
+            (cpus, format!("numa: {} nodes round-robin", nodes.len()))
+        } else {
+            let note = match numa {
+                NumaMode::Off => "numa: off".to_string(),
+                NumaMode::Auto => "numa: single node, no pinning".to_string(),
+            };
+            (vec![None; nw], note)
+        };
+        let (seg, t_max, shm_fallback) = match &transport {
+            Transport::Tcp => (None, 0, None),
+            Transport::Shm(opts) => {
+                let t_max = opts.resolved_t_max();
+                if nw > shm::MAX_SLOTS {
+                    (
+                        None,
+                        0,
+                        Some(format!(
+                            "{nw} workers exceed {} doorbell slots",
+                            shm::MAX_SLOTS
+                        )),
+                    )
+                } else {
+                    match ShmSegment::create(n, t_max, nw, opts) {
+                        Ok(seg) => (Some(seg), t_max, None),
+                        Err(e) => (None, 0, Some(e.to_string())),
+                    }
+                }
+            }
+        };
         let inner = Arc::new(MpInner {
             n,
             partition,
@@ -403,6 +677,11 @@ impl MultiProcessBackend {
             }),
             stats: Mutex::new(BackendStats::default()),
             stop: AtomicBool::new(false),
+            seg,
+            t_max,
+            shm_fallback,
+            numa_cpus,
+            numa_note,
         });
         {
             let mut state = inner.state.lock().unwrap();
@@ -456,16 +735,40 @@ impl MultiProcessBackend {
         let state = self.inner.state.lock().unwrap();
         state.workers.iter().filter(|w| w.is_some()).count()
     }
+
+    /// Whether the zero-copy data plane is live: the segment exists and
+    /// **every** worker slot is attached to it (a single TCP-lane worker
+    /// means rounds still serialize payload for that lane).
+    pub fn shm_active(&self) -> bool {
+        if self.inner.seg.is_none() {
+            return false;
+        }
+        let state = self.inner.state.lock().unwrap();
+        state
+            .workers
+            .iter()
+            .all(|w| matches!(w, Some(wp) if wp.shm))
+    }
 }
 
 impl ShardBackend for MultiProcessBackend {
     fn describe(&self) -> String {
-        format!(
-            "proc:{} ({} shards @ {})",
-            self.workers(),
-            self.inner.partition.len(),
-            self.inner.addr
-        )
+        let nw = self.workers();
+        let shards = self.inner.partition.len();
+        let addr = &self.inner.addr;
+        match (&self.inner.seg, &self.inner.shm_fallback) {
+            (Some(seg), _) => format!(
+                "shm:{nw} ({shards} shards @ {addr}; seg {} MB t_max {} @ {}; {})",
+                seg.len() >> 20,
+                seg.t_max(),
+                seg.path().display(),
+                self.inner.numa_note
+            ),
+            (None, Some(why)) => {
+                format!("proc:{nw} ({shards} shards @ {addr}; shm unavailable: {why})")
+            }
+            (None, None) => format!("proc:{nw} ({shards} shards @ {addr})"),
+        }
     }
 
     fn n(&self) -> usize {
@@ -494,16 +797,45 @@ impl ShardBackend for MultiProcessBackend {
             raw: raw.to_vec(),
             sigma2,
         };
+        let mut frame = Vec::new();
+        msg.encode(&mut frame).expect("in-memory encode cannot fail");
+        let mut ctrl = 0u64;
+        // pipelined: all writes first, then one ParamsAck per worker. The
+        // acks matter: shm rounds bypass the socket, so without them a
+        // posted round could overtake a SetParams still in a socket
+        // buffer and contract against stale hyperparameters.
+        let mut await_ack = vec![false; state.workers.len()];
         for w in 0..state.workers.len() {
-            let dead = match state.workers[w].as_ref() {
-                Some(wp) => msg.encode(&mut (&wp.stream)).is_err(),
-                None => false,
+            let sent = match state.workers[w].as_ref() {
+                Some(wp) => (&wp.stream).write_all(&frame).is_ok(),
+                None => continue,
             };
-            if dead {
+            if sent {
+                await_ack[w] = true;
+                ctrl += frame.len() as u64;
+            } else {
                 // respawn later with the new params via LoadShard replay
                 state.workers[w] = None;
             }
         }
+        for w in 0..state.workers.len() {
+            if !await_ack[w] {
+                continue;
+            }
+            let acked = match state.workers[w].as_ref() {
+                Some(wp) => matches!(
+                    WireMsg::decode(&mut (&wp.stream)),
+                    Ok(WireMsg::ParamsAck)
+                ),
+                None => continue,
+            };
+            if acked {
+                ctrl += frame_len(&WireMsg::ParamsAck);
+            } else {
+                state.workers[w] = None;
+            }
+        }
+        self.inner.note_ctrl(ctrl);
     }
 
     fn stats(&self) -> BackendStats {

@@ -14,8 +14,9 @@ use crate::tensor::Mat;
 use std::io::{self, Read, Write};
 
 /// Protocol version — bumped on any wire-format change; [`WireMsg::Hello`]
-/// carries it and the driver refuses mismatched workers.
-pub const PROTOCOL_VERSION: u32 = 1;
+/// carries it and the driver refuses mismatched workers. v2 added the
+/// shared-memory attach handshake (ShmAttach/ShmReady) and ParamsAck.
+pub const PROTOCOL_VERSION: u32 = 2;
 
 /// Refuse frames claiming more than this many payload bytes (corruption
 /// guard; a 10⁶-row broadcast at t = 64 is ~0.5 GiB, well under the cap).
@@ -87,6 +88,28 @@ pub enum WireMsg {
         /// human-readable cause
         message: String,
     },
+    /// driver → worker: map the shared-memory segment at `path` and serve
+    /// rounds from it (doorbell slot `slot`); sent once after LoadShard
+    ShmAttach {
+        /// segment file path (same host by construction)
+        path: String,
+        /// probe capacity the segment was sized for
+        t_max: u64,
+        /// this worker's doorbell slot index
+        slot: u64,
+    },
+    /// worker → driver: outcome of [`WireMsg::ShmAttach`] — a failed map
+    /// keeps that worker on the TCP data plane
+    ShmReady {
+        /// whether the segment mapped and validated
+        ok: bool,
+        /// failure cause when `ok` is false (diagnostics)
+        detail: String,
+    },
+    /// worker → driver: SetParams applied. Needed because the shm data
+    /// plane bypasses the socket: without an ack, a posted round could
+    /// race a SetParams still in the socket buffer.
+    ParamsAck,
 }
 
 fn put_u32(buf: &mut Vec<u8>, v: u32) {
@@ -238,6 +261,9 @@ impl WireMsg {
             WireMsg::Pong => 7,
             WireMsg::Shutdown => 8,
             WireMsg::Err { .. } => 9,
+            WireMsg::ShmAttach { .. } => 10,
+            WireMsg::ShmReady { .. } => 11,
+            WireMsg::ParamsAck => 12,
         }
     }
 
@@ -292,8 +318,17 @@ impl WireMsg {
                     put_mat(&mut payload, &b.data);
                 }
             }
-            WireMsg::Ping | WireMsg::Pong | WireMsg::Shutdown => {}
+            WireMsg::Ping | WireMsg::Pong | WireMsg::Shutdown | WireMsg::ParamsAck => {}
             WireMsg::Err { message } => put_str(&mut payload, message),
+            WireMsg::ShmAttach { path, t_max, slot } => {
+                put_str(&mut payload, path);
+                put_u64(&mut payload, *t_max);
+                put_u64(&mut payload, *slot);
+            }
+            WireMsg::ShmReady { ok, detail } => {
+                payload.push(u8::from(*ok));
+                put_str(&mut payload, detail);
+            }
         }
         let mut frame = Vec::with_capacity(9 + payload.len());
         frame.push(self.tag());
@@ -372,6 +407,20 @@ impl WireMsg {
             7 => WireMsg::Pong,
             8 => WireMsg::Shutdown,
             9 => WireMsg::Err { message: c.str()? },
+            10 => WireMsg::ShmAttach {
+                path: c.str()?,
+                t_max: c.u64()?,
+                slot: c.u64()?,
+            },
+            11 => WireMsg::ShmReady {
+                ok: match c.u8()? {
+                    0 => false,
+                    1 => true,
+                    _ => return Err(bad("bad bool tag")),
+                },
+                detail: c.str()?,
+            },
+            12 => WireMsg::ParamsAck,
             _ => return Err(bad("unknown message tag")),
         };
         c.done()?;
@@ -444,6 +493,20 @@ mod tests {
         roundtrip(WireMsg::Err {
             message: "worker died".into(),
         });
+        roundtrip(WireMsg::ShmAttach {
+            path: "/dev/shm/bbmm-seg-1-0.shm".into(),
+            t_max: 64,
+            slot: 3,
+        });
+        roundtrip(WireMsg::ShmReady {
+            ok: true,
+            detail: String::new(),
+        });
+        roundtrip(WireMsg::ShmReady {
+            ok: false,
+            detail: "mmap failed".into(),
+        });
+        roundtrip(WireMsg::ParamsAck);
     }
 
     #[test]

@@ -1,0 +1,799 @@
+//! Zero-copy shared-memory data plane + NUMA placement helpers for the
+//! multi-process shard backend.
+//!
+//! [`super::proc::MultiProcessBackend`] serializes the O(n·t) broadcast
+//! probe and every per-shard result panel through a TCP socket **per mBCG
+//! iteration** — even when driver and workers share one host. This module
+//! removes that copy chain: the driver creates one memory-mapped segment
+//! file (under `/dev/shm` when available, so pages live in tmpfs and
+//! never touch disk), every forked worker maps the same file, and a
+//! product round becomes
+//!
+//! 1. driver writes the probe block and a round descriptor into the
+//!    segment, then bumps a **sequence word** (Release store);
+//! 2. each worker observes the new sequence (Acquire load), reads the
+//!    probe, contracts its owned shards, writes the result rows at their
+//!    global offsets, and rings its **doorbell** (stores the sequence it
+//!    served, Release);
+//! 3. the driver waits on the doorbells and copies each worker's rows
+//!    straight out of the segment.
+//!
+//! Zero bytes of payload cross a socket and nothing is serialized — the
+//! f64 panels are memcpy'd in and out of shared pages. TCP remains the
+//! control plane (LoadShard, SetParams, heartbeats) and the fallback when
+//! mapping fails, so remote workers keep working unchanged.
+//!
+//! The mapping uses a raw `mmap` FFI shim declared here (the workspace
+//! bakes in a zero-external-dependency rule, so no `libc`/`memmap`
+//! crates); non-unix or non-64-bit targets get an `Unsupported` error and
+//! the backend silently stays on TCP.
+//!
+//! NUMA helpers live here too: [`numa_nodes`] parses
+//! `/sys/devices/system/node/`, [`pin_to_cpus`] wraps
+//! `sched_setaffinity`, and the backend round-robins worker slots across
+//! nodes so each worker first-touches its panels on its own node.
+
+use crate::kernels::ShardBlock;
+use crate::tensor::Mat;
+use std::fs::OpenOptions;
+use std::io;
+use std::ops::Range;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Segment file magic ("BBMM" + "SHM1", little-endian u64).
+const MAGIC: u64 = 0x314d_4853_4d4d_4242;
+
+/// Bumped on any segment layout change; `open` refuses mismatches (a
+/// respawned worker from a newer binary must never misread the map).
+const SHM_LAYOUT_VERSION: u64 = 1;
+
+// -- fixed header offsets (all 8-byte aligned u64 cells) ----------------
+const OFF_MAGIC: usize = 0;
+const OFF_VERSION: usize = 8;
+const OFF_N: usize = 16;
+const OFF_TMAX: usize = 24;
+const OFF_SLOTS: usize = 32;
+const OFF_SHUTDOWN: usize = 40;
+/// round sequence word, alone on its cache line
+const OFF_SEQ: usize = 64;
+/// round descriptor: which kernel function the probe should hit
+const OFF_BLOCK_CODE: usize = 128;
+const OFF_BLOCK_NOISE: usize = 136;
+const OFF_BLOCK_PARAM: usize = 144;
+const OFF_T: usize = 152;
+/// per-worker doorbells, one cache line each
+const OFF_ACKS: usize = 192;
+const ACK_STRIDE: usize = 64;
+/// header page; probe region starts here (page-aligned)
+const HEADER_BYTES: usize = 4096;
+
+/// Doorbell slots that fit in the fixed header page.
+pub const MAX_SLOTS: usize = (HEADER_BYTES - OFF_ACKS) / ACK_STRIDE;
+
+/// Total file size for an `n × t_max` probe + result pair.
+fn segment_len(n: usize, t_max: usize) -> usize {
+    HEADER_BYTES + 2 * n * t_max * 8
+}
+
+/// Segment tuning knobs (the `Transport::Shm` payload).
+#[derive(Debug, Clone, Default)]
+pub struct ShmOptions {
+    /// directory override for the segment file. `None` tries `/dev/shm`
+    /// (tmpfs — shared pages, no disk) and then the system temp dir; a
+    /// `Some` dir is tried alone, which doubles as the mapping-failure
+    /// seam the fallback tests use.
+    pub dir: Option<PathBuf>,
+    /// probe capacity in columns; rounds wider than this fall back to TCP
+    /// per round. 0 means the default (`BBMM_SHM_TMAX`, else 64 — wide
+    /// enough for every mBCG probe block in the tree).
+    pub t_max: usize,
+}
+
+impl ShmOptions {
+    /// The effective probe capacity (resolving 0 through the environment).
+    pub fn resolved_t_max(&self) -> usize {
+        if self.t_max > 0 {
+            return self.t_max;
+        }
+        std::env::var("BBMM_SHM_TMAX")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&v| v > 0)
+            .unwrap_or(64)
+    }
+}
+
+// -- raw mmap shim (no external crates) ---------------------------------
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod sys {
+    // The two calls the data plane needs, declared directly against libc's
+    // C ABI. The flag values are identical on Linux and macOS.
+    pub const PROT_READ: i32 = 0x1;
+    pub const PROT_WRITE: i32 = 0x2;
+    pub const MAP_SHARED: i32 = 0x01;
+    extern "C" {
+        pub fn mmap(
+            addr: *mut u8,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut u8;
+        pub fn munmap(addr: *mut u8, len: usize) -> i32;
+    }
+}
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+fn map_file(file: &std::fs::File, len: usize) -> io::Result<*mut u8> {
+    use std::os::unix::io::AsRawFd;
+    let ptr = unsafe {
+        sys::mmap(
+            std::ptr::null_mut(),
+            len,
+            sys::PROT_READ | sys::PROT_WRITE,
+            sys::MAP_SHARED,
+            file.as_raw_fd(),
+            0,
+        )
+    };
+    if ptr.is_null() || ptr as isize == -1 {
+        return Err(io::Error::new(io::ErrorKind::Other, "mmap failed"));
+    }
+    Ok(ptr)
+}
+
+#[cfg(not(all(unix, target_pointer_width = "64")))]
+fn map_file(_file: &std::fs::File, _len: usize) -> io::Result<*mut u8> {
+    Err(io::Error::new(
+        io::ErrorKind::Unsupported,
+        "shared-memory transport needs a 64-bit unix target",
+    ))
+}
+
+fn unmap(ptr: *mut u8, len: usize) {
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    unsafe {
+        let _ = sys::munmap(ptr, len);
+    }
+    #[cfg(not(all(unix, target_pointer_width = "64")))]
+    let _ = (ptr, len);
+}
+
+static SEG_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// One mapped segment handle. The driver `create`s (and owns — the file
+/// is unlinked on drop); each worker `open`s the same path. All header
+/// words are accessed through `AtomicU64` views of the mapped page, so
+/// the seqlock/doorbell protocol has real Acquire/Release edges across
+/// the processes sharing the map.
+pub struct ShmSegment {
+    ptr: *mut u8,
+    len: usize,
+    path: PathBuf,
+    n: usize,
+    t_max: usize,
+    n_slots: usize,
+    owner: bool,
+}
+
+// The raw pointer aliases a shared file mapping; all mutation goes
+// through atomics or region copies governed by the seq/doorbell protocol.
+unsafe impl Send for ShmSegment {}
+unsafe impl Sync for ShmSegment {}
+
+impl ShmSegment {
+    /// Create, size, and stamp a fresh segment file for an `n`-row
+    /// problem with `n_slots` worker doorbells. Tries `/dev/shm` first
+    /// (unless `opts.dir` overrides), then the temp dir; any failure is
+    /// the caller's cue to stay on TCP.
+    pub fn create(n: usize, t_max: usize, n_slots: usize, opts: &ShmOptions) -> io::Result<ShmSegment> {
+        if n == 0 || t_max == 0 {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                "shm segment needs n ≥ 1 and t_max ≥ 1",
+            ));
+        }
+        if n_slots == 0 || n_slots > MAX_SLOTS {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                format!("shm doorbell slots must be in 1..={MAX_SLOTS}, got {n_slots}"),
+            ));
+        }
+        let len = segment_len(n, t_max);
+        let dirs: Vec<PathBuf> = match &opts.dir {
+            Some(d) => vec![d.clone()],
+            None => {
+                let mut v = Vec::new();
+                let dev = PathBuf::from("/dev/shm");
+                if dev.is_dir() {
+                    v.push(dev);
+                }
+                v.push(std::env::temp_dir());
+                v
+            }
+        };
+        let mut last_err = io::Error::new(io::ErrorKind::NotFound, "no shm directory candidate");
+        for dir in dirs {
+            let name = format!(
+                "bbmm-seg-{}-{}.shm",
+                std::process::id(),
+                SEG_COUNTER.fetch_add(1, Ordering::Relaxed)
+            );
+            let path = dir.join(name);
+            let mapped = (|| -> io::Result<*mut u8> {
+                let file = OpenOptions::new()
+                    .read(true)
+                    .write(true)
+                    .create_new(true)
+                    .open(&path)?;
+                file.set_len(len as u64)?;
+                map_file(&file, len)
+            })();
+            match mapped {
+                Ok(ptr) => {
+                    let seg = ShmSegment {
+                        ptr,
+                        len,
+                        path,
+                        n,
+                        t_max,
+                        n_slots,
+                        owner: true,
+                    };
+                    seg.atom(OFF_MAGIC).store(MAGIC, Ordering::Relaxed);
+                    seg.atom(OFF_N).store(n as u64, Ordering::Relaxed);
+                    seg.atom(OFF_TMAX).store(t_max as u64, Ordering::Relaxed);
+                    seg.atom(OFF_SLOTS).store(n_slots as u64, Ordering::Relaxed);
+                    seg.atom(OFF_SHUTDOWN).store(0, Ordering::Relaxed);
+                    seg.atom(OFF_SEQ).store(0, Ordering::Relaxed);
+                    for slot in 0..n_slots {
+                        seg.atom(OFF_ACKS + slot * ACK_STRIDE).store(0, Ordering::Relaxed);
+                    }
+                    // publish last: an `open` racing this create sees the
+                    // version only after the geometry words are in place
+                    seg.atom(OFF_VERSION)
+                        .store(SHM_LAYOUT_VERSION, Ordering::Release);
+                    return Ok(seg);
+                }
+                Err(e) => last_err = e,
+            }
+        }
+        Err(last_err)
+    }
+
+    /// Map an existing segment file (the worker side of ShmAttach),
+    /// validating magic, layout version, and geometry against the file
+    /// length before trusting any offset.
+    pub fn open(path: &Path) -> io::Result<ShmSegment> {
+        use std::io::Read;
+        let mut file = OpenOptions::new().read(true).write(true).open(path)?;
+        let mut head = [0u8; 48];
+        file.read_exact(&mut head)?;
+        let word = |off: usize| u64::from_le_bytes(head[off..off + 8].try_into().unwrap());
+        let bad = |msg: &str| io::Error::new(io::ErrorKind::InvalidData, format!("shm open: {msg}"));
+        if word(OFF_MAGIC) != MAGIC {
+            return Err(bad("bad magic"));
+        }
+        if word(OFF_VERSION) != SHM_LAYOUT_VERSION {
+            return Err(bad("layout version mismatch"));
+        }
+        let n = word(OFF_N) as usize;
+        let t_max = word(OFF_TMAX) as usize;
+        let n_slots = word(OFF_SLOTS) as usize;
+        if n == 0 || t_max == 0 || n_slots == 0 || n_slots > MAX_SLOTS {
+            return Err(bad("corrupt geometry"));
+        }
+        let len = segment_len(n, t_max);
+        if file.metadata()?.len() as usize != len {
+            return Err(bad("file length does not match geometry"));
+        }
+        let ptr = map_file(&file, len)?;
+        Ok(ShmSegment {
+            ptr,
+            len,
+            path: path.to_path_buf(),
+            n,
+            t_max,
+            n_slots,
+            owner: false,
+        })
+    }
+
+    fn atom(&self, off: usize) -> &AtomicU64 {
+        debug_assert!(off % 8 == 0 && off + 8 <= HEADER_BYTES);
+        // mmap returns page-aligned memory, so every 8-aligned header
+        // offset is a valid AtomicU64 cell
+        unsafe { &*(self.ptr.add(off) as *const AtomicU64) }
+    }
+
+    fn result_off(&self) -> usize {
+        HEADER_BYTES + self.n * self.t_max * 8
+    }
+
+    /// Row count the segment was sized for.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Probe capacity in columns.
+    pub fn t_max(&self) -> usize {
+        self.t_max
+    }
+
+    /// Worker doorbell slot count.
+    pub fn n_slots(&self) -> usize {
+        self.n_slots
+    }
+
+    /// The segment file's path (travels to workers in ShmAttach).
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Mapped byte length.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True for the degenerate zero-length map (never constructed; keeps
+    /// clippy's `len_without_is_empty` satisfied).
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Current round sequence (Acquire: pairs with [`Self::post_round`]).
+    pub fn seq(&self) -> u64 {
+        self.atom(OFF_SEQ).load(Ordering::Acquire)
+    }
+
+    /// Driver side: publish one round — copy the probe block in, write
+    /// the descriptor, then bump the sequence (Release, so an Acquire
+    /// reader of the new sequence sees the complete payload). Returns the
+    /// new sequence number workers will ack.
+    pub fn post_round(&self, block: &ShardBlock, m: &Mat) -> u64 {
+        let t = m.cols();
+        assert_eq!(m.rows(), self.n, "probe row count mismatch");
+        assert!(t >= 1 && t <= self.t_max, "probe block wider than the segment");
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                m.data().as_ptr(),
+                self.ptr.add(HEADER_BYTES) as *mut f64,
+                self.n * t,
+            );
+        }
+        let (code, noise, param) = block_code(block);
+        self.atom(OFF_BLOCK_CODE).store(code, Ordering::Relaxed);
+        self.atom(OFF_BLOCK_NOISE).store(noise.to_bits(), Ordering::Relaxed);
+        self.atom(OFF_BLOCK_PARAM).store(param, Ordering::Relaxed);
+        self.atom(OFF_T).store(t as u64, Ordering::Relaxed);
+        self.atom(OFF_SEQ).fetch_add(1, Ordering::Release) + 1
+    }
+
+    /// Driver side: re-dispatch the already-posted round under a fresh
+    /// sequence number (crash recovery: the payload and descriptor are
+    /// still in place; a respawned worker joined at the stale sequence
+    /// and needs a new edge to serve). Every attached worker recomputes —
+    /// shard fills are deterministic, so the rewrite is bit-identical.
+    pub fn repost(&self) -> u64 {
+        self.atom(OFF_SEQ).fetch_add(1, Ordering::Release) + 1
+    }
+
+    /// Worker side: decode the posted round descriptor.
+    pub fn round_desc(&self) -> io::Result<(ShardBlock, usize)> {
+        let code = self.atom(OFF_BLOCK_CODE).load(Ordering::Relaxed);
+        let noise = f64::from_bits(self.atom(OFF_BLOCK_NOISE).load(Ordering::Relaxed));
+        let param = self.atom(OFF_BLOCK_PARAM).load(Ordering::Relaxed) as usize;
+        let t = self.atom(OFF_T).load(Ordering::Relaxed) as usize;
+        let block = match code {
+            0 => ShardBlock::Value { noise: None },
+            1 => ShardBlock::Value { noise: Some(noise) },
+            2 => ShardBlock::DParam(param),
+            _ => {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    "shm: unknown round descriptor",
+                ))
+            }
+        };
+        if t == 0 || t > self.t_max {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                "shm: round width out of range",
+            ));
+        }
+        Ok((block, t))
+    }
+
+    /// Worker side: copy the posted `n × t` probe block out of the map.
+    pub fn read_probe(&self, t: usize) -> Mat {
+        assert!(t >= 1 && t <= self.t_max);
+        let mut data = vec![0.0f64; self.n * t];
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                self.ptr.add(HEADER_BYTES) as *const f64,
+                data.as_mut_ptr(),
+                self.n * t,
+            );
+        }
+        Mat::from_vec(self.n, t, data)
+    }
+
+    /// Worker side: place `rows × t` result values at global row `row0`
+    /// (rows are packed at the **current round's** `t`, so the driver can
+    /// lift a shard's range out in one contiguous copy).
+    pub fn write_result_rows(&self, row0: usize, t: usize, data: &[f64]) {
+        assert!(t >= 1 && t <= self.t_max);
+        assert_eq!(data.len() % t, 0);
+        let rows = data.len() / t;
+        assert!(row0 + rows <= self.n, "result rows out of range");
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                data.as_ptr(),
+                (self.ptr.add(self.result_off()) as *mut f64).add(row0 * t),
+                data.len(),
+            );
+        }
+    }
+
+    /// Driver side: copy a shard's result rows out (after that worker's
+    /// doorbell confirmed the round — the Acquire in [`Self::ack_of`]
+    /// pairs with the worker's Release in [`Self::ack`]).
+    pub fn read_result_rows(&self, rows: Range<usize>, t: usize, out: &mut [f64]) {
+        assert!(t >= 1 && t <= self.t_max);
+        assert!(rows.end <= self.n);
+        assert_eq!(out.len(), rows.len() * t);
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                (self.ptr.add(self.result_off()) as *const f64).add(rows.start * t),
+                out.as_mut_ptr(),
+                out.len(),
+            );
+        }
+    }
+
+    /// Worker side: ring slot `slot`'s doorbell for sequence `seq`
+    /// (Release: publishes the result rows written before it).
+    pub fn ack(&self, slot: usize, seq: u64) {
+        assert!(slot < self.n_slots);
+        self.atom(OFF_ACKS + slot * ACK_STRIDE).store(seq, Ordering::Release);
+    }
+
+    /// Driver side: the last sequence slot `slot` acked.
+    pub fn ack_of(&self, slot: usize) -> u64 {
+        assert!(slot < self.n_slots);
+        self.atom(OFF_ACKS + slot * ACK_STRIDE).load(Ordering::Acquire)
+    }
+
+    /// Ask every attached worker's data-plane thread to exit.
+    pub fn request_shutdown(&self) {
+        self.atom(OFF_SHUTDOWN).store(1, Ordering::Release);
+    }
+
+    /// Whether shutdown was requested (polled by worker data threads).
+    pub fn shutdown_requested(&self) -> bool {
+        self.atom(OFF_SHUTDOWN).load(Ordering::Acquire) != 0
+    }
+}
+
+impl Drop for ShmSegment {
+    fn drop(&mut self) {
+        unmap(self.ptr, self.len);
+        if self.owner {
+            let _ = std::fs::remove_file(&self.path);
+        }
+    }
+}
+
+fn block_code(b: &ShardBlock) -> (u64, f64, u64) {
+    match b {
+        ShardBlock::Value { noise: None } => (0, 0.0, 0),
+        ShardBlock::Value { noise: Some(s2) } => (1, *s2, 0),
+        ShardBlock::DParam(p) => (2, 0.0, *p as u64),
+    }
+}
+
+/// Poll backoff for doorbell/sequence waits: brief spin, then yields,
+/// then short sleeps — a single-CPU host must never busy-wait its peer
+/// off the core (the forked worker and the driver may share one core).
+pub fn backoff(step: &mut u32) {
+    *step = step.saturating_add(1);
+    if *step < 64 {
+        std::hint::spin_loop();
+    } else if *step < 256 {
+        std::thread::yield_now();
+    } else {
+        std::thread::sleep(std::time::Duration::from_micros(200));
+    }
+}
+
+// -- NUMA topology + pinning --------------------------------------------
+
+/// `--numa` placement policy for the worker fleet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NumaMode {
+    /// detect nodes, round-robin workers across them, pin before load
+    Auto,
+    /// no detection, no pinning (the scheduler places workers freely)
+    Off,
+}
+
+impl NumaMode {
+    /// Parse the CLI form; errors name the accepted grammar.
+    pub fn parse(s: &str) -> Result<NumaMode, String> {
+        match s {
+            "auto" => Ok(NumaMode::Auto),
+            "off" => Ok(NumaMode::Off),
+            _ => Err(format!("unknown numa mode '{s}' (expected auto | off)")),
+        }
+    }
+}
+
+impl std::fmt::Display for NumaMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NumaMode::Auto => write!(f, "auto"),
+            NumaMode::Off => write!(f, "off"),
+        }
+    }
+}
+
+/// One NUMA node: its id and the CPUs it owns.
+#[derive(Debug, Clone)]
+pub struct NumaNode {
+    /// node index (`nodeN` under the sysfs root)
+    pub id: usize,
+    /// raw kernel cpulist string (e.g. `0-3,8-11`), handed to workers
+    pub cpulist: String,
+    /// the parsed CPU ids
+    pub cpus: Vec<usize>,
+}
+
+/// Parse a kernel cpulist (`0-3,8,10-11`) into CPU ids. Unparseable
+/// pieces are skipped — topology is best-effort, never fatal.
+pub fn parse_cpulist(s: &str) -> Vec<usize> {
+    let mut cpus = Vec::new();
+    for part in s.trim().split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        if let Some((a, b)) = part.split_once('-') {
+            if let (Ok(a), Ok(b)) = (a.trim().parse::<usize>(), b.trim().parse::<usize>()) {
+                if a <= b && b - a <= 4096 {
+                    cpus.extend(a..=b);
+                }
+            }
+        } else if let Ok(c) = part.parse::<usize>() {
+            cpus.push(c);
+        }
+    }
+    cpus
+}
+
+/// Detect NUMA topology from `/sys/devices/system/node/`. Empty when the
+/// sysfs tree is absent (containers, non-Linux) — callers treat that as
+/// "no placement to do".
+pub fn numa_nodes() -> Vec<NumaNode> {
+    numa_nodes_at(Path::new("/sys/devices/system/node"))
+}
+
+/// [`numa_nodes`] against an arbitrary sysfs-shaped root (test seam).
+pub fn numa_nodes_at(root: &Path) -> Vec<NumaNode> {
+    let mut nodes = Vec::new();
+    let Ok(entries) = std::fs::read_dir(root) else {
+        return nodes;
+    };
+    for entry in entries.flatten() {
+        let name = entry.file_name().to_string_lossy().into_owned();
+        let Some(idx) = name.strip_prefix("node") else {
+            continue;
+        };
+        let Ok(id) = idx.parse::<usize>() else {
+            continue;
+        };
+        let Ok(raw) = std::fs::read_to_string(entry.path().join("cpulist")) else {
+            continue;
+        };
+        let cpus = parse_cpulist(&raw);
+        if !cpus.is_empty() {
+            nodes.push(NumaNode {
+                id,
+                cpulist: raw.trim().to_string(),
+                cpus,
+            });
+        }
+    }
+    nodes.sort_by_key(|node| node.id);
+    nodes
+}
+
+/// Pin the calling process (and its future threads) to `cpus` via
+/// `sched_setaffinity`. Returns whether the pin took effect; on
+/// non-Linux targets this is a no-op returning `false`. Workers call it
+/// **before** LoadShard builds panels, so first-touch places the pages
+/// on the pinned node.
+#[cfg(target_os = "linux")]
+pub fn pin_to_cpus(cpus: &[usize]) -> bool {
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    }
+    let mut mask = [0u64; 16]; // 1024 CPUs
+    let mut any = false;
+    for &c in cpus {
+        if c < 1024 {
+            mask[c / 64] |= 1 << (c % 64);
+            any = true;
+        }
+    }
+    if !any {
+        return false;
+    }
+    unsafe { sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) == 0 }
+}
+
+/// Non-Linux stub: affinity is best-effort, so "couldn't pin" is fine.
+#[cfg(not(target_os = "linux"))]
+pub fn pin_to_cpus(_cpus: &[usize]) -> bool {
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_math_is_page_aligned_and_bounded() {
+        assert_eq!(MAX_SLOTS, 61);
+        assert_eq!(segment_len(100, 8), 4096 + 2 * 100 * 8 * 8);
+        assert_eq!(HEADER_BYTES % 4096, 0);
+        assert!(OFF_ACKS + MAX_SLOTS * ACK_STRIDE <= HEADER_BYTES);
+        // seq, descriptor, and doorbells never share a cache line
+        assert!(OFF_SEQ >= OFF_SHUTDOWN + 8 && OFF_BLOCK_CODE >= OFF_SEQ + 64);
+        assert!(OFF_ACKS >= OFF_T + 8);
+    }
+
+    #[test]
+    fn options_resolve_t_max_default() {
+        assert_eq!(ShmOptions::default().resolved_t_max(), 64);
+        assert_eq!(
+            ShmOptions {
+                t_max: 7,
+                ..ShmOptions::default()
+            }
+            .resolved_t_max(),
+            7
+        );
+    }
+
+    #[test]
+    fn create_open_roundtrip_runs_the_doorbell_protocol() {
+        let n = 12;
+        let seg = ShmSegment::create(n, 4, 2, &ShmOptions::default()).expect("create segment");
+        assert_eq!((seg.n(), seg.t_max(), seg.n_slots()), (n, 4, 2));
+        assert_eq!(seg.len(), segment_len(n, 4));
+        assert!(!seg.is_empty());
+        assert_eq!(seg.seq(), 0);
+        let path = seg.path().to_path_buf();
+        assert!(path.exists());
+
+        // second handle = the worker's view of the same pages
+        let peer = ShmSegment::open(&path).expect("open segment");
+        assert_eq!((peer.n(), peer.t_max(), peer.n_slots()), (n, 4, 2));
+
+        // driver posts a round; the peer sees payload + descriptor
+        let m = Mat::from_fn(n, 3, |i, j| (i * 3 + j) as f64 - 5.5);
+        let seq = seg.post_round(&ShardBlock::Value { noise: Some(0.25) }, &m);
+        assert_eq!(seq, 1);
+        assert_eq!(peer.seq(), 1);
+        let (block, t) = peer.round_desc().unwrap();
+        assert_eq!(block, ShardBlock::Value { noise: Some(0.25) });
+        assert_eq!(t, 3);
+        assert_eq!(peer.read_probe(3).max_abs_diff(&m), 0.0);
+
+        // peer writes its result rows and rings the doorbell
+        let rows = 4..9;
+        let vals: Vec<f64> = (0..rows.len() * t).map(|v| v as f64 * 0.5).collect();
+        peer.write_result_rows(rows.start, t, &vals);
+        peer.ack(1, seq);
+        assert_eq!(seg.ack_of(1), 1);
+        assert_eq!(seg.ack_of(0), 0);
+        let mut got = vec![0.0; vals.len()];
+        seg.read_result_rows(rows, t, &mut got);
+        assert_eq!(got, vals);
+
+        // re-dispatch bumps the sequence without touching the payload
+        assert_eq!(seg.repost(), 2);
+        assert_eq!(peer.read_probe(3).max_abs_diff(&m), 0.0);
+
+        // descriptor codes cover every ShardBlock variant
+        for b in [ShardBlock::Value { noise: None }, ShardBlock::DParam(1)] {
+            seg.post_round(&b, &m);
+            assert_eq!(peer.round_desc().unwrap().0, b);
+        }
+
+        assert!(!seg.shutdown_requested());
+        seg.request_shutdown();
+        assert!(peer.shutdown_requested());
+
+        drop(peer); // non-owner: file stays
+        assert!(path.exists());
+        drop(seg); // owner: file unlinked
+        assert!(!path.exists());
+    }
+
+    #[test]
+    fn create_rejects_bad_geometry_and_missing_dirs() {
+        let opts = ShmOptions::default();
+        assert!(ShmSegment::create(0, 4, 1, &opts).is_err());
+        assert!(ShmSegment::create(8, 0, 1, &opts).is_err());
+        assert!(ShmSegment::create(8, 4, 0, &opts).is_err());
+        assert!(ShmSegment::create(8, 4, MAX_SLOTS + 1, &opts).is_err());
+        // a Some(dir) override is tried alone — the fallback seam
+        let gone = ShmOptions {
+            dir: Some(std::env::temp_dir().join("bbmm-no-such-dir-shm-test")),
+            t_max: 4,
+        };
+        assert!(ShmSegment::create(8, 4, 1, &gone).is_err());
+    }
+
+    #[test]
+    fn open_rejects_foreign_files() {
+        let path = std::env::temp_dir().join(format!(
+            "bbmm-shm-foreign-{}.bin",
+            std::process::id()
+        ));
+        std::fs::write(&path, vec![0u8; 8192]).unwrap();
+        assert!(ShmSegment::open(&path).is_err(), "zero magic must be refused");
+        std::fs::remove_file(&path).unwrap();
+        assert!(ShmSegment::open(&path).is_err(), "missing file must error");
+    }
+
+    #[test]
+    fn cpulists_parse_kernel_syntax() {
+        assert_eq!(parse_cpulist("0-3,8,10-11"), vec![0, 1, 2, 3, 8, 10, 11]);
+        assert_eq!(parse_cpulist("0\n"), vec![0]);
+        assert_eq!(parse_cpulist(" 2 - 4 , 7 "), vec![2, 3, 4, 7]);
+        assert!(parse_cpulist("").is_empty());
+        assert!(parse_cpulist("x-y,,-").is_empty());
+        assert_eq!(parse_cpulist("5-3"), Vec::<usize>::new(), "inverted range skipped");
+    }
+
+    #[test]
+    fn numa_modes_parse() {
+        assert_eq!(NumaMode::parse("auto").unwrap(), NumaMode::Auto);
+        assert_eq!(NumaMode::parse("off").unwrap(), NumaMode::Off);
+        assert!(NumaMode::parse("on").is_err());
+        assert_eq!(NumaMode::Auto.to_string(), "auto");
+    }
+
+    #[test]
+    fn topology_parses_a_sysfs_shaped_tree() {
+        let root = std::env::temp_dir().join(format!("bbmm-numa-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        for (node, list) in [("node0", "0-1\n"), ("node1", "2-3\n")] {
+            std::fs::create_dir_all(root.join(node)).unwrap();
+            std::fs::write(root.join(node).join("cpulist"), list).unwrap();
+        }
+        // distractors: no cpulist, not a node dir
+        std::fs::create_dir_all(root.join("node7")).unwrap();
+        std::fs::create_dir_all(root.join("cpu0")).unwrap();
+        let nodes = numa_nodes_at(&root);
+        assert_eq!(nodes.len(), 2);
+        assert_eq!((nodes[0].id, nodes[0].cpus.clone()), (0, vec![0, 1]));
+        assert_eq!((nodes[1].id, nodes[1].cpulist.as_str()), (1, "2-3"));
+        std::fs::remove_dir_all(&root).unwrap();
+        assert!(numa_nodes_at(&root).is_empty(), "missing tree is no topology");
+    }
+
+    #[test]
+    fn pinning_is_a_safe_call_on_any_host() {
+        // no assertion on the outcome — CI may or may not allow affinity
+        // calls — only that the FFI path neither crashes nor errors out
+        // of the harness; an empty set is always refused
+        assert!(!pin_to_cpus(&[]));
+        let _ = pin_to_cpus(&[0]);
+    }
+}

@@ -22,12 +22,17 @@
 
 use super::contract_panel_rows;
 use super::protocol::{ResultBlock, WireMsg, PROTOCOL_VERSION};
+use super::shm::{backoff, parse_cpulist, pin_to_cpus, ShmSegment};
 use crate::kernels::operator::{stationary_apply, TileFn};
 use crate::kernels::{Kernel, Matern12, Matern32, Matern52, Rbf, ShardBlock, ShardedKernelOp};
 use crate::linalg::op::MmmPlan;
 use crate::tensor::Mat;
 use std::io;
 use std::net::TcpStream;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
 
 /// Construct a kernel from its wire name (parameters are overwritten by
 /// the `raw` vector that travels with it). Inverse of
@@ -107,6 +112,11 @@ impl WorkerState {
     /// This worker's panel plan (its own `auto_sharded` decision).
     pub fn plan(&self) -> MmmPlan {
         self.plan
+    }
+
+    /// Total row count of the problem this worker was loaded with.
+    pub fn n(&self) -> usize {
+        self.op.x().rows()
     }
 
     fn build_panels(&mut self) {
@@ -217,11 +227,118 @@ impl WorkerState {
         }
         blocks
     }
+
+    /// Shared-memory variant of [`Self::product`]: compute the owned
+    /// row-blocks and place them directly at their global row offsets in
+    /// the segment's result region — no serialization, no socket.
+    pub fn product_into_segment(&self, seg: &ShmSegment, block: &ShardBlock, m: &Mat) {
+        let t = m.cols();
+        for rb in self.product(block, m) {
+            let row0 = self.op.shards()[rb.shard as usize].start;
+            seg.write_result_rows(row0, t, rb.data.data());
+        }
+    }
+}
+
+/// The worker-side shared-memory data plane: poll the round sequence, and
+/// for each new round read the descriptor + probe, contract the owned
+/// shards straight into the segment, and ring this worker's doorbell.
+/// Exits on the control loop's stop flag or the segment's shutdown word.
+///
+/// `joined` is the sequence already acked at attach time — rounds posted
+/// before this worker existed are NOT served here; the driver re-posts
+/// the in-flight round under a fresh sequence after a respawn, which is
+/// the edge that makes every attached worker (re)compute it.
+fn shm_data_plane(
+    seg: Arc<ShmSegment>,
+    slot: usize,
+    joined: u64,
+    state: Arc<Mutex<Option<WorkerState>>>,
+    stop: Arc<AtomicBool>,
+) {
+    let mut served = joined;
+    let mut step = 0u32;
+    loop {
+        if stop.load(Ordering::Relaxed) || seg.shutdown_requested() {
+            return;
+        }
+        let seq = seg.seq();
+        if seq == served {
+            backoff(&mut step);
+            continue;
+        }
+        // A torn descriptor read (driver re-posting while we woke for the
+        // previous sequence) at worst computes garbage into rows the
+        // driver already consumed — it re-reads only after we ack the new
+        // sequence, by which point the rewrite was clean. Never fatal.
+        let Ok((block, t)) = seg.round_desc() else {
+            backoff(&mut step);
+            continue;
+        };
+        let m = seg.read_probe(t);
+        {
+            let guard = state.lock().unwrap();
+            let Some(st) = guard.as_ref() else {
+                drop(guard);
+                backoff(&mut step);
+                continue;
+            };
+            st.product_into_segment(&seg, &block, &m);
+        }
+        served = seq;
+        seg.ack(slot, served);
+        step = 0;
+    }
+}
+
+/// Handle [`WireMsg::ShmAttach`]: map + validate the segment, ack the
+/// joined sequence (so stale rounds are never mistaken for served ones),
+/// and start the data-plane thread. Any `Err` keeps this worker on TCP.
+fn attach_segment(
+    path: &Path,
+    t_max: u64,
+    slot: u64,
+    state: &Arc<Mutex<Option<WorkerState>>>,
+    stop: &Arc<AtomicBool>,
+    plane: &mut Option<thread::JoinHandle<()>>,
+) -> Result<(), String> {
+    if plane.is_some() {
+        return Err("already attached to a segment".into());
+    }
+    let n = match state.lock().unwrap().as_ref() {
+        Some(st) => st.n(),
+        None => return Err("ShmAttach before LoadShard".into()),
+    };
+    let seg = ShmSegment::open(path).map_err(|e| e.to_string())?;
+    if seg.n() != n {
+        return Err(format!("segment rows {} != problem rows {n}", seg.n()));
+    }
+    if seg.t_max() != t_max as usize {
+        return Err(format!("segment t_max {} != attach t_max {t_max}", seg.t_max()));
+    }
+    let slot = slot as usize;
+    if slot >= seg.n_slots() {
+        return Err(format!("slot {slot} out of range ({} slots)", seg.n_slots()));
+    }
+    let joined = seg.seq();
+    seg.ack(slot, joined);
+    let seg = Arc::new(seg);
+    let state = Arc::clone(state);
+    let stop = Arc::clone(stop);
+    *plane = Some(thread::spawn(move || {
+        shm_data_plane(seg, slot, joined, state, stop)
+    }));
+    Ok(())
 }
 
 /// Run the worker protocol loop over a fresh connection to `connect`.
 /// Returns when the driver sends [`WireMsg::Shutdown`] or closes the
 /// socket (a vanished driver is a normal exit, not an error).
+///
+/// TCP is the control plane; after a [`WireMsg::ShmAttach`] the Matmul
+/// rounds normally arrive through the mapped segment instead (served by a
+/// dedicated thread), though TCP Matmul keeps working — the driver uses
+/// it for rounds wider than the segment's probe capacity.
 pub fn run_worker(connect: &str) -> io::Result<()> {
     let stream = TcpStream::connect(connect)?;
     let _ = stream.set_nodelay(true);
@@ -230,9 +347,25 @@ pub fn run_worker(connect: &str) -> io::Result<()> {
         pid: std::process::id(),
     }
     .encode(&mut (&stream))?;
-    let mut state: Option<WorkerState> = None;
+    let state: Arc<Mutex<Option<WorkerState>>> = Arc::new(Mutex::new(None));
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut plane: Option<thread::JoinHandle<()>> = None;
+    let out = control_loop(&stream, &state, &stop, &mut plane);
+    stop.store(true, Ordering::Relaxed);
+    if let Some(h) = plane {
+        let _ = h.join();
+    }
+    out
+}
+
+fn control_loop(
+    stream: &TcpStream,
+    state: &Arc<Mutex<Option<WorkerState>>>,
+    stop: &Arc<AtomicBool>,
+    plane: &mut Option<thread::JoinHandle<()>>,
+) -> io::Result<()> {
     loop {
-        let msg = match WireMsg::decode(&mut (&stream)) {
+        let msg = match WireMsg::decode(&mut (&*stream)) {
             Ok(m) => m,
             Err(e)
                 if matches!(
@@ -264,38 +397,60 @@ pub fn run_worker(connect: &str) -> io::Result<()> {
                     owned,
                     budget_mb,
                 ) {
-                    Ok(st) => state = Some(st),
-                    Err(message) => WireMsg::Err { message }.encode(&mut (&stream))?,
+                    Ok(st) => *state.lock().unwrap() = Some(st),
+                    Err(message) => WireMsg::Err { message }.encode(&mut (&*stream))?,
                 }
             }
-            WireMsg::SetParams { raw, sigma2 } => match state.as_mut() {
-                Some(st) => st.set_params(&raw, sigma2),
-                None => {
-                    WireMsg::Err {
+            WireMsg::SetParams { raw, sigma2 } => {
+                // the state lock serialises the swap against in-flight shm
+                // rounds; the ack tells the driver the swap landed (the
+                // shm plane broke the socket's FIFO guarantee)
+                let reply = match state.lock().unwrap().as_mut() {
+                    Some(st) => {
+                        st.set_params(&raw, sigma2);
+                        WireMsg::ParamsAck
+                    }
+                    None => WireMsg::Err {
                         message: "SetParams before LoadShard".into(),
-                    }
-                    .encode(&mut (&stream))?;
-                }
-            },
-            WireMsg::Matmul { block, m } => match state.as_ref() {
-                Some(st) => {
-                    let blocks = st.product(&block, &m);
-                    WireMsg::MatmulResult { blocks }.encode(&mut (&stream))?;
-                }
-                None => {
-                    WireMsg::Err {
+                    },
+                };
+                reply.encode(&mut (&*stream))?;
+            }
+            WireMsg::Matmul { block, m } => {
+                let reply = match state.lock().unwrap().as_ref() {
+                    Some(st) => WireMsg::MatmulResult {
+                        blocks: st.product(&block, &m),
+                    },
+                    None => WireMsg::Err {
                         message: "Matmul before LoadShard".into(),
-                    }
-                    .encode(&mut (&stream))?;
-                }
-            },
-            WireMsg::Ping => WireMsg::Pong.encode(&mut (&stream))?,
+                    },
+                };
+                reply.encode(&mut (&*stream))?;
+            }
+            WireMsg::ShmAttach { path, t_max, slot } => {
+                let reply = match attach_segment(
+                    Path::new(&path),
+                    t_max,
+                    slot,
+                    state,
+                    stop,
+                    plane,
+                ) {
+                    Ok(()) => WireMsg::ShmReady {
+                        ok: true,
+                        detail: String::new(),
+                    },
+                    Err(detail) => WireMsg::ShmReady { ok: false, detail },
+                };
+                reply.encode(&mut (&*stream))?;
+            }
+            WireMsg::Ping => WireMsg::Pong.encode(&mut (&*stream))?,
             WireMsg::Shutdown => return Ok(()),
             other => {
                 WireMsg::Err {
                     message: format!("unexpected message: {other:?}"),
                 }
-                .encode(&mut (&stream))?;
+                .encode(&mut (&*stream))?;
             }
         }
     }
@@ -314,6 +469,14 @@ pub fn maybe_run_worker() -> bool {
         .windows(2)
         .find(|w| w[0] == "--connect")
         .map(|w| w[1].clone());
+    // NUMA placement: pin before LoadShard so panel pages are
+    // first-touched on the pinned node
+    if let Some(list) = args.windows(2).find(|w| w[0] == "--pin-cpus").map(|w| &w[1]) {
+        let cpus = parse_cpulist(list);
+        if !cpus.is_empty() {
+            let _ = pin_to_cpus(&cpus);
+        }
+    }
     match addr {
         Some(addr) => {
             if let Err(e) = run_worker(&addr) {
@@ -412,6 +575,24 @@ mod tests {
             3,
         );
         assert!(got.max_abs_diff(&fresh.matmul(&m)) < 1e-12);
+    }
+
+    #[test]
+    fn products_into_a_segment_match_the_wire_blocks() {
+        use super::super::shm::{ShmOptions, ShmSegment};
+        let n = 32;
+        let (x, m, _) = dense_ref(n, 53);
+        let st = WorkerState::build(x, "matern32", &[-0.2, 0.1], 0.05, 3, vec![0, 2], 0).unwrap();
+        let seg = ShmSegment::create(n, 4, 1, &ShmOptions::default()).unwrap();
+        let block = ShardBlock::Value { noise: Some(0.05) };
+        st.product_into_segment(&seg, &block, &m);
+        let t = m.cols();
+        for rb in st.product(&block, &m) {
+            let rows = st.op.shards()[rb.shard as usize].clone();
+            let mut got = vec![0.0; rows.len() * t];
+            seg.read_result_rows(rows, t, &mut got);
+            assert_eq!(got, rb.data.data(), "shard {} rows differ", rb.shard);
+        }
     }
 
     #[test]

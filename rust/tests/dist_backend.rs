@@ -4,6 +4,10 @@
 //! mid-solve must be respawned without changing the final answer, the
 //! heartbeat must resurrect dead slots, and the out-of-core spool must
 //! round-trip checkpointed panels under a budget smaller than one shard.
+//! The shared-memory data plane must reproduce the TCP transport's
+//! answers while moving **zero** payload bytes through the socket, must
+//! survive a mid-solve SIGKILL bit-identically without dropping to TCP,
+//! and must degrade to the TCP transport when its segment cannot map.
 //!
 //! Worker processes are forked from the `bbmm` binary Cargo builds for
 //! this test run (`CARGO_BIN_EXE_bbmm`), exercising the real
@@ -12,10 +16,13 @@
 use bbmm_gp::gp::exact::{Engine, ExactGp};
 use bbmm_gp::gp::mll::BbmmEngine;
 use bbmm_gp::gp::sgpr::SgprOp;
-use bbmm_gp::kernels::{KernelCov, Matern32, Rbf, ShardedCovOp, ShardedKernelOp};
+use bbmm_gp::kernels::{KernelCov, Matern32, Rbf, ShardBlock, ShardedCovOp, ShardedKernelOp};
 use bbmm_gp::linalg::mbcg::{mbcg_op, MbcgOptions};
 use bbmm_gp::linalg::op::{plan_batch, solve_batch, BatchOp, LinearOp, SolveOptions, SolvePlan};
-use bbmm_gp::runtime::dist::{MultiProcessBackend, OutOfCoreBackend, ShardBackend, WorkerLaunch};
+use bbmm_gp::runtime::dist::{
+    MultiProcessBackend, NumaMode, OutOfCoreBackend, ShardBackend, ShmOptions, Transport,
+    WorkerLaunch,
+};
 use bbmm_gp::tensor::Mat;
 use bbmm_gp::util::Rng;
 use std::cell::Cell;
@@ -305,4 +312,303 @@ fn ooc_backend_spools_panels_and_matches_inprocess() {
 
     drop(out_of_core); // drops the last backend handle → shutdown
     assert!(!dir.exists(), "shutdown must remove the spool directory");
+}
+
+/// The zero-copy contract: products routed over the shared-memory data
+/// plane match the in-process operator to 1e-10 (values and derivatives,
+/// before and after a hyperparameter push), and after LoadShard **no
+/// payload byte** crosses the socket — `bytes_tx`/`bytes_rx` stay zero
+/// while every round is accounted to `shm_rounds` and the control plane
+/// (`ctrl_bytes`) keeps ticking.
+#[test]
+fn shm_backend_products_match_inprocess_with_zero_payload_bytes_on_the_wire() {
+    let n = 150;
+    let (x, _y, _xt) = dataset(n, 3);
+    let mut rng = Rng::new(4);
+    let m = Mat::from_fn(n, 5, |_, _| rng.normal());
+    let kernel = Rbf::new(0.7, 1.1);
+    let mut inproc = ShardedCovOp::new(x.clone(), Box::new(Rbf::new(0.7, 1.1)), 6);
+    let proc = Arc::new(
+        MultiProcessBackend::launch_with(
+            x.clone(),
+            &kernel,
+            0.0,
+            6,
+            2,
+            4,
+            WorkerLaunch {
+                heartbeat_ms: 0,
+                ..worker_launch()
+            },
+            Transport::Shm(ShmOptions::default()),
+            NumaMode::Auto,
+        )
+        .expect("fork shard workers over shm"),
+    );
+    assert!(
+        proc.shm_active(),
+        "segment should map on this host: {}",
+        proc.describe()
+    );
+    assert!(proc.describe().starts_with("shm:2"), "{}", proc.describe());
+    let ctrl_after_load = proc.stats().ctrl_bytes;
+    assert!(
+        ctrl_after_load > 0,
+        "Hello/LoadShard/ShmAttach are control-plane traffic"
+    );
+    let mut routed = ShardedCovOp::new(x, Box::new(Rbf::new(0.7, 1.1)), 6)
+        .with_backend(proc.clone() as Arc<dyn ShardBackend>);
+
+    let check = |routed: &ShardedCovOp, inproc: &ShardedCovOp, tag: &str| {
+        let want = inproc.matmul(&m);
+        let scale = want.fro_norm().max(1.0);
+        let diff = routed.matmul(&m).max_abs_diff(&want) / scale;
+        assert!(diff < 1e-10, "{tag} value product: rel diff {diff}");
+        for p in 0..inproc.n_params() {
+            let want_d = inproc.dmatmul(p, &m);
+            let dscale = want_d.fro_norm().max(1.0);
+            let ddiff = routed.dmatmul(p, &m).max_abs_diff(&want_d) / dscale;
+            assert!(ddiff < 1e-10, "{tag} dmatmul({p}): rel diff {ddiff}");
+        }
+    };
+    check(&routed, &inproc, "initial params");
+
+    let mut raw = inproc.kernel().params();
+    raw[0] += 0.3;
+    raw[1] -= 0.2;
+    inproc.set_kernel_params(&raw);
+    routed.set_kernel_params(&raw);
+    check(&routed, &inproc, "updated params");
+
+    let stats = proc.stats();
+    assert!(stats.rounds >= 6, "expected ≥6 rounds, saw {}", stats.rounds);
+    assert_eq!(
+        stats.shm_rounds, stats.rounds,
+        "every round must ride the shared-memory lane"
+    );
+    assert_eq!(stats.bytes_tx, 0, "payload leaked onto the socket (tx)");
+    assert_eq!(stats.bytes_rx, 0, "payload leaked onto the socket (rx)");
+    assert!(
+        stats.ctrl_bytes > ctrl_after_load,
+        "the SetParams push should ride the control plane"
+    );
+    assert_eq!(stats.restarts, 0, "no worker should have crashed");
+}
+
+/// End-to-end GP parity over the shared-memory transport: training and
+/// prediction match the in-process placement to 1e-8 at fixed seeds —
+/// the same contract the TCP transport holds.
+#[test]
+fn shm_exact_gp_matches_inprocess_training_and_prediction() {
+    let (x, y, xt) = dataset(220, 11);
+    let noise = 0.05;
+    let engine = || Engine::Bbmm(BbmmEngine::new(150, 8, 8, 42));
+    let mut reference = ExactGp::over(
+        Box::new(ShardedCovOp::new(x.clone(), Box::new(Matern32::new(0.6, 1.0)), 5)),
+        y.clone(),
+        noise,
+        engine(),
+    );
+    let kernel = Matern32::new(0.6, 1.0);
+    let proc = Arc::new(
+        MultiProcessBackend::launch_with(
+            x.clone(),
+            &kernel,
+            noise,
+            5,
+            2,
+            4,
+            worker_launch(),
+            Transport::Shm(ShmOptions::default()),
+            NumaMode::Auto,
+        )
+        .expect("fork shard workers over shm"),
+    );
+    assert!(proc.shm_active(), "{}", proc.describe());
+    let routed = ShardedCovOp::new(x, Box::new(Matern32::new(0.6, 1.0)), 5)
+        .with_backend(proc.clone() as Arc<dyn ShardBackend>);
+    let mut distributed = ExactGp::over(Box::new(routed), y, noise, engine());
+
+    let g_ref = reference.mll_and_grad();
+    let g_dist = distributed.mll_and_grad();
+    let mll_diff = (g_dist.nmll - g_ref.nmll).abs() / g_ref.nmll.abs().max(1.0);
+    assert!(mll_diff < 1e-8, "nmll rel diff {mll_diff}");
+    assert!(rel_diff(&g_dist.grad, &g_ref.grad) < 1e-8);
+    let p_ref = reference.predict(&xt);
+    let p_dist = distributed.predict(&xt);
+    assert!(rel_diff(&p_dist.mean, &p_ref.mean) < 1e-8);
+    assert!(rel_diff(&p_dist.var, &p_ref.var) < 1e-8);
+    assert_eq!(proc.stats().bytes_tx, 0, "training leaked payload onto the socket");
+}
+
+/// SIGKILL one worker mid-solve **on the shared-memory lane**: the
+/// doorbell wait must discover the death, respawn + re-attach the slot,
+/// re-post the round, and finish bit-identically to a crash-free run —
+/// without ever serializing payload onto the socket.
+#[test]
+fn shm_worker_crash_mid_solve_recovers_bit_identically() {
+    let n = 160;
+    let (x, _y, _xt) = dataset(n, 21);
+    let mut rng = Rng::new(22);
+    let b = Mat::from_fn(n, 3, |_, _| rng.normal());
+    let kernel = Rbf::new(0.6, 1.0);
+    let proc = Arc::new(
+        MultiProcessBackend::launch_with(
+            x.clone(),
+            &kernel,
+            0.25,
+            4,
+            2,
+            4,
+            WorkerLaunch {
+                heartbeat_ms: 0, // recovery must come from the round itself
+                ..worker_launch()
+            },
+            Transport::Shm(ShmOptions::default()),
+            NumaMode::Auto,
+        )
+        .expect("fork shard workers over shm"),
+    );
+    assert!(proc.shm_active(), "{}", proc.describe());
+    let routed = ShardedKernelOp::new(x, Box::new(Rbf::new(0.6, 1.0)), 0.25, 4)
+        .with_backend(proc.clone() as Arc<dyn ShardBackend>);
+    let opts = MbcgOptions {
+        max_iters: 20,
+        tol: 0.0,
+        n_solve_only: usize::MAX,
+    };
+    let want = mbcg_op(&routed, &b, |r| r.clone(), &opts);
+    let calls = Cell::new(0usize);
+    let got = mbcg_op(
+        &routed,
+        &b,
+        |r| {
+            calls.set(calls.get() + 1);
+            if calls.get() == 3 {
+                proc.kill_worker(0);
+            }
+            r.clone()
+        },
+        &opts,
+    );
+    assert!(calls.get() > 3, "the kill must land mid-solve");
+    assert_eq!(got.iterations, want.iterations);
+    assert!(
+        got.solves.max_abs_diff(&want.solves) == 0.0,
+        "shm crash recovery changed the solve: diff {}",
+        got.solves.max_abs_diff(&want.solves)
+    );
+    let stats = proc.stats();
+    assert!(stats.restarts >= 1, "the killed worker was never respawned");
+    assert_eq!(
+        stats.bytes_tx, 0,
+        "recovery must re-attach the segment, not fall back to TCP"
+    );
+    assert!(proc.shm_active(), "the respawned slot must rejoin the shm lane");
+}
+
+/// A requested shm transport whose segment cannot map (directory does
+/// not exist) must degrade to the TCP data plane at launch — same
+/// answers, the cause in `describe()`, zero `shm_rounds`, payload back
+/// on the socket.
+#[test]
+fn shm_mapping_failure_falls_back_to_tcp_transport() {
+    let n = 120;
+    let (x, _y, _xt) = dataset(n, 61);
+    let mut rng = Rng::new(62);
+    let m = Mat::from_fn(n, 4, |_, _| rng.normal());
+    let kernel = Rbf::new(0.7, 1.1);
+    let inproc = ShardedCovOp::new(x.clone(), Box::new(Rbf::new(0.7, 1.1)), 4);
+    let no_such_dir = std::env::temp_dir().join(format!(
+        "bbmm-shm-missing-{}-{}",
+        std::process::id(),
+        line!()
+    ));
+    assert!(!no_such_dir.exists());
+    let proc = Arc::new(
+        MultiProcessBackend::launch_with(
+            x.clone(),
+            &kernel,
+            0.0,
+            4,
+            2,
+            4,
+            worker_launch(),
+            Transport::Shm(ShmOptions {
+                dir: Some(no_such_dir),
+                t_max: 0,
+            }),
+            NumaMode::Off,
+        )
+        .expect("launch must survive an unmappable segment"),
+    );
+    assert!(!proc.shm_active());
+    assert!(
+        proc.describe().contains("shm unavailable"),
+        "{}",
+        proc.describe()
+    );
+    let routed = ShardedCovOp::new(x, Box::new(Rbf::new(0.7, 1.1)), 4)
+        .with_backend(proc.clone() as Arc<dyn ShardBackend>);
+    let want = inproc.matmul(&m);
+    let scale = want.fro_norm().max(1.0);
+    let diff = routed.matmul(&m).max_abs_diff(&want) / scale;
+    assert!(diff < 1e-10, "fallback value product: rel diff {diff}");
+    let stats = proc.stats();
+    assert_eq!(stats.shm_rounds, 0, "no segment, no shm rounds");
+    assert!(stats.bytes_tx > 0 && stats.bytes_rx > 0, "payload must ride TCP");
+}
+
+/// Rounds wider than the segment's probe capacity fall back to TCP *per
+/// round* while narrow rounds keep the zero-copy lane — both produce the
+/// in-process answer.
+#[test]
+fn rounds_wider_than_the_segment_fall_back_per_round() {
+    let n = 96;
+    let (x, _y, _xt) = dataset(n, 71);
+    let mut rng = Rng::new(72);
+    let kernel = Rbf::new(0.6, 1.0);
+    let inproc = ShardedKernelOp::new(x.clone(), Box::new(Rbf::new(0.6, 1.0)), 0.25, 4);
+    let proc = MultiProcessBackend::launch_with(
+        x,
+        &kernel,
+        0.25,
+        4,
+        2,
+        4,
+        WorkerLaunch {
+            heartbeat_ms: 0,
+            ..worker_launch()
+        },
+        Transport::Shm(ShmOptions {
+            dir: None,
+            t_max: 2, // narrower than the wide round below
+        }),
+        NumaMode::Off,
+    )
+    .expect("fork shard workers over shm");
+    assert!(proc.shm_active(), "{}", proc.describe());
+
+    // wide round (t = 5 > t_max = 2): per-round TCP fallback
+    let wide = Mat::from_fn(n, 5, |_, _| rng.normal());
+    let mut got = Mat::zeros(n, 5);
+    proc.matmul_block(&ShardBlock::Value { noise: Some(0.25) }, &wide, &mut got);
+    let want = inproc.matmul(&wide);
+    assert!(got.max_abs_diff(&want) / want.fro_norm().max(1.0) < 1e-10);
+    let after_wide = proc.stats();
+    assert_eq!(after_wide.shm_rounds, 0, "a too-wide round must not claim shm");
+    assert!(after_wide.bytes_tx > 0, "the wide round must ride TCP");
+
+    // narrow round (t = 2 ≤ t_max): back on the zero-copy lane
+    let narrow = Mat::from_fn(n, 2, |_, _| rng.normal());
+    let mut got2 = Mat::zeros(n, 2);
+    proc.matmul_block(&ShardBlock::Value { noise: Some(0.25) }, &narrow, &mut got2);
+    let want2 = inproc.matmul(&narrow);
+    assert!(got2.max_abs_diff(&want2) / want2.fro_norm().max(1.0) < 1e-10);
+    let after_narrow = proc.stats();
+    assert_eq!(after_narrow.shm_rounds, 1, "the narrow round must ride shm");
+    assert_eq!(
+        after_narrow.bytes_tx, after_wide.bytes_tx,
+        "the narrow round must move no payload bytes"
+    );
 }
