@@ -32,6 +32,12 @@
 //! every attached worker recomputes the round — the survivors' rewrites
 //! are bit-identical to what the driver already copied out, and the
 //! respawned worker (which joined at the stale sequence) serves it fresh.
+//! A slot is never abandoned with its process still running: every
+//! timeout or handshake failure kills + reaps the child before clearing
+//! the slot, so a hung shm-attached worker can never surface later as a
+//! zombie writing a stale round (at a stale width) over a newer round's
+//! rows — and as a second fence, workers re-check the round sequence and
+//! discard their compute instead of writing when it has moved.
 
 use super::protocol::{ResultBlock, WireMsg, PROTOCOL_VERSION};
 use super::shm::{self, backoff, NumaMode, ShmOptions, ShmSegment};
@@ -62,6 +68,12 @@ pub struct WorkerLaunch {
     pub spawn_timeout_ms: u64,
     /// per-product read deadline (a hung worker counts as crashed)
     pub product_timeout_ms: u64,
+    /// read deadline for a SetParams acknowledgement. Kept well below
+    /// the product deadline so one hung worker stalls a hyperparameter
+    /// push for seconds, not the full product timeout; generous enough
+    /// for a `MaterializeK` worker to rebuild its kernel panels before
+    /// acking.
+    pub params_ack_timeout_ms: u64,
 }
 
 impl Default for WorkerLaunch {
@@ -72,6 +84,7 @@ impl Default for WorkerLaunch {
             heartbeat_ms: 1000,
             spawn_timeout_ms: 15_000,
             product_timeout_ms: 600_000,
+            params_ack_timeout_ms: 30_000,
         }
     }
 }
@@ -268,7 +281,7 @@ impl MpInner {
                     wp.shm = ok;
                 }
             }
-            None => state.workers[w] = None,
+            None => self.drop_slot(state, w),
         }
         self.note_ctrl(ctrl);
     }
@@ -281,12 +294,21 @@ impl MpInner {
         Ok(())
     }
 
-    /// Kill + re-fork slot `w`, replaying current params (counts a restart).
-    fn respawn(&self, state: &mut ProcState, w: usize) -> io::Result<()> {
+    /// Clear slot `w`, killing + reaping any still-running child first.
+    /// A slot must never be abandoned with its process alive: an
+    /// shm-attached zombie that finishes a stale round later would pack
+    /// result rows at the old round's width over a newer round's rows,
+    /// and its late doorbell ack could clobber the replacement worker's.
+    fn drop_slot(&self, state: &mut ProcState, w: usize) {
         if let Some(mut wp) = state.workers[w].take() {
             let _ = wp.child.kill();
             let _ = wp.child.wait();
         }
+    }
+
+    /// Kill + re-fork slot `w`, replaying current params (counts a restart).
+    fn respawn(&self, state: &mut ProcState, w: usize) -> io::Result<()> {
+        self.drop_slot(state, w);
         self.boot(state, w)?;
         self.stats.lock().unwrap().restarts += 1;
         Ok(())
@@ -369,7 +391,7 @@ impl MpInner {
                     tx += f.len() as u64;
                     tcp_used = true;
                 } else {
-                    state.workers[w] = None; // discovered dead on write
+                    self.drop_slot(&mut state, w); // discovered dead on write
                 }
             }
             // 4) TCP gathers; any failure marks the slot dead for the next
@@ -394,7 +416,10 @@ impl MpInner {
                         // respawning cannot fix it
                         panic!("shard worker {w} failed: {message}");
                     }
-                    _ => state.workers[w] = None,
+                    // a gather timeout can leave a hung-but-alive worker:
+                    // drop_slot kills it so an shm-attached straggler can
+                    // never write into a later round's rows
+                    _ => self.drop_slot(&mut state, w),
                 }
             }
             // 5) shm doorbell wait: accept a worker once its ack reaches
@@ -431,7 +456,7 @@ impl MpInner {
                             None => continue,
                         };
                         if died {
-                            state.workers[w] = None;
+                            self.drop_slot(&mut state, w);
                         } else {
                             waiting = true;
                         }
@@ -440,9 +465,12 @@ impl MpInner {
                         break;
                     }
                     if Instant::now() >= deadline {
+                        // hung but alive: kill before abandoning the slot,
+                        // or the zombie's eventual segment write could land
+                        // under a later round's (different) row packing
                         for &w in &shm_pending {
                             if !done[w] {
-                                state.workers[w] = None; // hung: treat as crashed
+                                self.drop_slot(&mut state, w);
                             }
                         }
                         break;
@@ -516,11 +544,7 @@ impl MpInner {
                 }
             };
             if !alive {
-                if let Some(mut wp) = state.workers[w].take() {
-                    let _ = wp.child.kill();
-                    let _ = wp.child.wait();
-                }
-                let _ = self.respawn(&mut state, w); // next round retries on failure
+                let _ = self.respawn(&mut state, w); // kills first; next round retries on failure
             }
         }
     }
@@ -815,7 +839,7 @@ impl ShardBackend for MultiProcessBackend {
                 ctrl += frame.len() as u64;
             } else {
                 // respawn later with the new params via LoadShard replay
-                state.workers[w] = None;
+                self.inner.drop_slot(&mut state, w);
             }
         }
         for w in 0..state.workers.len() {
@@ -823,16 +847,28 @@ impl ShardBackend for MultiProcessBackend {
                 continue;
             }
             let acked = match state.workers[w].as_ref() {
-                Some(wp) => matches!(
-                    WireMsg::decode(&mut (&wp.stream)),
-                    Ok(WireMsg::ParamsAck)
-                ),
+                Some(wp) => {
+                    // dedicated short ack deadline (restored afterwards):
+                    // a hung worker must not stall the push for the full
+                    // product timeout
+                    let _ = wp.stream.set_read_timeout(Some(Duration::from_millis(
+                        self.inner.launch.params_ack_timeout_ms.max(1),
+                    )));
+                    let ok = matches!(
+                        WireMsg::decode(&mut (&wp.stream)),
+                        Ok(WireMsg::ParamsAck)
+                    );
+                    let _ = wp.stream.set_read_timeout(Some(Duration::from_millis(
+                        self.inner.launch.product_timeout_ms,
+                    )));
+                    ok
+                }
                 None => continue,
             };
             if acked {
                 ctrl += frame_len(&WireMsg::ParamsAck);
             } else {
-                state.workers[w] = None;
+                self.inner.drop_slot(&mut state, w);
             }
         }
         self.inner.note_ctrl(ctrl);

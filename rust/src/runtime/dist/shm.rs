@@ -164,8 +164,51 @@ fn unmap(ptr: *mut u8, len: usize) {
 
 static SEG_COUNTER: AtomicU64 = AtomicU64::new(0);
 
+/// Whether a process id is still alive (Linux: `/proc/<pid>` exists).
+/// Non-Linux targets have no cheap portable probe, so everything counts
+/// as alive there and the sweep below never removes anything.
+#[cfg(target_os = "linux")]
+fn pid_alive(pid: u32) -> bool {
+    Path::new(&format!("/proc/{pid}")).exists()
+}
+
+#[cfg(not(target_os = "linux"))]
+fn pid_alive(_pid: u32) -> bool {
+    true
+}
+
+/// Best-effort sweep of segment files leaked by dead drivers. The owner
+/// normally unlinks its file on Drop, but a SIGKILL'd (or abort-panicked)
+/// driver never runs Drop, and a leaked segment under `/dev/shm` pins
+/// tmpfs RAM — ~1 GiB at n = 1e6, t_max = 64 — until someone removes it.
+/// Segment names carry the creator pid (`bbmm-seg-<pid>-<k>.shm`), so any
+/// such file whose process is gone is removed here; errors are ignored
+/// (the sweep is hygiene, not correctness).
+fn sweep_stale_segments(dir: &Path) {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return;
+    };
+    for entry in entries.flatten() {
+        let name = entry.file_name().to_string_lossy().into_owned();
+        let Some(rest) = name.strip_prefix("bbmm-seg-") else {
+            continue;
+        };
+        if !rest.ends_with(".shm") {
+            continue;
+        }
+        let Some(pid) = rest.split('-').next().and_then(|p| p.parse::<u32>().ok()) else {
+            continue;
+        };
+        if pid != std::process::id() && !pid_alive(pid) {
+            let _ = std::fs::remove_file(entry.path());
+        }
+    }
+}
+
 /// One mapped segment handle. The driver `create`s (and owns — the file
-/// is unlinked on drop); each worker `open`s the same path. All header
+/// is unlinked on drop, and files leaked by drivers that died without
+/// running Drop are swept at the next `create`); each worker `open`s the
+/// same path. All header
 /// words are accessed through `AtomicU64` views of the mapped page, so
 /// the seqlock/doorbell protocol has real Acquire/Release edges across
 /// the processes sharing the map.
@@ -217,6 +260,7 @@ impl ShmSegment {
         };
         let mut last_err = io::Error::new(io::ErrorKind::NotFound, "no shm directory candidate");
         for dir in dirs {
+            sweep_stale_segments(&dir);
             let name = format!(
                 "bbmm-seg-{}-{}.shm",
                 std::process::id(),
@@ -737,6 +781,31 @@ mod tests {
             t_max: 4,
         };
         assert!(ShmSegment::create(8, 4, 1, &gone).is_err());
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn create_sweeps_segments_leaked_by_dead_drivers() {
+        let dir = std::env::temp_dir().join(format!("bbmm-shm-sweep-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // a "leaked" file stamped with a pid that cannot be alive
+        // (pid_max tops out well below u32::MAX) and a live-owner file
+        let dead = dir.join(format!("bbmm-seg-{}-0.shm", u32::MAX));
+        let live = dir.join(format!("bbmm-seg-{}-999.shm", std::process::id()));
+        let noise = dir.join("not-a-segment.shm");
+        for f in [&dead, &live, &noise] {
+            std::fs::write(f, b"stale").unwrap();
+        }
+        let opts = ShmOptions {
+            dir: Some(dir.clone()),
+            t_max: 4,
+        };
+        let seg = ShmSegment::create(8, 4, 1, &opts).expect("create sweeps, then succeeds");
+        assert!(!dead.exists(), "dead driver's segment must be swept");
+        assert!(live.exists(), "a live owner's segment must survive");
+        assert!(noise.exists(), "non-segment files are never touched");
+        drop(seg);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

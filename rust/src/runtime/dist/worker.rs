@@ -231,12 +231,29 @@ impl WorkerState {
     /// Shared-memory variant of [`Self::product`]: compute the owned
     /// row-blocks and place them directly at their global row offsets in
     /// the segment's result region — no serialization, no socket.
-    pub fn product_into_segment(&self, seg: &ShmSegment, block: &ShardBlock, m: &Mat) {
+    ///
+    /// The write is guarded by `seq`: if the segment's sequence moved
+    /// while the product computed (the driver gave up on this worker and
+    /// posted a newer round, possibly at a different width), nothing is
+    /// written and `false` is returned — rows packed at a stale width
+    /// must never overlap a newer round's packing.
+    pub fn product_into_segment(
+        &self,
+        seg: &ShmSegment,
+        block: &ShardBlock,
+        m: &Mat,
+        seq: u64,
+    ) -> bool {
         let t = m.cols();
-        for rb in self.product(block, m) {
+        let blocks = self.product(block, m);
+        if seg.seq() != seq {
+            return false;
+        }
+        for rb in blocks {
             let row0 = self.op.shards()[rb.shard as usize].start;
             seg.write_result_rows(row0, t, rb.data.data());
         }
+        true
     }
 }
 
@@ -268,25 +285,30 @@ fn shm_data_plane(
             continue;
         }
         // A torn descriptor read (driver re-posting while we woke for the
-        // previous sequence) at worst computes garbage into rows the
-        // driver already consumed — it re-reads only after we ack the new
-        // sequence, by which point the rewrite was clean. Never fatal.
+        // previous sequence) is harmless: the segment write below is
+        // guarded by a sequence re-check, so a round computed against a
+        // superseded descriptor is discarded, never written or acked. An
+        // undecodable descriptor just waits for the next post.
         let Ok((block, t)) = seg.round_desc() else {
             backoff(&mut step);
             continue;
         };
         let m = seg.read_probe(t);
-        {
+        let wrote = {
             let guard = state.lock().unwrap();
             let Some(st) = guard.as_ref() else {
                 drop(guard);
                 backoff(&mut step);
                 continue;
             };
-            st.product_into_segment(&seg, &block, &m);
+            st.product_into_segment(&seg, &block, &m, seq)
+        };
+        if wrote {
+            served = seq;
+            seg.ack(slot, served);
         }
-        served = seq;
-        seg.ack(slot, served);
+        // !wrote: the sequence moved mid-compute — leave `served` behind
+        // so the next pass re-reads the newer round's descriptor
         step = 0;
     }
 }
@@ -585,7 +607,7 @@ mod tests {
         let st = WorkerState::build(x, "matern32", &[-0.2, 0.1], 0.05, 3, vec![0, 2], 0).unwrap();
         let seg = ShmSegment::create(n, 4, 1, &ShmOptions::default()).unwrap();
         let block = ShardBlock::Value { noise: Some(0.05) };
-        st.product_into_segment(&seg, &block, &m);
+        assert!(st.product_into_segment(&seg, &block, &m, seg.seq()));
         let t = m.cols();
         for rb in st.product(&block, &m) {
             let rows = st.op.shards()[rb.shard as usize].clone();
@@ -593,6 +615,21 @@ mod tests {
             seg.read_result_rows(rows, t, &mut got);
             assert_eq!(got, rb.data.data(), "shard {} rows differ", rb.shard);
         }
+
+        // a stale sequence guard (the driver moved on) must write nothing:
+        // scribble a sentinel, bump the sequence, retry at the old seq
+        let stale = seg.seq();
+        let rows0 = st.op.shards()[0].clone();
+        let sentinel = vec![12345.0f64; rows0.len() * t];
+        seg.write_result_rows(rows0.start, t, &sentinel);
+        seg.repost();
+        assert!(
+            !st.product_into_segment(&seg, &block, &m, stale),
+            "a superseded round must be refused"
+        );
+        let mut after = vec![0.0; sentinel.len()];
+        seg.read_result_rows(rows0, t, &mut after);
+        assert_eq!(after, sentinel, "stale product must not touch the segment");
     }
 
     #[test]
